@@ -1,0 +1,118 @@
+//! End-to-end driver (DESIGN.md §Deliverables): exercises every layer of
+//! the stack on a real small workload and reports the paper's headline
+//! metric.
+//!
+//! Pipeline: synthetic CIFAR-like data (Rust substrate) -> scanned Adam
+//! training through the AOT-compiled L2 graph (whose QAT path runs the L1
+//! Pallas fake-quant kernel) -> EF-trace estimation with fixed-tolerance
+//! early stopping -> FIT scoring of candidate MPQ configs -> greedy
+//! budgeted allocation -> QAT fine-tune of chosen vs baseline config ->
+//! predicted-vs-measured comparison, plus training throughput numbers.
+//!
+//! Usage: cargo run --release --example e2e_train_quant [model] [fp_epochs]
+
+use std::time::Instant;
+
+use fitq::coordinator::{dataset_for, gather, greedy_allocate, ModelState, TraceOptions, Trainer};
+use fitq::data::EvalSet;
+use fitq::metrics::fit;
+use fitq::quant::{compression_ratio, BitConfig, PRECISIONS};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "cnn_cifar".into());
+    let fp_epochs: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(30);
+    let rt = Runtime::from_env()?;
+    let mm = rt.model(&model)?.clone();
+    println!(
+        "== e2e: {model} ({} params, {} weight blocks, {} act blocks) ==",
+        mm.n_params,
+        mm.n_weight_blocks(),
+        mm.n_act_blocks()
+    );
+
+    // ---- 1. full-precision training with loss curve ----
+    let ds = dataset_for(&rt, &model, 0xda7a)?;
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut state = ModelState::init(&rt, &model, 0)?;
+    let t0 = Instant::now();
+    let mut curve = Vec::new();
+    for _ in 0..fp_epochs {
+        curve.push(trainer.train(&mut state, 1)?[0]);
+    }
+    let train_time = t0.elapsed();
+    let steps = fp_epochs * mm.train_k;
+    println!("loss curve ({} steps of batch {}):", steps, mm.train_b);
+    for (i, l) in curve.iter().enumerate() {
+        if i % 5 == 0 || i + 1 == curve.len() {
+            println!("  step {:>5}: loss {l:.4}", (i + 1) * mm.train_k);
+        }
+    }
+    println!(
+        "throughput: {:.1} steps/s ({:.1} samples/s), total {train_time:.1?}",
+        steps as f64 / train_time.as_secs_f64(),
+        (steps * mm.train_b) as f64 / train_time.as_secs_f64()
+    );
+
+    let ev = EvalSet::materialize(ds.as_ref(), 1024);
+    let fp = trainer.evaluate(&state, &ev)?;
+    println!("FP accuracy: {:.3} (eval n={})", fp.score, fp.n);
+
+    // ---- 2. sensitivity gathering (EF trace early-stopped at tol) ----
+    let t1 = Instant::now();
+    let sens = gather(&trainer, ds.as_ref(), &state, &ev, TraceOptions::default())?;
+    println!(
+        "EF trace: {} iterations @ {:.1} ms/iter ({:.2?} total)",
+        sens.trace.iterations,
+        sens.trace.iter_time_s * 1e3,
+        t1.elapsed()
+    );
+
+    // ---- 3. FIT-guided config selection under a 16% size budget ----
+    let sizes = mm.block_sizes();
+    let n_unq = mm.n_unquantized();
+    let budget = ((mm.n_params as u64) * 32) * 16 / 100;
+    let chosen = greedy_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget)
+        .expect("budget feasible");
+    let uniform4 = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
+    println!(
+        "greedy FIT config @16% budget: {} (FIT {:.5}, {:.2}x compression)",
+        chosen.cfg.label(),
+        chosen.fit,
+        compression_ratio(&sizes, n_unq, &chosen.cfg)
+    );
+    println!(
+        "uniform-4bit baseline:         {} (FIT {:.5}, {:.2}x compression)",
+        uniform4.label(),
+        fit(&sens.inputs, &uniform4),
+        compression_ratio(&sizes, n_unq, &uniform4)
+    );
+
+    // ---- 4. QAT both, measure, compare with prediction ----
+    let mut results = Vec::new();
+    for (tag, cfg) in [("fit-greedy", &chosen.cfg), ("uniform-4bit", &uniform4)] {
+        let mut st = state.clone();
+        st.reset_optimizer();
+        let t = Instant::now();
+        trainer.qat_train(&mut st, cfg, &sens.act, 4)?;
+        let q = trainer.evaluate_q(&st, &ev, cfg, &sens.act)?;
+        println!(
+            "{tag}: quantized accuracy {:.3} (drop {:+.3}) — QAT {:.1?}",
+            q.score,
+            q.score - fp.score,
+            t.elapsed()
+        );
+        results.push((tag, fit(&sens.inputs, cfg), q.score));
+    }
+    let (t0n, f0, a0) = results[0];
+    let (t1n, f1, a1) = results[1];
+    let consistent = (f0 < f1) == (a0 >= a1);
+    println!(
+        "prediction check: FIT says {} degrades less than {} — measured winner {} ({})",
+        if f0 < f1 { t0n } else { t1n },
+        if f0 < f1 { t1n } else { t0n },
+        if a0 >= a1 { t0n } else { t1n },
+        if consistent { "CONSISTENT" } else { "INCONSISTENT" }
+    );
+    Ok(())
+}

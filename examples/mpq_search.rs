@@ -1,0 +1,71 @@
+//! MPQ configuration search: sample the exponential config space, extract
+//! the FIT-vs-size Pareto front, and run greedy budgeted allocation at
+//! several compression targets (the HAWQ-style workflow FIT accelerates —
+//! no per-config training anywhere in this binary).
+//!
+//! Usage: cargo run --release --example mpq_search [model] [samples]
+
+use fitq::coordinator::{dataset_for, exact_allocate, gather, greedy_allocate, pareto_front, score, TraceOptions, Trainer};
+use fitq::coordinator::experiments::get_trained;
+use fitq::data::EvalSet;
+use fitq::quant::{BitConfigSampler, PRECISIONS};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "cnn_cifar".into());
+    let samples: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(3000);
+    let rt = Runtime::from_env()?;
+    let mm = rt.model(&model)?.clone();
+
+    let st = get_trained(&rt, &model, 30, 0)?;
+    let ds = dataset_for(&rt, &model, 0xda7a)?;
+    let trainer = Trainer::new(&rt, ds.as_ref());
+    let ev = EvalSet::materialize(ds.as_ref(), 256);
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default())?;
+
+    let sizes = mm.block_sizes();
+    let n_unq = mm.n_unquantized();
+    let fp32_bits = mm.n_params as u64 * 32;
+    let space = (PRECISIONS.len() as f64).powi((mm.n_weight_blocks() + mm.n_act_blocks()) as i32);
+    println!(
+        "{model}: config space |B|^(Lw+La) = {space:.2e}; sampling {samples} configs"
+    );
+
+    let mut sampler =
+        BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, 42);
+    let pts: Vec<_> = sampler
+        .take(samples)
+        .into_iter()
+        .map(|c| score(&sens.inputs, &sizes, n_unq, c))
+        .collect();
+    let front = pareto_front(&pts);
+    println!("Pareto front ({} points of {}):", front.len(), pts.len());
+    println!("{:>10} {:>8} {:>12}  config", "bits", "comp", "FIT");
+    for &i in &front {
+        println!(
+            "{:>10} {:>7.2}x {:>12.6}  {}",
+            pts[i].size_bits,
+            fp32_bits as f64 / pts[i].size_bits as f64,
+            pts[i].fit,
+            pts[i].cfg.label()
+        );
+    }
+
+    println!("\ngreedy allocation vs compression target:");
+    for pct in [40u64, 25, 20, 16, 12, 10] {
+        let budget = fp32_bits * pct / 100;
+        let g = greedy_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget);
+        let e = exact_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget);
+        match (g, e) {
+            (Some(g), Some(e)) => println!(
+                "  {pct:>3}% budget -> greedy FIT {:.6} | exact FIT {:.6} ({})  {}",
+                g.fit,
+                e.fit,
+                if (g.fit - e.fit).abs() < 1e-12 { "greedy optimal" } else { "exact wins" },
+                e.cfg.label()
+            ),
+            _ => println!("  {pct:>3}% budget -> infeasible (below 3-bit floor)"),
+        }
+    }
+    Ok(())
+}

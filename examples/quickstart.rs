@@ -1,0 +1,64 @@
+//! Quickstart: the FIT workflow in ~40 lines.
+//!
+//! Train a small model, estimate its per-block Fisher traces, and rank a
+//! handful of mixed-precision configurations by FIT — all from Rust over
+//! the AOT artifacts (`make artifacts` first, then
+//! `cargo run --release --example quickstart`).
+
+use fitq::coordinator::{dataset_for, gather, ModelState, TraceOptions, Trainer};
+use fitq::data::EvalSet;
+use fitq::metrics::fit;
+use fitq::quant::{BitConfig, BitConfigSampler, PRECISIONS};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let model = "cnn_mnist";
+    let mm = rt.model(model)?.clone();
+
+    // 1. train a full-precision model
+    let ds = dataset_for(&rt, model, 0xda7a)?;
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut state = ModelState::init(&rt, model, 0)?;
+    let losses = trainer.train(&mut state, 20)?;
+    let ev = EvalSet::materialize(ds.as_ref(), 512);
+    let fp = trainer.evaluate(&state, &ev)?;
+    println!(
+        "trained {model}: loss {:.3} -> {:.3}, accuracy {:.3}",
+        losses[0],
+        losses.last().unwrap(),
+        fp.score
+    );
+
+    // 2. gather FIT's inputs (EF traces via PJRT, ranges, BN scales)
+    let sens = gather(&trainer, ds.as_ref(), &state, &ev, TraceOptions::default())?;
+    println!(
+        "EF trace converged in {} iterations; per-block traces: {:?}",
+        sens.trace.iterations,
+        sens.inputs.w_traces.iter().map(|t| format!("{t:.3}")).collect::<Vec<_>>()
+    );
+
+    // 3. rank candidate configs by FIT — no training needed per config
+    let mut sampler =
+        BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, 7);
+    let mut ranked: Vec<(f64, BitConfig)> = sampler
+        .take(8)
+        .into_iter()
+        .map(|c| (fit(&sens.inputs, &c), c))
+        .collect();
+    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    println!("\nconfigs ranked by FIT (lower = predicted better):");
+    for (f, c) in &ranked {
+        println!("  FIT {f:.5}  {}", c.label());
+    }
+
+    // 4. sanity: QAT-train the best and worst, compare
+    for (tag, (_, cfg)) in [("best", &ranked[0]), ("worst", ranked.last().unwrap())] {
+        let mut st = state.clone();
+        st.reset_optimizer();
+        trainer.qat_train(&mut st, cfg, &sens.act, 3)?;
+        let q = trainer.evaluate_q(&st, &ev, cfg, &sens.act)?;
+        println!("{tag} config by FIT -> quantized accuracy {:.3}", q.score);
+    }
+    Ok(())
+}

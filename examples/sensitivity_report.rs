@@ -1,0 +1,82 @@
+//! Per-layer sensitivity report for one model — the practitioner-facing
+//! view of Figs 1/7: converged EF traces per block (weights and
+//! activations), quantization ranges, BN scales where present, and each
+//! block's FIT contribution under a uniform 4-bit configuration.
+//!
+//! Usage: cargo run --release --example sensitivity_report [model]
+
+use fitq::coordinator::experiments::get_trained;
+use fitq::coordinator::{dataset_for, gather, TraceOptions, Trainer};
+use fitq::data::EvalSet;
+use fitq::quant::{noise_power, BitConfig};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "cnn_cifar_bn".into());
+    let rt = Runtime::from_env()?;
+    let mm = rt.model(&model)?.clone();
+    let st = get_trained(&rt, &model, 30, 0)?;
+    let ds = dataset_for(&rt, &model, 0xda7a)?;
+    let trainer = Trainer::new(&rt, ds.as_ref());
+    let ev = EvalSet::materialize(ds.as_ref(), 256);
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default())?;
+    let s = &sens.inputs;
+
+    println!("sensitivity report: {model}");
+    println!(
+        "EF trace: {} iterations (tol {}), per-iteration {:.1} ms\n",
+        sens.trace.iterations,
+        0.01,
+        sens.trace.iter_time_s * 1e3
+    );
+
+    let cfg4 = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
+    let total_fit: f64 = fitq::metrics::fit(s, &cfg4);
+
+    println!("-- weight blocks (uniform 4-bit contribution breakdown) --");
+    println!(
+        "{:<12} {:>8} {:>12} {:>18} {:>10} {:>8}",
+        "block", "params", "trace", "range", "fit@4b", "share"
+    );
+    for (i, wb) in mm.weight_blocks.iter().enumerate() {
+        let contrib = s.w_traces[i] * noise_power(s.w_lo[i], s.w_hi[i], 4.0);
+        let gamma = s.bn_gamma[i]
+            .map(|g| format!(" γ={g:.3}"))
+            .unwrap_or_default();
+        println!(
+            "{:<12} {:>8} {:>12.4} [{:>7.3}, {:>6.3}] {:>10.6} {:>7.1}%{}",
+            wb.name,
+            wb.size,
+            s.w_traces[i],
+            s.w_lo[i],
+            s.w_hi[i],
+            contrib,
+            100.0 * contrib / total_fit,
+            gamma
+        );
+    }
+
+    println!("\n-- activation blocks --");
+    println!(
+        "{:<8} {:>14} {:>12} {:>18} {:>10} {:>8}",
+        "block", "elems/sample", "trace", "range", "fit@4b", "share"
+    );
+    for (i, ab) in mm.act_blocks.iter().enumerate() {
+        let contrib = s.a_traces[i] * noise_power(s.a_lo[i], s.a_hi[i], 4.0);
+        println!(
+            "{:<8} {:>14} {:>12.4} [{:>7.3}, {:>6.3}] {:>10.6} {:>7.1}%",
+            format!("act{i}"),
+            ab.size,
+            s.a_traces[i],
+            s.a_lo[i],
+            s.a_hi[i],
+            contrib,
+            100.0 * contrib / total_fit
+        );
+    }
+
+    println!("\ntotal FIT @ uniform 4-bit: {total_fit:.6}");
+    println!("interpretation: blocks with the largest share should keep more bits;");
+    println!("feed this into `fitq search --model {model}` for a budgeted allocation.");
+    Ok(())
+}

@@ -1,0 +1,287 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.json.
+
+The interchange format is HLO *text*, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in artifacts/<model>/<entry>.hlo.txt; artifacts/manifest.json
+describes every model (flat parameter layout, quantizable blocks) and every
+entry point (input/output shapes and dtypes) so the Rust runtime stays
+completely model-agnostic.
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--models a,b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import fisher, hessian, layers, train
+from .model import SCALE_MODELS, STUDY_MODELS, Model, get_model
+
+TRAIN_K = 10  # microbatch steps per train/qat dispatch (lax.scan)
+TRAIN_B = 32
+EVAL_B = 256
+CALIB_B = 128
+PREDICT_B = 32
+STUDY_TRACE_BS = (32,)
+SCALE_TRACE_BS = (4, 8, 16, 32)
+
+# unet is conv-heavy; smaller batches keep CPU-PJRT dispatches sub-second.
+UNET_TRAIN_B = 8
+UNET_EVAL_B = 32
+UNET_CALIB_B = 32
+
+
+def _dt(s: str):
+    return {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}[s]
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), _dt(dtype))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io_manifest(specs, names):
+    assert len(specs) == len(names), (len(specs), names)
+    out = []
+    for s, n in zip(specs, names):
+        dt = {jnp.float32: "f32", jnp.int32: "i32", jnp.uint32: "u32"}[
+            jnp.dtype(s.dtype).type
+        ]
+        out.append({"name": n, "shape": list(s.shape), "dtype": dt})
+    return out
+
+
+class EntrySet:
+    """Collects (fn, input specs, io names) per entry for one model."""
+
+    def __init__(self, model: Model):
+        self.model = model
+        self.entries: dict[str, tuple] = {}
+
+    def add(self, name, fn, in_specs, in_names, out_names):
+        self.entries[name] = (fn, in_specs, in_names, out_names)
+
+
+def build_entries(model: Model) -> EntrySet:
+    m = model
+    es = EntrySet(m)
+    n, hwc = m.n_params, m.input_shape
+    lw, la = m.n_weight_blocks, m.n_act_blocks
+    is_unet = m.name == "unet"
+    tb = UNET_TRAIN_B if is_unet else TRAIN_B
+    eb = UNET_EVAL_B if is_unet else EVAL_B
+    cb = UNET_CALIB_B if is_unet else CALIB_B
+    y_shape = (lambda b: (b, hwc[0], hwc[1])) if m.task == "segment" else (lambda b: (b,))
+
+    es.add(
+        "init",
+        lambda seed: (layers.init_flat(m.layout, seed),),
+        [spec((), "u32")],
+        ["seed"],
+        ["params"],
+    )
+
+    state_specs = [spec((n,)), spec((n,)), spec((n,)), spec(())]
+    state_names = ["params", "m", "v", "step"]
+    batch_specs = [spec((TRAIN_K, tb, *hwc)), spec((TRAIN_K, *y_shape(tb)), "i32")]
+    out_state = ["params", "m", "v", "step", "loss"]
+
+    train_epoch = train.make_train_epoch(m, TRAIN_K)
+    es.add(
+        "train_epoch",
+        train_epoch,
+        state_specs + batch_specs,
+        state_names + ["xs", "ys"],
+        out_state,
+    )
+
+    if m.name == "cnn_mnist":
+        # K=1 variant kept solely for the §Perf scan-amortization study
+        # (EXPERIMENTS.md): same program, one microbatch per dispatch.
+        es.add(
+            "train_step",
+            train.make_train_epoch(m, 1),
+            state_specs + [spec((1, tb, *hwc)), spec((1, *y_shape(tb)), "i32")],
+            state_names + ["xs", "ys"],
+            out_state,
+        )
+
+    quant_specs = [spec((lw,)), spec((la,)), spec((la,)), spec((la,))]
+    quant_names = ["bits_w", "bits_a", "act_lo", "act_hi"]
+
+    if m.name in STUDY_MODELS or is_unet:
+        qat_epoch = train.make_qat_epoch(m, TRAIN_K)
+        es.add(
+            "qat_epoch",
+            qat_epoch,
+            state_specs + batch_specs + quant_specs,
+            state_names + ["xs", "ys"] + quant_names,
+            out_state,
+        )
+
+        eval_specs = [spec((n,)), spec((eb, *hwc)), spec(y_shape(eb), "i32"), spec((eb,))]
+        eval_names = ["params", "x", "y", "mask"]
+        eval_out = (
+            ["loss_sum", "inter", "union"]
+            if m.task == "segment"
+            else ["loss_sum", "correct", "n"]
+        )
+        es.add("eval", train.make_eval(m), eval_specs, eval_names, eval_out)
+        es.add(
+            "qat_eval",
+            train.make_qat_eval(m),
+            eval_specs + quant_specs,
+            eval_names + quant_names,
+            eval_out,
+        )
+        es.add(
+            "predict",
+            train.make_predict(m),
+            [spec((n,)), spec((PREDICT_B, *hwc))],
+            ["params", "x"],
+            ["logits"],
+        )
+
+    es.add(
+        "param_ranges",
+        fisher.make_param_ranges(m),
+        [spec((n,))],
+        ["params"],
+        ["lo", "hi"],
+    )
+    es.add(
+        "act_ranges",
+        fisher.make_act_ranges(m),
+        [spec((n,)), spec((cb, *hwc))],
+        ["params", "x"],
+        ["lo", "hi"],
+    )
+
+    trace_bs = SCALE_TRACE_BS if m.name in SCALE_MODELS else STUDY_TRACE_BS
+    ef = fisher.make_ef_trace(m)
+    for b in trace_bs:
+        es.add(
+            f"ef_trace_bs{b}",
+            ef,
+            [spec((n,)), spec((b, *hwc)), spec(y_shape(b), "i32")],
+            ["params", "x", "y"],
+            ["w_tr", "a_tr"],
+        )
+    if m.name in SCALE_MODELS:
+        hutch = hessian.make_hutchinson(m)
+        for b in SCALE_TRACE_BS:
+            es.add(
+                f"hutch_bs{b}",
+                hutch,
+                [spec((n,)), spec((b, *hwc)), spec(y_shape(b), "i32"), spec((n,))],
+                ["params", "x", "y", "r"],
+                ["quad"],
+            )
+    return es
+
+
+def model_manifest(model: Model, entry_manifests: dict) -> dict:
+    layout = model.layout
+    blocks = []
+    for i, name in enumerate(model.weight_block_names):
+        s = layout.spec(name)
+        blocks.append(
+            {
+                "index": i,
+                "name": name,
+                "offset": s.offset,
+                "size": s.size,
+                "shape": list(s.shape),
+            }
+        )
+    is_unet = model.name == "unet"
+    return {
+        "n_params": layout.n_params,
+        "input_shape": list(model.input_shape),
+        "n_classes": model.n_classes,
+        "task": model.task,
+        "train_k": TRAIN_K,
+        "train_b": UNET_TRAIN_B if is_unet else TRAIN_B,
+        "eval_b": UNET_EVAL_B if is_unet else EVAL_B,
+        "calib_b": UNET_CALIB_B if is_unet else CALIB_B,
+        "predict_b": PREDICT_B,
+        "trace_bs": list(SCALE_TRACE_BS if model.name in SCALE_MODELS else STUDY_TRACE_BS),
+        "weight_blocks": blocks,
+        "act_blocks": [
+            {"index": i, "shape": list(s), "size": math.prod(s)}
+            for i, s in enumerate(model.act_shapes)
+        ],
+        "tensors": layout.to_manifest(),
+        "entries": entry_manifests,
+    }
+
+
+ALL_MODELS = list(STUDY_MODELS) + list(SCALE_MODELS) + ["unet"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(ALL_MODELS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_root = pathlib.Path(args.out)
+    out_root.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_root / "manifest.json"
+    # always merge into the existing manifest: --force re-lowers the
+    # selected models' HLO but must never drop other models' entries.
+    manifest = {"version": 1, "models": {}}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+        manifest.setdefault("models", {})
+
+    for name in args.models.split(","):
+        model = get_model(name)
+        es = build_entries(model)
+        mdir = out_root / name
+        mdir.mkdir(exist_ok=True)
+        entry_manifests = {}
+        for ename, (fn, in_specs, in_names, out_names) in es.entries.items():
+            path = mdir / f"{ename}.hlo.txt"
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*in_specs)
+            out_specs = jax.eval_shape(fn, *in_specs)
+            if not isinstance(out_specs, tuple):
+                out_specs = (out_specs,)
+            if not path.exists() or args.force:
+                path.write_text(to_hlo_text(lowered))
+                status = f"lowered in {time.time() - t0:.1f}s"
+            else:
+                status = "cached"
+            entry_manifests[ename] = {
+                "file": f"{name}/{ename}.hlo.txt",
+                "inputs": _io_manifest(in_specs, in_names),
+                "outputs": _io_manifest(list(out_specs), out_names),
+            }
+            print(f"[aot] {name}/{ename}: {status}")
+        manifest["models"][name] = model_manifest(model, entry_manifests)
+        manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] manifest -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

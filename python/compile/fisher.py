@@ -1,0 +1,124 @@
+"""Empirical-Fisher trace programs (paper §3.3, Prop. 5).
+
+One Monte-Carlo "iteration" of the EF trace estimator processes a batch:
+
+    s_l = B * || grad_{theta_l} (1/B) sum_i f(z_i) ||^2        (weights)
+    t_l = B * || grad_{a_l}     (1/B) sum_i f(z_i) ||^2        (activations)
+
+i.e. the squared batch-gradient norm per quantizable block, debiased by the
+batch size. Near a minimum (||E[g]|| -> 0) the expectation of s_l converges
+to Tr(I_hat(theta_l)); this is the single-backward estimator whose cost and
+variance the paper's Table 1/3/4 measure against the Hutchinson Hessian
+estimator. The exact per-sample form (vmap(grad), `ef_trace_persample`) is
+kept for validation — python/tests/test_fisher.py checks the two agree on
+converged models.
+
+Activation gradients come from the eps-trick: every activation site adds a
+zero tensor eps_l; grad w.r.t. eps_l equals grad w.r.t. the activation
+(paper §3.2.1 "derivatives w.r.t. activations").
+
+The block reductions route through the L1 `sqnorm` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sqnorm
+from .model import Model
+
+
+def mean_loss(model: Model, flat, x, y, act_eps=None, quant=None):
+    """Mean cross-entropy over the batch (and pixels, for segmentation)."""
+    logits = model.apply(flat, x, quant=quant, act_eps=act_eps)
+    per = softmax_per_example(model, logits, y)
+    return jnp.mean(per)
+
+
+def softmax_per_example(model: Model, logits, y):
+    from . import layers
+
+    if model.task == "segment":
+        # (B, H, W) pixel losses -> per-sample mean
+        return jnp.mean(layers.softmax_xent(logits, y), axis=(1, 2))
+    return layers.softmax_xent(logits, y)
+
+
+def _zero_eps(model: Model, batch: int):
+    return [jnp.zeros((batch, *s), jnp.float32) for s in model.act_shapes]
+
+
+def _block_sqnorms(model: Model, g_flat: jnp.ndarray) -> jnp.ndarray:
+    """Per-weight-block squared norms of a flat gradient, via the L1 kernel."""
+    rows = []
+    for name in model.weight_block_names:
+        slab = model.layout.slab(g_flat, name)
+        rows.append(sqnorm(slab[None, :])[0])
+    return jnp.stack(rows)
+
+
+def make_ef_trace(model: Model):
+    """(flat, x, y) -> (w_tr (Lw,), a_tr (La,)) — one estimator iteration."""
+
+    def ef_trace(flat, x, y):
+        b = x.shape[0]
+        eps = _zero_eps(model, b)
+        g_flat, g_eps = jax.grad(mean_loss, argnums=(1, 4))(model, flat, x, y, eps)
+        w_tr = _block_sqnorms(model, g_flat) * b
+        a_tr = jnp.stack(
+            [sqnorm(g.reshape(1, -1))[0] for g in g_eps]
+        ) * b
+        return w_tr, a_tr
+
+    return ef_trace
+
+
+def make_ef_trace_persample(model: Model):
+    """Exact per-sample EF trace: mean_i ||grad f(z_i)||^2 per block.
+
+    Build-time validation oracle for `make_ef_trace` (not exported to the
+    Rust runtime — its cost is B backward passes).
+    """
+
+    def one(flat, x1, y1):
+        eps = _zero_eps(model, 1)
+        g_flat, g_eps = jax.grad(mean_loss, argnums=(1, 4))(
+            model, flat, x1[None], y1[None], eps
+        )
+        w = _block_sqnorms(model, g_flat)
+        a = jnp.stack([sqnorm(g.reshape(1, -1))[0] for g in g_eps])
+        return w, a
+
+    def ef_trace_ps(flat, x, y):
+        w, a = jax.vmap(one, in_axes=(None, 0, 0))(flat, x, y)
+        return jnp.mean(w, axis=0), jnp.mean(a, axis=0)
+
+    return ef_trace_ps
+
+
+def make_param_ranges(model: Model):
+    """(flat,) -> (lo (Lw,), hi (Lw,)) min-max weight ranges per block."""
+
+    def param_ranges(flat):
+        lo, hi = [], []
+        for name in model.weight_block_names:
+            slab = model.layout.slab(flat, name)
+            lo.append(jnp.min(slab))
+            hi.append(jnp.max(slab))
+        return jnp.stack(lo), jnp.stack(hi)
+
+    return param_ranges
+
+
+def make_act_ranges(model: Model):
+    """(flat, x) -> (lo (La,), hi (La,)) calibrated activation ranges."""
+
+    def act_ranges(flat, x):
+        acts: list[jnp.ndarray] = []
+        model.apply(flat, x, collect=acts)
+        lo = jnp.stack([jnp.min(a) for a in acts])
+        hi = jnp.stack([jnp.max(a) for a in acts])
+        return lo, hi
+
+    return act_ranges

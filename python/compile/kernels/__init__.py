@@ -1,0 +1,28 @@
+"""L1 Pallas kernels for the FIT metric's compute hot-spots.
+
+Three kernels, each with a pure-jnp oracle in ref.py:
+
+- sqnorm:     per-sample ||grad||^2 — the EF-trace estimator core.
+- quadform:   blocked <r, Hr> — the Hutchinson quadratic form.
+- fake_quant: uniform min-max quantize-dequantize with runtime bit widths —
+              the QAT forward-pass hot-spot.
+
+All pallas_calls use interpret=True (CPU PJRT cannot run Mosaic
+custom-calls); the BlockSpec schedules are still written for the TPU memory
+hierarchy (DESIGN.md section Hardware-Adaptation).
+"""
+
+from .fake_quant import fake_quant
+from .quadform import quadform
+from .ref import fake_quant_ref, noise_power_ref, quadform_ref, sqnorm_ref
+from .sqnorm import sqnorm
+
+__all__ = [
+    "fake_quant",
+    "fake_quant_ref",
+    "noise_power_ref",
+    "quadform",
+    "quadform_ref",
+    "sqnorm",
+    "sqnorm_ref",
+]

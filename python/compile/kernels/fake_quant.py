@@ -1,0 +1,71 @@
+"""Pallas kernel: uniform min-max fake quantization (quantize-dequantize).
+
+The QAT forward pass (paper Appendix A) replaces every quantizable tensor x
+with Q(x) = round((clip(x) - lo)/delta) * delta + lo, delta = (hi - lo) /
+(2^b - 1). `bits` is a RUNTIME scalar input — delta is computed inside the
+kernel from exp2(bits) — so one compiled executable serves every mixed-
+precision configuration (DESIGN.md key decision #3).
+
+TPU mapping: pure elementwise VPU work on (8, 128)-aligned tiles; scale,
+round, clamp and dequantize are fused in a single VMEM pass so the tensor
+makes exactly one HBM round trip. The three scalars ride along as (1,)
+blocks mapped to element 0 for every grid step (SMEM-resident on real TPU).
+
+Degenerate ranges (hi <= lo, e.g. an all-zero bias) pass through unchanged,
+matching ref.fake_quant_ref.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 4096
+
+
+def _fq_kernel(x_ref, lo_ref, hi_ref, bits_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    levels = jnp.exp2(bits_ref[0]) - 1.0
+    ok = (hi > lo) & (levels >= 1.0)
+    delta = jnp.where(ok, (hi - lo) / jnp.maximum(levels, 1.0), 1.0)
+    q = jnp.round((jnp.clip(x, lo, hi) - lo) / delta)
+    o_ref[...] = jnp.where(ok, q * delta + lo, x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def fake_quant(x, lo, hi, bits, *, block_n: int | None = None):
+    """Quantize-dequantize a tensor of any shape with runtime bit width.
+
+    x: any shape/float dtype; lo, hi, bits: scalars (may be traced).
+    Returns the same shape/dtype as x. block_n defaults to interpret-mode
+    auto sizing (see sqnorm.auto_block).
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if block_n is None:
+        from .sqnorm import auto_block
+
+        block_n = auto_block(n, 128)
+    rem = (-n) % block_n
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    scal = lambda s: jnp.asarray(s, jnp.float32).reshape(1)
+    grid = (flat.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, dtype),
+        interpret=True,
+    )(flat, scal(lo), scal(hi), scal(bits))
+    return out[:n].reshape(shape)

@@ -1,0 +1,65 @@
+"""Pallas kernel: blocked quadratic-form dot product.
+
+Computes <r, v> for flat vectors — the Hutchinson estimator's quadratic form
+r^T (H r) once the HVP v = H r has been formed by the L2 autodiff program
+(paper §3.3). A single grid dimension walks BLOCK_N-sized VMEM tiles of both
+streams; the scalar partial sum accumulates in the output block, which stays
+VMEM-resident across the whole grid.
+
+Memory-bound (two input streams, one fused multiply-add reduction);
+BLOCK_N = 4096 keeps the per-step working set at 2 * 16 KiB with headroom
+for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 4096
+
+
+def _quadform_kernel(r_ref, v_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    r = r_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(r * v)[None]
+
+
+def _pad1(x, multiple):
+    rem = (-x.shape[0]) % multiple
+    return jnp.pad(x, (0, rem)) if rem else x
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def quadform(r, v, *, block_n: int | None = None):
+    """<r, v> over flat (N,) vectors, zero-padded to the tile multiple.
+
+    block_n defaults to interpret-mode auto sizing (few grid steps on CPU;
+    see sqnorm.auto_block) — pass an explicit size to pin a TPU schedule.
+    """
+    assert r.ndim == 1 and r.shape == v.shape, (r.shape, v.shape)
+    if block_n is None:
+        from .sqnorm import auto_block
+
+        block_n = auto_block(r.shape[0], 128)
+    rp, vp = _pad1(r, block_n), _pad1(v, block_n)
+    grid = (rp.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _quadform_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(rp, vp)
+    return out[0]

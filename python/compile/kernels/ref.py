@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These definitions are the correctness contract: every Pallas kernel in this
+package must match its oracle to float tolerance across the shape/dtype
+sweep in python/tests/. They are also used directly by the L2 programs when
+a shape falls below the kernel's minimum tile (dispatch in __init__.py).
+"""
+
+import jax.numpy as jnp
+
+
+def sqnorm_ref(g):
+    """Per-sample squared l2 norm.
+
+    g: (B, N) per-sample flattened gradient block.
+    returns: (B,) with out[i] = sum_j g[i, j]^2.
+
+    This is the inner loop of the empirical-Fisher trace estimator
+    (paper Prop. 5): Tr[I_hat] = (1/N) sum_i ||grad f(z_i)||^2.
+    """
+    g = g.astype(jnp.float32)
+    return jnp.sum(g * g, axis=-1)
+
+
+def quadform_ref(r, v):
+    """Blocked dot product <r, v>.
+
+    Used as the Hutchinson quadratic form r^T (H r) given an HVP result v.
+    r, v: (N,). returns: () scalar.
+    """
+    return jnp.vdot(r.astype(jnp.float32), v.astype(jnp.float32))
+
+
+def fake_quant_ref(x, lo, hi, bits):
+    """Uniform min-max quantize-dequantize (paper Appendix E).
+
+    Q(x) = round((x - lo) / delta) * delta + lo,  delta = (hi - lo)/(2^b - 1)
+    Values are clipped into [lo, hi]. Degenerate ranges (hi <= lo) pass x
+    through unchanged. `bits` may be a runtime (traced) float scalar — this
+    is what lets one compiled QAT executable serve every MPQ config.
+    """
+    x32 = x.astype(jnp.float32)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    bits = jnp.asarray(bits, jnp.float32)
+    levels = jnp.exp2(bits) - 1.0
+    ok = (hi > lo) & (levels >= 1.0)
+    delta = jnp.where(ok, (hi - lo) / jnp.maximum(levels, 1.0), 1.0)
+    q = jnp.round((jnp.clip(x32, lo, hi) - lo) / delta)
+    deq = q * delta + lo
+    return jnp.where(ok, deq, x32).astype(x.dtype)
+
+
+def noise_power_ref(lo, hi, bits):
+    """Quantization noise power E[dtheta^2] = delta^2 / 12 (Appendix E)."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    levels = jnp.exp2(jnp.asarray(bits, jnp.float32)) - 1.0
+    ok = (hi > lo) & (levels >= 1.0)
+    delta = jnp.where(ok, (hi - lo) / jnp.maximum(levels, 1.0), 0.0)
+    return delta * delta / 12.0

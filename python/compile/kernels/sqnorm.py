@@ -1,0 +1,95 @@
+"""Pallas kernel: per-sample squared-gradient-norm reduction.
+
+This is the compute hot-spot of the empirical-Fisher trace estimator
+(paper §3.3, Prop. 5): for a batch of per-sample gradients g in R^{B x N},
+produce out[i] = ||g[i]||^2. The EF trace is then the mean over samples.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the (B, N) plane is tiled
+into VMEM-resident (BLOCK_B, BLOCK_N) blocks via BlockSpec; the grid walks
+the N (chunk) dimension innermost, accumulating partial row sums directly in
+the (BLOCK_B,)-shaped output block, which Pallas keeps resident in VMEM
+across the inner grid dimension. The op is a pure VPU reduction (no second
+operand for the MXU), so it is memory-bound; block sizes are chosen to keep
+the working set well under VMEM while giving full (8, 128) lanes.
+
+interpret=True everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls; the interpret path lowers to plain HLO that the Rust runtime
+runs. The structure (BlockSpec schedule) is still the TPU design.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. BLOCK_N is a multiple of the 128-lane dimension;
+# BLOCK_B a multiple of the 8-sublane dimension. VMEM working set per step:
+# BLOCK_B * BLOCK_N * 4 bytes = 8 * 2048 * 4 = 64 KiB (x2 for double
+# buffering) — far under the ~16 MiB VMEM budget, leaving room for the
+# surrounding model's own tiles.
+BLOCK_B = 8
+BLOCK_N = 2048
+
+# interpret=True executes the grid as an XLA while loop whose per-step
+# dynamic-slice/update overhead dominates on CPU (~ms per step); real TPU
+# pipelining makes many small steps free. CPU adaptation (EXPERIMENTS.md
+# §Perf L1): auto-size blocks so the grid stays at <= MAX_GRID_STEPS while
+# respecting the (8, 128) tile alignment the TPU layout wants.
+MAX_GRID_STEPS = 4
+
+
+def auto_block(n: int, align: int, max_steps: int = MAX_GRID_STEPS) -> int:
+    """Smallest `align`-multiple block covering n in <= max_steps steps."""
+    target = -(-n // max_steps)  # ceil div
+    return -(-target // align) * align
+
+
+def _sqnorm_kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(x * x, axis=1)
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def sqnorm(g, *, block_b: int | None = None, block_n: int | None = None):
+    """Per-sample squared l2 norms of a (B, N) block of gradients.
+
+    Zero-pads both axes to tile multiples (zero rows/cols contribute zero
+    to the sums) and slices the result back to (B,). Block sizes default to
+    the interpret-mode auto sizing (see auto_block); pass explicit sizes to
+    pin a TPU-style schedule (the tests sweep small blocks).
+    """
+    assert g.ndim == 2, f"sqnorm expects (B, N), got {g.shape}"
+    if block_b is None:
+        block_b = min(BLOCK_B, max(1, g.shape[0]))
+    if block_n is None:
+        block_n = auto_block(g.shape[1], 128)
+    b, _ = g.shape
+    gp = _pad_to(_pad_to(g, 1, block_n), 0, block_b)
+    bp, np_ = gp.shape
+    grid = (bp // block_b, np_ // block_n)
+    out = pl.pallas_call(
+        _sqnorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.float32),
+        interpret=True,
+    )(gp)
+    return out[:b]

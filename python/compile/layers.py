@@ -1,0 +1,207 @@
+"""Layer primitives and the flat-parameter layout.
+
+The Rust coordinator owns model state as a single flat f32 vector; every L2
+program takes/returns that vector. ParamLayout assigns each named tensor a
+(offset, size) slab and is serialized into manifest.json so the Rust side
+can address blocks (for FIT metrics, quantization analysis and reporting)
+without knowing the model structure.
+
+All forwards are NHWC; conv kernels are HWIO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One named parameter tensor inside the flat vector."""
+
+    name: str
+    shape: tuple[int, ...]
+    offset: int
+    kind: str  # "conv_w" | "fc_w" | "bias" | "bn_gamma" | "bn_beta"
+    block: int  # quantizable weight-block index, or -1
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+class ParamLayout:
+    """Fixed-order flattening of named tensors into one f32 vector."""
+
+    def __init__(self) -> None:
+        self.specs: list[TensorSpec] = []
+        self._by_name: dict[str, TensorSpec] = {}
+        self.n_params = 0
+
+    def add(self, name: str, shape: tuple[int, ...], kind: str, block: int = -1) -> TensorSpec:
+        spec = TensorSpec(name, tuple(shape), self.n_params, kind, block)
+        self.specs.append(spec)
+        self._by_name[name] = spec
+        self.n_params += spec.size
+        return spec
+
+    def get(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        s = self._by_name[name]
+        return jax.lax.dynamic_slice(flat, (s.offset,), (s.size,)).reshape(s.shape)
+
+    def slab(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        """Flat (size,) view of a named tensor."""
+        s = self._by_name[name]
+        return jax.lax.dynamic_slice(flat, (s.offset,), (s.size,))
+
+    def spec(self, name: str) -> TensorSpec:
+        return self._by_name[name]
+
+    def to_manifest(self) -> list[dict]:
+        return [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "offset": s.offset,
+                "size": s.size,
+                "kind": s.kind,
+                "block": s.block,
+            }
+            for s in self.specs
+        ]
+
+
+# ------------------------------------------------------------------ init
+
+
+def _fan_in(shape: tuple[int, ...], kind: str) -> int:
+    if kind == "conv_w":  # HWIO
+        return shape[0] * shape[1] * shape[2]
+    if kind == "fc_w":  # (in, out)
+        return shape[0]
+    return 1
+
+
+def init_flat(layout: ParamLayout, seed: jnp.ndarray) -> jnp.ndarray:
+    """He-normal weights, zero biases, unit gammas — from a u32 seed."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    parts = []
+    for i, s in enumerate(layout.specs):
+        if s.kind in ("conv_w", "fc_w"):
+            k = jax.random.fold_in(key, i)
+            std = math.sqrt(2.0 / _fan_in(s.shape, s.kind))
+            parts.append(jax.random.normal(k, (s.size,), jnp.float32) * std)
+        elif s.kind == "bn_gamma":
+            parts.append(jnp.ones((s.size,), jnp.float32))
+        else:
+            parts.append(jnp.zeros((s.size,), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# ------------------------------------------------------------- primitives
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """SAME-padded NHWC conv with HWIO kernel plus bias."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def batch_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Batch-statistics normalization over (N, H, W) per channel."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return gamma * (x - mean) * jax.lax.rsqrt(var + eps) + beta
+
+
+def max_pool(x: jnp.ndarray, window: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, window, window, 1),
+        padding="VALID",
+    )
+
+
+def upsample2(x: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-neighbour 2x upsampling (U-Net decoder)."""
+    b, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (b, h, 2, w, 2, c))
+    return x.reshape(b, h * 2, w * 2, c)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x @ w + b
+
+
+# ----------------------------------------------------------------- losses
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example cross entropy. logits (..., C), labels (...) int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return logz - gold
+
+
+def accuracy_counts(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked correct-prediction count (classification eval)."""
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum(mask * (pred == labels.astype(jnp.int32)).astype(jnp.float32))
+
+
+def iou_counts(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray, n_classes: int):
+    """Per-class (intersection, union) pixel counts for mIoU (segmentation).
+
+    logits (B, H, W, C); labels (B, H, W) int; mask (B,) sample weights.
+    """
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    labels = labels.astype(jnp.int32)
+    m = mask[:, None, None]
+    inter, union = [], []
+    for c in range(n_classes):
+        p = (pred == c).astype(jnp.float32) * m
+        t = (labels == c).astype(jnp.float32) * m
+        i = jnp.sum(p * t)
+        inter.append(i)
+        union.append(jnp.sum(p) + jnp.sum(t) - i)
+    return jnp.stack(inter), jnp.stack(union)
+
+
+# ------------------------------------------------------------------ adam
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-2
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def adam_update(cfg: AdamConfig, grads, params, m, v, step):
+    """One Adam step on flat vectors. step is the 1-based f32 step count."""
+    m = cfg.b1 * m + (1.0 - cfg.b1) * grads
+    v = cfg.b2 * v + (1.0 - cfg.b2) * grads * grads
+    # bias correction with runtime step
+    c1 = 1.0 - jnp.power(cfg.b1, step)
+    c2 = 1.0 - jnp.power(cfg.b2, step)
+    mhat = m / c1
+    vhat = v / c2
+    params = params - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    return params, m, v
+
+
+Apply = Callable[..., jnp.ndarray]

@@ -1,0 +1,216 @@
+"""The paper's model zoo (Fig. 8 convolutional classifier + scaled variants).
+
+Every model is exposed as a `Model`: a flat-parameter layout plus a single
+`apply` that supports three orthogonal modes, so the FP forward, the QAT
+(fake-quant) forward and the activation-tap forward all share one code path:
+
+- quant:    per-block fake quantization of weights (min-max ranges computed
+            in-graph) and activations (calibrated ranges passed in), with
+            straight-through gradients — paper Appendix A.
+- act_eps:  additive zero perturbations at each activation site; gradients
+            w.r.t. these are the activation gradients the activation-Fisher
+            trace needs (paper §3.2.1).
+
+Variants:
+- cnn_mnist[_bn]  — Fig. 8 architecture at synmnist scale (1x16x16 in).
+- cnn_cifar[_bn]  — filters scaled by 2, 3x32x32 in (paper Appendix D).
+- cnn_s/m/l/xl    — width/depth-scaled stand-ins for the ImageNet backbones
+                    of Table 1 / Figs 1-2 (see DESIGN.md substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels import fake_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantInputs:
+    """Runtime quantization configuration (one compiled exe, all configs)."""
+
+    bits_w: jnp.ndarray  # (Lw,) f32
+    bits_a: jnp.ndarray  # (La,) f32
+    act_lo: jnp.ndarray  # (La,) f32 calibrated activation ranges
+    act_hi: jnp.ndarray  # (La,) f32
+
+
+@jax.custom_vjp
+def _ste_fake_quant(x, lo, hi, bits):
+    """fake_quant with a straight-through gradient (paper Appendix A).
+
+    custom_vjp (identity backward on x, zeros on the scalars) keeps autodiff
+    from linearizing through the Pallas call — the STE *is* the derivative
+    rule, exactly as in the paper's Fig. 6.
+    """
+    return fake_quant(x, lo, hi, bits)
+
+
+def _ste_fwd(x, lo, hi, bits):
+    return fake_quant(x, lo, hi, bits), None
+
+
+def _ste_bwd(_res, g):
+    return g, None, None, None
+
+
+_ste_fake_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+def ste_quant_weight(w: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Min-max fake-quantize a weight tensor with a straight-through grad."""
+    lo = jax.lax.stop_gradient(jnp.min(w))
+    hi = jax.lax.stop_gradient(jnp.max(w))
+    return _ste_fake_quant(w, lo, hi, bits)
+
+
+def ste_quant_act(a: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    return _ste_fake_quant(a, lo, hi, bits)
+
+
+@dataclasses.dataclass
+class Model:
+    """A flat-parameter model plus block metadata for the manifest."""
+
+    name: str
+    layout: layers.ParamLayout
+    input_shape: tuple[int, int, int]  # (H, W, C)
+    n_classes: int
+    task: str  # "classify" | "segment"
+    weight_block_names: list[str]  # tensor name per quantizable block
+    act_shapes: list[tuple[int, ...]]  # per-sample activation shapes
+    apply: Callable  # (flat, x, quant=None, act_eps=None) -> logits
+
+    @property
+    def n_params(self) -> int:
+        return self.layout.n_params
+
+    @property
+    def n_weight_blocks(self) -> int:
+        return len(self.weight_block_names)
+
+    @property
+    def n_act_blocks(self) -> int:
+        return len(self.act_shapes)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    input_shape: tuple[int, int, int]
+    filters: tuple[int, ...]  # one conv per entry
+    n_classes: int = 10
+    batch_norm: bool = False
+    pool_after: tuple[int, ...] = (0, 1)  # pool after conv i (0-based)
+
+
+def build_cnn(cfg: CNNConfig) -> Model:
+    layout = layers.ParamLayout()
+    h, w, cin = cfg.input_shape
+    block = 0
+    weight_block_names: list[str] = []
+    act_shapes: list[tuple[int, ...]] = []
+
+    # -- declare parameters in forward order
+    c_prev = cin
+    hw = (h, w)
+    for i, c_out in enumerate(cfg.filters):
+        layout.add(f"conv{i}.w", (3, 3, c_prev, c_out), "conv_w", block)
+        weight_block_names.append(f"conv{i}.w")
+        block += 1
+        layout.add(f"conv{i}.b", (c_out,), "bias")
+        if cfg.batch_norm:
+            layout.add(f"conv{i}.gamma", (c_out,), "bn_gamma")
+            layout.add(f"conv{i}.beta", (c_out,), "bn_beta")
+        act_shapes.append((hw[0], hw[1], c_out))
+        if i in cfg.pool_after:
+            hw = (hw[0] // 2, hw[1] // 2)
+        c_prev = c_out
+    feat = hw[0] * hw[1] * c_prev
+    layout.add("fc.w", (feat, cfg.n_classes), "fc_w", block)
+    weight_block_names.append("fc.w")
+    layout.add("fc.b", (cfg.n_classes,), "bias")
+
+    def apply(flat, x, quant: QuantInputs | None = None, act_eps=None, collect=None):
+        a = x
+        act_idx = 0
+        for i, _c_out in enumerate(cfg.filters):
+            wt = layout.get(flat, f"conv{i}.w")
+            if quant is not None:
+                wt = ste_quant_weight(wt, quant.bits_w[i])
+            a = layers.conv2d(a, wt, layout.get(flat, f"conv{i}.b"))
+            if cfg.batch_norm:
+                a = layers.batch_norm(
+                    a,
+                    layout.get(flat, f"conv{i}.gamma"),
+                    layout.get(flat, f"conv{i}.beta"),
+                )
+            a = jax.nn.relu(a)
+            if act_eps is not None:
+                a = a + act_eps[act_idx]
+            if collect is not None:
+                collect.append(a)
+            if quant is not None:
+                a = ste_quant_act(
+                    a, quant.act_lo[act_idx], quant.act_hi[act_idx], quant.bits_a[act_idx]
+                )
+            act_idx += 1
+            if i in cfg.pool_after:
+                a = layers.max_pool(a)
+        a = a.reshape(a.shape[0], -1)
+        wt = layout.get(flat, "fc.w")
+        if quant is not None:
+            wt = ste_quant_weight(wt, quant.bits_w[len(cfg.filters)])
+        logits = layers.dense(a, wt, layout.get(flat, "fc.b"))
+        return logits
+
+    return Model(
+        name=cfg.name,
+        layout=layout,
+        input_shape=cfg.input_shape,
+        n_classes=cfg.n_classes,
+        task="classify",
+        weight_block_names=weight_block_names,
+        act_shapes=act_shapes,
+        apply=apply,
+    )
+
+
+# ----------------------------------------------------------------- registry
+
+CNN_CONFIGS: dict[str, CNNConfig] = {
+    # Table-2 / Fig-3 study models (paper Appendix D, Fig 8).
+    "cnn_mnist": CNNConfig("cnn_mnist", (16, 16, 1), (8, 16, 16)),
+    "cnn_mnist_bn": CNNConfig("cnn_mnist_bn", (16, 16, 1), (8, 16, 16), batch_norm=True),
+    "cnn_cifar": CNNConfig("cnn_cifar", (32, 32, 3), (16, 32, 32)),
+    "cnn_cifar_bn": CNNConfig("cnn_cifar_bn", (32, 32, 3), (16, 32, 32), batch_norm=True),
+    # Table-1 / Fig-1/2/7 scale ladder (ImageNet-backbone stand-ins).
+    # 16x16 input keeps single-core CPU-PJRT iteration times in the regime
+    # where hundreds of estimator iterations are affordable; the ladder
+    # spans ~23x in parameter count and 4..6 blocks in depth.
+    "cnn_s": CNNConfig("cnn_s", (16, 16, 3), (8, 16, 16)),
+    "cnn_m": CNNConfig("cnn_m", (16, 16, 3), (16, 32, 32)),
+    "cnn_l": CNNConfig("cnn_l", (16, 16, 3), (32, 64, 64, 64), pool_after=(0, 1, 2)),
+    "cnn_xl": CNNConfig(
+        "cnn_xl", (16, 16, 3), (48, 96, 96, 96, 96), pool_after=(0, 1, 2)
+    ),
+}
+
+
+def get_model(name: str) -> Model:
+    if name in CNN_CONFIGS:
+        return build_cnn(CNN_CONFIGS[name])
+    if name == "unet":
+        from .unet import build_unet
+
+        return build_unet()
+    raise KeyError(f"unknown model {name!r}")
+
+
+STUDY_MODELS: Sequence[str] = ("cnn_mnist", "cnn_mnist_bn", "cnn_cifar", "cnn_cifar_bn")
+SCALE_MODELS: Sequence[str] = ("cnn_s", "cnn_m", "cnn_l", "cnn_xl")

@@ -1,0 +1,116 @@
+"""Training, QAT and evaluation programs (paper Appendix A/D).
+
+Entry points are built per model and lowered by aot.py. Training runs K
+Adam steps per PJRT dispatch under lax.scan (DESIGN.md key decision #4) —
+the Rust coordinator supplies (K, B, ...) microbatch stacks and carries the
+flat (params, m, v, step) state between calls.
+
+QAT uses the shared `apply(quant=...)` path: per-block min-max weight
+fake-quant with STE, calibrated activation ranges passed as inputs, and
+runtime per-block bit widths so one compiled executable serves every MPQ
+configuration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .fisher import mean_loss, softmax_per_example
+from .model import Model, QuantInputs
+
+ADAM = layers.AdamConfig(lr=1e-2)
+QAT_ADAM = layers.AdamConfig(lr=1e-3)  # paper: lr reduction of 0.1 for QAT
+# deeper/wider models need a cooler lr to avoid softmax collapse on the
+# synthetic task (observed on cnn_xl at 1e-2: loss pinned at ln 10)
+ADAM_LR_OVERRIDES = {"cnn_xl": 2e-3, "cnn_l": 5e-3}
+
+
+def adam_for(model: Model) -> layers.AdamConfig:
+    lr = ADAM_LR_OVERRIDES.get(model.name, ADAM.lr)
+    return layers.AdamConfig(lr=lr)
+
+
+def _loss(model: Model, flat, x, y, quant=None):
+    return mean_loss(model, flat, x, y, quant=quant)
+
+
+def make_train_epoch(model: Model, k: int):
+    """(params, m, v, step, xs (K,B,...), ys (K,B,...)) -> (params, m, v, step, mean_loss)."""
+
+    def step_fn(carry, batch):
+        params, m, v, step = carry
+        x, y = batch
+        loss, g = jax.value_and_grad(_loss, argnums=1)(model, params, x, y)
+        step = step + 1.0
+        params, m, v = layers.adam_update(adam_for(model), g, params, m, v, step)
+        return (params, m, v, step), loss
+
+    def train_epoch(params, m, v, step, xs, ys):
+        (params, m, v, step), losses = jax.lax.scan(
+            step_fn, (params, m, v, step), (xs, ys), length=k
+        )
+        return params, m, v, step, jnp.mean(losses)
+
+    return train_epoch
+
+
+def make_qat_epoch(model: Model, k: int):
+    """Train epoch with fake-quantized forward (STE backward)."""
+
+    def qat_epoch(params, m, v, step, xs, ys, bits_w, bits_a, act_lo, act_hi):
+        quant = QuantInputs(bits_w, bits_a, act_lo, act_hi)
+
+        def step_fn(carry, batch):
+            params, m, v, step = carry
+            x, y = batch
+            loss, g = jax.value_and_grad(_loss, argnums=1)(model, params, x, y, quant)
+            step = step + 1.0
+            params, m, v = layers.adam_update(QAT_ADAM, g, params, m, v, step)
+            return (params, m, v, step), loss
+
+        (params, m, v, step), losses = jax.lax.scan(
+            step_fn, (params, m, v, step), (xs, ys), length=k
+        )
+        return params, m, v, step, jnp.mean(losses)
+
+    return qat_epoch
+
+
+def _eval_outputs(model: Model, logits, y, mask):
+    per = softmax_per_example(model, logits, y)
+    loss_sum = jnp.sum(per * mask)
+    if model.task == "segment":
+        inter, union = layers.iou_counts(logits, y, mask, model.n_classes)
+        return loss_sum, inter, union
+    correct = layers.accuracy_counts(logits, y, mask)
+    return loss_sum, correct, jnp.sum(mask)
+
+
+def make_eval(model: Model):
+    """(params, x, y, mask) -> classify: (loss_sum, correct, n) / segment: (loss_sum, inter(C,), union(C,))."""
+
+    def eval_batch(params, x, y, mask):
+        logits = model.apply(params, x)
+        return _eval_outputs(model, logits, y, mask)
+
+    return eval_batch
+
+
+def make_qat_eval(model: Model):
+    """Quantized-model evaluation — same outputs as make_eval."""
+
+    def qat_eval(params, x, y, mask, bits_w, bits_a, act_lo, act_hi):
+        quant = QuantInputs(bits_w, bits_a, act_lo, act_hi)
+        logits = model.apply(params, x, quant=quant)
+        return _eval_outputs(model, logits, y, mask)
+
+    return qat_eval
+
+
+def make_predict(model: Model):
+    def predict(params, x):
+        return model.apply(params, x)
+
+    return predict

@@ -1,0 +1,98 @@
+"""Small U-Net for the segmentation study (paper §4.3, Fig. 4).
+
+Encoder-decoder with skip connections: two down levels, a bottleneck, two up
+levels and a 1x1 classifier head — the same topology as Ronneberger et al.
+scaled to the synthetic 32x32 shapes-segmentation dataset. Eleven
+quantizable weight blocks, nine activation sites.
+
+Shares the `Model` interface (quant / act_eps modes) with the CNNs so every
+L2 program (train, QAT, EF trace, ranges) is model-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .model import Model, QuantInputs, ste_quant_act, ste_quant_weight
+
+INPUT_SHAPE = (32, 32, 3)
+N_CLASSES = 4
+# channel widths: enc1, enc2, bottleneck, dec2, dec1
+WIDTHS = (8, 16, 32, 16, 8)
+
+
+def build_unet() -> Model:
+    layout = layers.ParamLayout()
+    h, w, cin = INPUT_SHAPE
+    e1, e2, bt, d2, d1 = WIDTHS
+
+    convs = [
+        # name, cin, cout, activation spatial size
+        ("enc1a", cin, e1, (h, w)),
+        ("enc1b", e1, e1, (h, w)),
+        ("enc2a", e1, e2, (h // 2, w // 2)),
+        ("enc2b", e2, e2, (h // 2, w // 2)),
+        ("bott", e2, bt, (h // 4, w // 4)),
+        ("dec2a", bt + e2, d2, (h // 2, w // 2)),
+        ("dec2b", d2, d2, (h // 2, w // 2)),
+        ("dec1a", d2 + e1, d1, (h, w)),
+        ("dec1b", d1, d1, (h, w)),
+    ]
+
+    weight_block_names: list[str] = []
+    act_shapes: list[tuple[int, ...]] = []
+    for b, (name, ci, co, hw) in enumerate(convs):
+        layout.add(f"{name}.w", (3, 3, ci, co), "conv_w", b)
+        layout.add(f"{name}.b", (co,), "bias")
+        weight_block_names.append(f"{name}.w")
+        act_shapes.append((hw[0], hw[1], co))
+    layout.add("head.w", (1, 1, d1, N_CLASSES), "conv_w", len(convs))
+    layout.add("head.b", (N_CLASSES,), "bias")
+    weight_block_names.append("head.w")
+
+    def apply(flat, x, quant: QuantInputs | None = None, act_eps=None, collect=None):
+        idx = [0]
+
+        def conv_relu(a, name):
+            i = idx[0]
+            wt = layout.get(flat, f"{name}.w")
+            if quant is not None:
+                wt = ste_quant_weight(wt, quant.bits_w[i])
+            a = layers.conv2d(a, wt, layout.get(flat, f"{name}.b"))
+            a = jax.nn.relu(a)
+            if act_eps is not None:
+                a = a + act_eps[i]
+            if collect is not None:
+                collect.append(a)
+            if quant is not None:
+                a = ste_quant_act(a, quant.act_lo[i], quant.act_hi[i], quant.bits_a[i])
+            idx[0] = i + 1
+            return a
+
+        s1 = conv_relu(conv_relu(x, "enc1a"), "enc1b")
+        p1 = layers.max_pool(s1)
+        s2 = conv_relu(conv_relu(p1, "enc2a"), "enc2b")
+        p2 = layers.max_pool(s2)
+        b = conv_relu(p2, "bott")
+        u2 = jnp.concatenate([layers.upsample2(b), s2], axis=-1)
+        d2_ = conv_relu(conv_relu(u2, "dec2a"), "dec2b")
+        u1 = jnp.concatenate([layers.upsample2(d2_), s1], axis=-1)
+        d1_ = conv_relu(conv_relu(u1, "dec1a"), "dec1b")
+        wt = layout.get(flat, "head.w")
+        if quant is not None:
+            wt = ste_quant_weight(wt, quant.bits_w[len(convs)])
+        logits = layers.conv2d(d1_, wt, layout.get(flat, "head.b"))
+        return logits  # (B, H, W, N_CLASSES)
+
+    return Model(
+        name="unet",
+        layout=layout,
+        input_shape=INPUT_SHAPE,
+        n_classes=N_CLASSES,
+        task="segment",
+        weight_block_names=weight_block_names,
+        act_shapes=act_shapes,
+        apply=apply,
+    )

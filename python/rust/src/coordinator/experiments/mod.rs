@@ -1,0 +1,1 @@
+// experiments (in progress)

@@ -1,0 +1,63 @@
+"""Shared fixtures: tiny test models and a learnable synthetic dataset."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import CNNConfig, build_cnn
+from compile import layers
+
+# A deliberately tiny CNN so exact-Hessian cross-checks stay cheap.
+TINY = CNNConfig("tiny", (8, 8, 1), (2,), n_classes=3, pool_after=(0,))
+TINY_BN = CNNConfig("tiny_bn", (8, 8, 1), (2,), n_classes=3, pool_after=(0,), batch_norm=True)
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    return build_cnn(TINY)
+
+
+@pytest.fixture(scope="session")
+def tiny_bn_model():
+    return build_cnn(TINY_BN)
+
+
+def synth_batch(rng, n, shape, n_classes):
+    """Class-conditional frequency patterns + noise (mirrors rust data/)."""
+    h, w, c = shape
+    ys = rng.integers(0, n_classes, size=n)
+    hh, ww = np.meshgrid(np.arange(h) / h, np.arange(w) / w, indexing="ij")
+    xs = np.zeros((n, h, w, c), np.float32)
+    for i, y in enumerate(ys):
+        cr = np.random.default_rng(1000 + int(y))
+        fx, fy = cr.uniform(0.5, 3.0, 2)
+        px, py = cr.uniform(0, 2 * np.pi, 2)
+        for ch in range(c):
+            pat = np.sin(2 * np.pi * fx * hh + px + 0.7 * ch) * np.cos(
+                2 * np.pi * fy * ww + py
+            )
+            xs[i, :, :, ch] = pat
+    xs += rng.normal(0, 0.3, xs.shape).astype(np.float32)
+    return jnp.asarray(xs), jnp.asarray(ys.astype(np.int32))
+
+
+@pytest.fixture(scope="session")
+def tiny_trained(tiny_model):
+    """Tiny model trained to (near) convergence on the synthetic task."""
+    model = tiny_model
+    params = layers.init_flat(model.layout, jnp.uint32(0))
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    step = jnp.float32(0.0)
+    rng = np.random.default_rng(0)
+
+    from compile.train import make_train_epoch
+
+    epoch = jax.jit(make_train_epoch(model, 10))
+    for _ in range(12):
+        xs, ys = synth_batch(rng, 10 * 16, model.input_shape, model.n_classes)
+        xs = xs.reshape(10, 16, *model.input_shape)
+        ys = ys.reshape(10, 16)
+        params, m, v, step, loss = epoch(params, m, v, step, xs, ys)
+    return model, params, float(loss)

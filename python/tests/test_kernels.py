@@ -1,0 +1,242 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes; each kernel must match its
+ref.py oracle to float tolerance. This is the core correctness signal for
+the compiled artifacts — every L2 program routes its hot-spot through these
+kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    fake_quant,
+    fake_quant_ref,
+    noise_power_ref,
+    quadform,
+    quadform_ref,
+    sqnorm,
+    sqnorm_ref,
+)
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=2.0):
+    return jnp.asarray(rng.normal(scale=scale, size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- sqnorm
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 17),
+    n=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sqnorm_matches_ref(b, n, seed):
+    rng = np.random.default_rng(seed)
+    g = _arr(rng, (b, n))
+    got = sqnorm(g, block_b=4, block_n=128)
+    want = sqnorm_ref(g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    block_b=st.sampled_from([1, 2, 8]),
+    block_n=st.sampled_from([32, 128, 2048]),
+)
+def test_sqnorm_block_shape_invariance(block_b, block_n):
+    rng = np.random.default_rng(7)
+    g = _arr(rng, (11, 301))
+    got = sqnorm(g, block_b=block_b, block_n=block_n)
+    np.testing.assert_allclose(got, sqnorm_ref(g), rtol=1e-5, atol=1e-6)
+
+
+def test_sqnorm_bf16_input():
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=(4, 200)), jnp.bfloat16)
+    got = sqnorm(g, block_n=128)
+    np.testing.assert_allclose(got, sqnorm_ref(g), rtol=2e-2)
+
+
+def test_sqnorm_zero_input():
+    out = sqnorm(jnp.zeros((3, 50)), block_n=64)
+    assert out.shape == (3,)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(3))
+
+
+def test_sqnorm_rejects_non_2d():
+    with pytest.raises(AssertionError):
+        sqnorm(jnp.zeros((2, 3, 4)))
+
+
+# -------------------------------------------------------------- quadform
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 10_000), seed=st.integers(0, 2**31 - 1))
+def test_quadform_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    r, v = _arr(rng, (n,)), _arr(rng, (n,))
+    got = quadform(r, v, block_n=512)
+    want = quadform_ref(r, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quadform_self_is_sqnorm():
+    rng = np.random.default_rng(1)
+    r = _arr(rng, (4096,))
+    got = quadform(r, r)
+    want = sqnorm_ref(r[None, :])[0]
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_quadform_rademacher_identity():
+    # r in {-1, 1}^n: <r, r> = n exactly.
+    rng = np.random.default_rng(2)
+    r = jnp.asarray(rng.choice([-1.0, 1.0], size=5000).astype(np.float32))
+    assert float(quadform(r, r)) == pytest.approx(5000.0)
+
+
+# ------------------------------------------------------------ fake_quant
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    bits=st.sampled_from([2.0, 3.0, 4.0, 6.0, 8.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n,))
+    lo, hi = float(np.min(np.asarray(x))), float(np.max(np.asarray(x)))
+    got = fake_quant(x, lo, hi, bits, block_n=256)
+    want = fake_quant_ref(x, lo, hi, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([3.0, 4.0, 8.0]), seed=st.integers(0, 1000))
+def test_fake_quant_error_bounded_by_half_step(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (777,))
+    lo = float(np.min(np.asarray(x)))
+    hi = float(np.max(np.asarray(x)))
+    q = np.asarray(fake_quant(x, lo, hi, bits, block_n=256))
+    delta = (hi - lo) / (2.0**bits - 1.0)
+    assert np.max(np.abs(q - np.asarray(x))) <= delta / 2 + 1e-5
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(9)
+    x = _arr(rng, (300,))
+    lo, hi = -3.0, 3.0
+    q1 = fake_quant(x, lo, hi, 4.0)
+    q2 = fake_quant(q1, lo, hi, 4.0)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+def test_fake_quant_degenerate_range_passthrough():
+    rng = np.random.default_rng(4)
+    x = _arr(rng, (100,))
+    np.testing.assert_array_equal(
+        np.asarray(fake_quant(x, 0.0, 0.0, 8.0)), np.asarray(x)
+    )
+
+
+def test_fake_quant_preserves_shape_and_dtype():
+    x = jnp.ones((3, 5, 7), jnp.float32)
+    out = fake_quant(x, 0.0, 2.0, 8.0)
+    assert out.shape == (3, 5, 7) and out.dtype == jnp.float32
+
+
+def test_fake_quant_endpoints_are_fixed_points():
+    x = jnp.asarray([-1.5, 1.5], jnp.float32)
+    out = np.asarray(fake_quant(x, -1.5, 1.5, 3.0))
+    np.testing.assert_allclose(out, [-1.5, 1.5], atol=1e-6)
+
+
+def test_fake_quant_level_count():
+    # 2-bit quantization of a dense line hits exactly 4 distinct levels.
+    x = jnp.linspace(-1.0, 1.0, 1001)
+    out = np.asarray(fake_quant(x, -1.0, 1.0, 2.0))
+    assert len(np.unique(np.round(out, 6))) == 4
+
+
+def test_fake_quant_traced_bits():
+    # bits as a traced runtime value — the MPQ-config-as-input contract.
+    rng = np.random.default_rng(5)
+    x = _arr(rng, (512,))
+
+    f = jax.jit(lambda x, b: fake_quant(x, -2.0, 2.0, b))
+    for b in [3.0, 4.0, 8.0]:
+        np.testing.assert_allclose(
+            np.asarray(f(x, jnp.float32(b))),
+            np.asarray(fake_quant_ref(x, -2.0, 2.0, b)),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+
+# ----------------------------------------------------------- noise model
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2.0, 3.0, 4.0, 6.0, 8.0]),
+    lo=st.floats(-10, 0),
+    width=st.floats(0.01, 20),
+)
+def test_noise_power_matches_empirical(bits, lo, width):
+    # E[(Q(x) - x)^2] over uniform x should approach delta^2/12.
+    hi = lo + width
+    x = jnp.asarray(
+        np.random.default_rng(0).uniform(lo, hi, size=200_000).astype(np.float32)
+    )
+    q = np.asarray(fake_quant_ref(x, lo, hi, bits))
+    emp = float(np.mean((q - np.asarray(x)) ** 2))
+    model = float(noise_power_ref(lo, hi, bits))
+    assert emp == pytest.approx(model, rel=0.05)
+
+
+# ---------------------------------------------------------- auto blocking
+
+
+def test_auto_block_properties():
+    from compile.kernels.sqnorm import auto_block
+
+    for n in [1, 5, 127, 128, 129, 4096, 100_000, 2_000_001]:
+        b = auto_block(n, 128)
+        assert b % 128 == 0, (n, b)
+        steps = -(-n // b)
+        assert steps <= 4, (n, b, steps)
+    # covering block for tiny inputs is one aligned tile
+    assert auto_block(1, 128) == 128
+
+
+def test_sqnorm_auto_blocks_match_explicit():
+    rng = np.random.default_rng(11)
+    g = _arr(rng, (9, 7000))
+    auto = sqnorm(g)  # auto block sizes
+    pinned = sqnorm(g, block_b=8, block_n=2048)  # TPU-style schedule
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(pinned), rtol=1e-5)
+
+
+def test_quadform_auto_blocks_match_explicit():
+    rng = np.random.default_rng(12)
+    r, v = _arr(rng, (10_001,)), _arr(rng, (10_001,))
+    np.testing.assert_allclose(
+        float(quadform(r, v)), float(quadform(r, v, block_n=512)), rtol=1e-4
+    )

@@ -1,0 +1,147 @@
+"""Model construction, layout and apply-mode tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.model import (
+    CNN_CONFIGS,
+    QuantInputs,
+    build_cnn,
+    get_model,
+)
+from compile.unet import build_unet
+from tests.conftest import synth_batch
+
+
+@pytest.mark.parametrize("name", list(CNN_CONFIGS))
+def test_layout_is_contiguous(name):
+    model = get_model(name)
+    off = 0
+    for s in model.layout.specs:
+        assert s.offset == off
+        off += s.size
+    assert off == model.n_params
+
+
+@pytest.mark.parametrize("name", ["cnn_mnist", "cnn_cifar_bn", "cnn_xl"])
+def test_forward_shape(name):
+    model = get_model(name)
+    params = layers.init_flat(model.layout, jnp.uint32(1))
+    x = jnp.zeros((5, *model.input_shape))
+    logits = model.apply(params, x)
+    assert logits.shape == (5, model.n_classes)
+
+
+def test_unet_forward_shape():
+    model = build_unet()
+    params = layers.init_flat(model.layout, jnp.uint32(1))
+    x = jnp.zeros((2, *model.input_shape))
+    logits = model.apply(params, x)
+    assert logits.shape == (2, 32, 32, model.n_classes)
+    assert model.n_weight_blocks == 10
+    assert model.n_act_blocks == 9
+
+
+def test_init_deterministic_and_seed_sensitive(tiny_model):
+    p0 = layers.init_flat(tiny_model.layout, jnp.uint32(7))
+    p1 = layers.init_flat(tiny_model.layout, jnp.uint32(7))
+    p2 = layers.init_flat(tiny_model.layout, jnp.uint32(8))
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+    assert not np.allclose(np.asarray(p0), np.asarray(p2))
+
+
+def test_init_statistics(tiny_model):
+    # gammas one, biases zero, weights he-scaled
+    flat = layers.init_flat(tiny_model.layout, jnp.uint32(3))
+    for s in tiny_model.layout.specs:
+        t = np.asarray(tiny_model.layout.get(flat, s.name))
+        if s.kind == "bias":
+            np.testing.assert_array_equal(t, 0.0)
+        elif s.kind == "conv_w":
+            fan = s.shape[0] * s.shape[1] * s.shape[2]
+            assert abs(t.std() - np.sqrt(2.0 / fan)) < 0.5 * np.sqrt(2.0 / fan)
+
+
+def _quant_inputs(model, bits=8.0):
+    lw, la = model.n_weight_blocks, model.n_act_blocks
+    return QuantInputs(
+        bits_w=jnp.full((lw,), bits),
+        bits_a=jnp.full((la,), bits),
+        act_lo=jnp.zeros((la,)),
+        act_hi=jnp.full((la,), 6.0),
+    )
+
+
+def test_quant_8bit_close_to_fp(tiny_trained):
+    model, params, _ = tiny_trained
+    rng = np.random.default_rng(5)
+    x, _ = synth_batch(rng, 16, model.input_shape, model.n_classes)
+    fp = model.apply(params, x)
+    q8 = model.apply(params, x, quant=_quant_inputs(model, 8.0))
+    q2 = model.apply(params, x, quant=_quant_inputs(model, 2.0))
+    err8 = float(jnp.max(jnp.abs(fp - q8)))
+    err2 = float(jnp.max(jnp.abs(fp - q2)))
+    assert err8 < err2, (err8, err2)
+    assert err8 < 0.15 * float(jnp.max(jnp.abs(fp)))
+
+
+def test_act_eps_zero_is_identity(tiny_trained):
+    model, params, _ = tiny_trained
+    rng = np.random.default_rng(6)
+    x, _ = synth_batch(rng, 4, model.input_shape, model.n_classes)
+    eps = [jnp.zeros((4, *s)) for s in model.act_shapes]
+    np.testing.assert_allclose(
+        np.asarray(model.apply(params, x)),
+        np.asarray(model.apply(params, x, act_eps=eps)),
+        atol=1e-6,
+    )
+
+
+def test_collect_shapes(tiny_trained):
+    model, params, _ = tiny_trained
+    x = jnp.zeros((3, *model.input_shape))
+    acts = []
+    model.apply(params, x, collect=acts)
+    assert len(acts) == model.n_act_blocks
+    for a, s in zip(acts, model.act_shapes):
+        assert a.shape == (3, *s)
+
+
+def test_bn_model_normalizes(tiny_bn_model):
+    model = tiny_bn_model
+    params = layers.init_flat(model.layout, jnp.uint32(2))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, *model.input_shape)).astype(np.float32))
+    acts = []
+    model.apply(params, x, collect=acts)
+    # post-BN pre-ReLU would be zero-mean; post-ReLU mean is positive but bounded
+    a = np.asarray(acts[0])
+    assert 0.05 < a.mean() < 1.0
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 0.0, 0.0]])
+    y = jnp.asarray([0, 2], jnp.int32)
+    got = np.asarray(layers.softmax_xent(logits, y))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    np.testing.assert_allclose(got, [-np.log(p0), np.log(3.0)], rtol=1e-5)
+
+
+def test_iou_counts_perfect_prediction():
+    logits = jnp.zeros((1, 4, 4, 3)).at[..., 1].set(5.0)
+    labels = jnp.ones((1, 4, 4), jnp.int32)
+    inter, union = layers.iou_counts(logits, labels, jnp.ones((1,)), 3)
+    assert float(inter[1]) == 16.0 and float(union[1]) == 16.0
+    assert float(union[0]) == 0.0
+
+
+def test_upsample2():
+    x = jnp.arange(4.0).reshape(1, 2, 2, 1)
+    up = layers.upsample2(x)
+    assert up.shape == (1, 4, 4, 1)
+    np.testing.assert_array_equal(
+        np.asarray(up[0, :, :, 0]),
+        [[0, 0, 1, 1], [0, 0, 1, 1], [2, 2, 3, 3], [2, 2, 3, 3]],
+    )

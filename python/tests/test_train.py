@@ -1,0 +1,131 @@
+"""Train / QAT / eval program tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.train import (
+    make_eval,
+    make_qat_epoch,
+    make_qat_eval,
+    make_train_epoch,
+)
+from tests.conftest import synth_batch
+
+
+def _epoch_data(rng, model, k, b):
+    xs, ys = synth_batch(rng, k * b, model.input_shape, model.n_classes)
+    return xs.reshape(k, b, *model.input_shape), ys.reshape(k, b)
+
+
+def _state(model):
+    params = layers.init_flat(model.layout, jnp.uint32(0))
+    return params, jnp.zeros_like(params), jnp.zeros_like(params), jnp.float32(0.0)
+
+
+def test_train_epoch_reduces_loss(tiny_model):
+    model = tiny_model
+    params, m, v, step = _state(model)
+    rng = np.random.default_rng(0)
+    epoch = jax.jit(make_train_epoch(model, 10))
+    losses = []
+    for _ in range(8):
+        xs, ys = _epoch_data(rng, model, 10, 16)
+        params, m, v, step, loss = epoch(params, m, v, step, xs, ys)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses
+    assert float(step) == 80.0
+
+
+def test_train_epoch_deterministic(tiny_model):
+    model = tiny_model
+    rng = np.random.default_rng(1)
+    xs, ys = _epoch_data(rng, model, 10, 16)
+    epoch = jax.jit(make_train_epoch(model, 10))
+    out1 = epoch(*_state(model), xs, ys)
+    out2 = epoch(*_state(model), xs, ys)
+    np.testing.assert_array_equal(np.asarray(out1[0]), np.asarray(out2[0]))
+
+
+def _quant_args(model, bits):
+    lw, la = model.n_weight_blocks, model.n_act_blocks
+    return (
+        jnp.full((lw,), float(bits)),
+        jnp.full((la,), float(bits)),
+        jnp.zeros((la,)),
+        jnp.full((la,), 6.0),
+    )
+
+
+def test_qat_epoch_trains(tiny_trained):
+    """QAT fine-tuning from an FP checkpoint keeps/improves quantized loss."""
+    model, params, _ = tiny_trained
+    m, v = jnp.zeros_like(params), jnp.zeros_like(params)
+    step = jnp.float32(0.0)
+    rng = np.random.default_rng(2)
+    qat = jax.jit(make_qat_epoch(model, 10))
+    bits = _quant_args(model, 4)
+    losses = []
+    for _ in range(6):
+        xs, ys = _epoch_data(rng, model, 10, 16)
+        params, m, v, step, loss = qat(params, m, v, step, xs, ys, *bits)
+        losses.append(float(loss))
+    assert losses[-1] <= losses[0] * 1.2, losses
+    assert np.isfinite(losses).all()
+
+
+def test_qat_high_bits_close_to_fp_loss(tiny_trained):
+    model, params, _ = tiny_trained
+    rng = np.random.default_rng(3)
+    x, y = synth_batch(rng, 64, model.input_shape, model.n_classes)
+    mask = jnp.ones((64,))
+    ev = make_eval(model)
+    qev = make_qat_eval(model)
+    fp_loss = float(ev(params, x, y, mask)[0])
+    q8_loss = float(qev(params, x, y, mask, *_quant_args(model, 8))[0])
+    q2_loss = float(qev(params, x, y, mask, *_quant_args(model, 2))[0])
+    assert abs(q8_loss - fp_loss) < 0.15 * abs(fp_loss) + 0.05
+    assert q2_loss > q8_loss
+
+
+def test_eval_mask(tiny_trained):
+    model, params, _ = tiny_trained
+    rng = np.random.default_rng(4)
+    x, y = synth_batch(rng, 32, model.input_shape, model.n_classes)
+    ev = make_eval(model)
+    full = ev(params, x, y, jnp.ones((32,)))
+    half_mask = jnp.concatenate([jnp.ones((16,)), jnp.zeros((16,))])
+    half = ev(params, x, y, half_mask)
+    first = ev(params, x[:16], y[:16], jnp.ones((16,)))
+    assert float(half[2]) == 16.0 and float(full[2]) == 32.0
+    assert float(half[1]) == pytest.approx(float(first[1]))
+    assert float(half[0]) == pytest.approx(float(first[0]), rel=1e-5)
+
+
+def test_eval_accuracy_reasonable(tiny_trained):
+    model, params, _ = tiny_trained
+    rng = np.random.default_rng(5)
+    x, y = synth_batch(rng, 128, model.input_shape, model.n_classes)
+    loss, correct, n = make_eval(model)(params, x, y, jnp.ones((128,)))
+    acc = float(correct) / float(n)
+    assert acc > 0.6, acc  # 3-class task, trained model
+
+
+def test_unet_train_and_eval_smoke():
+    from compile.unet import build_unet
+
+    model = build_unet()
+    params, m, v, step = _state(model)
+    rng = np.random.default_rng(6)
+    b = 4
+    xs = jnp.asarray(rng.normal(size=(2, b, *model.input_shape)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, model.n_classes, size=(2, b, 32, 32)).astype(np.int32))
+    epoch = make_train_epoch(model, 2)
+    params, m, v, step, loss = epoch(params, m, v, step, xs, ys)
+    assert np.isfinite(float(loss))
+    out = make_eval(model)(params, xs[0], ys[0], jnp.ones((b,)))
+    loss_sum, inter, union = out
+    assert inter.shape == (model.n_classes,)
+    assert np.all(np.asarray(inter) <= np.asarray(union) + 1e-6)

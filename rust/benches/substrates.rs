@@ -1,0 +1,87 @@
+//! Bench: pure-Rust substrate hot paths (no PJRT) — the L3 costs that
+//! surround every dispatch: dataset synthesis, quantizer sweeps,
+//! statistics, config sampling and Pareto extraction.
+
+use fitq::bench_util::{bench, black_box};
+use fitq::coordinator::{pareto_front, score};
+use fitq::data::{Dataset, EpochBatch, Split, SynthClass, SynthSeg};
+use fitq::metrics::SensitivityInputs;
+use fitq::quant::{BitConfigSampler, UniformQuantizer, PRECISIONS};
+use fitq::stats::{kendall_tau, spearman, RunningStats};
+use fitq::tensor::Pcg32;
+
+fn main() {
+    println!("# Substrate benches\n");
+    let mut rng = Pcg32::new(1, 1);
+
+    // data generation (feeds every scanned epoch)
+    let ds = SynthClass::syncifar(1);
+    bench("synth_class epoch batch (10x32 cifar)", 2, 10, || {
+        black_box(EpochBatch::generate(&ds, 10, 32, 0));
+    });
+    let seg = SynthSeg::synthshapes(1);
+    let mut x = vec![0.0f32; seg.sample_len()];
+    let mut y = vec![0i32; seg.label_len()];
+    bench("synth_seg sample (32x32x3 + labels)", 10, 100, || {
+        seg.sample(Split::Train, 7, &mut x, &mut y);
+        black_box(&x);
+    });
+
+    // quantizer sweep (fig5/fig9 analysis path)
+    let weights: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+    bench("uniform quantize-dequantize 100k params", 2, 20, || {
+        let q = UniformQuantizer::fit(&weights, 4);
+        black_box(q.empirical_noise_power(&weights));
+    });
+
+    // statistics
+    let xs: Vec<f64> = (0..5_000).map(|_| rng.normal() as f64).collect();
+    let ys: Vec<f64> = xs.iter().map(|v| v + rng.normal() as f64).collect();
+    bench("spearman n=5000", 2, 20, || {
+        black_box(spearman(&xs, &ys));
+    });
+    bench("kendall_tau n=1000", 2, 10, || {
+        black_box(kendall_tau(&xs[..1000], &ys[..1000]));
+    });
+    bench("welford push x 10k", 2, 20, || {
+        let mut s = RunningStats::new();
+        for &v in &xs {
+            s.push(v);
+        }
+        for &v in &ys {
+            s.push(v);
+        }
+        black_box(s.mean());
+    });
+
+    // config sampling + FIT scoring + Pareto (mpq_search inner loop)
+    let sens = SensitivityInputs {
+        w_traces: vec![5.0, 2.0, 1.0, 0.2],
+        a_traces: vec![3.0, 1.0, 0.4],
+        w_lo: vec![-1.0; 4],
+        w_hi: vec![1.0; 4],
+        a_lo: vec![0.0; 3],
+        a_hi: vec![6.0; 3],
+        bn_gamma: vec![None; 4],
+    };
+    let sizes = vec![432usize, 4608, 9216, 2560];
+    bench("sample+score+pareto 2000 configs", 1, 10, || {
+        let mut sampler = BitConfigSampler::new(4, 3, &PRECISIONS, 9);
+        let pts: Vec<_> = sampler
+            .take(2000)
+            .into_iter()
+            .map(|c| score(&sens, &sizes, 100, c))
+            .collect();
+        black_box(pareto_front(&pts));
+    });
+
+    // rng primitives
+    bench("pcg32 normal x 1M", 1, 10, || {
+        let mut r = Pcg32::new(3, 3);
+        let mut acc = 0.0f32;
+        for _ in 0..1_000_000 {
+            acc += r.normal();
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,38 @@
+//! Bench: Table 1 / Table 4 — per-iteration cost of the EF and Hutchinson
+//! trace estimators across the scale ladder (the end-to-end measurement
+//! the paper times on a 2080 Ti; here via CPU PJRT).
+//!
+//! Run with `cargo bench --bench table1_traces` (needs `make artifacts`).
+
+use fitq::bench_util::bench;
+use fitq::coordinator::{dataset_for, Estimator, ModelState, TraceEngine, TraceOptions, Trainer};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(root)?;
+    println!("# Table-1/4 bench: estimator cost per iteration (bs=32)\n");
+    for model in ["cnn_s", "cnn_m", "cnn_l"] {
+        let ds = dataset_for(&rt, model, 0xda7a)?;
+        let mut trainer = Trainer::new(&rt, ds.as_ref());
+        let mut st = ModelState::init(&rt, model, 0)?;
+        trainer.train(&mut st, 3)?; // lightly trained is enough for cost
+        let engine = TraceEngine::new(&rt, ds.as_ref());
+        for (est, tag) in [
+            (Estimator::EmpiricalFisher, "ef"),
+            (Estimator::Hutchinson, "hessian"),
+        ] {
+            let mut seed = 0u64;
+            bench(&format!("{model}/{tag}_iteration_bs32"), 1, 8, || {
+                seed += 1;
+                let o = TraceOptions::fixed_iters(32, 1, seed);
+                engine.run(model, &st.params, est, o).unwrap();
+            });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Bench: Table 2 / Figs 3-4 pipeline stages — the per-configuration cost
+//! of the rank-correlation study: QAT epoch, quantized eval, metric
+//! evaluation. These dominate the wall-clock of the 100-config studies.
+//!
+//! Run with `cargo bench --bench table2_pipeline` (needs `make artifacts`).
+
+use fitq::bench_util::{bench, black_box};
+use fitq::coordinator::{dataset_for, gather, ModelState, TraceOptions, Trainer};
+use fitq::data::EvalSet;
+use fitq::metrics::Metric;
+use fitq::quant::{BitConfig, BitConfigSampler, PRECISIONS};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(root)?;
+    let model = "cnn_mnist";
+    let mm = rt.model(model)?.clone();
+    let ds = dataset_for(&rt, model, 0xda7a)?;
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, 0)?;
+    trainer.train(&mut st, 10)?;
+    let ev = EvalSet::materialize(ds.as_ref(), 512);
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default())?;
+    let cfg = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
+
+    println!("# Table-2 pipeline bench ({model})\n");
+    bench("qat_epoch (10 steps, bs32)", 1, 8, || {
+        let mut s2 = st.clone();
+        s2.reset_optimizer();
+        trainer.qat_train(&mut s2, &cfg, &sens.act, 1).unwrap();
+    });
+    bench("qat_eval (512 samples)", 1, 8, || {
+        black_box(trainer.evaluate_q(&st, &ev, &cfg, &sens.act).unwrap());
+    });
+    bench("fp_eval (512 samples)", 1, 8, || {
+        black_box(trainer.evaluate(&st, &ev).unwrap());
+    });
+
+    // metric evaluation: the "free" part FIT buys (vs training a config)
+    let mut sampler =
+        BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, 1);
+    let configs = sampler.take(1000);
+    bench("metric zoo x 1000 configs", 1, 20, || {
+        for c in &configs {
+            for m in Metric::ALL {
+                black_box(m.eval(&sens.inputs, c));
+            }
+        }
+    });
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Minimal benchmark harness (criterion is not in the vendored dependency
+//! set). `cargo bench` runs the registered `harness = false` binaries,
+//! which use this: warmup, timed iterations, mean ± std, ns/op report.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` with `iters` measured iterations after `warmup` unmeasured
+/// ones. Returns per-iteration statistics over per-iteration samples.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let r = BenchResult { name: name.to_string(), iters, mean_ns: mean, std_ns: var.sqrt() };
+    println!(
+        "{:<42} {:>12.2} us/iter (± {:>8.2} us, {} iters, {:>10.1} ops/s)",
+        r.name,
+        r.mean_ns / 1e3,
+        r.std_ns / 1e3,
+        r.iters,
+        r.per_sec()
+    );
+    r
+}
+
+/// Keep a value from being optimized away.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 5);
+    }
+}

@@ -1,0 +1,93 @@
+//! Figures 1 & 7: per-block traces.
+//!
+//! Fig 1 — Hessian vs EF *parameter* traces for the four scale models:
+//! the EF must preserve the Hessian's relative block profile (rank
+//! correlation close to 1 per model; Inception-V3 matched only up to a
+//! constant scale in the paper — scale-free agreement is the claim).
+//!
+//! Fig 7 — EF *activation* traces for the same models.
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::report::{md_table, Reporter};
+use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
+use crate::coordinator::trainer::dataset_for;
+use crate::runtime::Runtime;
+use crate::stats::spearman;
+
+pub struct Fig1Options {
+    pub batch: usize,
+    pub tol: f64,
+    pub max_iters: u64,
+    pub fp_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig1Options {
+    fn default() -> Self {
+        Fig1Options { batch: 32, tol: 0.02, max_iters: 300, fp_epochs: 15, seed: 0 }
+    }
+}
+
+pub fn run(rt: &Runtime, opt: &Fig1Options) -> Result<()> {
+    let rep = Reporter::from_env()?;
+    let mut md = String::from("# Fig 1 / Fig 7 — per-block EF vs Hessian traces\n\n");
+    let mut summary_rows = Vec::new();
+
+    for (model, stands_for) in SCALE_MODELS {
+        eprintln!("[fig1] {model}");
+        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
+        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
+        let engine = TraceEngine::new(rt, ds.as_ref());
+        let o = TraceOptions {
+            batch: opt.batch,
+            tol: opt.tol,
+            min_iters: 16,
+            max_iters: opt.max_iters,
+            seed: opt.seed,
+        };
+        let ef = engine.run(model, &st.params, Estimator::EmpiricalFisher, o)?;
+        let hess = engine.run(model, &st.params, Estimator::Hutchinson, o)?;
+
+        let lw = ef.w_traces.len();
+        let mut rows = Vec::with_capacity(lw);
+        for i in 0..lw {
+            rows.push(vec![
+                i as f64,
+                ef.w_traces[i],
+                hess.w_traces[i],
+                ef.a_traces.get(i).copied().unwrap_or(f64::NAN),
+            ]);
+        }
+        rep.csv(
+            &format!("fig1_{model}.csv"),
+            &["block", "ef_w_trace", "hessian_w_trace", "ef_a_trace"],
+            &rows,
+        )?;
+
+        let rho = spearman(&ef.w_traces, &hess.w_traces);
+        // least-squares scale between the profiles (Inception-style offset)
+        let scale = {
+            let num: f64 = ef.w_traces.iter().zip(&hess.w_traces).map(|(e, h)| e * h).sum();
+            let den: f64 = ef.w_traces.iter().map(|e| e * e).sum();
+            num / den.max(1e-300)
+        };
+        summary_rows.push(vec![
+            format!("{model} ({stands_for})"),
+            format!("{rho:.3}"),
+            format!("{scale:.2}"),
+            format!("{} / {}", ef.iterations, hess.iterations),
+        ]);
+        eprintln!("  spearman(EF_w, Hessian_w) = {rho:.3}");
+    }
+
+    md.push_str(&md_table(
+        &["model", "spearman(EF, Hessian) blocks", "LS scale H/EF", "iters EF/H"],
+        &summary_rows,
+    ));
+    md.push_str("\nPer-block series: results/fig1_<model>.csv (ef_a_trace column is Fig 7).\n");
+    rep.markdown("fig1_fig7.md", &md)?;
+    println!("{md}");
+    Ok(())
+}

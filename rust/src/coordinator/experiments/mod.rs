@@ -1,0 +1,72 @@
+//! One module per paper table/figure (see DESIGN.md per-experiment index).
+//!
+//! Every experiment writes its raw series as CSV plus a markdown summary
+//! under results/ and prints the headline numbers; EXPERIMENTS.md records
+//! paper-vs-measured.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig9;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::Result;
+
+use super::state::ModelState;
+use super::trainer::{dataset_for, Trainer};
+use crate::runtime::Runtime;
+
+/// The Table-1 / Fig-1/2/7 scale ladder and the paper models they stand
+/// in for (DESIGN.md substitutions).
+pub const SCALE_MODELS: [(&str, &str); 4] = [
+    ("cnn_s", "ResNet-18"),
+    ("cnn_m", "ResNet-50"),
+    ("cnn_l", "MobileNet-V2"),
+    ("cnn_xl", "Inception-V3"),
+];
+
+/// The Table-2 studies: (experiment id, model, dataset label, has BN).
+pub const STUDIES: [(&str, &str, &str, bool); 4] = [
+    ("A", "cnn_cifar_bn", "syncifar", true),
+    ("B", "cnn_cifar", "syncifar", false),
+    ("C", "cnn_mnist_bn", "synmnist", true),
+    ("D", "cnn_mnist", "synmnist", false),
+];
+
+/// Load a cached FP checkpoint or train one (results/ckpt/<model>.bin).
+/// Training state is deterministic in (model, seed, epochs), so a cache
+/// hit replays the same experiment inputs.
+pub fn get_trained(
+    rt: &Runtime,
+    model: &str,
+    epochs: usize,
+    seed: u64,
+) -> Result<ModelState> {
+    let dir = std::path::PathBuf::from(
+        std::env::var_os("FITQ_RESULTS").unwrap_or_else(|| "results".into()),
+    )
+    .join("ckpt");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{model}_s{seed}_e{epochs}.bin"));
+    if path.exists() {
+        if let Ok(st) = ModelState::load(&path, model) {
+            if st.n_params() == rt.model(model)?.n_params {
+                return Ok(st);
+            }
+        }
+    }
+    let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+    let mut trainer = Trainer::new(rt, ds.as_ref());
+    let mut st = ModelState::init(rt, model, seed as u32)?;
+    let losses = trainer.train(&mut st, epochs)?;
+    eprintln!(
+        "  [{model}] FP trained {epochs} epochs, loss {:.4} -> {:.4}",
+        losses.first().copied().unwrap_or(f64::NAN),
+        losses.last().copied().unwrap_or(f64::NAN)
+    );
+    st.save(&path)?;
+    Ok(st)
+}

@@ -1,0 +1,136 @@
+//! Table 1: EF vs Hessian estimator variance, iteration time and relative
+//! speedup across the model scale ladder (batch size 32).
+//!
+//! Paper protocol (Appendix C): statistics over `runs` runs of `iters`
+//! iterations each; variances normalized w.r.t. trace magnitude and
+//! averaged across blocks; speedup s = (sigma_H^2 t_H)/(sigma_EF^2 t_EF).
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::report::{md_table, Reporter};
+use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
+use crate::coordinator::trainer::dataset_for;
+use crate::runtime::Runtime;
+use crate::stats::RunningStats;
+
+pub struct Table1Options {
+    pub batch: usize,
+    pub iters: u64,
+    pub runs: usize,
+    pub fp_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for Table1Options {
+    fn default() -> Self {
+        Table1Options { batch: 32, iters: 60, runs: 3, fp_epochs: 15, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub model: String,
+    pub stands_for: String,
+    pub var_ef: (f64, f64),
+    pub var_h: (f64, f64),
+    pub time_ef_ms: (f64, f64),
+    pub time_h_ms: (f64, f64),
+    pub speedup: f64,
+}
+
+pub fn run(rt: &Runtime, opt: &Table1Options) -> Result<Vec<Table1Row>> {
+    let rep = Reporter::from_env()?;
+    let mut rows = Vec::new();
+    for (model, stands_for) in SCALE_MODELS {
+        eprintln!("[table1] {model} ({stands_for})");
+        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
+        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
+        let engine = TraceEngine::new(rt, ds.as_ref());
+
+        let mut stats = [[RunningStats::new(), RunningStats::new()], [
+            RunningStats::new(),
+            RunningStats::new(),
+        ]]; // [est][var|time]
+        for run_i in 0..opt.runs {
+            for (ei, est) in [Estimator::EmpiricalFisher, Estimator::Hutchinson]
+                .into_iter()
+                .enumerate()
+            {
+                let o = TraceOptions::fixed_iters(opt.batch, opt.iters, opt.seed + run_i as u64 + 1);
+                let r = engine.run(model, &st.params, est, o)?;
+                stats[ei][0].push(r.norm_variance);
+                stats[ei][1].push(r.iter_time_s * 1e3);
+            }
+        }
+        let g = |s: &RunningStats| (s.mean(), s.std());
+        let (var_ef, time_ef) = (g(&stats[0][0]), g(&stats[0][1]));
+        let (var_h, time_h) = (g(&stats[1][0]), g(&stats[1][1]));
+        let speedup = (var_h.0 * time_h.0) / (var_ef.0 * time_ef.0).max(1e-300);
+        eprintln!(
+            "  var EF {:.3} vs H {:.3}; time EF {:.1}ms vs H {:.1}ms; speedup {speedup:.1}x",
+            var_ef.0, var_h.0, time_ef.0, time_h.0
+        );
+        rows.push(Table1Row {
+            model: model.to_string(),
+            stands_for: stands_for.to_string(),
+            var_ef,
+            var_h,
+            time_ef_ms: time_ef,
+            time_h_ms: time_h,
+            speedup,
+        });
+    }
+
+    rep.csv(
+        "table1.csv",
+        &[
+            "model", "var_ef", "var_ef_std", "var_h", "var_h_std", "t_ef_ms", "t_ef_std",
+            "t_h_ms", "t_h_std", "speedup",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    rows.iter().position(|x| x.model == r.model).unwrap() as f64,
+                    r.var_ef.0,
+                    r.var_ef.1,
+                    r.var_h.0,
+                    r.var_h.1,
+                    r.time_ef_ms.0,
+                    r.time_ef_ms.1,
+                    r.time_h_ms.0,
+                    r.time_h_ms.1,
+                    r.speedup,
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+
+    let md_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{} ({})", r.model, r.stands_for),
+                format!("{:.2} ± {:.2}", r.var_ef.0, r.var_ef.1),
+                format!("{:.2} ± {:.2}", r.var_h.0, r.var_h.1),
+                format!("{:.2} ± {:.2}", r.time_ef_ms.0, r.time_ef_ms.1),
+                format!("{:.2} ± {:.2}", r.time_h_ms.0, r.time_h_ms.1),
+                format!("**{:.2}**", r.speedup),
+            ]
+        })
+        .collect();
+    let md = format!(
+        "# Table 1 — EF vs Hessian estimator (bs={}, {} iters x {} runs)\n\n{}\n",
+        opt.batch,
+        opt.iters,
+        opt.runs,
+        md_table(
+            &["model", "EF var", "Hessian var", "EF ms/iter", "Hessian ms/iter", "speedup"],
+            &md_rows
+        )
+    );
+    rep.markdown("table1.md", &md)?;
+    println!("{md}");
+    Ok(rows)
+}

@@ -1,0 +1,176 @@
+//! Table 2 + Fig 3 (+ Fig 5b): the rank-correlation study.
+//!
+//! Four experiments (A: syncifar+BN, B: syncifar, C: synmnist+BN,
+//! D: synmnist), each training `n_configs` random MPQ configurations by
+//! QAT fine-tuning from a shared FP checkpoint, then rank-correlating
+//! every sensitivity metric against final test performance.
+//!
+//! Reproduced claims:
+//! - FIT correlates consistently highly across all four experiments;
+//! - FIT_W + FIT_A -> FIT *increases* correlation (well-scaled fusion),
+//!   while QR_W + QR_A -> QR does not;
+//! - (Fig 5b) correlation against *training* accuracy exceeds the test
+//!   correlation (distributional-shift note, §4.4).
+
+use anyhow::Result;
+
+use crate::coordinator::evaluator::{metric_value, run_study, StudyOptions, StudyResult};
+use crate::coordinator::experiments::STUDIES;
+use crate::coordinator::report::{fmt, md_table, Reporter};
+use crate::metrics::Metric;
+use crate::quant::PRECISIONS;
+use crate::runtime::Runtime;
+use crate::stats::{bootstrap_ci, spearman};
+use crate::tensor::Pcg32;
+
+pub struct Table2Options {
+    pub study: StudyOptions,
+    /// restrict to experiment ids, e.g. ["D"]; empty = all four.
+    pub only: Vec<String>,
+}
+
+impl Default for Table2Options {
+    fn default() -> Self {
+        Table2Options { study: StudyOptions::default(), only: vec![] }
+    }
+}
+
+pub fn run(rt: &Runtime, opt: &Table2Options) -> Result<Vec<(String, StudyResult)>> {
+    let rep = Reporter::from_env()?;
+    let mut results = Vec::new();
+
+    for (exp, model, dataset, has_bn) in STUDIES {
+        if !opt.only.is_empty() && !opt.only.iter().any(|o| o == exp) {
+            continue;
+        }
+        eprintln!("[table2] experiment {exp}: {model} on {dataset} (bn={has_bn})");
+        let res = run_study(rt, model, &opt.study)?;
+
+        // scatter data for Fig 3 (every metric value + outcome per config)
+        let header: Vec<&str> = ["config", "mean_bits", "test_score", "train_score"]
+            .into_iter()
+            .chain(Metric::ALL.iter().map(|m| m.name()))
+            .collect();
+        let rows: Vec<Vec<f64>> = res
+            .outcomes
+            .iter()
+            .enumerate()
+            .map(|(i, o)| {
+                let mut row = vec![i as f64, o.mean_bits, o.test_score, o.train_score];
+                row.extend(
+                    Metric::ALL
+                        .iter()
+                        .map(|m| metric_value(o, *m).unwrap_or(f64::NAN)),
+                );
+                row
+            })
+            .collect();
+        rep.csv(&format!("fig3_exp{exp}.csv"), &header, &rows)?;
+        let pts: Vec<(f64, f64)> = res
+            .outcomes
+            .iter()
+            .filter_map(|o| metric_value(o, Metric::Fit).map(|f| (f, o.test_score)))
+            .collect();
+        rep.markdown(
+            &format!("fig3_exp{exp}.txt"),
+            &crate::stats::ascii_plot::scatter(
+                &format!("Fig 3 (exp {exp}) — FIT vs final accuracy"),
+                "FIT",
+                "accuracy",
+                &pts,
+                64,
+                20,
+            ),
+        )?;
+        results.push((exp.to_string(), res));
+    }
+
+    // Table-2 matrix
+    let mut md_rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for (exp, res) in &results {
+        let mut cells = vec![exp.clone(), res.model.clone()];
+        let mut row = vec![0.0f64; 0];
+        for m in Metric::ALL {
+            let rho = res.correlation(m);
+            cells.push(fmt(rho, 2));
+            row.push(rho.unwrap_or(f64::NAN));
+        }
+        // Fig 5b: FIT vs training score
+        let train_rho = {
+            let fit_vals: Option<Vec<f64>> = res
+                .outcomes
+                .iter()
+                .map(|o| metric_value(o, Metric::Fit).map(|v| -v))
+                .collect();
+            fit_vals.map(|v| {
+                let tr: Vec<f64> = res.outcomes.iter().map(|o| o.train_score).collect();
+                spearman(&v, &tr)
+            })
+        };
+        cells.push(fmt(train_rho, 2));
+        cells.push(format!("{:.3}", res.fp_test_score));
+        row.push(train_rho.unwrap_or(f64::NAN));
+        row.push(res.fp_test_score);
+        md_rows.push(cells);
+        csv_rows.push(row);
+    }
+
+    let metric_names: Vec<&str> = Metric::ALL.iter().map(|m| m.name()).collect();
+    let mut header = vec!["exp", "model"];
+    header.extend(metric_names.iter());
+    header.push("FIT(vs train acc)");
+    header.push("FP score");
+
+    let md = format!(
+        "# Table 2 — rank correlation (Spearman) of sensitivity metrics vs final accuracy\n\n\
+         {} configs per experiment, bits in {:?}, QAT fine-tune {} epochs.\n\n{}\n\n\
+         ## FIT fusion check (paper: FIT_A inclusion helps, QR_A hurts)\n\n{}\n",
+        opt.study.n_configs,
+        PRECISIONS,
+        opt.study.qat_epochs,
+        md_table(&header, &md_rows),
+        fusion_summary(&results),
+    );
+    rep.markdown("table2.md", &md)?;
+
+    let csv_header: Vec<&str> = metric_names
+        .iter()
+        .copied()
+        .chain(["fit_vs_train", "fp_score"])
+        .collect();
+    rep.csv("table2.csv", &csv_header, &csv_rows)?;
+    println!("{md}");
+
+    // bootstrap CI for FIT correlations (extension beyond the paper)
+    let mut ci_md = String::from("# Table 2 FIT correlation 95% bootstrap CIs\n\n| exp | rho(FIT) | CI |\n|---|---|---|\n");
+    let mut rng = Pcg32::new(1234, 9);
+    for (exp, res) in &results {
+        let vals: Vec<f64> = res
+            .outcomes
+            .iter()
+            .map(|o| -metric_value(o, Metric::Fit).unwrap_or(f64::NAN))
+            .collect();
+        let scores: Vec<f64> = res.outcomes.iter().map(|o| o.test_score).collect();
+        let (lo, hi) = bootstrap_ci(&vals, &scores, spearman, 500, 0.95, &mut rng);
+        ci_md.push_str(&format!(
+            "| {exp} | {:.2} | [{lo:.2}, {hi:.2}] |\n",
+            res.correlation(Metric::Fit).unwrap_or(f64::NAN)
+        ));
+    }
+    rep.markdown("table2_ci.md", &ci_md)?;
+    Ok(results)
+}
+
+fn fusion_summary(results: &[(String, StudyResult)]) -> String {
+    let mut rows = Vec::new();
+    for (exp, res) in results {
+        let g = |m: Metric| res.correlation(m).unwrap_or(f64::NAN);
+        rows.push(vec![
+            exp.clone(),
+            format!("{:+.2}", g(Metric::Fit) - g(Metric::FitW)),
+            format!("{:+.2}", g(Metric::Qr) - g(Metric::QrW)),
+        ]);
+    }
+    md_table(&["exp", "rho(FIT) - rho(FIT_W)", "rho(QR) - rho(QR_W)"], &rows)
+}

@@ -1,0 +1,93 @@
+//! Tables 3 & 4 (Appendix C): estimator variance and iteration time as a
+//! function of batch size {4, 8, 16, 32}, for both estimators across the
+//! scale ladder. The paper's observations to reproduce: EF variance decays
+//! ~1/B and is orders of magnitude below the Hessian's at every batch
+//! size; iteration time grows with batch for both, with the Hessian's
+//! double backward costing a model-dependent multiple.
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::report::{md_table, Reporter};
+use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
+use crate::coordinator::trainer::dataset_for;
+use crate::runtime::Runtime;
+use crate::stats::RunningStats;
+
+pub struct Table3Options {
+    pub batches: Vec<usize>,
+    pub iters: u64,
+    pub runs: usize,
+    pub fp_epochs: usize,
+    pub seed: u64,
+    pub models: Vec<String>,
+}
+
+impl Default for Table3Options {
+    fn default() -> Self {
+        Table3Options {
+            batches: vec![4, 8, 16, 32],
+            iters: 40,
+            runs: 3,
+            fp_epochs: 15,
+            seed: 0,
+            models: SCALE_MODELS.iter().map(|(m, _)| m.to_string()).collect(),
+        }
+    }
+}
+
+pub fn run(rt: &Runtime, opt: &Table3Options) -> Result<()> {
+    let rep = Reporter::from_env()?;
+    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+    let mut md = String::from("# Tables 3-4 — estimator variance / iteration time vs batch size\n\n");
+
+    for model in &opt.models {
+        eprintln!("[table3] {model}");
+        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
+        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
+        let engine = TraceEngine::new(rt, ds.as_ref());
+        let mut md_rows = Vec::new();
+        for &b in &opt.batches {
+            let mut cells = vec![format!("{b}")];
+            let mut row = vec![model_index(model) as f64, b as f64];
+            for est in [Estimator::EmpiricalFisher, Estimator::Hutchinson] {
+                let mut var = RunningStats::new();
+                let mut time = RunningStats::new();
+                for r_i in 0..opt.runs {
+                    let o = TraceOptions::fixed_iters(b, opt.iters, opt.seed + 31 * r_i as u64);
+                    let r = engine.run(model, &st.params, est, o)?;
+                    var.push(r.norm_variance);
+                    time.push(r.iter_time_s * 1e3);
+                }
+                cells.push(format!("{:.2} ± {:.2}", var.mean(), var.std()));
+                cells.push(format!("{:.2} ± {:.2}", time.mean(), time.std()));
+                row.extend([var.mean(), var.std(), time.mean(), time.std()]);
+            }
+            md_rows.push(cells);
+            csv_rows.push(row);
+        }
+        md.push_str(&format!(
+            "## {model}\n\n{}\n",
+            md_table(
+                &["batch", "EF var", "EF ms/iter", "Hessian var", "Hessian ms/iter"],
+                &md_rows
+            )
+        ));
+    }
+
+    rep.csv(
+        "table3_table4.csv",
+        &[
+            "model_idx", "batch", "ef_var", "ef_var_std", "ef_ms", "ef_ms_std", "h_var",
+            "h_var_std", "h_ms", "h_ms_std",
+        ],
+        &csv_rows,
+    )?;
+    rep.markdown("table3_table4.md", &md)?;
+    println!("{md}");
+    Ok(())
+}
+
+fn model_index(model: &str) -> usize {
+    SCALE_MODELS.iter().position(|(m, _)| *m == model).unwrap_or(99)
+}

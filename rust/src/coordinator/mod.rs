@@ -1,0 +1,29 @@
+//! L3 coordinator: the runtime orchestration of the FIT methodology.
+//!
+//! - `state` / `trainer`: owned flat model state; FP + QAT training and
+//!   evaluation drivers over the AOT artifacts.
+//! - `traces`: the EF / Hutchinson trace-estimation engine with the
+//!   paper's fixed-tolerance early stopping.
+//! - `sensitivity`: one-shot gathering of every metric's inputs.
+//! - `evaluator`: the train-hundreds-of-configs rank-correlation pipeline.
+//! - `search`: Pareto front + greedy budgeted bit allocation on top of FIT.
+//! - `experiments`: one module per paper table/figure.
+//! - `report`: CSV/markdown emission under results/.
+
+pub mod allocate;
+pub mod evaluator;
+pub mod experiments;
+pub mod report;
+pub mod search;
+pub mod sensitivity;
+pub mod state;
+pub mod traces;
+pub mod trainer;
+
+pub use allocate::exact_allocate;
+pub use evaluator::{run_study, StudyOptions, StudyResult};
+pub use search::{greedy_allocate, pareto_front, score, ScoredConfig};
+pub use sensitivity::{gather, SensitivityReport};
+pub use state::ModelState;
+pub use traces::{relative_speedup, Estimator, TraceEngine, TraceOptions, TraceResult};
+pub use trainer::{dataset_for, ActRanges, EvalResult, Trainer};

@@ -1,0 +1,109 @@
+//! CSV / markdown report writers — every experiment drops its raw series
+//! as CSV plus a human-readable markdown summary under results/.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub struct Reporter {
+    dir: PathBuf,
+}
+
+impl Reporter {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Reporter> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating results dir {}", dir.display()))?;
+        Ok(Reporter { dir })
+    }
+
+    pub fn from_env() -> Result<Reporter> {
+        let dir = std::env::var_os("FITQ_RESULTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("results"));
+        Reporter::new(dir)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Write a CSV with a header row and f64 cells (NaN -> empty).
+    pub fn csv(&self, name: &str, header: &[&str], rows: &[Vec<f64>]) -> Result<PathBuf> {
+        let path = self.path(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", header.join(","))?;
+        for row in rows {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|v| if v.is_finite() { format!("{v}") } else { String::new() })
+                .collect();
+            writeln!(f, "{}", cells.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Write a CSV with string cells.
+    pub fn csv_str(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+        let path = self.path(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", header.join(","))?;
+        for row in rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Write/overwrite a markdown summary.
+    pub fn markdown(&self, name: &str, content: &str) -> Result<PathBuf> {
+        let path = self.path(name);
+        std::fs::write(&path, content)?;
+        Ok(path)
+    }
+}
+
+/// Render a markdown table.
+pub fn md_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("| {} |\n", header.join(" | ")));
+    out.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+pub fn fmt(v: Option<f64>, digits: usize) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.digits$}"),
+        _ => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_markdown_roundtrip() {
+        let dir = std::env::temp_dir().join("fitq_report_test");
+        let r = Reporter::new(&dir).unwrap();
+        let p = r
+            .csv("t.csv", &["a", "b"], &[vec![1.0, 2.0], vec![f64::NAN, 3.0]])
+            .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n,3\n");
+        let md = md_table(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| x | y |"));
+        assert!(md.contains("| 1 | 2 |"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fmt_handles_missing() {
+        assert_eq!(fmt(Some(0.8567), 2), "0.86");
+        assert_eq!(fmt(None, 2), "-");
+        assert_eq!(fmt(Some(f64::NAN), 2), "-");
+    }
+}

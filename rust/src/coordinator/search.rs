@@ -1,0 +1,194 @@
+//! MPQ configuration search (the HAWQ-style use of FIT, paper §1-2).
+//!
+//! FIT gives every candidate configuration a scalar sensitivity score
+//! without training it; combined with the size model this yields:
+//!
+//! - `pareto_front`: the size-vs-FIT front from a random sample of the
+//!   exponential configuration space (the paper's "Pareto front ... used
+//!   to quickly determine the best MPQ configuration for a given set of
+//!   constraints").
+//! - `greedy_allocate`: budgeted bit allocation — start everything at the
+//!   highest precision and repeatedly take the cheapest FIT-per-bit-saved
+//!   step until the size budget is met.
+
+use crate::metrics::{fit, SensitivityInputs};
+use crate::quant::{model_bits, BitConfig};
+
+/// One scored configuration.
+#[derive(Debug, Clone)]
+pub struct ScoredConfig {
+    pub cfg: BitConfig,
+    pub fit: f64,
+    pub size_bits: u64,
+}
+
+pub fn score(s: &SensitivityInputs, block_sizes: &[usize], n_unq: usize, cfg: BitConfig) -> ScoredConfig {
+    let f = fit(s, &cfg);
+    let size_bits = model_bits(block_sizes, n_unq, &cfg);
+    ScoredConfig { cfg, fit: f, size_bits }
+}
+
+/// Indices of the non-dominated points (minimize both size and FIT).
+/// O(n log n): sort by size, sweep for strictly improving FIT.
+pub fn pareto_front(points: &[ScoredConfig]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .size_bits
+            .cmp(&points[b].size_bits)
+            .then(points[a].fit.partial_cmp(&points[b].fit).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_fit = f64::INFINITY;
+    for &i in &idx {
+        if points[i].fit < best_fit {
+            front.push(i);
+            best_fit = points[i].fit;
+        }
+    }
+    front
+}
+
+/// Greedy budgeted allocation: all blocks start at `precisions.max()`;
+/// each step lowers the precision of the block whose next step costs the
+/// least FIT increase per bit of storage saved, until `budget_bits` is
+/// met. Returns None if even the all-minimum config misses the budget.
+pub fn greedy_allocate(
+    s: &SensitivityInputs,
+    block_sizes: &[usize],
+    n_unq: usize,
+    precisions: &[u32],
+    budget_bits: u64,
+) -> Option<ScoredConfig> {
+    let mut prec = precisions.to_vec();
+    prec.sort_unstable();
+    let max_p = *prec.last().unwrap();
+    let lw = s.n_weight_blocks();
+    let la = s.n_act_blocks();
+    let mut cfg = BitConfig::uniform(lw, la, max_p);
+
+    let floor = {
+        let min_p = prec[0];
+        model_bits(block_sizes, n_unq, &BitConfig::uniform(lw, la, min_p))
+    };
+    if floor > budget_bits {
+        return None;
+    }
+
+    let step_down = |b: u32| -> Option<u32> {
+        prec.iter().rev().find(|&&p| p < b).copied()
+    };
+
+    while model_bits(block_sizes, n_unq, &cfg) > budget_bits {
+        let cur_fit = fit(s, &cfg);
+        let mut best: Option<(f64, bool, usize, u32)> = None; // (cost/bit, is_w, idx, new_bits)
+        for l in 0..lw {
+            if let Some(nb) = step_down(cfg.bits_w[l]) {
+                let mut c = cfg.clone();
+                c.bits_w[l] = nb;
+                let d_fit = fit(s, &c) - cur_fit;
+                let d_bits = (cfg.bits_w[l] - nb) as u64 * block_sizes[l] as u64;
+                let rate = d_fit / d_bits as f64;
+                if best.map_or(true, |(r, ..)| rate < r) {
+                    best = Some((rate, true, l, nb));
+                }
+            }
+        }
+        for l in 0..la {
+            if let Some(nb) = step_down(cfg.bits_a[l]) {
+                let mut c = cfg.clone();
+                c.bits_a[l] = nb;
+                let d_fit = fit(s, &c) - cur_fit;
+                // activations don't change stored model size; treat one
+                // block-step as one "bit" so they still get lowered last
+                // on pure-size budgets.
+                let rate = d_fit;
+                if best.map_or(true, |(r, ..)| rate < r) {
+                    best = Some((rate, false, l, nb));
+                }
+            }
+        }
+        match best {
+            Some((_, true, l, nb)) => cfg.bits_w[l] = nb,
+            Some((_, false, l, nb)) => cfg.bits_a[l] = nb,
+            None => break,
+        }
+    }
+    Some(score(s, block_sizes, n_unq, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::test_inputs;
+    use crate::quant::{BitConfigSampler, PRECISIONS};
+
+    fn sample_scored(n: usize) -> (SensitivityInputs, Vec<usize>, Vec<ScoredConfig>) {
+        let s = test_inputs();
+        let sizes = vec![100usize, 400, 50];
+        let mut sampler = BitConfigSampler::new(3, 2, &PRECISIONS, 1);
+        let pts: Vec<_> = sampler
+            .take(n)
+            .into_iter()
+            .map(|c| score(&s, &sizes, 10, c))
+            .collect();
+        (s, sizes, pts)
+    }
+
+    #[test]
+    fn pareto_points_are_mutually_nondominated() {
+        let (_, _, pts) = sample_scored(150);
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        for &i in &front {
+            for &j in &front {
+                if i != j {
+                    let dom = pts[j].size_bits <= pts[i].size_bits && pts[j].fit <= pts[i].fit;
+                    assert!(!dom, "{i} dominated by {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_front_dominates_all_points() {
+        let (_, _, pts) = sample_scored(150);
+        let front = pareto_front(&pts);
+        for (i, p) in pts.iter().enumerate() {
+            if front.contains(&i) {
+                continue;
+            }
+            // every non-front point is dominated or tied by some front point
+            let covered = front.iter().any(|&f| {
+                pts[f].size_bits <= p.size_bits && pts[f].fit <= p.fit
+            });
+            assert!(covered, "point {i} not covered");
+        }
+    }
+
+    #[test]
+    fn greedy_meets_budget_and_prefers_insensitive_blocks() {
+        let (s, sizes, _) = sample_scored(1);
+        let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
+        let budget = full * 6 / 10;
+        let out = greedy_allocate(&s, &sizes, 10, &PRECISIONS, budget).unwrap();
+        assert!(out.size_bits <= budget);
+        // block 0 has the highest trace (10.0) -> should keep more bits
+        // than block 1 (trace 2.0, bigger size)
+        assert!(out.cfg.bits_w[0] >= out.cfg.bits_w[1]);
+    }
+
+    #[test]
+    fn greedy_impossible_budget_is_none() {
+        let (s, sizes, _) = sample_scored(1);
+        assert!(greedy_allocate(&s, &sizes, 10, &PRECISIONS, 1).is_none());
+    }
+
+    #[test]
+    fn greedy_trivial_budget_keeps_max_precision() {
+        let (s, sizes, _) = sample_scored(1);
+        let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
+        let out = greedy_allocate(&s, &sizes, 10, &PRECISIONS, full).unwrap();
+        assert_eq!(out.cfg.bits_w, vec![8, 8, 8]);
+    }
+}

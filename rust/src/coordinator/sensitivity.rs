@@ -1,0 +1,46 @@
+//! Gathers `SensitivityInputs` for a trained model: converged EF traces
+//! (weights + activations), min-max weight ranges, calibrated activation
+//! ranges, and BN scales — everything each metric in the Table-2 zoo needs,
+//! collected once per trained model and reused across every configuration.
+
+use anyhow::Result;
+
+use super::state::ModelState;
+use super::traces::{Estimator, TraceEngine, TraceOptions, TraceResult};
+use super::trainer::{ActRanges, Trainer};
+use crate::data::{Dataset, EvalSet};
+use crate::metrics::SensitivityInputs;
+
+#[derive(Debug, Clone)]
+pub struct SensitivityReport {
+    pub inputs: SensitivityInputs,
+    pub act: ActRanges,
+    pub trace: TraceResult,
+}
+
+/// Collect metric inputs for a trained state. `opt` controls the EF trace
+/// run (tolerance / iteration cap).
+pub fn gather(
+    trainer: &Trainer,
+    ds: &dyn Dataset,
+    state: &ModelState,
+    ev: &EvalSet,
+    opt: TraceOptions,
+) -> Result<SensitivityReport> {
+    let rt = trainer.runtime();
+    let engine = TraceEngine::new(rt, ds);
+    let trace = engine.run(&state.model, &state.params, Estimator::EmpiricalFisher, opt)?;
+    let (w_lo, w_hi) = trainer.param_ranges(state)?;
+    let act = trainer.calibrate(state, ev)?;
+    let bn_gamma = trainer.bn_gammas(state)?;
+    let inputs = SensitivityInputs {
+        w_traces: trace.w_traces.clone(),
+        a_traces: trace.a_traces.clone(),
+        w_lo: w_lo.iter().map(|&x| x as f64).collect(),
+        w_hi: w_hi.iter().map(|&x| x as f64).collect(),
+        a_lo: act.lo.iter().map(|&x| x as f64).collect(),
+        a_hi: act.hi.iter().map(|&x| x as f64).collect(),
+        bn_gamma,
+    };
+    Ok(SensitivityReport { inputs, act, trace })
+}

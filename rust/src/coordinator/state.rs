@@ -1,0 +1,135 @@
+//! Owned model state: the flat (params, m, v, step) Adam carry.
+//!
+//! The Rust side is the single owner of all model state between PJRT
+//! dispatches (Python never runs at this point); checkpointing is a plain
+//! binary dump of the four buffers.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Arg, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub model: String,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl ModelState {
+    /// Fresh state from the model's `init` executable.
+    pub fn init(rt: &Runtime, model: &str, seed: u32) -> Result<ModelState> {
+        let n = rt.model(model)?.n_params;
+        let exe = rt.load(model, "init")?;
+        let params = exe.run(&[Arg::U32Scalar(seed)])?.f32("params")?.to_vec();
+        assert_eq!(params.len(), n);
+        Ok(ModelState {
+            model: model.to_string(),
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0.0,
+        })
+    }
+
+    /// Reset the optimizer (paper Appendix D: QAT fine-tuning restarts the
+    /// optimizer from the FP checkpoint).
+    pub fn reset_optimizer(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.step = 0.0;
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Binary checkpoint: [n: u64][step: f32][params][m][v], little endian.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut out = Vec::with_capacity(16 + 12 * self.params.len());
+        out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        for buf in [&self.params, &self.m, &self.v] {
+            for x in buf.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing checkpoint {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>, model: &str) -> Result<ModelState> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading checkpoint {}", path.as_ref().display()))?;
+        if bytes.len() < 12 {
+            bail!("checkpoint too short");
+        }
+        let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        if bytes.len() != 12 + 12 * n {
+            bail!("checkpoint size mismatch: {} bytes for n={n}", bytes.len());
+        }
+        let step = f32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let read_vec = |off: usize| -> Vec<f32> {
+            bytes[off..off + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        Ok(ModelState {
+            model: model.to_string(),
+            params: read_vec(12),
+            m: read_vec(12 + 4 * n),
+            v: read_vec(12 + 8 * n),
+            step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let st = ModelState {
+            model: "t".into(),
+            params: vec![1.0, -2.5, 3.0],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.0, 0.5, 1.0],
+            step: 42.0,
+        };
+        let path = std::env::temp_dir().join("fitq_ckpt_test.bin");
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path, "t").unwrap();
+        assert_eq!(back.params, st.params);
+        assert_eq!(back.m, st.m);
+        assert_eq!(back.v, st.v);
+        assert_eq!(back.step, 42.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_checkpoint_rejected() {
+        let path = std::env::temp_dir().join("fitq_ckpt_bad.bin");
+        std::fs::write(&path, [1, 2, 3]).unwrap();
+        assert!(ModelState::load(&path, "t").is_err());
+        std::fs::write(&path, 100u64.to_le_bytes()).unwrap();
+        assert!(ModelState::load(&path, "t").is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn reset_optimizer_clears_moments() {
+        let mut st = ModelState {
+            model: "t".into(),
+            params: vec![1.0],
+            m: vec![9.0],
+            v: vec![9.0],
+            step: 7.0,
+        };
+        st.reset_optimizer();
+        assert_eq!((st.m[0], st.v[0], st.step), (0.0, 0.0, 0.0));
+        assert_eq!(st.params[0], 1.0, "params untouched");
+    }
+}

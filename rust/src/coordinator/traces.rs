@@ -1,0 +1,236 @@
+//! The trace-estimation engine (paper §3.3, §4.1).
+//!
+//! Streams estimator iterations through the EF / Hutchinson executables
+//! and Welford-accumulates per-block values until the convergence monitor
+//! (fixed relative tolerance on the moving standard error — paper §4.3)
+//! fires or the iteration cap is reached. Each iteration draws a fresh
+//! batch from the dataset's test stream (and a fresh Rademacher probe for
+//! Hutchinson). Wall-clock per iteration is recorded so the Table-1/4
+//! speedup s = (sigma_H^2 * t_H) / (sigma_EF^2 * t_EF) can be reported
+//! from the same machinery.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Split};
+use crate::runtime::{Arg, Runtime};
+use crate::stats::ConvergenceMonitor;
+use crate::tensor::Pcg32;
+
+/// Which estimator to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Estimator {
+    /// Empirical Fisher: B * ||batch gradient||^2 per block, one backward.
+    EmpiricalFisher,
+    /// Hutchinson: r^T H r per block, double backward per iteration.
+    Hutchinson,
+}
+
+impl Estimator {
+    pub fn entry(&self, batch: usize) -> String {
+        match self {
+            Estimator::EmpiricalFisher => format!("ef_trace_bs{batch}"),
+            Estimator::Hutchinson => format!("hutch_bs{batch}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Estimator::EmpiricalFisher => "EF",
+            Estimator::Hutchinson => "Hessian",
+        }
+    }
+}
+
+/// Stopping rule for a trace run.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceOptions {
+    pub batch: usize,
+    /// Relative tolerance on each block mean's standard error (0 disables
+    /// early stopping; the run uses exactly `max_iters` iterations).
+    pub tol: f64,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    pub seed: u64,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        // tol = 0.01 is the paper's §4.3 setting.
+        TraceOptions { batch: 32, tol: 0.01, min_iters: 8, max_iters: 1000, seed: 0 }
+    }
+}
+
+impl TraceOptions {
+    pub fn fixed_iters(batch: usize, iters: u64, seed: u64) -> Self {
+        TraceOptions { batch, tol: 0.0, min_iters: iters, max_iters: iters, seed }
+    }
+}
+
+/// Result of one trace estimation run.
+#[derive(Debug, Clone)]
+pub struct TraceResult {
+    pub estimator: Estimator,
+    /// Converged per-weight-block trace means.
+    pub w_traces: Vec<f64>,
+    /// Per-activation-block trace means (EF only; empty for Hutchinson).
+    pub a_traces: Vec<f64>,
+    /// Standard errors of the weight-block means.
+    pub w_std_errors: Vec<f64>,
+    pub iterations: u64,
+    /// Mean wall-clock per estimator iteration (seconds).
+    pub iter_time_s: f64,
+    /// Normalized estimator variance: mean over blocks of
+    /// sample_variance / mean^2 (this is the Table-1/3 "estimator
+    /// variance" statistic, deviation normalized w.r.t. trace magnitude).
+    pub norm_variance: f64,
+    /// Per-iteration running means of the *total* weight trace (Fig. 2).
+    pub history_total: Vec<f64>,
+}
+
+pub struct TraceEngine<'a> {
+    rt: &'a Runtime,
+    ds: &'a dyn Dataset,
+}
+
+impl<'a> TraceEngine<'a> {
+    pub fn new(rt: &'a Runtime, ds: &'a dyn Dataset) -> Self {
+        TraceEngine { rt, ds }
+    }
+
+    /// Run one estimator to convergence on a trained parameter vector.
+    pub fn run(
+        &self,
+        model: &str,
+        params: &[f32],
+        estimator: Estimator,
+        opt: TraceOptions,
+    ) -> Result<TraceResult> {
+        let m = self.rt.model(model)?.clone();
+        let exe = self
+            .rt
+            .load(model, &estimator.entry(opt.batch))
+            .with_context(|| format!("{model}: estimator artifact for bs={}", opt.batch))?;
+
+        let lw = m.n_weight_blocks();
+        let la = m.n_act_blocks();
+        let sl: usize = m.input_shape.iter().product();
+        let ll = match m.task {
+            crate::runtime::Task::Classify => 1,
+            crate::runtime::Task::Segment => m.input_shape[0] * m.input_shape[1],
+        };
+
+        let mut rng = Pcg32::new(opt.seed ^ 0x7ace_5eed, 1);
+        let mut x = vec![0.0f32; opt.batch * sl];
+        let mut y = vec![0i32; opt.batch * ll];
+        let mut monitor = if opt.tol > 0.0 {
+            ConvergenceMonitor::new(lw, opt.tol, opt.min_iters, opt.max_iters)
+        } else {
+            ConvergenceMonitor::new(lw, 1e-30, opt.max_iters, opt.max_iters)
+        };
+        let mut a_stats = crate::stats::VecStats::new(la);
+        let mut history_total = Vec::new();
+        let mut data_cursor: u64 = rng.next_u32() as u64;
+
+        let t0 = Instant::now();
+        loop {
+            // fresh batch from the test stream
+            for i in 0..opt.batch {
+                self.ds.sample(
+                    Split::Test,
+                    data_cursor,
+                    &mut x[i * sl..(i + 1) * sl],
+                    &mut y[i * ll..(i + 1) * ll],
+                );
+                data_cursor += 1;
+            }
+            let (w_vals, a_vals): (Vec<f32>, Vec<f32>) = match estimator {
+                Estimator::EmpiricalFisher => {
+                    let out = exe.run(&[Arg::F32(params), Arg::F32(&x), Arg::I32(&y)])?;
+                    (out.f32("w_tr")?.to_vec(), out.f32("a_tr")?.to_vec())
+                }
+                Estimator::Hutchinson => {
+                    let r = rng.rademacher_vec(params.len());
+                    let out =
+                        exe.run(&[Arg::F32(params), Arg::F32(&x), Arg::I32(&y), Arg::F32(&r)])?;
+                    (out.f32("quad")?.to_vec(), vec![])
+                }
+            };
+            if !a_vals.is_empty() {
+                a_stats.push(&a_vals);
+            }
+            let done = monitor.push(&w_vals);
+            history_total.push(monitor.means().iter().sum());
+            if done {
+                break;
+            }
+        }
+        let iters = monitor.iterations();
+        let iter_time_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+        let stats = monitor.stats();
+        let norm_variance = (0..lw)
+            .map(|i| {
+                let c = stats.component(i);
+                let mu = c.mean().abs().max(1e-12);
+                c.sample_variance() / (mu * mu)
+            })
+            .sum::<f64>()
+            / lw as f64;
+
+        Ok(TraceResult {
+            estimator,
+            w_traces: monitor.means(),
+            a_traces: a_stats.means(),
+            w_std_errors: monitor.std_errors(),
+            iterations: iters,
+            iter_time_s,
+            norm_variance,
+            history_total,
+        })
+    }
+}
+
+/// Paper Appendix C speedup for a fixed tolerance:
+/// s = (sigma_H^2 * t_H) / (sigma_EF^2 * t_EF).
+pub fn relative_speedup(ef: &TraceResult, hess: &TraceResult) -> f64 {
+    (hess.norm_variance * hess.iter_time_s) / (ef.norm_variance * ef.iter_time_s).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_entry_names() {
+        assert_eq!(Estimator::EmpiricalFisher.entry(32), "ef_trace_bs32");
+        assert_eq!(Estimator::Hutchinson.entry(4), "hutch_bs4");
+    }
+
+    #[test]
+    fn fixed_iter_options() {
+        let o = TraceOptions::fixed_iters(8, 100, 3);
+        assert_eq!(o.batch, 8);
+        assert_eq!((o.min_iters, o.max_iters), (100, 100));
+        assert_eq!(o.tol, 0.0);
+    }
+
+    #[test]
+    fn relative_speedup_formula() {
+        let mk = |var: f64, t: f64| TraceResult {
+            estimator: Estimator::EmpiricalFisher,
+            w_traces: vec![],
+            a_traces: vec![],
+            w_std_errors: vec![],
+            iterations: 1,
+            iter_time_s: t,
+            norm_variance: var,
+            history_total: vec![],
+        };
+        let ef = mk(0.15, 0.05);
+        let h = mk(1.05, 0.19);
+        let s = relative_speedup(&ef, &h);
+        assert!((s - (1.05 * 0.19) / (0.15 * 0.05)).abs() < 1e-12);
+    }
+}

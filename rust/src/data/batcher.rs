@@ -1,0 +1,159 @@
+//! Batch assembly for the PJRT entry points.
+//!
+//! `EpochBatch` packs K microbatches of B samples into the contiguous
+//! (K, B, H, W, C) / (K, B, ...) buffers the scanned train/qat executables
+//! take per dispatch. `EvalSet` materializes a fixed test split once and
+//! serves padded batches with 0/1 masks so partial tails evaluate exactly.
+
+use super::{Dataset, Split};
+
+/// One scanned-epoch input: xs (K*B*sample), ys (K*B*label).
+#[derive(Debug, Clone)]
+pub struct EpochBatch {
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    pub k: usize,
+    pub b: usize,
+}
+
+impl EpochBatch {
+    /// Fill from consecutive train-split indices starting at `cursor`;
+    /// returns the advanced cursor.
+    pub fn generate(ds: &dyn Dataset, k: usize, b: usize, cursor: u64) -> (EpochBatch, u64) {
+        let sl = ds.sample_len();
+        let ll = ds.label_len();
+        let mut xs = vec![0.0f32; k * b * sl];
+        let mut ys = vec![0i32; k * b * ll];
+        let mut idx = cursor;
+        for s in 0..k * b {
+            ds.sample(
+                Split::Train,
+                idx,
+                &mut xs[s * sl..(s + 1) * sl],
+                &mut ys[s * ll..(s + 1) * ll],
+            );
+            idx += 1;
+        }
+        (EpochBatch { xs, ys, k, b }, idx)
+    }
+}
+
+/// One padded eval batch with sample mask.
+#[derive(Debug, Clone)]
+pub struct EvalBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub n_real: usize,
+}
+
+/// A fixed, materialized test set served in fixed-size padded batches.
+#[derive(Debug)]
+pub struct EvalSet {
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+    n: usize,
+    sample_len: usize,
+    label_len: usize,
+}
+
+impl EvalSet {
+    pub fn materialize(ds: &dyn Dataset, n: usize) -> EvalSet {
+        let sl = ds.sample_len();
+        let ll = ds.label_len();
+        let mut xs = vec![0.0f32; n * sl];
+        let mut ys = vec![0i32; n * ll];
+        for i in 0..n {
+            ds.sample(
+                Split::Test,
+                i as u64,
+                &mut xs[i * sl..(i + 1) * sl],
+                &mut ys[i * ll..(i + 1) * ll],
+            );
+        }
+        EvalSet { xs, ys, n, sample_len: sl, label_len: ll }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Iterate fixed-size batches; the last is zero-padded with mask 0.
+    pub fn batches(&self, batch: usize) -> impl Iterator<Item = EvalBatch> + '_ {
+        let n_batches = self.n.div_ceil(batch);
+        (0..n_batches).map(move |bi| {
+            let start = bi * batch;
+            let n_real = batch.min(self.n - start);
+            let mut x = vec![0.0f32; batch * self.sample_len];
+            let mut y = vec![0i32; batch * self.label_len];
+            let mut mask = vec![0.0f32; batch];
+            x[..n_real * self.sample_len].copy_from_slice(
+                &self.xs[start * self.sample_len..(start + n_real) * self.sample_len],
+            );
+            y[..n_real * self.label_len].copy_from_slice(
+                &self.ys[start * self.label_len..(start + n_real) * self.label_len],
+            );
+            mask[..n_real].fill(1.0);
+            EvalBatch { x, y, mask, n_real }
+        })
+    }
+
+    /// First `n` raw images, e.g. as a calibration batch (x only).
+    pub fn calibration(&self, n: usize) -> Vec<f32> {
+        assert!(n <= self.n);
+        self.xs[..n * self.sample_len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthClass;
+
+    #[test]
+    fn epoch_batch_shapes_and_cursor() {
+        let ds = SynthClass::synmnist(1);
+        let (e, cur) = EpochBatch::generate(&ds, 3, 4, 100);
+        assert_eq!(e.xs.len(), 3 * 4 * 256);
+        assert_eq!(e.ys.len(), 12);
+        assert_eq!(cur, 112);
+        // consecutive call continues the stream without overlap
+        let (e2, _) = EpochBatch::generate(&ds, 3, 4, cur);
+        assert_ne!(e.xs, e2.xs);
+    }
+
+    #[test]
+    fn eval_set_batches_cover_all_with_padding() {
+        let ds = SynthClass::synmnist(2);
+        let ev = EvalSet::materialize(&ds, 10);
+        let batches: Vec<_> = ev.batches(4).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].n_real, 4);
+        assert_eq!(batches[2].n_real, 2);
+        assert_eq!(batches[2].mask, vec![1.0, 1.0, 0.0, 0.0]);
+        let total: usize = batches.iter().map(|b| b.n_real).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn eval_set_is_deterministic() {
+        let ds = SynthClass::synmnist(3);
+        let a = EvalSet::materialize(&ds, 8);
+        let b = EvalSet::materialize(&ds, 8);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+    }
+
+    #[test]
+    fn calibration_prefix() {
+        let ds = SynthClass::synmnist(4);
+        let ev = EvalSet::materialize(&ds, 8);
+        let c = ev.calibration(3);
+        assert_eq!(c.len(), 3 * 256);
+        assert_eq!(c[..256], ev.xs[..256]);
+    }
+}

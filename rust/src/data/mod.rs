@@ -1,0 +1,50 @@
+//! Synthetic dataset substrate.
+//!
+//! The paper trains on MNIST / CIFAR-10 / Cityscapes; this framework ships
+//! deterministic synthetic equivalents (DESIGN.md substitutions) with the
+//! statistical properties the experiments need: class-structured signal
+//! that a small CNN can learn, plus pixel noise so quantization degrades
+//! accuracy heterogeneously across layers and bit widths.
+//!
+//! Everything is seeded through `tensor::Pcg32` — a dataset is a pure
+//! function of (seed, split, index), so every experiment replays exactly.
+
+mod batcher;
+mod synth_class;
+mod synth_seg;
+
+pub use batcher::{EpochBatch, EvalBatch, EvalSet};
+pub use synth_class::SynthClass;
+pub use synth_seg::SynthSeg;
+
+/// A supervised example stream: fills caller-provided image/label buffers.
+pub trait Dataset {
+    /// (H, W, C) per-sample image shape.
+    fn input_shape(&self) -> (usize, usize, usize);
+    /// Number of classes.
+    fn n_classes(&self) -> usize;
+    /// Label elements per sample: 1 for classification, H*W for segmentation.
+    fn label_len(&self) -> usize;
+    /// Generate sample `index` of `split` into the buffers.
+    fn sample(&self, split: Split, index: u64, x: &mut [f32], y: &mut [i32]);
+
+    fn sample_len(&self) -> usize {
+        let (h, w, c) = self.input_shape();
+        h * w * c
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    pub fn stream_id(&self) -> u64 {
+        match self {
+            Split::Train => 0x7261_494e,
+            Split::Test => 0x7e57_0000,
+        }
+    }
+}

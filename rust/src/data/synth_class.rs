@@ -1,0 +1,175 @@
+//! Class-conditional frequency-pattern classification dataset.
+//!
+//! Each class owns a deterministic 2-D interference pattern (two sinusoid
+//! products with class-specific frequencies and phases); a sample is its
+//! class pattern plus i.i.d. Gaussian pixel noise. The same construction
+//! backs `synmnist` (16x16x1) and `syncifar` (32x32x3); python/tests uses
+//! an equivalent generator for its tiny-model fixtures.
+
+use super::{Dataset, Split};
+use crate::tensor::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct SynthClass {
+    h: usize,
+    w: usize,
+    c: usize,
+    n_classes: usize,
+    noise: f32,
+    seed: u64,
+    /// per class: (fx, fy, px, py, fx2, fy2, px2, py2)
+    class_params: Vec<[f32; 8]>,
+}
+
+impl SynthClass {
+    pub fn new(shape: (usize, usize, usize), n_classes: usize, noise: f32, seed: u64) -> Self {
+        let class_params = (0..n_classes)
+            .map(|cl| {
+                let mut r = Pcg32::new(seed ^ 0xc1a5_5e5e, cl as u64 + 1);
+                let tau = std::f32::consts::TAU;
+                [
+                    r.uniform_in(0.5, 3.0),
+                    r.uniform_in(0.5, 3.0),
+                    r.uniform_in(0.0, tau),
+                    r.uniform_in(0.0, tau),
+                    r.uniform_in(1.0, 4.0),
+                    r.uniform_in(1.0, 4.0),
+                    r.uniform_in(0.0, tau),
+                    r.uniform_in(0.0, tau),
+                ]
+            })
+            .collect();
+        SynthClass { h: shape.0, w: shape.1, c: shape.2, n_classes, noise, seed, class_params }
+    }
+
+    /// The paper-study datasets.
+    pub fn synmnist(seed: u64) -> Self {
+        SynthClass::new((16, 16, 1), 10, 0.3, seed)
+    }
+
+    pub fn syncifar(seed: u64) -> Self {
+        SynthClass::new((32, 32, 3), 10, 0.3, seed)
+    }
+
+    /// Noise-free class template value at (i, j, ch).
+    pub fn pattern(&self, class: usize, i: usize, j: usize, ch: usize) -> f32 {
+        let p = &self.class_params[class];
+        let tau = std::f32::consts::TAU;
+        let u = i as f32 / self.h as f32;
+        let v = j as f32 / self.w as f32;
+        let a = (tau * p[0] * u + p[2] + 0.7 * ch as f32).sin() * (tau * p[1] * v + p[3]).cos();
+        let b = (tau * p[4] * v + p[6]).sin() * (tau * p[5] * u + p[7] + 0.4 * ch as f32).sin();
+        0.6 * a + 0.4 * b
+    }
+}
+
+impl Dataset for SynthClass {
+    fn input_shape(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn label_len(&self) -> usize {
+        1
+    }
+
+    fn sample(&self, split: Split, index: u64, x: &mut [f32], y: &mut [i32]) {
+        assert_eq!(x.len(), self.sample_len());
+        assert_eq!(y.len(), 1);
+        let mut r = Pcg32::new(self.seed ^ index.wrapping_mul(0x9e37_79b9_7f4a_7c15), split.stream_id());
+        let class = r.below(self.n_classes as u32) as usize;
+        y[0] = class as i32;
+        let mut k = 0;
+        for i in 0..self.h {
+            for j in 0..self.w {
+                for ch in 0..self.c {
+                    x[k] = self.pattern(class, i, j, ch) + self.noise * r.normal();
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let d = SynthClass::synmnist(42);
+        let mut x1 = vec![0.0; d.sample_len()];
+        let mut x2 = vec![0.0; d.sample_len()];
+        let (mut y1, mut y2) = ([0i32], [0i32]);
+        d.sample(Split::Train, 5, &mut x1, &mut y1);
+        d.sample(Split::Train, 5, &mut x2, &mut y2);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn train_and_test_streams_differ() {
+        let d = SynthClass::synmnist(42);
+        let mut xa = vec![0.0; d.sample_len()];
+        let mut xb = vec![0.0; d.sample_len()];
+        let (mut ya, mut yb) = ([0i32], [0i32]);
+        d.sample(Split::Train, 5, &mut xa, &mut ya);
+        d.sample(Split::Test, 5, &mut xb, &mut yb);
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let d = SynthClass::synmnist(1);
+        let mut seen = vec![false; 10];
+        let mut x = vec![0.0; d.sample_len()];
+        let mut y = [0i32];
+        for i in 0..500 {
+            d.sample(Split::Train, i, &mut x, &mut y);
+            seen[y[0] as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn images_are_bounded_and_nontrivial() {
+        let d = SynthClass::syncifar(3);
+        let mut x = vec![0.0; d.sample_len()];
+        let mut y = [0i32];
+        d.sample(Split::Train, 0, &mut x, &mut y);
+        let (lo, hi) = crate::tensor::min_max(&x).unwrap();
+        assert!(lo > -5.0 && hi < 5.0);
+        assert!(hi - lo > 0.5, "image should have contrast");
+    }
+
+    #[test]
+    fn class_patterns_are_separated() {
+        // mean intra-class distance << inter-class distance on clean patterns
+        let d = SynthClass::synmnist(7);
+        let tpl = |cl: usize| -> Vec<f32> {
+            let mut v = Vec::with_capacity(256);
+            for i in 0..16 {
+                for j in 0..16 {
+                    v.push(d.pattern(cl, i, j, 0));
+                }
+            }
+            v
+        };
+        let t0 = tpl(0);
+        let t1 = tpl(1);
+        let dist: f32 = t0.iter().zip(&t1).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(dist > 1.0, "templates of different classes must differ, d={dist}");
+    }
+
+    #[test]
+    fn different_seeds_give_different_tasks() {
+        let d1 = SynthClass::synmnist(1);
+        let d2 = SynthClass::synmnist(2);
+        let p1 = d1.pattern(0, 3, 3, 0);
+        let p2 = d2.pattern(0, 3, 3, 0);
+        assert_ne!(p1, p2);
+    }
+}

@@ -1,0 +1,18 @@
+//! fitq — a three-layer Rust + JAX + Pallas reproduction of
+//! "FIT: A Metric for Model Sensitivity" (ICLR 2023).
+//!
+//! Layer map (see DESIGN.md):
+//! - L1/L2 live in python/compile (build-time only) and arrive here as AOT
+//!   HLO artifacts + manifest.
+//! - L3 is this crate: `runtime` talks PJRT, `coordinator` orchestrates the
+//!   paper's methodology, and `data`/`quant`/`stats`/`metrics`/`tensor` are
+//!   the from-scratch substrates it stands on.
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;

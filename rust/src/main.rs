@@ -1,0 +1,324 @@
+//! fitq — FIT (Fisher Information Trace) model-sensitivity framework CLI.
+//!
+//! Subcommands map 1:1 to the paper's tables and figures plus a few
+//! utilities; see DESIGN.md for the per-experiment index.
+//!
+//!   fitq info
+//!   fitq train --model cnn_mnist --epochs 30
+//!   fitq traces --model cnn_m [--estimator ef|hessian] [--tol 0.01]
+//!   fitq search --model cnn_cifar --budget-ratio 0.15
+//!   fitq experiment table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all
+//!                   [--configs N] [--iters N] [--runs N] [--only A,B]
+//!
+//! (clap is not in the vendored dependency set; the small parser below is
+//! part of the from-scratch substrate.)
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use fitq::coordinator::experiments::{fig1, fig2, fig4, fig5, fig9, table1, table2, table3};
+use fitq::coordinator::{
+    dataset_for, exact_allocate, gather, greedy_allocate, pareto_front, score, Estimator,
+    ModelState, StudyOptions, TraceEngine, TraceOptions, Trainer,
+};
+use fitq::data::EvalSet;
+use fitq::quant::{model_bits, BitConfig, BitConfigSampler, PRECISIONS};
+use fitq::runtime::Runtime;
+
+/// Tiny positional+flag argument parser: `cmd [positionals] --key value`.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "fitq <command>\n\
+  info                                   list models and artifacts\n\
+  train      --model M [--epochs N]      train FP model, report accuracy\n\
+  traces     --model M [--estimator ef|hessian] [--tol T] [--batch B]\n\
+  search     --model M [--budget-ratio R] [--samples N]\n\
+  experiment <table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all> [opts]\n\
+     table2/fig4: [--configs N] [--fp-epochs N] [--qat-epochs N] [--only A,B]\n\
+     table1/3:    [--iters N] [--runs N]\n";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "traces" => cmd_traces(&args),
+        "search" => cmd_search(&args),
+        "experiment" => cmd_experiment(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::from_env()?;
+    println!("artifact root: {}", rt.manifest.root.display());
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name}: {} params, {} weight blocks, {} act blocks, task {:?}, entries: {}",
+            m.n_params,
+            m.n_weight_blocks(),
+            m.n_act_blocks(),
+            m.task,
+            m.entries.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "cnn_mnist");
+    let epochs = args.usize_or("epochs", 30)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let rt = Runtime::from_env()?;
+    let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, seed as u32)?;
+    let losses = trainer.train(&mut st, epochs)?;
+    let ev = EvalSet::materialize(ds.as_ref(), 512);
+    let res = trainer.evaluate(&st, &ev)?;
+    println!(
+        "{model}: {} epochs, loss {:.4} -> {:.4}, eval score {:.3} over {} samples",
+        epochs,
+        losses.first().unwrap_or(&f64::NAN),
+        losses.last().unwrap_or(&f64::NAN),
+        res.score,
+        res.n
+    );
+    Ok(())
+}
+
+fn cmd_traces(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "cnn_m");
+    let seed = args.usize_or("seed", 0)? as u64;
+    let epochs = args.usize_or("epochs", 15)?;
+    let est = match args.str_or("estimator", "ef") {
+        "ef" => Estimator::EmpiricalFisher,
+        "hessian" => Estimator::Hutchinson,
+        other => bail!("unknown estimator {other:?}"),
+    };
+    let rt = Runtime::from_env()?;
+    let st = fitq::coordinator::experiments::get_trained(&rt, model, epochs, seed)?;
+    let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
+    let engine = TraceEngine::new(&rt, ds.as_ref());
+    let opt = TraceOptions {
+        batch: args.usize_or("batch", 32)?,
+        tol: args.f64_or("tol", 0.01)?,
+        min_iters: 8,
+        max_iters: args.usize_or("max-iters", 500)? as u64,
+        seed,
+    };
+    let r = engine.run(model, &st.params, est, opt)?;
+    println!(
+        "{model} {} trace: {} iterations ({:.1} ms/iter), norm variance {:.3}",
+        r.estimator.name(),
+        r.iterations,
+        r.iter_time_s * 1e3,
+        r.norm_variance
+    );
+    for (i, (t, se)) in r.w_traces.iter().zip(&r.w_std_errors).enumerate() {
+        println!("  block {i}: {t:.4} ± {se:.4}");
+    }
+    if !r.a_traces.is_empty() {
+        let fmt: Vec<String> = r.a_traces.iter().map(|t| format!("{t:.3}")).collect();
+        println!("  activation traces: [{}]", fmt.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "cnn_cifar");
+    let seed = args.usize_or("seed", 0)? as u64;
+    let ratio = args.f64_or("budget-ratio", 0.15)?;
+    let samples = args.usize_or("samples", 2000)?;
+    let rt = Runtime::from_env()?;
+    let mm = rt.model(model)?.clone();
+    let st = fitq::coordinator::experiments::get_trained(&rt, model, 30, seed)?;
+    let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
+    let trainer = Trainer::new(&rt, ds.as_ref());
+    let ev = EvalSet::materialize(ds.as_ref(), 256);
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default())?;
+
+    let sizes = mm.block_sizes();
+    let n_unq = mm.n_unquantized();
+    let fp32_bits = (mm.n_params as u64) * 32;
+    let budget = (fp32_bits as f64 * ratio) as u64;
+
+    // random sample -> Pareto front
+    let mut sampler =
+        BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, seed);
+    let pts: Vec<_> = sampler
+        .take(samples)
+        .into_iter()
+        .map(|c| score(&sens.inputs, &sizes, n_unq, c))
+        .collect();
+    let front = pareto_front(&pts);
+    println!("sampled {} configs; Pareto front has {} points:", pts.len(), front.len());
+    for &i in front.iter().take(10) {
+        println!(
+            "  size {:>8} bits ({:.2}x comp)  FIT {:.5}  {}",
+            pts[i].size_bits,
+            fp32_bits as f64 / pts[i].size_bits as f64,
+            pts[i].fit,
+            pts[i].cfg.label()
+        );
+    }
+
+    // greedy allocation under the budget
+    match greedy_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget) {
+        Some(g) => println!(
+            "greedy @ {:.0}% of fp32 ({budget} bits): size {} FIT {:.5} {}",
+            100.0 * ratio,
+            g.size_bits,
+            g.fit,
+            g.cfg.label()
+        ),
+        None => println!("budget {budget} bits is below the all-minimum-precision floor"),
+    }
+    match exact_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget) {
+        Some(e) => println!(
+            "exact  @ {:.0}% of fp32: size {} FIT {:.5} {}",
+            100.0 * ratio,
+            e.size_bits,
+            e.fit,
+            e.cfg.label()
+        ),
+        None => println!("exact: budget infeasible"),
+    }
+    let uniform = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
+    println!(
+        "reference uniform-4bit: size {} bits FIT {:.5}",
+        model_bits(&sizes, n_unq, &uniform),
+        fitq::metrics::fit(&sens.inputs, &uniform)
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let Some(which) = args.positional.first() else {
+        bail!("experiment needs a name\n{USAGE}");
+    };
+    let rt = Runtime::from_env()?;
+    let run_one = |which: &str| -> Result<()> {
+        match which {
+            "table1" => {
+                let mut o = table1::Table1Options::default();
+                o.iters = args.usize_or("iters", o.iters as usize)? as u64;
+                o.runs = args.usize_or("runs", o.runs)?;
+                table1::run(&rt, &o)?;
+            }
+            "table2" => {
+                let mut o = table2::Table2Options::default();
+                o.study = study_opts(args, o.study)?;
+                if let Some(only) = args.get("only") {
+                    o.only = only.split(',').map(|s| s.trim().to_uppercase()).collect();
+                }
+                table2::run(&rt, &o)?;
+            }
+            "table3" => {
+                let mut o = table3::Table3Options::default();
+                o.iters = args.usize_or("iters", o.iters as usize)? as u64;
+                o.runs = args.usize_or("runs", o.runs)?;
+                if let Some(models) = args.get("models") {
+                    o.models = models.split(',').map(|s| s.trim().to_string()).collect();
+                }
+                table3::run(&rt, &o)?;
+            }
+            "fig1" | "fig7" => fig1::run(&rt, &fig1::Fig1Options::default())?,
+            "fig2" => {
+                let mut o = fig2::Fig2Options::default();
+                o.iters = args.usize_or("iters", o.iters as usize)? as u64;
+                fig2::run(&rt, &o)?;
+            }
+            "fig4" => {
+                let mut o = fig4::Fig4Options::default();
+                o.study = study_opts(args, o.study)?;
+                fig4::run(&rt, &o)?;
+            }
+            "fig5" => fig5::run(&rt, &fig5::Fig5Options::default())?,
+            "fig9" => fig9::run(&rt, &fig9::Fig9Options::default())?,
+            other => bail!("unknown experiment {other:?}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for w in ["fig9", "fig5", "table1", "fig1", "fig2", "table3", "table2", "fig4"] {
+            run_one(w)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn study_opts(args: &Args, mut s: StudyOptions) -> Result<StudyOptions> {
+    s.n_configs = args.usize_or("configs", s.n_configs)?;
+    s.fp_epochs = args.usize_or("fp-epochs", s.fp_epochs)?;
+    s.qat_epochs = args.usize_or("qat-epochs", s.qat_epochs)?;
+    s.eval_n = args.usize_or("eval-n", s.eval_n)?;
+    s.seed = args.usize_or("seed", s.seed as usize)? as u64;
+    Ok(s)
+}

@@ -1,0 +1,141 @@
+//! Comparison heuristics (paper Appendix D.1).
+//!
+//! Each replaces the EF trace in the FIT sum with a cheaper sensitivity
+//! proxy while keeping the same quantization noise model:
+//!
+//!   QR:    sens_l = 1 / |theta_max - theta_min|
+//!   BN:    sens_l = 1 / gamma_l          (batch-norm scale, where present)
+//!   Noise: sens_l = 1                    (isolated noise model, ablation)
+
+use super::SensitivityInputs;
+use crate::quant::{noise_power, BitConfig};
+
+fn qr_sens(lo: f64, hi: f64) -> f64 {
+    let r = (hi - lo).abs();
+    if r > 0.0 {
+        1.0 / r
+    } else {
+        0.0
+    }
+}
+
+/// QR weight term.
+pub fn qr_w(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    s.w_lo
+        .iter()
+        .zip(&s.w_hi)
+        .zip(&cfg.bits_w)
+        .map(|((&lo, &hi), &b)| qr_sens(lo, hi) * noise_power(lo, hi, b as f64))
+        .sum()
+}
+
+/// QR activation term.
+pub fn qr_a(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    s.a_lo
+        .iter()
+        .zip(&s.a_hi)
+        .zip(&cfg.bits_a)
+        .map(|((&lo, &hi), &b)| qr_sens(lo, hi) * noise_power(lo, hi, b as f64))
+        .sum()
+}
+
+/// QR combined (the paper shows this combination is *not* well-scaled,
+/// unlike FIT's — reproduced by the Table-2 experiment).
+pub fn qr(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    qr_w(s, cfg) + qr_a(s, cfg)
+}
+
+/// Isolated quantization-noise model: sum of all block noise powers.
+pub fn noise_metric(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    let w: f64 = s
+        .w_lo
+        .iter()
+        .zip(&s.w_hi)
+        .zip(&cfg.bits_w)
+        .map(|((&lo, &hi), &b)| noise_power(lo, hi, b as f64))
+        .sum();
+    let a: f64 = s
+        .a_lo
+        .iter()
+        .zip(&s.a_hi)
+        .zip(&cfg.bits_a)
+        .map(|((&lo, &hi), &b)| noise_power(lo, hi, b as f64))
+        .sum();
+    w + a
+}
+
+/// BN-gamma heuristic (weight blocks that carry a BN layer only); None for
+/// BN-free architectures, matching the dashes in the paper's Table 2.
+pub fn bn_metric(s: &SensitivityInputs, cfg: &BitConfig) -> Option<f64> {
+    if !s.has_bn() {
+        return None;
+    }
+    Some(
+        s.bn_gamma
+            .iter()
+            .enumerate()
+            .filter_map(|(l, g)| {
+                g.map(|gamma| {
+                    let sens = if gamma.abs() > 1e-12 { 1.0 / gamma.abs() } else { 0.0 };
+                    sens * noise_power(s.w_lo[l], s.w_hi[l], cfg.bits_w[l] as f64)
+                })
+            })
+            .sum(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::test_inputs;
+
+    #[test]
+    fn qr_is_sum_of_components() {
+        let s = test_inputs();
+        let cfg = BitConfig { bits_w: vec![8, 4, 3], bits_a: vec![6, 3] };
+        assert!((qr(&s, &cfg) - (qr_w(&s, &cfg) + qr_a(&s, &cfg))).abs() < 1e-15);
+    }
+
+    #[test]
+    fn qr_hand_computed() {
+        let s = SensitivityInputs {
+            w_traces: vec![1.0],
+            a_traces: vec![],
+            w_lo: vec![0.0],
+            w_hi: vec![2.0],
+            a_lo: vec![],
+            a_hi: vec![],
+            bn_gamma: vec![None],
+        };
+        let cfg = BitConfig { bits_w: vec![3], bits_a: vec![] };
+        // sens = 1/2, delta = 2/7, noise = (2/7)^2/12
+        let expected = 0.5 * (2.0f64 / 7.0).powi(2) / 12.0;
+        assert!((qr_w(&s, &cfg) - expected).abs() < 1e-15);
+    }
+
+    #[test]
+    fn noise_metric_monotone_in_bits() {
+        let s = test_inputs();
+        let hi = BitConfig::uniform(3, 2, 8);
+        let lo = BitConfig::uniform(3, 2, 3);
+        assert!(noise_metric(&s, &lo) > noise_metric(&s, &hi));
+    }
+
+    #[test]
+    fn bn_smaller_gamma_is_more_sensitive() {
+        let mut s = test_inputs();
+        let cfg = BitConfig::uniform(3, 2, 4);
+        let base = bn_metric(&s, &cfg).unwrap();
+        s.bn_gamma[1] = Some(0.1); // was 0.5: smaller gamma -> larger metric
+        assert!(bn_metric(&s, &cfg).unwrap() > base);
+    }
+
+    #[test]
+    fn bn_ignores_non_bn_blocks() {
+        let s = test_inputs(); // block 2 has no BN
+        let cfg_a = BitConfig { bits_w: vec![8, 8, 8], bits_a: vec![8, 8] };
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.bits_w[2] = 3; // changing the BN-free block must not move BN metric
+        assert_eq!(bn_metric(&s, &cfg_a), bn_metric(&s, &cfg_b));
+    }
+}

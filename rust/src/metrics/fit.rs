@@ -1,0 +1,109 @@
+//! The FIT metric and its weight/activation components.
+
+use super::SensitivityInputs;
+use crate::quant::{noise_power, BitConfig};
+
+/// Weight term: sum_l Tr(I_hat(theta_l)) * noise_power(range_l, b_l).
+pub fn fit_w(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    s.w_traces
+        .iter()
+        .enumerate()
+        .map(|(l, tr)| tr * noise_power(s.w_lo[l], s.w_hi[l], cfg.bits_w[l] as f64))
+        .sum()
+}
+
+/// Activation term: sum_l Tr(I_hat(a_l)) * noise_power(range_l, b_l).
+pub fn fit_a(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    s.a_traces
+        .iter()
+        .enumerate()
+        .map(|(l, tr)| tr * noise_power(s.a_lo[l], s.a_hi[l], cfg.bits_a[l] as f64))
+        .sum()
+}
+
+/// FIT = FIT_W + FIT_A (paper §3.2.1: weights and activations live in the
+/// same extended neural manifold, so their contributions add directly —
+/// this is the paper's headline "single metric" property).
+pub fn fit(s: &SensitivityInputs, cfg: &BitConfig) -> f64 {
+    fit_w(s, cfg) + fit_a(s, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::test_inputs;
+
+    #[test]
+    fn fit_is_sum_of_components() {
+        let s = test_inputs();
+        let cfg = BitConfig { bits_w: vec![8, 4, 3], bits_a: vec![6, 3] };
+        assert!((fit(&s, &cfg) - (fit_w(&s, &cfg) + fit_a(&s, &cfg))).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monotone_in_bits() {
+        // lowering any single block's bits must not decrease FIT
+        let s = test_inputs();
+        let base = BitConfig::uniform(3, 2, 8);
+        let fit0 = fit(&s, &base);
+        for l in 0..3 {
+            let mut c = base.clone();
+            c.bits_w[l] = 3;
+            assert!(fit(&s, &c) > fit0, "block {l}");
+        }
+        for l in 0..2 {
+            let mut c = base.clone();
+            c.bits_a[l] = 3;
+            assert!(fit(&s, &c) > fit0, "act {l}");
+        }
+    }
+
+    #[test]
+    fn sensitive_blocks_dominate() {
+        // dropping bits on the high-trace block must hurt more than on the
+        // low-trace block (equal ranges)
+        let s = SensitivityInputs {
+            w_traces: vec![10.0, 0.1],
+            a_traces: vec![],
+            w_lo: vec![-1.0, -1.0],
+            w_hi: vec![1.0, 1.0],
+            a_lo: vec![],
+            a_hi: vec![],
+            bn_gamma: vec![None, None],
+        };
+        let hi_first = BitConfig { bits_w: vec![3, 8], bits_a: vec![] };
+        let lo_first = BitConfig { bits_w: vec![8, 3], bits_a: vec![] };
+        assert!(fit(&s, &hi_first) > fit(&s, &lo_first));
+    }
+
+    #[test]
+    fn hand_computed_value() {
+        let s = SensitivityInputs {
+            w_traces: vec![3.0],
+            a_traces: vec![],
+            w_lo: vec![0.0],
+            w_hi: vec![7.0],
+            a_lo: vec![],
+            a_hi: vec![],
+            bn_gamma: vec![None],
+        };
+        let cfg = BitConfig { bits_w: vec![3], bits_a: vec![] };
+        // delta = 7 / (2^3 - 1) = 1; noise = 1/12; fit = 3/12
+        assert!((fit(&s, &cfg) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_range_block_contributes_nothing() {
+        let s = SensitivityInputs {
+            w_traces: vec![5.0],
+            a_traces: vec![],
+            w_lo: vec![1.0],
+            w_hi: vec![1.0],
+            a_lo: vec![],
+            a_hi: vec![],
+            bn_gamma: vec![None],
+        };
+        let cfg = BitConfig { bits_w: vec![3], bits_a: vec![] };
+        assert_eq!(fit(&s, &cfg), 0.0);
+    }
+}

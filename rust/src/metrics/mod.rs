@@ -1,0 +1,168 @@
+//! Sensitivity metrics: FIT and the paper's comparison heuristics.
+//!
+//! FIT (paper §4.2 / Appendix E):
+//!
+//! ```text
+//! FIT = sum_l Tr(I_hat(theta_l)) * [ (w_hi - w_lo) / (2^b_l - 1) ]^2 / 12
+//!     + sum_l Tr(I_hat(a_l))     * [ (a_hi - a_lo) / (2^b_l - 1) ]^2 / 12
+//! ```
+//!
+//! (the paper drops the constant 1/12 w.l.o.g.; we keep it so weight and
+//! activation terms stay on the physical noise-power scale — it cancels in
+//! every rank correlation.)
+//!
+//! Baselines (paper Appendix D.1): QR replaces the trace with the inverse
+//! quantization range, BN with the inverse batch-norm scale, and Noise
+//! drops the sensitivity weighting entirely. The _W / _A ablations keep
+//! only the weight or activation term.
+
+mod baselines;
+mod fit;
+
+pub use baselines::{bn_metric, noise_metric, qr, qr_a, qr_w};
+pub use fit::{fit, fit_a, fit_w};
+
+use crate::quant::BitConfig;
+
+/// Everything a sensitivity metric needs, gathered once per trained model
+/// by the coordinator (traces via the EF executables, ranges via the
+/// range executables, gammas straight from the owned parameter buffer).
+#[derive(Debug, Clone)]
+pub struct SensitivityInputs {
+    /// Per-weight-block EF traces Tr(I_hat(theta_l)).
+    pub w_traces: Vec<f64>,
+    /// Per-activation-block EF traces Tr(I_hat(a_l)).
+    pub a_traces: Vec<f64>,
+    /// Min-max weight ranges per block.
+    pub w_lo: Vec<f64>,
+    pub w_hi: Vec<f64>,
+    /// Calibrated activation ranges per block.
+    pub a_lo: Vec<f64>,
+    pub a_hi: Vec<f64>,
+    /// Mean |gamma| per weight block, None where the layer has no BN.
+    pub bn_gamma: Vec<Option<f64>>,
+}
+
+impl SensitivityInputs {
+    pub fn n_weight_blocks(&self) -> usize {
+        self.w_traces.len()
+    }
+
+    pub fn n_act_blocks(&self) -> usize {
+        self.a_traces.len()
+    }
+
+    pub fn validate(&self, cfg: &BitConfig) {
+        assert_eq!(self.w_traces.len(), cfg.bits_w.len(), "weight block count");
+        assert_eq!(self.a_traces.len(), cfg.bits_a.len(), "act block count");
+        assert_eq!(self.w_lo.len(), self.w_traces.len());
+        assert_eq!(self.w_hi.len(), self.w_traces.len());
+        assert_eq!(self.a_lo.len(), self.a_traces.len());
+        assert_eq!(self.a_hi.len(), self.a_traces.len());
+        assert_eq!(self.bn_gamma.len(), self.w_traces.len());
+    }
+
+    pub fn has_bn(&self) -> bool {
+        self.bn_gamma.iter().any(|g| g.is_some())
+    }
+}
+
+/// The metric zoo of Table 2, as a closed enum so experiments can sweep it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    Fit,
+    FitW,
+    FitA,
+    Qr,
+    QrW,
+    QrA,
+    Noise,
+    Bn,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 8] = [
+        Metric::Fit,
+        Metric::Qr,
+        Metric::Noise,
+        Metric::FitW,
+        Metric::QrW,
+        Metric::FitA,
+        Metric::QrA,
+        Metric::Bn,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Fit => "FIT",
+            Metric::FitW => "FIT_W",
+            Metric::FitA => "FIT_A",
+            Metric::Qr => "QR",
+            Metric::QrW => "QR_W",
+            Metric::QrA => "QR_A",
+            Metric::Noise => "Noise",
+            Metric::Bn => "BN",
+        }
+    }
+
+    /// Evaluate the metric for one MPQ configuration. Returns None where
+    /// the metric does not apply (BN metric on a BN-free architecture).
+    pub fn eval(&self, s: &SensitivityInputs, cfg: &BitConfig) -> Option<f64> {
+        s.validate(cfg);
+        match self {
+            Metric::Fit => Some(fit(s, cfg)),
+            Metric::FitW => Some(fit_w(s, cfg)),
+            Metric::FitA => Some(fit_a(s, cfg)),
+            Metric::Qr => Some(qr(s, cfg)),
+            Metric::QrW => Some(qr_w(s, cfg)),
+            Metric::QrA => Some(qr_a(s, cfg)),
+            Metric::Noise => Some(noise_metric(s, cfg)),
+            Metric::Bn => bn_metric(s, cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_inputs() -> SensitivityInputs {
+    SensitivityInputs {
+        w_traces: vec![10.0, 2.0, 0.5],
+        a_traces: vec![4.0, 1.0],
+        w_lo: vec![-1.0, -0.5, -0.25],
+        w_hi: vec![1.0, 0.5, 0.25],
+        a_lo: vec![0.0, 0.0],
+        a_hi: vec![6.0, 3.0],
+        bn_gamma: vec![Some(1.0), Some(0.5), None],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_metrics_evaluate() {
+        let s = test_inputs();
+        let cfg = BitConfig::uniform(3, 2, 8);
+        for m in Metric::ALL {
+            let v = m.eval(&s, &cfg);
+            assert!(v.is_some(), "{m:?}");
+            assert!(v.unwrap().is_finite());
+        }
+    }
+
+    #[test]
+    fn bn_metric_is_none_without_gammas() {
+        let mut s = test_inputs();
+        s.bn_gamma = vec![None, None, None];
+        let cfg = BitConfig::uniform(3, 2, 8);
+        assert!(Metric::Bn.eval(&s, &cfg).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "weight block count")]
+    fn mismatched_config_panics() {
+        let s = test_inputs();
+        let cfg = BitConfig::uniform(2, 2, 8);
+        Metric::Fit.eval(&s, &cfg);
+    }
+}

@@ -1,0 +1,163 @@
+//! Mixed-precision bit configurations.
+//!
+//! A `BitConfig` assigns one precision from the paper's candidate set
+//! {8, 6, 4, 3} to every weight block and every activation block. The
+//! Table-2 study samples these uniformly at random (paper Appendix D);
+//! the search module additionally enumerates and greedily allocates them.
+
+use crate::tensor::Pcg32;
+
+/// The paper's candidate precisions (Appendix D).
+pub const PRECISIONS: [u32; 4] = [8, 6, 4, 3];
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BitConfig {
+    pub bits_w: Vec<u32>,
+    pub bits_a: Vec<u32>,
+}
+
+impl BitConfig {
+    pub fn uniform(lw: usize, la: usize, bits: u32) -> Self {
+        BitConfig { bits_w: vec![bits; lw], bits_a: vec![bits; la] }
+    }
+
+    /// Sample uniformly at random from `precisions^(lw+la)`.
+    pub fn random(lw: usize, la: usize, precisions: &[u32], rng: &mut Pcg32) -> Self {
+        BitConfig {
+            bits_w: (0..lw).map(|_| *rng.choose(precisions)).collect(),
+            bits_a: (0..la).map(|_| *rng.choose(precisions)).collect(),
+        }
+    }
+
+    pub fn n_weight_blocks(&self) -> usize {
+        self.bits_w.len()
+    }
+
+    pub fn n_act_blocks(&self) -> usize {
+        self.bits_a.len()
+    }
+
+    /// f32 vectors in executable-input form.
+    pub fn bits_w_f32(&self) -> Vec<f32> {
+        self.bits_w.iter().map(|&b| b as f32).collect()
+    }
+
+    pub fn bits_a_f32(&self) -> Vec<f32> {
+        self.bits_a.iter().map(|&b| b as f32).collect()
+    }
+
+    /// Mean bit width across all blocks (compression proxy for reports).
+    pub fn mean_bits(&self) -> f64 {
+        let total: u64 =
+            self.bits_w.iter().chain(&self.bits_a).map(|&b| b as u64).sum();
+        total as f64 / (self.bits_w.len() + self.bits_a.len()) as f64
+    }
+
+    /// Compact display form, e.g. "w[8,4,3,8] a[6,6,4]".
+    pub fn label(&self) -> String {
+        let j = |v: &[u32]| v.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+        format!("w[{}] a[{}]", j(&self.bits_w), j(&self.bits_a))
+    }
+}
+
+/// Samples distinct random configurations (the Table-2 workload generator).
+pub struct BitConfigSampler {
+    lw: usize,
+    la: usize,
+    precisions: Vec<u32>,
+    seen: std::collections::HashSet<BitConfig>,
+    rng: Pcg32,
+}
+
+impl BitConfigSampler {
+    pub fn new(lw: usize, la: usize, precisions: &[u32], seed: u64) -> Self {
+        BitConfigSampler {
+            lw,
+            la,
+            precisions: precisions.to_vec(),
+            seen: Default::default(),
+            rng: Pcg32::new(seed, 0xb17c0f16),
+        }
+    }
+
+    /// Total size of the configuration space |B|^(Lw+La).
+    pub fn space_size(&self) -> f64 {
+        (self.precisions.len() as f64).powi((self.lw + self.la) as i32)
+    }
+
+    /// Next configuration not seen before (None once the space is exhausted).
+    pub fn sample_distinct(&mut self) -> Option<BitConfig> {
+        if (self.seen.len() as f64) >= self.space_size() {
+            return None;
+        }
+        loop {
+            let c = BitConfig::random(self.lw, self.la, &self.precisions, &mut self.rng);
+            if self.seen.insert(c.clone()) {
+                return Some(c);
+            }
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<BitConfig> {
+        (0..n).map_while(|_| self.sample_distinct()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_draws_only_allowed_precisions() {
+        let mut r = Pcg32::new(1, 1);
+        for _ in 0..50 {
+            let c = BitConfig::random(5, 3, &PRECISIONS, &mut r);
+            assert!(c.bits_w.iter().all(|b| PRECISIONS.contains(b)));
+            assert!(c.bits_a.iter().all(|b| PRECISIONS.contains(b)));
+            assert_eq!((c.n_weight_blocks(), c.n_act_blocks()), (5, 3));
+        }
+    }
+
+    #[test]
+    fn sampler_yields_distinct_configs() {
+        let mut s = BitConfigSampler::new(4, 3, &PRECISIONS, 7);
+        let configs = s.take(200);
+        assert_eq!(configs.len(), 200);
+        let set: std::collections::HashSet<_> = configs.iter().collect();
+        assert_eq!(set.len(), 200);
+    }
+
+    #[test]
+    fn sampler_exhausts_small_space() {
+        // 2 precisions, 1+1 blocks -> 4 configs total
+        let mut s = BitConfigSampler::new(1, 1, &[4, 8], 3);
+        let configs = s.take(100);
+        assert_eq!(configs.len(), 4);
+        assert!(s.sample_distinct().is_none());
+    }
+
+    #[test]
+    fn mean_bits_and_label() {
+        let c = BitConfig { bits_w: vec![8, 4], bits_a: vec![3, 3] };
+        assert!((c.mean_bits() - 4.5).abs() < 1e-12);
+        assert_eq!(c.label(), "w[8,4] a[3,3]");
+    }
+
+    #[test]
+    fn uniform_config() {
+        let c = BitConfig::uniform(3, 2, 8);
+        assert_eq!(c.bits_w, vec![8, 8, 8]);
+        assert_eq!(c.bits_a, vec![8, 8]);
+        assert_eq!(c.mean_bits(), 8.0);
+    }
+
+    #[test]
+    fn sampler_coverage_is_roughly_uniform() {
+        let mut s = BitConfigSampler::new(1, 0, &PRECISIONS, 11);
+        // only 4 possible configs; all must appear
+        let configs = s.take(4);
+        let mut bits: Vec<u32> = configs.iter().map(|c| c.bits_w[0]).collect();
+        bits.sort();
+        assert_eq!(bits, vec![3, 4, 6, 8]);
+    }
+}

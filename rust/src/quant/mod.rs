@@ -1,0 +1,14 @@
+//! Quantization substrate: the uniform min-max quantizer (mirroring the L1
+//! `fake_quant` kernel bit-for-bit in semantics), the uniform-noise power
+//! model (paper Appendix E), mixed-precision bit configurations, and model
+//! size accounting.
+
+mod config;
+mod noise;
+mod size;
+mod uniform;
+
+pub use config::{BitConfig, BitConfigSampler, PRECISIONS};
+pub use noise::noise_power;
+pub use size::{model_bits, model_bytes, compression_ratio};
+pub use uniform::UniformQuantizer;

@@ -1,0 +1,54 @@
+//! The quantization noise-power model (paper Appendix E):
+//!
+//! ```text
+//! E[dtheta^2] = delta^2 / 12,   delta = (hi - lo) / (2^b - 1)
+//! ```
+//!
+//! This is the per-parameter noise power FIT multiplies against the
+//! per-block Fisher trace. Bits are f64 here because configs are also
+//! evaluated at fractional bit widths in the greedy search's relaxation.
+
+/// delta^2 / 12 for a (lo, hi) range at `bits` precision.
+pub fn noise_power(lo: f64, hi: f64, bits: f64) -> f64 {
+    let levels = (2.0f64).powf(bits) - 1.0;
+    if hi <= lo || levels < 1.0 {
+        return 0.0;
+    }
+    let delta = (hi - lo) / levels;
+    delta * delta / 12.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_quantizer_model() {
+        let q = crate::quant::UniformQuantizer::new(-2.0, 2.0, 4);
+        let np = noise_power(-2.0, 2.0, 4.0);
+        // quantizer computes delta in f32; compare at f32 precision
+        assert!((np - q.noise_power()).abs() / np < 1e-6);
+    }
+
+    #[test]
+    fn halving_bits_quadruples_noise_asymptotically() {
+        let n8 = noise_power(0.0, 1.0, 8.0);
+        let n7 = noise_power(0.0, 1.0, 7.0);
+        let ratio = n7 / n8;
+        assert!((ratio - 4.0).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    fn degenerate_cases_zero() {
+        assert_eq!(noise_power(1.0, 1.0, 8.0), 0.0);
+        assert_eq!(noise_power(2.0, 1.0, 8.0), 0.0);
+        assert_eq!(noise_power(0.0, 1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn scales_with_range_squared() {
+        let n1 = noise_power(0.0, 1.0, 5.0);
+        let n3 = noise_power(0.0, 3.0, 5.0);
+        assert!((n3 / n1 - 9.0).abs() < 1e-9);
+    }
+}

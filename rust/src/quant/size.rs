@@ -1,0 +1,60 @@
+//! Model size accounting under a mixed-precision configuration.
+//!
+//! Used to build the sensitivity-vs-size Pareto front (the HAWQ-style
+//! configuration selection FIT plugs into) and to report compression
+//! ratios next to accuracy in the experiments.
+
+use super::BitConfig;
+
+/// Total weight storage in bits for per-block sizes `block_sizes` (number
+/// of parameters per quantizable block) under `cfg`. Non-quantized tensors
+/// (biases, BN) are counted at 32-bit.
+pub fn model_bits(block_sizes: &[usize], n_unquantized: usize, cfg: &BitConfig) -> u64 {
+    assert_eq!(block_sizes.len(), cfg.bits_w.len());
+    let q: u64 = block_sizes
+        .iter()
+        .zip(&cfg.bits_w)
+        .map(|(&n, &b)| n as u64 * b as u64)
+        .sum();
+    q + n_unquantized as u64 * 32
+}
+
+pub fn model_bytes(block_sizes: &[usize], n_unquantized: usize, cfg: &BitConfig) -> f64 {
+    model_bits(block_sizes, n_unquantized, cfg) as f64 / 8.0
+}
+
+/// Compression ratio vs full fp32 storage.
+pub fn compression_ratio(block_sizes: &[usize], n_unquantized: usize, cfg: &BitConfig) -> f64 {
+    let total_params: usize = block_sizes.iter().sum::<usize>() + n_unquantized;
+    let fp32 = total_params as u64 * 32;
+    fp32 as f64 / model_bits(block_sizes, n_unquantized, cfg) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_accounting() {
+        let cfg = BitConfig { bits_w: vec![8, 4], bits_a: vec![] };
+        let bits = model_bits(&[100, 200], 10, &cfg);
+        assert_eq!(bits, 100 * 8 + 200 * 4 + 10 * 32);
+    }
+
+    #[test]
+    fn uniform_8bit_is_4x_compression_without_overhead() {
+        let cfg = BitConfig::uniform(2, 0, 8);
+        let r = compression_ratio(&[1000, 1000], 0, &cfg);
+        assert!((r - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_bits_compress_more() {
+        let sizes = [512usize, 2048];
+        let c8 = BitConfig::uniform(2, 0, 8);
+        let c3 = BitConfig::uniform(2, 0, 3);
+        assert!(
+            compression_ratio(&sizes, 16, &c3) > compression_ratio(&sizes, 16, &c8)
+        );
+    }
+}

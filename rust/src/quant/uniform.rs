@@ -1,0 +1,177 @@
+//! Uniform min-max quantizer (paper Appendix E):
+//!
+//! ```text
+//! Q(x) = round((clip(x) - lo) / delta) * delta + lo
+//! delta = (hi - lo) / (2^b - 1)
+//! ```
+//!
+//! Semantics match the L1 Pallas `fake_quant` kernel and its jnp oracle
+//! exactly (degenerate ranges pass through) — the Rust side uses this for
+//! offline analysis: Fig. 9's noise-distribution study and Fig. 5a's
+//! noise-vs-magnitude scatter, both computed on trained weights without a
+//! PJRT dispatch.
+
+#[derive(Debug, Clone, Copy)]
+pub struct UniformQuantizer {
+    pub lo: f32,
+    pub hi: f32,
+    pub bits: u32,
+}
+
+impl UniformQuantizer {
+    pub fn new(lo: f32, hi: f32, bits: u32) -> Self {
+        UniformQuantizer { lo, hi, bits }
+    }
+
+    /// Fit the range to the data (min-max calibration, paper Appendix A).
+    pub fn fit(xs: &[f32], bits: u32) -> Self {
+        let (lo, hi) = crate::tensor::min_max(xs).unwrap_or((0.0, 0.0));
+        UniformQuantizer { lo, hi, bits }
+    }
+
+    pub fn levels(&self) -> u64 {
+        (1u64 << self.bits) - 1
+    }
+
+    /// Quantization step width delta.
+    pub fn delta(&self) -> f32 {
+        if self.degenerate() {
+            0.0
+        } else {
+            (self.hi - self.lo) / self.levels() as f32
+        }
+    }
+
+    pub fn degenerate(&self) -> bool {
+        self.hi <= self.lo || self.bits == 0
+    }
+
+    /// Quantize-dequantize one value.
+    pub fn apply(&self, x: f32) -> f32 {
+        if self.degenerate() {
+            return x;
+        }
+        let d = self.delta();
+        let c = x.clamp(self.lo, self.hi);
+        ((c - self.lo) / d).round() * d + self.lo
+    }
+
+    /// Quantize-dequantize a slice into a new vector.
+    pub fn apply_vec(&self, xs: &[f32]) -> Vec<f32> {
+        xs.iter().map(|&x| self.apply(x)).collect()
+    }
+
+    /// Uniform-noise model power: E[(Q(x)-x)^2] = delta^2 / 12.
+    pub fn noise_power(&self) -> f64 {
+        let d = self.delta() as f64;
+        d * d / 12.0
+    }
+
+    /// Empirical noise power over a sample.
+    pub fn empirical_noise_power(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| {
+                let e = (self.apply(x) - x) as f64;
+                e * e
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn endpoints_are_fixed_points() {
+        let q = UniformQuantizer::new(-1.5, 2.5, 3);
+        assert_eq!(q.apply(-1.5), -1.5);
+        assert_eq!(q.apply(2.5), 2.5);
+    }
+
+    #[test]
+    fn error_bounded_by_half_delta() {
+        let q = UniformQuantizer::new(-2.0, 2.0, 4);
+        let mut r = Pcg32::new(1, 1);
+        for _ in 0..2000 {
+            let x = r.uniform_in(-2.0, 2.0);
+            assert!((q.apply(x) - x).abs() <= q.delta() / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let q = UniformQuantizer::new(-1.0, 1.0, 5);
+        let mut r = Pcg32::new(2, 1);
+        for _ in 0..500 {
+            let x = r.normal();
+            let once = q.apply(x);
+            assert!((q.apply(once) - once).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn level_count_is_2_pow_b() {
+        let q = UniformQuantizer::new(-1.0, 1.0, 2);
+        let mut levels = std::collections::BTreeSet::new();
+        for i in 0..=1000 {
+            let x = -1.0 + 2.0 * i as f32 / 1000.0;
+            levels.insert((q.apply(x) * 1e4).round() as i64);
+        }
+        assert_eq!(levels.len(), 4);
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        let q = UniformQuantizer::new(0.0, 1.0, 8);
+        assert_eq!(q.apply(5.0), 1.0);
+        assert_eq!(q.apply(-5.0), 0.0);
+    }
+
+    #[test]
+    fn degenerate_passthrough() {
+        let q = UniformQuantizer::new(1.0, 1.0, 8);
+        assert_eq!(q.apply(3.7), 3.7);
+        assert_eq!(q.noise_power(), 0.0);
+    }
+
+    #[test]
+    fn noise_power_model_matches_empirical_for_uniform_data() {
+        // Appendix E / Fig. 9: uniform inputs -> E[(Q(x)-x)^2] ~ delta^2/12
+        let q = UniformQuantizer::new(-1.0, 3.0, 6);
+        let mut r = Pcg32::new(3, 1);
+        let xs: Vec<f32> = (0..200_000).map(|_| r.uniform_in(-1.0, 3.0)).collect();
+        let emp = q.empirical_noise_power(&xs);
+        let model = q.noise_power();
+        assert!((emp - model).abs() / model < 0.05, "emp={emp} model={model}");
+    }
+
+    #[test]
+    fn fit_covers_data() {
+        let xs = [0.5, -1.25, 3.0, 0.0];
+        let q = UniformQuantizer::fit(&xs, 8);
+        assert_eq!((q.lo, q.hi), (-1.25, 3.0));
+        // all data quantize within half-delta
+        for &x in &xs {
+            assert!((q.apply(x) - x).abs() <= q.delta() / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_noise() {
+        let mut r = Pcg32::new(4, 1);
+        let xs: Vec<f32> = (0..5000).map(|_| r.normal()).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [2, 3, 4, 6, 8] {
+            let q = UniformQuantizer::fit(&xs, bits);
+            let e = q.empirical_noise_power(&xs);
+            assert!(e < prev, "bits={bits} e={e} prev={prev}");
+            prev = e;
+        }
+    }
+}

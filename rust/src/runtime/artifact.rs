@@ -1,0 +1,352 @@
+//! Artifact manifest: the typed view of artifacts/manifest.json.
+//!
+//! aot.py records, per model, the flat parameter layout (so the Rust side
+//! can address quantizable blocks and BN tensors inside the parameter
+//! buffer it owns) and, per entry point, the exact input/output shapes and
+//! dtypes of the lowered HLO. The runtime validates every dispatch against
+//! these specs — a shape mistake fails loudly at the call site instead of
+//! inside PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+/// One input or output of an entry point.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One quantizable weight block inside the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct WeightBlock {
+    pub index: usize,
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// One activation site.
+#[derive(Debug, Clone)]
+pub struct ActBlock {
+    pub index: usize,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// One named tensor of the flat layout (includes non-quantized tensors).
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub kind: String,
+    pub block: i64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub n_params: usize,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub task: Task,
+    pub train_k: usize,
+    pub train_b: usize,
+    pub eval_b: usize,
+    pub calib_b: usize,
+    pub predict_b: usize,
+    pub trace_bs: Vec<usize>,
+    pub weight_blocks: Vec<WeightBlock>,
+    pub act_blocks: Vec<ActBlock>,
+    pub tensors: Vec<TensorInfo>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Classify,
+    Segment,
+}
+
+impl ModelManifest {
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no entry {name:?}", self.name))
+    }
+
+    pub fn n_weight_blocks(&self) -> usize {
+        self.weight_blocks.len()
+    }
+
+    pub fn n_act_blocks(&self) -> usize {
+        self.act_blocks.len()
+    }
+
+    /// Per-block parameter counts (model size accounting).
+    pub fn block_sizes(&self) -> Vec<usize> {
+        self.weight_blocks.iter().map(|b| b.size).collect()
+    }
+
+    /// Parameters not covered by any quantizable block (biases, BN).
+    pub fn n_unquantized(&self) -> usize {
+        self.n_params - self.block_sizes().iter().sum::<usize>()
+    }
+
+    /// Per-weight-block mean |gamma| (None if the layer has no BN tensor).
+    /// Convention from layers.py: "convI.w" pairs with "convI.gamma".
+    pub fn bn_gamma_views(&self) -> Vec<Option<TensorInfo>> {
+        self.weight_blocks
+            .iter()
+            .map(|wb| {
+                let gname = wb.name.replace(".w", ".gamma");
+                self.tensors.iter().find(|t| t.name == gname).cloned()
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec, String> {
+    Ok(IoSpec {
+        name: v.str_field("name")?.to_string(),
+        shape: v.usize_array("shape")?,
+        dtype: DType::parse(v.str_field("dtype")?).map_err(|e| e.to_string())?,
+    })
+}
+
+fn parse_model(name: &str, v: &Json) -> Result<ModelManifest> {
+    let err = |e: String| anyhow!("model {name}: {e}");
+    let task = match v.str_field("task").map_err(err)? {
+        "classify" => Task::Classify,
+        "segment" => Task::Segment,
+        other => bail!("model {name}: unknown task {other:?}"),
+    };
+    let weight_blocks = v
+        .arr_field("weight_blocks")
+        .map_err(err)?
+        .iter()
+        .map(|b| -> Result<WeightBlock, String> {
+            Ok(WeightBlock {
+                index: b.usize_field("index")?,
+                name: b.str_field("name")?.to_string(),
+                offset: b.usize_field("offset")?,
+                size: b.usize_field("size")?,
+                shape: b.usize_array("shape")?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()
+        .map_err(err)?;
+    let act_blocks = v
+        .arr_field("act_blocks")
+        .map_err(err)?
+        .iter()
+        .map(|b| -> Result<ActBlock, String> {
+            Ok(ActBlock {
+                index: b.usize_field("index")?,
+                shape: b.usize_array("shape")?,
+                size: b.usize_field("size")?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()
+        .map_err(err)?;
+    let tensors = v
+        .arr_field("tensors")
+        .map_err(err)?
+        .iter()
+        .map(|t| -> Result<TensorInfo, String> {
+            Ok(TensorInfo {
+                name: t.str_field("name")?.to_string(),
+                shape: t.usize_array("shape")?,
+                offset: t.usize_field("offset")?,
+                size: t.usize_field("size")?,
+                kind: t.str_field("kind")?.to_string(),
+                block: t.field("block")?.as_f64().ok_or("block not a number")? as i64,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()
+        .map_err(err)?;
+    let mut entries = BTreeMap::new();
+    for (ename, ev) in v.field("entries").map_err(err)?.as_obj().context("entries")? {
+        let spec = EntrySpec {
+            name: ename.clone(),
+            file: ev.str_field("file").map_err(err)?.to_string(),
+            inputs: ev
+                .arr_field("inputs")
+                .map_err(err)?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>, String>>()
+                .map_err(err)?,
+            outputs: ev
+                .arr_field("outputs")
+                .map_err(err)?
+                .iter()
+                .map(parse_io)
+                .collect::<Result<Vec<_>, String>>()
+                .map_err(err)?,
+        };
+        entries.insert(ename.clone(), spec);
+    }
+    Ok(ModelManifest {
+        name: name.to_string(),
+        n_params: v.usize_field("n_params").map_err(err)?,
+        input_shape: v.usize_array("input_shape").map_err(err)?,
+        n_classes: v.usize_field("n_classes").map_err(err)?,
+        task,
+        train_k: v.usize_field("train_k").map_err(err)?,
+        train_b: v.usize_field("train_b").map_err(err)?,
+        eval_b: v.usize_field("eval_b").map_err(err)?,
+        calib_b: v.usize_field("calib_b").map_err(err)?,
+        predict_b: v.usize_field("predict_b").map_err(err)?,
+        trace_bs: v.usize_array("trace_bs").map_err(err)?,
+        weight_blocks,
+        act_blocks,
+        tensors,
+        entries,
+    })
+}
+
+impl Manifest {
+    /// Load artifacts/manifest.json from the artifact root directory.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in v.field("models").map_err(|e| anyhow!(e))?.as_obj().context("models")? {
+            models.insert(name.clone(), parse_model(name, mv)?);
+        }
+        Ok(Manifest { root, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name:?} (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.root.join(&entry.file)
+    }
+}
+
+/// Default artifact root: $FITQ_ARTIFACTS or ./artifacts.
+pub fn default_artifact_root() -> PathBuf {
+    std::env::var_os("FITQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(root).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        let model = m.model("cnn_mnist").unwrap();
+        assert_eq!(model.input_shape, vec![16, 16, 1]);
+        assert_eq!(model.n_weight_blocks(), 4);
+        assert_eq!(model.n_act_blocks(), 3);
+        assert_eq!(model.task, Task::Classify);
+        // layout covers the whole parameter vector
+        let covered: usize = model.tensors.iter().map(|t| t.size).sum();
+        assert_eq!(covered, model.n_params);
+        // entries carry consistent specs
+        let e = model.entry("ef_trace_bs32").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.outputs[0].shape, vec![model.n_weight_blocks()]);
+        assert!(m.hlo_path(e).exists());
+    }
+
+    #[test]
+    fn bn_views_follow_naming_convention() {
+        let Some(m) = manifest() else { return };
+        let bn = m.model("cnn_mnist_bn").unwrap();
+        let views = bn.bn_gamma_views();
+        assert_eq!(views.len(), 4);
+        assert!(views[0].is_some() && views[1].is_some() && views[2].is_some());
+        assert!(views[3].is_none(), "fc layer has no BN");
+        let plain = m.model("cnn_mnist").unwrap();
+        assert!(plain.bn_gamma_views().iter().all(|v| v.is_none()));
+    }
+
+    #[test]
+    fn unet_manifest_is_segment() {
+        let Some(m) = manifest() else { return };
+        let u = m.model("unet").unwrap();
+        assert_eq!(u.task, Task::Segment);
+        assert_eq!(u.n_weight_blocks(), 10);
+        let e = u.entry("eval").unwrap();
+        assert_eq!(e.outputs.len(), 3); // loss, inter, union
+        assert_eq!(e.outputs[1].shape, vec![u.n_classes]);
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let Some(m) = manifest() else { return };
+        assert!(m.model("nope").is_err());
+    }
+}

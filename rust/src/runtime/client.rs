@@ -1,0 +1,81 @@
+//! The PJRT runtime: one CPU client, lazily compiled executables.
+//!
+//! `Runtime` is the single entry point the coordinator uses to talk to
+//! XLA: it owns the PJRT client, the manifest, and a cache of compiled
+//! executables keyed by (model, entry). Compilation happens on first use
+//! and is reported through `CompileStats` so experiments can separate
+//! one-time compile cost from steady-state dispatch cost.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::artifact::{Manifest, ModelManifest};
+use super::executable::Executable;
+
+#[derive(Debug, Default, Clone)]
+pub struct CompileStats {
+    pub compiled: usize,
+    pub total_time: Duration,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<(String, String), Rc<Executable>>>,
+    stats: RefCell<CompileStats>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact root.
+    pub fn new(artifact_root: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_root)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(CompileStats::default()),
+        })
+    }
+
+    /// Default artifact location ($FITQ_ARTIFACTS or ./artifacts).
+    pub fn from_env() -> Result<Runtime> {
+        Runtime::new(super::artifact::default_artifact_root())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest.model(name)
+    }
+
+    /// Fetch (compiling on first use) an entry-point executable.
+    pub fn load(&self, model: &str, entry: &str) -> Result<Rc<Executable>> {
+        let key = (model.to_string(), entry.to_string());
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.model(model)?.entry(entry)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let exe = Rc::new(Executable::compile(&self.client, spec, &path)?);
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiled += 1;
+            s.total_time += t0.elapsed();
+        }
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compile_stats(&self) -> CompileStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Drop compiled executables (frees PJRT memory between experiments).
+    pub fn evict_model(&self, model: &str) {
+        self.cache.borrow_mut().retain(|(m, _), _| m != model);
+    }
+}

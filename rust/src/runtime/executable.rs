@@ -1,0 +1,207 @@
+//! Typed wrapper over a compiled PJRT executable.
+//!
+//! Every dispatch is validated against the manifest's IoSpecs (shape,
+//! dtype, argument count) before touching PJRT, and outputs come back as
+//! name-addressable f32/i32 host vectors. Input literals are allocated
+//! once and refilled in place across calls (`copy_raw_from`) — literal
+//! construction is the dominant host-side cost on the training hot loop.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{DType, EntrySpec, IoSpec};
+
+/// A borrowed argument for one dispatch.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    U32Scalar(u32),
+    F32Scalar(f32),
+}
+
+impl Arg<'_> {
+    fn dtype(&self) -> DType {
+        match self {
+            Arg::F32(_) | Arg::F32Scalar(_) => DType::F32,
+            Arg::I32(_) => DType::I32,
+            Arg::U32Scalar(_) => DType::U32,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(v) => v.len(),
+            Arg::I32(v) => v.len(),
+            Arg::U32Scalar(_) | Arg::F32Scalar(_) => 1,
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        unsafe {
+            match self {
+                Arg::F32(v) => std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4),
+                Arg::I32(v) => std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4),
+                Arg::U32Scalar(v) => std::slice::from_raw_parts(v as *const u32 as *const u8, 4),
+                Arg::F32Scalar(v) => std::slice::from_raw_parts(v as *const f32 as *const u8, 4),
+            }
+        }
+    }
+}
+
+/// One named output, copied back to the host.
+#[derive(Debug, Clone)]
+pub struct OutValue {
+    pub spec: IoSpec,
+    pub f32: Vec<f32>,
+    pub i32: Vec<i32>,
+}
+
+impl OutValue {
+    pub fn as_f32(&self) -> &[f32] {
+        &self.f32
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        self.f32[0]
+    }
+}
+
+/// Outputs of one dispatch, addressable by name or index.
+#[derive(Debug)]
+pub struct Outputs(pub Vec<OutValue>);
+
+impl Outputs {
+    pub fn get(&self, name: &str) -> Result<&OutValue> {
+        self.0
+            .iter()
+            .find(|o| o.spec.name == name)
+            .with_context(|| format!("no output named {name:?}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        Ok(self.get(name)?.as_f32())
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name)?.scalar_f32())
+    }
+}
+
+/// A compiled entry point plus its manifest specs.
+pub struct Executable {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input literals, allocated at first dispatch and refilled in place.
+    literals: RefCell<Vec<xla::Literal>>,
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    pub fn compile(client: &xla::PjRtClient, spec: EntrySpec, hlo_path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Executable {
+            spec,
+            exe,
+            literals: RefCell::new(Vec::new()),
+            dispatches: std::cell::Cell::new(0),
+        })
+    }
+
+    fn validate(&self, args: &[Arg]) -> Result<()> {
+        let ins = &self.spec.inputs;
+        if args.len() != ins.len() {
+            bail!(
+                "{}: expected {} args ({:?}), got {}",
+                self.spec.name,
+                ins.len(),
+                ins.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+                args.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(ins) {
+            if a.dtype() != spec.dtype {
+                bail!("{}: arg {:?} dtype mismatch", self.spec.name, spec.name);
+            }
+            if a.len() != spec.numel() {
+                bail!(
+                    "{}: arg {:?} has {} elements, spec {:?} wants {}",
+                    self.spec.name,
+                    spec.name,
+                    a.len(),
+                    spec.shape,
+                    spec.numel()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn fill_literals(&self, args: &[Arg]) -> Result<()> {
+        let mut lits = self.literals.borrow_mut();
+        // §Perf escape hatch: FITQ_NO_LITERAL_REUSE=1 rebuilds input
+        // literals every dispatch (the naive baseline the reuse path is
+        // measured against in EXPERIMENTS.md §Perf L3).
+        if std::env::var_os("FITQ_NO_LITERAL_REUSE").is_some() {
+            lits.clear();
+        }
+        if lits.is_empty() {
+            for (a, spec) in args.iter().zip(&self.spec.inputs) {
+                lits.push(xla::Literal::create_from_shape_and_untyped_data(
+                    spec.dtype.element_type(),
+                    &spec.shape,
+                    a.bytes(),
+                )?);
+            }
+        } else {
+            for (a, lit) in args.iter().zip(lits.iter_mut()) {
+                match a {
+                    Arg::F32(v) => lit.copy_raw_from(v)?,
+                    Arg::I32(v) => lit.copy_raw_from(v)?,
+                    Arg::U32Scalar(v) => lit.copy_raw_from(&[*v])?,
+                    Arg::F32Scalar(v) => lit.copy_raw_from(&[*v])?,
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch once; outputs are copied back to host vectors.
+    pub fn run(&self, args: &[Arg]) -> Result<Outputs> {
+        self.validate(args)?;
+        self.fill_literals(args)?;
+        let lits = self.literals.borrow();
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        self.dispatches.set(self.dispatches.get() + 1);
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+            let mut v = OutValue { spec: spec.clone(), f32: Vec::new(), i32: Vec::new() };
+            match spec.dtype {
+                DType::F32 => v.f32 = lit.to_vec::<f32>()?,
+                DType::I32 => v.i32 = lit.to_vec::<i32>()?,
+                DType::U32 => bail!("u32 outputs unsupported"),
+            }
+            out.push(v);
+        }
+        Ok(Outputs(out))
+    }
+}

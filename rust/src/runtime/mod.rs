@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client, artifact manifest, typed executables,
+//! and the JSON substrate the manifest parser is built on.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod json;
+
+pub use artifact::{default_artifact_root, DType, EntrySpec, Manifest, ModelManifest, Task};
+pub use client::Runtime;
+pub use executable::{Arg, Executable, Outputs};
+pub use json::Json;

@@ -1,0 +1,157 @@
+//! ASCII scatter/line plots — the experiments render their figures as
+//! plain-text plots next to the CSVs so a terminal-only workflow can see
+//! the shape the paper's matplotlib figures show.
+
+/// Render a scatter plot of (x, y) points into a `width` x `height`
+/// character grid with axis labels.
+pub fn scatter(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    points: &[(f64, f64)],
+    width: usize,
+    height: usize,
+) -> String {
+    let finite: Vec<(f64, f64)> = points
+        .iter()
+        .copied()
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if finite.is_empty() {
+        return format!("{title}\n(no finite points)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &finite {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 == x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 == y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let mut counts = vec![vec![0u32; width]; height];
+    for &(x, y) in &finite {
+        let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+        let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - cy.min(height - 1);
+        let col = cx.min(width - 1);
+        counts[row][col] += 1;
+    }
+    for (r, row) in counts.iter().enumerate() {
+        for (c, &n) in row.iter().enumerate() {
+            grid[r][c] = match n {
+                0 => b' ',
+                1 => b'.',
+                2..=3 => b'o',
+                4..=8 => b'O',
+                _ => b'@',
+            };
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("{ylabel} ({y1:.3} top, {y0:.3} bottom)\n"));
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(" {xlabel}: {x0:.4} .. {x1:.4}\n"));
+    out
+}
+
+/// Render one or more named line series (shared x = index).
+pub fn lines(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let markers = [b'*', b'+', b'x', b'#'];
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let mut max_len = 0usize;
+    for (_, ys) in series {
+        for &y in ys.iter().filter(|v| v.is_finite()) {
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        max_len = max_len.max(ys.len());
+    }
+    if !y0.is_finite() || max_len < 2 {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    if y1 == y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = (i as f64 / (max_len - 1) as f64 * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][col.min(width - 1)] = markers[si % markers.len()];
+        }
+    }
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!(" {} = {}\n", markers[si % markers.len()] as char, name));
+    }
+    out.push_str(&format!(" y: {y0:.4} .. {y1:.4}, x: 0 .. {}\n", max_len - 1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_renders_extremes() {
+        let pts = [(0.0, 0.0), (1.0, 1.0), (0.5, 0.5)];
+        let s = scatter("t", "x", "y", &pts, 21, 11);
+        // top-right and bottom-left corners are hit
+        let rows: Vec<&str> = s.lines().collect();
+        assert!(rows[2].ends_with('.'), "{s}");
+        assert!(rows[12].starts_with("|."), "{s}");
+        assert!(s.contains("x: 0.0000 .. 1.0000"));
+    }
+
+    #[test]
+    fn scatter_handles_degenerate_input() {
+        assert!(scatter("t", "x", "y", &[], 10, 5).contains("no finite"));
+        let s = scatter("t", "x", "y", &[(1.0, 2.0)], 10, 5);
+        assert!(s.contains('.'));
+    }
+
+    #[test]
+    fn scatter_density_markers() {
+        let pts: Vec<(f64, f64)> = (0..50).map(|_| (0.5, 0.5)).collect();
+        let s = scatter("t", "x", "y", &pts, 9, 5);
+        assert!(s.contains('@'), "{s}");
+    }
+
+    #[test]
+    fn lines_renders_two_series() {
+        let a: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..30).map(|i| 30.0 - i as f64).collect();
+        let s = lines("conv", &[("up", &a), ("down", &b)], 40, 10);
+        assert!(s.contains('*') && s.contains('+'), "{s}");
+        assert!(s.contains("* = up"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Percentile bootstrap confidence intervals — used to put error bars on
+//! the rank-correlation coefficients the experiments report (the paper
+//! reports point estimates; we add CIs since our studies are seeded).
+
+use crate::tensor::Pcg32;
+
+/// Percentile bootstrap CI for a paired statistic (e.g. a correlation).
+///
+/// Resamples (x, y) pairs with replacement `n_boot` times and returns the
+/// (lo, hi) percentile interval at the given confidence level.
+pub fn bootstrap_ci(
+    x: &[f64],
+    y: &[f64],
+    stat: impl Fn(&[f64], &[f64]) -> f64,
+    n_boot: usize,
+    confidence: f64,
+    rng: &mut Pcg32,
+) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(!x.is_empty());
+    assert!((0.0..1.0).contains(&(1.0 - confidence)));
+    let n = x.len();
+    let mut draws = Vec::with_capacity(n_boot);
+    let mut bx = vec![0.0; n];
+    let mut by = vec![0.0; n];
+    for _ in 0..n_boot {
+        for i in 0..n {
+            let j = rng.below(n as u32) as usize;
+            bx[i] = x[j];
+            by[i] = y[j];
+        }
+        let s = stat(&bx, &by);
+        if s.is_finite() {
+            draws.push(s);
+        }
+    }
+    if draws.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - confidence) / 2.0;
+    let pick = |q: f64| {
+        let idx = ((draws.len() as f64 - 1.0) * q).round() as usize;
+        draws[idx.min(draws.len() - 1)]
+    };
+    (pick(alpha), pick(1.0 - alpha))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{pearson, spearman};
+
+    #[test]
+    fn ci_brackets_point_estimate() {
+        let mut r = Pcg32::new(1, 1);
+        let x: Vec<f64> = (0..80).map(|_| r.normal() as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v + 0.5 * r.normal() as f64).collect();
+        let point = spearman(&x, &y);
+        let (lo, hi) = bootstrap_ci(&x, &y, spearman, 500, 0.95, &mut r);
+        assert!(lo <= point && point <= hi, "{lo} {point} {hi}");
+        assert!(lo > 0.3, "strongly correlated data should have high lower bound");
+    }
+
+    #[test]
+    fn ci_narrows_with_sample_size() {
+        let mut r = Pcg32::new(2, 1);
+        let make = |n: usize, r: &mut Pcg32| {
+            let x: Vec<f64> = (0..n).map(|_| r.normal() as f64).collect();
+            let y: Vec<f64> = x.iter().map(|v| v + r.normal() as f64).collect();
+            (x, y)
+        };
+        let (x1, y1) = make(20, &mut r);
+        let (x2, y2) = make(400, &mut r);
+        let (lo1, hi1) = bootstrap_ci(&x1, &y1, pearson, 400, 0.95, &mut r);
+        let (lo2, hi2) = bootstrap_ci(&x2, &y2, pearson, 400, 0.95, &mut r);
+        assert!(hi2 - lo2 < hi1 - lo1);
+    }
+
+    #[test]
+    fn degenerate_stat_gives_nan() {
+        let x = [1.0, 1.0, 1.0, 1.0];
+        let y = [2.0, 2.0, 2.0, 2.0];
+        let mut r = Pcg32::new(3, 1);
+        let (lo, hi) = bootstrap_ci(&x, &y, pearson, 50, 0.9, &mut r);
+        assert!(lo.is_nan() && hi.is_nan());
+    }
+}

@@ -1,0 +1,158 @@
+//! Trace-estimation convergence monitor (paper §4.3).
+//!
+//! The paper early-stops trace estimation "at a fixed tolerance, which can
+//! be practically computed via a moving variation of the mean trace" —
+//! e.g. the U-Net EF trace stops at tol = 0.01 after 82 iterations. We
+//! implement that: after each estimator iteration the per-block running
+//! means are pushed in; convergence is declared when the *relative* moving
+//! standard error of every block mean drops below the tolerance (blocks
+//! with near-zero trace are compared on an absolute floor instead).
+
+use super::streaming::VecStats;
+
+#[derive(Debug, Clone)]
+pub struct ConvergenceMonitor {
+    stats: VecStats,
+    tol: f64,
+    min_iters: u64,
+    max_iters: u64,
+}
+
+impl ConvergenceMonitor {
+    pub fn new(dim: usize, tol: f64, min_iters: u64, max_iters: u64) -> Self {
+        assert!(tol > 0.0 && min_iters >= 1 && max_iters >= min_iters);
+        ConvergenceMonitor { stats: VecStats::new(dim), tol, min_iters, max_iters }
+    }
+
+    /// Push one estimator iteration's per-block values; returns true when
+    /// estimation should stop (converged or iteration cap reached).
+    pub fn push(&mut self, values: &[f32]) -> bool {
+        self.stats.push(values);
+        self.is_done()
+    }
+
+    pub fn is_done(&self) -> bool {
+        let n = self.stats.count();
+        if n < self.min_iters {
+            return false;
+        }
+        if n >= self.max_iters {
+            return true;
+        }
+        self.converged()
+    }
+
+    /// Relative standard error of every block mean below tolerance.
+    pub fn converged(&self) -> bool {
+        if self.stats.count() < self.min_iters {
+            return false;
+        }
+        // Blocks are compared on relative standard error; blocks whose mean
+        // is negligible next to the largest block use an absolute floor so
+        // a dead layer cannot stall convergence forever.
+        let scale = self
+            .stats
+            .means()
+            .iter()
+            .map(|m| m.abs())
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        (0..self.stats.dim()).all(|i| {
+            let c = self.stats.component(i);
+            let target = self.tol * c.mean().abs().max(0.01 * scale);
+            c.std_error() <= target
+        })
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.stats.count()
+    }
+
+    pub fn means(&self) -> Vec<f64> {
+        self.stats.means()
+    }
+
+    pub fn std_errors(&self) -> Vec<f64> {
+        self.stats.std_errors()
+    }
+
+    pub fn stats(&self) -> &VecStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn stops_early_on_low_noise() {
+        let mut m = ConvergenceMonitor::new(3, 0.05, 4, 10_000);
+        let mut r = Pcg32::new(1, 1);
+        let mut iters = 0;
+        loop {
+            let v = [
+                10.0 + 0.1 * r.normal(),
+                5.0 + 0.05 * r.normal(),
+                1.0 + 0.01 * r.normal(),
+            ];
+            iters += 1;
+            if m.push(&v) {
+                break;
+            }
+        }
+        assert!(iters < 100, "should converge fast, took {iters}");
+        assert!((m.means()[0] - 10.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn noisier_signals_take_longer() {
+        let run = |noise: f32| {
+            let mut m = ConvergenceMonitor::new(1, 0.02, 4, 100_000);
+            let mut r = Pcg32::new(2, 2);
+            loop {
+                if m.push(&[4.0 + noise * r.normal()]) {
+                    return m.iterations();
+                }
+            }
+        };
+        assert!(run(2.0) > 4 * run(0.2));
+    }
+
+    #[test]
+    fn respects_min_and_max_iters() {
+        let mut m = ConvergenceMonitor::new(1, 0.5, 8, 12);
+        for i in 0..12 {
+            let done = m.push(&[1.0]); // zero variance: converged immediately
+            if i < 7 {
+                assert!(!done, "must not stop before min_iters");
+            }
+        }
+        assert!(m.is_done());
+
+        // never-converging noise hits the cap
+        let mut m = ConvergenceMonitor::new(1, 1e-9, 2, 20);
+        let mut r = Pcg32::new(3, 3);
+        let mut n = 0;
+        while !m.push(&[r.normal()]) {
+            n += 1;
+            assert!(n < 1000);
+        }
+        assert_eq!(m.iterations(), 20);
+    }
+
+    #[test]
+    fn zero_blocks_do_not_block_convergence() {
+        // one block is exactly zero (e.g. a dead layer); convergence must
+        // still be reachable via the absolute floor.
+        let mut m = ConvergenceMonitor::new(2, 0.05, 4, 50_000);
+        let mut r = Pcg32::new(4, 4);
+        loop {
+            if m.push(&[8.0 + 0.2 * r.normal(), 1e-9 * r.normal()]) {
+                break;
+            }
+        }
+        assert!(m.iterations() < 1000);
+    }
+}

@@ -1,0 +1,149 @@
+//! Correlation coefficients — the paper's evaluation methodology (§4.2)
+//! scores sensitivity metrics by the *rank* correlation between the metric
+//! and the final accuracy across hundreds of MPQ configurations.
+
+/// Pearson product-moment correlation.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return f64::NAN;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Fractional ranks with ties averaged (midranks), as used by Spearman.
+pub fn ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let rank = (i + j) as f64 / 2.0 + 1.0; // average of 1-based ranks
+        for k in i..=j {
+            out[idx[k]] = rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation (Pearson over midranks) — the coefficient
+/// reported in the paper's Table 2 and Figs 3-4.
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Kendall's tau-b (tie-corrected), O(n^2) — n is a few hundred configs.
+pub fn kendall_tau(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return f64::NAN;
+    }
+    let (mut conc, mut disc, mut tx, mut ty) = (0i64, 0i64, 0i64, 0i64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = x[i] - x[j];
+            let dy = y[i] - y[j];
+            if dx == 0.0 && dy == 0.0 {
+                continue;
+            } else if dx == 0.0 {
+                tx += 1;
+            } else if dy == 0.0 {
+                ty += 1;
+            } else if (dx > 0.0) == (dy > 0.0) {
+                conc += 1;
+            } else {
+                disc += 1;
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as f64;
+    let denom = ((n0 - tx as f64) * (n0 - ty as f64)).sqrt();
+    if denom == 0.0 {
+        return f64::NAN;
+    }
+    (conc - disc) as f64 / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yn: Vec<f64> = y.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &yn) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear_is_one() {
+        let x: Vec<f64> = (1..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v.exp()).collect();
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        assert!(pearson(&x, &y) < 0.999); // pearson is fooled, spearman is not
+    }
+
+    #[test]
+    fn ranks_with_ties() {
+        assert_eq!(ranks(&[10.0, 20.0, 20.0, 30.0]), vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_known_value() {
+        // classic example: one swapped pair
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 2.0, 3.0, 5.0, 4.0];
+        assert!((spearman(&x, &y) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_known_value() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 2.0, 3.0, 5.0, 4.0];
+        // 9 concordant, 1 discordant of 10 pairs -> tau = 0.8
+        assert!((kendall_tau(&x, &y) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounds_hold_on_random_data() {
+        let mut r = crate::tensor::Pcg32::new(3, 1);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..30).map(|_| r.normal() as f64).collect();
+            let y: Vec<f64> = (0..30).map(|_| r.normal() as f64).collect();
+            for c in [pearson(&x, &y), spearman(&x, &y), kendall_tau(&x, &y)] {
+                assert!((-1.0..=1.0).contains(&c), "{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_input_is_nan() {
+        let x = [1.0, 1.0, 1.0];
+        let y = [1.0, 2.0, 3.0];
+        assert!(pearson(&x, &y).is_nan());
+        assert!(spearman(&x, &y).is_nan());
+    }
+}

@@ -1,0 +1,101 @@
+//! Fixed-range histogram — used by the Fig. 9 experiment to test the
+//! uniformity of the quantization-error distribution.
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    below: u64,
+    above: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram { lo, hi, bins: vec![0; n_bins], below: 0, above: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            // the half-open top bin gets exact-hi values
+            if x == self.hi {
+                *self.bins.last_mut().unwrap() += 1;
+            } else {
+                self.above += 1;
+            }
+        } else {
+            let f = (x - self.lo) / (self.hi - self.lo);
+            let idx = ((f * self.bins.len() as f64) as usize).min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.below + self.above
+    }
+
+    pub fn outliers(&self) -> u64 {
+        self.below + self.above
+    }
+
+    /// Chi-squared statistic against the uniform distribution over the
+    /// in-range mass. Small values (relative to dof = bins-1) mean the
+    /// sample is consistent with uniform noise — the paper's Appendix E
+    /// assumption.
+    pub fn chi2_uniform(&self) -> f64 {
+        let n: u64 = self.bins.iter().sum();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let expected = n as f64 / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - expected;
+                d * d / expected
+            })
+            .sum()
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn bins_and_outliers() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for x in [0.1, 0.3, 0.6, 0.9, -0.5, 1.5, 1.0] {
+            h.push(x);
+        }
+        assert_eq!(h.counts(), &[1, 1, 1, 2]); // 1.0 lands in top bin
+        assert_eq!(h.outliers(), 2);
+        assert_eq!(h.total(), 7);
+    }
+
+    #[test]
+    fn chi2_small_for_uniform_large_for_point_mass() {
+        let mut r = Pcg32::new(1, 1);
+        let mut hu = Histogram::new(0.0, 1.0, 20);
+        let mut hp = Histogram::new(0.0, 1.0, 20);
+        for _ in 0..20_000 {
+            hu.push(r.uniform() as f64);
+            hp.push(0.42);
+        }
+        // uniform: chi2 ~ dof = 19; point mass: enormous
+        assert!(hu.chi2_uniform() < 60.0, "{}", hu.chi2_uniform());
+        assert!(hp.chi2_uniform() > 10_000.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Statistics substrate: streaming moments, correlation coefficients,
+//! bootstrap confidence intervals, histograms, and the trace-convergence
+//! monitor the paper's fixed-tolerance early stopping relies on (§4.3).
+
+pub mod ascii_plot;
+mod bootstrap;
+mod convergence;
+mod corr;
+mod histogram;
+mod streaming;
+
+pub use bootstrap::bootstrap_ci;
+pub use convergence::ConvergenceMonitor;
+pub use corr::{kendall_tau, pearson, spearman};
+pub use histogram::Histogram;
+pub use streaming::{RunningStats, VecStats};

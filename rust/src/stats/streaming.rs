@@ -1,0 +1,198 @@
+//! Welford streaming moments — numerically stable single-pass mean/variance.
+
+/// Scalar running statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        RunningStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (n denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.sample_variance().sqrt()
+    }
+
+    /// Standard error of the running mean.
+    pub fn std_error(&self) -> f64 {
+        if self.n == 0 { f64::INFINITY } else { self.std() / (self.n as f64).sqrt() }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge two accumulators (parallel reduction; Chan et al.).
+    pub fn merge(&self, other: &RunningStats) -> RunningStats {
+        if self.n == 0 {
+            return other.clone();
+        }
+        if other.n == 0 {
+            return self.clone();
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        RunningStats { n, mean, m2, min: self.min.min(other.min), max: self.max.max(other.max) }
+    }
+}
+
+/// Per-component running statistics over fixed-length vectors (e.g. the
+/// per-block trace values streamed out of the estimator executables).
+#[derive(Debug, Clone)]
+pub struct VecStats {
+    comps: Vec<RunningStats>,
+}
+
+impl VecStats {
+    pub fn new(dim: usize) -> Self {
+        VecStats { comps: vec![RunningStats::new(); dim] }
+    }
+
+    pub fn push(&mut self, xs: &[f32]) {
+        assert_eq!(xs.len(), self.comps.len(), "VecStats dimension mismatch");
+        for (c, &x) in self.comps.iter_mut().zip(xs) {
+            c.push(x as f64);
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.comps.len()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.comps.first().map_or(0, |c| c.count())
+    }
+
+    pub fn means(&self) -> Vec<f64> {
+        self.comps.iter().map(|c| c.mean()).collect()
+    }
+
+    pub fn std_errors(&self) -> Vec<f64> {
+        self.comps.iter().map(|c| c.std_error()).collect()
+    }
+
+    pub fn component(&self, i: usize) -> &RunningStats {
+        &self.comps[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn matches_naive_two_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin() * 5.0 + 2.0).collect();
+        let mut s = RunningStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let (mean, var) = naive(&xs);
+        assert!((s.mean() - mean).abs() < 1e-12);
+        assert!((s.variance() - var).abs() < 1e-12);
+        assert_eq!(s.count(), 100);
+    }
+
+    #[test]
+    fn stable_for_large_offset() {
+        // classic catastrophic-cancellation case for naive sum-of-squares
+        let mut s = RunningStats::new();
+        for i in 0..1000 {
+            s.push(1e9 + (i % 2) as f64);
+        }
+        assert!((s.variance() - 0.25).abs() < 1e-6, "var={}", s.variance());
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..57).map(|i| (i as f64).sqrt()).collect();
+        let mut all = RunningStats::new();
+        let mut a = RunningStats::new();
+        let mut b = RunningStats::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i < 20 { a.push(x) } else { b.push(x) }
+        }
+        let m = a.merge(&b);
+        assert!((m.mean() - all.mean()).abs() < 1e-12);
+        assert!((m.variance() - all.variance()).abs() < 1e-12);
+        assert_eq!(m.count(), all.count());
+    }
+
+    #[test]
+    fn std_error_shrinks() {
+        let mut s = RunningStats::new();
+        let mut prev = f64::INFINITY;
+        let mut r = crate::tensor::Pcg32::new(5, 5);
+        for k in 1..=5 {
+            for _ in 0..(200 * k) {
+                s.push(r.normal() as f64);
+            }
+            let se = s.std_error();
+            assert!(se < prev);
+            prev = se;
+        }
+    }
+
+    #[test]
+    fn vec_stats_componentwise() {
+        let mut vs = VecStats::new(2);
+        vs.push(&[1.0, 10.0]);
+        vs.push(&[3.0, 30.0]);
+        assert_eq!(vs.means(), vec![2.0, 20.0]);
+        assert_eq!(vs.count(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn vec_stats_rejects_wrong_dim() {
+        let mut vs = VecStats::new(2);
+        vs.push(&[1.0]);
+    }
+}

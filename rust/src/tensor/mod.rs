@@ -1,0 +1,76 @@
+//! Flat-buffer tensor utilities and deterministic RNG.
+//!
+//! The runtime owns all model state as flat `f32` vectors (DESIGN.md key
+//! decision #2); this module provides the shape bookkeeping and per-block
+//! views used to address them, plus the PCG-based RNG every synthetic
+//! workload in the framework derives from (no `rand` dependency — the
+//! substrate is built from scratch and seeded for bit-exact reruns).
+
+mod rng;
+mod shape;
+
+pub use rng::Pcg32;
+pub use shape::Shape;
+
+/// A (offset, size) window into a flat parameter vector — one quantizable
+/// block, as recorded in the artifact manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockView {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+impl BlockView {
+    pub fn slice<'a>(&self, flat: &'a [f32]) -> &'a [f32] {
+        &flat[self.offset..self.offset + self.size]
+    }
+
+    pub fn slice_mut<'a>(&self, flat: &'a mut [f32]) -> &'a mut [f32] {
+        &mut flat[self.offset..self.offset + self.size]
+    }
+}
+
+/// Min and max of a slice (None for empty input).
+pub fn min_max(xs: &[f32]) -> Option<(f32, f32)> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    Some((lo, hi))
+}
+
+/// Squared l2 norm.
+pub fn sqnorm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_view_slices() {
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let b = BlockView { name: "w".into(), offset: 3, size: 4 };
+        assert_eq!(b.slice(&flat), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn min_max_basics() {
+        assert_eq!(min_max(&[]), None);
+        assert_eq!(min_max(&[2.0]), Some((2.0, 2.0)));
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), Some((-1.0, 3.0)));
+    }
+
+    #[test]
+    fn sqnorm_matches_manual() {
+        assert_eq!(sqnorm(&[3.0, 4.0]), 25.0);
+        assert_eq!(sqnorm(&[]), 0.0);
+    }
+}

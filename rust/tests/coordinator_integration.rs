@@ -1,0 +1,138 @@
+//! Integration: the full coordinator pipeline over real artifacts.
+//! Skipped when artifacts are missing (fresh checkout).
+
+use fitq::coordinator::{
+    dataset_for, gather, Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
+};
+use fitq::data::EvalSet;
+use fitq::metrics::{fit, Metric};
+use fitq::quant::BitConfig;
+use fitq::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Runtime::new(root).expect("runtime"))
+}
+
+#[test]
+fn training_reduces_loss_and_beats_chance() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_mnist";
+    let ds = dataset_for(&rt, model, 1).unwrap();
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, 1).unwrap();
+    let losses = trainer.train(&mut st, 12).unwrap();
+    assert!(losses.last().unwrap() < &(0.6 * losses[0]), "{losses:?}");
+    let ev = EvalSet::materialize(ds.as_ref(), 256);
+    let r = trainer.evaluate(&st, &ev).unwrap();
+    assert!(r.score > 0.3, "acc {} must beat 10-class chance", r.score);
+}
+
+#[test]
+fn deterministic_replay() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_mnist";
+    let run = || {
+        let ds = dataset_for(&rt, model, 7).unwrap();
+        let mut trainer = Trainer::new(&rt, ds.as_ref());
+        let mut st = ModelState::init(&rt, model, 7).unwrap();
+        trainer.train(&mut st, 3).unwrap();
+        st.params
+    };
+    assert_eq!(run(), run(), "same seeds must replay bit-exactly");
+}
+
+#[test]
+fn qat_lower_bits_hurt_more() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_mnist";
+    let mm = rt.model(model).unwrap().clone();
+    let ds = dataset_for(&rt, model, 2).unwrap();
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, 2).unwrap();
+    trainer.train(&mut st, 15).unwrap();
+    let ev = EvalSet::materialize(ds.as_ref(), 512);
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default()).unwrap();
+
+    let q8 = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 8);
+    let q3 = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 3);
+    // FIT predicts 8-bit safer than 3-bit
+    assert!(fit(&sens.inputs, &q8) < fit(&sens.inputs, &q3));
+    // and measured (no fine-tune) quantized eval agrees
+    let a8 = trainer.evaluate_q(&st, &ev, &q8, &sens.act).unwrap();
+    let a3 = trainer.evaluate_q(&st, &ev, &q3, &sens.act).unwrap();
+    let fp = trainer.evaluate(&st, &ev).unwrap();
+    assert!(a8.score >= a3.score, "8bit {} vs 3bit {}", a8.score, a3.score);
+    assert!((a8.score - fp.score).abs() < 0.1, "8-bit PTQ near-lossless");
+}
+
+#[test]
+fn ef_trace_converges_with_tolerance() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_mnist";
+    let ds = dataset_for(&rt, model, 3).unwrap();
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, 3).unwrap();
+    trainer.train(&mut st, 8).unwrap();
+    let engine = TraceEngine::new(&rt, ds.as_ref());
+    let opts = |tol: f64| TraceOptions { batch: 32, tol, min_iters: 8, max_iters: 400, seed: 3 };
+    let loose = engine
+        .run(model, &st.params, Estimator::EmpiricalFisher, opts(0.1))
+        .unwrap();
+    let tight = engine
+        .run(model, &st.params, Estimator::EmpiricalFisher, opts(0.03))
+        .unwrap();
+    assert!(tight.iterations >= loose.iterations, "tighter tol needs more iters");
+    assert!(loose.w_traces.iter().all(|&t| t > 0.0));
+    // trace estimates must agree across tolerances within a coarse band
+    for (a, b) in loose.w_traces.iter().zip(&tight.w_traces) {
+        assert!((a - b).abs() / b.max(1e-9) < 0.5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn hutchinson_and_ef_agree_on_block_ranking() {
+    let Some(rt) = runtime() else { return };
+    // scale models carry both estimators
+    let model = "cnn_s";
+    let ds = dataset_for(&rt, model, 4).unwrap();
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, 4).unwrap();
+    trainer.train(&mut st, 10).unwrap();
+    let engine = TraceEngine::new(&rt, ds.as_ref());
+    let ef = engine
+        .run(model, &st.params, Estimator::EmpiricalFisher, TraceOptions::fixed_iters(32, 60, 1))
+        .unwrap();
+    let h = engine
+        .run(model, &st.params, Estimator::Hutchinson, TraceOptions::fixed_iters(32, 60, 1))
+        .unwrap();
+    let rho = fitq::stats::spearman(&ef.w_traces, &h.w_traces);
+    assert!(rho > 0.7, "EF/Hessian block ranking must agree, rho={rho}");
+}
+
+#[test]
+fn metric_zoo_evaluates_on_gathered_inputs() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_mnist_bn";
+    let mm = rt.model(model).unwrap().clone();
+    let ds = dataset_for(&rt, model, 5).unwrap();
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, model, 5).unwrap();
+    trainer.train(&mut st, 6).unwrap();
+    let ev = EvalSet::materialize(ds.as_ref(), 256);
+    let opt = TraceOptions { batch: 32, tol: 0.05, min_iters: 8, max_iters: 60, seed: 5 };
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, opt).unwrap();
+    assert!(sens.inputs.has_bn(), "bn model must expose gammas");
+    let cfg = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
+    for m in Metric::ALL {
+        let v = m.eval(&sens.inputs, &cfg).expect("applies on BN model");
+        assert!(v.is_finite() && v >= 0.0, "{m:?} -> {v}");
+    }
+    // activation ranges calibrated from ReLU outputs are non-negative
+    assert!(sens.act.lo.iter().all(|&l| l >= 0.0));
+    assert!(sens.act.lo.iter().zip(&sens.act.hi).all(|(l, h)| h > l));
+}

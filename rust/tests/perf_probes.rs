@@ -1,0 +1,123 @@
+//! §Perf measurement probes (run with --ignored; results recorded in
+//! EXPERIMENTS.md §Perf). These are measurements, not assertions — they
+//! print numbers and only sanity-check direction.
+
+use std::time::Instant;
+
+use fitq::data::{EpochBatch, SynthClass};
+use fitq::runtime::{Arg, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::new(root).expect("runtime"))
+}
+
+/// L2 §Perf: scanned K=10 epoch vs 10 single-step dispatches.
+#[test]
+#[ignore = "perf probe — run explicitly"]
+fn scan_amortization() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_mnist";
+    let mm = rt.model(model).unwrap().clone();
+    let init = rt.load(model, "init").unwrap();
+    let params = init.run(&[Arg::U32Scalar(0)]).unwrap().f32("params").unwrap().to_vec();
+    let m = vec![0.0f32; mm.n_params];
+    let v = m.clone();
+    let ds = SynthClass::synmnist(1);
+    let (eb, _) = EpochBatch::generate(&ds, mm.train_k, mm.train_b, 0);
+    let (e1, _) = EpochBatch::generate(&ds, 1, mm.train_b, 0);
+
+    let epoch = rt.load(model, "train_epoch").unwrap();
+    let step = rt.load(model, "train_step").unwrap();
+    let n = 20;
+
+    // warmup
+    for exe in [&epoch, &step] {
+        let eb_ref = if std::rc::Rc::ptr_eq(exe, &epoch) { &eb } else { &e1 };
+        exe.run(&[
+            Arg::F32(&params),
+            Arg::F32(&m),
+            Arg::F32(&v),
+            Arg::F32Scalar(0.0),
+            Arg::F32(&eb_ref.xs),
+            Arg::I32(&eb_ref.ys),
+        ])
+        .unwrap();
+    }
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        epoch
+            .run(&[
+                Arg::F32(&params),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::F32Scalar(0.0),
+                Arg::F32(&eb.xs),
+                Arg::I32(&eb.ys),
+            ])
+            .unwrap();
+    }
+    let scanned = t0.elapsed().as_secs_f64() / (n * mm.train_k) as f64;
+
+    let t1 = Instant::now();
+    for _ in 0..n {
+        for _ in 0..mm.train_k {
+            step.run(&[
+                Arg::F32(&params),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::F32Scalar(0.0),
+                Arg::F32(&e1.xs),
+                Arg::I32(&e1.ys),
+            ])
+            .unwrap();
+        }
+    }
+    let single = t1.elapsed().as_secs_f64() / (n * mm.train_k) as f64;
+
+    println!(
+        "scan_amortization: scanned K=10 {:.3} ms/step vs K=1 {:.3} ms/step ({:.2}x)",
+        scanned * 1e3,
+        single * 1e3,
+        single / scanned
+    );
+    assert!(scanned < single, "scanned epochs must amortize dispatch cost");
+}
+
+/// L3 §Perf: input-literal reuse (copy_raw_from) vs rebuild-per-dispatch.
+/// Uses the EF-trace executable whose inputs include the full parameter
+/// vector — the dominant literal on the trace hot loop.
+#[test]
+#[ignore = "perf probe — run explicitly"]
+fn literal_reuse() {
+    let Some(rt) = runtime() else { return };
+    let model = "cnn_l";
+    let mm = rt.model(model).unwrap().clone();
+    let init = rt.load(model, "init").unwrap();
+    let params = init.run(&[Arg::U32Scalar(0)]).unwrap().f32("params").unwrap().to_vec();
+    let ef = rt.load(model, "ef_trace_bs32").unwrap();
+    let ds = SynthClass::new((16, 16, 3), 10, 1.5, 1);
+    let (eb, _) = EpochBatch::generate(&ds, 1, 32, 0);
+    let run = |n: usize| {
+        let t0 = Instant::now();
+        for _ in 0..n {
+            ef.run(&[Arg::F32(&params), Arg::F32(&eb.xs), Arg::I32(&eb.ys)]).unwrap();
+        }
+        t0.elapsed().as_secs_f64() / n as f64
+    };
+    run(3); // warmup + allocate literals
+    let reused = run(15);
+    std::env::set_var("FITQ_NO_LITERAL_REUSE", "1");
+    let rebuilt = run(15);
+    std::env::remove_var("FITQ_NO_LITERAL_REUSE");
+    println!(
+        "literal_reuse: reused {:.2} ms vs rebuilt {:.2} ms per dispatch ({:.2}x)",
+        reused * 1e3,
+        rebuilt * 1e3,
+        rebuilt / reused
+    );
+}

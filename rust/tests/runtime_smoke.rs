@@ -1,0 +1,116 @@
+//! Integration: compile and dispatch real artifacts through PJRT.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (not failed) when the artifact directory is missing so `cargo test`
+//! stays usable in a fresh checkout.
+
+use fitq::runtime::{Arg, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Runtime::new(root).expect("runtime"))
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("cnn_mnist", "init").unwrap();
+    let p1 = exe.run(&[Arg::U32Scalar(7)]).unwrap();
+    let p2 = exe.run(&[Arg::U32Scalar(7)]).unwrap();
+    let p3 = exe.run(&[Arg::U32Scalar(8)]).unwrap();
+    let n = rt.model("cnn_mnist").unwrap().n_params;
+    assert_eq!(p1.f32("params").unwrap().len(), n);
+    assert_eq!(p1.f32("params").unwrap(), p2.f32("params").unwrap());
+    assert_ne!(p1.f32("params").unwrap(), p3.f32("params").unwrap());
+}
+
+#[test]
+fn train_epoch_runs_and_loss_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("cnn_mnist").unwrap().clone();
+    let init = rt.load("cnn_mnist", "init").unwrap();
+    let epoch = rt.load("cnn_mnist", "train_epoch").unwrap();
+
+    let params = init.run(&[Arg::U32Scalar(0)]).unwrap().f32("params").unwrap().to_vec();
+    let m = vec![0.0f32; model.n_params];
+    let v = vec![0.0f32; model.n_params];
+    let ds = fitq::data::SynthClass::synmnist(1);
+    let (eb, _) = fitq::data::EpochBatch::generate(&ds, model.train_k, model.train_b, 0);
+
+    let out = epoch
+        .run(&[
+            Arg::F32(&params),
+            Arg::F32(&m),
+            Arg::F32(&v),
+            Arg::F32Scalar(0.0),
+            Arg::F32(&eb.xs),
+            Arg::I32(&eb.ys),
+        ])
+        .unwrap();
+    let loss = out.scalar("loss").unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    assert_eq!(out.scalar("step").unwrap(), model.train_k as f32);
+    // parameters moved
+    assert_ne!(out.f32("params").unwrap(), params.as_slice());
+}
+
+#[test]
+fn arg_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("cnn_mnist", "init").unwrap();
+    assert!(exe.run(&[Arg::F32Scalar(1.0)]).is_err(), "dtype mismatch");
+    assert!(exe.run(&[]).is_err(), "arity mismatch");
+    let pr = rt.load("cnn_mnist", "param_ranges").unwrap();
+    let too_short = vec![0.0f32; 3];
+    assert!(pr.run(&[Arg::F32(&too_short)]).is_err(), "shape mismatch");
+}
+
+#[test]
+fn ef_trace_outputs_per_block_values() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("cnn_mnist").unwrap().clone();
+    let init = rt.load("cnn_mnist", "init").unwrap();
+    let ef = rt.load("cnn_mnist", "ef_trace_bs32").unwrap();
+    let params = init.run(&[Arg::U32Scalar(3)]).unwrap().f32("params").unwrap().to_vec();
+
+    let ds = fitq::data::SynthClass::synmnist(2);
+    let sl = 16 * 16;
+    let mut x = vec![0.0f32; 32 * sl];
+    let mut y = vec![0i32; 32];
+    for i in 0..32 {
+        let mut yi = [0i32];
+        fitq::data::Dataset::sample(&ds, fitq::data::Split::Test, i as u64, &mut x[i * sl..(i + 1) * sl], &mut yi);
+        y[i] = yi[0];
+    }
+    let out = ef.run(&[Arg::F32(&params), Arg::F32(&x), Arg::I32(&y)]).unwrap();
+    let w_tr = out.f32("w_tr").unwrap();
+    let a_tr = out.f32("a_tr").unwrap();
+    assert_eq!(w_tr.len(), model.n_weight_blocks());
+    assert_eq!(a_tr.len(), model.n_act_blocks());
+    assert!(w_tr.iter().all(|&t| t.is_finite() && t >= 0.0));
+    assert!(a_tr.iter().all(|&t| t.is_finite() && t >= 0.0));
+    assert!(w_tr.iter().sum::<f32>() > 0.0, "untrained model has nonzero grads");
+}
+
+#[test]
+fn param_and_act_ranges_consistent_with_host_computation() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("cnn_mnist").unwrap().clone();
+    let init = rt.load("cnn_mnist", "init").unwrap();
+    let params = init.run(&[Arg::U32Scalar(5)]).unwrap().f32("params").unwrap().to_vec();
+
+    let pr = rt.load("cnn_mnist", "param_ranges").unwrap();
+    let out = pr.run(&[Arg::F32(&params)]).unwrap();
+    let lo = out.f32("lo").unwrap();
+    let hi = out.f32("hi").unwrap();
+    for (i, wb) in model.weight_blocks.iter().enumerate() {
+        let slab = &params[wb.offset..wb.offset + wb.size];
+        let (mn, mx) = fitq::tensor::min_max(slab).unwrap();
+        assert!((lo[i] - mn).abs() < 1e-6, "block {i} lo");
+        assert!((hi[i] - mx).abs() < 1e-6, "block {i} hi");
+    }
+}
