@@ -1,0 +1,16 @@
+# Convenience targets; the Rust error messages and the examples refer to
+# `make artifacts`.
+
+.PHONY: artifacts test bench
+
+# Lower every L2 entry point to HLO text + manifest.json (requires the
+# python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+# Tier-1 verify.
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench

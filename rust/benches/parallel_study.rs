@@ -1,0 +1,58 @@
+//! Bench: the PR-1 before/after measurement — `run_study`'s per-config
+//! sweep at `jobs = 1` (the old strictly sequential evaluator) vs parallel
+//! job counts. The sweep is the wall-clock bottleneck of Table 2 / Fig 4
+//! (hundreds of QAT fine-tunes), so the expected shape is near-linear
+//! scaling until PJRT dispatches saturate memory bandwidth.
+//!
+//! Run with `cargo bench --bench parallel_study` (needs `make artifacts`).
+//! Also prints the pure-pool overhead measurement, which runs everywhere.
+
+use fitq::bench_util::{bench, black_box};
+use fitq::coordinator::{derive_seed, run_pool, run_study, StudyOptions};
+use fitq::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // pool overhead on pure-Rust work (no PJRT): runs on any checkout
+    println!("# parallel pool: pure-Rust scaling (64 jobs x 2M mixes)\n");
+    for jobs in [1usize, 2, 4, 8] {
+        bench(&format!("pool 64 seeded mixes jobs={jobs}"), 1, 5, || {
+            let out = run_pool(
+                64,
+                jobs,
+                || Ok(()),
+                |_, i| {
+                    let mut x = derive_seed(7, i as u64);
+                    for _ in 0..2_000_000 {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    }
+                    Ok(x)
+                },
+            )
+            .unwrap();
+            black_box(out);
+        });
+    }
+
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("\nskipping run_study bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(root)?;
+    let base = StudyOptions {
+        n_configs: 8,
+        fp_epochs: 4,
+        qat_epochs: 1,
+        eval_n: 256,
+        seed: 3,
+        ..Default::default()
+    };
+    println!("\n# run_study cnn_mnist (8 configs, 1 QAT epoch) serial vs parallel\n");
+    for jobs in [1usize, 2, 4] {
+        let opt = StudyOptions { jobs, ..base.clone() };
+        bench(&format!("run_study 8 configs jobs={jobs}"), 0, 3, || {
+            black_box(run_study(&rt, "cnn_mnist", &opt).unwrap());
+        });
+    }
+    Ok(())
+}

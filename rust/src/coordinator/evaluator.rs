@@ -8,14 +8,22 @@
 //!      checkpoint (identical initialisation across configs, paper
 //!      Appendix D), evaluate the quantized model;
 //!   5. rank-correlate each metric against final performance.
+//!
+//! Step 4 dominates wall-clock (hundreds of QAT fine-tunes) and every
+//! configuration is independent, so it fans out over the
+//! `coordinator::parallel` worker pool. Each configuration's QAT data
+//! stream starts at a cursor derived from `(study seed, config index)` —
+//! never from shared trainer state — so `jobs = 1` and `jobs = N` produce
+//! bit-identical outcomes and correlations.
 
 use anyhow::Result;
 
+use super::parallel::{self, derive_seed};
 use super::sensitivity::{gather, SensitivityReport};
 use super::state::ModelState;
 use super::trainer::{dataset_for, Trainer};
 use super::traces::TraceOptions;
-use crate::data::EvalSet;
+use crate::data::{Dataset, EvalSet};
 use crate::metrics::Metric;
 use crate::quant::{BitConfig, BitConfigSampler, PRECISIONS};
 use crate::runtime::Runtime;
@@ -32,6 +40,10 @@ pub struct StudyOptions {
     pub eval_n: usize,
     pub seed: u64,
     pub trace: TraceOptions,
+    /// Worker threads for the per-configuration sweep: `1` = serial (the
+    /// reference path), `0` = one per available core, `N` = exactly N.
+    /// Results are identical at every setting (see `coordinator::parallel`).
+    pub jobs: usize,
 }
 
 impl Default for StudyOptions {
@@ -43,6 +55,7 @@ impl Default for StudyOptions {
             eval_n: 1024,
             seed: 0,
             trace: TraceOptions::default(),
+            jobs: 1,
         }
     }
 }
@@ -111,37 +124,40 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
     // 2. sensitivity inputs, once
     let sens = gather(&trainer, ds.as_ref(), &fp, &ev, opt.trace)?;
 
-    // 3-4. config sweep
+    // 3-4. config sweep — distinct configs drawn serially (the sampler is
+    // order-dependent), then trained/evaluated independently per index.
     let mut sampler = BitConfigSampler::new(
         mm.n_weight_blocks(),
         mm.n_act_blocks(),
         &PRECISIONS,
         opt.seed ^ 0x5a395a39,
     );
-    let mut outcomes = Vec::with_capacity(opt.n_configs);
-    for i in 0..opt.n_configs {
-        let Some(cfg) = sampler.sample_distinct() else { break };
-        let metrics: Vec<_> = Metric::ALL
-            .iter()
-            .map(|m| (*m, m.eval(&sens.inputs, &cfg)))
-            .collect();
-        // QAT fine-tune from the FP checkpoint (fresh optimizer)
-        let mut st = fp.clone();
-        st.reset_optimizer();
-        trainer.qat_train(&mut st, &cfg, &sens.act, opt.qat_epochs)?;
-        let test = trainer.evaluate_q(&st, &ev, &cfg, &sens.act)?;
-        let train = trainer.evaluate_q(&st, &ev_train, &cfg, &sens.act)?;
-        outcomes.push(ConfigOutcome {
-            mean_bits: cfg.mean_bits(),
-            cfg,
-            metrics,
-            test_score: test.score,
-            train_score: train.score,
-        });
-        if (i + 1) % 20 == 0 {
-            eprintln!("  [{model}] config {}/{}", i + 1, opt.n_configs);
+    let configs = sampler.take(opt.n_configs);
+    let outcomes = if parallel::effective_jobs(opt.jobs, configs.len()) <= 1 {
+        let mut out = Vec::with_capacity(configs.len());
+        for (i, cfg) in configs.iter().enumerate() {
+            out.push(evaluate_config(rt, ds.as_ref(), &fp, &sens, &ev, &ev_train, cfg, opt, i)?);
+            if (i + 1) % 20 == 0 {
+                eprintln!("  [{model}] config {}/{}", i + 1, configs.len());
+            }
         }
-    }
+        out
+    } else {
+        eprintln!(
+            "  [{model}] sweeping {} configs on {} workers",
+            configs.len(),
+            parallel::effective_jobs(opt.jobs, configs.len())
+        );
+        let root = rt.manifest.root.clone();
+        parallel::run_pool(
+            configs.len(),
+            opt.jobs,
+            || Runtime::new(&root),
+            |wrt, i| {
+                evaluate_config(wrt, ds.as_ref(), &fp, &sens, &ev, &ev_train, &configs[i], opt, i)
+            },
+        )?
+    };
 
     // 5. correlations: metric predicts degradation, so correlate against
     // -metric (higher metric -> lower accuracy); report positive rho for a
@@ -170,6 +186,43 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
     })
 }
 
+/// Score, QAT-fine-tune and evaluate one configuration of the sweep.
+///
+/// Pure in `(inputs, index)`: the QAT data stream starts at a cursor
+/// derived from `(opt.seed, index)`, the model starts from a clone of the
+/// shared FP checkpoint with a fresh optimizer, and nothing is read from
+/// sweep-order-dependent state — the property that makes the parallel and
+/// serial sweeps bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_config(
+    rt: &Runtime,
+    ds: &dyn Dataset,
+    fp: &ModelState,
+    sens: &SensitivityReport,
+    ev: &EvalSet,
+    ev_train: &EvalSet,
+    cfg: &BitConfig,
+    opt: &StudyOptions,
+    index: usize,
+) -> Result<ConfigOutcome> {
+    let metrics: Vec<_> =
+        Metric::ALL.iter().map(|m| (*m, m.eval(&sens.inputs, cfg))).collect();
+    // QAT fine-tune from the FP checkpoint (fresh optimizer, own stream)
+    let mut trainer = Trainer::with_cursor(rt, ds, derive_seed(opt.seed, index as u64));
+    let mut st = fp.clone();
+    st.reset_optimizer();
+    trainer.qat_train(&mut st, cfg, &sens.act, opt.qat_epochs)?;
+    let test = trainer.evaluate_q(&st, ev, cfg, &sens.act)?;
+    let train = trainer.evaluate_q(&st, ev_train, cfg, &sens.act)?;
+    Ok(ConfigOutcome {
+        mean_bits: cfg.mean_bits(),
+        cfg: cfg.clone(),
+        metrics,
+        test_score: test.score,
+        train_score: train.score,
+    })
+}
+
 pub fn metric_value(o: &ConfigOutcome, m: Metric) -> Option<f64> {
     o.metrics.iter().find(|(k, _)| *k == m).and_then(|(_, v)| *v)
 }
@@ -183,5 +236,6 @@ mod tests {
         let o = StudyOptions::default();
         assert_eq!(o.n_configs, 100); // paper: 100 configs per experiment
         assert!((o.trace.tol - 0.01).abs() < 1e-12); // paper §4.3 tolerance
+        assert_eq!(o.jobs, 1); // serial reference path by default
     }
 }

@@ -22,11 +22,14 @@ pub struct Fig1Options {
     pub max_iters: u64,
     pub fp_epochs: usize,
     pub seed: u64,
+    /// Worker threads: the EF and Hessian estimations per model are
+    /// independent, so `jobs = 2` runs them concurrently (default 1).
+    pub jobs: usize,
 }
 
 impl Default for Fig1Options {
     fn default() -> Self {
-        Fig1Options { batch: 32, tol: 0.02, max_iters: 300, fp_epochs: 15, seed: 0 }
+        Fig1Options { batch: 32, tol: 0.02, max_iters: 300, fp_epochs: 15, seed: 0, jobs: 1 }
     }
 }
 
@@ -47,8 +50,13 @@ pub fn run(rt: &Runtime, opt: &Fig1Options) -> Result<()> {
             max_iters: opt.max_iters,
             seed: opt.seed,
         };
-        let ef = engine.run(model, &st.params, Estimator::EmpiricalFisher, o)?;
-        let hess = engine.run(model, &st.params, Estimator::Hutchinson, o)?;
+        let results = engine.run_many(
+            model,
+            &st.params,
+            &[(Estimator::EmpiricalFisher, o), (Estimator::Hutchinson, o)],
+            opt.jobs,
+        )?;
+        let (ef, hess) = (&results[0], &results[1]);
 
         let lw = ef.w_traces.len();
         let mut rows = Vec::with_capacity(lw);

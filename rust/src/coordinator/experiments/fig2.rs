@@ -17,11 +17,14 @@ pub struct Fig2Options {
     pub iters: u64,
     pub fp_epochs: usize,
     pub seed: u64,
+    /// Worker threads: the EF and Hessian estimations per model are
+    /// independent, so `jobs = 2` runs them concurrently (default 1).
+    pub jobs: usize,
 }
 
 impl Default for Fig2Options {
     fn default() -> Self {
-        Fig2Options { batch: 32, iters: 150, fp_epochs: 15, seed: 0 }
+        Fig2Options { batch: 32, iters: 150, fp_epochs: 15, seed: 0, jobs: 1 }
     }
 }
 
@@ -52,8 +55,13 @@ pub fn run(rt: &Runtime, opt: &Fig2Options) -> Result<()> {
         let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
         let engine = TraceEngine::new(rt, ds.as_ref());
         let o = TraceOptions::fixed_iters(opt.batch, opt.iters, opt.seed + 7);
-        let ef = engine.run(model, &st.params, Estimator::EmpiricalFisher, o)?;
-        let hess = engine.run(model, &st.params, Estimator::Hutchinson, o)?;
+        let results = engine.run_many(
+            model,
+            &st.params,
+            &[(Estimator::EmpiricalFisher, o), (Estimator::Hutchinson, o)],
+            opt.jobs,
+        )?;
+        let (ef, hess) = (&results[0], &results[1]);
 
         let rows: Vec<Vec<f64>> = (0..opt.iters as usize)
             .map(|i| {

@@ -21,6 +21,10 @@ pub struct Table3Options {
     pub fp_epochs: usize,
     pub seed: u64,
     pub models: Vec<String>,
+    /// Worker threads for the per-batch estimator runs (default 1). The
+    /// variance columns are identical at any setting; the ms/iter columns
+    /// are wall-clock, so keep `jobs = 1` when timing is the result.
+    pub jobs: usize,
 }
 
 impl Default for Table3Options {
@@ -32,6 +36,7 @@ impl Default for Table3Options {
             fp_epochs: 15,
             seed: 0,
             models: SCALE_MODELS.iter().map(|(m, _)| m.to_string()).collect(),
+            jobs: 1,
         }
     }
 }
@@ -50,12 +55,22 @@ pub fn run(rt: &Runtime, opt: &Table3Options) -> Result<()> {
         for &b in &opt.batches {
             let mut cells = vec![format!("{b}")];
             let mut row = vec![model_index(model) as f64, b as f64];
+            // est-major, run-minor — the same visit order as the serial loop
+            let mut specs = Vec::with_capacity(2 * opt.runs);
             for est in [Estimator::EmpiricalFisher, Estimator::Hutchinson] {
-                let mut var = RunningStats::new();
-                let mut time = RunningStats::new();
                 for r_i in 0..opt.runs {
                     let o = TraceOptions::fixed_iters(b, opt.iters, opt.seed + 31 * r_i as u64);
-                    let r = engine.run(model, &st.params, est, o)?;
+                    specs.push((est, o));
+                }
+            }
+            let results = engine.run_many(model, &st.params, &specs, opt.jobs)?;
+            // always emit both estimator column groups, even at --runs 0,
+            // so rows stay aligned with the CSV/markdown headers
+            for ei in 0..2 {
+                let per_est = &results[ei * opt.runs..(ei + 1) * opt.runs];
+                let mut var = RunningStats::new();
+                let mut time = RunningStats::new();
+                for r in per_est {
                     var.push(r.norm_variance);
                     time.push(r.iter_time_s * 1e3);
                 }

@@ -6,6 +6,8 @@
 //!   paper's fixed-tolerance early stopping.
 //! - `sensitivity`: one-shot gathering of every metric's inputs.
 //! - `evaluator`: the train-hundreds-of-configs rank-correlation pipeline.
+//! - `parallel`: the scoped-thread worker pool the evaluator and trace
+//!   engine fan out on, plus the deterministic per-job seed derivation.
 //! - `search`: Pareto front + greedy budgeted bit allocation on top of FIT.
 //! - `experiments`: one module per paper table/figure.
 //! - `report`: CSV/markdown emission under results/.
@@ -13,6 +15,7 @@
 pub mod allocate;
 pub mod evaluator;
 pub mod experiments;
+pub mod parallel;
 pub mod report;
 pub mod search;
 pub mod sensitivity;
@@ -22,6 +25,7 @@ pub mod trainer;
 
 pub use allocate::exact_allocate;
 pub use evaluator::{run_study, StudyOptions, StudyResult};
+pub use parallel::{derive_seed, run_pool};
 pub use search::{greedy_allocate, pareto_front, score, ScoredConfig};
 pub use sensitivity::{gather, SensitivityReport};
 pub use state::ModelState;

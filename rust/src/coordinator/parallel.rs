@@ -1,0 +1,248 @@
+//! Scoped-thread worker pool for the coordinator's embarrassingly parallel
+//! loops (std-only; no rayon/crossbeam in the vendored dependency set).
+//!
+//! Two things make the pool safe for experiment code:
+//!
+//! 1. **Determinism contract.** Work items are addressed by index and every
+//!    stochastic input a job consumes must be a pure function of that index
+//!    (derive per-job seeds/cursors with [`derive_seed`], never from shared
+//!    mutable state). Under that contract the pool returns results in index
+//!    order and a run with `jobs = N` is bit-identical to `jobs = 1` — the
+//!    equivalence is enforced by `tests/parallel_equivalence.rs`.
+//!
+//! 2. **Per-worker state.** The PJRT `Runtime` is deliberately
+//!    single-threaded (`Rc` + `RefCell` executable cache), so it cannot be
+//!    shared across workers. [`run_pool`] therefore takes an `init` closure
+//!    that builds one worker-local state value (e.g. its own `Runtime` over
+//!    the same artifact root) on the worker's own thread; compilation cost
+//!    is paid once per worker and amortized over its share of the jobs.
+//!
+//! Wall-clock timing fields of results (e.g. `TraceResult::iter_time_s`)
+//! remain *measurements*: running jobs concurrently contends for cores, so
+//! timing-sensitive experiments (Table 1/3 speedups) should use `jobs = 1`
+//! when the per-iteration times are the quantity of interest. All numeric
+//! outputs other than wall-clock are unaffected.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use anyhow::{anyhow, Result};
+
+/// Derive an independent 64-bit seed for job `index` of a study seeded with
+/// `study_seed` (splitmix64-style finalizer).
+///
+/// The derivation is a pure function of `(study_seed, index)` and is part of
+/// the on-disk reproducibility contract: per-configuration QAT data cursors
+/// and probe seeds are derived through this function, so re-running a study
+/// at any `--jobs` value replays identical per-configuration streams. The
+/// constants and the mapping are pinned by a unit test below — changing them
+/// changes every seeded study result.
+pub fn derive_seed(study_seed: u64, index: u64) -> u64 {
+    let mut z = study_seed
+        .wrapping_add(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(index.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Resolve a `--jobs` setting: `0` means "one worker per available core",
+/// anything else is taken literally; the result is clamped to `n` jobs.
+pub fn effective_jobs(jobs: usize, n: usize) -> usize {
+    let requested = if jobs == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        jobs
+    };
+    requested.clamp(1, n.max(1))
+}
+
+/// Run `n` indexed jobs on a pool of `jobs` scoped worker threads and
+/// return the results in index order.
+///
+/// - `init` builds one worker-local state value per worker, on the worker's
+///   own thread (so the state does not need to be `Send`);
+/// - `work` maps `(worker state, job index)` to a result. Under the module
+///   determinism contract it must depend only on the index and on immutable
+///   captured inputs.
+///
+/// `jobs <= 1` (after [`effective_jobs`] resolution) runs everything inline
+/// on the caller's thread with a single `init` — the serial reference path.
+/// A failing job makes the pool stop claiming new work (jobs already in
+/// flight finish), and the lowest-index failure among the executed jobs is
+/// returned as the error; if a worker fails to initialize and some jobs
+/// were consequently never executed, that initialization error is returned
+/// instead.
+pub fn run_pool<W, T, I, F>(n: usize, jobs: usize, init: I, work: F) -> Result<Vec<T>>
+where
+    T: Send,
+    I: Fn() -> Result<W> + Sync,
+    F: Fn(&mut W, usize) -> Result<T> + Sync,
+{
+    let jobs = effective_jobs(jobs, n);
+    if jobs <= 1 {
+        let mut w = init()?;
+        return (0..n).map(|i| work(&mut w, i)).collect();
+    }
+
+    let counter = AtomicUsize::new(0);
+    // raised on the first failure so workers stop claiming new jobs instead
+    // of burning through the whole remaining sweep before the error surfaces
+    let stop = AtomicBool::new(false);
+    // (per-worker (index, result) lists, per-worker init failure)
+    let per_worker: Vec<(Vec<(usize, Result<T>)>, Option<anyhow::Error>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..jobs)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out = Vec::new();
+                        let mut state = match init() {
+                            Ok(w) => w,
+                            Err(e) => {
+                                stop.store(true, Ordering::Relaxed);
+                                return (out, Some(e));
+                            }
+                        };
+                        while !stop.load(Ordering::Relaxed) {
+                            let i = counter.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let r = work(&mut state, i);
+                            if r.is_err() {
+                                stop.store(true, Ordering::Relaxed);
+                            }
+                            out.push((i, r));
+                        }
+                        (out, None)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fitq worker thread panicked"))
+                .collect()
+        });
+
+    let mut init_errors = Vec::new();
+    let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+    for (results, init_err) in per_worker {
+        for (i, r) in results {
+            slots[i] = Some(r);
+        }
+        if let Some(e) = init_err {
+            init_errors.push(e);
+        }
+    }
+
+    // a real job failure (lowest executed index) outranks gaps left by the
+    // early-abort, which in turn fall back to a worker's init error
+    let mut out = Vec::with_capacity(n);
+    let mut missing = None;
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(t)) => out.push(t),
+            Some(Err(e)) => return Err(e.context(format!("parallel job {i} failed"))),
+            None if missing.is_none() => missing = Some(i),
+            None => {}
+        }
+    }
+    if let Some(i) = missing {
+        let e = match init_errors.pop() {
+            Some(e) => e.context("worker initialization failed"),
+            None => anyhow!("parallel job {i} was never scheduled (pool aborted early)"),
+        };
+        return Err(e);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derive_seed_is_pinned() {
+        // pinned values: changing the derivation silently changes every
+        // seeded study, so this test fails loudly instead.
+        assert_eq!(derive_seed(0, 0), 16294208416658607535);
+        assert_eq!(derive_seed(0, 1), 16481712997681181849);
+        assert_eq!(derive_seed(0, 2), 392536317241979068);
+        assert_eq!(derive_seed(42, 7), 13611663889625010092);
+        assert_eq!(derive_seed(7, 0), 7191089600892374487);
+    }
+
+    #[test]
+    fn derive_seed_separates_indices_and_seeds() {
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..8u64 {
+            for idx in 0..256u64 {
+                assert!(seen.insert(derive_seed(seed, idx)), "collision at {seed}/{idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_jobs_resolution() {
+        assert_eq!(effective_jobs(1, 100), 1);
+        assert_eq!(effective_jobs(4, 100), 4);
+        assert_eq!(effective_jobs(8, 3), 3, "clamped to job count");
+        assert_eq!(effective_jobs(3, 0), 1, "empty input still gets one lane");
+        assert!(effective_jobs(0, 64) >= 1, "auto resolves to at least one");
+    }
+
+    #[test]
+    fn pool_returns_results_in_index_order() {
+        let out = run_pool(50, 4, || Ok(0u64), |_, i| Ok(i * i)).unwrap();
+        let expect: Vec<usize> = (0..50).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn pool_serial_path_reuses_one_state() {
+        let out = run_pool(
+            5,
+            1,
+            || Ok(0usize),
+            |w, i| {
+                *w += 1;
+                Ok((*w, i))
+            },
+        )
+        .unwrap();
+        // one worker state counts all five jobs in order
+        assert_eq!(out, vec![(1, 0), (2, 1), (3, 2), (4, 3), (5, 4)]);
+    }
+
+    #[test]
+    fn pool_reports_lowest_failing_index() {
+        let r: Result<Vec<usize>> = run_pool(
+            20,
+            4,
+            || Ok(()),
+            |_, i| {
+                if i % 7 == 3 {
+                    Err(anyhow!("boom at {i}"))
+                } else {
+                    Ok(i)
+                }
+            },
+        );
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("job 3"), "{msg}");
+        assert!(msg.contains("boom at 3"), "{msg}");
+    }
+
+    #[test]
+    fn pool_surfaces_init_failure() {
+        let r: Result<Vec<usize>> =
+            run_pool(4, 3, || Err::<(), _>(anyhow!("no runtime")), |_, i| Ok(i));
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("no runtime"), "{msg}");
+    }
+
+    #[test]
+    fn pool_zero_jobs_is_auto() {
+        let out = run_pool(8, 0, || Ok(()), |_, i| Ok(i)).unwrap();
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -45,7 +45,7 @@ impl ModelState {
         self.params.len()
     }
 
-    /// Binary checkpoint: [n: u64][step: f32][params][m][v], little endian.
+    /// Binary checkpoint: `[n: u64][step: f32][params][m][v]`, little endian.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let mut out = Vec::with_capacity(16 + 12 * self.params.len());
         out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());

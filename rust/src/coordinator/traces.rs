@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::parallel;
 use crate::data::{Dataset, Split};
 use crate::runtime::{Arg, Runtime};
 use crate::stats::ConvergenceMonitor;
@@ -28,6 +29,7 @@ pub enum Estimator {
 }
 
 impl Estimator {
+    /// Artifact entry-point name for this estimator at a given batch size.
     pub fn entry(&self, batch: usize) -> String {
         match self {
             Estimator::EmpiricalFisher => format!("ef_trace_bs{batch}"),
@@ -35,6 +37,7 @@ impl Estimator {
         }
     }
 
+    /// Display name used in reports ("EF" / "Hessian").
     pub fn name(&self) -> &'static str {
         match self {
             Estimator::EmpiricalFisher => "EF",
@@ -63,6 +66,7 @@ impl Default for TraceOptions {
 }
 
 impl TraceOptions {
+    /// Exactly `iters` iterations, no early stopping (Table-1/3 protocol).
     pub fn fixed_iters(batch: usize, iters: u64, seed: u64) -> Self {
         TraceOptions { batch, tol: 0.0, min_iters: iters, max_iters: iters, seed }
     }
@@ -89,12 +93,15 @@ pub struct TraceResult {
     pub history_total: Vec<f64>,
 }
 
+/// Drives estimator executables over a dataset's test stream and
+/// accumulates per-block trace statistics to convergence.
 pub struct TraceEngine<'a> {
     rt: &'a Runtime,
     ds: &'a dyn Dataset,
 }
 
 impl<'a> TraceEngine<'a> {
+    /// Engine over a runtime and the dataset whose test stream feeds it.
     pub fn new(rt: &'a Runtime, ds: &'a dyn Dataset) -> Self {
         TraceEngine { rt, ds }
     }
@@ -189,6 +196,44 @@ impl<'a> TraceEngine<'a> {
             norm_variance,
             history_total,
         })
+    }
+}
+
+impl TraceEngine<'_> {
+    /// Run several independent trace estimations, fanned out over `jobs`
+    /// worker threads (`coordinator::parallel`), returning results in the
+    /// order of `specs`.
+    ///
+    /// Every run's stochastic stream depends only on its own
+    /// `TraceOptions::seed`, so the numeric outputs are bit-identical to
+    /// running the specs serially — only `iter_time_s` is a wall-clock
+    /// measurement and will reflect core contention. Experiments whose
+    /// *result* is a timing (Table 1/3 speedups) should keep `jobs = 1`.
+    ///
+    /// With `jobs <= 1` the engine's own runtime (and its warm executable
+    /// cache) is reused; with more, each worker compiles its own runtime
+    /// over the same artifact root.
+    pub fn run_many(
+        &self,
+        model: &str,
+        params: &[f32],
+        specs: &[(Estimator, TraceOptions)],
+        jobs: usize,
+    ) -> Result<Vec<TraceResult>> {
+        if parallel::effective_jobs(jobs, specs.len()) <= 1 {
+            return specs.iter().map(|&(est, opt)| self.run(model, params, est, opt)).collect();
+        }
+        let root = self.rt.manifest.root.clone();
+        let ds = self.ds;
+        parallel::run_pool(
+            specs.len(),
+            jobs,
+            || Runtime::new(&root),
+            move |rt, i| {
+                let (est, opt) = specs[i];
+                TraceEngine::new(rt, ds).run(model, params, est, opt)
+            },
+        )
     }
 }
 

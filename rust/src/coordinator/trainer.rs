@@ -61,6 +61,16 @@ impl<'a> Trainer<'a> {
         Trainer { rt, ds, cursor: 0 }
     }
 
+    /// Trainer whose train-stream cursor starts at `cursor` instead of 0.
+    ///
+    /// Parallel studies give every configuration its own trainer with a
+    /// cursor derived from `(study seed, config index)` (see
+    /// `coordinator::parallel::derive_seed`), so the data each
+    /// configuration consumes is independent of sweep order and job count.
+    pub fn with_cursor(rt: &'a Runtime, ds: &'a dyn Dataset, cursor: u64) -> Self {
+        Trainer { rt, ds, cursor }
+    }
+
     pub fn runtime(&self) -> &Runtime {
         self.rt
     }

@@ -18,7 +18,11 @@ pub use synth_class::SynthClass;
 pub use synth_seg::SynthSeg;
 
 /// A supervised example stream: fills caller-provided image/label buffers.
-pub trait Dataset {
+///
+/// Implementations are immutable after construction (a dataset is a pure
+/// function of `(seed, split, index)`), so the trait requires `Send + Sync`
+/// and one dataset can feed every worker of a parallel study concurrently.
+pub trait Dataset: Send + Sync {
     /// (H, W, C) per-sample image shape.
     fn input_shape(&self) -> (usize, usize, usize);
     /// Number of classes.

@@ -5,8 +5,15 @@
 //! - L1/L2 live in python/compile (build-time only) and arrive here as AOT
 //!   HLO artifacts + manifest.
 //! - L3 is this crate: `runtime` talks PJRT, `coordinator` orchestrates the
-//!   paper's methodology, and `data`/`quant`/`stats`/`metrics`/`tensor` are
-//!   the from-scratch substrates it stands on.
+//!   paper's methodology (fanning independent work over the
+//!   `coordinator::parallel` worker pool), and
+//!   `data`/`quant`/`stats`/`metrics`/`tensor` are the from-scratch
+//!   substrates it stands on.
+//!
+//! The workspace builds hermetically: the `anyhow` and `xla` dependencies
+//! are vendored path crates under `vendor/` (the `xla` build is an
+//! API-compatible stub that reports the backend as unavailable at runtime —
+//! DESIGN.md explains how to swap in the real one).
 
 pub mod bench_util;
 pub mod coordinator;

@@ -83,7 +83,12 @@ const USAGE: &str = "fitq <command>\n\
   search     --model M [--budget-ratio R] [--samples N]\n\
   experiment <table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all> [opts]\n\
      table2/fig4: [--configs N] [--fp-epochs N] [--qat-epochs N] [--only A,B]\n\
-     table1/3:    [--iters N] [--runs N]\n";
+     table1/3:    [--iters N] [--runs N]\n\
+     table1/2/3, fig1/2/4:\n\
+                  [--jobs N]  worker threads (1 = serial, 0 = all cores);\n\
+                  results are bit-identical at every setting, but ms/iter\n\
+                  and speedup columns are wall-clock — keep --jobs 1 when\n\
+                  the timing itself is the result\n";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -268,6 +273,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 let mut o = table1::Table1Options::default();
                 o.iters = args.usize_or("iters", o.iters as usize)? as u64;
                 o.runs = args.usize_or("runs", o.runs)?;
+                o.jobs = args.usize_or("jobs", o.jobs)?;
                 table1::run(&rt, &o)?;
             }
             "table2" => {
@@ -282,15 +288,21 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 let mut o = table3::Table3Options::default();
                 o.iters = args.usize_or("iters", o.iters as usize)? as u64;
                 o.runs = args.usize_or("runs", o.runs)?;
+                o.jobs = args.usize_or("jobs", o.jobs)?;
                 if let Some(models) = args.get("models") {
                     o.models = models.split(',').map(|s| s.trim().to_string()).collect();
                 }
                 table3::run(&rt, &o)?;
             }
-            "fig1" | "fig7" => fig1::run(&rt, &fig1::Fig1Options::default())?,
+            "fig1" | "fig7" => {
+                let mut o = fig1::Fig1Options::default();
+                o.jobs = args.usize_or("jobs", o.jobs)?;
+                fig1::run(&rt, &o)?;
+            }
             "fig2" => {
                 let mut o = fig2::Fig2Options::default();
                 o.iters = args.usize_or("iters", o.iters as usize)? as u64;
+                o.jobs = args.usize_or("jobs", o.jobs)?;
                 fig2::run(&rt, &o)?;
             }
             "fig4" => {
@@ -320,5 +332,6 @@ fn study_opts(args: &Args, mut s: StudyOptions) -> Result<StudyOptions> {
     s.qat_epochs = args.usize_or("qat-epochs", s.qat_epochs)?;
     s.eval_n = args.usize_or("eval-n", s.eval_n)?;
     s.seed = args.usize_or("seed", s.seed as usize)? as u64;
+    s.jobs = args.usize_or("jobs", s.jobs)?;
     Ok(s)
 }

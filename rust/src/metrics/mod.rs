@@ -44,14 +44,17 @@ pub struct SensitivityInputs {
 }
 
 impl SensitivityInputs {
+    /// Number of quantizable weight blocks.
     pub fn n_weight_blocks(&self) -> usize {
         self.w_traces.len()
     }
 
+    /// Number of activation blocks.
     pub fn n_act_blocks(&self) -> usize {
         self.a_traces.len()
     }
 
+    /// Panic unless `cfg`'s block structure matches these inputs.
     pub fn validate(&self, cfg: &BitConfig) {
         assert_eq!(self.w_traces.len(), cfg.bits_w.len(), "weight block count");
         assert_eq!(self.a_traces.len(), cfg.bits_a.len(), "act block count");
@@ -62,6 +65,7 @@ impl SensitivityInputs {
         assert_eq!(self.bn_gamma.len(), self.w_traces.len());
     }
 
+    /// Whether any weight block carries a batch-norm scale.
     pub fn has_bn(&self) -> bool {
         self.bn_gamma.iter().any(|g| g.is_some())
     }
@@ -81,6 +85,7 @@ pub enum Metric {
 }
 
 impl Metric {
+    /// Every metric of the Table-2 zoo, in the paper's column order.
     pub const ALL: [Metric; 8] = [
         Metric::Fit,
         Metric::Qr,
@@ -92,6 +97,7 @@ impl Metric {
         Metric::Bn,
     ];
 
+    /// Column name used in reports and CSVs.
     pub fn name(&self) -> &'static str {
         match self {
             Metric::Fit => "FIT",

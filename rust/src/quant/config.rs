@@ -17,6 +17,8 @@ pub struct BitConfig {
 }
 
 impl BitConfig {
+    /// The uniform configuration: every weight and activation block at the
+    /// same precision.
     pub fn uniform(lw: usize, la: usize, bits: u32) -> Self {
         BitConfig { bits_w: vec![bits; lw], bits_a: vec![bits; la] }
     }
@@ -29,10 +31,12 @@ impl BitConfig {
         }
     }
 
+    /// Number of weight blocks this configuration covers.
     pub fn n_weight_blocks(&self) -> usize {
         self.bits_w.len()
     }
 
+    /// Number of activation blocks this configuration covers.
     pub fn n_act_blocks(&self) -> usize {
         self.bits_a.len()
     }

@@ -16,9 +16,13 @@ use anyhow::Result;
 use super::artifact::{Manifest, ModelManifest};
 use super::executable::Executable;
 
+/// One-time compilation cost accounting (separated from dispatch cost in
+/// the experiment reports).
 #[derive(Debug, Default, Clone)]
 pub struct CompileStats {
+    /// Number of entry points compiled so far.
     pub compiled: usize,
+    /// Total wall-clock spent compiling.
     pub total_time: Duration,
 }
 
@@ -47,6 +51,7 @@ impl Runtime {
         Runtime::new(super::artifact::default_artifact_root())
     }
 
+    /// Manifest entry for a model, by name.
     pub fn model(&self, name: &str) -> Result<&ModelManifest> {
         self.manifest.model(name)
     }
@@ -70,6 +75,7 @@ impl Runtime {
         Ok(exe)
     }
 
+    /// Snapshot of the compilation cost so far.
     pub fn compile_stats(&self) -> CompileStats {
         self.stats.borrow().clone()
     }

@@ -59,10 +59,12 @@ pub struct OutValue {
 }
 
 impl OutValue {
+    /// The output as an f32 slice (empty for i32 outputs).
     pub fn as_f32(&self) -> &[f32] {
         &self.f32
     }
 
+    /// First element of an f32 output (scalar outputs).
     pub fn scalar_f32(&self) -> f32 {
         self.f32[0]
     }
@@ -73,6 +75,7 @@ impl OutValue {
 pub struct Outputs(pub Vec<OutValue>);
 
 impl Outputs {
+    /// Output by manifest name.
     pub fn get(&self, name: &str) -> Result<&OutValue> {
         self.0
             .iter()
@@ -80,10 +83,12 @@ impl Outputs {
             .with_context(|| format!("no output named {name:?}"))
     }
 
+    /// Named f32 output as a slice.
     pub fn f32(&self, name: &str) -> Result<&[f32]> {
         Ok(self.get(name)?.as_f32())
     }
 
+    /// Named scalar f32 output.
     pub fn scalar(&self, name: &str) -> Result<f32> {
         Ok(self.get(name)?.scalar_f32())
     }
@@ -99,6 +104,7 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// Parse the HLO text at `hlo_path` and compile it for `client`.
     pub fn compile(client: &xla::PjRtClient, spec: EntrySpec, hlo_path: &std::path::Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(
             hlo_path.to_str().context("non-utf8 artifact path")?,

@@ -19,6 +19,8 @@ pub struct ConvergenceMonitor {
 }
 
 impl ConvergenceMonitor {
+    /// Monitor over `dim` blocks stopping at relative tolerance `tol`
+    /// (after at least `min_iters`, at most `max_iters` iterations).
     pub fn new(dim: usize, tol: f64, min_iters: u64, max_iters: u64) -> Self {
         assert!(tol > 0.0 && min_iters >= 1 && max_iters >= min_iters);
         ConvergenceMonitor { stats: VecStats::new(dim), tol, min_iters, max_iters }
@@ -31,6 +33,7 @@ impl ConvergenceMonitor {
         self.is_done()
     }
 
+    /// Whether estimation should stop now (converged or at the cap).
     pub fn is_done(&self) -> bool {
         let n = self.stats.count();
         if n < self.min_iters {
@@ -64,18 +67,22 @@ impl ConvergenceMonitor {
         })
     }
 
+    /// Iterations pushed so far.
     pub fn iterations(&self) -> u64 {
         self.stats.count()
     }
 
+    /// Per-block running means.
     pub fn means(&self) -> Vec<f64> {
         self.stats.means()
     }
 
+    /// Per-block standard errors of the running means.
     pub fn std_errors(&self) -> Vec<f64> {
         self.stats.std_errors()
     }
 
+    /// The underlying componentwise accumulator.
     pub fn stats(&self) -> &VecStats {
         &self.stats
     }

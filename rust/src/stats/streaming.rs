@@ -11,10 +11,12 @@ pub struct RunningStats {
 }
 
 impl RunningStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         RunningStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -24,10 +26,12 @@ impl RunningStats {
         self.max = self.max.max(x);
     }
 
+    /// Number of observations pushed so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 for an empty accumulator).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -42,6 +46,7 @@ impl RunningStats {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.sample_variance().sqrt()
     }
@@ -51,10 +56,12 @@ impl RunningStats {
         if self.n == 0 { f64::INFINITY } else { self.std() / (self.n as f64).sqrt() }
     }
 
+    /// Smallest observation seen (infinity for an empty accumulator).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation seen (-infinity for an empty accumulator).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -83,10 +90,12 @@ pub struct VecStats {
 }
 
 impl VecStats {
+    /// Empty accumulator over `dim` components.
     pub fn new(dim: usize) -> Self {
         VecStats { comps: vec![RunningStats::new(); dim] }
     }
 
+    /// Fold one `dim`-length observation vector in, componentwise.
     pub fn push(&mut self, xs: &[f32]) {
         assert_eq!(xs.len(), self.comps.len(), "VecStats dimension mismatch");
         for (c, &x) in self.comps.iter_mut().zip(xs) {
@@ -94,22 +103,27 @@ impl VecStats {
         }
     }
 
+    /// Number of components per observation.
     pub fn dim(&self) -> usize {
         self.comps.len()
     }
 
+    /// Number of observation vectors pushed so far.
     pub fn count(&self) -> u64 {
         self.comps.first().map_or(0, |c| c.count())
     }
 
+    /// Per-component running means.
     pub fn means(&self) -> Vec<f64> {
         self.comps.iter().map(|c| c.mean()).collect()
     }
 
+    /// Per-component standard errors of the running means.
     pub fn std_errors(&self) -> Vec<f64> {
         self.comps.iter().map(|c| c.std_error()).collect()
     }
 
+    /// Scalar accumulator of component `i`.
     pub fn component(&self, i: usize) -> &RunningStats {
         &self.comps[i]
     }

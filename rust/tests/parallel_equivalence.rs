@@ -1,0 +1,99 @@
+//! Serial-vs-parallel equivalence: the determinism contract of
+//! `coordinator::parallel` (results at `jobs = N` are bit-identical to
+//! `jobs = 1`), exercised on the pure pool and — when artifacts are present
+//! — on a small end-to-end `run_study`.
+
+use fitq::coordinator::{derive_seed, run_pool, run_study, StudyOptions};
+use fitq::runtime::Runtime;
+
+/// Equal, treating two NaNs as equal (rank correlations can be NaN when a
+/// metric is constant across the sampled configs).
+fn same(a: f64, b: f64) -> bool {
+    (a.is_nan() && b.is_nan()) || a == b
+}
+
+#[test]
+fn pool_is_bit_identical_across_job_counts() {
+    // deterministic-but-chunky work: a per-index seeded integer mix
+    let work = |_w: &mut (), i: usize| -> anyhow::Result<u64> {
+        let mut x = derive_seed(42, i as u64);
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x ^= x >> 29;
+        }
+        Ok(x)
+    };
+    let serial = run_pool(64, 1, || Ok(()), work).unwrap();
+    for jobs in [2usize, 4, 7, 0] {
+        let par = run_pool(64, jobs, || Ok(()), work).unwrap();
+        assert_eq!(serial, par, "jobs={jobs} must match the serial reference");
+    }
+}
+
+#[test]
+fn pool_init_runs_once_per_worker_without_reordering() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let inits = AtomicUsize::new(0);
+    let out = run_pool(
+        40,
+        4,
+        || {
+            inits.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        },
+        |_, i| Ok(2 * i),
+    )
+    .unwrap();
+    assert_eq!(out, (0..40).map(|i| 2 * i).collect::<Vec<_>>());
+    assert!(inits.load(Ordering::Relaxed) <= 4, "at most one init per worker");
+}
+
+#[test]
+fn run_study_identical_at_jobs_1_and_4() {
+    // end-to-end equivalence over real artifacts; skipped (not failed) on a
+    // fresh checkout, like the other PJRT integration tests.
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = Runtime::new(root).expect("runtime");
+    let mut opt = StudyOptions {
+        n_configs: 6,
+        fp_epochs: 3,
+        qat_epochs: 1,
+        eval_n: 128,
+        seed: 11,
+        ..Default::default()
+    };
+    opt.trace.max_iters = 40;
+
+    opt.jobs = 1;
+    let serial = run_study(&rt, "cnn_mnist", &opt).expect("serial study");
+    opt.jobs = 4;
+    let par = run_study(&rt, "cnn_mnist", &opt).expect("parallel study");
+
+    assert_eq!(serial.outcomes.len(), par.outcomes.len());
+    for (a, b) in serial.outcomes.iter().zip(&par.outcomes) {
+        assert_eq!(a.cfg, b.cfg, "config sampling must not depend on jobs");
+        assert!(same(a.test_score, b.test_score), "{} vs {}", a.test_score, b.test_score);
+        assert!(same(a.train_score, b.train_score), "{} vs {}", a.train_score, b.train_score);
+        for ((m1, v1), (m2, v2)) in a.metrics.iter().zip(&b.metrics) {
+            assert_eq!(m1, m2);
+            match (v1, v2) {
+                (Some(x), Some(y)) => assert!(same(*x, *y), "{m1:?}: {x} vs {y}"),
+                (None, None) => {}
+                other => panic!("{m1:?}: mismatched applicability {other:?}"),
+            }
+        }
+    }
+    // identical Spearman outputs — the acceptance check for the sweep
+    for ((m1, r1), (m2, r2)) in serial.correlations.iter().zip(&par.correlations) {
+        assert_eq!(m1, m2);
+        match (r1, r2) {
+            (Some(x), Some(y)) => assert!(same(*x, *y), "{m1:?}: rho {x} vs {y}"),
+            (None, None) => {}
+            other => panic!("{m1:?}: mismatched correlation {other:?}"),
+        }
+    }
+}

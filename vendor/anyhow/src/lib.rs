@@ -1,0 +1,203 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The fitq workspace builds hermetically (no network, no registry), so the
+//! error-context surface the codebase uses is implemented here from scratch
+//! with the same names and call-site semantics as the real crate:
+//!
+//! - `Result<T>` / `Error`: a dynamic error carrying a context chain;
+//! - `Context`: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! - `anyhow!` / `bail!`: ad-hoc error construction and early return;
+//! - `{:#}` alternate `Display` prints the full chain outermost-first,
+//!   matching how `fitq` renders fatal errors.
+//!
+//! Deliberately omitted (unused by fitq): backtraces, downcasting,
+//! `ensure!`, and `#[source]` chaining beyond message capture.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` specialized to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a chain of human-readable messages, outermost context
+/// first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, "outer: inner: root"
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context extension for `Result` and `Option`, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message to the error case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily evaluated context message to the error case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tokens:tt)*) => {
+        return Err($crate::anyhow!($($tokens)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err()
+            .context("loading runtime");
+        assert_eq!(format!("{e}"), "loading runtime");
+        assert_eq!(format!("{e:#}"), "loading runtime: reading manifest: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(format!("{e}"), "no value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let r: std::result::Result<u32, std::io::Error> = Ok(5);
+        let out = r.with_context(|| -> String { panic!("must not evaluate") });
+        assert_eq!(out.unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: usize) -> Result<()> {
+            if n > 2 {
+                bail!("too big: {n}");
+            }
+            Err(anyhow!("always {}", n))
+        }
+        assert_eq!(format!("{}", fails(7).unwrap_err()), "too big: 7");
+        assert_eq!(format!("{}", fails(1).unwrap_err()), "always 1");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(format!("{from_string}"), "plain");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path/fitq")?;
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        // the E = Error case of the blanket impl (via the reflexive From)
+        let e: Result<()> = Err(Error::msg("root"));
+        let e = e.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

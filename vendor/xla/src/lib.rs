@@ -1,0 +1,177 @@
+//! Vendored stub of the `xla` (xla-rs) PJRT API surface used by fitq.
+//!
+//! The fitq runtime layer (`fitq::runtime`) talks to XLA through exactly the
+//! types and methods declared here: a CPU PJRT client, HLO-text parsing and
+//! compilation, and literal transfer in both directions. This workspace
+//! builds hermetically with no network access, so the real `xla` crate
+//! (which downloads/links `xla_extension`) is replaced by this stub: every
+//! entry point compiles and type-checks against the real signatures, and the
+//! *first* runtime touch point — `PjRtClient::cpu()` — returns a descriptive
+//! error instead of a client.
+//!
+//! Consequences, by design:
+//! - `cargo build` / `cargo test` / `cargo doc` work with no toolchain
+//!   beyond rustc — the pure-Rust substrates (data, quant, stats, metrics,
+//!   search, parallel pool) are fully exercised;
+//! - anything that needs a live PJRT dispatch (training, trace estimation,
+//!   the experiment CLI against real artifacts) fails fast with
+//!   "XLA/PJRT backend not available"; the integration tests detect the
+//!   missing `artifacts/` directory first and skip themselves.
+//!
+//! To run against real artifacts, point the `xla` dependency of
+//! `rust/Cargo.toml` at the actual xla-rs crate; no fitq source changes are
+//! required (see DESIGN.md, "Runtime layer").
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?`-conversion into
+/// the workspace error type.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT backend not available in this build \
+         (fitq was built against the vendored `xla` stub; swap in the real \
+         xla-rs crate to dispatch — see DESIGN.md)"
+    )))
+}
+
+/// Element types of the literals fitq transfers (f32 / s32 / u32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit IEEE float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+    /// 32-bit unsigned integer.
+    U32,
+}
+
+/// A host-side literal (typed buffer + shape).
+pub struct Literal;
+
+impl Literal {
+    /// Allocate a literal of the given element type and dimensions from raw
+    /// little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _untyped_data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    /// Refill this literal's buffer in place from a typed slice.
+    pub fn copy_raw_from<T: Copy>(&mut self, _src: &[T]) -> Result<()> {
+        unavailable("Literal::copy_raw_from")
+    }
+
+    /// Destructure a tuple-shaped literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy the buffer out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// A parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO *text* file (the interchange format aot.py emits).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module as a computation.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device-resident buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal, synchronously.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; one result buffer list per
+    /// device (fitq always uses a single CPU device).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client owning devices and the compiler.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the vendored stub — this is the
+    /// single runtime gate every real dispatch path goes through.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation for this client's devices.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable_backend() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("not available"), "{msg}");
+        assert!(msg.contains("PjRtClient::cpu"), "{msg}");
+    }
+
+    #[test]
+    fn stub_types_compose() {
+        // the compile-time surface the runtime layer relies on
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0; 16])
+            .is_err());
+        // no client exists, so exercise compile via the type only
+        fn _typecheck(c: &PjRtClient, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            c.compile(comp)
+        }
+        let _ = comp;
+    }
+}
