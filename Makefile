@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench
+.PHONY: artifacts test bench bench-scoring
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -14,3 +14,8 @@ test:
 
 bench:
 	cargo bench
+
+# Scoring-engine bench (pure Rust, no artifacts); refreshes
+# BENCH_fit_scoring.json at the repo root.
+bench-scoring:
+	cargo bench --bench fit_scoring

@@ -1,0 +1,143 @@
+//! Bench: the table-driven FIT scoring engine vs the naive paths.
+//!
+//! Pure Rust — runs on any checkout, no artifacts or PJRT needed. Three
+//! measurements on a production-shaped synthetic problem (48 weight + 16
+//! activation blocks, the paper's {8,6,4,3} precision set):
+//!
+//! 1. single-config scoring: naive `fit()` vs `FitTable::score`
+//!    (acceptance target: >= 10x);
+//! 2. batch throughput: `score_batch` configs/sec at 1k / 100k / 1M
+//!    packed configs, serial and fanned over the worker pool;
+//! 3. budgeted allocation: naive clone-and-rescore greedy vs the heap
+//!    walk on a 64-block instance (equivalence asserted, then timed).
+//!
+//! Results are written to `BENCH_fit_scoring.json` at the repo root —
+//! the perf-trajectory record `make bench-scoring` refreshes.
+
+use fitq::bench_util::{bench, black_box};
+use fitq::coordinator::{greedy_allocate, greedy_allocate_naive};
+use fitq::metrics::{fit, FitTable, PackedConfig, SensitivityInputs};
+use fitq::quant::{model_bits, BitConfig, PRECISIONS};
+use fitq::tensor::Pcg32;
+
+fn synth(lw: usize, la: usize, seed: u64) -> (SensitivityInputs, Vec<usize>) {
+    let mut r = Pcg32::new(seed, 0xbe9c);
+    let w_traces: Vec<f64> = (0..lw).map(|_| r.uniform_in(0.01, 25.0) as f64).collect();
+    let w_hi: Vec<f64> = (0..lw).map(|_| r.uniform_in(0.05, 2.0) as f64).collect();
+    let w_lo: Vec<f64> = w_hi.iter().map(|&x| -x).collect();
+    let a_traces: Vec<f64> = (0..la).map(|_| r.uniform_in(0.01, 8.0) as f64).collect();
+    let a_hi: Vec<f64> = (0..la).map(|_| r.uniform_in(0.5, 8.0) as f64).collect();
+    let sizes: Vec<usize> = (0..lw).map(|_| 256 + r.below(65_536) as usize).collect();
+    let s = SensitivityInputs {
+        bn_gamma: vec![None; lw],
+        a_lo: vec![0.0; la],
+        w_traces,
+        a_traces,
+        w_lo,
+        w_hi,
+        a_hi,
+    };
+    (s, sizes)
+}
+
+fn main() {
+    const LW: usize = 48;
+    const LA: usize = 16;
+    const N_UNQ: usize = 64;
+    let (s, sizes) = synth(LW, LA, 11);
+    let table = FitTable::new(&s, &sizes, N_UNQ, &PRECISIONS);
+
+    // -- 1. single-config scoring (amortized over 1000 configs/iter) ------
+    let mut rng = Pcg32::new(7, 0x5c0e);
+    let k = 1000usize;
+    let cfgs: Vec<BitConfig> =
+        (0..k).map(|_| BitConfig::random(LW, LA, &PRECISIONS, &mut rng)).collect();
+    let packed: Vec<PackedConfig> = cfgs.iter().map(|c| table.pack(c)).collect();
+    // sanity: the table must agree with the naive metric bit-for-bit
+    for (c, p) in cfgs.iter().zip(&packed) {
+        assert_eq!(table.score(p).to_bits(), fit(&s, c).to_bits());
+    }
+
+    println!("# fit_scoring — table engine vs naive ({LW}w + {LA}a blocks)\n");
+    let r_naive = bench("naive fit() x1000", 3, 30, || {
+        let mut acc = 0.0;
+        for c in &cfgs {
+            acc += fit(&s, c);
+        }
+        black_box(acc);
+    });
+    let r_table = bench("FitTable::score x1000", 3, 30, || {
+        let mut acc = 0.0;
+        for p in &packed {
+            acc += table.score(p);
+        }
+        black_box(acc);
+    });
+    let single_speedup = r_naive.mean_ns / r_table.mean_ns;
+    println!("  -> single-config speedup: {single_speedup:.1}x\n");
+
+    // -- 2. batch throughput ----------------------------------------------
+    let mut batch_rows = Vec::new();
+    for &n in &[1_000usize, 100_000, 1_000_000] {
+        let mut brng = Pcg32::new(n as u64, 0xba7c);
+        let bp: Vec<PackedConfig> = (0..n)
+            .map(|_| table.pack(&BitConfig::random(LW, LA, &PRECISIONS, &mut brng)))
+            .collect();
+        for &jobs in &[1usize, 0] {
+            let iters = if n >= 1_000_000 { 3 } else { 10 };
+            let r = bench(&format!("score_batch n={n} jobs={jobs}"), 1, iters, || {
+                black_box(table.score_batch(&bp, jobs));
+            });
+            let cps = n as f64 * 1e9 / r.mean_ns;
+            batch_rows.push((n, jobs, cps));
+        }
+    }
+    println!();
+
+    // -- 3. greedy allocation: naive rescan vs heap walk -------------------
+    let (gs, gsizes) = synth(64, 16, 23);
+    let gfull = model_bits(&gsizes, N_UNQ, &BitConfig::uniform(64, 16, 8));
+    let budget = gfull * 45 / 100;
+    let a = greedy_allocate_naive(&gs, &gsizes, N_UNQ, &PRECISIONS, budget).unwrap();
+    let b = greedy_allocate(&gs, &gsizes, N_UNQ, &PRECISIONS, budget).unwrap();
+    assert_eq!(a.cfg, b.cfg, "heap greedy must match the naive reference");
+    assert_eq!(a.fit.to_bits(), b.fit.to_bits());
+    let r_gnaive = bench("greedy naive (64 blocks, 45% budget)", 1, 10, || {
+        black_box(greedy_allocate_naive(&gs, &gsizes, N_UNQ, &PRECISIONS, budget));
+    });
+    let r_gheap = bench("greedy heap  (64 blocks, 45% budget)", 1, 10, || {
+        black_box(greedy_allocate(&gs, &gsizes, N_UNQ, &PRECISIONS, budget));
+    });
+    let greedy_speedup = r_gnaive.mean_ns / r_gheap.mean_ns;
+    println!("  -> greedy speedup: {greedy_speedup:.1}x");
+
+    // -- record the trajectory point ---------------------------------------
+    let mut batch_json = String::new();
+    for (i, (n, jobs, cps)) in batch_rows.iter().enumerate() {
+        if i > 0 {
+            batch_json.push_str(",\n    ");
+        }
+        batch_json.push_str(&format!(
+            "{{\"n\": {n}, \"jobs\": {jobs}, \"configs_per_sec\": {cps:.1}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fit_scoring\",\n  \"status\": \"measured\",\n  \
+         \"shape\": {{\"weight_blocks\": {LW}, \"act_blocks\": {LA}, \
+         \"precisions\": [8, 6, 4, 3]}},\n  \
+         \"single\": {{\"naive_ns_per_config\": {:.1}, \"table_ns_per_config\": {:.1}, \
+         \"speedup\": {:.2}}},\n  \
+         \"batch\": [\n    {batch_json}\n  ],\n  \
+         \"greedy\": {{\"blocks\": 64, \"naive_ns\": {:.0}, \"heap_ns\": {:.0}, \
+         \"speedup\": {:.2}}}\n}}\n",
+        r_naive.mean_ns / k as f64,
+        r_table.mean_ns / k as f64,
+        single_speedup,
+        r_gnaive.mean_ns,
+        r_gheap.mean_ns,
+        greedy_speedup,
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fit_scoring.json");
+    std::fs::write(path, &json).expect("write BENCH_fit_scoring.json");
+    println!("\nwrote {path}");
+}

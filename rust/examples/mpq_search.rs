@@ -5,15 +5,19 @@
 //!
 //! Usage: cargo run --release --example mpq_search [model] [samples]
 
-use fitq::coordinator::{dataset_for, exact_allocate, gather, greedy_allocate, pareto_front, score, TraceOptions, Trainer};
 use fitq::coordinator::experiments::get_trained;
+use fitq::coordinator::{
+    dataset_for, exact_allocate_table, gather, greedy_allocate_table, pareto_front_scores,
+    TraceOptions, Trainer,
+};
 use fitq::data::EvalSet;
+use fitq::metrics::{FitTable, PackedConfig};
 use fitq::quant::{BitConfigSampler, PRECISIONS};
 use fitq::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "cnn_cifar".into());
-    let samples: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(3000);
+    let samples: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(100_000);
     let rt = Runtime::from_env()?;
     let mm = rt.model(&model)?.clone();
 
@@ -31,31 +35,40 @@ fn main() -> anyhow::Result<()> {
         "{model}: config space |B|^(Lw+La) = {space:.2e}; sampling {samples} configs"
     );
 
+    // the scoring table is built once; the sweep and both allocators
+    // gather from it (see metrics::FitTable)
+    let table = FitTable::new(&sens.inputs, &sizes, n_unq, &PRECISIONS);
     let mut sampler =
         BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, 42);
-    let pts: Vec<_> = sampler
-        .take(samples)
-        .into_iter()
-        .map(|c| score(&sens.inputs, &sizes, n_unq, c))
-        .collect();
-    let front = pareto_front(&pts);
-    println!("Pareto front ({} points of {}):", front.len(), pts.len());
+    let configs = sampler.take(samples);
+    let packed: Vec<PackedConfig> = configs.iter().map(|c| table.pack(c)).collect();
+    let t0 = std::time::Instant::now();
+    let scores = table.score_batch(&packed, 0);
+    let dt = t0.elapsed().as_secs_f64();
+    let front = pareto_front_scores(&scores);
+    println!(
+        "Pareto front ({} points of {}, scored at {:.3e} configs/s):",
+        front.len(),
+        scores.len(),
+        scores.len() as f64 / dt.max(1e-9)
+    );
     println!("{:>10} {:>8} {:>12}  config", "bits", "comp", "FIT");
     for &i in &front {
+        let (fit, size_bits) = scores[i];
         println!(
             "{:>10} {:>7.2}x {:>12.6}  {}",
-            pts[i].size_bits,
-            fp32_bits as f64 / pts[i].size_bits as f64,
-            pts[i].fit,
-            pts[i].cfg.label()
+            size_bits,
+            fp32_bits as f64 / size_bits as f64,
+            fit,
+            configs[i].label()
         );
     }
 
     println!("\ngreedy allocation vs compression target:");
     for pct in [40u64, 25, 20, 16, 12, 10] {
         let budget = fp32_bits * pct / 100;
-        let g = greedy_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget);
-        let e = exact_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget);
+        let g = greedy_allocate_table(&table, budget);
+        let e = exact_allocate_table(&table, budget);
         match (g, e) {
             (Some(g), Some(e)) => println!(
                 "  {pct:>3}% budget -> greedy FIT {:.6} | exact FIT {:.6} ({})  {}",
@@ -64,7 +77,10 @@ fn main() -> anyhow::Result<()> {
                 if (g.fit - e.fit).abs() < 1e-12 { "greedy optimal" } else { "exact wins" },
                 e.cfg.label()
             ),
-            _ => println!("  {pct:>3}% budget -> infeasible (below 3-bit floor)"),
+            _ => println!(
+                "  {pct:>3}% budget -> no allocation (below the 3-bit floor, \
+                 or non-finite sensitivity inputs)"
+            ),
         }
     }
     Ok(())

@@ -11,17 +11,24 @@
 //!
 //! decomposes per block (FIT and size are both separable sums), so a
 //! branch-and-bound over per-block precision choices with a lower-bound
-//! prune finds the exact optimum quickly. Activation bits do not affect
-//! stored size; their FIT terms are independent, so each activation block
-//! takes its highest precision (optimal for any pure-size budget).
+//! prune finds the exact optimum quickly. The per-block candidate terms
+//! come straight from the shared [`FitTable`] — the same table the greedy
+//! and Pareto paths score against — and the final configuration's FIT
+//! (including the activation terms) is the table's gather-sum, bit-identical
+//! to the naive `metrics::fit`. Activation bits do not affect stored size;
+//! their FIT terms are independent, so each activation block takes its
+//! highest precision (optimal for any pure-size budget).
 
-use crate::metrics::SensitivityInputs;
-use crate::quant::{model_bits, noise_power, BitConfig};
+use crate::metrics::{FitTable, SensitivityInputs};
+use crate::quant::BitConfig;
 
 use super::search::ScoredConfig;
 
 /// Exact minimum-FIT configuration under a weight-storage budget (bits).
-/// Returns None when even all-minimum-precision misses the budget.
+/// Returns None when even all-minimum-precision misses the budget — or
+/// when a non-finite trace poisons the fit lower bound (a NaN keeps every
+/// leaf from beating the `f64::INFINITY` incumbent), in which case the
+/// sensitivity inputs, not the budget, are the thing to debug.
 pub fn exact_allocate(
     s: &SensitivityInputs,
     block_sizes: &[usize],
@@ -29,51 +36,60 @@ pub fn exact_allocate(
     precisions: &[u32],
     budget_bits: u64,
 ) -> Option<ScoredConfig> {
-    let lw = s.n_weight_blocks();
-    let la = s.n_act_blocks();
-    assert_eq!(block_sizes.len(), lw);
-    let mut prec = precisions.to_vec();
-    prec.sort_unstable();
-    let (min_p, max_p) = (prec[0], *prec.last().unwrap());
+    let table = FitTable::new(s, block_sizes, n_unq, precisions);
+    exact_allocate_table(&table, budget_bits)
+}
 
-    let base_bits = n_unq as u64 * 32;
+/// [`exact_allocate`] over a prebuilt (shared) [`FitTable`].
+pub fn exact_allocate_table(table: &FitTable, budget_bits: u64) -> Option<ScoredConfig> {
+    let lw = table.n_weight_blocks();
+    let la = table.n_act_blocks();
+    let precs = table.precisions();
+
+    // candidate precisions in ascending order, as indices into the
+    // table's precision set
+    let mut asc: Vec<usize> = (0..precs.len()).collect();
+    asc.sort_by(|&a, &b| precs[a].cmp(&precs[b]));
+    let (min_idx, max_idx) = (asc[0], *asc.last().unwrap());
+
     let floor: u64 =
-        base_bits + block_sizes.iter().map(|&n| n as u64 * min_p as u64).sum::<u64>();
+        table.base_bits() + (0..lw).map(|l| table.w_size_bits(l, min_idx)).sum::<u64>();
     if floor > budget_bits {
         return None;
     }
-
-    // per-block candidate (cost = FIT contribution, size) per precision
-    let cand: Vec<Vec<(f64, u64, u32)>> = (0..lw)
-        .map(|l| {
-            prec.iter()
-                .map(|&b| {
-                    let fitc = s.w_traces[l] * noise_power(s.w_lo[l], s.w_hi[l], b as f64);
-                    (fitc, block_sizes[l] as u64 * b as u64, b)
-                })
-                .collect()
-        })
-        .collect();
 
     // lower bounds for pruning: best possible remaining fit / smallest
     // possible remaining size from block l onward.
     let mut min_fit_suffix = vec![0.0f64; lw + 1];
     let mut min_size_suffix = vec![0u64; lw + 1];
     for l in (0..lw).rev() {
-        let best_fit = cand[l].iter().map(|c| c.0).fold(f64::INFINITY, f64::min);
-        let best_size = cand[l].iter().map(|c| c.1).min().unwrap();
+        let best_fit = asc.iter().map(|&p| table.w_term(l, p)).fold(f64::INFINITY, f64::min);
+        let best_size = asc.iter().map(|&p| table.w_size_bits(l, p)).min().unwrap();
         min_fit_suffix[l] = min_fit_suffix[l + 1] + best_fit;
         min_size_suffix[l] = min_size_suffix[l + 1] + best_size;
     }
 
+    // per-block visit order: lower-fit (higher precision) choices first so
+    // the incumbent tightens quickly. The order is branch-independent, so
+    // it is hoisted out of the recursion (the naive path re-sorted at
+    // every node); total_cmp keeps a NaN trace from aborting the study.
+    let visit: Vec<Vec<usize>> = (0..lw)
+        .map(|l| {
+            let mut o = asc.clone();
+            o.sort_by(|&a, &b| table.w_term(l, a).total_cmp(&table.w_term(l, b)));
+            o
+        })
+        .collect();
+
     struct Search<'a> {
-        cand: &'a [Vec<(f64, u64, u32)>],
+        table: &'a FitTable,
+        visit: &'a [Vec<usize>],
         min_fit_suffix: &'a [f64],
         min_size_suffix: &'a [u64],
         budget_for_blocks: u64,
         best: f64,
-        best_bits: Vec<u32>,
-        cur: Vec<u32>,
+        best_prec: Vec<usize>,
+        cur: Vec<usize>,
     }
 
     impl Search<'_> {
@@ -84,42 +100,44 @@ pub fn exact_allocate(
             if size_acc + self.min_size_suffix[l] > self.budget_for_blocks {
                 return; // cannot satisfy budget
             }
-            if l == self.cand.len() {
+            if l == self.visit.len() {
                 self.best = fit_acc;
-                self.best_bits = self.cur.clone();
+                self.best_prec = self.cur.clone();
                 return;
             }
-            // visit lower-fit (higher precision) choices first so the
-            // incumbent tightens quickly
-            let mut order: Vec<usize> = (0..self.cand[l].len()).collect();
-            order.sort_by(|&a, &b| {
-                self.cand[l][a].0.partial_cmp(&self.cand[l][b].0).unwrap()
-            });
-            for i in order {
-                let (f, sz, b) = self.cand[l][i];
-                self.cur.push(b);
-                self.go(l + 1, fit_acc + f, size_acc + sz);
+            let visit = self.visit;
+            for &p in &visit[l] {
+                self.cur.push(p);
+                self.go(
+                    l + 1,
+                    fit_acc + self.table.w_term(l, p),
+                    size_acc + self.table.w_size_bits(l, p),
+                );
                 self.cur.pop();
             }
         }
     }
 
     let mut search = Search {
-        cand: &cand,
+        table,
+        visit: &visit,
         min_fit_suffix: &min_fit_suffix,
         min_size_suffix: &min_size_suffix,
-        budget_for_blocks: budget_bits.saturating_sub(base_bits),
+        budget_for_blocks: budget_bits.saturating_sub(table.base_bits()),
         best: f64::INFINITY,
-        best_bits: Vec::new(),
+        best_prec: Vec::new(),
         cur: Vec::with_capacity(lw),
     };
     search.go(0, 0.0, 0);
-    if search.best_bits.is_empty() {
+    if search.best_prec.is_empty() {
         return None;
     }
-    let cfg = BitConfig { bits_w: search.best_bits, bits_a: vec![max_p; la] };
-    let size_bits = model_bits(block_sizes, n_unq, &cfg);
-    Some(ScoredConfig { fit: crate::metrics::fit(s, &cfg), size_bits, cfg })
+    let cfg = BitConfig {
+        bits_w: search.best_prec.iter().map(|&p| precs[p]).collect(),
+        bits_a: vec![precs[max_idx]; la],
+    };
+    let packed = table.pack(&cfg);
+    Some(ScoredConfig { fit: table.score(&packed), size_bits: table.size_bits(&packed), cfg })
 }
 
 #[cfg(test)]
@@ -127,7 +145,7 @@ mod tests {
     use super::*;
     use crate::coordinator::search::greedy_allocate;
     use crate::metrics::test_inputs;
-    use crate::quant::PRECISIONS;
+    use crate::quant::{model_bits, PRECISIONS};
 
     fn setup() -> (SensitivityInputs, Vec<usize>) {
         (test_inputs(), vec![100, 400, 50])
@@ -195,6 +213,33 @@ mod tests {
         let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
         let exact = exact_allocate(&s, &sizes, 10, &PRECISIONS, full).unwrap();
         assert_eq!(exact.cfg.bits_w, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn nan_trace_does_not_panic() {
+        // the old per-node partial_cmp().unwrap() ordering could abort on
+        // a NaN trace; total_cmp must rank it (last) instead. The NaN also
+        // poisons the fit lower bound, so no config can beat the f64::min
+        // incumbent — the allocator reports infeasible rather than panics.
+        let (mut s, sizes) = setup();
+        s.w_traces[1] = f64::NAN;
+        let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
+        assert!(exact_allocate(&s, &sizes, 10, &PRECISIONS, full * 60 / 100).is_none());
+    }
+
+    #[test]
+    fn table_reuse_matches_fresh_table() {
+        let (s, sizes) = setup();
+        let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
+        let table = FitTable::new(&s, &sizes, 10, &PRECISIONS);
+        for num in [95u64, 60, 45] {
+            let budget = full * num / 100;
+            let a = exact_allocate(&s, &sizes, 10, &PRECISIONS, budget).unwrap();
+            let b = exact_allocate_table(&table, budget).unwrap();
+            assert_eq!(a.cfg, b.cfg);
+            assert_eq!(a.fit.to_bits(), b.fit.to_bits());
+            assert_eq!(a.size_bits, b.size_bits);
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ use super::state::ModelState;
 use super::trainer::{dataset_for, Trainer};
 use super::traces::TraceOptions;
 use crate::data::{Dataset, EvalSet};
-use crate::metrics::Metric;
+use crate::metrics::{FitTable, Metric};
 use crate::quant::{BitConfig, BitConfigSampler, PRECISIONS};
 use crate::runtime::Runtime;
 use crate::stats::spearman;
@@ -121,8 +121,11 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
     let fp_losses = trainer.train(&mut fp, opt.fp_epochs)?;
     let fp_eval = trainer.evaluate(&fp, &ev)?;
 
-    // 2. sensitivity inputs, once
+    // 2. sensitivity inputs, once — plus the per-study scoring table:
+    // every FIT evaluation in the sweep is a flat gather over it
+    // (bit-identical to the naive metric; see metrics::FitTable)
     let sens = gather(&trainer, ds.as_ref(), &fp, &ev, opt.trace)?;
+    let ftab = FitTable::new(&sens.inputs, &mm.block_sizes(), mm.n_unquantized(), &PRECISIONS);
 
     // 3-4. config sweep — distinct configs drawn serially (the sampler is
     // order-dependent), then trained/evaluated independently per index.
@@ -136,7 +139,9 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
     let outcomes = if parallel::effective_jobs(opt.jobs, configs.len()) <= 1 {
         let mut out = Vec::with_capacity(configs.len());
         for (i, cfg) in configs.iter().enumerate() {
-            out.push(evaluate_config(rt, ds.as_ref(), &fp, &sens, &ev, &ev_train, cfg, opt, i)?);
+            out.push(evaluate_config(
+                rt, ds.as_ref(), &fp, &sens, &ftab, &ev, &ev_train, cfg, opt, i,
+            )?);
             if (i + 1) % 20 == 0 {
                 eprintln!("  [{model}] config {}/{}", i + 1, configs.len());
             }
@@ -154,7 +159,9 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
             opt.jobs,
             || Runtime::new(&root),
             |wrt, i| {
-                evaluate_config(wrt, ds.as_ref(), &fp, &sens, &ev, &ev_train, &configs[i], opt, i)
+                evaluate_config(
+                    wrt, ds.as_ref(), &fp, &sens, &ftab, &ev, &ev_train, &configs[i], opt, i,
+                )
             },
         )?
     };
@@ -199,14 +206,28 @@ fn evaluate_config(
     ds: &dyn Dataset,
     fp: &ModelState,
     sens: &SensitivityReport,
+    ftab: &FitTable,
     ev: &EvalSet,
     ev_train: &EvalSet,
     cfg: &BitConfig,
     opt: &StudyOptions,
     index: usize,
 ) -> Result<ConfigOutcome> {
-    let metrics: Vec<_> =
-        Metric::ALL.iter().map(|m| (*m, m.eval(&sens.inputs, cfg))).collect();
+    // FIT and its _W/_A ablations gather from the shared study table;
+    // the rest of the zoo stays on the (cheap) naive path
+    let packed = ftab.pack(cfg);
+    let metrics: Vec<_> = Metric::ALL
+        .iter()
+        .map(|m| {
+            let v = match m {
+                Metric::Fit => Some(ftab.score(&packed)),
+                Metric::FitW => Some(ftab.score_w(&packed)),
+                Metric::FitA => Some(ftab.score_a(&packed)),
+                _ => m.eval(&sens.inputs, cfg),
+            };
+            (*m, v)
+        })
+        .collect();
     // QAT fine-tune from the FP checkpoint (fresh optimizer, own stream)
     let mut trainer = Trainer::with_cursor(rt, ds, derive_seed(opt.seed, index as u64));
     let mut st = fp.clone();

@@ -8,7 +8,8 @@
 //! - `evaluator`: the train-hundreds-of-configs rank-correlation pipeline.
 //! - `parallel`: the scoped-thread worker pool the evaluator and trace
 //!   engine fan out on, plus the deterministic per-job seed derivation.
-//! - `search`: Pareto front + greedy budgeted bit allocation on top of FIT.
+//! - `search` / `allocate`: Pareto front + greedy and exact budgeted bit
+//!   allocation, all table-driven over the shared `metrics::FitTable`.
 //! - `experiments`: one module per paper table/figure.
 //! - `report`: CSV/markdown emission under results/.
 
@@ -23,10 +24,13 @@ pub mod state;
 pub mod traces;
 pub mod trainer;
 
-pub use allocate::exact_allocate;
+pub use allocate::{exact_allocate, exact_allocate_table};
 pub use evaluator::{run_study, StudyOptions, StudyResult};
 pub use parallel::{derive_seed, run_pool};
-pub use search::{greedy_allocate, pareto_front, score, ScoredConfig};
+pub use search::{
+    greedy_allocate, greedy_allocate_naive, greedy_allocate_table, pareto_front,
+    pareto_front_scores, score, ScoredConfig,
+};
 pub use sensitivity::{gather, SensitivityReport};
 pub use state::ModelState;
 pub use traces::{relative_speedup, Estimator, TraceEngine, TraceOptions, TraceResult};

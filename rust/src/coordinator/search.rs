@@ -3,15 +3,25 @@
 //! FIT gives every candidate configuration a scalar sensitivity score
 //! without training it; combined with the size model this yields:
 //!
-//! - `pareto_front`: the size-vs-FIT front from a random sample of the
-//!   exponential configuration space (the paper's "Pareto front ... used
-//!   to quickly determine the best MPQ configuration for a given set of
-//!   constraints").
+//! - `pareto_front` / `pareto_front_scores`: the size-vs-FIT front from a
+//!   random sample of the exponential configuration space (the paper's
+//!   "Pareto front ... used to quickly determine the best MPQ configuration
+//!   for a given set of constraints").
 //! - `greedy_allocate`: budgeted bit allocation — start everything at the
 //!   highest precision and repeatedly take the cheapest FIT-per-bit-saved
 //!   step until the size budget is met.
+//!
+//! Both are table-driven: FIT and model size are separable per-block sums,
+//! so [`FitTable`] precomputes every per-block × per-precision contribution
+//! once and each step or configuration score is a flat gather (see
+//! `metrics/table.rs`). The naive clone-and-rescore greedy is retained as
+//! [`greedy_allocate_naive`] — the reference the equivalence tests and
+//! `benches/fit_scoring.rs` compare against.
 
-use crate::metrics::{fit, SensitivityInputs};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use crate::metrics::{fit, FitTable, SensitivityInputs};
 use crate::quant::{model_bits, BitConfig};
 
 /// One scored configuration.
@@ -29,31 +39,198 @@ pub fn score(s: &SensitivityInputs, block_sizes: &[usize], n_unq: usize, cfg: Bi
 }
 
 /// Indices of the non-dominated points (minimize both size and FIT).
-/// O(n log n): sort by size, sweep for strictly improving FIT.
 pub fn pareto_front(points: &[ScoredConfig]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
+    let pairs: Vec<(f64, u64)> = points.iter().map(|p| (p.fit, p.size_bits)).collect();
+    pareto_front_scores(&pairs)
+}
+
+/// Pareto front over raw `(fit, size_bits)` pairs — the form
+/// [`FitTable::score_batch`] streams out, so million-config sweeps never
+/// materialize `ScoredConfig`s. O(n log n): sort by size, sweep for
+/// strictly improving FIT. NaN fits order last (`total_cmp`) and never
+/// enter the front, so a NaN trace degrades the ranking instead of
+/// aborting the study.
+pub fn pareto_front_scores(scores: &[(f64, u64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
     idx.sort_by(|&a, &b| {
-        points[a]
-            .size_bits
-            .cmp(&points[b].size_bits)
-            .then(points[a].fit.partial_cmp(&points[b].fit).unwrap())
+        scores[a].1.cmp(&scores[b].1).then(scores[a].0.total_cmp(&scores[b].0))
     });
     let mut front = Vec::new();
     let mut best_fit = f64::INFINITY;
     for &i in &idx {
-        if points[i].fit < best_fit {
+        if scores[i].0 < best_fit {
             front.push(i);
-            best_fit = points[i].fit;
+            best_fit = scores[i].0;
         }
     }
     front
 }
 
+/// One precision-lowering step of the heap greedy: `block` moves down to
+/// `to_level` on the descending-precision ladder. Ordered by
+/// `(rate, weights-before-activations, block index)` via `total_cmp`,
+/// which reproduces the naive scan's first-strict-minimum tie-break; NaN
+/// rates order last, so a NaN trace starves that block instead of
+/// poisoning the comparison.
+#[derive(Debug, Clone, Copy)]
+struct Step {
+    rate: f64,
+    is_act: bool,
+    block: usize,
+    to_level: usize,
+    d_bits: u64,
+}
+
+impl PartialEq for Step {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Step {}
+
+impl PartialOrd for Step {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Step {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.rate
+            .total_cmp(&other.rate)
+            .then(self.is_act.cmp(&other.is_act))
+            .then(self.block.cmp(&other.block))
+    }
+}
+
 /// Greedy budgeted allocation: all blocks start at `precisions.max()`;
-/// each step lowers the precision of the block whose next step costs the
-/// least FIT increase per bit of storage saved, until `budget_bits` is
-/// met. Returns None if even the all-minimum config misses the budget.
+/// each step lowers the precision of the block whose next step is
+/// cheapest, until `budget_bits` is met. Returns None if even the
+/// all-minimum config misses the budget.
+///
+/// # Step ranking units
+///
+/// Weight steps are ranked by `Δfit / Δbits` — FIT increase per bit of
+/// storage saved, with `Δbits = (b_cur - b_next) · block_size`. Activation
+/// steps save no *stored* bits, so their rank key is the raw `Δfit` of the
+/// step, compared directly against the weight steps' per-bit rates. The
+/// pinned consequences (see `activation_steps_rank_by_raw_dfit_pinned`):
+/// a high-trace activation block's raw Δfit exceeds every weight rate, so
+/// on a pure-size budget it stays at max precision; a near-zero-trace
+/// activation block ranks *below* every weight rate and is ground down
+/// first, even though that frees no storage. Ties break in scan order:
+/// weight blocks before activation blocks, lower index first.
+///
+/// # Complexity
+///
+/// Builds a [`FitTable`] (O(L·P)), then walks a binary heap holding one
+/// candidate step per block: O(L + S log L) for S executed steps, with
+/// `model_bits` tracked incrementally — vs the naive reference's
+/// O(L²·P) full rescore per step ([`greedy_allocate_naive`]).
 pub fn greedy_allocate(
+    s: &SensitivityInputs,
+    block_sizes: &[usize],
+    n_unq: usize,
+    precisions: &[u32],
+    budget_bits: u64,
+) -> Option<ScoredConfig> {
+    let table = FitTable::new(s, block_sizes, n_unq, precisions);
+    greedy_allocate_table(&table, budget_bits)
+}
+
+/// [`greedy_allocate`] over a prebuilt (shared) [`FitTable`].
+pub fn greedy_allocate_table(table: &FitTable, budget_bits: u64) -> Option<ScoredConfig> {
+    let precs = table.precisions();
+    // the precision ladder: distinct precisions, descending, as indices
+    // into the table's precision set
+    let mut ladder: Vec<usize> = (0..precs.len()).collect();
+    ladder.sort_by(|&a, &b| precs[b].cmp(&precs[a]));
+    ladder.dedup_by(|a, b| precs[*a] == precs[*b]);
+    let min_level = ladder.len() - 1;
+    let lw = table.n_weight_blocks();
+    let la = table.n_act_blocks();
+
+    let floor: u64 = table.base_bits()
+        + (0..lw).map(|l| table.w_size_bits(l, ladder[min_level])).sum::<u64>();
+    if floor > budget_bits {
+        return None;
+    }
+
+    let w_step = |l: usize, from: usize| -> Option<Step> {
+        let to = from + 1;
+        if to > min_level {
+            return None;
+        }
+        let d_fit = table.w_term(l, ladder[to]) - table.w_term(l, ladder[from]);
+        let d_bits = table.w_size_bits(l, ladder[from]) - table.w_size_bits(l, ladder[to]);
+        Some(Step { rate: d_fit / d_bits as f64, is_act: false, block: l, to_level: to, d_bits })
+    };
+    let a_step = |l: usize, from: usize| -> Option<Step> {
+        let to = from + 1;
+        if to > min_level {
+            return None;
+        }
+        let d_fit = table.a_term(l, ladder[to]) - table.a_term(l, ladder[from]);
+        Some(Step { rate: d_fit, is_act: true, block: l, to_level: to, d_bits: 0 })
+    };
+
+    // one live candidate step per block, keyed by (rate, is_act, block)
+    let mut heap: BinaryHeap<Reverse<Step>> = BinaryHeap::with_capacity(lw + la);
+    for l in 0..lw {
+        if let Some(st) = w_step(l, 0) {
+            heap.push(Reverse(st));
+        }
+    }
+    for l in 0..la {
+        if let Some(st) = a_step(l, 0) {
+            heap.push(Reverse(st));
+        }
+    }
+
+    let mut w_level = vec![0usize; lw];
+    let mut a_level = vec![0usize; la];
+    let mut bits_now: u64 =
+        table.base_bits() + (0..lw).map(|l| table.w_size_bits(l, ladder[0])).sum::<u64>();
+    while bits_now > budget_bits {
+        let Some(Reverse(st)) = heap.pop() else { break };
+        if st.is_act {
+            a_level[st.block] = st.to_level;
+            if let Some(next) = a_step(st.block, st.to_level) {
+                heap.push(Reverse(next));
+            }
+        } else {
+            w_level[st.block] = st.to_level;
+            bits_now -= st.d_bits;
+            if let Some(next) = w_step(st.block, st.to_level) {
+                heap.push(Reverse(next));
+            }
+        }
+    }
+
+    let cfg = BitConfig {
+        bits_w: w_level.iter().map(|&k| precs[ladder[k]]).collect(),
+        bits_a: a_level.iter().map(|&k| precs[ladder[k]]).collect(),
+    };
+    let packed = table.pack(&cfg);
+    debug_assert_eq!(table.size_bits(&packed), bits_now);
+    Some(ScoredConfig { fit: table.score(&packed), size_bits: bits_now, cfg })
+}
+
+/// Reference implementation of [`greedy_allocate`]: clone the whole config
+/// and rescore full FIT for every candidate step — O(L²·P) per budget
+/// step. Retained (not deprecated) as the ground truth the equivalence
+/// tests and the old-vs-new benchmark compare the heap walk against; the
+/// two produce identical configurations and bit-identical scores on every
+/// seeded equivalence instance (`tests/fit_table_equivalence.rs`). One
+/// caveat keeps that claim scoped to *seeded instances* rather than
+/// universal: this path ranks a step by the full-sum difference
+/// `fit(new) - fit(cur)` while the heap ranks by the exact per-term delta,
+/// so two steps whose true rates are closer than this path's summation
+/// rounding (~1 ULP of the total) could in principle be ordered
+/// differently — both outcomes equally valid greedy choices. Exact ties
+/// (e.g. duplicate blocks) break identically in both paths.
+pub fn greedy_allocate_naive(
     s: &SensitivityInputs,
     block_sizes: &[usize],
     n_unq: usize,
@@ -89,7 +266,7 @@ pub fn greedy_allocate(
                 let d_fit = fit(s, &c) - cur_fit;
                 let d_bits = (cfg.bits_w[l] - nb) as u64 * block_sizes[l] as u64;
                 let rate = d_fit / d_bits as f64;
-                if best.map_or(true, |(r, ..)| rate < r) {
+                if best.is_none_or(|(r, ..)| rate < r) {
                     best = Some((rate, true, l, nb));
                 }
             }
@@ -99,11 +276,12 @@ pub fn greedy_allocate(
                 let mut c = cfg.clone();
                 c.bits_a[l] = nb;
                 let d_fit = fit(s, &c) - cur_fit;
-                // activations don't change stored model size; treat one
-                // block-step as one "bit" so they still get lowered last
-                // on pure-size budgets.
+                // activations don't change stored model size; rank the step
+                // by its raw Δfit (see `greedy_allocate` "Step ranking
+                // units") so they still get lowered last on pure-size
+                // budgets.
                 let rate = d_fit;
-                if best.map_or(true, |(r, ..)| rate < r) {
+                if best.is_none_or(|(r, ..)| rate < r) {
                     best = Some((rate, false, l, nb));
                 }
             }
@@ -167,6 +345,27 @@ mod tests {
     }
 
     #[test]
+    fn pareto_scores_agrees_with_struct_path() {
+        let (_, _, pts) = sample_scored(200);
+        let pairs: Vec<(f64, u64)> = pts.iter().map(|p| (p.fit, p.size_bits)).collect();
+        assert_eq!(pareto_front(&pts), pareto_front_scores(&pairs));
+    }
+
+    #[test]
+    fn pareto_front_tolerates_nan_fit() {
+        // a NaN trace must degrade the ranking (NaN points never join the
+        // front), not abort the study via a partial_cmp().unwrap() panic —
+        // including on equal sizes, where the fit comparator actually runs
+        let mk = |fit: f64, size: u64| ScoredConfig {
+            cfg: BitConfig { bits_w: vec![8], bits_a: vec![] },
+            fit,
+            size_bits: size,
+        };
+        let pts = vec![mk(f64::NAN, 100), mk(1.0, 100), mk(0.5, 300), mk(f64::NAN, 300)];
+        assert_eq!(pareto_front(&pts), vec![1, 2]);
+    }
+
+    #[test]
     fn greedy_meets_budget_and_prefers_insensitive_blocks() {
         let (s, sizes, _) = sample_scored(1);
         let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
@@ -182,6 +381,7 @@ mod tests {
     fn greedy_impossible_budget_is_none() {
         let (s, sizes, _) = sample_scored(1);
         assert!(greedy_allocate(&s, &sizes, 10, &PRECISIONS, 1).is_none());
+        assert!(greedy_allocate_naive(&s, &sizes, 10, &PRECISIONS, 1).is_none());
     }
 
     #[test]
@@ -190,5 +390,68 @@ mod tests {
         let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
         let out = greedy_allocate(&s, &sizes, 10, &PRECISIONS, full).unwrap();
         assert_eq!(out.cfg.bits_w, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn heap_greedy_matches_naive_on_study_instance() {
+        let (s, sizes, _) = sample_scored(1);
+        let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
+        for num in [100u64, 95, 80, 65, 60, 55, 50, 45] {
+            let budget = full * num / 100;
+            let a = greedy_allocate_naive(&s, &sizes, 10, &PRECISIONS, budget).unwrap();
+            let b = greedy_allocate(&s, &sizes, 10, &PRECISIONS, budget).unwrap();
+            assert_eq!(a.cfg, b.cfg, "at {num}%");
+            assert_eq!(a.fit.to_bits(), b.fit.to_bits(), "at {num}%");
+            assert_eq!(a.size_bits, b.size_bits, "at {num}%");
+        }
+    }
+
+    #[test]
+    fn activation_steps_rank_by_raw_dfit_pinned() {
+        // Near-zero activation trace: its raw Δfit ranks below every
+        // weight Δfit/Δbit rate, so the act block is ground to minimum
+        // precision while weights are still being lowered — even though
+        // act steps free no stored bits. Pinned (values hand-checked
+        // against an exact f64 simulation) so the heap rewrite can't
+        // silently change the rate-unit mismatch it inherits.
+        let s = SensitivityInputs {
+            w_traces: vec![1.0, 1.0],
+            a_traces: vec![1e-12],
+            w_lo: vec![-1.0, -1.0],
+            w_hi: vec![1.0, 1.0],
+            a_lo: vec![0.0],
+            a_hi: vec![1.0],
+            bn_gamma: vec![None, None],
+        };
+        let sizes = vec![100usize, 100];
+        let full = model_bits(&sizes, 0, &BitConfig::uniform(2, 1, 8));
+        assert_eq!(full, 1600);
+        let out = greedy_allocate(&s, &sizes, 0, &PRECISIONS, full * 90 / 100).unwrap();
+        assert_eq!(out.cfg.bits_w, vec![6, 8], "rate tie breaks to the lower block index");
+        assert_eq!(out.cfg.bits_a, vec![3], "negligible-trace act block hits the floor first");
+        assert_eq!(out.size_bits, 1400);
+        let naive = greedy_allocate_naive(&s, &sizes, 0, &PRECISIONS, full * 90 / 100).unwrap();
+        assert_eq!(naive.cfg, out.cfg);
+
+        // the flip side: high-trace activations stay at max precision on a
+        // pure-size budget (their raw Δfit exceeds every weight rate)
+        let s2 = test_inputs();
+        let sizes2 = vec![100usize, 400, 50];
+        let full2 = model_bits(&sizes2, 10, &BitConfig::uniform(3, 2, 8));
+        let out2 = greedy_allocate(&s2, &sizes2, 10, &PRECISIONS, full2 * 60 / 100).unwrap();
+        assert_eq!(out2.cfg.bits_w, vec![6, 4, 3]);
+        assert_eq!(out2.cfg.bits_a, vec![8, 8]);
+    }
+
+    #[test]
+    fn greedy_with_nan_trace_does_not_panic() {
+        let mut s = test_inputs();
+        s.w_traces[1] = f64::NAN;
+        let sizes = vec![100usize, 400, 50];
+        let full = model_bits(&sizes, 10, &BitConfig::uniform(3, 2, 8));
+        // NaN-rate steps order last but still execute once they're all
+        // that's left, so the budget is met without a comparator panic
+        let out = greedy_allocate(&s, &sizes, 10, &PRECISIONS, full * 6 / 10).unwrap();
+        assert!(out.size_bits <= full * 6 / 10);
     }
 }

@@ -8,7 +8,10 @@
 //!   paper's methodology (fanning independent work over the
 //!   `coordinator::parallel` worker pool), and
 //!   `data`/`quant`/`stats`/`metrics`/`tensor` are the from-scratch
-//!   substrates it stands on.
+//!   substrates it stands on. (One deliberate upward edge:
+//!   `metrics::FitTable::score_batch` fans over `coordinator::parallel`,
+//!   which is itself a std-only substrate that happens to live under the
+//!   coordinator.)
 //!
 //! The workspace builds hermetically: the `anyhow` and `xla` dependencies
 //! are vendored path crates under `vendor/` (the `xla` build is an

@@ -19,10 +19,11 @@ use anyhow::{bail, Context, Result};
 
 use fitq::coordinator::experiments::{fig1, fig2, fig4, fig5, fig9, table1, table2, table3};
 use fitq::coordinator::{
-    dataset_for, exact_allocate, gather, greedy_allocate, pareto_front, score, Estimator,
-    ModelState, StudyOptions, TraceEngine, TraceOptions, Trainer,
+    dataset_for, exact_allocate_table, gather, greedy_allocate_table, pareto_front_scores,
+    Estimator, ModelState, StudyOptions, TraceEngine, TraceOptions, Trainer,
 };
 use fitq::data::EvalSet;
+use fitq::metrics::{FitTable, PackedConfig};
 use fitq::quant::{model_bits, BitConfig, BitConfigSampler, PRECISIONS};
 use fitq::runtime::Runtime;
 
@@ -80,7 +81,7 @@ const USAGE: &str = "fitq <command>\n\
   info                                   list models and artifacts\n\
   train      --model M [--epochs N]      train FP model, report accuracy\n\
   traces     --model M [--estimator ef|hessian] [--tol T] [--batch B]\n\
-  search     --model M [--budget-ratio R] [--samples N]\n\
+  search     --model M [--budget-ratio R] [--samples N] [--jobs N]\n\
   experiment <table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all> [opts]\n\
      table2/fig4: [--configs N] [--fp-epochs N] [--qat-epochs N] [--only A,B]\n\
      table1/3:    [--iters N] [--runs N]\n\
@@ -198,7 +199,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     let model = args.str_or("model", "cnn_cifar");
     let seed = args.usize_or("seed", 0)? as u64;
     let ratio = args.f64_or("budget-ratio", 0.15)?;
-    let samples = args.usize_or("samples", 2000)?;
+    let samples = args.usize_or("samples", 100_000)?;
+    let jobs = args.usize_or("jobs", 0)?;
     let rt = Runtime::from_env()?;
     let mm = rt.model(model)?.clone();
     let st = fitq::coordinator::experiments::get_trained(&rt, model, 30, seed)?;
@@ -212,28 +214,39 @@ fn cmd_search(args: &Args) -> Result<()> {
     let fp32_bits = (mm.n_params as u64) * 32;
     let budget = (fp32_bits as f64 * ratio) as u64;
 
-    // random sample -> Pareto front
+    // one scoring table for everything below: the Pareto sweep, the
+    // greedy walk and the exact allocator all gather from it
+    let table = FitTable::new(&sens.inputs, &sizes, n_unq, &PRECISIONS);
+
+    // random sample -> batch scores -> Pareto front
     let mut sampler =
         BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, seed);
-    let pts: Vec<_> = sampler
-        .take(samples)
-        .into_iter()
-        .map(|c| score(&sens.inputs, &sizes, n_unq, c))
-        .collect();
-    let front = pareto_front(&pts);
-    println!("sampled {} configs; Pareto front has {} points:", pts.len(), front.len());
+    let configs = sampler.take(samples);
+    let packed: Vec<PackedConfig> = configs.iter().map(|c| table.pack(c)).collect();
+    let t0 = std::time::Instant::now();
+    let scores = table.score_batch(&packed, jobs);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "scored {} configs in {:.1} ms ({:.3e} configs/s)",
+        scores.len(),
+        dt * 1e3,
+        scores.len() as f64 / dt.max(1e-9)
+    );
+    let front = pareto_front_scores(&scores);
+    println!("Pareto front has {} points:", front.len());
     for &i in front.iter().take(10) {
+        let (fit, size_bits) = scores[i];
         println!(
             "  size {:>8} bits ({:.2}x comp)  FIT {:.5}  {}",
-            pts[i].size_bits,
-            fp32_bits as f64 / pts[i].size_bits as f64,
-            pts[i].fit,
-            pts[i].cfg.label()
+            size_bits,
+            fp32_bits as f64 / size_bits as f64,
+            fit,
+            configs[i].label()
         );
     }
 
     // greedy allocation under the budget
-    match greedy_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget) {
+    match greedy_allocate_table(&table, budget) {
         Some(g) => println!(
             "greedy @ {:.0}% of fp32 ({budget} bits): size {} FIT {:.5} {}",
             100.0 * ratio,
@@ -243,7 +256,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         ),
         None => println!("budget {budget} bits is below the all-minimum-precision floor"),
     }
-    match exact_allocate(&sens.inputs, &sizes, n_unq, &PRECISIONS, budget) {
+    match exact_allocate_table(&table, budget) {
         Some(e) => println!(
             "exact  @ {:.0}% of fp32: size {} FIT {:.5} {}",
             100.0 * ratio,
@@ -251,7 +264,10 @@ fn cmd_search(args: &Args) -> Result<()> {
             e.fit,
             e.cfg.label()
         ),
-        None => println!("exact: budget infeasible"),
+        None => println!(
+            "exact: no allocation found (budget below the floor, or a \
+             non-finite sensitivity input poisoned the bound)"
+        ),
     }
     let uniform = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
     println!(

@@ -15,12 +15,18 @@
 //! quantization range, BN with the inverse batch-norm scale, and Noise
 //! drops the sensitivity weighting entirely. The _W / _A ablations keep
 //! only the weight or activation term.
+//!
+//! For scoring configurations at scale, [`FitTable`] precomputes every
+//! per-block × per-precision FIT contribution once so each score is a flat
+//! gather-sum, bit-identical to [`fit()`] (see `table.rs`).
 
 mod baselines;
 mod fit;
+mod table;
 
 pub use baselines::{bn_metric, noise_metric, qr, qr_a, qr_w};
 pub use fit::{fit, fit_a, fit_w};
+pub use table::{FitTable, PackedConfig};
 
 use crate::quant::BitConfig;
 

@@ -1,0 +1,394 @@
+//! Table-driven FIT scoring engine.
+//!
+//! FIT and the model-size function are both *separable*: each is a sum of
+//! per-block terms, and each block's term depends only on that block's own
+//! precision choice. A [`FitTable`] therefore precomputes, once per
+//! [`SensitivityInputs`], every per-block × per-precision contribution
+//! (`w_traces[l] * noise_power(w_lo[l], w_hi[l], b)`, the activation
+//! analogue, and the per-block storage bits), after which scoring any
+//! configuration is a flat gather-sum over `Lw + La` table entries — no
+//! `powf`, no range arithmetic, no branching on the hot path.
+//!
+//! **Bit-identity contract.** `FitTable::score` reproduces the naive
+//! [`fit`](super::fit()) to 0 ULP: each table entry is computed by exactly
+//! the expression the naive path evaluates per call, and the gather sums
+//! entries in the same order (weight blocks in index order, then activation
+//! blocks in index order, then one final add). The unit tests below and
+//! `tests/fit_table_equivalence.rs` enforce this.
+//!
+//! [`PackedConfig`] is the cache-dense batch form of a
+//! [`BitConfig`](crate::quant::BitConfig): one `u8` precision *index* per
+//! block (weights first, then activations) instead of two `Vec<u32>` of
+//! precision *values*, so `score_batch` streams configurations without
+//! pointer-chasing two heap allocations per config for the lookup keys.
+
+use super::SensitivityInputs;
+use crate::coordinator::parallel::{effective_jobs, run_pool};
+use crate::quant::{noise_power, BitConfig, PRECISIONS};
+
+/// A mixed-precision configuration in precision-index form: `idx[i]` is an
+/// index into the owning table's precision set, with the `lw` weight blocks
+/// first and the activation blocks after. Convert with
+/// [`FitTable::pack`]/[`FitTable::unpack`] (table's own precision set) or
+/// the `From` impls (the paper's [`PRECISIONS`] set).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PackedConfig {
+    lw: usize,
+    idx: Vec<u8>,
+}
+
+impl PackedConfig {
+    /// Pack `cfg` against an explicit precision set. Panics if a block uses
+    /// a precision outside the set (a packed index must round-trip).
+    pub fn pack(cfg: &BitConfig, precisions: &[u32]) -> PackedConfig {
+        assert!(
+            precisions.len() <= u8::MAX as usize + 1,
+            "precision set too large for u8 indices"
+        );
+        let index_of = |bits: u32| -> u8 {
+            precisions
+                .iter()
+                .position(|&p| p == bits)
+                .unwrap_or_else(|| panic!("precision {bits} not in candidate set {precisions:?}"))
+                as u8
+        };
+        PackedConfig {
+            lw: cfg.bits_w.len(),
+            idx: cfg.bits_w.iter().chain(&cfg.bits_a).map(|&b| index_of(b)).collect(),
+        }
+    }
+
+    /// Expand back to a [`BitConfig`] against an explicit precision set.
+    pub fn unpack(&self, precisions: &[u32]) -> BitConfig {
+        BitConfig {
+            bits_w: self.idx[..self.lw].iter().map(|&i| precisions[i as usize]).collect(),
+            bits_a: self.idx[self.lw..].iter().map(|&i| precisions[i as usize]).collect(),
+        }
+    }
+
+    pub fn n_weight_blocks(&self) -> usize {
+        self.lw
+    }
+
+    pub fn n_act_blocks(&self) -> usize {
+        self.idx.len() - self.lw
+    }
+
+    /// Raw precision indices, weight blocks first then activation blocks.
+    pub fn indices(&self) -> &[u8] {
+        &self.idx
+    }
+}
+
+impl From<&BitConfig> for PackedConfig {
+    fn from(cfg: &BitConfig) -> PackedConfig {
+        PackedConfig::pack(cfg, &PRECISIONS)
+    }
+}
+
+impl From<&PackedConfig> for BitConfig {
+    fn from(p: &PackedConfig) -> BitConfig {
+        p.unpack(&PRECISIONS)
+    }
+}
+
+/// Precomputed per-block × per-precision FIT contributions and storage
+/// sizes for one set of sensitivity inputs (see the module docs).
+///
+/// Built once per study / search; every consumer (Pareto sweep, greedy and
+/// exact allocators, the Table-2 evaluator) scores configurations through
+/// it instead of recomputing `noise_power` per call.
+#[derive(Debug, Clone)]
+pub struct FitTable {
+    precisions: Vec<u32>,
+    lw: usize,
+    la: usize,
+    /// `lw × P` row-major: `w_traces[l] * noise_power(w_lo[l], w_hi[l], precisions[p])`.
+    w_fit: Vec<f64>,
+    /// `la × P` row-major activation analogue.
+    a_fit: Vec<f64>,
+    /// `lw × P` row-major: `block_sizes[l] * precisions[p]` storage bits.
+    w_bits: Vec<u64>,
+    /// Non-quantized parameters at fp32 (`n_unquantized * 32`).
+    base_bits: u64,
+}
+
+impl FitTable {
+    pub fn new(
+        s: &SensitivityInputs,
+        block_sizes: &[usize],
+        n_unquantized: usize,
+        precisions: &[u32],
+    ) -> FitTable {
+        assert!(!precisions.is_empty(), "empty precision set");
+        assert!(
+            precisions.len() <= u8::MAX as usize + 1,
+            "precision set too large for u8 indices"
+        );
+        assert_eq!(block_sizes.len(), s.n_weight_blocks(), "weight block count");
+        let np = precisions.len();
+        let lw = s.n_weight_blocks();
+        let la = s.n_act_blocks();
+        let mut w_fit = Vec::with_capacity(lw * np);
+        let mut w_bits = Vec::with_capacity(lw * np);
+        for l in 0..lw {
+            for &b in precisions {
+                w_fit.push(s.w_traces[l] * noise_power(s.w_lo[l], s.w_hi[l], b as f64));
+                w_bits.push(block_sizes[l] as u64 * b as u64);
+            }
+        }
+        let mut a_fit = Vec::with_capacity(la * np);
+        for l in 0..la {
+            for &b in precisions {
+                a_fit.push(s.a_traces[l] * noise_power(s.a_lo[l], s.a_hi[l], b as f64));
+            }
+        }
+        FitTable {
+            precisions: precisions.to_vec(),
+            lw,
+            la,
+            w_fit,
+            a_fit,
+            w_bits,
+            base_bits: n_unquantized as u64 * 32,
+        }
+    }
+
+    pub fn precisions(&self) -> &[u32] {
+        &self.precisions
+    }
+
+    pub fn n_weight_blocks(&self) -> usize {
+        self.lw
+    }
+
+    pub fn n_act_blocks(&self) -> usize {
+        self.la
+    }
+
+    /// Storage bits of the non-quantized tensors (counted at fp32).
+    pub fn base_bits(&self) -> u64 {
+        self.base_bits
+    }
+
+    /// FIT contribution of weight block `l` at precision index `p`.
+    pub fn w_term(&self, l: usize, p: usize) -> f64 {
+        self.w_fit[l * self.precisions.len() + p]
+    }
+
+    /// FIT contribution of activation block `l` at precision index `p`.
+    pub fn a_term(&self, l: usize, p: usize) -> f64 {
+        self.a_fit[l * self.precisions.len() + p]
+    }
+
+    /// Storage bits of weight block `l` at precision index `p`.
+    pub fn w_size_bits(&self, l: usize, p: usize) -> u64 {
+        self.w_bits[l * self.precisions.len() + p]
+    }
+
+    /// Pack against this table's precision set (asserts the block shape).
+    pub fn pack(&self, cfg: &BitConfig) -> PackedConfig {
+        assert_eq!(cfg.bits_w.len(), self.lw, "weight block count");
+        assert_eq!(cfg.bits_a.len(), self.la, "act block count");
+        PackedConfig::pack(cfg, &self.precisions)
+    }
+
+    /// Expand a packed configuration against this table's precision set.
+    pub fn unpack(&self, p: &PackedConfig) -> BitConfig {
+        p.unpack(&self.precisions)
+    }
+
+    /// Weight term `FIT_W` — bit-identical to [`fit_w`](super::fit_w).
+    pub fn score_w(&self, p: &PackedConfig) -> f64 {
+        assert_eq!(p.lw, self.lw, "weight block count");
+        let np = self.precisions.len();
+        let mut acc = 0.0;
+        for (l, &ix) in p.idx[..self.lw].iter().enumerate() {
+            acc += self.w_fit[l * np + ix as usize];
+        }
+        acc
+    }
+
+    /// Activation term `FIT_A` — bit-identical to [`fit_a`](super::fit_a).
+    pub fn score_a(&self, p: &PackedConfig) -> f64 {
+        assert_eq!(p.idx.len() - p.lw, self.la, "act block count");
+        let np = self.precisions.len();
+        let mut acc = 0.0;
+        for (l, &ix) in p.idx[self.lw..].iter().enumerate() {
+            acc += self.a_fit[l * np + ix as usize];
+        }
+        acc
+    }
+
+    /// Full FIT as a flat gather-sum — bit-identical to [`fit`](super::fit()).
+    pub fn score(&self, p: &PackedConfig) -> f64 {
+        self.score_w(p) + self.score_a(p)
+    }
+
+    /// Model storage bits — identical to
+    /// [`model_bits`](crate::quant::model_bits) (exact integer arithmetic).
+    pub fn size_bits(&self, p: &PackedConfig) -> u64 {
+        assert_eq!(p.lw, self.lw, "weight block count");
+        let np = self.precisions.len();
+        let mut bits = self.base_bits;
+        for (l, &ix) in p.idx[..self.lw].iter().enumerate() {
+            bits += self.w_bits[l * np + ix as usize];
+        }
+        bits
+    }
+
+    /// `(fit, size_bits)` in one call — the batch scorer's element type.
+    pub fn score_size(&self, p: &PackedConfig) -> (f64, u64) {
+        (self.score(p), self.size_bits(p))
+    }
+
+    /// Score a batch of packed configurations, fanning fixed-size chunks
+    /// over the [`coordinator::parallel`](crate::coordinator::parallel)
+    /// worker pool. Returns `(fit, size_bits)` pairs in input order;
+    /// per-config scoring is pure, so the result is identical at every
+    /// `jobs` setting (`1` = serial reference, `0` = one worker per core).
+    pub fn score_batch(&self, configs: &[PackedConfig], jobs: usize) -> Vec<(f64, u64)> {
+        const CHUNK: usize = 4096;
+        let n_chunks = configs.len().div_ceil(CHUNK);
+        if effective_jobs(jobs, n_chunks) <= 1 {
+            return configs.iter().map(|c| self.score_size(c)).collect();
+        }
+        let chunks = run_pool(
+            n_chunks,
+            jobs,
+            || Ok(()),
+            |_, i| {
+                let lo = i * CHUNK;
+                let hi = usize::min(lo + CHUNK, configs.len());
+                Ok(configs[lo..hi].iter().map(|c| self.score_size(c)).collect::<Vec<_>>())
+            },
+        )
+        .expect("batch scoring jobs are infallible");
+        chunks.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{fit, fit_a, fit_w, test_inputs};
+    use crate::quant::{model_bits, BitConfigSampler};
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn packed_round_trip_via_from() {
+        let cfg = BitConfig { bits_w: vec![8, 4, 3], bits_a: vec![6, 3] };
+        let packed = PackedConfig::from(&cfg);
+        assert_eq!(packed.n_weight_blocks(), 3);
+        assert_eq!(packed.n_act_blocks(), 2);
+        assert_eq!(BitConfig::from(&packed), cfg);
+    }
+
+    #[test]
+    fn pack_respects_table_precision_order() {
+        // a table built over an ascending set packs/unpacks against it
+        let s = test_inputs();
+        let table = FitTable::new(&s, &[100, 400, 50], 10, &[3, 4, 6, 8]);
+        let cfg = BitConfig { bits_w: vec![3, 8, 6], bits_a: vec![4, 3] };
+        let packed = table.pack(&cfg);
+        assert_eq!(packed.indices(), &[0, 3, 2, 1, 0]);
+        assert_eq!(table.unpack(&packed), cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in candidate set")]
+    fn pack_rejects_unknown_precision() {
+        let cfg = BitConfig { bits_w: vec![5], bits_a: vec![] };
+        let _ = PackedConfig::from(&cfg);
+    }
+
+    #[test]
+    fn score_matches_naive_fit_to_zero_ulp() {
+        let s = test_inputs();
+        let sizes = vec![100usize, 400, 50];
+        let table = FitTable::new(&s, &sizes, 10, &PRECISIONS);
+        let mut sampler = BitConfigSampler::new(3, 2, &PRECISIONS, 5);
+        for cfg in sampler.take(64) {
+            let p = table.pack(&cfg);
+            assert_eq!(table.score(&p).to_bits(), fit(&s, &cfg).to_bits(), "{}", cfg.label());
+            assert_eq!(table.score_w(&p).to_bits(), fit_w(&s, &cfg).to_bits());
+            assert_eq!(table.score_a(&p).to_bits(), fit_a(&s, &cfg).to_bits());
+            assert_eq!(table.size_bits(&p), model_bits(&sizes, 10, &cfg));
+        }
+    }
+
+    #[test]
+    fn randomized_inputs_match_to_zero_ulp() {
+        // property check over randomized instances, including zero-range
+        // blocks (hi == lo) and empty activation lists
+        let mut rng = Pcg32::new(0xf17, 0x7ab1e);
+        for case in 0..24u64 {
+            let lw = 1 + rng.below(6) as usize;
+            let la = rng.below(4) as usize; // 0 => empty activations
+            let mut w_lo = Vec::with_capacity(lw);
+            let mut w_hi = Vec::with_capacity(lw);
+            for _ in 0..lw {
+                let r = rng.uniform_in(0.0, 2.0) as f64;
+                if rng.below(4) == 0 {
+                    w_lo.push(r); // zero-range block
+                    w_hi.push(r);
+                } else {
+                    w_lo.push(-r);
+                    w_hi.push(r);
+                }
+            }
+            let s = SensitivityInputs {
+                w_traces: (0..lw).map(|_| rng.uniform_in(0.0, 20.0) as f64).collect(),
+                a_traces: (0..la).map(|_| rng.uniform_in(0.0, 8.0) as f64).collect(),
+                w_lo,
+                w_hi,
+                a_lo: vec![0.0; la],
+                a_hi: (0..la).map(|_| rng.uniform_in(0.1, 8.0) as f64).collect(),
+                bn_gamma: vec![None; lw],
+            };
+            let sizes: Vec<usize> = (0..lw).map(|_| 1 + rng.below(5000) as usize).collect();
+            let n_unq = rng.below(20) as usize;
+            let table = FitTable::new(&s, &sizes, n_unq, &PRECISIONS);
+            let mut sampler = BitConfigSampler::new(lw, la, &PRECISIONS, 1000 + case);
+            for cfg in sampler.take(16) {
+                let p = table.pack(&cfg);
+                assert_eq!(
+                    table.score(&p).to_bits(),
+                    fit(&s, &cfg).to_bits(),
+                    "case {case}: {}",
+                    cfg.label()
+                );
+                assert_eq!(table.size_bits(&p), model_bits(&sizes, n_unq, &cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_serial_and_every_jobs_setting() {
+        let s = test_inputs();
+        let sizes = vec![100usize, 400, 50];
+        let table = FitTable::new(&s, &sizes, 10, &PRECISIONS);
+        let mut sampler = BitConfigSampler::new(3, 2, &PRECISIONS, 9);
+        // > 2 chunks so the pool path actually engages
+        let packed: Vec<PackedConfig> =
+            sampler.take(1000).iter().map(|c| table.pack(c)).collect();
+        let packed: Vec<PackedConfig> =
+            (0..10).flat_map(|_| packed.iter().cloned()).collect();
+        let serial: Vec<(f64, u64)> = packed.iter().map(|p| table.score_size(p)).collect();
+        for jobs in [1usize, 2, 4, 0] {
+            let got = table.score_batch(&packed, jobs);
+            assert_eq!(got.len(), serial.len());
+            for (a, b) in got.iter().zip(&serial) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+                assert_eq!(a.1, b.1);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let s = test_inputs();
+        let table = FitTable::new(&s, &[100, 400, 50], 10, &PRECISIONS);
+        assert!(table.score_batch(&[], 4).is_empty());
+    }
+}

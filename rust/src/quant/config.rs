@@ -51,10 +51,15 @@ impl BitConfig {
     }
 
     /// Mean bit width across all blocks (compression proxy for reports).
+    /// A block-less configuration has mean 0.0 (not NaN from 0/0).
     pub fn mean_bits(&self) -> f64 {
+        let n = self.bits_w.len() + self.bits_a.len();
+        if n == 0 {
+            return 0.0;
+        }
         let total: u64 =
             self.bits_w.iter().chain(&self.bits_a).map(|&b| b as u64).sum();
-        total as f64 / (self.bits_w.len() + self.bits_a.len()) as f64
+        total as f64 / n as f64
     }
 
     /// Compact display form, e.g. "w[8,4,3,8] a[6,6,4]".
@@ -138,6 +143,13 @@ mod tests {
         let configs = s.take(100);
         assert_eq!(configs.len(), 4);
         assert!(s.sample_distinct().is_none());
+    }
+
+    #[test]
+    fn mean_bits_of_empty_config_is_zero() {
+        // regression: 0/0 used to yield NaN for a block-less config
+        let c = BitConfig { bits_w: vec![], bits_a: vec![] };
+        assert_eq!(c.mean_bits(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Pure-Rust equivalence suite for the table-driven scoring engine — no
+//! artifacts, no PJRT, runs everywhere tier-1 runs.
+//!
+//! The contract under test: `FitTable::score`, the heap greedy and the
+//! table-driven exact allocator are *bit-identical* to the naive reference
+//! paths (`metrics::fit`, `greedy_allocate_naive`, brute-force
+//! enumeration) on seeded instances. Instances are integer-derived so the
+//! construction is exactly reproducible; the greedy/exact expectations
+//! were additionally cross-checked against an independent IEEE-f64
+//! simulation of both algorithms.
+
+use fitq::coordinator::{
+    exact_allocate, greedy_allocate, greedy_allocate_naive, pareto_front, pareto_front_scores,
+    score,
+};
+use fitq::metrics::{fit, FitTable, PackedConfig, SensitivityInputs};
+use fitq::quant::{model_bits, BitConfig, BitConfigSampler, PRECISIONS};
+
+/// Deterministic pseudo-random instance `k` with integer-derived f64
+/// values (exact in IEEE arithmetic). `k % 3 == 0` plants a zero-range
+/// weight block; `la == 0` exercises empty activation lists.
+fn det_instance(k: u64, lw: usize, la: usize) -> (SensitivityInputs, Vec<usize>) {
+    let h = |i: u64, m: u64| {
+        k.wrapping_mul(0x9e37_79b9).wrapping_add(i.wrapping_mul(0x85eb_ca6b)) % m
+    };
+    let w_traces: Vec<f64> = (0..lw as u64).map(|i| 0.05 + h(i, 997) as f64 / 31.0).collect();
+    let w_hi: Vec<f64> = (0..lw as u64).map(|i| 0.1 + h(i + 100, 613) as f64 / 100.0).collect();
+    let mut w_lo: Vec<f64> = w_hi.iter().map(|&x| -x).collect();
+    if k % 3 == 0 && lw > 1 {
+        w_lo[1] = w_hi[1]; // zero-range block: contributes 0 at any precision
+    }
+    let a_traces: Vec<f64> =
+        (0..la as u64).map(|i| 0.02 + h(i + 200, 401) as f64 / 53.0).collect();
+    let a_hi: Vec<f64> = (0..la as u64).map(|i| 0.5 + h(i + 300, 211) as f64 / 29.0).collect();
+    let sizes: Vec<usize> = (0..lw as u64).map(|i| 16 + h(i + 400, 2000) as usize).collect();
+    let s = SensitivityInputs {
+        bn_gamma: vec![None; lw],
+        a_lo: vec![0.0; la],
+        w_traces,
+        w_lo,
+        w_hi,
+        a_traces,
+        a_hi,
+    };
+    (s, sizes)
+}
+
+#[test]
+fn table_score_matches_naive_fit_bit_for_bit() {
+    for k in 1..13u64 {
+        let lw = 1 + (k as usize) % 6;
+        let la = (k as usize) % 4;
+        let (s, sizes) = det_instance(k, lw, la);
+        let table = FitTable::new(&s, &sizes, 3, &PRECISIONS);
+        let mut sampler = BitConfigSampler::new(lw, la, &PRECISIONS, k);
+        for cfg in sampler.take(32) {
+            let p = table.pack(&cfg);
+            assert_eq!(
+                table.score(&p).to_bits(),
+                fit(&s, &cfg).to_bits(),
+                "k={k} {}",
+                cfg.label()
+            );
+            assert_eq!(table.size_bits(&p), model_bits(&sizes, 3, &cfg));
+        }
+    }
+}
+
+#[test]
+fn packed_config_round_trips() {
+    for k in 1..8u64 {
+        let lw = 1 + (k as usize) % 6;
+        let la = (k as usize) % 4;
+        let mut sampler = BitConfigSampler::new(lw, la, &PRECISIONS, 77 + k);
+        for cfg in sampler.take(16) {
+            let p = PackedConfig::from(&cfg);
+            assert_eq!(BitConfig::from(&p), cfg);
+            assert_eq!(p.n_weight_blocks(), lw);
+            assert_eq!(p.n_act_blocks(), la);
+        }
+    }
+}
+
+#[test]
+fn heap_greedy_matches_naive_reference() {
+    for k in 1..25u64 {
+        let lw = 2 + (k as usize) % 5;
+        let la = (k as usize) % 4;
+        let (s, sizes) = det_instance(k, lw, la);
+        let full = model_bits(&sizes, 3, &BitConfig::uniform(lw, la, 8));
+        for num in [95u64, 80, 70, 60, 50, 45, 40] {
+            let budget = full * num / 100;
+            let a = greedy_allocate_naive(&s, &sizes, 3, &PRECISIONS, budget);
+            let b = greedy_allocate(&s, &sizes, 3, &PRECISIONS, budget);
+            match (a, b) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.cfg, b.cfg, "k={k} num={num}");
+                    assert_eq!(a.fit.to_bits(), b.fit.to_bits(), "k={k} num={num}");
+                    assert_eq!(a.size_bits, b.size_bits, "k={k} num={num}");
+                    assert!(b.size_bits <= budget, "k={k} num={num}");
+                }
+                (a, b) => panic!("feasibility disagrees at k={k} num={num}: {a:?} vs {b:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_allocator_matches_brute_force_bit_for_bit() {
+    for k in [2u64, 5, 7, 11] {
+        let lw = 3 + (k as usize) % 3; // 4^lw <= 1024: enumerable
+        let la = (k as usize) % 3;
+        let (s, sizes) = det_instance(k, lw, la);
+        let full = model_bits(&sizes, 3, &BitConfig::uniform(lw, la, 8));
+        for num in [80u64, 60, 45] {
+            let budget = full * num / 100;
+            let Some(e) = exact_allocate(&s, &sizes, 3, &PRECISIONS, budget) else {
+                continue;
+            };
+            assert!(e.size_bits <= budget);
+            let mut best = f64::INFINITY;
+            for code in 0..PRECISIONS.len().pow(lw as u32) {
+                let mut c = code;
+                let mut bits_w = Vec::with_capacity(lw);
+                for _ in 0..lw {
+                    bits_w.push(PRECISIONS[c % PRECISIONS.len()]);
+                    c /= PRECISIONS.len();
+                }
+                let cfg = BitConfig { bits_w, bits_a: vec![8; la] };
+                if model_bits(&sizes, 3, &cfg) <= budget {
+                    let f = fit(&s, &cfg);
+                    if f < best {
+                        best = f;
+                    }
+                }
+            }
+            assert_eq!(e.fit.to_bits(), best.to_bits(), "k={k} num={num}");
+        }
+    }
+}
+
+#[test]
+fn batch_scores_are_jobs_invariant_and_match_struct_path() {
+    let (s, sizes) = det_instance(4, 5, 2);
+    let table = FitTable::new(&s, &sizes, 3, &PRECISIONS);
+    let mut sampler = BitConfigSampler::new(5, 2, &PRECISIONS, 99);
+    let configs = sampler.take(500);
+    let packed: Vec<PackedConfig> = configs.iter().map(|c| table.pack(c)).collect();
+    // replicate to force several pool chunks
+    let packed: Vec<PackedConfig> = (0..20).flat_map(|_| packed.iter().cloned()).collect();
+    let serial = table.score_batch(&packed, 1);
+    for jobs in [2usize, 4, 0] {
+        let got = table.score_batch(&packed, jobs);
+        assert_eq!(got.len(), serial.len());
+        for (g, r) in got.iter().zip(&serial) {
+            assert_eq!(g.0.to_bits(), r.0.to_bits());
+            assert_eq!(g.1, r.1);
+        }
+    }
+    // and the pair stream agrees with the ScoredConfig path
+    let pts: Vec<_> = configs.iter().map(|c| score(&s, &sizes, 3, c.clone())).collect();
+    let pairs = table.score_batch(&packed[..configs.len()], 1);
+    assert_eq!(
+        pareto_front(&pts),
+        pareto_front_scores(&pairs),
+        "front must agree between struct and pair paths"
+    );
+}
