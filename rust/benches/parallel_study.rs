@@ -8,7 +8,7 @@
 //! Also prints the pure-pool overhead measurement, which runs everywhere.
 
 use fitq::bench_util::{bench, black_box};
-use fitq::coordinator::{derive_seed, run_pool, run_study, StudyOptions};
+use fitq::coordinator::{derive_seed, run_pool, run_study, Pipeline, StudyOptions};
 use fitq::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -48,11 +48,31 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     println!("\n# run_study cnn_mnist (8 configs, 1 QAT epoch) serial vs parallel\n");
+    // fresh results dir per timed call: the pipeline cache would otherwise
+    // turn every iteration after the first into a cache read
+    let cold_dir = std::env::temp_dir().join(format!("fitq_bench_cold_{}", std::process::id()));
     for jobs in [1usize, 2, 4] {
         let opt = StudyOptions { jobs, ..base.clone() };
-        bench(&format!("run_study 8 configs jobs={jobs}"), 0, 3, || {
-            black_box(run_study(&rt, "cnn_mnist", &opt).unwrap());
+        bench(&format!("run_study 8 configs jobs={jobs} (cold)"), 0, 3, || {
+            std::fs::remove_dir_all(&cold_dir).ok();
+            let pipe = Pipeline::new(&cold_dir).unwrap();
+            black_box(run_study(&rt, &pipe, "cnn_mnist", &opt).unwrap());
         });
     }
+
+    // the pipeline-cache payoff: identical study served from the store
+    println!("\n# run_study warm (stage + study cache hits)\n");
+    let warm_dir = std::env::temp_dir().join(format!("fitq_bench_warm_{}", std::process::id()));
+    std::fs::remove_dir_all(&warm_dir).ok();
+    {
+        let pipe = Pipeline::new(&warm_dir)?;
+        let opt = StudyOptions { jobs: 1, ..base.clone() };
+        run_study(&rt, &pipe, "cnn_mnist", &opt)?; // populate
+        bench("run_study 8 configs warm cache", 1, 5, || {
+            black_box(run_study(&rt, &pipe, "cnn_mnist", &opt).unwrap());
+        });
+    }
+    std::fs::remove_dir_all(&cold_dir).ok();
+    std::fs::remove_dir_all(&warm_dir).ok();
     Ok(())
 }

@@ -9,6 +9,11 @@
 //!      Appendix D), evaluate the quantized model;
 //!   5. rank-correlate each metric against final performance.
 //!
+//! Steps 1-2 are stage-graph lookups (`coordinator::pipeline`): the FP
+//! checkpoint and sensitivity report are computed at most once per key and
+//! shared across every experiment and process, and the finished study is
+//! itself a cached stage output.
+//!
 //! Step 4 dominates wall-clock (hundreds of QAT fine-tunes) and every
 //! configuration is independent, so it fans out over the
 //! `coordinator::parallel` worker pool. Each configuration's QAT data
@@ -19,11 +24,12 @@
 use anyhow::Result;
 
 use super::parallel::{self, derive_seed};
-use super::sensitivity::{gather, SensitivityReport};
+use super::pipeline::Pipeline;
+use super::sensitivity::SensitivityReport;
 use super::state::ModelState;
 use super::trainer::{dataset_for, Trainer};
 use super::traces::TraceOptions;
-use crate::data::{Dataset, EvalSet};
+use crate::data::{Dataset, EvalSet, TrainView};
 use crate::metrics::{FitTable, Metric};
 use crate::quant::{BitConfig, BitConfigSampler, PRECISIONS};
 use crate::runtime::Runtime;
@@ -75,7 +81,6 @@ pub struct ConfigOutcome {
 pub struct StudyResult {
     pub model: String,
     pub fp_test_score: f64,
-    pub fp_losses: Vec<f64>,
     pub outcomes: Vec<ConfigOutcome>,
     pub sens: SensitivityReport,
     /// metric name -> spearman rank correlation of (-metric) vs test score.
@@ -89,42 +94,40 @@ impl StudyResult {
 }
 
 /// Run one full experiment (one row-pair of Table 2).
-pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyResult> {
+///
+/// The expensive inputs are pipeline stages: the FP checkpoint and the
+/// sensitivity report come from `pipe` (computed once per process and
+/// across processes), and the finished outcome table is itself cached —
+/// a warm rerun with the same options (any `jobs` value) decodes the
+/// stored study and reproduces the cold run bit-for-bit.
+pub fn run_study(
+    rt: &Runtime,
+    pipe: &Pipeline,
+    model: &str,
+    opt: &StudyOptions,
+) -> Result<StudyResult> {
+    if let Some(cached) = pipe.study_cached(rt, model, opt) {
+        eprintln!("  [{model}] study loaded from cache");
+        return Ok(cached);
+    }
     let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
     let mm = rt.model(model)?.clone();
-    let mut trainer = Trainer::new(rt, ds.as_ref());
+    let trainer = Trainer::new(rt, ds.as_ref());
     let ev = EvalSet::materialize(ds.as_ref(), opt.eval_n);
-    // train-split eval set for the Fig-5b overfitting analysis
-    let ev_train = {
-        // materialize the *train* stream head as an eval set by sampling
-        // the same indices the trainer consumed first
-        struct TrainView<'a>(&'a dyn crate::data::Dataset);
-        impl crate::data::Dataset for TrainView<'_> {
-            fn input_shape(&self) -> (usize, usize, usize) {
-                self.0.input_shape()
-            }
-            fn n_classes(&self) -> usize {
-                self.0.n_classes()
-            }
-            fn label_len(&self) -> usize {
-                self.0.label_len()
-            }
-            fn sample(&self, _s: crate::data::Split, i: u64, x: &mut [f32], y: &mut [i32]) {
-                self.0.sample(crate::data::Split::Train, i, x, y)
-            }
-        }
-        EvalSet::materialize(&TrainView(ds.as_ref()), opt.eval_n)
-    };
+    // train-split eval set for the Fig-5b overfitting analysis: the
+    // train-stream head, i.e. the indices the trainer consumed first
+    let ev_train = EvalSet::materialize(&TrainView::new(ds.as_ref()), opt.eval_n);
 
-    // 1. full-precision training
-    let mut fp = ModelState::init(rt, model, opt.seed as u32)?;
-    let fp_losses = trainer.train(&mut fp, opt.fp_epochs)?;
-    let fp_eval = trainer.evaluate(&fp, &ev)?;
+    // 1. full-precision training (pipeline stage)
+    let fp_rc = pipe.train_fp(rt, model, opt.fp_epochs, opt.seed)?;
+    let fp: &ModelState = &fp_rc;
+    let fp_eval = trainer.evaluate(fp, &ev)?;
 
-    // 2. sensitivity inputs, once — plus the per-study scoring table:
-    // every FIT evaluation in the sweep is a flat gather over it
-    // (bit-identical to the naive metric; see metrics::FitTable)
-    let sens = gather(&trainer, ds.as_ref(), &fp, &ev, opt.trace)?;
+    // 2. sensitivity inputs, once (pipeline stage) — plus the per-study
+    // scoring table: every FIT evaluation in the sweep is a flat gather
+    // over it (bit-identical to the naive metric; see metrics::FitTable)
+    let sens_rc = pipe.sensitivity(rt, model, opt.fp_epochs, opt.seed, opt.trace)?;
+    let sens: &SensitivityReport = &sens_rc;
     let ftab = FitTable::new(&sens.inputs, &mm.block_sizes(), mm.n_unquantized(), &PRECISIONS);
 
     // 3-4. config sweep — distinct configs drawn serially (the sampler is
@@ -140,7 +143,7 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
         let mut out = Vec::with_capacity(configs.len());
         for (i, cfg) in configs.iter().enumerate() {
             out.push(evaluate_config(
-                rt, ds.as_ref(), &fp, &sens, &ftab, &ev, &ev_train, cfg, opt, i,
+                rt, ds.as_ref(), fp, sens, &ftab, &ev, &ev_train, cfg, opt, i,
             )?);
             if (i + 1) % 20 == 0 {
                 eprintln!("  [{model}] config {}/{}", i + 1, configs.len());
@@ -160,7 +163,7 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
             || Runtime::new(&root),
             |wrt, i| {
                 evaluate_config(
-                    wrt, ds.as_ref(), &fp, &sens, &ftab, &ev, &ev_train, &configs[i], opt, i,
+                    wrt, ds.as_ref(), fp, sens, &ftab, &ev, &ev_train, &configs[i], opt, i,
                 )
             },
         )?
@@ -183,14 +186,15 @@ pub fn run_study(rt: &Runtime, model: &str, opt: &StudyOptions) -> Result<StudyR
         })
         .collect();
 
-    Ok(StudyResult {
+    let res = StudyResult {
         model: model.to_string(),
         fp_test_score: fp_eval.score,
-        fp_losses,
         outcomes,
-        sens,
+        sens: sens.clone(),
         correlations,
-    })
+    };
+    pipe.study_store(rt, model, opt, &res)?;
+    Ok(res)
 }
 
 /// Score, QAT-fine-tune and evaluate one configuration of the sweep.

@@ -9,10 +9,10 @@
 
 use anyhow::Result;
 
-use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::experiments::SCALE_MODELS;
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::{md_table, Reporter};
-use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
-use crate::coordinator::trainer::dataset_for;
+use crate::coordinator::traces::{Estimator, TraceOptions};
 use crate::runtime::Runtime;
 use crate::stats::spearman;
 
@@ -33,29 +33,62 @@ impl Default for Fig1Options {
     }
 }
 
-pub fn run(rt: &Runtime, opt: &Fig1Options) -> Result<()> {
+impl Fig1Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Fig1Options::default();
+        Fig1Options {
+            fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+            seed: e.seed,
+            jobs: e.jobs,
+            ..d
+        }
+    }
+}
+
+/// The one EF + one Hessian run per model.
+fn trace_specs(opt: &Fig1Options) -> [(Estimator, TraceOptions); 2] {
+    let o = TraceOptions {
+        batch: opt.batch,
+        tol: opt.tol,
+        min_iters: 16,
+        max_iters: opt.max_iters,
+        seed: opt.seed,
+    };
+    [(Estimator::EmpiricalFisher, o), (Estimator::Hutchinson, o)]
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Fig1Options) -> Vec<StageRequest> {
+    let mut reqs = Vec::new();
+    for (model, _) in SCALE_MODELS {
+        reqs.push(StageRequest::TrainFp {
+            model: model.to_string(),
+            epochs: opt.fp_epochs,
+            seed: opt.seed,
+        });
+        for (est, o) in trace_specs(opt) {
+            reqs.push(StageRequest::Traces {
+                model: model.to_string(),
+                fp_epochs: opt.fp_epochs,
+                seed: opt.seed,
+                est,
+                opt: o,
+            });
+        }
+    }
+    reqs
+}
+
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Fig1Options) -> Result<()> {
     let rep = Reporter::from_env()?;
     let mut md = String::from("# Fig 1 / Fig 7 — per-block EF vs Hessian traces\n\n");
     let mut summary_rows = Vec::new();
 
     for (model, stands_for) in SCALE_MODELS {
         eprintln!("[fig1] {model}");
-        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
-        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
-        let engine = TraceEngine::new(rt, ds.as_ref());
-        let o = TraceOptions {
-            batch: opt.batch,
-            tol: opt.tol,
-            min_iters: 16,
-            max_iters: opt.max_iters,
-            seed: opt.seed,
-        };
-        let results = engine.run_many(
-            model,
-            &st.params,
-            &[(Estimator::EmpiricalFisher, o), (Estimator::Hutchinson, o)],
-            opt.jobs,
-        )?;
+        let results =
+            pipe.traces_many(rt, model, opt.fp_epochs, opt.seed, &trace_specs(opt), opt.jobs)?;
         let (ef, hess) = (&results[0], &results[1]);
 
         let lw = ef.w_traces.len();

@@ -6,10 +6,10 @@
 
 use anyhow::Result;
 
-use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::experiments::SCALE_MODELS;
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::Reporter;
-use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
-use crate::coordinator::trainer::dataset_for;
+use crate::coordinator::traces::{Estimator, TraceOptions};
 use crate::runtime::Runtime;
 
 pub struct Fig2Options {
@@ -28,6 +28,48 @@ impl Default for Fig2Options {
     }
 }
 
+impl Fig2Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Fig2Options::default();
+        Fig2Options {
+            iters: e.iters.unwrap_or(d.iters),
+            fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+            seed: e.seed,
+            jobs: e.jobs,
+            ..d
+        }
+    }
+}
+
+/// The one EF + one Hessian run per model.
+fn trace_specs(opt: &Fig2Options) -> [(Estimator, TraceOptions); 2] {
+    let o = TraceOptions::fixed_iters(opt.batch, opt.iters, opt.seed + 7);
+    [(Estimator::EmpiricalFisher, o), (Estimator::Hutchinson, o)]
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Fig2Options) -> Vec<StageRequest> {
+    let mut reqs = Vec::new();
+    for (model, _) in SCALE_MODELS {
+        reqs.push(StageRequest::TrainFp {
+            model: model.to_string(),
+            epochs: opt.fp_epochs,
+            seed: opt.seed,
+        });
+        for (est, o) in trace_specs(opt) {
+            reqs.push(StageRequest::Traces {
+                model: model.to_string(),
+                fp_epochs: opt.fp_epochs,
+                seed: opt.seed,
+                est,
+                opt: o,
+            });
+        }
+    }
+    reqs
+}
+
 /// Iterations for the running mean to stay within ±band of its final value.
 fn settle_iteration(history: &[f64], band: f64) -> usize {
     let last = *history.last().unwrap_or(&f64::NAN);
@@ -44,23 +86,15 @@ fn settle_iteration(history: &[f64], band: f64) -> usize {
     settle
 }
 
-pub fn run(rt: &Runtime, opt: &Fig2Options) -> Result<()> {
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Fig2Options) -> Result<()> {
     let rep = Reporter::from_env()?;
     let mut md = String::from("# Fig 2 — trace convergence (running mean of total weight trace)\n\n");
     md.push_str("| model | EF settle iters (±5%) | Hessian settle iters (±5%) |\n|---|---|---|\n");
 
     for (model, _) in SCALE_MODELS {
         eprintln!("[fig2] {model}");
-        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
-        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
-        let engine = TraceEngine::new(rt, ds.as_ref());
-        let o = TraceOptions::fixed_iters(opt.batch, opt.iters, opt.seed + 7);
-        let results = engine.run_many(
-            model,
-            &st.params,
-            &[(Estimator::EmpiricalFisher, o), (Estimator::Hutchinson, o)],
-            opt.jobs,
-        )?;
+        let results =
+            pipe.traces_many(rt, model, opt.fp_epochs, opt.seed, &trace_specs(opt), opt.jobs)?;
         let (ef, hess) = (&results[0], &results[1]);
 
         let rows: Vec<Vec<f64>> = (0..opt.iters as usize)

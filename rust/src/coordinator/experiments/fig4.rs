@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use crate::coordinator::evaluator::{metric_value, run_study, StudyOptions};
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::{md_table, Reporter};
 use crate::metrics::Metric;
 use crate::runtime::Runtime;
@@ -32,10 +33,45 @@ impl Default for Fig4Options {
     }
 }
 
-pub fn run(rt: &Runtime, opt: &Fig4Options) -> Result<()> {
+impl Fig4Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Fig4Options::default().study;
+        Fig4Options {
+            study: StudyOptions {
+                n_configs: e.configs.unwrap_or(d.n_configs),
+                fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+                qat_epochs: e.qat_epochs.unwrap_or(d.qat_epochs),
+                eval_n: e.eval_n.unwrap_or(d.eval_n),
+                seed: e.seed,
+                jobs: e.jobs,
+                ..d
+            },
+        }
+    }
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Fig4Options) -> Vec<StageRequest> {
+    vec![
+        StageRequest::TrainFp {
+            model: "unet".to_string(),
+            epochs: opt.study.fp_epochs,
+            seed: opt.study.seed,
+        },
+        StageRequest::Sensitivity {
+            model: "unet".to_string(),
+            fp_epochs: opt.study.fp_epochs,
+            seed: opt.study.seed,
+            trace: opt.study.trace,
+        },
+    ]
+}
+
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Fig4Options) -> Result<()> {
     let rep = Reporter::from_env()?;
     eprintln!("[fig4] unet study ({} configs)", opt.study.n_configs);
-    let res = run_study(rt, "unet", &opt.study)?;
+    let res = run_study(rt, pipe, "unet", &opt.study)?;
 
     // (a)/(b): trace profiles
     let lw = res.sens.inputs.w_traces.len();

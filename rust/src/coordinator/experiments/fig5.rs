@@ -7,15 +7,21 @@
 //! equal-magnitude line, validating the second-order (small-perturbation)
 //! expansion FIT rests on. We also report the fraction above the line.
 //!
+//! The per-configuration scans are independent, so they fan over the
+//! worker pool; each configuration's subsample RNG is derived from
+//! `(seed, config index)`, never from scan order, so every `--jobs`
+//! setting emits identical rows.
+//!
 //! (Fig 5b — FIT vs training accuracy — is emitted by the Table-2
 //! experiment, which owns the trained configurations.)
 
 use anyhow::Result;
 
-use crate::coordinator::experiments::get_trained;
+use crate::coordinator::parallel::{self, derive_seed};
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::Reporter;
 use crate::quant::{BitConfig, BitConfigSampler, UniformQuantizer, PRECISIONS};
-use crate::runtime::Runtime;
+use crate::runtime::{ModelManifest, Runtime};
 use crate::tensor::Pcg32;
 
 pub struct Fig5Options {
@@ -24,6 +30,9 @@ pub struct Fig5Options {
     pub max_points: usize,
     pub fp_epochs: usize,
     pub seed: u64,
+    /// Worker threads for the per-configuration scans (default 1; rows
+    /// are bit-identical at every setting).
+    pub jobs: usize,
 }
 
 impl Default for Fig5Options {
@@ -35,14 +44,72 @@ impl Default for Fig5Options {
             max_points: 20_000,
             fp_epochs: 30,
             seed: 0,
+            jobs: 1,
         }
     }
 }
 
-pub fn run(rt: &Runtime, opt: &Fig5Options) -> Result<()> {
+impl Fig5Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Fig5Options::default();
+        Fig5Options {
+            n_configs: e.configs.unwrap_or(d.n_configs),
+            fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+            seed: e.seed,
+            jobs: e.jobs,
+            ..d
+        }
+    }
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Fig5Options) -> Vec<StageRequest> {
+    vec![StageRequest::TrainFp {
+        model: opt.model.clone(),
+        epochs: opt.fp_epochs,
+        seed: opt.seed,
+    }]
+}
+
+/// Scan one configuration: (sampled scatter rows, points above the
+/// equal-magnitude line, points examined). Pure in `(inputs, index)`.
+fn scan_config(
+    mm: &ModelManifest,
+    params: &[f32],
+    cfg: &BitConfig,
+    stride: usize,
+    seed: u64,
+    index: usize,
+) -> (Vec<Vec<f64>>, u64, u64) {
+    let mut rows = Vec::new();
+    let mut above = 0u64;
+    let mut count = 0u64;
+    let mut k = 0usize;
+    let mut rng = Pcg32::new(derive_seed(seed, index as u64), 55);
+    for wb in &mm.weight_blocks {
+        let slab = &params[wb.offset..wb.offset + wb.size];
+        let q = UniformQuantizer::fit(slab, cfg.bits_w[wb.index]);
+        for &theta in slab {
+            let noise = (q.apply(theta) - theta).abs() as f64;
+            let mag = theta.abs() as f64;
+            count += 1;
+            if noise > mag {
+                above += 1;
+            }
+            if k % stride == 0 || (noise > mag && rng.uniform() < 0.1) {
+                rows.push(vec![mag, noise, cfg.bits_w[wb.index] as f64]);
+            }
+            k += 1;
+        }
+    }
+    (rows, above, count)
+}
+
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Fig5Options) -> Result<()> {
     let rep = Reporter::from_env()?;
     eprintln!("[fig5] {} noise-vs-magnitude over {} configs", opt.model, opt.n_configs);
-    let st = get_trained(rt, &opt.model, opt.fp_epochs, opt.seed)?;
+    let st = pipe.train_fp(rt, &opt.model, opt.fp_epochs, opt.seed)?;
     let mm = rt.model(&opt.model)?.clone();
 
     let mut sampler = BitConfigSampler::new(
@@ -56,30 +123,28 @@ pub fn run(rt: &Runtime, opt: &Fig5Options) -> Result<()> {
     let total_points: usize = configs.len() * mm.n_params;
     let stride = (total_points / opt.max_points).max(1);
 
+    // per-config scans are pure in (inputs, index): fan them out and
+    // merge in config order
+    let params: &[f32] = &st.params;
+    let scans = parallel::run_pool(
+        configs.len(),
+        opt.jobs,
+        || Ok(()),
+        |_, i| Ok(scan_config(&mm, params, &configs[i], stride, opt.seed, i)),
+    )?;
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut above = 0u64;
     let mut count = 0u64;
-    let mut k = 0usize;
-    let mut rng = Pcg32::new(opt.seed, 55);
-    for cfg in &configs {
-        for wb in &mm.weight_blocks {
-            let slab = &st.params[wb.offset..wb.offset + wb.size];
-            let q = UniformQuantizer::fit(slab, cfg.bits_w[wb.index]);
-            for &theta in slab {
-                let noise = (q.apply(theta) - theta).abs() as f64;
-                let mag = theta.abs() as f64;
-                count += 1;
-                if noise > mag {
-                    above += 1;
-                }
-                if k % stride == 0 || (noise > mag && rng.uniform() < 0.1) {
-                    rows.push(vec![mag, noise, cfg.bits_w[wb.index] as f64]);
-                }
-                k += 1;
-            }
-        }
+    for (r, a, c) in scans {
+        rows.extend(r);
+        above += a;
+        count += c;
     }
-    rep.csv("fig5a_noise_vs_magnitude.csv", &["param_magnitude", "noise_magnitude", "bits"], &rows)?;
+    rep.csv(
+        "fig5a_noise_vs_magnitude.csv",
+        &["param_magnitude", "noise_magnitude", "bits"],
+        &rows,
+    )?;
 
     let frac = above as f64 / count as f64;
     let md = format!(

@@ -6,10 +6,15 @@
 //! E[dtheta^2] = delta^2/12 is the right noise power. We report the
 //! chi-squared statistic against uniformity and the empirical/model noise
 //! power ratio per block.
+//!
+//! Each (block, precision) histogram is an independent pure computation,
+//! so the scan fans over the worker pool with bit-identical output at
+//! every `--jobs` setting.
 
 use anyhow::Result;
 
-use crate::coordinator::experiments::get_trained;
+use crate::coordinator::parallel;
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::{md_table, Reporter};
 use crate::quant::UniformQuantizer;
 use crate::runtime::Runtime;
@@ -21,6 +26,9 @@ pub struct Fig9Options {
     pub n_bins: usize,
     pub fp_epochs: usize,
     pub seed: u64,
+    /// Worker threads for the per-(block, precision) histograms
+    /// (default 1; output is bit-identical at every setting).
+    pub jobs: usize,
 }
 
 impl Default for Fig9Options {
@@ -31,25 +39,58 @@ impl Default for Fig9Options {
             n_bins: 21,
             fp_epochs: 30,
             seed: 0,
+            jobs: 1,
         }
     }
 }
 
-pub fn run(rt: &Runtime, opt: &Fig9Options) -> Result<()> {
+impl Fig9Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Fig9Options::default();
+        Fig9Options {
+            fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+            seed: e.seed,
+            jobs: e.jobs,
+            ..d
+        }
+    }
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Fig9Options) -> Vec<StageRequest> {
+    vec![StageRequest::TrainFp {
+        model: opt.model.clone(),
+        epochs: opt.fp_epochs,
+        seed: opt.seed,
+    }]
+}
+
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Fig9Options) -> Result<()> {
     let rep = Reporter::from_env()?;
     eprintln!("[fig9] {} quantization-error distribution", opt.model);
-    let st = get_trained(rt, &opt.model, opt.fp_epochs, opt.seed)?;
+    let st = pipe.train_fp(rt, &opt.model, opt.fp_epochs, opt.seed)?;
     let mm = rt.model(&opt.model)?.clone();
 
-    let mut md_rows = Vec::new();
-    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
-    for wb in &mm.weight_blocks {
-        let slab = &st.params[wb.offset..wb.offset + wb.size];
-        for &bits in &opt.bits {
+    // one independent job per (block, precision) cell, in emission order
+    let cells: Vec<(usize, u32)> = mm
+        .weight_blocks
+        .iter()
+        .flat_map(|wb| opt.bits.iter().map(|&b| (wb.index, b)))
+        .collect();
+    let params: &[f32] = &st.params;
+    let scanned = parallel::run_pool(
+        cells.len(),
+        opt.jobs,
+        || Ok(()),
+        |_, i| {
+            let (bi, bits) = cells[i];
+            let wb = &mm.weight_blocks[bi];
+            let slab = &params[wb.offset..wb.offset + wb.size];
             let q = UniformQuantizer::fit(slab, bits);
             let delta = q.delta() as f64;
             if delta == 0.0 {
-                continue;
+                return Ok(None);
             }
             let mut h = Histogram::new(-0.5, 0.5, opt.n_bins);
             for &theta in slab {
@@ -59,19 +100,25 @@ pub fn run(rt: &Runtime, opt: &Fig9Options) -> Result<()> {
             let dof = (opt.n_bins - 1) as f64;
             let emp = q.empirical_noise_power(slab);
             let model_np = q.noise_power();
-            md_rows.push(vec![
+            let md_row = vec![
                 wb.name.clone(),
                 bits.to_string(),
                 format!("{:.1}", chi2),
                 format!("{:.1}", chi2 / dof),
                 format!("{:.3}", emp / model_np.max(1e-300)),
-            ]);
+            ];
             // histogram row: block_idx, bits, then normalized bin masses
             let total: u64 = h.counts().iter().sum();
             let mut row = vec![wb.index as f64, bits as f64];
             row.extend(h.counts().iter().map(|&c| c as f64 / total.max(1) as f64));
-            csv_rows.push(row);
-        }
+            Ok(Some((md_row, row)))
+        },
+    )?;
+    let mut md_rows = Vec::new();
+    let mut csv_rows: Vec<Vec<f64>> = Vec::new();
+    for cell in scanned.into_iter().flatten() {
+        md_rows.push(cell.0);
+        csv_rows.push(cell.1);
     }
 
     let bin_headers: Vec<String> = (0..opt.n_bins).map(|i| format!("bin{i}")).collect();

@@ -15,8 +15,8 @@ pub mod table3;
 
 use anyhow::Result;
 
+use super::pipeline::Pipeline;
 use super::state::ModelState;
-use super::trainer::{dataset_for, Trainer};
 use crate::runtime::Runtime;
 
 /// The Table-1 / Fig-1/2/7 scale ladder and the paper models they stand
@@ -36,37 +36,19 @@ pub const STUDIES: [(&str, &str, &str, bool); 4] = [
     ("D", "cnn_mnist", "synmnist", false),
 ];
 
-/// Load a cached FP checkpoint or train one (results/ckpt/<model>.bin).
-/// Training state is deterministic in (model, seed, epochs), so a cache
-/// hit replays the same experiment inputs.
-pub fn get_trained(
-    rt: &Runtime,
-    model: &str,
-    epochs: usize,
-    seed: u64,
-) -> Result<ModelState> {
-    let dir = std::path::PathBuf::from(
-        std::env::var_os("FITQ_RESULTS").unwrap_or_else(|| "results".into()),
-    )
-    .join("ckpt");
-    std::fs::create_dir_all(&dir)?;
-    let path = dir.join(format!("{model}_s{seed}_e{epochs}.bin"));
-    if path.exists() {
-        if let Ok(st) = ModelState::load(&path, model) {
-            if st.n_params() == rt.model(model)?.n_params {
-                return Ok(st);
-            }
-        }
-    }
-    let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
-    let mut trainer = Trainer::new(rt, ds.as_ref());
-    let mut st = ModelState::init(rt, model, seed as u32)?;
-    let losses = trainer.train(&mut st, epochs)?;
-    eprintln!(
-        "  [{model}] FP trained {epochs} epochs, loss {:.4} -> {:.4}",
-        losses.first().copied().unwrap_or(f64::NAN),
-        losses.last().copied().unwrap_or(f64::NAN)
-    );
-    st.save(&path)?;
-    Ok(st)
+/// Load-or-train the FP checkpoint for `(model, seed, epochs)` — a thin
+/// wrapper over the pipeline's `train_fp` stage for callers (examples,
+/// one-off CLI commands) that don't carry a [`Pipeline`] of their own.
+///
+/// Checkpoints live in the content-addressed cache at
+/// `results/cache/train_fp_<digest>.bin`, keyed by a digest of the full
+/// input set (model identity, seed, epochs) and validated by the cache
+/// header's digests — not by parameter count alone. Pre-pipeline
+/// checkpoints under `results/ckpt/{model}_s{seed}_e{epochs}.bin` are
+/// adopted into the cache on first use. Training state is deterministic
+/// in the key, so a cache hit replays the same experiment inputs.
+pub fn get_trained(rt: &Runtime, model: &str, epochs: usize, seed: u64) -> Result<ModelState> {
+    let pipe = Pipeline::from_env()?;
+    let st = pipe.train_fp(rt, model, epochs, seed)?;
+    Ok((*st).clone())
 }

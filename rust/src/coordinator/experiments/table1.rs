@@ -4,13 +4,17 @@
 //! Paper protocol (Appendix C): statistics over `runs` runs of `iters`
 //! iterations each; variances normalized w.r.t. trace magnitude and
 //! averaged across blocks; speedup s = (sigma_H^2 t_H)/(sigma_EF^2 t_EF).
+//!
+//! The FP checkpoints and estimator runs are pipeline stages: warm reruns
+//! reproduce the cold run's CSV byte-for-byte from cache (the wall-clock
+//! columns are part of the cached stage outputs).
 
 use anyhow::Result;
 
-use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::experiments::SCALE_MODELS;
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::{md_table, Reporter};
-use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
-use crate::coordinator::trainer::dataset_for;
+use crate::coordinator::traces::{Estimator, TraceOptions};
 use crate::runtime::Runtime;
 use crate::stats::RunningStats;
 
@@ -33,6 +37,55 @@ impl Default for Table1Options {
     }
 }
 
+impl Table1Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Table1Options::default();
+        Table1Options {
+            iters: e.iters.unwrap_or(d.iters),
+            runs: e.runs.unwrap_or(d.runs),
+            fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+            seed: e.seed,
+            jobs: e.jobs,
+            ..d
+        }
+    }
+}
+
+/// The estimator runs of one model row, in sweep order (run-major).
+fn trace_specs(opt: &Table1Options) -> Vec<(Estimator, TraceOptions)> {
+    let mut specs = Vec::with_capacity(opt.runs * 2);
+    for run_i in 0..opt.runs {
+        let seed = opt.seed + run_i as u64 + 1;
+        for est in [Estimator::EmpiricalFisher, Estimator::Hutchinson] {
+            specs.push((est, TraceOptions::fixed_iters(opt.batch, opt.iters, seed)));
+        }
+    }
+    specs
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Table1Options) -> Vec<StageRequest> {
+    let mut reqs = Vec::new();
+    for (model, _) in SCALE_MODELS {
+        reqs.push(StageRequest::TrainFp {
+            model: model.to_string(),
+            epochs: opt.fp_epochs,
+            seed: opt.seed,
+        });
+        for (est, o) in trace_specs(opt) {
+            reqs.push(StageRequest::Traces {
+                model: model.to_string(),
+                fp_epochs: opt.fp_epochs,
+                seed: opt.seed,
+                est,
+                opt: o,
+            });
+        }
+    }
+    reqs
+}
+
 #[derive(Debug, Clone)]
 pub struct Table1Row {
     pub model: String,
@@ -44,27 +97,17 @@ pub struct Table1Row {
     pub speedup: f64,
 }
 
-pub fn run(rt: &Runtime, opt: &Table1Options) -> Result<Vec<Table1Row>> {
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Table1Options) -> Result<Vec<Table1Row>> {
     let rep = Reporter::from_env()?;
     let mut rows = Vec::new();
     for (model, stands_for) in SCALE_MODELS {
         eprintln!("[table1] {model} ({stands_for})");
-        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
-        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
-        let engine = TraceEngine::new(rt, ds.as_ref());
-
         let mut stats = [[RunningStats::new(), RunningStats::new()], [
             RunningStats::new(),
             RunningStats::new(),
         ]]; // [est][var|time]
-        let mut specs = Vec::with_capacity(opt.runs * 2);
-        for run_i in 0..opt.runs {
-            let seed = opt.seed + run_i as u64 + 1;
-            for est in [Estimator::EmpiricalFisher, Estimator::Hutchinson] {
-                specs.push((est, TraceOptions::fixed_iters(opt.batch, opt.iters, seed)));
-            }
-        }
-        let results = engine.run_many(model, &st.params, &specs, opt.jobs)?;
+        let specs = trace_specs(opt);
+        let results = pipe.traces_many(rt, model, opt.fp_epochs, opt.seed, &specs, opt.jobs)?;
         for ((est, _), r) in specs.iter().zip(&results) {
             let ei = match est {
                 Estimator::EmpiricalFisher => 0,

@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::coordinator::evaluator::{metric_value, run_study, StudyOptions, StudyResult};
 use crate::coordinator::experiments::STUDIES;
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::{fmt, md_table, Reporter};
 use crate::metrics::Metric;
 use crate::quant::PRECISIONS;
@@ -35,16 +36,64 @@ impl Default for Table2Options {
     }
 }
 
-pub fn run(rt: &Runtime, opt: &Table2Options) -> Result<Vec<(String, StudyResult)>> {
+impl Table2Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = StudyOptions::default();
+        Table2Options {
+            study: StudyOptions {
+                n_configs: e.configs.unwrap_or(d.n_configs),
+                fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+                qat_epochs: e.qat_epochs.unwrap_or(d.qat_epochs),
+                eval_n: e.eval_n.unwrap_or(d.eval_n),
+                seed: e.seed,
+                jobs: e.jobs,
+                ..d
+            },
+            only: e.only.clone(),
+        }
+    }
+
+    /// The studies this run covers, in `STUDIES` order.
+    fn selected(&self) -> Vec<(&'static str, &'static str, &'static str, bool)> {
+        STUDIES
+            .into_iter()
+            .filter(|(exp, ..)| self.only.is_empty() || self.only.iter().any(|o| o == exp))
+            .collect()
+    }
+}
+
+/// Stage-graph dependencies (registry prepass): one checkpoint + one
+/// sensitivity report per selected study.
+pub fn stages(opt: &Table2Options) -> Vec<StageRequest> {
+    let mut reqs = Vec::new();
+    for (_, model, _, _) in opt.selected() {
+        reqs.push(StageRequest::TrainFp {
+            model: model.to_string(),
+            epochs: opt.study.fp_epochs,
+            seed: opt.study.seed,
+        });
+        reqs.push(StageRequest::Sensitivity {
+            model: model.to_string(),
+            fp_epochs: opt.study.fp_epochs,
+            seed: opt.study.seed,
+            trace: opt.study.trace,
+        });
+    }
+    reqs
+}
+
+pub fn run(
+    rt: &Runtime,
+    pipe: &Pipeline,
+    opt: &Table2Options,
+) -> Result<Vec<(String, StudyResult)>> {
     let rep = Reporter::from_env()?;
     let mut results = Vec::new();
 
-    for (exp, model, dataset, has_bn) in STUDIES {
-        if !opt.only.is_empty() && !opt.only.iter().any(|o| o == exp) {
-            continue;
-        }
+    for (exp, model, dataset, has_bn) in opt.selected() {
         eprintln!("[table2] experiment {exp}: {model} on {dataset} (bn={has_bn})");
-        let res = run_study(rt, model, &opt.study)?;
+        let res = run_study(rt, pipe, model, &opt.study)?;
 
         // scatter data for Fig 3 (every metric value + outcome per config)
         let header: Vec<&str> = ["config", "mean_bits", "test_score", "train_score"]

@@ -7,10 +7,10 @@
 
 use anyhow::Result;
 
-use crate::coordinator::experiments::{get_trained, SCALE_MODELS};
+use crate::coordinator::experiments::SCALE_MODELS;
+use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
 use crate::coordinator::report::{md_table, Reporter};
-use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions};
-use crate::coordinator::trainer::dataset_for;
+use crate::coordinator::traces::{Estimator, TraceOptions};
 use crate::runtime::Runtime;
 use crate::stats::RunningStats;
 
@@ -41,29 +41,73 @@ impl Default for Table3Options {
     }
 }
 
-pub fn run(rt: &Runtime, opt: &Table3Options) -> Result<()> {
+impl Table3Options {
+    /// Typed options from the registry's uniform flag schema.
+    pub fn from_exp(e: &ExpOptions) -> Self {
+        let d = Table3Options::default();
+        Table3Options {
+            iters: e.iters.unwrap_or(d.iters),
+            runs: e.runs.unwrap_or(d.runs),
+            fp_epochs: e.fp_epochs.unwrap_or(d.fp_epochs),
+            seed: e.seed,
+            models: if e.models.is_empty() { d.models.clone() } else { e.models.clone() },
+            jobs: e.jobs,
+            ..d
+        }
+    }
+}
+
+/// The estimator runs of one (model, batch) cell, est-major run-minor —
+/// the same visit order as the original serial loop.
+fn trace_specs(opt: &Table3Options, batch: usize) -> Vec<(Estimator, TraceOptions)> {
+    let mut specs = Vec::with_capacity(2 * opt.runs);
+    for est in [Estimator::EmpiricalFisher, Estimator::Hutchinson] {
+        for r_i in 0..opt.runs {
+            let o = TraceOptions::fixed_iters(batch, opt.iters, opt.seed + 31 * r_i as u64);
+            specs.push((est, o));
+        }
+    }
+    specs
+}
+
+/// Stage-graph dependencies (registry prepass).
+pub fn stages(opt: &Table3Options) -> Vec<StageRequest> {
+    let mut reqs = Vec::new();
+    for model in &opt.models {
+        reqs.push(StageRequest::TrainFp {
+            model: model.clone(),
+            epochs: opt.fp_epochs,
+            seed: opt.seed,
+        });
+        for &b in &opt.batches {
+            for (est, o) in trace_specs(opt, b) {
+                reqs.push(StageRequest::Traces {
+                    model: model.clone(),
+                    fp_epochs: opt.fp_epochs,
+                    seed: opt.seed,
+                    est,
+                    opt: o,
+                });
+            }
+        }
+    }
+    reqs
+}
+
+pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Table3Options) -> Result<()> {
     let rep = Reporter::from_env()?;
     let mut csv_rows: Vec<Vec<f64>> = Vec::new();
     let mut md = String::from("# Tables 3-4 — estimator variance / iteration time vs batch size\n\n");
 
     for model in &opt.models {
         eprintln!("[table3] {model}");
-        let st = get_trained(rt, model, opt.fp_epochs, opt.seed)?;
-        let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
-        let engine = TraceEngine::new(rt, ds.as_ref());
         let mut md_rows = Vec::new();
         for &b in &opt.batches {
             let mut cells = vec![format!("{b}")];
             let mut row = vec![model_index(model) as f64, b as f64];
-            // est-major, run-minor — the same visit order as the serial loop
-            let mut specs = Vec::with_capacity(2 * opt.runs);
-            for est in [Estimator::EmpiricalFisher, Estimator::Hutchinson] {
-                for r_i in 0..opt.runs {
-                    let o = TraceOptions::fixed_iters(b, opt.iters, opt.seed + 31 * r_i as u64);
-                    specs.push((est, o));
-                }
-            }
-            let results = engine.run_many(model, &st.params, &specs, opt.jobs)?;
+            let specs = trace_specs(opt, b);
+            let results =
+                pipe.traces_many(rt, model, opt.fp_epochs, opt.seed, &specs, opt.jobs)?;
             // always emit both estimator column groups, even at --runs 0,
             // so rows stay aligned with the CSV/markdown headers
             for ei in 0..2 {

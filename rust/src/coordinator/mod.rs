@@ -8,6 +8,10 @@
 //! - `evaluator`: the train-hundreds-of-configs rank-correlation pipeline.
 //! - `parallel`: the scoped-thread worker pool the evaluator and trace
 //!   engine fan out on, plus the deterministic per-job seed derivation.
+//! - `pipeline`: the stage-graph experiment pipeline — content-addressed
+//!   artifact cache, typed `train_fp → traces/sensitivity → study` stages,
+//!   and the declarative experiment registry with cross-experiment
+//!   stage-deduping scheduling.
 //! - `search` / `allocate`: Pareto front + greedy and exact budgeted bit
 //!   allocation, all table-driven over the shared `metrics::FitTable`.
 //! - `experiments`: one module per paper table/figure.
@@ -17,6 +21,7 @@ pub mod allocate;
 pub mod evaluator;
 pub mod experiments;
 pub mod parallel;
+pub mod pipeline;
 pub mod report;
 pub mod search;
 pub mod sensitivity;
@@ -27,6 +32,7 @@ pub mod trainer;
 pub use allocate::{exact_allocate, exact_allocate_table};
 pub use evaluator::{run_study, StudyOptions, StudyResult};
 pub use parallel::{derive_seed, run_pool};
+pub use pipeline::{Pipeline, StageCounters, StageRequest};
 pub use search::{
     greedy_allocate, greedy_allocate_naive, greedy_allocate_table, pareto_front,
     pareto_front_scores, score, ScoredConfig,

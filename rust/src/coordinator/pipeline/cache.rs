@@ -1,0 +1,198 @@
+//! Content-addressed artifact store under `results/cache/`.
+//!
+//! Every entry is keyed by a [`Digest`](super::digest::Digest) of the full
+//! input set of the stage that produced it (model identity, seed, epochs,
+//! trace options, …) and stored as `<kind>_<key-hex>.bin` with a versioned
+//! header:
+//!
+//! ```text
+//! [magic "FITQCACH"][container u32][kind str][schema u32]
+//! [key digest 16B][payload len u64][payload digest 16B][payload]
+//! ```
+//!
+//! `load` re-validates *everything* — magic, container and schema versions,
+//! kind, key digest, length, and the payload's own digest — and returns
+//! `None` on any mismatch, so corrupt, truncated, renamed, or stale entries
+//! degrade to a recompute, never to wrong results. Writes go through a
+//! temp file + rename so a crash mid-write leaves no half-entry behind.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{ByteReader, ByteWriter};
+use super::digest::{digest_bytes, Digest};
+
+const MAGIC: &[u8; 8] = b"FITQCACH";
+/// Version of the container layout itself (headers), independent of the
+/// per-kind payload schema versions in `codec`.
+pub const CONTAINER_VERSION: u32 = 1;
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory of digest-keyed, header-validated binary entries.
+#[derive(Debug, Clone)]
+pub struct ArtifactCache {
+    dir: PathBuf,
+}
+
+impl ArtifactCache {
+    pub fn new(dir: impl AsRef<Path>) -> Result<ArtifactCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(ArtifactCache { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// On-disk location of an entry (exists or not).
+    pub fn entry_path(&self, kind: &str, key: &Digest) -> PathBuf {
+        self.dir.join(format!("{kind}_{}.bin", key.hex()))
+    }
+
+    /// Write an entry atomically (temp file + rename). Overwrites any
+    /// previous entry for the same `(kind, key)`.
+    pub fn store(&self, kind: &str, schema: u32, key: &Digest, payload: &[u8]) -> Result<PathBuf> {
+        let mut w = ByteWriter::new();
+        w.raw(MAGIC);
+        w.u32(CONTAINER_VERSION);
+        w.str(kind);
+        w.u32(schema);
+        w.raw(&key.to_le_bytes());
+        w.u64(payload.len() as u64);
+        w.raw(&digest_bytes(payload).to_le_bytes());
+        w.raw(payload);
+        let path = self.entry_path(kind, key);
+        let tmp = self.dir.join(format!(
+            ".{kind}_{}.{}.{}.tmp",
+            key.hex(),
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, w.into_bytes())
+            .with_context(|| format!("writing cache entry {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing cache entry {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load and fully validate an entry; any mismatch (missing file, bad
+    /// magic, version skew, wrong kind/key, truncation, payload-digest
+    /// mismatch) is a miss.
+    pub fn load(&self, kind: &str, schema: u32, key: &Digest) -> Option<Vec<u8>> {
+        let bytes = std::fs::read(self.entry_path(kind, key)).ok()?;
+        Self::validate(&bytes, kind, schema, key).ok()
+    }
+
+    fn validate(bytes: &[u8], kind: &str, schema: u32, key: &Digest) -> Result<Vec<u8>> {
+        let mut r = ByteReader::new(bytes);
+        if r.raw(8)? != MAGIC {
+            bail!("bad magic");
+        }
+        if r.u32()? != CONTAINER_VERSION {
+            bail!("container version skew");
+        }
+        if r.str()? != kind {
+            bail!("kind mismatch");
+        }
+        if r.u32()? != schema {
+            bail!("schema version skew");
+        }
+        if Digest::from_le_bytes(r.raw(16)?.try_into().unwrap()) != *key {
+            bail!("key digest mismatch");
+        }
+        let len = r.u64()? as usize;
+        let stored = Digest::from_le_bytes(r.raw(16)?.try_into().unwrap());
+        let payload = r.raw(len)?.to_vec();
+        r.done()?;
+        if digest_bytes(&payload) != stored {
+            bail!("payload digest mismatch");
+        }
+        Ok(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::digest::Hasher;
+
+    fn tmp_cache(tag: &str) -> ArtifactCache {
+        let dir = std::env::temp_dir().join(format!("fitq_cache_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        ArtifactCache::new(&dir).unwrap()
+    }
+
+    fn key(n: u64) -> Digest {
+        Hasher::new().u64(n).finish()
+    }
+
+    #[test]
+    fn roundtrip_hits() {
+        let c = tmp_cache("roundtrip");
+        let k = key(1);
+        let payload = b"stage output bytes".to_vec();
+        c.store("trace", 1, &k, &payload).unwrap();
+        assert_eq!(c.load("trace", 1, &k), Some(payload));
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn missing_wrong_kind_or_wrong_key_miss() {
+        let c = tmp_cache("miss");
+        let k = key(2);
+        assert_eq!(c.load("trace", 1, &k), None, "missing file");
+        c.store("trace", 1, &k, b"x").unwrap();
+        assert_eq!(c.load("sens", 1, &k), None, "different kind");
+        assert_eq!(c.load("trace", 1, &key(3)), None, "different key");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn schema_bump_invalidates() {
+        let c = tmp_cache("schema");
+        let k = key(4);
+        c.store("study", 1, &k, b"v1 payload").unwrap();
+        assert!(c.load("study", 1, &k).is_some());
+        assert_eq!(c.load("study", 2, &k), None, "bumped schema is a miss");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn truncated_and_corrupt_entries_miss() {
+        let c = tmp_cache("corrupt");
+        let k = key(5);
+        let path = c.store("ckpt", 1, &k, b"a long enough payload").unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [0, 4, 12, full.len() - 3] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert_eq!(c.load("ckpt", 1, &k), None, "truncated at {cut}");
+        }
+        // flip one payload byte: header parses, payload digest catches it
+        let mut flipped = full.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0xff;
+        std::fs::write(&path, &flipped).unwrap();
+        assert_eq!(c.load("ckpt", 1, &k), None, "payload bitflip");
+        // restore and confirm it hits again
+        std::fs::write(&path, &full).unwrap();
+        assert!(c.load("ckpt", 1, &k).is_some());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn entry_paths_are_digest_addressed() {
+        let c = tmp_cache("paths");
+        let k = key(6);
+        let p = c.entry_path("trace", &k);
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.starts_with("trace_"));
+        assert!(name.ends_with(".bin"));
+        assert!(name.contains(&k.hex()));
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+}

@@ -1,0 +1,505 @@
+//! Binary serialization for stage outputs that lack an on-disk form.
+//!
+//! `ModelState` already has its own checkpoint layout (`state.rs`); this
+//! module gives the remaining stage outputs — `TraceResult`,
+//! `SensitivityReport`, and the `StudyResult` outcome tables — a compact
+//! little-endian encoding for the artifact cache. Every numeric field round
+//! trips bit-exactly (floats travel as IEEE-754 bit patterns), which is
+//! what makes "warm run reproduces the cold run's CSVs byte-for-byte" hold.
+//!
+//! Each payload kind carries a schema version (`*_SCHEMA` below) in the
+//! cache header; bump it whenever the field list changes and old entries
+//! invalidate themselves into recomputes instead of misparsing.
+
+use anyhow::{bail, Result};
+
+use super::super::evaluator::{ConfigOutcome, StudyResult};
+use super::super::sensitivity::SensitivityReport;
+use super::super::traces::{Estimator, TraceResult};
+use super::super::trainer::ActRanges;
+use crate::metrics::{Metric, SensitivityInputs};
+use crate::quant::BitConfig;
+
+/// Schema versions, one per cached payload kind (the checkpoint kind
+/// reuses `ModelState`'s own layout and versions independently).
+///
+/// Study entries embed a copy of their sensitivity report (see
+/// [`encode_study`]), so a fix that invalidates sensitivity *values* —
+/// not just their layout — must bump `STUDY_SCHEMA` alongside
+/// `SENSITIVITY_SCHEMA`.
+pub const TRACE_SCHEMA: u32 = 1;
+pub const SENSITIVITY_SCHEMA: u32 = 1;
+pub const STUDY_SCHEMA: u32 = 1;
+pub const CKPT_SCHEMA: u32 = 1;
+
+/// Little-endian byte sink for cache payloads and headers.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.raw(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.raw(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.raw(s.as_bytes());
+    }
+
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+}
+
+/// Bounds-checked reader over a payload; every overrun is a plain error so
+/// a truncated or corrupt entry decodes into a cache miss, never a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("payload truncated: need {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.raw(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.raw(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.raw(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other}"),
+        }
+    }
+
+    /// Element-count prefix, pre-validated against the bytes actually left
+    /// so a corrupt length can't trigger a huge allocation.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem_bytes) {
+            Some(total) if total <= self.remaining() => Ok(n),
+            _ => bail!("payload truncated: length prefix {n} exceeds remaining bytes"),
+        }
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        Ok(String::from_utf8_lossy(self.raw(n)?).into_owned())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_prefix(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len_prefix(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    /// Assert the payload was fully consumed (trailing garbage is corruption).
+    pub fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("payload has {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+fn estimator_tag(e: Estimator) -> u8 {
+    match e {
+        Estimator::EmpiricalFisher => 0,
+        Estimator::Hutchinson => 1,
+    }
+}
+
+fn estimator_from_tag(tag: u8) -> Result<Estimator> {
+    Ok(match tag {
+        0 => Estimator::EmpiricalFisher,
+        1 => Estimator::Hutchinson,
+        other => bail!("unknown estimator tag {other}"),
+    })
+}
+
+fn metric_tag(m: Metric) -> u8 {
+    Metric::ALL.iter().position(|x| *x == m).expect("metric in ALL") as u8
+}
+
+fn metric_from_tag(tag: u8) -> Result<Metric> {
+    match Metric::ALL.get(tag as usize) {
+        Some(m) => Ok(*m),
+        None => bail!("unknown metric tag {tag}"),
+    }
+}
+
+fn write_trace(w: &mut ByteWriter, t: &TraceResult) {
+    w.u8(estimator_tag(t.estimator));
+    w.f64s(&t.w_traces);
+    w.f64s(&t.a_traces);
+    w.f64s(&t.w_std_errors);
+    w.u64(t.iterations);
+    w.f64(t.iter_time_s);
+    w.f64(t.norm_variance);
+    w.f64s(&t.history_total);
+}
+
+fn read_trace(r: &mut ByteReader) -> Result<TraceResult> {
+    Ok(TraceResult {
+        estimator: estimator_from_tag(r.u8()?)?,
+        w_traces: r.f64s()?,
+        a_traces: r.f64s()?,
+        w_std_errors: r.f64s()?,
+        iterations: r.u64()?,
+        iter_time_s: r.f64()?,
+        norm_variance: r.f64()?,
+        history_total: r.f64s()?,
+    })
+}
+
+fn write_sensitivity(w: &mut ByteWriter, s: &SensitivityReport) {
+    w.f64s(&s.inputs.w_traces);
+    w.f64s(&s.inputs.a_traces);
+    w.f64s(&s.inputs.w_lo);
+    w.f64s(&s.inputs.w_hi);
+    w.f64s(&s.inputs.a_lo);
+    w.f64s(&s.inputs.a_hi);
+    w.u64(s.inputs.bn_gamma.len() as u64);
+    for &g in &s.inputs.bn_gamma {
+        w.opt_f64(g);
+    }
+    w.f32s(&s.act.lo);
+    w.f32s(&s.act.hi);
+    write_trace(w, &s.trace);
+}
+
+fn read_sensitivity(r: &mut ByteReader) -> Result<SensitivityReport> {
+    let w_traces = r.f64s()?;
+    let a_traces = r.f64s()?;
+    let w_lo = r.f64s()?;
+    let w_hi = r.f64s()?;
+    let a_lo = r.f64s()?;
+    let a_hi = r.f64s()?;
+    let n_gamma = r.u64()? as usize;
+    let mut bn_gamma = Vec::with_capacity(n_gamma.min(r.remaining()));
+    for _ in 0..n_gamma {
+        bn_gamma.push(r.opt_f64()?);
+    }
+    let inputs = SensitivityInputs { w_traces, a_traces, w_lo, w_hi, a_lo, a_hi, bn_gamma };
+    let act = ActRanges { lo: r.f32s()?, hi: r.f32s()? };
+    let trace = read_trace(r)?;
+    Ok(SensitivityReport { inputs, act, trace })
+}
+
+/// Serialize a converged trace run for the `traces` cache kind.
+pub fn encode_trace(t: &TraceResult) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    write_trace(&mut w, t);
+    w.into_bytes()
+}
+
+pub fn decode_trace(bytes: &[u8]) -> Result<TraceResult> {
+    let mut r = ByteReader::new(bytes);
+    let t = read_trace(&mut r)?;
+    r.done()?;
+    Ok(t)
+}
+
+/// Serialize a gathered sensitivity report for the `sensitivity` cache kind.
+pub fn encode_sensitivity(s: &SensitivityReport) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    write_sensitivity(&mut w, s);
+    w.into_bytes()
+}
+
+pub fn decode_sensitivity(bytes: &[u8]) -> Result<SensitivityReport> {
+    let mut r = ByteReader::new(bytes);
+    let s = read_sensitivity(&mut r)?;
+    r.done()?;
+    Ok(s)
+}
+
+/// Serialize a full study outcome table for the `study` cache kind.
+///
+/// Deliberately self-contained: the embedded `SensitivityReport`
+/// duplicates the sensitivity stage's own cache entry, so a study entry
+/// stays valid even if the sensitivity entry is evicted or its schema
+/// bumped. The cost is one extra copy of the per-block vectors per study
+/// — small next to the outcome table it annotates.
+pub fn encode_study(s: &StudyResult) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.str(&s.model);
+    w.f64(s.fp_test_score);
+    w.u64(s.outcomes.len() as u64);
+    for o in &s.outcomes {
+        w.u32s(&o.cfg.bits_w);
+        w.u32s(&o.cfg.bits_a);
+        w.u64(o.metrics.len() as u64);
+        for &(m, v) in &o.metrics {
+            w.u8(metric_tag(m));
+            w.opt_f64(v);
+        }
+        w.f64(o.test_score);
+        w.f64(o.train_score);
+        w.f64(o.mean_bits);
+    }
+    write_sensitivity(&mut w, &s.sens);
+    w.u64(s.correlations.len() as u64);
+    for &(m, v) in &s.correlations {
+        w.u8(metric_tag(m));
+        w.opt_f64(v);
+    }
+    w.into_bytes()
+}
+
+pub fn decode_study(bytes: &[u8]) -> Result<StudyResult> {
+    let mut r = ByteReader::new(bytes);
+    let model = r.str()?;
+    let fp_test_score = r.f64()?;
+    let n_out = r.u64()? as usize;
+    let mut outcomes = Vec::with_capacity(n_out.min(r.remaining()));
+    for _ in 0..n_out {
+        let cfg = BitConfig { bits_w: r.u32s()?, bits_a: r.u32s()? };
+        let n_m = r.u64()? as usize;
+        let mut metrics = Vec::with_capacity(n_m.min(r.remaining()));
+        for _ in 0..n_m {
+            let m = metric_from_tag(r.u8()?)?;
+            metrics.push((m, r.opt_f64()?));
+        }
+        outcomes.push(ConfigOutcome {
+            cfg,
+            metrics,
+            test_score: r.f64()?,
+            train_score: r.f64()?,
+            mean_bits: r.f64()?,
+        });
+    }
+    let sens = read_sensitivity(&mut r)?;
+    let n_c = r.u64()? as usize;
+    let mut correlations = Vec::with_capacity(n_c.min(r.remaining()));
+    for _ in 0..n_c {
+        let m = metric_from_tag(r.u8()?)?;
+        correlations.push((m, r.opt_f64()?));
+    }
+    r.done()?;
+    Ok(StudyResult { model, fp_test_score, outcomes, sens, correlations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> TraceResult {
+        TraceResult {
+            estimator: Estimator::Hutchinson,
+            w_traces: vec![1.5, -2.25, 0.0],
+            a_traces: vec![3.5],
+            w_std_errors: vec![0.1, 0.2, 0.3],
+            iterations: 42,
+            iter_time_s: 0.0125,
+            norm_variance: 7.75,
+            history_total: vec![1.0, 1.25, 1.5],
+        }
+    }
+
+    fn sample_sensitivity() -> SensitivityReport {
+        SensitivityReport {
+            inputs: SensitivityInputs {
+                w_traces: vec![10.0, 2.0],
+                a_traces: vec![4.0],
+                w_lo: vec![-1.0, -0.5],
+                w_hi: vec![1.0, 0.5],
+                a_lo: vec![0.0],
+                a_hi: vec![6.0],
+                bn_gamma: vec![Some(1.0), None],
+            },
+            act: ActRanges { lo: vec![0.0], hi: vec![5.5] },
+            trace: sample_trace(),
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip_is_bit_exact() {
+        let t = sample_trace();
+        let back = decode_trace(&encode_trace(&t)).unwrap();
+        assert_eq!(back.estimator, t.estimator);
+        assert_eq!(back.w_traces, t.w_traces);
+        assert_eq!(back.a_traces, t.a_traces);
+        assert_eq!(back.w_std_errors, t.w_std_errors);
+        assert_eq!(back.iterations, t.iterations);
+        assert_eq!(back.iter_time_s.to_bits(), t.iter_time_s.to_bits());
+        assert_eq!(back.norm_variance.to_bits(), t.norm_variance.to_bits());
+        assert_eq!(back.history_total, t.history_total);
+    }
+
+    #[test]
+    fn sensitivity_roundtrip_keeps_optionals() {
+        let s = sample_sensitivity();
+        let back = decode_sensitivity(&encode_sensitivity(&s)).unwrap();
+        assert_eq!(back.inputs.bn_gamma, s.inputs.bn_gamma);
+        assert_eq!(back.inputs.w_traces, s.inputs.w_traces);
+        assert_eq!(back.act.lo, s.act.lo);
+        assert_eq!(back.act.hi, s.act.hi);
+        assert_eq!(back.trace.iterations, s.trace.iterations);
+    }
+
+    #[test]
+    fn study_roundtrip_reencodes_identically() {
+        let s = StudyResult {
+            model: "cnn_mnist".into(),
+            fp_test_score: 0.91,
+            outcomes: vec![ConfigOutcome {
+                cfg: BitConfig { bits_w: vec![8, 4], bits_a: vec![3] },
+                metrics: vec![(Metric::Fit, Some(0.5)), (Metric::Bn, None)],
+                test_score: 0.8,
+                train_score: 0.85,
+                mean_bits: 5.0,
+            }],
+            sens: sample_sensitivity(),
+            correlations: vec![(Metric::Fit, Some(0.86)), (Metric::Qr, Some(f64::NAN))],
+        };
+        let bytes = encode_study(&s);
+        let back = decode_study(&bytes).unwrap();
+        // bit-exact: re-encoding the decoded value reproduces the bytes,
+        // NaN correlations included
+        assert_eq!(encode_study(&back), bytes);
+        assert_eq!(back.outcomes[0].cfg, s.outcomes[0].cfg);
+        assert_eq!(back.outcomes[0].metrics, s.outcomes[0].metrics);
+    }
+
+    #[test]
+    fn truncated_payloads_error_instead_of_panicking() {
+        let bytes = encode_trace(&sample_trace());
+        for cut in [0, 1, 5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_trace(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage is also rejected
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_trace(&long).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_an_error_not_an_alloc() {
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX); // claims ~2^64 f64s
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f64s().is_err());
+    }
+
+    #[test]
+    fn unknown_tags_are_rejected() {
+        let mut w = ByteWriter::new();
+        w.u8(9);
+        w.f64s(&[]);
+        w.f64s(&[]);
+        w.f64s(&[]);
+        w.u64(0);
+        w.f64(0.0);
+        w.f64(0.0);
+        w.f64s(&[]);
+        assert!(decode_trace(&w.into_bytes()).is_err(), "estimator tag 9");
+    }
+}

@@ -1,0 +1,32 @@
+//! The stage-graph experiment pipeline.
+//!
+//! The paper's evaluation is hundreds of cheap scorings layered over a
+//! handful of expensive shared stages — FP training, trace estimation,
+//! sensitivity gathering, the QAT study sweep. This subsystem makes those
+//! stages first-class:
+//!
+//! - [`digest`] / [`codec`]: deterministic content digests and the binary
+//!   serialization for stage outputs (`TraceResult`, `SensitivityReport`,
+//!   study outcome tables) that had none.
+//! - [`cache`]: the content-addressed store under `results/cache/`, keyed
+//!   by a digest of each stage's full input set, with versioned
+//!   self-validating headers — corrupt or stale entries fall back to
+//!   recompute.
+//! - [`stages`]: the typed stage graph (`train_fp → traces / sensitivity
+//!   → study`) behind [`Pipeline`], memoized per process and cached
+//!   across processes, with shared [`StageCounters`] pinning the
+//!   exactly-once contract.
+//! - [`registry`]: the declarative experiment registry and the
+//!   cross-experiment scheduler that turns `experiment all` into a
+//!   stage-deduping DAG walk over `coordinator::parallel`.
+
+pub mod cache;
+pub mod codec;
+pub mod digest;
+pub mod registry;
+pub mod stages;
+
+pub use cache::ArtifactCache;
+pub use digest::{digest_bytes, Digest, Hasher};
+pub use registry::{ExpOptions, ExperimentSpec};
+pub use stages::{Pipeline, StageCounters, StageRequest};

@@ -1,0 +1,393 @@
+//! Declarative experiment registry + cross-experiment scheduling.
+//!
+//! Each paper table/figure is one [`ExperimentSpec`]: a name, the flag
+//! schema it accepts, a `stages` function declaring which stage-graph
+//! outputs it depends on, and a `run` function that renders reports from
+//! those (now warm) stages. The CLI dispatches through [`find`] /
+//! [`run_all`] instead of a hand-maintained `match`, so adding an
+//! experiment is one table row and unknown names/flags fail with the
+//! generated usage text.
+//!
+//! `experiment all` is a DAG walk: the union of every selected
+//! experiment's stage requests is deduped ([`StageRequest::plan`]),
+//! executed rank-by-rank (checkpoints, then traces/sensitivity) with
+//! independent stages fanned over `coordinator::parallel`, and the
+//! experiments then run against the warm cache — light ones fanned as
+//! whole units, `heavy_sweep` ones serially with the full `--jobs`
+//! budget handed to their inner config sweep (see [`run_all`]). One
+//! budget governs the whole walk, and every file an experiment writes is
+//! a pure function of its options, so cached-vs-cold and
+//! `jobs=1`-vs-`N` walks produce byte-identical results trees.
+
+use anyhow::Result;
+
+use super::stages::{Pipeline, StageRequest};
+use crate::coordinator::experiments::{fig1, fig2, fig4, fig5, fig9, table1, table2, table3};
+use crate::coordinator::parallel;
+use crate::runtime::Runtime;
+
+/// The uniform option schema every experiment parses its own options
+/// from. `None` means "use the experiment's default" — defaults differ
+/// per experiment (e.g. `fp_epochs` is 15 on the scale ladder, 40 for the
+/// U-Net study), which is why these are overrides, not values.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub seed: u64,
+    pub jobs: usize,
+    pub iters: Option<u64>,
+    pub runs: Option<usize>,
+    pub configs: Option<usize>,
+    pub fp_epochs: Option<usize>,
+    pub qat_epochs: Option<usize>,
+    pub eval_n: Option<usize>,
+    /// table2: restrict to experiment ids (e.g. `["D"]`).
+    pub only: Vec<String>,
+    /// table3: restrict the model ladder.
+    pub models: Vec<String>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            seed: 0,
+            jobs: 1,
+            iters: None,
+            runs: None,
+            configs: None,
+            fp_epochs: None,
+            qat_epochs: None,
+            eval_n: None,
+            only: Vec::new(),
+            models: Vec::new(),
+        }
+    }
+}
+
+/// One registered experiment.
+pub struct ExperimentSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub about: &'static str,
+    /// Flags this experiment accepts beyond the global `--seed`/`--jobs`.
+    pub flags: &'static [&'static str],
+    /// Whether the experiment's own inner sweep (QAT fine-tunes) dominates
+    /// its cost. The `all` walk runs these serially with the *full*
+    /// `--jobs` budget handed to the sweep, instead of fanning them as
+    /// whole experiments with serial insides — the sweep is where the
+    /// parallelism pays.
+    pub heavy_sweep: bool,
+    /// Stage-graph dependencies as a function of the parsed options.
+    pub stages: fn(&ExpOptions) -> Vec<StageRequest>,
+    pub run: fn(&Runtime, &Pipeline, &ExpOptions) -> Result<()>,
+}
+
+/// Flags accepted by every experiment.
+pub const GLOBAL_FLAGS: &[&str] = &["seed", "jobs"];
+
+/// All experiments, in `experiment all` execution order (cheapest first,
+/// matching the pre-registry serial loop).
+pub const REGISTRY: &[ExperimentSpec] = &[
+    ExperimentSpec {
+        name: "fig9",
+        aliases: &[],
+        about: "quantization-error uniformity histograms (Appendix E)",
+        flags: &["fp-epochs"],
+        heavy_sweep: false,
+        stages: stages_fig9,
+        run: run_fig9,
+    },
+    ExperimentSpec {
+        name: "fig5",
+        aliases: &[],
+        about: "quantization noise vs parameter magnitude",
+        flags: &["configs", "fp-epochs"],
+        heavy_sweep: false,
+        stages: stages_fig5,
+        run: run_fig5,
+    },
+    ExperimentSpec {
+        name: "table1",
+        aliases: &[],
+        about: "EF vs Hessian estimator variance/time/speedup",
+        flags: &["iters", "runs", "fp-epochs"],
+        heavy_sweep: false,
+        stages: stages_table1,
+        run: run_table1,
+    },
+    ExperimentSpec {
+        name: "fig1",
+        aliases: &["fig7"],
+        about: "per-block EF vs Hessian trace profiles",
+        flags: &["fp-epochs"],
+        heavy_sweep: false,
+        stages: stages_fig1,
+        run: run_fig1,
+    },
+    ExperimentSpec {
+        name: "fig2",
+        aliases: &[],
+        about: "trace-estimate convergence, EF vs Hessian",
+        flags: &["iters", "fp-epochs"],
+        heavy_sweep: false,
+        stages: stages_fig2,
+        run: run_fig2,
+    },
+    ExperimentSpec {
+        name: "table3",
+        aliases: &["table4"],
+        about: "estimator variance/time vs batch size (Appendix C)",
+        flags: &["iters", "runs", "models", "fp-epochs"],
+        heavy_sweep: false,
+        stages: stages_table3,
+        run: run_table3,
+    },
+    ExperimentSpec {
+        name: "table2",
+        aliases: &["fig3"],
+        about: "rank-correlation study over random MPQ configs",
+        flags: &["configs", "fp-epochs", "qat-epochs", "eval-n", "only"],
+        heavy_sweep: true,
+        stages: stages_table2,
+        run: run_table2,
+    },
+    ExperimentSpec {
+        name: "fig4",
+        aliases: &[],
+        about: "U-Net segmentation study (traces + FIT vs mIoU)",
+        flags: &["configs", "fp-epochs", "qat-epochs", "eval-n"],
+        heavy_sweep: true,
+        stages: stages_fig4,
+        run: run_fig4,
+    },
+];
+
+/// Look up an experiment by name or alias.
+pub fn find(name: &str) -> Option<&'static ExperimentSpec> {
+    REGISTRY.iter().find(|s| s.name == name || s.aliases.contains(&name))
+}
+
+/// Generated usage text for `fitq experiment` (also the error payload for
+/// unknown names/flags).
+pub fn usage() -> String {
+    let mut s = String::from("usage: fitq experiment <name>|all [--seed N] [--jobs N] [flags]\n");
+    let mut specs: Vec<&ExperimentSpec> = REGISTRY.iter().collect();
+    specs.sort_by_key(|spec| spec.name);
+    for spec in specs {
+        let flags: String = spec.flags.iter().map(|f| format!(" [--{f} V]")).collect();
+        s.push_str(&format!("  {:<7}— {}{}\n", spec.name, spec.about, flags));
+    }
+    s.push_str("  all    — every experiment once, deduping shared pipeline stages\n");
+    s
+}
+
+/// Run a set of experiments as one scheduled walk (a single spec is the
+/// degenerate walk). Phase 1 plans and materializes the deduped stage
+/// union; phase 2 runs the experiments against the warm cache. All of it
+/// spends the one `--jobs` budget where it pays: stage batches fan over
+/// the pool, light experiments fan as whole units (their insides go
+/// serial), and `heavy_sweep` experiments run one at a time with the full
+/// budget handed to their inner config sweep — the dominant cost of the
+/// walk, which fanning-with-serial-insides would starve. Every output
+/// file is keyed by experiment and jobs-invariant, so the schedule shape
+/// never changes the results tree.
+pub fn run_all(
+    rt: &Runtime,
+    pipe: &Pipeline,
+    specs: &[&'static ExperimentSpec],
+    o: &ExpOptions,
+) -> Result<()> {
+    let plan = StageRequest::plan(specs.iter().flat_map(|s| (s.stages)(o)).collect());
+    for rank in 0..=1u8 {
+        let batch: Vec<&StageRequest> = plan.iter().filter(|r| r.rank() == rank).collect();
+        run_stage_batch(rt, pipe, &batch, o.jobs)?;
+    }
+    let light: Vec<&'static ExperimentSpec> =
+        specs.iter().copied().filter(|s| !s.heavy_sweep).collect();
+    let heavy: Vec<&'static ExperimentSpec> =
+        specs.iter().copied().filter(|s| s.heavy_sweep).collect();
+
+    // Wave 1: light experiments, fanned as whole write-disjoint units
+    // (inner work serial so the budget is spent once).
+    if parallel::effective_jobs(o.jobs, light.len()) <= 1 {
+        for spec in &light {
+            (spec.run)(rt, pipe, o)?;
+        }
+    } else {
+        let inner = ExpOptions { jobs: 1, ..o.clone() };
+        let root = rt.manifest.root.clone();
+        let results_root = pipe.results_root().to_path_buf();
+        let counters = pipe.counters();
+        parallel::run_pool(
+            light.len(),
+            o.jobs,
+            || -> Result<(Runtime, Pipeline)> {
+                let wrt = Runtime::new(&root)?;
+                let wp = Pipeline::with_counters(&results_root, counters.clone())?;
+                Ok((wrt, wp))
+            },
+            |w, i| (light[i].run)(&w.0, &w.1, &inner),
+        )?;
+    }
+
+    // Wave 2: sweep-heavy experiments serially, full budget to the sweep.
+    for spec in &heavy {
+        (spec.run)(rt, pipe, o)?;
+    }
+    Ok(())
+}
+
+fn run_stage_batch(
+    rt: &Runtime,
+    pipe: &Pipeline,
+    batch: &[&StageRequest],
+    jobs: usize,
+) -> Result<()> {
+    if batch.is_empty() {
+        return Ok(());
+    }
+    if parallel::effective_jobs(jobs, batch.len()) <= 1 {
+        for req in batch {
+            pipe.ensure(rt, req)?;
+        }
+        return Ok(());
+    }
+    let root = rt.manifest.root.clone();
+    let results_root = pipe.results_root().to_path_buf();
+    let counters = pipe.counters();
+    parallel::run_pool(
+        batch.len(),
+        jobs,
+        || -> Result<(Runtime, Pipeline)> {
+            let wrt = Runtime::new(&root)?;
+            let wp = Pipeline::with_counters(&results_root, counters.clone())?;
+            Ok((wrt, wp))
+        },
+        |w, i| w.1.ensure(&w.0, batch[i]),
+    )?;
+    Ok(())
+}
+
+// --- per-experiment adapters: uniform options -> typed options ---
+
+fn run_table1(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    table1::run(rt, p, &table1::Table1Options::from_exp(e)).map(|_| ())
+}
+
+fn stages_table1(e: &ExpOptions) -> Vec<StageRequest> {
+    table1::stages(&table1::Table1Options::from_exp(e))
+}
+
+fn run_table2(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    table2::run(rt, p, &table2::Table2Options::from_exp(e)).map(|_| ())
+}
+
+fn stages_table2(e: &ExpOptions) -> Vec<StageRequest> {
+    table2::stages(&table2::Table2Options::from_exp(e))
+}
+
+fn run_table3(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    table3::run(rt, p, &table3::Table3Options::from_exp(e))
+}
+
+fn stages_table3(e: &ExpOptions) -> Vec<StageRequest> {
+    table3::stages(&table3::Table3Options::from_exp(e))
+}
+
+fn run_fig1(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    fig1::run(rt, p, &fig1::Fig1Options::from_exp(e))
+}
+
+fn stages_fig1(e: &ExpOptions) -> Vec<StageRequest> {
+    fig1::stages(&fig1::Fig1Options::from_exp(e))
+}
+
+fn run_fig2(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    fig2::run(rt, p, &fig2::Fig2Options::from_exp(e))
+}
+
+fn stages_fig2(e: &ExpOptions) -> Vec<StageRequest> {
+    fig2::stages(&fig2::Fig2Options::from_exp(e))
+}
+
+fn run_fig4(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    fig4::run(rt, p, &fig4::Fig4Options::from_exp(e))
+}
+
+fn stages_fig4(e: &ExpOptions) -> Vec<StageRequest> {
+    fig4::stages(&fig4::Fig4Options::from_exp(e))
+}
+
+fn run_fig5(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    fig5::run(rt, p, &fig5::Fig5Options::from_exp(e))
+}
+
+fn stages_fig5(e: &ExpOptions) -> Vec<StageRequest> {
+    fig5::stages(&fig5::Fig5Options::from_exp(e))
+}
+
+fn run_fig9(rt: &Runtime, p: &Pipeline, e: &ExpOptions) -> Result<()> {
+    fig9::run(rt, p, &fig9::Fig9Options::from_exp(e))
+}
+
+fn stages_fig9(e: &ExpOptions) -> Vec<StageRequest> {
+    fig9::stages(&fig9::Fig9Options::from_exp(e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_resolves_names_and_aliases() {
+        assert_eq!(find("table2").unwrap().name, "table2");
+        assert_eq!(find("fig7").unwrap().name, "fig1", "fig7 is the fig1 alias");
+        assert_eq!(find("table4").unwrap().name, "table3");
+        assert!(find("bogus").is_none());
+    }
+
+    #[test]
+    fn registry_names_are_unique() {
+        let mut all: Vec<&str> = REGISTRY
+            .iter()
+            .flat_map(|s| std::iter::once(s.name).chain(s.aliases.iter().copied()))
+            .collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate name or alias in REGISTRY");
+    }
+
+    #[test]
+    fn usage_lists_every_experiment() {
+        let u = usage();
+        for spec in REGISTRY {
+            assert!(u.contains(spec.name), "usage must mention {}", spec.name);
+            for flag in spec.flags {
+                assert!(u.contains(&format!("--{flag}")), "usage must mention --{flag}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_checkpoints_dedupe_across_experiments() {
+        // table1 + fig1 + fig2 + table3 all ride the same four scale-model
+        // checkpoints; the planned union must train each exactly once.
+        let o = ExpOptions::default();
+        let mut reqs = Vec::new();
+        for name in ["table1", "fig1", "fig2", "table3"] {
+            reqs.extend((find(name).unwrap().stages)(&o));
+        }
+        let plan = StageRequest::plan(reqs);
+        let fp: Vec<_> = plan.iter().filter(|r| r.rank() == 0).collect();
+        assert_eq!(fp.len(), 4, "one TrainFp per scale model: {fp:?}");
+    }
+
+    #[test]
+    fn table2_declares_checkpoint_and_sensitivity_per_study() {
+        let o = ExpOptions::default();
+        let plan = StageRequest::plan((find("table2").unwrap().stages)(&o));
+        let n_fp = plan.iter().filter(|r| r.rank() == 0).count();
+        let n_dep = plan.iter().filter(|r| r.rank() == 1).count();
+        assert_eq!((n_fp, n_dep), (4, 4), "{plan:?}");
+    }
+}

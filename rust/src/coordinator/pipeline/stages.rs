@@ -1,0 +1,560 @@
+//! The typed stage graph: `train_fp → traces / sensitivity → study`.
+//!
+//! A [`Pipeline`] is a handle over the artifact cache plus an in-process
+//! memo, and each stage method is *idempotent*: it returns the memoized
+//! value, else a validated cache entry, else computes, stores, and counts
+//! the computation. Because every stage's stochastic inputs are a pure
+//! function of its key (model identity, seed, epochs, trace options — the
+//! same replay contract `coordinator::parallel` enforces for job indices),
+//! a cache hit is bit-identical to a recompute, and the FP checkpoint and
+//! sensitivity report for a given key are produced exactly once per
+//! process (memo) *and* at most once across processes (cache).
+//!
+//! [`StageRequest`] is the declarative form of a stage used by the
+//! experiment registry's DAG walk: experiments declare what they need,
+//! `experiment all` dedupes the union, computes shared stages first
+//! (fanned over the worker pool), and every experiment then runs against a
+//! warm cache.
+//!
+//! `Pipeline` is deliberately not `Send` (like `Runtime`): parallel phases
+//! give each worker its own `Pipeline` over the same cache directory,
+//! sharing only the atomic [`StageCounters`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::cache::ArtifactCache;
+use super::codec;
+use super::digest::{Digest, Hasher};
+use crate::coordinator::evaluator::{StudyOptions, StudyResult};
+use crate::coordinator::sensitivity::{gather, SensitivityReport};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::traces::{Estimator, TraceEngine, TraceOptions, TraceResult};
+use crate::coordinator::trainer::{dataset_for, Trainer};
+use crate::data::EvalSet;
+use crate::runtime::{ModelManifest, Runtime};
+
+/// Cache kinds, one per stage output type.
+pub const KIND_TRAIN_FP: &str = "train_fp";
+pub const KIND_TRACES: &str = "traces";
+pub const KIND_SENSITIVITY: &str = "sensitivity";
+pub const KIND_STUDY: &str = "study";
+
+/// How many times each stage was actually *computed* (cache/memo hits do
+/// not count). Shared across worker pipelines via `Arc`, so `experiment
+/// all` can assert its exactly-once contract at any `--jobs` setting.
+#[derive(Debug, Default)]
+pub struct StageCounters {
+    train_fp: AtomicU64,
+    traces: AtomicU64,
+    sensitivity: AtomicU64,
+    study: AtomicU64,
+}
+
+impl StageCounters {
+    pub fn train_fp_computed(&self) -> u64 {
+        self.train_fp.load(Ordering::Relaxed)
+    }
+
+    pub fn traces_computed(&self) -> u64 {
+        self.traces.load(Ordering::Relaxed)
+    }
+
+    pub fn sensitivity_computed(&self) -> u64 {
+        self.sensitivity.load(Ordering::Relaxed)
+    }
+
+    pub fn study_computed(&self) -> u64 {
+        self.study.load(Ordering::Relaxed)
+    }
+}
+
+/// A declared dependency on one stage output — the unit of the registry's
+/// prepass DAG walk. Field-for-field this is the stage's cache key.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageRequest {
+    /// FP training of `(model, epochs, seed)`.
+    TrainFp { model: String, epochs: usize, seed: u64 },
+    /// One estimator run over the FP checkpoint of `(model, fp_epochs, seed)`.
+    Traces {
+        model: String,
+        fp_epochs: usize,
+        seed: u64,
+        est: Estimator,
+        opt: TraceOptions,
+    },
+    /// Full sensitivity gathering over the FP checkpoint.
+    Sensitivity { model: String, fp_epochs: usize, seed: u64, trace: TraceOptions },
+}
+
+impl StageRequest {
+    /// Topological rank: checkpoints before everything that consumes them.
+    pub fn rank(&self) -> u8 {
+        match self {
+            StageRequest::TrainFp { .. } => 0,
+            StageRequest::Traces { .. } | StageRequest::Sensitivity { .. } => 1,
+        }
+    }
+
+    /// Deterministic total order for the prepass (rank-major, then the
+    /// request's own debug form — stable across runs and job counts).
+    fn sort_key(&self) -> (u8, String) {
+        (self.rank(), format!("{self:?}"))
+    }
+
+    /// Dedupe + topologically order a union of requests from many
+    /// experiments: each distinct stage appears exactly once, checkpoints
+    /// first.
+    pub fn plan(mut reqs: Vec<StageRequest>) -> Vec<StageRequest> {
+        reqs.sort_by_key(|r| r.sort_key());
+        reqs.dedup();
+        reqs
+    }
+}
+
+fn hash_trace_options(h: &mut Hasher, o: &TraceOptions) {
+    h.usize(o.batch);
+    h.f64(o.tol);
+    h.u64(o.min_iters);
+    h.u64(o.max_iters);
+    h.u64(o.seed);
+}
+
+/// Model identity inside a key: name plus the full block layout (count,
+/// offset and size of every weight block, size of every activation block),
+/// so regenerated artifacts with a different layout — even at identical
+/// name, parameter count and block counts — can never validate against
+/// stale entries.
+fn hash_model(h: &mut Hasher, m: &ModelManifest) {
+    h.str(&m.name);
+    h.usize(m.n_params);
+    h.usize(m.n_weight_blocks());
+    for wb in &m.weight_blocks {
+        h.usize(wb.offset);
+        h.usize(wb.size);
+    }
+    h.usize(m.n_act_blocks());
+    for ab in &m.act_blocks {
+        h.usize(ab.size);
+    }
+}
+
+pub fn train_fp_key(m: &ModelManifest, epochs: usize, seed: u64) -> Digest {
+    let mut h = Hasher::new();
+    h.str("train_fp/v1");
+    hash_model(&mut h, m);
+    h.usize(epochs);
+    h.u64(seed);
+    h.finish()
+}
+
+pub fn trace_key(
+    m: &ModelManifest,
+    fp_epochs: usize,
+    seed: u64,
+    est: Estimator,
+    opt: &TraceOptions,
+) -> Digest {
+    let mut h = Hasher::new();
+    h.str("traces/v1");
+    hash_model(&mut h, m);
+    h.usize(fp_epochs);
+    h.u64(seed);
+    h.str(est.name());
+    hash_trace_options(&mut h, opt);
+    h.finish()
+}
+
+pub fn sensitivity_key(
+    m: &ModelManifest,
+    fp_epochs: usize,
+    seed: u64,
+    trace: &TraceOptions,
+) -> Digest {
+    let mut h = Hasher::new();
+    h.str("sensitivity/v1");
+    hash_model(&mut h, m);
+    h.usize(fp_epochs);
+    h.u64(seed);
+    h.usize(m.calib_b);
+    hash_trace_options(&mut h, trace);
+    h.finish()
+}
+
+/// Study key: every `StudyOptions` field *except* `jobs` — results are
+/// jobs-invariant by the parallel determinism contract, so a study cached
+/// at `--jobs 1` must hit at `--jobs 8` and vice versa. `calib_b` rides
+/// along because the study consumes the sensitivity stage, whose
+/// calibration prefix it determines.
+pub fn study_key(m: &ModelManifest, opt: &StudyOptions) -> Digest {
+    let mut h = Hasher::new();
+    h.str("study/v1");
+    hash_model(&mut h, m);
+    h.usize(m.calib_b);
+    h.usize(opt.n_configs);
+    h.usize(opt.fp_epochs);
+    h.usize(opt.qat_epochs);
+    h.usize(opt.eval_n);
+    h.u64(opt.seed);
+    hash_trace_options(&mut h, &opt.trace);
+    h.finish()
+}
+
+/// Handle over the stage graph: artifact cache + per-process memo +
+/// shared computation counters. See the module docs for the idempotency
+/// and exactly-once contract.
+pub struct Pipeline {
+    results_root: PathBuf,
+    cache: ArtifactCache,
+    counters: Arc<StageCounters>,
+    memo_fp: RefCell<HashMap<Digest, Rc<ModelState>>>,
+    memo_sens: RefCell<HashMap<Digest, Rc<SensitivityReport>>>,
+}
+
+impl Pipeline {
+    /// Pipeline over `<results_root>/cache`.
+    pub fn new(results_root: impl AsRef<Path>) -> Result<Pipeline> {
+        Pipeline::with_counters(results_root, Arc::new(StageCounters::default()))
+    }
+
+    /// Pipeline sharing an existing counter set (worker pipelines of a
+    /// parallel phase all report into their parent's counters).
+    pub fn with_counters(
+        results_root: impl AsRef<Path>,
+        counters: Arc<StageCounters>,
+    ) -> Result<Pipeline> {
+        let results_root = results_root.as_ref().to_path_buf();
+        let cache = ArtifactCache::new(results_root.join("cache"))?;
+        Ok(Pipeline {
+            results_root,
+            cache,
+            counters,
+            memo_fp: RefCell::new(HashMap::new()),
+            memo_sens: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Pipeline over `$FITQ_RESULTS` (default `results/`), matching where
+    /// the experiments drop their reports.
+    pub fn from_env() -> Result<Pipeline> {
+        Pipeline::new(results_root_from_env())
+    }
+
+    pub fn counters(&self) -> Arc<StageCounters> {
+        self.counters.clone()
+    }
+
+    /// The results root this pipeline caches under (worker pipelines of a
+    /// parallel phase are built over the same root).
+    pub fn results_root(&self) -> &Path {
+        &self.results_root
+    }
+
+    pub fn cache(&self) -> &ArtifactCache {
+        &self.cache
+    }
+
+    /// Load-or-train the FP checkpoint for `(model, epochs, seed)`.
+    ///
+    /// Training state is deterministic in the key (model init seed, data
+    /// stream seed and epoch count all derive from it), so a cache hit
+    /// replays the exact experiment inputs of the run that stored it.
+    /// Pre-pipeline checkpoints under `results/ckpt/` are adopted into the
+    /// cache when their parameter count still matches the manifest.
+    pub fn train_fp(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        epochs: usize,
+        seed: u64,
+    ) -> Result<Rc<ModelState>> {
+        let key = train_fp_key(rt.model(model)?, epochs, seed);
+        if let Some(st) = self.memo_fp.borrow().get(&key) {
+            return Ok(st.clone());
+        }
+        let n_params = rt.model(model)?.n_params;
+        let mut state: Option<ModelState> = None;
+        if let Some(bytes) = self.cache.load(KIND_TRAIN_FP, codec::CKPT_SCHEMA, &key) {
+            // undecodable or wrong-shape payloads fall through to recompute
+            if let Ok(st) = ModelState::from_bytes(&bytes, model) {
+                if st.n_params() == n_params {
+                    state = Some(st);
+                }
+            }
+        }
+        if state.is_none() {
+            state = self.adopt_legacy_ckpt(model, epochs, seed, n_params, &key)?;
+        }
+        let st = match state {
+            Some(st) => st,
+            None => {
+                let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+                let mut trainer = Trainer::new(rt, ds.as_ref());
+                let mut st = ModelState::init(rt, model, seed as u32)?;
+                let losses = trainer.train(&mut st, epochs)?;
+                eprintln!(
+                    "  [{model}] FP trained {epochs} epochs, loss {:.4} -> {:.4}",
+                    losses.first().copied().unwrap_or(f64::NAN),
+                    losses.last().copied().unwrap_or(f64::NAN)
+                );
+                self.cache.store(KIND_TRAIN_FP, codec::CKPT_SCHEMA, &key, &st.to_bytes())?;
+                self.counters.train_fp.fetch_add(1, Ordering::Relaxed);
+                st
+            }
+        };
+        let rc = Rc::new(st);
+        self.memo_fp.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Migration path for checkpoints written by the pre-pipeline
+    /// `get_trained` (`results/ckpt/{model}_s{seed}_e{epochs}.bin`): adopt
+    /// them into the digest-validated cache instead of retraining.
+    fn adopt_legacy_ckpt(
+        &self,
+        model: &str,
+        epochs: usize,
+        seed: u64,
+        n_params: usize,
+        key: &Digest,
+    ) -> Result<Option<ModelState>> {
+        let legacy = self
+            .results_root
+            .join("ckpt")
+            .join(format!("{model}_s{seed}_e{epochs}.bin"));
+        if !legacy.exists() {
+            return Ok(None);
+        }
+        match ModelState::load(&legacy, model) {
+            Ok(st) if st.n_params() == n_params => {
+                eprintln!("  [{model}] adopting legacy checkpoint {}", legacy.display());
+                self.cache.store(KIND_TRAIN_FP, codec::CKPT_SCHEMA, key, &st.to_bytes())?;
+                Ok(Some(st))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Gather (or load) the full sensitivity report over the FP checkpoint
+    /// of `(model, fp_epochs, seed)` — EF traces, weight/activation
+    /// ranges, BN scales. Calibration uses the model's own `calib_b` test
+    /// prefix, so the report depends only on the key.
+    pub fn sensitivity(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        fp_epochs: usize,
+        seed: u64,
+        trace: TraceOptions,
+    ) -> Result<Rc<SensitivityReport>> {
+        let key = sensitivity_key(rt.model(model)?, fp_epochs, seed, &trace);
+        if let Some(rep) = self.memo_sens.borrow().get(&key) {
+            return Ok(rep.clone());
+        }
+        if let Some(bytes) = self.cache.load(KIND_SENSITIVITY, codec::SENSITIVITY_SCHEMA, &key) {
+            if let Ok(rep) = codec::decode_sensitivity(&bytes) {
+                let rc = Rc::new(rep);
+                self.memo_sens.borrow_mut().insert(key, rc.clone());
+                return Ok(rc);
+            }
+        }
+        let calib_b = rt.model(model)?.calib_b;
+        let st = self.train_fp(rt, model, fp_epochs, seed)?;
+        let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+        let trainer = Trainer::new(rt, ds.as_ref());
+        let calib = EvalSet::materialize(ds.as_ref(), calib_b);
+        let rep = gather(&trainer, ds.as_ref(), &st, &calib, trace)?;
+        let payload = codec::encode_sensitivity(&rep);
+        self.cache.store(KIND_SENSITIVITY, codec::SENSITIVITY_SCHEMA, &key, &payload)?;
+        self.counters.sensitivity.fetch_add(1, Ordering::Relaxed);
+        let rc = Rc::new(rep);
+        self.memo_sens.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Run (or load) a batch of trace estimations over the FP checkpoint
+    /// of `(model, fp_epochs, seed)`, in `specs` order. Cached specs are
+    /// served from the store; only the misses are fanned over `jobs`
+    /// workers via [`TraceEngine::run_many`] — bit-identical either way,
+    /// wall-clock `iter_time_s` included (it is part of the cached value,
+    /// which is what makes warm experiment reruns byte-identical).
+    pub fn traces_many(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        fp_epochs: usize,
+        seed: u64,
+        specs: &[(Estimator, TraceOptions)],
+        jobs: usize,
+    ) -> Result<Vec<TraceResult>> {
+        let mut out: Vec<Option<TraceResult>> = Vec::with_capacity(specs.len());
+        {
+            let mm = rt.model(model)?;
+            for (est, opt) in specs {
+                let key = trace_key(mm, fp_epochs, seed, *est, opt);
+                let hit = self
+                    .cache
+                    .load(KIND_TRACES, codec::TRACE_SCHEMA, &key)
+                    .and_then(|b| codec::decode_trace(&b).ok());
+                out.push(hit);
+            }
+        }
+        let missing: Vec<usize> = (0..specs.len()).filter(|&i| out[i].is_none()).collect();
+        let hits = specs.len() - missing.len();
+        if hits > 0 {
+            // cached runs carry the wall-clock of their original
+            // measurement conditions; flag that for timing-bearing tables
+            eprintln!(
+                "  [{model}] {hits}/{} trace runs from cache (ms/iter columns reflect \
+                 the run that computed them; delete results/cache to remeasure)",
+                specs.len()
+            );
+        }
+        if !missing.is_empty() {
+            let st = self.train_fp(rt, model, fp_epochs, seed)?;
+            let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+            let engine = TraceEngine::new(rt, ds.as_ref());
+            let sub: Vec<(Estimator, TraceOptions)> = missing.iter().map(|&i| specs[i]).collect();
+            let results = engine.run_many(model, &st.params, &sub, jobs)?;
+            let mm = rt.model(model)?;
+            for (&i, r) in missing.iter().zip(results) {
+                let (est, opt) = &specs[i];
+                let key = trace_key(mm, fp_epochs, seed, *est, opt);
+                let payload = codec::encode_trace(&r);
+                self.cache.store(KIND_TRACES, codec::TRACE_SCHEMA, &key, &payload)?;
+                out[i] = Some(r);
+            }
+            self.counters.traces.fetch_add(missing.len() as u64, Ordering::Relaxed);
+        }
+        Ok(out.into_iter().map(|r| r.expect("all trace slots filled")).collect())
+    }
+
+    /// Cached study outcome table for `(model, opt)`, if present and valid.
+    pub fn study_cached(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        opt: &StudyOptions,
+    ) -> Option<StudyResult> {
+        let mm = rt.model(model).ok()?;
+        let bytes = self.cache.load(KIND_STUDY, codec::STUDY_SCHEMA, &study_key(mm, opt))?;
+        codec::decode_study(&bytes).ok()
+    }
+
+    /// Store a freshly computed study outcome table.
+    pub fn study_store(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        opt: &StudyOptions,
+        res: &StudyResult,
+    ) -> Result<()> {
+        let key = study_key(rt.model(model)?, opt);
+        self.cache.store(KIND_STUDY, codec::STUDY_SCHEMA, &key, &codec::encode_study(res))?;
+        self.counters.study.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Materialize one declared stage (the prepass executor).
+    pub fn ensure(&self, rt: &Runtime, req: &StageRequest) -> Result<()> {
+        match req {
+            StageRequest::TrainFp { model, epochs, seed } => {
+                self.train_fp(rt, model, *epochs, *seed)?;
+            }
+            StageRequest::Traces { model, fp_epochs, seed, est, opt } => {
+                self.traces_many(rt, model, *fp_epochs, *seed, &[(*est, *opt)], 1)?;
+            }
+            StageRequest::Sensitivity { model, fp_epochs, seed, trace } => {
+                self.sensitivity(rt, model, *fp_epochs, *seed, *trace)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The results root the reports and the cache live under
+/// (`$FITQ_RESULTS`, default `results`).
+pub fn results_root_from_env() -> PathBuf {
+    std::env::var_os("FITQ_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_fp(model: &str, epochs: usize, seed: u64) -> StageRequest {
+        StageRequest::TrainFp { model: model.into(), epochs, seed }
+    }
+
+    #[test]
+    fn plan_dedupes_and_ranks() {
+        let trace = TraceOptions::default();
+        let reqs = vec![
+            StageRequest::Sensitivity {
+                model: "m".into(),
+                fp_epochs: 30,
+                seed: 0,
+                trace,
+            },
+            req_fp("m", 30, 0),
+            req_fp("m", 30, 0),
+            req_fp("a", 15, 0),
+            StageRequest::Sensitivity {
+                model: "m".into(),
+                fp_epochs: 30,
+                seed: 0,
+                trace,
+            },
+        ];
+        let plan = StageRequest::plan(reqs);
+        assert_eq!(plan.len(), 3, "duplicates collapse: {plan:?}");
+        assert_eq!(plan[0], req_fp("a", 15, 0));
+        assert_eq!(plan[1], req_fp("m", 30, 0));
+        assert_eq!(plan[2].rank(), 1, "checkpoints sort before consumers");
+    }
+
+    #[test]
+    fn plan_is_order_invariant() {
+        let mut reqs = vec![req_fp("c", 1, 2), req_fp("a", 1, 2), req_fp("b", 9, 9)];
+        let forward = StageRequest::plan(reqs.clone());
+        reqs.reverse();
+        assert_eq!(StageRequest::plan(reqs), forward);
+    }
+
+    #[test]
+    fn stage_keys_separate_every_field() {
+        // a minimal manifest stand-in is overkill here; the key functions
+        // are pure over (name, sizes, scalars), so exercise them via the
+        // hasher contract instead: distinct field values => distinct keys
+        let base = TraceOptions::default();
+        let mut other = base;
+        other.seed = 1;
+        let mut h1 = Hasher::new();
+        hash_trace_options(&mut h1, &base);
+        let mut h2 = Hasher::new();
+        hash_trace_options(&mut h2, &other);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn counters_start_at_zero() {
+        let c = StageCounters::default();
+        assert_eq!(
+            (
+                c.train_fp_computed(),
+                c.traces_computed(),
+                c.sensitivity_computed(),
+                c.study_computed()
+            ),
+            (0, 0, 0, 0)
+        );
+    }
+}

@@ -18,11 +18,11 @@ impl Reporter {
         Ok(Reporter { dir })
     }
 
+    /// Reporter over the shared results root (`$FITQ_RESULTS`, default
+    /// `results/`) — the same resolution the pipeline cache uses, so
+    /// reports and cached stages always land under one tree.
     pub fn from_env() -> Result<Reporter> {
-        let dir = std::env::var_os("FITQ_RESULTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("results"));
-        Reporter::new(dir)
+        Reporter::new(super::pipeline::stages::results_root_from_env())
     }
 
     pub fn path(&self, name: &str) -> PathBuf {

@@ -45,8 +45,10 @@ impl ModelState {
         self.params.len()
     }
 
-    /// Binary checkpoint: `[n: u64][step: f32][params][m][v]`, little endian.
-    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+    /// Checkpoint bytes: `[n: u64][step: f32][params][m][v]`, little
+    /// endian — the layout both `save` files and pipeline cache payloads
+    /// use.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(16 + 12 * self.params.len());
         out.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
         out.extend_from_slice(&self.step.to_le_bytes());
@@ -55,13 +57,25 @@ impl ModelState {
                 out.extend_from_slice(&x.to_le_bytes());
             }
         }
-        std::fs::write(path.as_ref(), out)
+        out
+    }
+
+    /// Binary checkpoint file (see [`ModelState::to_bytes`] for the layout).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_bytes())
             .with_context(|| format!("writing checkpoint {}", path.as_ref().display()))
     }
 
     pub fn load(path: impl AsRef<std::path::Path>, model: &str) -> Result<ModelState> {
         let bytes = std::fs::read(path.as_ref())
             .with_context(|| format!("reading checkpoint {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes, model)
+            .with_context(|| format!("decoding checkpoint {}", path.as_ref().display()))
+    }
+
+    /// Decode checkpoint bytes; size mismatches are hard errors (the
+    /// pipeline cache treats them as misses and recomputes).
+    pub fn from_bytes(bytes: &[u8], model: &str) -> Result<ModelState> {
         if bytes.len() < 12 {
             bail!("checkpoint too short");
         }

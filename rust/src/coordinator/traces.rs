@@ -47,7 +47,7 @@ impl Estimator {
 }
 
 /// Stopping rule for a trace run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceOptions {
     pub batch: usize,
     /// Relative tolerance on each block mean's standard error (0 disables

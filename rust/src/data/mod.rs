@@ -12,10 +12,12 @@
 mod batcher;
 mod synth_class;
 mod synth_seg;
+mod train_view;
 
 pub use batcher::{EpochBatch, EvalBatch, EvalSet};
 pub use synth_class::SynthClass;
 pub use synth_seg::SynthSeg;
+pub use train_view::TrainView;
 
 /// A supervised example stream: fills caller-provided image/label buffers.
 ///

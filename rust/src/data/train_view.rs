@@ -1,0 +1,84 @@
+//! Train-split-as-eval adapter.
+//!
+//! `EvalSet::materialize` always reads the *test* stream; wrapping a
+//! dataset in [`TrainView`] redirects every sample request to the train
+//! stream instead, so the evaluation machinery (padded batches, masks,
+//! calibration prefixes) can be pointed at training data unchanged. The
+//! study pipeline uses this for the Fig-5b overfitting analysis: the
+//! train-split eval set samples the same indices the trainer consumed
+//! first.
+
+use super::{Dataset, Split};
+
+/// A view of a dataset whose every split is the underlying train split.
+pub struct TrainView<'a>(&'a dyn Dataset);
+
+impl<'a> TrainView<'a> {
+    pub fn new(ds: &'a dyn Dataset) -> TrainView<'a> {
+        TrainView(ds)
+    }
+}
+
+impl Dataset for TrainView<'_> {
+    fn input_shape(&self) -> (usize, usize, usize) {
+        self.0.input_shape()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.0.n_classes()
+    }
+
+    fn label_len(&self) -> usize {
+        self.0.label_len()
+    }
+
+    fn sample(&self, _split: Split, index: u64, x: &mut [f32], y: &mut [i32]) {
+        self.0.sample(Split::Train, index, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{EvalSet, SynthClass};
+
+    #[test]
+    fn delegates_shape_metadata() {
+        let ds = SynthClass::synmnist(9);
+        let view = TrainView::new(&ds);
+        assert_eq!(view.input_shape(), ds.input_shape());
+        assert_eq!(view.n_classes(), ds.n_classes());
+        assert_eq!(view.label_len(), ds.label_len());
+        assert_eq!(view.sample_len(), ds.sample_len());
+    }
+
+    #[test]
+    fn every_split_reads_the_train_stream() {
+        let ds = SynthClass::synmnist(10);
+        let view = TrainView::new(&ds);
+        let sl = ds.sample_len();
+        let mut want = vec![0.0f32; sl];
+        let mut want_y = vec![0i32; 1];
+        let mut got = vec![0.0f32; sl];
+        let mut got_y = vec![0i32; 1];
+        for idx in [0u64, 7, 1000] {
+            ds.sample(Split::Train, idx, &mut want, &mut want_y);
+            view.sample(Split::Test, idx, &mut got, &mut got_y);
+            assert_eq!(got, want, "index {idx}: test view must equal train");
+            assert_eq!(got_y, want_y);
+            view.sample(Split::Train, idx, &mut got, &mut got_y);
+            assert_eq!(got, want, "index {idx}: train view must equal train");
+        }
+    }
+
+    #[test]
+    fn materialized_view_differs_from_test_split() {
+        let ds = SynthClass::synmnist(11);
+        let train_ev = EvalSet::materialize(&TrainView::new(&ds), 16);
+        let test_ev = EvalSet::materialize(&ds, 16);
+        assert_eq!(train_ev.len(), 16);
+        let a: Vec<_> = train_ev.batches(16).collect();
+        let b: Vec<_> = test_ev.batches(16).collect();
+        assert_ne!(a[0].x, b[0].x, "train and test streams must differ");
+    }
+}

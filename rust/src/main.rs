@@ -8,19 +8,23 @@
 //!   fitq traces --model cnn_m [--estimator ef|hessian] [--tol 0.01]
 //!   fitq search --model cnn_cifar --budget-ratio 0.15
 //!   fitq experiment table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all
-//!                   [--configs N] [--iters N] [--runs N] [--only A,B]
+//!                   [--seed N] [--jobs N] [per-experiment flags]
+//!
+//! Experiments dispatch through the declarative registry
+//! (`coordinator::pipeline::registry`); their expensive stages flow
+//! through the content-addressed artifact cache under `results/cache/`.
 //!
 //! (clap is not in the vendored dependency set; the small parser below is
 //! part of the from-scratch substrate.)
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use fitq::coordinator::experiments::{fig1, fig2, fig4, fig5, fig9, table1, table2, table3};
+use fitq::coordinator::pipeline::{registry, ExpOptions, Pipeline};
 use fitq::coordinator::{
     dataset_for, exact_allocate_table, gather, greedy_allocate_table, pareto_front_scores,
-    Estimator, ModelState, StudyOptions, TraceEngine, TraceOptions, Trainer,
+    Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
 };
 use fitq::data::EvalSet;
 use fitq::metrics::{FitTable, PackedConfig};
@@ -82,14 +86,13 @@ const USAGE: &str = "fitq <command>\n\
   train      --model M [--epochs N]      train FP model, report accuracy\n\
   traces     --model M [--estimator ef|hessian] [--tol T] [--batch B]\n\
   search     --model M [--budget-ratio R] [--samples N] [--jobs N]\n\
-  experiment <table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all> [opts]\n\
-     table2/fig4: [--configs N] [--fp-epochs N] [--qat-epochs N] [--only A,B]\n\
-     table1/3:    [--iters N] [--runs N]\n\
-     table1/2/3, fig1/2/4:\n\
-                  [--jobs N]  worker threads (1 = serial, 0 = all cores);\n\
-                  results are bit-identical at every setting, but ms/iter\n\
-                  and speedup columns are wall-clock — keep --jobs 1 when\n\
-                  the timing itself is the result\n";
+  experiment <name>|all [--seed N] [--jobs N] [flags]\n\
+     run `fitq experiment` with no name for the per-experiment flag list.\n\
+     Every experiment takes --seed/--jobs; --jobs N fans independent work\n\
+     over N workers (0 = all cores) with bit-identical results at every\n\
+     setting — but ms/iter and speedup columns are wall-clock, so keep\n\
+     --jobs 1 when the timing itself is the result. `all` walks the\n\
+     experiment DAG once, deduping shared pipeline stages.\n";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -278,76 +281,59 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Registry-driven experiment dispatch. Name, flag and value validation
+/// all happen before the runtime (and its artifact manifest) is touched,
+/// so `fitq experiment bogus` and bad flags fail fast with usage text.
 fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(which) = args.positional.first() else {
-        bail!("experiment needs a name\n{USAGE}");
+        bail!("experiment needs a name\n{}", registry::usage());
     };
-    let rt = Runtime::from_env()?;
-    let run_one = |which: &str| -> Result<()> {
-        match which {
-            "table1" => {
-                let mut o = table1::Table1Options::default();
-                o.iters = args.usize_or("iters", o.iters as usize)? as u64;
-                o.runs = args.usize_or("runs", o.runs)?;
-                o.jobs = args.usize_or("jobs", o.jobs)?;
-                table1::run(&rt, &o)?;
-            }
-            "table2" => {
-                let mut o = table2::Table2Options::default();
-                o.study = study_opts(args, o.study)?;
-                if let Some(only) = args.get("only") {
-                    o.only = only.split(',').map(|s| s.trim().to_uppercase()).collect();
-                }
-                table2::run(&rt, &o)?;
-            }
-            "table3" => {
-                let mut o = table3::Table3Options::default();
-                o.iters = args.usize_or("iters", o.iters as usize)? as u64;
-                o.runs = args.usize_or("runs", o.runs)?;
-                o.jobs = args.usize_or("jobs", o.jobs)?;
-                if let Some(models) = args.get("models") {
-                    o.models = models.split(',').map(|s| s.trim().to_string()).collect();
-                }
-                table3::run(&rt, &o)?;
-            }
-            "fig1" | "fig7" => {
-                let mut o = fig1::Fig1Options::default();
-                o.jobs = args.usize_or("jobs", o.jobs)?;
-                fig1::run(&rt, &o)?;
-            }
-            "fig2" => {
-                let mut o = fig2::Fig2Options::default();
-                o.iters = args.usize_or("iters", o.iters as usize)? as u64;
-                o.jobs = args.usize_or("jobs", o.jobs)?;
-                fig2::run(&rt, &o)?;
-            }
-            "fig4" => {
-                let mut o = fig4::Fig4Options::default();
-                o.study = study_opts(args, o.study)?;
-                fig4::run(&rt, &o)?;
-            }
-            "fig5" => fig5::run(&rt, &fig5::Fig5Options::default())?,
-            "fig9" => fig9::run(&rt, &fig9::Fig9Options::default())?,
-            other => bail!("unknown experiment {other:?}"),
-        }
-        Ok(())
-    };
-    if which == "all" {
-        for w in ["fig9", "fig5", "table1", "fig1", "fig2", "table3", "table2", "fig4"] {
-            run_one(w)?;
-        }
-        Ok(())
+    let specs: Vec<&'static registry::ExperimentSpec> = if which == "all" {
+        registry::REGISTRY.iter().collect()
     } else {
-        run_one(which)
+        vec![registry::find(which)
+            .ok_or_else(|| anyhow!("unknown experiment {which:?}\n{}", registry::usage()))?]
+    };
+    for key in args.flags.keys() {
+        let known = registry::GLOBAL_FLAGS.contains(&key.as_str())
+            || specs.iter().any(|s| s.flags.contains(&key.as_str()));
+        if !known {
+            bail!("unknown flag --{key} for experiment {which}\n{}", registry::usage());
+        }
     }
+    let o = exp_options(args)?;
+    let rt = Runtime::from_env()?;
+    let pipe = Pipeline::from_env()?;
+    registry::run_all(&rt, &pipe, &specs, &o)
 }
 
-fn study_opts(args: &Args, mut s: StudyOptions) -> Result<StudyOptions> {
-    s.n_configs = args.usize_or("configs", s.n_configs)?;
-    s.fp_epochs = args.usize_or("fp-epochs", s.fp_epochs)?;
-    s.qat_epochs = args.usize_or("qat-epochs", s.qat_epochs)?;
-    s.eval_n = args.usize_or("eval-n", s.eval_n)?;
-    s.seed = args.usize_or("seed", s.seed as usize)? as u64;
-    s.jobs = args.usize_or("jobs", s.jobs)?;
-    Ok(s)
+/// Parse the registry's uniform option schema from raw flags. `None`
+/// keeps the experiment's own default for that dimension.
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    let opt_usize = |key: &str| -> Result<Option<usize>> {
+        args.get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key} must be an integer")))
+            .transpose()
+    };
+    let list = |key: &str, upper: bool| -> Vec<String> {
+        args.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| if upper { s.trim().to_uppercase() } else { s.trim().to_string() })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    Ok(ExpOptions {
+        seed: args.usize_or("seed", 0)? as u64,
+        jobs: args.usize_or("jobs", 1)?,
+        iters: opt_usize("iters")?.map(|v| v as u64),
+        runs: opt_usize("runs")?,
+        configs: opt_usize("configs")?,
+        fp_epochs: opt_usize("fp-epochs")?,
+        qat_epochs: opt_usize("qat-epochs")?,
+        eval_n: opt_usize("eval-n")?,
+        only: list("only", true),
+        models: list("models", false),
+    })
 }

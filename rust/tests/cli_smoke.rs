@@ -1,0 +1,99 @@
+//! CLI smoke tests: bad inputs must fail fast with usage text, before any
+//! runtime/artifact machinery is touched — so these run on a fresh
+//! checkout with no artifacts.
+
+use std::process::{Command, Output};
+
+fn fitq(args: &[&str]) -> Output {
+    // point the artifact root at nowhere so even an artifact-equipped
+    // checkout stops at manifest load instead of actually training
+    Command::new(env!("CARGO_BIN_EXE_fitq"))
+        .env("FITQ_ARTIFACTS", "fitq-no-such-artifact-root")
+        .env("FITQ_RESULTS", std::env::temp_dir().join("fitq_cli_smoke_results"))
+        .args(args)
+        .output()
+        .expect("spawn fitq binary")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage_and_succeeds() {
+    let out = fitq(&[]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fitq <command>"), "{text}");
+    assert!(text.contains("experiment"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = fitq(&["frobnicate"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown command"), "{err}");
+    assert!(err.contains("fitq <command>"), "usage text expected: {err}");
+}
+
+#[test]
+fn bogus_experiment_fails_with_experiment_usage() {
+    let out = fitq(&["experiment", "bogus"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown experiment"), "{err}");
+    // the generated usage lists the registry
+    for name in ["table1", "table2", "table3", "fig1", "fig2", "fig4", "fig5", "fig9"] {
+        assert!(err.contains(name), "usage must list {name}: {err}");
+    }
+}
+
+#[test]
+fn experiment_without_name_fails_with_usage() {
+    let out = fitq(&["experiment"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("experiment needs a name"), "{err}");
+    assert!(err.contains("table2"), "{err}");
+}
+
+#[test]
+fn unknown_flag_fails_with_usage() {
+    // --runs is a table1 flag, not a fig9 flag
+    let out = fitq(&["experiment", "fig9", "--runs", "3"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown flag --runs"), "{err}");
+    assert!(err.contains("usage: fitq experiment"), "{err}");
+}
+
+#[test]
+fn bad_flag_value_fails_before_runtime() {
+    let out = fitq(&["experiment", "table1", "--iters", "many"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("--iters must be an integer"), "{err}");
+    // and a flag with a missing value is caught by the parser
+    let out = fitq(&["experiment", "table1", "--iters"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("needs a value"), "{}", stderr(&out));
+}
+
+#[test]
+fn global_flags_are_accepted_by_every_experiment() {
+    // validation passes; on an artifact-less checkout the failure (if
+    // any) must come from the missing manifest, not from flag handling
+    for name in ["fig9", "fig5", "table1", "all"] {
+        let out = fitq(&["experiment", name, "--seed", "1", "--jobs", "2"]);
+        let err = stderr(&out);
+        assert!(!err.contains("unknown flag"), "{name}: {err}");
+        assert!(!err.contains("unknown experiment"), "{name}: {err}");
+        if !out.status.success() {
+            assert!(
+                err.contains("manifest.json") || err.contains("artifacts"),
+                "{name} must only fail on missing artifacts: {err}"
+            );
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Registry walk over real artifacts: shared stages compute exactly once
+//! per run, and a warm rerun reproduces the cold run's result files
+//! byte-for-byte from cache. Skipped on a fresh checkout (no artifacts).
+//!
+//! This file holds a single test because it owns the process-wide
+//! `FITQ_RESULTS` environment variable for report emission.
+
+use fitq::coordinator::pipeline::{registry, ExpOptions, Pipeline};
+use fitq::runtime::Runtime;
+
+#[test]
+fn experiment_walk_counts_stages_once_and_reruns_byte_identical() {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = Runtime::new(root).expect("runtime");
+    let results = std::env::temp_dir().join(format!("fitq_expall_{}", std::process::id()));
+    std::fs::remove_dir_all(&results).ok();
+    std::env::set_var("FITQ_RESULTS", &results);
+
+    // a tiny two-study table2: two FP checkpoints, two sensitivity
+    // reports, two study sweeps — and nothing computed twice
+    let o = ExpOptions {
+        seed: 6,
+        configs: Some(3),
+        fp_epochs: Some(2),
+        qat_epochs: Some(1),
+        eval_n: Some(64),
+        only: vec!["C".into(), "D".into()],
+        ..Default::default()
+    };
+    let specs = vec![registry::find("table2").expect("registered")];
+
+    let pipe = Pipeline::new(&results).expect("pipeline");
+    registry::run_all(&rt, &pipe, &specs, &o).expect("cold walk");
+    let c = pipe.counters();
+    assert_eq!(c.train_fp_computed(), 2, "one FP training per (model, seed, epochs)");
+    assert_eq!(c.sensitivity_computed(), 2, "one sensitivity gather per study");
+    assert_eq!(c.study_computed(), 2, "one sweep per study");
+
+    let read = |name: &str| std::fs::read(results.join(name)).unwrap_or_default();
+    let cold: Vec<(String, Vec<u8>)> = ["table2.csv", "table2.md", "fig3_expC.csv", "fig3_expD.csv"]
+        .iter()
+        .map(|n| (n.to_string(), read(n)))
+        .collect();
+    for (name, bytes) in &cold {
+        assert!(!bytes.is_empty(), "cold run must write {name}");
+    }
+
+    // warm walk with a fresh pipeline (cross-process shape): zero
+    // computations, byte-identical reports
+    let pipe2 = Pipeline::new(&results).expect("pipeline 2");
+    registry::run_all(&rt, &pipe2, &specs, &o).expect("warm walk");
+    let c2 = pipe2.counters();
+    assert_eq!(
+        (c2.train_fp_computed(), c2.sensitivity_computed(), c2.study_computed()),
+        (0, 0, 0),
+        "warm walk must be pure cache reads"
+    );
+    for (name, bytes) in &cold {
+        assert_eq!(
+            &read(name),
+            bytes,
+            "{name} must be byte-identical across cold and warm walks"
+        );
+    }
+
+    std::env::remove_var("FITQ_RESULTS");
+    std::fs::remove_dir_all(&results).ok();
+}

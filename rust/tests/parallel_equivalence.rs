@@ -3,7 +3,7 @@
 //! `jobs = 1`), exercised on the pure pool and — when artifacts are present
 //! — on a small end-to-end `run_study`.
 
-use fitq::coordinator::{derive_seed, run_pool, run_study, StudyOptions};
+use fitq::coordinator::{derive_seed, run_pool, run_study, Pipeline, StudyOptions};
 use fitq::runtime::Runtime;
 
 /// Equal, treating two NaNs as equal (rank correlations can be NaN when a
@@ -68,10 +68,24 @@ fn run_study_identical_at_jobs_1_and_4() {
     };
     opt.trace.max_iters = 40;
 
+    // distinct cold pipelines per run: the study cache is jobs-agnostic by
+    // design, so sharing one would turn the second run into a cache read
+    // instead of an actual parallel sweep
+    let dir = |tag: &str| {
+        let d = std::env::temp_dir().join(format!("fitq_pareq_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    };
+    let (d1, d4) = (dir("j1"), dir("j4"));
+
     opt.jobs = 1;
-    let serial = run_study(&rt, "cnn_mnist", &opt).expect("serial study");
+    let pipe1 = Pipeline::new(&d1).expect("pipeline");
+    let serial = run_study(&rt, &pipe1, "cnn_mnist", &opt).expect("serial study");
     opt.jobs = 4;
-    let par = run_study(&rt, "cnn_mnist", &opt).expect("parallel study");
+    let pipe4 = Pipeline::new(&d4).expect("pipeline");
+    let par = run_study(&rt, &pipe4, "cnn_mnist", &opt).expect("parallel study");
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d4).ok();
 
     assert_eq!(serial.outcomes.len(), par.outcomes.len());
     for (a, b) in serial.outcomes.iter().zip(&par.outcomes) {

@@ -1,0 +1,212 @@
+//! Artifact-cache coverage: round-trip + version-bump invalidation +
+//! truncated-file fallback for every serialized stage type, and — when
+//! artifacts are present — the cold-vs-warm `run_study` bit-identity and
+//! exactly-once stage accounting the pipeline promises.
+
+use fitq::coordinator::evaluator::ConfigOutcome;
+use fitq::coordinator::pipeline::{codec, ArtifactCache, Hasher, Pipeline};
+use fitq::coordinator::{
+    run_study, ActRanges, Estimator, ModelState, SensitivityReport, StudyOptions, StudyResult,
+    TraceResult,
+};
+use fitq::metrics::{Metric, SensitivityInputs};
+use fitq::quant::BitConfig;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fitq_plc_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn sample_trace() -> TraceResult {
+    TraceResult {
+        estimator: Estimator::EmpiricalFisher,
+        w_traces: vec![4.0, 1.5, 0.25],
+        a_traces: vec![2.0, 0.5],
+        w_std_errors: vec![0.01, 0.02, 0.03],
+        iterations: 96,
+        iter_time_s: 0.004,
+        norm_variance: 0.15,
+        history_total: vec![5.5, 5.75, 5.8],
+    }
+}
+
+fn sample_sensitivity() -> SensitivityReport {
+    SensitivityReport {
+        inputs: SensitivityInputs {
+            w_traces: vec![4.0, 1.5, 0.25],
+            a_traces: vec![2.0, 0.5],
+            w_lo: vec![-1.0, -0.5, -0.25],
+            w_hi: vec![1.0, 0.5, 0.25],
+            a_lo: vec![0.0, 0.0],
+            a_hi: vec![6.0, 3.0],
+            bn_gamma: vec![Some(1.0), Some(0.5), None],
+        },
+        act: ActRanges { lo: vec![0.0, 0.0], hi: vec![5.0, 2.5] },
+        trace: sample_trace(),
+    }
+}
+
+fn sample_study() -> StudyResult {
+    StudyResult {
+        model: "cnn_mnist".into(),
+        fp_test_score: 0.9,
+        outcomes: vec![
+            ConfigOutcome {
+                cfg: BitConfig { bits_w: vec![8, 4, 3], bits_a: vec![6, 6] },
+                metrics: vec![(Metric::Fit, Some(0.125)), (Metric::Bn, None)],
+                test_score: 0.82,
+                train_score: 0.88,
+                mean_bits: 5.4,
+            },
+            ConfigOutcome {
+                cfg: BitConfig { bits_w: vec![3, 3, 3], bits_a: vec![3, 3] },
+                metrics: vec![(Metric::Fit, Some(0.75)), (Metric::Bn, None)],
+                test_score: 0.55,
+                train_score: 0.6,
+                mean_bits: 3.0,
+            },
+        ],
+        sens: sample_sensitivity(),
+        correlations: vec![(Metric::Fit, Some(0.86)), (Metric::Qr, None)],
+    }
+}
+
+fn sample_state() -> ModelState {
+    ModelState {
+        model: "cnn_mnist".into(),
+        params: vec![0.5, -1.25, 2.0],
+        m: vec![0.1, 0.0, -0.1],
+        v: vec![0.01, 0.02, 0.03],
+        step: 17.0,
+    }
+}
+
+/// Each stage type: store -> load -> decode must round trip bit-exactly,
+/// a schema bump must miss, and a truncated entry must miss.
+#[test]
+fn every_stage_payload_roundtrips_and_invalidates() {
+    let dir = tmp_dir("kinds");
+    let cache = ArtifactCache::new(&dir).unwrap();
+
+    // (kind, schema, payload, post-decode re-encode for bit-identity)
+    let trace = sample_trace();
+    let sens = sample_sensitivity();
+    let study = sample_study();
+    let state = sample_state();
+    let cases: Vec<(&str, u32, Vec<u8>)> = vec![
+        ("traces", codec::TRACE_SCHEMA, codec::encode_trace(&trace)),
+        ("sensitivity", codec::SENSITIVITY_SCHEMA, codec::encode_sensitivity(&sens)),
+        ("study", codec::STUDY_SCHEMA, codec::encode_study(&study)),
+        ("train_fp", codec::CKPT_SCHEMA, state.to_bytes()),
+    ];
+
+    for (i, (kind, schema, payload)) in cases.iter().enumerate() {
+        let key = Hasher::new().u64(i as u64).finish();
+        let path = cache.store(kind, *schema, &key, payload).unwrap();
+
+        // round trip
+        let back = cache.load(kind, *schema, &key).unwrap();
+        assert_eq!(&back, payload, "{kind}: payload must round trip");
+        // decoded value re-encodes to the same bytes (bit-exact floats)
+        let reencoded = match *kind {
+            "traces" => codec::encode_trace(&codec::decode_trace(&back).unwrap()),
+            "sensitivity" => {
+                codec::encode_sensitivity(&codec::decode_sensitivity(&back).unwrap())
+            }
+            "study" => codec::encode_study(&codec::decode_study(&back).unwrap()),
+            "train_fp" => ModelState::from_bytes(&back, "cnn_mnist").unwrap().to_bytes(),
+            other => unreachable!("{other}"),
+        };
+        assert_eq!(&reencoded, payload, "{kind}: decode/encode must be bit-exact");
+
+        // version bump invalidates
+        assert!(cache.load(kind, *schema + 1, &key).is_none(), "{kind}: schema bump");
+
+        // truncation falls back to a miss at several cut points
+        let full = std::fs::read(&path).unwrap();
+        for frac in [0usize, 1, 2] {
+            let cut = full.len() * frac / 3;
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(cache.load(kind, *schema, &key).is_none(), "{kind}: cut {cut}");
+        }
+        std::fs::write(&path, &full).unwrap();
+        assert!(cache.load(kind, *schema, &key).is_some(), "{kind}: restored");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Decoded study values survive the metrics/correlations Option structure.
+#[test]
+fn study_decode_preserves_structure() {
+    let s = sample_study();
+    let back = codec::decode_study(&codec::encode_study(&s)).unwrap();
+    assert_eq!(back.model, s.model);
+    assert_eq!(back.outcomes.len(), 2);
+    assert_eq!(back.outcomes[0].cfg, s.outcomes[0].cfg);
+    assert_eq!(back.outcomes[0].metrics, s.outcomes[0].metrics);
+    assert_eq!(back.correlations, s.correlations);
+    assert_eq!(back.sens.inputs.bn_gamma, s.sens.inputs.bn_gamma);
+}
+
+/// End-to-end over real artifacts: a cold study computes each stage once,
+/// an in-process rerun computes nothing, and a fresh pipeline over the
+/// same cache (the cross-process case) reproduces the cold result
+/// bit-for-bit without recomputing. Skipped on a fresh checkout.
+#[test]
+fn run_study_cold_vs_warm_bit_identity_and_stage_counts() {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = fitq::runtime::Runtime::new(root).expect("runtime");
+    let dir = tmp_dir("coldwarm");
+    let mut opt = StudyOptions {
+        n_configs: 4,
+        fp_epochs: 2,
+        qat_epochs: 1,
+        eval_n: 64,
+        seed: 5,
+        ..Default::default()
+    };
+    opt.trace.max_iters = 30;
+
+    // cold: every stage computes exactly once
+    let pipe = Pipeline::new(&dir).expect("pipeline");
+    let cold = run_study(&rt, &pipe, "cnn_mnist", &opt).expect("cold study");
+    let c = pipe.counters();
+    assert_eq!(c.train_fp_computed(), 1, "one FP training");
+    assert_eq!(c.sensitivity_computed(), 1, "one sensitivity gather");
+    assert_eq!(c.study_computed(), 1, "one study sweep");
+
+    // warm, same pipeline: pure cache read, counters unchanged
+    let warm = run_study(&rt, &pipe, "cnn_mnist", &opt).expect("warm study");
+    assert_eq!(c.train_fp_computed(), 1, "warm rerun must not retrain");
+    assert_eq!(c.sensitivity_computed(), 1);
+    assert_eq!(c.study_computed(), 1);
+    assert_eq!(
+        codec::encode_study(&warm),
+        codec::encode_study(&cold),
+        "warm study must be bit-identical to cold"
+    );
+
+    // fresh pipeline over the same results root = a second process
+    let pipe2 = Pipeline::new(&dir).expect("pipeline 2");
+    let cross = run_study(&rt, &pipe2, "cnn_mnist", &opt).expect("cross-process study");
+    let c2 = pipe2.counters();
+    assert_eq!(
+        (c2.train_fp_computed(), c2.sensitivity_computed(), c2.study_computed()),
+        (0, 0, 0),
+        "second process must compute nothing"
+    );
+    assert_eq!(codec::encode_study(&cross), codec::encode_study(&cold));
+
+    // the study cache is jobs-agnostic: a warm hit at jobs=4 returns the
+    // jobs=1 result (which the determinism contract guarantees identical)
+    opt.jobs = 4;
+    let warm4 = run_study(&rt, &pipe2, "cnn_mnist", &opt).expect("warm study jobs=4");
+    assert_eq!(codec::encode_study(&warm4), codec::encode_study(&cold));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
