@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring
+.PHONY: artifacts test bench bench-scoring bench-native
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -19,3 +19,8 @@ bench:
 # BENCH_fit_scoring.json at the repo root.
 bench-scoring:
 	cargo bench --bench fit_scoring
+
+# Serial-vs-parallel study + warm-cache bench on the native backend (no
+# artifacts needed); refreshes BENCH_parallel_study.json at the repo root.
+bench-native:
+	FITQ_BACKEND=native cargo bench --bench parallel_study

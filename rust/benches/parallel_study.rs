@@ -1,21 +1,25 @@
-//! Bench: the PR-1 before/after measurement — `run_study`'s per-config
-//! sweep at `jobs = 1` (the old strictly sequential evaluator) vs parallel
-//! job counts. The sweep is the wall-clock bottleneck of Table 2 / Fig 4
+//! Bench: `run_study`'s per-config sweep at `jobs = 1` (the old strictly
+//! sequential evaluator) vs parallel job counts, plus the warm-cache
+//! path. The sweep is the wall-clock bottleneck of Table 2 / Fig 4
 //! (hundreds of QAT fine-tunes), so the expected shape is near-linear
-//! scaling until PJRT dispatches saturate memory bandwidth.
+//! scaling until dispatches saturate memory bandwidth.
 //!
-//! Run with `cargo bench --bench parallel_study` (needs `make artifacts`).
-//! Also prints the pure-pool overhead measurement, which runs everywhere.
+//! Backend-aware: runs on PJRT when `artifacts/` is present, else on the
+//! zero-setup native interpreter (`FITQ_BACKEND` overrides; `make
+//! bench-native` pins native). Results land in
+//! `BENCH_parallel_study.json` at the repo root — the perf-trajectory
+//! record for this path. Also prints the pure-pool overhead measurement.
 
 use fitq::bench_util::{bench, black_box};
 use fitq::coordinator::{derive_seed, run_pool, run_study, Pipeline, StudyOptions};
 use fitq::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // pool overhead on pure-Rust work (no PJRT): runs on any checkout
+    // pool overhead on pure-Rust work (no backend): runs on any checkout
     println!("# parallel pool: pure-Rust scaling (64 jobs x 2M mixes)\n");
+    let mut pool_rows = Vec::new();
     for jobs in [1usize, 2, 4, 8] {
-        bench(&format!("pool 64 seeded mixes jobs={jobs}"), 1, 5, || {
+        let r = bench(&format!("pool 64 seeded mixes jobs={jobs}"), 1, 5, || {
             let out = run_pool(
                 64,
                 jobs,
@@ -31,14 +35,14 @@ fn main() -> anyhow::Result<()> {
             .unwrap();
             black_box(out);
         });
+        pool_rows.push((jobs, r.mean_ns));
     }
 
-    let root = std::path::Path::new("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("\nskipping run_study bench: run `make artifacts` first");
-        return Ok(());
-    }
-    let rt = Runtime::new(root)?;
+    let rt = Runtime::from_env()?;
+    println!(
+        "\n# run_study cnn_mnist (8 configs, 1 QAT epoch) on the {} backend\n",
+        rt.backend_name()
+    );
     let base = StudyOptions {
         n_configs: 8,
         fp_epochs: 4,
@@ -47,32 +51,58 @@ fn main() -> anyhow::Result<()> {
         seed: 3,
         ..Default::default()
     };
-    println!("\n# run_study cnn_mnist (8 configs, 1 QAT epoch) serial vs parallel\n");
     // fresh results dir per timed call: the pipeline cache would otherwise
     // turn every iteration after the first into a cache read
     let cold_dir = std::env::temp_dir().join(format!("fitq_bench_cold_{}", std::process::id()));
+    let mut study_rows = Vec::new();
     for jobs in [1usize, 2, 4] {
         let opt = StudyOptions { jobs, ..base.clone() };
-        bench(&format!("run_study 8 configs jobs={jobs} (cold)"), 0, 3, || {
+        let r = bench(&format!("run_study 8 configs jobs={jobs} (cold)"), 0, 3, || {
             std::fs::remove_dir_all(&cold_dir).ok();
             let pipe = Pipeline::new(&cold_dir).unwrap();
             black_box(run_study(&rt, &pipe, "cnn_mnist", &opt).unwrap());
         });
+        study_rows.push((jobs, r.mean_ns));
     }
 
     // the pipeline-cache payoff: identical study served from the store
     println!("\n# run_study warm (stage + study cache hits)\n");
     let warm_dir = std::env::temp_dir().join(format!("fitq_bench_warm_{}", std::process::id()));
     std::fs::remove_dir_all(&warm_dir).ok();
-    {
+    let warm_ns = {
         let pipe = Pipeline::new(&warm_dir)?;
         let opt = StudyOptions { jobs: 1, ..base.clone() };
         run_study(&rt, &pipe, "cnn_mnist", &opt)?; // populate
         bench("run_study 8 configs warm cache", 1, 5, || {
             black_box(run_study(&rt, &pipe, "cnn_mnist", &opt).unwrap());
-        });
-    }
+        })
+        .mean_ns
+    };
     std::fs::remove_dir_all(&cold_dir).ok();
     std::fs::remove_dir_all(&warm_dir).ok();
+
+    // -- record the trajectory point --------------------------------------
+    let row = |rows: &[(usize, f64)]| {
+        rows.iter()
+            .map(|(j, ns)| format!("{{\"jobs\": {j}, \"mean_s\": {:.4}}}", ns / 1e9))
+            .collect::<Vec<_>>()
+            .join(",\n    ")
+    };
+    let speedup = study_rows[0].1 / study_rows.last().unwrap().1;
+    let json = format!(
+        "{{\n  \"bench\": \"parallel_study\",\n  \"status\": \"measured\",\n  \
+         \"backend\": \"{}\",\n  \
+         \"pool_64x2M\": [\n    {}\n  ],\n  \
+         \"run_study_8cfg_cold\": [\n    {}\n  ],\n  \
+         \"study_speedup_j1_to_j4\": {speedup:.2},\n  \
+         \"run_study_warm_s\": {:.4}\n}}\n",
+        rt.backend_name(),
+        row(&pool_rows),
+        row(&study_rows),
+        warm_ns / 1e9,
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_parallel_study.json");
+    std::fs::write(path, &json).expect("write BENCH_parallel_study.json");
+    println!("\nwrote {path}");
     Ok(())
 }

@@ -2,7 +2,8 @@
 //! of the rank-correlation study: QAT epoch, quantized eval, metric
 //! evaluation. These dominate the wall-clock of the 100-config studies.
 //!
-//! Run with `cargo bench --bench table2_pipeline` (needs `make artifacts`).
+//! Run with `cargo bench --bench table2_pipeline` — PJRT when artifacts
+//! are present, else the native backend.
 
 use fitq::bench_util::{bench, black_box};
 use fitq::coordinator::{dataset_for, gather, ModelState, TraceOptions, Trainer};
@@ -12,12 +13,10 @@ use fitq::quant::{BitConfig, BitConfigSampler, PRECISIONS};
 use fitq::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let root = std::path::Path::new("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("skipping bench: run `make artifacts` first");
-        return Ok(());
-    }
-    let rt = Runtime::new(root)?;
+    // PJRT over artifacts when present, else the native interpreter
+    // (FITQ_BACKEND overrides)
+    let rt = Runtime::from_env()?;
+    println!("# backend: {}", rt.backend_name());
     let model = "cnn_mnist";
     let mm = rt.model(model)?.clone();
     let ds = dataset_for(&rt, model, 0xda7a)?;

@@ -156,11 +156,11 @@ pub fn run_study(
             configs.len(),
             parallel::effective_jobs(opt.jobs, configs.len())
         );
-        let root = rt.manifest.root.clone();
+        let spec = rt.spec();
         parallel::run_pool(
             configs.len(),
             opt.jobs,
-            || Runtime::new(&root),
+            || Runtime::from_spec(&spec),
             |wrt, i| {
                 evaluate_config(
                     wrt, ds.as_ref(), fp, sens, &ftab, &ev, &ev_train, &configs[i], opt, i,

@@ -19,7 +19,7 @@
 //! a pure function of its options, so cached-vs-cold and
 //! `jobs=1`-vs-`N` walks produce byte-identical results trees.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::stages::{Pipeline, StageRequest};
 use crate::coordinator::experiments::{fig1, fig2, fig4, fig5, fig9, table1, table2, table3};
@@ -82,7 +82,7 @@ pub struct ExperimentSpec {
 }
 
 /// Flags accepted by every experiment.
-pub const GLOBAL_FLAGS: &[&str] = &["seed", "jobs"];
+pub const GLOBAL_FLAGS: &[&str] = &["seed", "jobs", "backend"];
 
 /// All experiments, in `experiment all` execution order (cheapest first,
 /// matching the pre-registry serial loop).
@@ -169,7 +169,9 @@ pub fn find(name: &str) -> Option<&'static ExperimentSpec> {
 /// Generated usage text for `fitq experiment` (also the error payload for
 /// unknown names/flags).
 pub fn usage() -> String {
-    let mut s = String::from("usage: fitq experiment <name>|all [--seed N] [--jobs N] [flags]\n");
+    let mut s = String::from(
+        "usage: fitq experiment <name>|all [--seed N] [--jobs N] [--backend native|pjrt] [flags]\n",
+    );
     let mut specs: Vec<&ExperimentSpec> = REGISTRY.iter().collect();
     specs.sort_by_key(|spec| spec.name);
     for spec in specs {
@@ -196,6 +198,28 @@ pub fn run_all(
     specs: &[&'static ExperimentSpec],
     o: &ExpOptions,
 ) -> Result<()> {
+    // capability filter: the native backend implements the study models
+    // only, so PJRT-only experiments (scale ladder, U-Net, Hutchinson)
+    // are skipped under a wider walk and fail actionably when requested
+    // directly, instead of aborting mid-prepass on a missing model
+    let (specs, skipped): (Vec<&'static ExperimentSpec>, Vec<&'static ExperimentSpec>) =
+        specs.iter().copied().partition(|s| spec_supported(rt, s, o));
+    if !skipped.is_empty() {
+        let names: Vec<&str> = skipped.iter().map(|s| s.name).collect();
+        if specs.is_empty() {
+            bail!(
+                "experiment(s) {} need models the {} backend does not provide — rerun \
+                 with `--backend pjrt` over artifacts from `make artifacts`",
+                names.join(", "),
+                rt.backend_name()
+            );
+        }
+        eprintln!(
+            "  [skip] {}: models not in the {} backend (PJRT-only; rerun with --backend pjrt)",
+            names.join(", "),
+            rt.backend_name()
+        );
+    }
     let plan = StageRequest::plan(specs.iter().flat_map(|s| (s.stages)(o)).collect());
     for rank in 0..=1u8 {
         let batch: Vec<&StageRequest> = plan.iter().filter(|r| r.rank() == rank).collect();
@@ -214,14 +238,14 @@ pub fn run_all(
         }
     } else {
         let inner = ExpOptions { jobs: 1, ..o.clone() };
-        let root = rt.manifest.root.clone();
+        let spec = rt.spec();
         let results_root = pipe.results_root().to_path_buf();
         let counters = pipe.counters();
         parallel::run_pool(
             light.len(),
             o.jobs,
             || -> Result<(Runtime, Pipeline)> {
-                let wrt = Runtime::new(&root)?;
+                let wrt = Runtime::from_spec(&spec)?;
                 let wp = Pipeline::with_counters(&results_root, counters.clone())?;
                 Ok((wrt, wp))
             },
@@ -234,6 +258,12 @@ pub fn run_all(
         (spec.run)(rt, pipe, o)?;
     }
     Ok(())
+}
+
+/// Whether every stage model this experiment declares exists in the
+/// runtime's manifest.
+fn spec_supported(rt: &Runtime, spec: &ExperimentSpec, o: &ExpOptions) -> bool {
+    (spec.stages)(o).iter().all(|r| rt.model(r.model()).is_ok())
 }
 
 fn run_stage_batch(
@@ -251,14 +281,14 @@ fn run_stage_batch(
         }
         return Ok(());
     }
-    let root = rt.manifest.root.clone();
+    let spec = rt.spec();
     let results_root = pipe.results_root().to_path_buf();
     let counters = pipe.counters();
     parallel::run_pool(
         batch.len(),
         jobs,
         || -> Result<(Runtime, Pipeline)> {
-            let wrt = Runtime::new(&root)?;
+            let wrt = Runtime::from_spec(&spec)?;
             let wp = Pipeline::with_counters(&results_root, counters.clone())?;
             Ok((wrt, wp))
         },
@@ -366,6 +396,32 @@ mod tests {
                 assert!(u.contains(&format!("--{flag}")), "usage must mention --{flag}");
             }
         }
+    }
+
+    #[test]
+    fn native_backend_capability_filter() {
+        let rt = Runtime::native().unwrap();
+        let o = ExpOptions::default();
+        for name in ["table2", "fig5", "fig9"] {
+            assert!(spec_supported(&rt, find(name).unwrap(), &o), "{name} runs natively");
+        }
+        for name in ["table1", "table3", "fig1", "fig2", "fig4"] {
+            assert!(!spec_supported(&rt, find(name).unwrap(), &o), "{name} is PJRT-only");
+        }
+    }
+
+    #[test]
+    fn pjrt_only_experiment_on_native_fails_actionably() {
+        let rt = Runtime::native().unwrap();
+        let dir = std::env::temp_dir().join(format!("fitq_reg_native_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let pipe = Pipeline::new(&dir).unwrap();
+        let err = run_all(&rt, &pipe, &[find("table1").unwrap()], &ExpOptions::default())
+            .expect_err("table1 must not run on the native backend");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--backend pjrt"), "{msg}");
+        assert!(msg.contains("table1"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

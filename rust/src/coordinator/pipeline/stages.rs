@@ -94,6 +94,16 @@ pub enum StageRequest {
 }
 
 impl StageRequest {
+    /// The model this stage runs on (the registry's capability filter
+    /// checks it against the runtime's manifest).
+    pub fn model(&self) -> &str {
+        match self {
+            StageRequest::TrainFp { model, .. }
+            | StageRequest::Traces { model, .. }
+            | StageRequest::Sensitivity { model, .. } => model,
+        }
+    }
+
     /// Topological rank: checkpoints before everything that consumes them.
     pub fn rank(&self) -> u8 {
         match self {
@@ -126,12 +136,14 @@ fn hash_trace_options(h: &mut Hasher, o: &TraceOptions) {
     h.u64(o.seed);
 }
 
-/// Model identity inside a key: name plus the full block layout (count,
-/// offset and size of every weight block, size of every activation block),
-/// so regenerated artifacts with a different layout — even at identical
-/// name, parameter count and block counts — can never validate against
-/// stale entries.
-fn hash_model(h: &mut Hasher, m: &ModelManifest) {
+/// Model identity inside a key: the executing backend, the model name,
+/// plus the full block layout (count, offset and size of every weight
+/// block, size of every activation block) — so regenerated artifacts
+/// with a different layout can never validate against stale entries,
+/// and the numerically independent backends (PJRT vs native) can never
+/// serve each other's checkpoints, traces or studies.
+fn hash_model(h: &mut Hasher, backend: &str, m: &ModelManifest) {
+    h.str(backend);
     h.str(&m.name);
     h.usize(m.n_params);
     h.usize(m.n_weight_blocks());
@@ -145,16 +157,17 @@ fn hash_model(h: &mut Hasher, m: &ModelManifest) {
     }
 }
 
-pub fn train_fp_key(m: &ModelManifest, epochs: usize, seed: u64) -> Digest {
+pub fn train_fp_key(backend: &str, m: &ModelManifest, epochs: usize, seed: u64) -> Digest {
     let mut h = Hasher::new();
-    h.str("train_fp/v1");
-    hash_model(&mut h, m);
+    h.str("train_fp/v2");
+    hash_model(&mut h, backend, m);
     h.usize(epochs);
     h.u64(seed);
     h.finish()
 }
 
 pub fn trace_key(
+    backend: &str,
     m: &ModelManifest,
     fp_epochs: usize,
     seed: u64,
@@ -162,8 +175,8 @@ pub fn trace_key(
     opt: &TraceOptions,
 ) -> Digest {
     let mut h = Hasher::new();
-    h.str("traces/v1");
-    hash_model(&mut h, m);
+    h.str("traces/v2");
+    hash_model(&mut h, backend, m);
     h.usize(fp_epochs);
     h.u64(seed);
     h.str(est.name());
@@ -172,14 +185,15 @@ pub fn trace_key(
 }
 
 pub fn sensitivity_key(
+    backend: &str,
     m: &ModelManifest,
     fp_epochs: usize,
     seed: u64,
     trace: &TraceOptions,
 ) -> Digest {
     let mut h = Hasher::new();
-    h.str("sensitivity/v1");
-    hash_model(&mut h, m);
+    h.str("sensitivity/v2");
+    hash_model(&mut h, backend, m);
     h.usize(fp_epochs);
     h.u64(seed);
     h.usize(m.calib_b);
@@ -192,10 +206,10 @@ pub fn sensitivity_key(
 /// at `--jobs 1` must hit at `--jobs 8` and vice versa. `calib_b` rides
 /// along because the study consumes the sensitivity stage, whose
 /// calibration prefix it determines.
-pub fn study_key(m: &ModelManifest, opt: &StudyOptions) -> Digest {
+pub fn study_key(backend: &str, m: &ModelManifest, opt: &StudyOptions) -> Digest {
     let mut h = Hasher::new();
-    h.str("study/v1");
-    hash_model(&mut h, m);
+    h.str("study/v2");
+    hash_model(&mut h, backend, m);
     h.usize(m.calib_b);
     h.usize(opt.n_configs);
     h.usize(opt.fp_epochs);
@@ -274,7 +288,7 @@ impl Pipeline {
         epochs: usize,
         seed: u64,
     ) -> Result<Rc<ModelState>> {
-        let key = train_fp_key(rt.model(model)?, epochs, seed);
+        let key = train_fp_key(rt.backend_name(), rt.model(model)?, epochs, seed);
         if let Some(st) = self.memo_fp.borrow().get(&key) {
             return Ok(st.clone());
         }
@@ -288,7 +302,11 @@ impl Pipeline {
                 }
             }
         }
-        if state.is_none() {
+        // legacy results/ckpt/ checkpoints predate the native backend, so
+        // their provenance is necessarily PJRT — adopting one under a
+        // native key would be exactly the cross-backend mixing the
+        // backend-qualified digests forbid
+        if state.is_none() && rt.backend_name() == "pjrt" {
             state = self.adopt_legacy_ckpt(model, epochs, seed, n_params, &key)?;
         }
         let st = match state {
@@ -353,7 +371,7 @@ impl Pipeline {
         seed: u64,
         trace: TraceOptions,
     ) -> Result<Rc<SensitivityReport>> {
-        let key = sensitivity_key(rt.model(model)?, fp_epochs, seed, &trace);
+        let key = sensitivity_key(rt.backend_name(), rt.model(model)?, fp_epochs, seed, &trace);
         if let Some(rep) = self.memo_sens.borrow().get(&key) {
             return Ok(rep.clone());
         }
@@ -397,7 +415,7 @@ impl Pipeline {
         {
             let mm = rt.model(model)?;
             for (est, opt) in specs {
-                let key = trace_key(mm, fp_epochs, seed, *est, opt);
+                let key = trace_key(rt.backend_name(), mm, fp_epochs, seed, *est, opt);
                 let hit = self
                     .cache
                     .load(KIND_TRACES, codec::TRACE_SCHEMA, &key)
@@ -425,7 +443,7 @@ impl Pipeline {
             let mm = rt.model(model)?;
             for (&i, r) in missing.iter().zip(results) {
                 let (est, opt) = &specs[i];
-                let key = trace_key(mm, fp_epochs, seed, *est, opt);
+                let key = trace_key(rt.backend_name(), mm, fp_epochs, seed, *est, opt);
                 let payload = codec::encode_trace(&r);
                 self.cache.store(KIND_TRACES, codec::TRACE_SCHEMA, &key, &payload)?;
                 out[i] = Some(r);
@@ -443,7 +461,8 @@ impl Pipeline {
         opt: &StudyOptions,
     ) -> Option<StudyResult> {
         let mm = rt.model(model).ok()?;
-        let bytes = self.cache.load(KIND_STUDY, codec::STUDY_SCHEMA, &study_key(mm, opt))?;
+        let key = study_key(rt.backend_name(), mm, opt);
+        let bytes = self.cache.load(KIND_STUDY, codec::STUDY_SCHEMA, &key)?;
         codec::decode_study(&bytes).ok()
     }
 
@@ -455,7 +474,7 @@ impl Pipeline {
         opt: &StudyOptions,
         res: &StudyResult,
     ) -> Result<()> {
-        let key = study_key(rt.model(model)?, opt);
+        let key = study_key(rt.backend_name(), rt.model(model)?, opt);
         self.cache.store(KIND_STUDY, codec::STUDY_SCHEMA, &key, &codec::encode_study(res))?;
         self.counters.study.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -542,6 +561,27 @@ mod tests {
         let mut h2 = Hasher::new();
         hash_trace_options(&mut h2, &other);
         assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn backend_identity_separates_every_key() {
+        // the native manifest doubles as a convenient real ModelManifest
+        let m = crate::native::model::Plan::new(crate::native::model::STUDY_CNNS[0]).manifest();
+        let t = TraceOptions::default();
+        assert_ne!(train_fp_key("native", &m, 3, 0), train_fp_key("pjrt", &m, 3, 0));
+        assert_ne!(
+            trace_key("native", &m, 3, 0, Estimator::EmpiricalFisher, &t),
+            trace_key("pjrt", &m, 3, 0, Estimator::EmpiricalFisher, &t)
+        );
+        assert_ne!(
+            sensitivity_key("native", &m, 3, 0, &t),
+            sensitivity_key("pjrt", &m, 3, 0, &t)
+        );
+        let opt = StudyOptions::default();
+        assert_ne!(study_key("native", &m, &opt), study_key("pjrt", &m, &opt));
+        // jobs stays excluded from the study key at any backend
+        let opt8 = StudyOptions { jobs: 8, ..StudyOptions::default() };
+        assert_eq!(study_key("native", &m, &opt), study_key("native", &m, &opt8));
     }
 
     #[test]

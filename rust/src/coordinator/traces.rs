@@ -211,8 +211,8 @@ impl TraceEngine<'_> {
     /// *result* is a timing (Table 1/3 speedups) should keep `jobs = 1`.
     ///
     /// With `jobs <= 1` the engine's own runtime (and its warm executable
-    /// cache) is reused; with more, each worker compiles its own runtime
-    /// over the same artifact root.
+    /// cache) is reused; with more, each worker rebuilds its own runtime
+    /// from this engine's backend spec.
     pub fn run_many(
         &self,
         model: &str,
@@ -223,12 +223,12 @@ impl TraceEngine<'_> {
         if parallel::effective_jobs(jobs, specs.len()) <= 1 {
             return specs.iter().map(|&(est, opt)| self.run(model, params, est, opt)).collect();
         }
-        let root = self.rt.manifest.root.clone();
+        let spec = self.rt.spec();
         let ds = self.ds;
         parallel::run_pool(
             specs.len(),
             jobs,
-            || Runtime::new(&root),
+            || Runtime::from_spec(&spec),
             move |rt, i| {
                 let (est, opt) = specs[i];
                 TraceEngine::new(rt, ds).run(model, params, est, opt)

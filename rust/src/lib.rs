@@ -16,12 +16,16 @@
 //! The workspace builds hermetically: the `anyhow` and `xla` dependencies
 //! are vendored path crates under `vendor/` (the `xla` build is an
 //! API-compatible stub that reports the backend as unavailable at runtime —
-//! DESIGN.md explains how to swap in the real one).
+//! DESIGN.md explains how to swap in the real one). The `native` backend
+//! makes the whole experiment pipeline runnable without artifacts or
+//! PJRT: a from-scratch interpreter for the study models behind the same
+//! `runtime::Backend` dispatch contract.
 
 pub mod bench_util;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod native;
 pub mod quant;
 pub mod runtime;
 pub mod stats;

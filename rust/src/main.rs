@@ -10,6 +10,9 @@
 //!   fitq experiment table1|table2|table3|fig1|fig2|fig4|fig5|fig9|all
 //!                   [--seed N] [--jobs N] [per-experiment flags]
 //!
+//! Every command takes `--backend native|pjrt` (default: pjrt when the
+//! artifact root has a manifest, else the zero-setup native interpreter).
+//!
 //! Experiments dispatch through the declarative registry
 //! (`coordinator::pipeline::registry`); their expensive stages flow
 //! through the content-addressed artifact cache under `results/cache/`.
@@ -82,7 +85,7 @@ impl Args {
 }
 
 const USAGE: &str = "fitq <command>\n\
-  info                                   list models and artifacts\n\
+  info                                   list models and entry points\n\
   train      --model M [--epochs N]      train FP model, report accuracy\n\
   traces     --model M [--estimator ef|hessian] [--tol T] [--batch B]\n\
   search     --model M [--budget-ratio R] [--samples N] [--jobs N]\n\
@@ -92,7 +95,11 @@ const USAGE: &str = "fitq <command>\n\
      over N workers (0 = all cores) with bit-identical results at every\n\
      setting — but ms/iter and speedup columns are wall-clock, so keep\n\
      --jobs 1 when the timing itself is the result. `all` walks the\n\
-     experiment DAG once, deduping shared pipeline stages.\n";
+     experiment DAG once, deduping shared pipeline stages.\n\
+  Every command takes --backend native|pjrt (also $FITQ_BACKEND):\n\
+     native = pure-Rust interpreter, zero setup, study models only;\n\
+     pjrt   = compiled HLO artifacts ($FITQ_ARTIFACTS, `make artifacts`).\n\
+     Default: pjrt when the artifact root has a manifest, else native.\n";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -109,7 +116,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         "train" => cmd_train(&args),
         "traces" => cmd_traces(&args),
         "search" => cmd_search(&args),
@@ -122,9 +129,18 @@ fn dispatch(argv: &[String]) -> Result<()> {
     }
 }
 
-fn cmd_info() -> Result<()> {
-    let rt = Runtime::from_env()?;
-    println!("artifact root: {}", rt.manifest.root.display());
+/// Backend resolution shared by every command: `--backend` flag first,
+/// then `$FITQ_BACKEND`, then automatic (pjrt when artifacts exist).
+fn runtime_for(args: &Args) -> Result<Runtime> {
+    match args.get("backend") {
+        Some(b) => Runtime::from_backend_arg(Some(b)),
+        None => Runtime::from_env(),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = runtime_for(args)?;
+    println!("backend: {} (root: {})", rt.backend_name(), rt.manifest.root.display());
     for (name, m) in &rt.manifest.models {
         println!(
             "  {name}: {} params, {} weight blocks, {} act blocks, task {:?}, entries: {}",
@@ -142,7 +158,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model = args.str_or("model", "cnn_mnist");
     let epochs = args.usize_or("epochs", 30)?;
     let seed = args.usize_or("seed", 0)? as u64;
-    let rt = Runtime::from_env()?;
+    let rt = runtime_for(args)?;
     let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
     let mut trainer = Trainer::new(&rt, ds.as_ref());
     let mut st = ModelState::init(&rt, model, seed as u32)?;
@@ -169,7 +185,7 @@ fn cmd_traces(args: &Args) -> Result<()> {
         "hessian" => Estimator::Hutchinson,
         other => bail!("unknown estimator {other:?}"),
     };
-    let rt = Runtime::from_env()?;
+    let rt = runtime_for(args)?;
     let st = fitq::coordinator::experiments::get_trained(&rt, model, epochs, seed)?;
     let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
     let engine = TraceEngine::new(&rt, ds.as_ref());
@@ -204,7 +220,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     let ratio = args.f64_or("budget-ratio", 0.15)?;
     let samples = args.usize_or("samples", 100_000)?;
     let jobs = args.usize_or("jobs", 0)?;
-    let rt = Runtime::from_env()?;
+    let rt = runtime_for(args)?;
     let mm = rt.model(model)?.clone();
     let st = fitq::coordinator::experiments::get_trained(&rt, model, 30, seed)?;
     let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
@@ -302,7 +318,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
     }
     let o = exp_options(args)?;
-    let rt = Runtime::from_env()?;
+    let rt = runtime_for(args)?;
     let pipe = Pipeline::from_env()?;
     registry::run_all(&rt, &pipe, &specs, &o)
 }

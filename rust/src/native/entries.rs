@@ -1,0 +1,303 @@
+//! Entry-point execution: the native [`Dispatcher`] for one `(model,
+//! entry)` pair.
+//!
+//! Each entry mirrors the L2 program of the same name (train.py /
+//! fisher.py / layers.py): the scanned train/QAT epoch (K Adam steps per
+//! dispatch), masked evaluation, predict, weight/activation range
+//! extraction, and the one-backward EF-trace iteration. Arguments arrive
+//! pre-validated against the manifest IoSpecs (shape, dtype, arity), so
+//! this module only moves numbers.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::model::{Plan, FP_LR, QAT_LR};
+use super::net::{self, QuantArgs};
+use super::ops;
+use crate::runtime::backend::{Dispatcher, OutBuf};
+use crate::runtime::Arg;
+
+/// Which program a dispatcher executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    Init,
+    /// `train_epoch` / `train_step` / `qat_epoch`: K scanned Adam steps.
+    Train { k: usize, qat: bool },
+    /// `eval` / `qat_eval`: masked batch evaluation.
+    Eval { qat: bool },
+    Predict,
+    ParamRanges,
+    ActRanges,
+    /// One EF-trace estimator iteration at the given batch size.
+    EfTrace { batch: usize },
+}
+
+impl EntryKind {
+    /// Map a manifest entry name to its program.
+    pub fn parse(name: &str, train_k: usize) -> Result<EntryKind> {
+        Ok(match name {
+            "init" => EntryKind::Init,
+            "train_epoch" => EntryKind::Train { k: train_k, qat: false },
+            "train_step" => EntryKind::Train { k: 1, qat: false },
+            "qat_epoch" => EntryKind::Train { k: train_k, qat: true },
+            "eval" => EntryKind::Eval { qat: false },
+            "qat_eval" => EntryKind::Eval { qat: true },
+            "predict" => EntryKind::Predict,
+            "param_ranges" => EntryKind::ParamRanges,
+            "act_ranges" => EntryKind::ActRanges,
+            other => match other.strip_prefix("ef_trace_bs").and_then(|b| b.parse().ok()) {
+                Some(batch) => EntryKind::EfTrace { batch },
+                None => bail!("native backend has no entry {other:?}"),
+            },
+        })
+    }
+}
+
+/// The native executable: a plan plus the program to run over it.
+pub struct NativeExec {
+    pub plan: Rc<Plan>,
+    pub kind: EntryKind,
+}
+
+fn f32_arg<'a>(args: &'a [Arg], i: usize) -> Result<&'a [f32]> {
+    match args[i] {
+        Arg::F32(v) => Ok(v),
+        _ => bail!("native: argument {i} must be an f32 buffer"),
+    }
+}
+
+fn i32_arg<'a>(args: &'a [Arg], i: usize) -> Result<&'a [i32]> {
+    match args[i] {
+        Arg::I32(v) => Ok(v),
+        _ => bail!("native: argument {i} must be an i32 buffer"),
+    }
+}
+
+fn scalar_arg(args: &[Arg], i: usize) -> Result<f32> {
+    match args[i] {
+        Arg::F32Scalar(v) => Ok(v),
+        Arg::F32(v) if v.len() == 1 => Ok(v[0]),
+        _ => bail!("native: argument {i} must be an f32 scalar"),
+    }
+}
+
+/// One Adam step on the flat carry (layers.py `adam_update`; runtime
+/// bias correction with the f32 step count).
+fn adam_update(params: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], step: f32, lr: f32) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let c1 = 1.0 - B1.powf(step);
+    let c2 = 1.0 - B2.powf(step);
+    for i in 0..params.len() {
+        let gi = g[i];
+        m[i] = B1 * m[i] + (1.0 - B1) * gi;
+        v[i] = B2 * v[i] + (1.0 - B2) * gi * gi;
+        let mhat = m[i] / c1;
+        let vhat = v[i] / c2;
+        params[i] -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+impl NativeExec {
+    fn quant_args<'a>(&self, args: &'a [Arg], at: usize) -> Result<QuantArgs<'a>> {
+        Ok(QuantArgs {
+            bits_w: f32_arg(args, at)?,
+            bits_a: f32_arg(args, at + 1)?,
+            act_lo: f32_arg(args, at + 2)?,
+            act_hi: f32_arg(args, at + 3)?,
+        })
+    }
+
+    fn run_train(&self, args: &[Arg], k: usize, qat: bool) -> Result<Vec<OutBuf>> {
+        let plan = &*self.plan;
+        let mut params = f32_arg(args, 0)?.to_vec();
+        let mut m = f32_arg(args, 1)?.to_vec();
+        let mut v = f32_arg(args, 2)?.to_vec();
+        let mut step = scalar_arg(args, 3)?;
+        let xs = f32_arg(args, 4)?;
+        let ys = i32_arg(args, 5)?;
+        let q = if qat { Some(self.quant_args(args, 6)?) } else { None };
+        let lr = if qat { QAT_LR } else { FP_LR };
+        let b = xs.len() / (k * plan.sample_len());
+        let mut loss_sum = 0.0f64;
+        for ki in 0..k {
+            let x = &xs[ki * b * plan.sample_len()..][..b * plan.sample_len()];
+            let y = &ys[ki * b..][..b];
+            let (loss, grads) = net::mean_loss_grad(plan, &params, x, y, b, q);
+            step += 1.0;
+            adam_update(&mut params, &mut m, &mut v, &grads.flat, step, lr);
+            loss_sum += loss as f64;
+        }
+        Ok(vec![
+            OutBuf::F32(params),
+            OutBuf::F32(m),
+            OutBuf::F32(v),
+            OutBuf::F32(vec![step]),
+            OutBuf::F32(vec![(loss_sum / k as f64) as f32]),
+        ])
+    }
+
+    fn run_eval(&self, args: &[Arg], qat: bool) -> Result<Vec<OutBuf>> {
+        let plan = &*self.plan;
+        let params = f32_arg(args, 0)?;
+        let x = f32_arg(args, 1)?;
+        let y = i32_arg(args, 2)?;
+        let mask = f32_arg(args, 3)?;
+        let q = if qat { Some(self.quant_args(args, 4)?) } else { None };
+        let b = mask.len();
+        let ncls = plan.spec.n_classes;
+        let tape = net::forward(plan, params, x, b, q);
+        let mut per = vec![0.0f32; b];
+        ops::softmax_xent(&tape.logits, y, b, ncls, &mut per);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0.0f64;
+        for i in 0..b {
+            loss_sum += (per[i] * mask[i]) as f64;
+            let pred = ops::argmax(&tape.logits[i * ncls..][..ncls]);
+            if pred as i32 == y[i] {
+                correct += mask[i] as f64;
+            }
+            n += mask[i] as f64;
+        }
+        Ok(vec![
+            OutBuf::F32(vec![loss_sum as f32]),
+            OutBuf::F32(vec![correct as f32]),
+            OutBuf::F32(vec![n as f32]),
+        ])
+    }
+
+    fn run_ef_trace(&self, args: &[Arg], batch: usize) -> Result<Vec<OutBuf>> {
+        let plan = &*self.plan;
+        let params = f32_arg(args, 0)?;
+        let x = f32_arg(args, 1)?;
+        let y = i32_arg(args, 2)?;
+        let (_, grads) = net::mean_loss_grad(plan, params, x, y, batch, None);
+        let bf = batch as f64;
+        let w_tr: Vec<f32> = (0..plan.n_weight_blocks())
+            .map(|l| {
+                let (off, size) = plan.weight_block(l);
+                let s: f64 =
+                    grads.flat[off..off + size].iter().map(|&g| g as f64 * g as f64).sum();
+                (s * bf) as f32
+            })
+            .collect();
+        let a_tr: Vec<f32> = grads
+            .act
+            .iter()
+            .map(|ag| {
+                let s: f64 = ag.iter().map(|&g| g as f64 * g as f64).sum();
+                (s * bf) as f32
+            })
+            .collect();
+        Ok(vec![OutBuf::F32(w_tr), OutBuf::F32(a_tr)])
+    }
+}
+
+impl Dispatcher for NativeExec {
+    fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
+        let plan = &*self.plan;
+        match self.kind {
+            EntryKind::Init => {
+                let seed = match args[0] {
+                    Arg::U32Scalar(s) => s,
+                    _ => bail!("native: init takes a u32 seed"),
+                };
+                Ok(vec![OutBuf::F32(plan.init_flat(seed))])
+            }
+            EntryKind::Train { k, qat } => self.run_train(args, k, qat),
+            EntryKind::Eval { qat } => self.run_eval(args, qat),
+            EntryKind::Predict => {
+                let params = f32_arg(args, 0)?;
+                let x = f32_arg(args, 1)?;
+                let b = x.len() / plan.sample_len();
+                let tape = net::forward(plan, params, x, b, None);
+                Ok(vec![OutBuf::F32(tape.logits)])
+            }
+            EntryKind::ParamRanges => {
+                let params = f32_arg(args, 0)?;
+                let mut lo = Vec::with_capacity(plan.n_weight_blocks());
+                let mut hi = Vec::with_capacity(plan.n_weight_blocks());
+                for l in 0..plan.n_weight_blocks() {
+                    let (off, size) = plan.weight_block(l);
+                    let (mn, mx) = crate::tensor::min_max(&params[off..off + size])
+                        .expect("weight blocks are non-empty");
+                    lo.push(mn);
+                    hi.push(mx);
+                }
+                Ok(vec![OutBuf::F32(lo), OutBuf::F32(hi)])
+            }
+            EntryKind::ActRanges => {
+                let params = f32_arg(args, 0)?;
+                let x = f32_arg(args, 1)?;
+                let b = x.len() / plan.sample_len();
+                let tape = net::forward(plan, params, x, b, None);
+                let mut lo = Vec::with_capacity(plan.n_act_blocks());
+                let mut hi = Vec::with_capacity(plan.n_act_blocks());
+                for i in 0..plan.n_act_blocks() {
+                    let (mn, mx) =
+                        crate::tensor::min_max(tape.act(i)).expect("activations are non-empty");
+                    lo.push(mn);
+                    hi.push(mx);
+                }
+                Ok(vec![OutBuf::F32(lo), OutBuf::F32(hi)])
+            }
+            EntryKind::EfTrace { batch } => self.run_ef_trace(args, batch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_kind_parsing() {
+        assert_eq!(EntryKind::parse("init", 10).unwrap(), EntryKind::Init);
+        assert_eq!(
+            EntryKind::parse("train_epoch", 10).unwrap(),
+            EntryKind::Train { k: 10, qat: false }
+        );
+        assert_eq!(
+            EntryKind::parse("train_step", 10).unwrap(),
+            EntryKind::Train { k: 1, qat: false }
+        );
+        assert_eq!(
+            EntryKind::parse("qat_epoch", 10).unwrap(),
+            EntryKind::Train { k: 10, qat: true }
+        );
+        assert_eq!(
+            EntryKind::parse("ef_trace_bs32", 10).unwrap(),
+            EntryKind::EfTrace { batch: 32 }
+        );
+        assert!(EntryKind::parse("hutch_bs4", 10).is_err(), "no Hessian entry natively");
+        assert!(EntryKind::parse("bogus", 10).is_err());
+    }
+
+    #[test]
+    fn adam_first_step_is_sign_scaled() {
+        // step 1 bias correction makes mhat = g, vhat = g^2, so the
+        // update is -lr * sign(g) (up to eps)
+        let mut p = vec![0.0f32; 2];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam_update(&mut p, &mut m, &mut v, &[0.5, -2.0], 1.0, 0.01);
+        assert!((p[0] + 0.01).abs() < 1e-5, "p0 {}", p[0]);
+        assert!((p[1] - 0.01).abs() < 1e-5, "p1 {}", p[1]);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize (x - 3)^2 — Adam should land near 3
+        let mut p = vec![0.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        for step in 1..=2000 {
+            let g = 2.0 * (p[0] - 3.0);
+            adam_update(&mut p, &mut m, &mut v, &[g], step as f32, 0.05);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "{}", p[0]);
+    }
+}

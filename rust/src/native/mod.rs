@@ -1,0 +1,116 @@
+//! The native execution backend: a from-scratch pure-Rust interpreter
+//! for the study models — no artifacts, no PJRT, no Python.
+//!
+//! Where the PJRT backend executes HLO that aot.py lowered from the L2
+//! JAX graphs, this backend *is* the graphs, re-implemented directly:
+//!
+//! - [`model`] — the study CNNs (`cnn_mnist[_bn]`, `cnn_cifar[_bn]`),
+//!   their flat parameter layout (identical tensor order and block
+//!   indexing to layers.py), He-normal init, and the generated
+//!   [`Manifest`] with aot.py-shaped entry IoSpecs.
+//! - [`ops`] — conv2d / dense / max-pool / batch-norm / relu /
+//!   softmax-CE, forward *and* hand-derived backward.
+//! - [`quant`] — `fake_quant` bit-faithful to the L1 Pallas kernel
+//!   (ties-to-even, fused `q*delta+lo`), with the straight-through
+//!   backward convention.
+//! - [`net`] — the taped forward/backward supporting the same three
+//!   modes as `Model.apply` (plain / QAT / activation taps).
+//! - [`entries`] — the entry-point programs (`init`, `train_epoch`,
+//!   `qat_epoch`, `eval`, `qat_eval`, `predict`, `param_ranges`,
+//!   `act_ranges`, `ef_trace_bs{B}`), dispatched through the shared
+//!   [`Dispatcher`] contract.
+//!
+//! Everything is deterministic: entry programs are pure functions of
+//! their inputs (no global state, fixed summation order), so the same
+//! seed replays bit-identically across runs, processes and `--jobs`
+//! settings — `tests/native_backend.rs` pins this, along with
+//! finite-difference checks of every backward kernel.
+//!
+//! The backends are numerically *independent* (different init RNG,
+//! different accumulation orders): a checkpoint trained natively is not
+//! comparable to a PJRT one, which is why backend identity is hashed
+//! into every pipeline stage key (DESIGN.md "Backends").
+
+pub mod entries;
+pub mod model;
+pub mod net;
+pub mod ops;
+pub mod quant;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::backend::{Backend, Dispatcher};
+use crate::runtime::{EntrySpec, Manifest, ModelManifest};
+use entries::{EntryKind, NativeExec};
+use model::{Plan, STUDY_CNNS};
+
+/// The native backend: execution plans for every built-in model.
+pub struct NativeBackend {
+    plans: BTreeMap<String, Rc<Plan>>,
+}
+
+impl NativeBackend {
+    /// Build the backend plus its generated manifest (the pair
+    /// `Runtime::native` assembles into a runtime).
+    pub fn create() -> (NativeBackend, Manifest) {
+        let mut plans = BTreeMap::new();
+        let mut models = BTreeMap::new();
+        for spec in STUDY_CNNS {
+            let plan = Plan::new(*spec);
+            models.insert(spec.name.to_string(), plan.manifest());
+            plans.insert(spec.name.to_string(), Rc::new(plan));
+        }
+        (NativeBackend { plans }, Manifest { root: PathBuf::from("<native>"), models })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile(&self, model: &ModelManifest, entry: &EntrySpec) -> Result<Box<dyn Dispatcher>> {
+        let plan = self
+            .plans
+            .get(&model.name)
+            .ok_or_else(|| anyhow!("native backend has no model {:?}", model.name))?;
+        // the manifest is the source of truth for dispatch shapes, so the
+        // scanned-epoch K comes from it, not the global constant
+        let kind = EntryKind::parse(&entry.name, model.train_k)?;
+        Ok(Box::new(NativeExec { plan: plan.clone(), kind }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_exposes_all_study_models() {
+        let (backend, manifest) = NativeBackend::create();
+        for spec in STUDY_CNNS {
+            assert!(manifest.model(spec.name).is_ok(), "{}", spec.name);
+            assert!(backend.plans.contains_key(spec.name));
+        }
+        assert!(manifest.model("cnn_s").is_err(), "scale models are PJRT-only");
+        assert!(manifest.model("unet").is_err(), "unet is PJRT-only");
+    }
+
+    #[test]
+    fn compile_rejects_foreign_entries() {
+        let (backend, manifest) = NativeBackend::create();
+        let mm = manifest.model("cnn_mnist").unwrap();
+        // an entry spec the manifest doesn't carry (defensive path)
+        let fake = EntrySpec {
+            name: "hutch_bs4".into(),
+            file: String::new(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        assert!(backend.compile(mm, &fake).is_err());
+    }
+}

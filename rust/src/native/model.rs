@@ -1,0 +1,467 @@
+//! Native model zoo: the study CNNs, their flat parameter layout, and
+//! the generated manifest.
+//!
+//! This is the Rust twin of `python/compile/model.py::build_cnn` +
+//! `aot.py::build_entries` for the Table-2 study models: the same tensor
+//! order (`convI.w`, `convI.b`, [`convI.gamma`, `convI.beta`,] …, `fc.w`,
+//! `fc.b`), the same quantizable-block indexing, the same activation
+//! sites, and entry-point IoSpecs matching what aot.py lowers — so the
+//! coordinator cannot tell the backends apart structurally. Numeric
+//! outputs are *not* expected to match PJRT bit-for-bit (different
+//! init RNG, different summation orders); backend identity is part of
+//! every pipeline cache key for exactly that reason.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::artifact::{
+    ActBlock, DType, EntrySpec, IoSpec, ModelManifest, Task, TensorInfo, WeightBlock,
+};
+use crate::tensor::Pcg32;
+
+/// Microbatch steps per train/qat dispatch (aot.py TRAIN_K).
+pub const TRAIN_K: usize = 10;
+pub const TRAIN_B: usize = 32;
+pub const EVAL_B: usize = 256;
+pub const CALIB_B: usize = 128;
+pub const PREDICT_B: usize = 32;
+/// EF-trace batch sizes lowered for study models (aot.py STUDY_TRACE_BS).
+pub const TRACE_BS: &[usize] = &[32];
+
+/// Adam learning rates (train.py: ADAM / QAT_ADAM; study models have no
+/// per-model overrides).
+pub const FP_LR: f32 = 1e-2;
+pub const QAT_LR: f32 = 1e-3;
+
+/// Stream-seed salt for the He-normal init RNG (one `Pcg32` per tensor).
+pub const INIT_SALT: u64 = 0x1A17_5EED;
+
+/// A study CNN: Fig. 8 architecture family (model.py CNNConfig).
+#[derive(Debug, Clone, Copy)]
+pub struct CnnSpec {
+    pub name: &'static str,
+    /// (H, W, C) input shape.
+    pub input: (usize, usize, usize),
+    /// One conv layer per entry (3x3, SAME, stride 1).
+    pub filters: &'static [usize],
+    pub n_classes: usize,
+    pub batch_norm: bool,
+    /// 2x2 max-pool after conv `i` (0-based).
+    pub pool_after: &'static [usize],
+}
+
+/// The Table-2 study models the native backend implements.
+pub const STUDY_CNNS: &[CnnSpec] = &[
+    CnnSpec {
+        name: "cnn_mnist",
+        input: (16, 16, 1),
+        filters: &[8, 16, 16],
+        n_classes: 10,
+        batch_norm: false,
+        pool_after: &[0, 1],
+    },
+    CnnSpec {
+        name: "cnn_mnist_bn",
+        input: (16, 16, 1),
+        filters: &[8, 16, 16],
+        n_classes: 10,
+        batch_norm: true,
+        pool_after: &[0, 1],
+    },
+    CnnSpec {
+        name: "cnn_cifar",
+        input: (32, 32, 3),
+        filters: &[16, 32, 32],
+        n_classes: 10,
+        batch_norm: false,
+        pool_after: &[0, 1],
+    },
+    CnnSpec {
+        name: "cnn_cifar_bn",
+        input: (32, 32, 3),
+        filters: &[16, 32, 32],
+        n_classes: 10,
+        batch_norm: true,
+        pool_after: &[0, 1],
+    },
+];
+
+/// One conv layer's geometry + parameter offsets inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    /// Input spatial dims (post previous pool).
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub w_off: usize,
+    pub b_off: usize,
+    /// BN scale/shift offsets (models with `batch_norm`).
+    pub gamma_off: Option<usize>,
+    pub beta_off: Option<usize>,
+    /// 2x2 max-pool after this layer.
+    pub pooled: bool,
+}
+
+impl ConvLayer {
+    /// Elements of the HWIO kernel.
+    pub fn w_size(&self) -> usize {
+        9 * self.c_in * self.c_out
+    }
+
+    /// Per-sample output (= activation-site) element count.
+    pub fn act_size(&self) -> usize {
+        self.h * self.w * self.c_out
+    }
+}
+
+/// The interpreter's execution plan for one model: geometry, offsets and
+/// the generated [`ModelManifest`].
+#[derive(Debug)]
+pub struct Plan {
+    pub spec: CnnSpec,
+    pub convs: Vec<ConvLayer>,
+    pub fc_w_off: usize,
+    pub fc_b_off: usize,
+    /// Flattened feature dim entering the fc layer.
+    pub feat: usize,
+    pub n_params: usize,
+    tensors: Vec<TensorInfo>,
+}
+
+fn tensor(name: String, shape: Vec<usize>, offset: usize, kind: &str, block: i64) -> TensorInfo {
+    let size = shape.iter().product();
+    TensorInfo { name, shape, offset, size, kind: kind.to_string(), block }
+}
+
+impl Plan {
+    pub fn new(spec: CnnSpec) -> Plan {
+        let (mut h, mut w) = (spec.input.0, spec.input.1);
+        let mut c_in = spec.input.2;
+        let mut off = 0usize;
+        let mut convs = Vec::new();
+        let mut tensors = Vec::new();
+        let mut block = 0i64;
+        for (i, &c_out) in spec.filters.iter().enumerate() {
+            let w_off = off;
+            let w_shape = vec![3, 3, c_in, c_out];
+            tensors.push(tensor(format!("conv{i}.w"), w_shape, off, "conv_w", block));
+            block += 1;
+            off += 9 * c_in * c_out;
+            let b_off = off;
+            tensors.push(tensor(format!("conv{i}.b"), vec![c_out], off, "bias", -1));
+            off += c_out;
+            let (mut gamma_off, mut beta_off) = (None, None);
+            if spec.batch_norm {
+                gamma_off = Some(off);
+                tensors.push(tensor(format!("conv{i}.gamma"), vec![c_out], off, "bn_gamma", -1));
+                off += c_out;
+                beta_off = Some(off);
+                tensors.push(tensor(format!("conv{i}.beta"), vec![c_out], off, "bn_beta", -1));
+                off += c_out;
+            }
+            let pooled = spec.pool_after.contains(&i);
+            convs.push(ConvLayer { h, w, c_in, c_out, w_off, b_off, gamma_off, beta_off, pooled });
+            if pooled {
+                h /= 2;
+                w /= 2;
+            }
+            c_in = c_out;
+        }
+        let feat = h * w * c_in;
+        let fc_w_off = off;
+        tensors.push(tensor("fc.w".into(), vec![feat, spec.n_classes], off, "fc_w", block));
+        off += feat * spec.n_classes;
+        let fc_b_off = off;
+        tensors.push(tensor("fc.b".into(), vec![spec.n_classes], off, "bias", -1));
+        off += spec.n_classes;
+        Plan { spec, convs, fc_w_off, fc_b_off, feat, n_params: off, tensors }
+    }
+
+    pub fn n_weight_blocks(&self) -> usize {
+        self.convs.len() + 1
+    }
+
+    pub fn n_act_blocks(&self) -> usize {
+        self.convs.len()
+    }
+
+    /// Per-sample input element count.
+    pub fn sample_len(&self) -> usize {
+        self.spec.input.0 * self.spec.input.1 * self.spec.input.2
+    }
+
+    /// (offset, size) of quantizable weight block `l` (convs, then fc).
+    pub fn weight_block(&self, l: usize) -> (usize, usize) {
+        if l < self.convs.len() {
+            (self.convs[l].w_off, self.convs[l].w_size())
+        } else {
+            (self.fc_w_off, self.feat * self.spec.n_classes)
+        }
+    }
+
+    /// He-normal init from a u32 seed: one RNG per tensor (seed, salt,
+    /// tensor index), std = sqrt(2 / fan_in); unit gammas, zero biases —
+    /// the native twin of layers.py `init_flat` (different RNG family, so
+    /// native and PJRT checkpoints are numerically independent).
+    pub fn init_flat(&self, seed: u32) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_params];
+        for (i, t) in self.tensors.iter().enumerate() {
+            match t.kind.as_str() {
+                "conv_w" | "fc_w" => {
+                    let fan_in: usize = if t.kind == "conv_w" {
+                        t.shape[0] * t.shape[1] * t.shape[2]
+                    } else {
+                        t.shape[0]
+                    };
+                    let std = (2.0 / fan_in as f64).sqrt() as f32;
+                    let mut rng = Pcg32::new(seed as u64 ^ INIT_SALT, i as u64 + 1);
+                    for v in &mut out[t.offset..t.offset + t.size] {
+                        *v = rng.normal() * std;
+                    }
+                }
+                "bn_gamma" => out[t.offset..t.offset + t.size].fill(1.0),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// The generated manifest entry for this model — structurally
+    /// identical to what aot.py writes for the same model.
+    pub fn manifest(&self) -> ModelManifest {
+        let spec = &self.spec;
+        let weight_blocks = (0..self.n_weight_blocks())
+            .map(|l| {
+                let (offset, size) = self.weight_block(l);
+                let (name, shape) = if l < self.convs.len() {
+                    let c = &self.convs[l];
+                    (format!("conv{l}.w"), vec![3, 3, c.c_in, c.c_out])
+                } else {
+                    ("fc.w".to_string(), vec![self.feat, spec.n_classes])
+                };
+                WeightBlock { index: l, name, offset, size, shape }
+            })
+            .collect();
+        let act_blocks = self
+            .convs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| ActBlock {
+                index: i,
+                shape: vec![c.h, c.w, c.c_out],
+                size: c.act_size(),
+            })
+            .collect();
+        ModelManifest {
+            name: spec.name.to_string(),
+            n_params: self.n_params,
+            input_shape: vec![spec.input.0, spec.input.1, spec.input.2],
+            n_classes: spec.n_classes,
+            task: Task::Classify,
+            train_k: TRAIN_K,
+            train_b: TRAIN_B,
+            eval_b: EVAL_B,
+            calib_b: CALIB_B,
+            predict_b: PREDICT_B,
+            trace_bs: TRACE_BS.to_vec(),
+            weight_blocks,
+            act_blocks,
+            tensors: self.tensors.clone(),
+            entries: self.entries(),
+        }
+    }
+
+    /// Entry-point IoSpecs, mirroring aot.py `build_entries` for a study
+    /// model (`hutch_*` is a scale-model entry and has no native twin).
+    fn entries(&self) -> BTreeMap<String, EntrySpec> {
+        let spec = &self.spec;
+        let n = self.n_params;
+        let (h, w, c) = spec.input;
+        let (lw, la) = (self.n_weight_blocks(), self.n_act_blocks());
+        let f32v = |name: &str, shape: Vec<usize>| IoSpec {
+            name: name.to_string(),
+            shape,
+            dtype: DType::F32,
+        };
+        let i32v = |name: &str, shape: Vec<usize>| IoSpec {
+            name: name.to_string(),
+            shape,
+            dtype: DType::I32,
+        };
+        let state_in = |k: usize, b: usize| {
+            vec![
+                f32v("params", vec![n]),
+                f32v("m", vec![n]),
+                f32v("v", vec![n]),
+                f32v("step", vec![]),
+                f32v("xs", vec![k, b, h, w, c]),
+                i32v("ys", vec![k, b]),
+            ]
+        };
+        let state_out = vec![
+            f32v("params", vec![n]),
+            f32v("m", vec![n]),
+            f32v("v", vec![n]),
+            f32v("step", vec![]),
+            f32v("loss", vec![]),
+        ];
+        let quant_in = vec![
+            f32v("bits_w", vec![lw]),
+            f32v("bits_a", vec![la]),
+            f32v("act_lo", vec![la]),
+            f32v("act_hi", vec![la]),
+        ];
+        let eval_in = vec![
+            f32v("params", vec![n]),
+            f32v("x", vec![EVAL_B, h, w, c]),
+            i32v("y", vec![EVAL_B]),
+            f32v("mask", vec![EVAL_B]),
+        ];
+        let eval_out =
+            vec![f32v("loss_sum", vec![]), f32v("correct", vec![]), f32v("n", vec![])];
+
+        let mut entries = BTreeMap::new();
+        let mut add = |name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| {
+            entries.insert(
+                name.to_string(),
+                EntrySpec {
+                    name: name.to_string(),
+                    file: format!("native://{}/{name}", spec.name),
+                    inputs,
+                    outputs,
+                },
+            );
+        };
+        add(
+            "init",
+            vec![IoSpec { name: "seed".into(), shape: vec![], dtype: DType::U32 }],
+            vec![f32v("params", vec![n])],
+        );
+        add("train_epoch", state_in(TRAIN_K, TRAIN_B), state_out.clone());
+        if spec.name == "cnn_mnist" {
+            // K=1 variant kept for the §Perf scan-amortization probe.
+            add("train_step", state_in(1, TRAIN_B), state_out.clone());
+        }
+        add(
+            "qat_epoch",
+            [state_in(TRAIN_K, TRAIN_B), quant_in.clone()].concat(),
+            state_out,
+        );
+        add("eval", eval_in.clone(), eval_out.clone());
+        add("qat_eval", [eval_in, quant_in].concat(), eval_out);
+        add(
+            "predict",
+            vec![f32v("params", vec![n]), f32v("x", vec![PREDICT_B, h, w, c])],
+            vec![f32v("logits", vec![PREDICT_B, spec.n_classes])],
+        );
+        add(
+            "param_ranges",
+            vec![f32v("params", vec![n])],
+            vec![f32v("lo", vec![lw]), f32v("hi", vec![lw])],
+        );
+        add(
+            "act_ranges",
+            vec![f32v("params", vec![n]), f32v("x", vec![CALIB_B, h, w, c])],
+            vec![f32v("lo", vec![la]), f32v("hi", vec![la])],
+        );
+        for &b in TRACE_BS {
+            add(
+                &format!("ef_trace_bs{b}"),
+                vec![f32v("params", vec![n]), f32v("x", vec![b, h, w, c]), i32v("y", vec![b])],
+                vec![f32v("w_tr", vec![lw]), f32v("a_tr", vec![la])],
+            );
+        }
+        entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist_plan() -> Plan {
+        Plan::new(STUDY_CNNS[0])
+    }
+
+    #[test]
+    fn layout_matches_python_reference() {
+        // counts cross-checked against model.py build_cnn (and the JAX
+        // parity run recorded in the PR that introduced this backend)
+        let p = mnist_plan();
+        assert_eq!(p.n_params, 6138);
+        assert_eq!(p.n_weight_blocks(), 4);
+        assert_eq!(p.n_act_blocks(), 3);
+        assert_eq!(p.feat, 256);
+        assert_eq!(p.weight_block(0), (0, 72));
+        assert_eq!(p.weight_block(3), (p.fc_w_off, 2560));
+        let bn = Plan::new(STUDY_CNNS[1]);
+        assert_eq!(bn.n_params, 6138 + 2 * (8 + 16 + 16));
+    }
+
+    #[test]
+    fn layout_covers_whole_vector_in_order() {
+        for spec in STUDY_CNNS {
+            let p = Plan::new(*spec);
+            let mut off = 0;
+            for t in &p.tensors {
+                assert_eq!(t.offset, off, "{}: {}", spec.name, t.name);
+                off += t.size;
+            }
+            assert_eq!(off, p.n_params, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn manifest_is_structurally_consistent() {
+        for spec in STUDY_CNNS {
+            let p = Plan::new(*spec);
+            let m = p.manifest();
+            assert_eq!(m.n_params, p.n_params);
+            assert_eq!(m.tensors.iter().map(|t| t.size).sum::<usize>(), m.n_params);
+            assert_eq!(m.n_weight_blocks(), p.n_weight_blocks());
+            assert_eq!(m.n_act_blocks(), p.n_act_blocks());
+            // BN naming convention holds (bn_gamma_views finds the scales)
+            let views = m.bn_gamma_views();
+            if spec.batch_norm {
+                assert!(views[..views.len() - 1].iter().all(|v| v.is_some()), "{}", spec.name);
+                assert!(views[views.len() - 1].is_none(), "fc has no BN");
+            } else {
+                assert!(views.iter().all(|v| v.is_none()));
+            }
+            // every entry's IoSpecs have consistent element counts
+            let e = m.entry("ef_trace_bs32").unwrap();
+            assert_eq!(e.outputs[0].shape, vec![m.n_weight_blocks()]);
+            assert_eq!(e.inputs[1].numel(), 32 * p.sample_len());
+            let t = m.entry("train_epoch").unwrap();
+            assert_eq!(t.inputs[4].numel(), TRAIN_K * TRAIN_B * p.sample_len());
+            assert_eq!(t.outputs[3].numel(), 1, "step is a scalar");
+        }
+    }
+
+    #[test]
+    fn train_step_only_on_cnn_mnist() {
+        assert!(Plan::new(STUDY_CNNS[0]).manifest().entry("train_step").is_ok());
+        assert!(Plan::new(STUDY_CNNS[1]).manifest().entry("train_step").is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_seed_sensitive_and_he_scaled() {
+        let p = mnist_plan();
+        let a = p.init_flat(7);
+        let b = p.init_flat(7);
+        let c = p.init_flat(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // conv0: fan_in 9 -> std sqrt(2/9) ~ 0.471
+        let w0: Vec<f32> = a[0..72].to_vec();
+        let var = w0.iter().map(|x| (x * x) as f64).sum::<f64>() / 72.0;
+        assert!((var.sqrt() - (2.0f64 / 9.0).sqrt()).abs() < 0.2, "std {}", var.sqrt());
+        // biases zero
+        assert!(a[72..80].iter().all(|&x| x == 0.0));
+        // BN model: gammas one
+        let bn = Plan::new(STUDY_CNNS[1]);
+        let f = bn.init_flat(1);
+        let g_off = bn.convs[0].gamma_off.unwrap();
+        assert!(f[g_off..g_off + 8].iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,288 @@
+//! The taped CNN forward/backward of the native interpreter.
+//!
+//! One [`forward`] supports the same three orthogonal modes as the L2
+//! `Model.apply` (model.py): the plain FP pass, the fake-quant (QAT)
+//! pass, and the activation-tap pass — so the EF trace's eps-trick
+//! gradients fall out of the same backward as the training gradients.
+//! The tape stores exactly what the backward needs; [`backward`] returns
+//! the flat parameter gradient plus the gradient at every activation
+//! site (the post-relu tensor, i.e. the `eps_l` insertion point of
+//! fisher.py — for a zero eps, `dL/d eps_l = dL/d a_l`).
+//!
+//! Straight-through estimators need no backward code: quantization nodes
+//! are simply skipped on the way back (see `native::quant`).
+
+use super::model::Plan;
+use super::{ops, quant};
+
+/// Borrowed runtime quantization configuration (QAT mode).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantArgs<'a> {
+    pub bits_w: &'a [f32],
+    pub bits_a: &'a [f32],
+    pub act_lo: &'a [f32],
+    pub act_hi: &'a [f32],
+}
+
+/// Per-conv-layer tape record.
+struct ConvTape {
+    /// Layer input (post previous pool), (B, h, w, c_in).
+    xin: Vec<f32>,
+    /// The kernel actually convolved (fake-quantized under QAT).
+    wq: Vec<f32>,
+    /// BN cache: normalized input + per-channel rsqrt(var + eps).
+    xhat: Vec<f32>,
+    ivar: Vec<f32>,
+    /// Post-relu activation (the eps site), (B, h, w, c_out).
+    act: Vec<f32>,
+    /// Pool winner indices (pooled layers).
+    pool_idx: Vec<u8>,
+}
+
+/// Everything [`backward`] needs from one forward pass.
+pub struct Tape {
+    batch: usize,
+    convs: Vec<ConvTape>,
+    /// Flattened features entering fc, (B, feat).
+    feat: Vec<f32>,
+    /// The fc weight actually applied (fake-quantized under QAT).
+    fwq: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+impl Tape {
+    /// Post-relu activation of conv layer `i` (the calibration tap).
+    pub fn act(&self, i: usize) -> &[f32] {
+        &self.convs[i].act
+    }
+}
+
+/// Run the forward pass for a batch; `x` is (B, H, W, C) flattened.
+pub fn forward(plan: &Plan, params: &[f32], x: &[f32], batch: usize, q: Option<QuantArgs>) -> Tape {
+    debug_assert_eq!(x.len(), batch * plan.sample_len());
+    debug_assert_eq!(params.len(), plan.n_params);
+    let mut convs = Vec::with_capacity(plan.convs.len());
+    let mut cur: Vec<f32> = x.to_vec();
+    for (i, layer) in plan.convs.iter().enumerate() {
+        let (h, w, cin, cout) = (layer.h, layer.w, layer.c_in, layer.c_out);
+        let xin = cur;
+        let wsize = layer.w_size();
+        let raw_w = &params[layer.w_off..layer.w_off + wsize];
+        let wq: Vec<f32> = match q {
+            Some(qa) => {
+                let mut buf = vec![0.0f32; wsize];
+                quant::fake_quant_minmax(raw_w, qa.bits_w[i], &mut buf);
+                buf
+            }
+            None => raw_w.to_vec(),
+        };
+        let bias = &params[layer.b_off..layer.b_off + cout];
+        let mut z = vec![0.0f32; batch * h * w * cout];
+        ops::conv2d(&xin, batch, h, w, cin, &wq, cout, bias, &mut z);
+        let (mut xhat, mut ivar) = (Vec::new(), Vec::new());
+        if let (Some(g_off), Some(b_off)) = (layer.gamma_off, layer.beta_off) {
+            let gamma = &params[g_off..g_off + cout];
+            let beta = &params[b_off..b_off + cout];
+            let mut out = vec![0.0f32; z.len()];
+            xhat = vec![0.0f32; z.len()];
+            ivar = vec![0.0f32; cout];
+            ops::batch_norm(&z, batch * h * w, cout, gamma, beta, &mut out, &mut xhat, &mut ivar);
+            z = out;
+        }
+        let mut act = vec![0.0f32; z.len()];
+        ops::relu(&z, &mut act);
+        let aq = q.map(|qa| {
+            let mut buf = vec![0.0f32; act.len()];
+            quant::fake_quant(&act, qa.act_lo[i], qa.act_hi[i], qa.bits_a[i], &mut buf);
+            buf
+        });
+        // the fake-quantized activation (QAT) feeds pool / the next layer
+        // but is not needed by the backward (STE) — it stays local
+        let post: &[f32] = aq.as_deref().unwrap_or(&act);
+        let mut pool_idx = Vec::new();
+        cur = if layer.pooled {
+            let mut out = vec![0.0f32; batch * (h / 2) * (w / 2) * cout];
+            pool_idx = vec![0u8; out.len()];
+            ops::max_pool(post, batch, h, w, cout, &mut out, &mut pool_idx);
+            out
+        } else {
+            post.to_vec()
+        };
+        convs.push(ConvTape { xin, wq, xhat, ivar, act, pool_idx });
+    }
+    let ncls = plan.spec.n_classes;
+    let fc_w = &params[plan.fc_w_off..plan.fc_w_off + plan.feat * ncls];
+    let fwq: Vec<f32> = match q {
+        Some(qa) => {
+            let mut buf = vec![0.0f32; fc_w.len()];
+            quant::fake_quant_minmax(fc_w, qa.bits_w[plan.convs.len()], &mut buf);
+            buf
+        }
+        None => fc_w.to_vec(),
+    };
+    let fc_b = &params[plan.fc_b_off..plan.fc_b_off + ncls];
+    let mut logits = vec![0.0f32; batch * ncls];
+    ops::dense(&cur, batch, plan.feat, &fwq, ncls, fc_b, &mut logits);
+    Tape { batch, convs, feat: cur, fwq, logits }
+}
+
+/// Gradients of one backward pass.
+pub struct Grads {
+    /// d loss / d params over the full flat vector.
+    pub flat: Vec<f32>,
+    /// d loss / d (post-relu activation) per site — the eps-trick values.
+    pub act: Vec<Vec<f32>>,
+}
+
+/// Backpropagate `dlogits` through the tape. STE convention: weight
+/// gradients land on the *raw* parameter slots even when the forward
+/// convolved fake-quantized copies.
+pub fn backward(plan: &Plan, params: &[f32], tape: &Tape, dlogits: &[f32]) -> Grads {
+    let batch = tape.batch;
+    let ncls = plan.spec.n_classes;
+    let mut flat = vec![0.0f32; plan.n_params];
+    let mut act_grads: Vec<Vec<f32>> = Vec::with_capacity(plan.convs.len());
+
+    // fc layer
+    let mut dfeat = vec![0.0f32; tape.feat.len()];
+    {
+        let (dw, rest) = flat[plan.fc_w_off..].split_at_mut(plan.feat * ncls);
+        let db = &mut rest[..ncls];
+        ops::dense_bwd(&tape.feat, &tape.fwq, batch, plan.feat, ncls, dlogits, dw, db, &mut dfeat);
+    }
+
+    // conv stack, last to first
+    let mut da = dfeat;
+    for (i, layer) in plan.convs.iter().enumerate().rev() {
+        let t = &tape.convs[i];
+        let (h, w, cin, cout) = (layer.h, layer.w, layer.c_in, layer.c_out);
+        if layer.pooled {
+            let mut dx = vec![0.0f32; batch * h * w * cout];
+            ops::max_pool_bwd(&da, &t.pool_idx, batch, h, w, cout, &mut dx);
+            da = dx;
+        }
+        // activation fake-quant is a straight-through node: `da` is now
+        // the gradient at the post-relu site (the eps-trick gradient)
+        act_grads.push(da.clone());
+        ops::relu_bwd_inplace(&t.act, &mut da);
+        if let (Some(g_off), Some(b_off)) = (layer.gamma_off, layer.beta_off) {
+            let gamma = params[g_off..g_off + cout].to_vec();
+            let mut dx = vec![0.0f32; da.len()];
+            {
+                let (head, tail) = flat.split_at_mut(b_off);
+                let dgamma = &mut head[g_off..g_off + cout];
+                let dbeta = &mut tail[..cout];
+                ops::batch_norm_bwd(
+                    &da, &t.xhat, &t.ivar, &gamma, batch * h * w, cout, &mut dx, dgamma, dbeta,
+                );
+            }
+            da = dx;
+        }
+        {
+            let (dw, rest) = flat[layer.w_off..].split_at_mut(layer.w_size());
+            let db = &mut rest[..cout];
+            ops::conv2d_bwd_w(&t.xin, batch, h, w, cin, &da, cout, dw, db);
+        }
+        if i > 0 {
+            let mut dx = vec![0.0f32; batch * h * w * cin];
+            ops::conv2d_bwd_x(&t.wq, batch, h, w, cin, &da, cout, &mut dx);
+            da = dx;
+        }
+    }
+    act_grads.reverse();
+    Grads { flat, act: act_grads }
+}
+
+/// Mean cross-entropy loss + full backward for a labeled batch — the
+/// shared core of `train_epoch`, `qat_epoch` and `ef_trace`.
+pub fn mean_loss_grad(
+    plan: &Plan,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    batch: usize,
+    q: Option<QuantArgs>,
+) -> (f32, Grads) {
+    let ncls = plan.spec.n_classes;
+    let tape = forward(plan, params, x, batch, q);
+    let mut per = vec![0.0f32; batch];
+    ops::softmax_xent(&tape.logits, y, batch, ncls, &mut per);
+    let loss = (per.iter().map(|&v| v as f64).sum::<f64>() / batch as f64) as f32;
+    let dper = vec![1.0f32 / batch as f32; batch];
+    let mut dlogits = vec![0.0f32; tape.logits.len()];
+    ops::softmax_xent_bwd(&tape.logits, y, batch, ncls, &dper, &mut dlogits);
+    let grads = backward(plan, params, &tape, &dlogits);
+    (loss, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::model::{Plan, STUDY_CNNS};
+    use crate::tensor::Pcg32;
+
+    fn rand_batch(plan: &Plan, batch: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg32::new(seed, 5);
+        let x: Vec<f32> = (0..batch * plan.sample_len()).map(|_| rng.normal()).collect();
+        let y: Vec<i32> =
+            (0..batch).map(|_| rng.below(plan.spec.n_classes as u32) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        for spec in STUDY_CNNS {
+            let plan = Plan::new(*spec);
+            let params = plan.init_flat(1);
+            let (x, _) = rand_batch(&plan, 4, 2);
+            let tape = forward(&plan, &params, &x, 4, None);
+            assert_eq!(tape.logits.len(), 4 * spec.n_classes);
+            assert!(tape.logits.iter().all(|v| v.is_finite()), "{}", spec.name);
+            for (i, layer) in plan.convs.iter().enumerate() {
+                assert_eq!(tape.act(i).len(), 4 * layer.act_size());
+            }
+        }
+    }
+
+    #[test]
+    fn backward_grad_shapes_match_layout() {
+        let plan = Plan::new(STUDY_CNNS[1]); // BN variant
+        let params = plan.init_flat(3);
+        let (x, y) = rand_batch(&plan, 4, 7);
+        let (loss, g) = mean_loss_grad(&plan, &params, &x, &y, 4, None);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(g.flat.len(), plan.n_params);
+        assert_eq!(g.act.len(), plan.n_act_blocks());
+        assert!(g.flat.iter().any(|&v| v != 0.0), "gradient must be nonzero");
+        // act-grad shapes follow the activation sites
+        for (i, layer) in plan.convs.iter().enumerate() {
+            assert_eq!(g.act[i].len(), 4 * layer.act_size());
+        }
+    }
+
+    #[test]
+    fn quant_mode_changes_forward_but_not_shapes() {
+        let plan = Plan::new(STUDY_CNNS[0]);
+        let params = plan.init_flat(5);
+        let (x, _) = rand_batch(&plan, 2, 9);
+        let plain = forward(&plan, &params, &x, 2, None);
+        let (lw, la) = (plan.n_weight_blocks(), plan.n_act_blocks());
+        let (bits_w, bits_a) = (vec![3.0f32; lw], vec![3.0f32; la]);
+        let (act_lo, act_hi) = (vec![0.0f32; la], vec![4.0f32; la]);
+        let q = QuantArgs { bits_w: &bits_w, bits_a: &bits_a, act_lo: &act_lo, act_hi: &act_hi };
+        let quanted = forward(&plan, &params, &x, 2, Some(q));
+        assert_eq!(plain.logits.len(), quanted.logits.len());
+        assert_ne!(plain.logits, quanted.logits, "3-bit quant must perturb logits");
+    }
+
+    #[test]
+    fn deterministic_forward_backward() {
+        let plan = Plan::new(STUDY_CNNS[1]);
+        let params = plan.init_flat(11);
+        let (x, y) = rand_batch(&plan, 3, 13);
+        let (l1, g1) = mean_loss_grad(&plan, &params, &x, &y, 3, None);
+        let (l2, g2) = mean_loss_grad(&plan, &params, &x, &y, 3, None);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1.flat, g2.flat);
+    }
+}

@@ -1,0 +1,538 @@
+//! Tensor-op kernels of the native interpreter: forward and backward.
+//!
+//! All buffers are flat `f32` slices in NHWC layout (HWIO conv kernels),
+//! matching the L2 graphs. Storage and elementwise math stay in `f32`;
+//! reductions (BN statistics, backward channel sums) accumulate in `f64`
+//! — the backward of each op is the exact derivative of the forward *as
+//! implemented here*, which is what the finite-difference gradient checks
+//! in `tests/native_backend.rs` pin down.
+
+/// SAME-padded 3x3 stride-1 conv: `out[n,i,j,o] += x[n,i+di-1,j+dj-1,ci] *
+/// w[di,dj,ci,o]`, then `+ bias[o]`. `out` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    debug_assert_eq!(wgt.len(), 9 * cin * cout);
+    debug_assert_eq!(out.len(), n * h * w * cout);
+    for orow in out.chunks_exact_mut(cout) {
+        orow.copy_from_slice(bias);
+    }
+    for ni in 0..n {
+        for di in 0..3 {
+            let (i0, i1) = tap_range(di, h);
+            for dj in 0..3 {
+                let (j0, j1) = tap_range(dj, w);
+                for i in i0..i1 {
+                    let xi = i + di - 1;
+                    for j in j0..j1 {
+                        let xj = j + dj - 1;
+                        let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                        let orow = &mut out[((ni * h + i) * w + j) * cout..][..cout];
+                        for (ci, &xv) in xrow.iter().enumerate() {
+                            let wrow = &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Valid output-row range for kernel tap `d` (SAME padding, 3-tap).
+#[inline]
+fn tap_range(d: usize, len: usize) -> (usize, usize) {
+    (if d == 0 { 1 } else { 0 }, if d == 2 { len - 1 } else { len })
+}
+
+/// Conv backward w.r.t. kernel and bias; accumulates into `dw`/`db`
+/// (callers zero them).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_w(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dout: &[f32],
+    cout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    for ni in 0..n {
+        for di in 0..3 {
+            let (i0, i1) = tap_range(di, h);
+            for dj in 0..3 {
+                let (j0, j1) = tap_range(dj, w);
+                for i in i0..i1 {
+                    let xi = i + di - 1;
+                    for j in j0..j1 {
+                        let xj = j + dj - 1;
+                        let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                        let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
+                        for (ci, &xv) in xrow.iter().enumerate() {
+                            let dwrow = &mut dw[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                            for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
+                                *dwv += xv * dv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for drow in dout.chunks_exact(cout) {
+        for (b, &dv) in db.iter_mut().zip(drow) {
+            *b += dv;
+        }
+    }
+}
+
+/// Conv backward w.r.t. the input; overwrites `dx`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_x(
+    wgt: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dout: &[f32],
+    cout: usize,
+    dx: &mut [f32],
+) {
+    dx.fill(0.0);
+    for ni in 0..n {
+        for di in 0..3 {
+            let (i0, i1) = tap_range(di, h);
+            for dj in 0..3 {
+                let (j0, j1) = tap_range(dj, w);
+                for i in i0..i1 {
+                    let xi = i + di - 1;
+                    for j in j0..j1 {
+                        let xj = j + dj - 1;
+                        let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
+                        let dxrow = &mut dx[((ni * h + xi) * w + xj) * cin..][..cin];
+                        for (ci, dxv) in dxrow.iter_mut().enumerate() {
+                            let wrow = &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                            let mut acc = 0.0f32;
+                            for (&wv, &dv) in wrow.iter().zip(drow) {
+                                acc += wv * dv;
+                            }
+                            *dxv += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense layer: `out[n,o] = sum_i x[n,i] w[i,o] + b[o]`; overwrites `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn dense(
+    x: &[f32],
+    n: usize,
+    fin: usize,
+    wgt: &[f32],
+    fout: usize,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    for ni in 0..n {
+        let orow = &mut out[ni * fout..][..fout];
+        orow.copy_from_slice(bias);
+        let xrow = &x[ni * fin..][..fin];
+        for (fi, &xv) in xrow.iter().enumerate() {
+            let wrow = &wgt[fi * fout..][..fout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Dense backward: accumulates `dw`/`db`, overwrites `dx`.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_bwd(
+    x: &[f32],
+    wgt: &[f32],
+    n: usize,
+    fin: usize,
+    fout: usize,
+    dout: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+) {
+    for ni in 0..n {
+        let xrow = &x[ni * fin..][..fin];
+        let drow = &dout[ni * fout..][..fout];
+        for (fi, &xv) in xrow.iter().enumerate() {
+            let dwrow = &mut dw[fi * fout..][..fout];
+            for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
+                *dwv += xv * dv;
+            }
+        }
+        for (b, &dv) in db.iter_mut().zip(drow) {
+            *b += dv;
+        }
+        let dxrow = &mut dx[ni * fin..][..fin];
+        for (fi, dxv) in dxrow.iter_mut().enumerate() {
+            let wrow = &wgt[fi * fout..][..fout];
+            let mut acc = 0.0f32;
+            for (&wv, &dv) in wrow.iter().zip(drow) {
+                acc += wv * dv;
+            }
+            *dxv = acc;
+        }
+    }
+}
+
+/// ReLU; overwrites `out` (the backward masks on this output).
+pub fn relu(x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v.max(0.0);
+    }
+}
+
+/// ReLU backward in place: zero where the *output* activation is <= 0
+/// (the jax.nn.relu convention: zero subgradient at 0).
+pub fn relu_bwd_inplace(act: &[f32], da: &mut [f32]) {
+    for (d, &a) in da.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// 2x2 stride-2 max pool (h, w even). `idx` records the winning position
+/// (0..4, first max in (di, dj) scan order) for the backward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn max_pool(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    idx: &mut [u8],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), n * oh * ow * c);
+    for ni in 0..n {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let obase = ((ni * oh + oi) * ow + oj) * c;
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_k = 0u8;
+                    for (k, (di, dj)) in
+                        [(0, 0), (0, 1), (1, 0), (1, 1)].into_iter().enumerate()
+                    {
+                        let v = x[((ni * h + 2 * oi + di) * w + 2 * oj + dj) * c + ci];
+                        if v > best {
+                            best = v;
+                            best_k = k as u8;
+                        }
+                    }
+                    out[obase + ci] = best;
+                    idx[obase + ci] = best_k;
+                }
+            }
+        }
+    }
+}
+
+/// Max-pool backward: routes each output gradient to the recorded winner.
+/// Overwrites `dx`.
+#[allow(clippy::too_many_arguments)]
+pub fn max_pool_bwd(
+    dout: &[f32],
+    idx: &[u8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut [f32],
+) {
+    dx.fill(0.0);
+    let (oh, ow) = (h / 2, w / 2);
+    for ni in 0..n {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let obase = ((ni * oh + oi) * ow + oj) * c;
+                for ci in 0..c {
+                    let k = idx[obase + ci] as usize;
+                    let (di, dj) = (k / 2, k % 2);
+                    dx[((ni * h + 2 * oi + di) * w + 2 * oj + dj) * c + ci] += dout[obase + ci];
+                }
+            }
+        }
+    }
+}
+
+/// Batch-statistics normalization over (N, H, W) per channel (layers.py
+/// `batch_norm`, eps 1e-5). Writes `out`, and caches `xhat` (normalized
+/// input) and per-channel `ivar` = rsqrt(var + eps) for the backward.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_norm(
+    x: &[f32],
+    m: usize,
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    out: &mut [f32],
+    xhat: &mut [f32],
+    ivar: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * c);
+    let mut sum = vec![0.0f64; c];
+    for row in x.chunks_exact(c) {
+        for (s, &v) in sum.iter_mut().zip(row) {
+            *s += v as f64;
+        }
+    }
+    let mean: Vec<f32> = sum.iter().map(|s| (s / m as f64) as f32).collect();
+    let mut var = vec![0.0f64; c];
+    for row in x.chunks_exact(c) {
+        for ((s, &v), &mu) in var.iter_mut().zip(row).zip(&mean) {
+            let d = (v - mu) as f64;
+            *s += d * d;
+        }
+    }
+    for (iv, v) in ivar.iter_mut().zip(&var) {
+        *iv = (1.0 / (v / m as f64 + 1e-5).sqrt()) as f32;
+    }
+    for ((xrow, xh_row), orow) in x
+        .chunks_exact(c)
+        .zip(xhat.chunks_exact_mut(c))
+        .zip(out.chunks_exact_mut(c))
+    {
+        for ci in 0..c {
+            let xh = (xrow[ci] - mean[ci]) * ivar[ci];
+            xh_row[ci] = xh;
+            orow[ci] = gamma[ci] * xh + beta[ci];
+        }
+    }
+}
+
+/// Batch-norm backward (the exact derivative of [`batch_norm`] through
+/// the batch statistics):
+/// `dx = ivar/M * (M*dxhat - sum(dxhat) - xhat * sum(dxhat * xhat))`,
+/// `dgamma = sum(dout * xhat)`, `dbeta = sum(dout)`.
+/// Accumulates `dgamma`/`dbeta`; overwrites `dx` (may alias `dout` — it
+/// does not, callers pass distinct buffers).
+#[allow(clippy::too_many_arguments)]
+pub fn batch_norm_bwd(
+    dout: &[f32],
+    xhat: &[f32],
+    ivar: &[f32],
+    gamma: &[f32],
+    m: usize,
+    c: usize,
+    dx: &mut [f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    let mut s1 = vec![0.0f64; c]; // sum dxhat
+    let mut s2 = vec![0.0f64; c]; // sum dxhat * xhat
+    let mut sg = vec![0.0f64; c]; // sum dout * xhat
+    let mut sb = vec![0.0f64; c]; // sum dout
+    for (drow, xh_row) in dout.chunks_exact(c).zip(xhat.chunks_exact(c)) {
+        for ci in 0..c {
+            let d = drow[ci] as f64;
+            let xh = xh_row[ci] as f64;
+            let dxh = d * gamma[ci] as f64;
+            s1[ci] += dxh;
+            s2[ci] += dxh * xh;
+            sg[ci] += d * xh;
+            sb[ci] += d;
+        }
+    }
+    for ci in 0..c {
+        dgamma[ci] += sg[ci] as f32;
+        dbeta[ci] += sb[ci] as f32;
+    }
+    let mf = m as f32;
+    for ((drow, xh_row), dxrow) in dout
+        .chunks_exact(c)
+        .zip(xhat.chunks_exact(c))
+        .zip(dx.chunks_exact_mut(c))
+    {
+        for ci in 0..c {
+            let dxh = drow[ci] * gamma[ci];
+            dxrow[ci] = (ivar[ci] / mf)
+                * (mf * dxh - s1[ci] as f32 - xh_row[ci] * s2[ci] as f32);
+        }
+    }
+}
+
+/// Per-example softmax cross entropy: `per[n] = logsumexp(logits[n]) -
+/// logits[n][y[n]]` (layers.py `softmax_xent`).
+pub fn softmax_xent(logits: &[f32], labels: &[i32], n: usize, ncls: usize, per: &mut [f32]) {
+    for ni in 0..n {
+        let row = &logits[ni * ncls..][..ncls];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut s = 0.0f64;
+        for &v in row {
+            s += ((v - mx) as f64).exp();
+        }
+        let lse = (s.ln() as f32) + mx;
+        per[ni] = lse - row[labels[ni] as usize];
+    }
+}
+
+/// Backward: `dlogits[n] = (softmax(logits[n]) - onehot(y[n])) * dper[n]`.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_xent_bwd(
+    logits: &[f32],
+    labels: &[i32],
+    n: usize,
+    ncls: usize,
+    dper: &[f32],
+    dlogits: &mut [f32],
+) {
+    for ni in 0..n {
+        let row = &logits[ni * ncls..][..ncls];
+        let drow = &mut dlogits[ni * ncls..][..ncls];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut s = 0.0f64;
+        for &v in row {
+            s += ((v - mx) as f64).exp();
+        }
+        let inv = (1.0 / s) as f32;
+        for (d, &v) in drow.iter_mut().zip(row) {
+            *d = ((v - mx).exp() * inv) * dper[ni];
+        }
+        drow[labels[ni] as usize] -= dper[ni];
+    }
+}
+
+/// Index of the first maximum (jnp.argmax tie convention).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel_recovers_input() {
+        // center-tap identity: w[1,1,ci,co] = (ci == co)
+        let (n, h, w, c) = (1, 4, 4, 2);
+        let x: Vec<f32> = (0..n * h * w * c).map(|i| i as f32 * 0.1).collect();
+        let mut wgt = vec![0.0f32; 9 * c * c];
+        for ci in 0..c {
+            // tap (di=1, dj=1) is flat index 4
+            wgt[(4 * c + ci) * c + ci] = 1.0;
+        }
+        let mut out = vec![0.0f32; x.len()];
+        conv2d(&x, n, h, w, c, &wgt, c, &[0.0, 0.0], &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn conv_bias_broadcasts() {
+        let (n, h, w, cin, cout) = (1, 2, 2, 1, 3);
+        let x = vec![0.0f32; n * h * w * cin];
+        let wgt = vec![0.0f32; 9 * cin * cout];
+        let mut out = vec![0.0f32; n * h * w * cout];
+        conv2d(&x, n, h, w, cin, &wgt, cout, &[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(&out[..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&out[9..12], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn conv_same_padding_shrinks_border_sums() {
+        // all-ones input and kernel: interior = 9*cin, corner = 4*cin
+        let (n, h, w, cin, cout) = (1, 5, 5, 2, 1);
+        let x = vec![1.0f32; n * h * w * cin];
+        let wgt = vec![1.0f32; 9 * cin * cout];
+        let mut out = vec![0.0f32; n * h * w * cout];
+        conv2d(&x, n, h, w, cin, &wgt, cout, &[0.0], &mut out);
+        assert_eq!(out[2 * 5 + 2], 18.0, "interior: 9 taps x 2 channels");
+        assert_eq!(out[0], 8.0, "corner: 4 taps x 2 channels");
+    }
+
+    #[test]
+    fn max_pool_picks_first_max_and_routes_back() {
+        let (n, h, w, c) = (1, 2, 2, 1);
+        let x = vec![3.0f32, 7.0, 7.0, 1.0];
+        let mut out = vec![0.0f32; 1];
+        let mut idx = vec![0u8; 1];
+        max_pool(&x, n, h, w, c, &mut out, &mut idx);
+        assert_eq!(out[0], 7.0);
+        assert_eq!(idx[0], 1, "first max in scan order");
+        let mut dx = vec![0.0f32; 4];
+        max_pool_bwd(&[2.0], &idx, n, h, w, c, &mut dx);
+        assert_eq!(dx, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn batch_norm_normalizes_and_scales() {
+        let (m, c) = (8, 2);
+        let x: Vec<f32> = (0..m * c).map(|i| (i % 5) as f32 - 1.0).collect();
+        let mut out = vec![0.0f32; m * c];
+        let mut xhat = vec![0.0f32; m * c];
+        let mut ivar = vec![0.0f32; c];
+        batch_norm(&x, m, c, &[2.0, 1.0], &[0.5, 0.0], &mut out, &mut xhat, &mut ivar);
+        for ci in 0..c {
+            let mean: f32 = (0..m).map(|i| xhat[i * c + ci]).sum::<f32>() / m as f32;
+            let var: f32 = (0..m).map(|i| xhat[i * c + ci].powi(2)).sum::<f32>() / m as f32;
+            assert!(mean.abs() < 1e-5, "xhat mean ~ 0, got {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "xhat var ~ 1, got {var}");
+        }
+        // out = gamma * xhat + beta
+        assert!((out[0] - (2.0 * xhat[0] + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_xent_matches_closed_form() {
+        // two logits, label 0: loss = ln(1 + e^(b-a))
+        let logits = vec![1.0f32, 3.0];
+        let mut per = vec![0.0f32];
+        softmax_xent(&logits, &[0], 1, 2, &mut per);
+        assert!((per[0] - (1.0 + (2.0f32).exp()).ln()).abs() < 1e-6);
+        // gradient sums to zero per example (softmax - onehot)
+        let mut dl = vec![0.0f32; 2];
+        softmax_xent_bwd(&logits, &[0], 1, 2, &[1.0], &mut dl);
+        assert!((dl[0] + dl[1]).abs() < 1e-6);
+        assert!(dl[0] < 0.0 && dl[1] > 0.0);
+    }
+
+    #[test]
+    fn relu_and_mask() {
+        let x = vec![-1.0f32, 0.0, 2.0];
+        let mut a = vec![0.0f32; 3];
+        relu(&x, &mut a);
+        assert_eq!(a, vec![0.0, 0.0, 2.0]);
+        let mut da = vec![1.0f32, 1.0, 1.0];
+        relu_bwd_inplace(&a, &mut da);
+        assert_eq!(da, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

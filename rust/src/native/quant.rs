@@ -1,0 +1,169 @@
+//! Fake quantization, bit-faithful to the L1 Pallas kernel.
+//!
+//! The reference semantics (`python/compile/kernels/fake_quant.py`):
+//!
+//! ```text
+//! levels = exp2(bits) - 1
+//! ok     = (hi > lo) & (levels >= 1)
+//! delta  = ok ? (hi - lo) / max(levels, 1) : 1
+//! q      = round((clip(x, lo, hi) - lo) / delta)      // ties to even
+//! out    = ok ? q * delta + lo : x                    // fused mul-add
+//! ```
+//!
+//! Two details matter for bit-parity with the compiled kernel (verified
+//! against the Pallas oracle during this backend's bring-up):
+//! `jnp.round` rounds ties to even (Rust's `f32::round` rounds away from
+//! zero), and XLA emits an FMA for `q * delta + lo` — so this module uses
+//! [`round_ties_even`] and `f32::mul_add`.
+//!
+//! The straight-through estimator (model.py `_ste_fake_quant`) is a
+//! backward rule, not a function: the quantized forward is piecewise
+//! constant, and the STE passes the upstream gradient through unchanged
+//! (zeros to `lo`/`hi`/`bits`). In the interpreter that means backward
+//! passes simply *skip* the quantization node — there is no code to run,
+//! which `tests/native_backend.rs` pins as the STE-identity property.
+
+/// Round to nearest, ties to even (`jnp.round` semantics). Exact for the
+/// quantization-index domain (|x| well below 2^23).
+pub fn round_ties_even(x: f32) -> f32 {
+    let r = x.round(); // ties away from zero
+    if (x - x.trunc()).abs() == 0.5 && (r as i64) % 2 != 0 {
+        r - x.signum()
+    } else {
+        r
+    }
+}
+
+/// Quantize-dequantize one value (callers hoist the per-tensor `delta`).
+#[inline]
+fn fq(x: f32, lo: f32, hi: f32, delta: f32) -> f32 {
+    let q = round_ties_even((x.clamp(lo, hi) - lo) / delta);
+    q.mul_add(delta, lo)
+}
+
+/// The kernel's `(ok, delta)` preamble for a `(lo, hi, bits)` triple.
+fn params(lo: f32, hi: f32, bits: f32) -> Option<f32> {
+    let levels = bits.exp2() - 1.0;
+    if hi > lo && levels >= 1.0 {
+        Some((hi - lo) / levels.max(1.0))
+    } else {
+        None // degenerate range or <1 level: pass through
+    }
+}
+
+/// Quantize-dequantize `xs` into `out` with a fixed calibrated range.
+pub fn fake_quant(xs: &[f32], lo: f32, hi: f32, bits: f32, out: &mut [f32]) {
+    match params(lo, hi, bits) {
+        Some(delta) => {
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = fq(x, lo, hi, delta);
+            }
+        }
+        None => out.copy_from_slice(xs),
+    }
+}
+
+/// Weight-tensor fake quant: min-max range computed from the tensor
+/// itself (model.py `ste_quant_weight`).
+pub fn fake_quant_minmax(xs: &[f32], bits: f32, out: &mut [f32]) {
+    let (lo, hi) = match crate::tensor::min_max(xs) {
+        Some(r) => r,
+        None => return,
+    };
+    fake_quant(xs, lo, hi, bits, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_ties_even_matches_jnp() {
+        for (x, want) in [
+            (0.5, 0.0),
+            (1.5, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (4.5, 4.0),
+            (-0.5, -0.0),
+            (-1.5, -2.0),
+            (-2.5, -2.0),
+            (0.49999, 0.0),
+            (2.51, 3.0),
+            (7.0, 7.0),
+        ] {
+            assert_eq!(round_ties_even(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn matches_uniform_quantizer_off_ties() {
+        // quant::UniformQuantizer is the analysis-side oracle; away from
+        // exact .5 index fractions the two agree bit-for-bit except for
+        // the FMA's last-ulp advantage — allow 1 ulp.
+        let q = crate::quant::UniformQuantizer::new(-1.2, 0.9, 4);
+        let mut rng = crate::tensor::Pcg32::new(3, 9);
+        let mut out = [0.0f32];
+        for _ in 0..2000 {
+            let x = rng.uniform_in(-2.0, 2.0);
+            fake_quant(&[x], -1.2, 0.9, 4.0, &mut out);
+            let want = q.apply(x);
+            let ulp = (want.abs().max(1e-6)) * f32::EPSILON * 2.0;
+            assert!((out[0] - want).abs() <= ulp, "x={x}: {} vs {want}", out[0]);
+        }
+    }
+
+    #[test]
+    fn endpoints_clip_and_fix() {
+        let mut out = [0.0f32; 4];
+        fake_quant(&[-5.0, -1.0, 1.0, 5.0], -1.0, 1.0, 8.0, &mut out);
+        assert_eq!(out, [-1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn degenerate_range_passes_through() {
+        let xs = [3.7f32, -1.0, 0.0];
+        let mut out = [0.0f32; 3];
+        fake_quant(&xs, 1.0, 1.0, 8.0, &mut out);
+        assert_eq!(out, xs);
+        // bits = 0 -> levels = 0 -> pass through
+        fake_quant(&xs, -1.0, 1.0, 0.0, &mut out);
+        assert_eq!(out, xs);
+    }
+
+    #[test]
+    fn level_count_is_2_pow_b() {
+        let mut levels = std::collections::BTreeSet::new();
+        let mut out = [0.0f32];
+        for i in 0..=1000 {
+            let x = -1.0 + 2.0 * i as f32 / 1000.0;
+            fake_quant(&[x], -1.0, 1.0, 2.0, &mut out);
+            levels.insert(out[0].to_bits());
+        }
+        assert_eq!(levels.len(), 4);
+    }
+
+    #[test]
+    fn minmax_keeps_extremes_fixed() {
+        let xs = [-0.75f32, 0.1, 0.3, 1.25];
+        let mut out = [0.0f32; 4];
+        fake_quant_minmax(&xs, 8.0, &mut out);
+        assert_eq!(out[0], -0.75);
+        assert_eq!(out[3], 1.25);
+        // idempotent
+        let mut out2 = [0.0f32; 4];
+        fake_quant_minmax(&out, 8.0, &mut out2);
+        for (a, b) in out.iter().zip(&out2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even_index() {
+        // lo=0, hi=15, bits=4 -> delta = 1: x = k + 0.5 ties to even k
+        let xs = [0.5f32, 1.5, 2.5, 3.5, 4.5];
+        let mut out = [0.0f32; 5];
+        fake_quant(&xs, 0.0, 15.0, 4.0, &mut out);
+        assert_eq!(out, [0.0, 2.0, 2.0, 4.0, 4.0]);
+    }
+}

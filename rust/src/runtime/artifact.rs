@@ -283,8 +283,14 @@ impl Manifest {
     }
 
     pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
-        self.root.join(&entry.file)
+        hlo_path(&self.root, entry)
     }
+}
+
+/// HLO text location for an entry under an artifact root — the single
+/// path rule shared by [`Manifest::hlo_path`] and the PJRT backend.
+pub fn hlo_path(root: &Path, entry: &EntrySpec) -> PathBuf {
+    root.join(&entry.file)
 }
 
 /// Default artifact root: $FITQ_ARTIFACTS or ./artifacts.

@@ -1,0 +1,87 @@
+//! The backend abstraction: who actually executes an entry point.
+//!
+//! [`Executable::run`](super::Executable::run) always meant the same
+//! contract — validated named arguments in, name-addressable host vectors
+//! out, per `(model, entry)` — but the implementation was welded to PJRT.
+//! This module lifts the contract into two traits:
+//!
+//! - [`Backend`]: compiles one manifest entry into a [`Dispatcher`]
+//!   (lazily, once per `(model, entry)`, cached by the `Runtime`);
+//! - [`Dispatcher`]: executes one dispatch. Argument validation against
+//!   the manifest [`EntrySpec`](super::EntrySpec) happens *before* the
+//!   dispatcher is called, and output shape/dtype validation after, in
+//!   the shared `Executable` wrapper — a backend only moves numbers.
+//!
+//! Two backends exist: [`PjrtBackend`](super::client::PjrtBackend)
+//! (compiled HLO artifacts through xla-rs) and
+//! [`NativeBackend`](crate::native::NativeBackend) (the from-scratch
+//! pure-Rust interpreter, no artifacts required). [`BackendSpec`] is the
+//! `Clone + Send` recipe for rebuilding a `Runtime` on a worker thread —
+//! the `Runtime` itself stays deliberately single-threaded.
+//!
+//! **Cache-key rule.** Backend identity is part of every pipeline stage
+//! digest (`coordinator::pipeline::stages`): the two backends are
+//! numerically independent implementations, so a native-trained
+//! checkpoint must never validate against a PJRT key or vice versa.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::artifact::{EntrySpec, ModelManifest};
+use super::executable::Arg;
+
+/// One raw output buffer, typed but not yet named/validated.
+#[derive(Debug, Clone)]
+pub enum OutBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Executes one compiled entry point. Arguments are pre-validated against
+/// the entry's `IoSpec`s; outputs are returned in manifest order and
+/// validated by the caller.
+pub trait Dispatcher {
+    fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>>;
+}
+
+/// A runtime execution backend: turns manifest entries into dispatchers.
+pub trait Backend {
+    /// Stable identity used in reports and pipeline cache keys.
+    fn name(&self) -> &'static str;
+
+    /// Compile (or build) the dispatcher for one entry point.
+    fn compile(&self, model: &ModelManifest, entry: &EntrySpec) -> Result<Box<dyn Dispatcher>>;
+}
+
+/// A serializable recipe for constructing a `Runtime` — what parallel
+/// phases hand to worker threads instead of the non-`Send` runtime itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// PJRT over an artifact root (`artifacts/manifest.json` + HLO text).
+    Pjrt(PathBuf),
+    /// The pure-Rust interpreter with its built-in model manifest.
+    Native,
+}
+
+impl BackendSpec {
+    /// The backend name this spec resolves to.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Pjrt(_) => "pjrt",
+            BackendSpec::Native => "native",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_names_are_stable() {
+        // these strings are part of the pipeline cache-key contract
+        assert_eq!(BackendSpec::Native.name(), "native");
+        assert_eq!(BackendSpec::Pjrt(PathBuf::from("x")).name(), "pjrt");
+    }
+}

@@ -1,20 +1,30 @@
-//! The PJRT runtime: one CPU client, lazily compiled executables.
+//! The runtime: one execution backend, lazily compiled executables.
 //!
-//! `Runtime` is the single entry point the coordinator uses to talk to
-//! XLA: it owns the PJRT client, the manifest, and a cache of compiled
-//! executables keyed by (model, entry). Compilation happens on first use
-//! and is reported through `CompileStats` so experiments can separate
-//! one-time compile cost from steady-state dispatch cost.
+//! `Runtime` is the single entry point the coordinator uses to execute
+//! entry points: it owns a [`Backend`], the manifest, and a cache of
+//! compiled executables keyed by (model, entry). Compilation happens on
+//! first use and is reported through `CompileStats` so experiments can
+//! separate one-time compile cost from steady-state dispatch cost.
+//!
+//! Backend selection (`--backend` flag / `FITQ_BACKEND` env / automatic):
+//! - `pjrt` — compiled HLO artifacts through xla-rs; needs `artifacts/`
+//!   (from `make artifacts`) and a real (non-stub) `xla` crate.
+//! - `native` — the pure-Rust interpreter (`crate::native`); zero setup,
+//!   study models only.
+//! - automatic ([`Runtime::from_env`]): `pjrt` when the artifact root has
+//!   a manifest, `native` otherwise.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
-use super::artifact::{Manifest, ModelManifest};
-use super::executable::Executable;
+use super::artifact::{default_artifact_root, DType, EntrySpec, IoSpec, Manifest, ModelManifest};
+use super::backend::{Backend, BackendSpec, Dispatcher, OutBuf};
+use super::executable::{Arg, Executable};
 
 /// One-time compilation cost accounting (separated from dispatch cost in
 /// the experiment reports).
@@ -26,29 +36,105 @@ pub struct CompileStats {
     pub total_time: Duration,
 }
 
+/// The hint appended to every PJRT bring-up failure: both missing
+/// artifacts and the vendored `xla` stub should steer users to the
+/// zero-setup path.
+const PJRT_HINT: &str = "PJRT backend unavailable — rerun with `--backend native` \
+     (pure-Rust interpreter, no artifacts needed), or point FITQ_ARTIFACTS at a root \
+     built by `make artifacts` and build against the real xla-rs crate (DESIGN.md \
+     \"Backends\")";
+
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
+    spec: BackendSpec,
     pub manifest: Manifest,
     cache: RefCell<BTreeMap<(String, String), Rc<Executable>>>,
     stats: RefCell<CompileStats>,
 }
 
 impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifact root.
-    pub fn new(artifact_root: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_root)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
+    /// Create a CPU-PJRT runtime over an artifact root (the historical
+    /// constructor; equivalent to [`Runtime::pjrt`]).
+    pub fn new(artifact_root: impl AsRef<Path>) -> Result<Runtime> {
+        Runtime::pjrt(artifact_root)
+    }
+
+    /// PJRT over an artifact root.
+    pub fn pjrt(artifact_root: impl AsRef<Path>) -> Result<Runtime> {
+        let root = artifact_root.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root).context(PJRT_HINT)?;
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => bail!("{e}\n{PJRT_HINT}"),
+        };
+        Ok(Runtime::assemble(
+            Box::new(PjrtBackend { client, root: root.clone() }),
+            BackendSpec::Pjrt(root),
+            manifest,
+        ))
+    }
+
+    /// The pure-Rust native backend with its built-in manifest — no
+    /// artifacts, no PJRT, study models only.
+    pub fn native() -> Result<Runtime> {
+        let (backend, manifest) = crate::native::NativeBackend::create();
+        Ok(Runtime::assemble(Box::new(backend), BackendSpec::Native, manifest))
+    }
+
+    /// Rebuild a runtime from a worker-portable spec (`Runtime` itself is
+    /// deliberately not `Send`; parallel phases ship the spec instead).
+    pub fn from_spec(spec: &BackendSpec) -> Result<Runtime> {
+        match spec {
+            BackendSpec::Pjrt(root) => Runtime::pjrt(root),
+            BackendSpec::Native => Runtime::native(),
+        }
+    }
+
+    /// Backend resolution for the CLI/env: `FITQ_BACKEND=native|pjrt`
+    /// forces a backend; otherwise `pjrt` when the default artifact root
+    /// ($FITQ_ARTIFACTS or ./artifacts) holds a manifest, else `native`.
+    pub fn from_env() -> Result<Runtime> {
+        let forced = std::env::var("FITQ_BACKEND").ok();
+        Runtime::from_backend_arg(forced.as_deref())
+    }
+
+    /// Resolve an explicit backend name (`--backend` flag), falling back
+    /// to the automatic rule of [`Runtime::from_env`] when `None`.
+    pub fn from_backend_arg(arg: Option<&str>) -> Result<Runtime> {
+        match arg {
+            Some("native") => Runtime::native(),
+            Some("pjrt") => Runtime::pjrt(default_artifact_root()),
+            Some(other) => bail!("unknown backend {other:?} (expected native|pjrt)"),
+            None => {
+                let root = default_artifact_root();
+                if root.join("manifest.json").exists() {
+                    Runtime::pjrt(root)
+                } else {
+                    Runtime::native()
+                }
+            }
+        }
+    }
+
+    fn assemble(backend: Box<dyn Backend>, spec: BackendSpec, manifest: Manifest) -> Runtime {
+        Runtime {
+            backend,
+            spec,
             manifest,
             cache: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(CompileStats::default()),
-        })
+        }
     }
 
-    /// Default artifact location ($FITQ_ARTIFACTS or ./artifacts).
-    pub fn from_env() -> Result<Runtime> {
-        Runtime::new(super::artifact::default_artifact_root())
+    /// The backend's stable identity ("pjrt" / "native") — part of every
+    /// pipeline stage digest.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Worker-portable recipe for rebuilding this runtime.
+    pub fn spec(&self) -> BackendSpec {
+        self.spec.clone()
     }
 
     /// Manifest entry for a model, by name.
@@ -62,10 +148,11 @@ impl Runtime {
         if let Some(exe) = self.cache.borrow().get(&key) {
             return Ok(exe.clone());
         }
-        let spec = self.manifest.model(model)?.entry(entry)?.clone();
-        let path = self.manifest.hlo_path(&spec);
+        let mm = self.manifest.model(model)?;
+        let spec = mm.entry(entry)?.clone();
         let t0 = Instant::now();
-        let exe = Rc::new(Executable::compile(&self.client, spec, &path)?);
+        let inner = self.backend.compile(mm, &spec)?;
+        let exe = Rc::new(Executable::new(spec, inner));
         {
             let mut s = self.stats.borrow_mut();
             s.compiled += 1;
@@ -80,8 +167,115 @@ impl Runtime {
         self.stats.borrow().clone()
     }
 
-    /// Drop compiled executables (frees PJRT memory between experiments).
+    /// Drop compiled executables (frees backend memory between experiments).
     pub fn evict_model(&self, model: &str) {
         self.cache.borrow_mut().retain(|(m, _), _| m != model);
+    }
+}
+
+/// The PJRT backend: parses HLO text from the artifact root and compiles
+/// it through the xla-rs CPU client.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    root: PathBuf,
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, _model: &ModelManifest, entry: &EntrySpec) -> Result<Box<dyn Dispatcher>> {
+        let path = super::artifact::hlo_path(&self.root, entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.name))?;
+        Ok(Box::new(PjrtExec {
+            name: entry.name.clone(),
+            inputs: entry.inputs.clone(),
+            out_dtypes: entry.outputs.iter().map(|o| o.dtype).collect(),
+            exe,
+            literals: RefCell::new(Vec::new()),
+        }))
+    }
+}
+
+/// One compiled PJRT executable with reusable input literals (literal
+/// construction is the dominant host-side cost on the training hot
+/// loop). Holds only the spec slices it needs — the full `EntrySpec`
+/// lives in the wrapping `Executable`, which owns output validation.
+struct PjrtExec {
+    name: String,
+    inputs: Vec<IoSpec>,
+    out_dtypes: Vec<DType>,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input literals, allocated at first dispatch and refilled in place.
+    literals: RefCell<Vec<xla::Literal>>,
+}
+
+impl PjrtExec {
+    fn fill_literals(&self, args: &[Arg]) -> Result<()> {
+        let mut lits = self.literals.borrow_mut();
+        // §Perf escape hatch: FITQ_NO_LITERAL_REUSE=1 rebuilds input
+        // literals every dispatch (the naive baseline the reuse path is
+        // measured against in EXPERIMENTS.md §Perf L3).
+        if std::env::var_os("FITQ_NO_LITERAL_REUSE").is_some() {
+            lits.clear();
+        }
+        if lits.is_empty() {
+            for (a, spec) in args.iter().zip(&self.inputs) {
+                lits.push(xla::Literal::create_from_shape_and_untyped_data(
+                    spec.dtype.element_type(),
+                    &spec.shape,
+                    a.bytes(),
+                )?);
+            }
+        } else {
+            for (a, lit) in args.iter().zip(lits.iter_mut()) {
+                match a {
+                    Arg::F32(v) => lit.copy_raw_from(v)?,
+                    Arg::I32(v) => lit.copy_raw_from(v)?,
+                    Arg::U32Scalar(v) => lit.copy_raw_from(&[*v])?,
+                    Arg::F32Scalar(v) => lit.copy_raw_from(&[*v])?,
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Dispatcher for PjrtExec {
+    fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
+        self.fill_literals(args)?;
+        let lits = self.literals.borrow();
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        // guard the zip below from silently truncating extra parts; the
+        // wrapping Executable re-validates count, shape and dtype
+        if parts.len() != self.out_dtypes.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.out_dtypes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, dtype) in parts.into_iter().zip(&self.out_dtypes) {
+            out.push(match dtype {
+                DType::F32 => OutBuf::F32(lit.to_vec::<f32>()?),
+                DType::I32 => OutBuf::I32(lit.to_vec::<i32>()?),
+                DType::U32 => bail!("u32 outputs unsupported"),
+            });
+        }
+        Ok(out)
     }
 }

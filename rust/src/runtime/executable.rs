@@ -1,16 +1,16 @@
-//! Typed wrapper over a compiled PJRT executable.
+//! Typed, backend-agnostic wrapper over a compiled entry point.
 //!
 //! Every dispatch is validated against the manifest's IoSpecs (shape,
-//! dtype, argument count) before touching PJRT, and outputs come back as
-//! name-addressable f32/i32 host vectors. Input literals are allocated
-//! once and refilled in place across calls (`copy_raw_from`) — literal
-//! construction is the dominant host-side cost on the training hot loop.
-
-use std::cell::RefCell;
+//! dtype, argument count) before touching the backend, and outputs come
+//! back as name-addressable f32/i32 host vectors, validated against the
+//! manifest on the way out. The backend-specific execution lives behind
+//! the [`Dispatcher`] trait (`runtime::backend`); this wrapper is the
+//! shared contract both PJRT and the native interpreter honor.
 
 use anyhow::{bail, Context, Result};
 
 use super::artifact::{DType, EntrySpec, IoSpec};
+use super::backend::{Dispatcher, OutBuf};
 
 /// A borrowed argument for one dispatch.
 #[derive(Debug, Clone, Copy)]
@@ -38,7 +38,8 @@ impl Arg<'_> {
         }
     }
 
-    fn bytes(&self) -> &[u8] {
+    /// Raw little-endian bytes (PJRT literal transfer).
+    pub fn bytes(&self) -> &[u8] {
         unsafe {
             match self {
                 Arg::F32(v) => std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4),
@@ -97,29 +98,14 @@ impl Outputs {
 /// A compiled entry point plus its manifest specs.
 pub struct Executable {
     pub spec: EntrySpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// Input literals, allocated at first dispatch and refilled in place.
-    literals: RefCell<Vec<xla::Literal>>,
+    inner: Box<dyn Dispatcher>,
     pub dispatches: std::cell::Cell<u64>,
 }
 
 impl Executable {
-    /// Parse the HLO text at `hlo_path` and compile it for `client`.
-    pub fn compile(client: &xla::PjRtClient, spec: EntrySpec, hlo_path: &std::path::Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", spec.name))?;
-        Ok(Executable {
-            spec,
-            exe,
-            literals: RefCell::new(Vec::new()),
-            dispatches: std::cell::Cell::new(0),
-        })
+    /// Wrap a backend dispatcher under the shared validation contract.
+    pub fn new(spec: EntrySpec, inner: Box<dyn Dispatcher>) -> Executable {
+        Executable { spec, inner, dispatches: std::cell::Cell::new(0) }
     }
 
     fn validate(&self, args: &[Arg]) -> Result<()> {
@@ -151,60 +137,42 @@ impl Executable {
         Ok(())
     }
 
-    fn fill_literals(&self, args: &[Arg]) -> Result<()> {
-        let mut lits = self.literals.borrow_mut();
-        // §Perf escape hatch: FITQ_NO_LITERAL_REUSE=1 rebuilds input
-        // literals every dispatch (the naive baseline the reuse path is
-        // measured against in EXPERIMENTS.md §Perf L3).
-        if std::env::var_os("FITQ_NO_LITERAL_REUSE").is_some() {
-            lits.clear();
-        }
-        if lits.is_empty() {
-            for (a, spec) in args.iter().zip(&self.spec.inputs) {
-                lits.push(xla::Literal::create_from_shape_and_untyped_data(
-                    spec.dtype.element_type(),
-                    &spec.shape,
-                    a.bytes(),
-                )?);
-            }
-        } else {
-            for (a, lit) in args.iter().zip(lits.iter_mut()) {
-                match a {
-                    Arg::F32(v) => lit.copy_raw_from(v)?,
-                    Arg::I32(v) => lit.copy_raw_from(v)?,
-                    Arg::U32Scalar(v) => lit.copy_raw_from(&[*v])?,
-                    Arg::F32Scalar(v) => lit.copy_raw_from(&[*v])?,
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Dispatch once; outputs are copied back to host vectors.
+    /// Dispatch once; outputs are validated and copied back to host vectors.
     pub fn run(&self, args: &[Arg]) -> Result<Outputs> {
         self.validate(args)?;
-        self.fill_literals(args)?;
-        let lits = self.literals.borrow();
-        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let bufs = self.inner.run(args)?;
         self.dispatches.set(self.dispatches.get() + 1);
-        let root = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = root.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
+        if bufs.len() != self.spec.outputs.len() {
             bail!(
-                "{}: executable returned {} outputs, manifest says {}",
+                "{}: backend returned {} outputs, manifest says {}",
                 self.spec.name,
-                parts.len(),
+                bufs.len(),
                 self.spec.outputs.len()
             );
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&self.spec.outputs) {
+        let mut out = Vec::with_capacity(bufs.len());
+        for (buf, spec) in bufs.into_iter().zip(&self.spec.outputs) {
             let mut v = OutValue { spec: spec.clone(), f32: Vec::new(), i32: Vec::new() };
-            match spec.dtype {
-                DType::F32 => v.f32 = lit.to_vec::<f32>()?,
-                DType::I32 => v.i32 = lit.to_vec::<i32>()?,
-                DType::U32 => bail!("u32 outputs unsupported"),
+            let n = match (buf, spec.dtype) {
+                (OutBuf::F32(x), DType::F32) => {
+                    v.f32 = x;
+                    v.f32.len()
+                }
+                (OutBuf::I32(x), DType::I32) => {
+                    v.i32 = x;
+                    v.i32.len()
+                }
+                _ => bail!("{}: output {:?} dtype mismatch", self.spec.name, spec.name),
+            };
+            if n != spec.numel() {
+                bail!(
+                    "{}: output {:?} has {} elements, spec {:?} wants {}",
+                    self.spec.name,
+                    spec.name,
+                    n,
+                    spec.shape,
+                    spec.numel()
+                );
             }
             out.push(v);
         }

@@ -1,12 +1,15 @@
-//! Runtime layer: PJRT client, artifact manifest, typed executables,
-//! and the JSON substrate the manifest parser is built on.
+//! Runtime layer: execution backends (PJRT + native interpreter), the
+//! artifact manifest, typed executables, and the JSON substrate the
+//! manifest parser is built on.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod executable;
 pub mod json;
 
-pub use artifact::{default_artifact_root, DType, EntrySpec, Manifest, ModelManifest, Task};
+pub use artifact::{default_artifact_root, DType, EntrySpec, IoSpec, Manifest, ModelManifest, Task};
+pub use backend::{Backend, BackendSpec, Dispatcher, OutBuf};
 pub use client::Runtime;
 pub use executable::{Arg, Executable, Outputs};
 pub use json::Json;

@@ -10,6 +10,7 @@ fn fitq(args: &[&str]) -> Output {
     Command::new(env!("CARGO_BIN_EXE_fitq"))
         .env("FITQ_ARTIFACTS", "fitq-no-such-artifact-root")
         .env("FITQ_RESULTS", std::env::temp_dir().join("fitq_cli_smoke_results"))
+        .env_remove("FITQ_BACKEND")
         .args(args)
         .output()
         .expect("spawn fitq binary")
@@ -82,10 +83,11 @@ fn bad_flag_value_fails_before_runtime() {
 
 #[test]
 fn global_flags_are_accepted_by_every_experiment() {
-    // validation passes; on an artifact-less checkout the failure (if
-    // any) must come from the missing manifest, not from flag handling
+    // validation passes; pinned to --backend pjrt (whose artifact root
+    // points at nowhere) so the run stops at the runtime instead of
+    // actually executing on the native backend
     for name in ["fig9", "fig5", "table1", "all"] {
-        let out = fitq(&["experiment", name, "--seed", "1", "--jobs", "2"]);
+        let out = fitq(&["experiment", name, "--seed", "1", "--jobs", "2", "--backend", "pjrt"]);
         let err = stderr(&out);
         assert!(!err.contains("unknown flag"), "{name}: {err}");
         assert!(!err.contains("unknown experiment"), "{name}: {err}");
@@ -95,5 +97,40 @@ fn global_flags_are_accepted_by_every_experiment() {
                 "{name} must only fail on missing artifacts: {err}"
             );
         }
+    }
+}
+
+#[test]
+fn pjrt_failure_names_the_native_escape_hatch() {
+    // the actionable error: a PJRT bring-up failure (missing artifacts
+    // here; the stubbed xla client on a hermetic build) must point at
+    // `--backend native` and the artifact-root env var
+    let out = fitq(&["train", "--backend", "pjrt"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("--backend native"), "{err}");
+    assert!(err.contains("FITQ_ARTIFACTS"), "{err}");
+}
+
+#[test]
+fn unknown_backend_fails_fast() {
+    let out = fitq(&["info", "--backend", "tpu"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown backend"), "{err}");
+    assert!(err.contains("native|pjrt") || err.contains("native"), "{err}");
+}
+
+#[test]
+fn native_backend_needs_no_artifacts() {
+    // `info` on the native backend succeeds on a bare checkout and lists
+    // the study models (no training happens here — info only reads the
+    // generated manifest)
+    let out = fitq(&["info", "--backend", "native"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("backend: native"), "{text}");
+    for model in ["cnn_mnist", "cnn_mnist_bn", "cnn_cifar", "cnn_cifar_bn"] {
+        assert!(text.contains(model), "info must list {model}: {text}");
     }
 }

@@ -1,0 +1,32 @@
+//! Shared test support: one backend-resolution rule for every
+//! integration suite, so they cannot drift apart.
+
+// not every test binary uses every helper
+#![allow(dead_code)]
+
+use fitq::runtime::Runtime;
+
+/// The artifact root this checkout carries, if any: `make artifacts`
+/// writes to the repo root (`--out ../artifacts` from `python/`), and a
+/// package-local `rust/artifacts` is honored too.
+pub fn artifact_root() -> Option<&'static str> {
+    [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"),
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+    ]
+    .into_iter()
+    .find(|root| std::path::Path::new(root).join("manifest.json").exists())
+}
+
+/// PJRT over real artifacts when present, else the zero-setup native
+/// backend — announcing the choice so a silently-missing artifact tree
+/// is visible in test output.
+pub fn runtime() -> Runtime {
+    match artifact_root() {
+        Some(root) => Runtime::new(root).expect("pjrt runtime"),
+        None => {
+            eprintln!("no artifacts found: running on the native backend");
+            Runtime::native().expect("native runtime")
+        }
+    }
+}

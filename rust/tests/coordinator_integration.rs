@@ -1,5 +1,8 @@
-//! Integration: the full coordinator pipeline over real artifacts.
-//! Skipped when artifacts are missing (fresh checkout).
+//! Integration: the full coordinator pipeline over a real backend —
+//! PJRT when artifacts are present, else the native interpreter, so the
+//! train/trace/QAT/eval loop is exercised on every checkout. Tests that
+//! need PJRT-only entries (Hutchinson, scale models) still skip without
+//! artifacts.
 
 use fitq::coordinator::{
     dataset_for, gather, Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
@@ -9,13 +12,10 @@ use fitq::metrics::{fit, Metric};
 use fitq::quant::BitConfig;
 use fitq::runtime::Runtime;
 
+mod common;
+
 fn runtime() -> Option<Runtime> {
-    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(root).join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return None;
-    }
-    Some(Runtime::new(root).expect("runtime"))
+    Some(common::runtime())
 }
 
 #[test]
@@ -26,7 +26,9 @@ fn training_reduces_loss_and_beats_chance() {
     let mut trainer = Trainer::new(&rt, ds.as_ref());
     let mut st = ModelState::init(&rt, model, 1).unwrap();
     let losses = trainer.train(&mut st, 12).unwrap();
-    assert!(losses.last().unwrap() < &(0.6 * losses[0]), "{losses:?}");
+    // 0.7: headroom over the observed ~0.54 ratio at this seed — the
+    // trajectory is chaotic enough that cross-backend drift moves it
+    assert!(losses.last().unwrap() < &(0.7 * losses[0]), "{losses:?}");
     let ev = EvalSet::materialize(ds.as_ref(), 256);
     let r = trainer.evaluate(&st, &ev).unwrap();
     assert!(r.score > 0.3, "acc {} must beat 10-class chance", r.score);
@@ -56,7 +58,10 @@ fn qat_lower_bits_hurt_more() {
     let mut st = ModelState::init(&rt, model, 2).unwrap();
     trainer.train(&mut st, 15).unwrap();
     let ev = EvalSet::materialize(ds.as_ref(), 512);
-    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default()).unwrap();
+    // capped trace run: the FIT/PTQ ordering assertions need converged-ish
+    // traces, not the paper's full tol=0.01 protocol
+    let opt = TraceOptions { batch: 32, tol: 0.05, min_iters: 8, max_iters: 150, seed: 2 };
+    let sens = gather(&trainer, ds.as_ref(), &st, &ev, opt).unwrap();
 
     let q8 = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 8);
     let q3 = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 3);
@@ -79,7 +84,7 @@ fn ef_trace_converges_with_tolerance() {
     let mut st = ModelState::init(&rt, model, 3).unwrap();
     trainer.train(&mut st, 8).unwrap();
     let engine = TraceEngine::new(&rt, ds.as_ref());
-    let opts = |tol: f64| TraceOptions { batch: 32, tol, min_iters: 8, max_iters: 400, seed: 3 };
+    let opts = |tol: f64| TraceOptions { batch: 32, tol, min_iters: 8, max_iters: 150, seed: 3 };
     let loose = engine
         .run(model, &st.params, Estimator::EmpiricalFisher, opts(0.1))
         .unwrap();
@@ -97,8 +102,13 @@ fn ef_trace_converges_with_tolerance() {
 #[test]
 fn hutchinson_and_ef_agree_on_block_ranking() {
     let Some(rt) = runtime() else { return };
-    // scale models carry both estimators
+    // scale models carry both estimators — PJRT-only (the native backend
+    // implements the study set, and EF is the paper's production path)
     let model = "cnn_s";
+    if rt.model(model).is_err() {
+        eprintln!("skipping: scale models need PJRT artifacts");
+        return;
+    }
     let ds = dataset_for(&rt, model, 4).unwrap();
     let mut trainer = Trainer::new(&rt, ds.as_ref());
     let mut st = ModelState::init(&rt, model, 4).unwrap();

@@ -8,13 +8,14 @@
 use fitq::coordinator::pipeline::{registry, ExpOptions, Pipeline};
 use fitq::runtime::Runtime;
 
+mod common;
+
 #[test]
 fn experiment_walk_counts_stages_once_and_reruns_byte_identical() {
-    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(root).join("manifest.json").exists() {
+    let Some(root) = common::artifact_root() else {
         eprintln!("skipping: no artifacts");
         return;
-    }
+    };
     let rt = Runtime::new(root).expect("runtime");
     let results = std::env::temp_dir().join(format!("fitq_expall_{}", std::process::id()));
     std::fs::remove_dir_all(&results).ok();

@@ -1,0 +1,321 @@
+//! Native-backend verification: finite-difference gradient checks for
+//! every backward kernel, the straight-through-estimator identity,
+//! bit-exact determinism across runs and `--jobs` values, and a small
+//! end-to-end train → EF-trace loop through the `Runtime` dispatch path.
+//!
+//! Gradcheck scheme (tolerances calibrated against a NumPy mirror of
+//! these kernels validated against the JAX reference graphs): scalar
+//! objective `L = sum(c * kernel_out)` with fixed random `c` (analytic
+//! gradient = backward with `dout = c`), central differences along a
+//! random unit direction, and the *achieved* f32 perturbation
+//! `theta+ - theta-` used on the analytic side so input rounding cancels.
+//! Kernels are smooth (conv/dense/BN/CE), so `h = 1e-2` holds the
+//! relative error at or below 1e-3 with an order-of-magnitude margin.
+
+use fitq::coordinator::{
+    dataset_for, run_pool, Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
+};
+use fitq::data::{EpochBatch, SynthClass};
+use fitq::native::model::{Plan, STUDY_CNNS};
+use fitq::native::net::{self, QuantArgs};
+use fitq::native::{ops, quant};
+use fitq::runtime::{Arg, Runtime};
+use fitq::tensor::Pcg32;
+
+const H: f32 = 1e-2;
+const TOL: f64 = 1e-3;
+
+fn randv(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 11);
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Central-difference directional check of `grad` against `f` at `theta`.
+fn fd_check(name: &str, theta: &[f32], grad: &[f32], f: impl Fn(&[f32]) -> f64, h: f32, tol: f64) {
+    let mut rng = Pcg32::new(0x0d17ec7, 7);
+    let mut d: Vec<f32> = (0..theta.len()).map(|_| rng.normal()).collect();
+    let norm = d.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32;
+    for v in &mut d {
+        *v /= norm;
+    }
+    let tp: Vec<f32> = theta.iter().zip(&d).map(|(&t, &dv)| t + h * dv).collect();
+    let tm: Vec<f32> = theta.iter().zip(&d).map(|(&t, &dv)| t - h * dv).collect();
+    let fd = f(&tp) - f(&tm);
+    let an: f64 = grad
+        .iter()
+        .zip(tp.iter().zip(&tm))
+        .map(|(&g, (&p, &m))| g as f64 * (p as f64 - m as f64))
+        .sum();
+    let rel = (fd - an).abs() / an.abs().max(1e-12);
+    assert!(rel <= tol, "{name}: FD rel err {rel:.3e} > {tol:.0e} (fd {fd:.6e}, an {an:.6e})");
+}
+
+#[test]
+fn gradcheck_conv2d() {
+    let (n, h, w, cin, cout) = (2usize, 6, 6, 3, 4);
+    let x = randv(n * h * w * cin, 1.0, 1);
+    let wgt = randv(9 * cin * cout, 0.3, 2);
+    let bias = randv(cout, 0.1, 3);
+    let c = randv(n * h * w * cout, 1.0, 4);
+
+    let mut dw = vec![0.0f32; wgt.len()];
+    let mut db = vec![0.0f32; cout];
+    ops::conv2d_bwd_w(&x, n, h, w, cin, &c, cout, &mut dw, &mut db);
+    let mut dx = vec![0.0f32; x.len()];
+    ops::conv2d_bwd_x(&wgt, n, h, w, cin, &c, cout, &mut dx);
+
+    let run = |xx: &[f32], ww: &[f32], bb: &[f32]| {
+        let mut out = vec![0.0f32; n * h * w * cout];
+        ops::conv2d(xx, n, h, w, cin, ww, cout, bb, &mut out);
+        dot64(&c, &out)
+    };
+    fd_check("conv2d d/dw", &wgt, &dw, |t| run(&x, t, &bias), H, TOL);
+    fd_check("conv2d d/dx", &x, &dx, |t| run(t, &wgt, &bias), H, TOL);
+    fd_check("conv2d d/db", &bias, &db, |t| run(&x, &wgt, t), H, TOL);
+}
+
+#[test]
+fn gradcheck_dense() {
+    let (n, fin, fout) = (4usize, 24, 10);
+    let x = randv(n * fin, 1.0, 5);
+    let wgt = randv(fin * fout, 0.3, 6);
+    let bias = randv(fout, 0.1, 7);
+    let c = randv(n * fout, 1.0, 8);
+
+    let mut dw = vec![0.0f32; wgt.len()];
+    let mut db = vec![0.0f32; fout];
+    let mut dx = vec![0.0f32; x.len()];
+    ops::dense_bwd(&x, &wgt, n, fin, fout, &c, &mut dw, &mut db, &mut dx);
+
+    let run = |xx: &[f32], ww: &[f32], bb: &[f32]| {
+        let mut out = vec![0.0f32; n * fout];
+        ops::dense(xx, n, fin, ww, fout, bb, &mut out);
+        dot64(&c, &out)
+    };
+    fd_check("dense d/dw", &wgt, &dw, |t| run(&x, t, &bias), H, TOL);
+    fd_check("dense d/dx", &x, &dx, |t| run(t, &wgt, &bias), H, TOL);
+    fd_check("dense d/db", &bias, &db, |t| run(&x, &wgt, t), H, TOL);
+}
+
+#[test]
+fn gradcheck_batch_norm() {
+    let (m, c) = (96usize, 5);
+    let x = randv(m * c, 1.0, 9);
+    let gamma: Vec<f32> = randv(c, 0.2, 10).iter().map(|v| 1.0 + v).collect();
+    let beta = randv(c, 0.1, 11);
+    let cw = randv(m * c, 1.0, 12);
+
+    let fwd = |xx: &[f32], g: &[f32], b: &[f32]| {
+        let mut out = vec![0.0f32; m * c];
+        let mut xhat = vec![0.0f32; m * c];
+        let mut ivar = vec![0.0f32; c];
+        ops::batch_norm(xx, m, c, g, b, &mut out, &mut xhat, &mut ivar);
+        (out, xhat, ivar)
+    };
+    let (_, xhat, ivar) = fwd(&x, &gamma, &beta);
+    let mut dx = vec![0.0f32; m * c];
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    ops::batch_norm_bwd(&cw, &xhat, &ivar, &gamma, m, c, &mut dx, &mut dgamma, &mut dbeta);
+
+    let f = |xx: &[f32], g: &[f32], b: &[f32]| dot64(&cw, &fwd(xx, g, b).0);
+    fd_check("batch_norm d/dx", &x, &dx, |t| f(t, &gamma, &beta), H, TOL);
+    fd_check("batch_norm d/dgamma", &gamma, &dgamma, |t| f(&x, t, &beta), H, TOL);
+    fd_check("batch_norm d/dbeta", &beta, &dbeta, |t| f(&x, &gamma, t), H, TOL);
+}
+
+#[test]
+fn gradcheck_softmax_ce() {
+    let (n, ncls) = (8usize, 10);
+    let logits = randv(n * ncls, 1.0, 13);
+    let labels: Vec<i32> = {
+        let mut rng = Pcg32::new(14, 3);
+        (0..n).map(|_| rng.below(ncls as u32) as i32).collect()
+    };
+    let mut dl = vec![0.0f32; n * ncls];
+    let dper = vec![1.0f32 / n as f32; n];
+    ops::softmax_xent_bwd(&logits, &labels, n, ncls, &dper, &mut dl);
+    let f = |t: &[f32]| {
+        let mut per = vec![0.0f32; n];
+        ops::softmax_xent(t, &labels, n, ncls, &mut per);
+        per.iter().map(|&v| v as f64).sum::<f64>() / n as f64
+    };
+    fd_check("softmax_ce d/dlogits", &logits, &dl, f, H, TOL);
+}
+
+#[test]
+fn gradcheck_max_pool() {
+    // window values spaced >= 0.05 apart so the h=1e-2 probe can never
+    // swap a winner (max-pool is only piecewise linear)
+    let (n, h, w, c) = (1usize, 6, 6, 2);
+    let len = n * h * w * c;
+    let mut x: Vec<f32> = (0..len).map(|k| k as f32 * 0.05).collect();
+    let mut rng = Pcg32::new(15, 1);
+    for i in (1..len).rev() {
+        x.swap(i, rng.below(i as u32 + 1) as usize);
+    }
+    let cw = randv(len / 4, 1.0, 16);
+    let run = |xx: &[f32]| {
+        let mut out = vec![0.0f32; len / 4];
+        let mut idx = vec![0u8; len / 4];
+        ops::max_pool(xx, n, h, w, c, &mut out, &mut idx);
+        (out, idx)
+    };
+    let (_, idx) = run(&x);
+    let mut dx = vec![0.0f32; len];
+    ops::max_pool_bwd(&cw, &idx, n, h, w, c, &mut dx);
+    fd_check("max_pool d/dx", &x, &dx, |t| dot64(&cw, &run(t).0), H, TOL);
+}
+
+/// Whole-net directional checks. ReLU kinks and BN conditioning make the
+/// composed loss only piecewise smooth, so these carry looser, documented
+/// tolerances (the per-kernel checks above hold the 1e-3 bar).
+#[test]
+fn gradcheck_whole_net() {
+    for (spec, tol) in [(STUDY_CNNS[0], 1e-2), (STUDY_CNNS[1], 1e-1)] {
+        let plan = Plan::new(spec);
+        let params = plan.init_flat(3);
+        let x = randv(8 * plan.sample_len(), 1.0, 17);
+        let y: Vec<i32> = {
+            let mut rng = Pcg32::new(18, 2);
+            (0..8).map(|_| rng.below(10) as i32).collect()
+        };
+        let (_, grads) = net::mean_loss_grad(&plan, &params, &x, &y, 8, None);
+        fd_check(
+            &format!("{} mean loss d/dparams", spec.name),
+            &params,
+            &grads.flat,
+            |t| net::mean_loss_grad(&plan, t, &x, &y, 8, None).0 as f64,
+            3e-3,
+            tol,
+        );
+    }
+}
+
+#[test]
+fn ste_backward_is_identity_through_quant_nodes() {
+    // bits = 0 makes fake_quant degenerate to the identity function, so
+    // the QAT forward AND backward must match the FP path bit-for-bit —
+    // pinning that the backward *skips* quantization nodes (the STE)
+    // rather than differentiating through them.
+    let plan = Plan::new(STUDY_CNNS[0]);
+    let params = plan.init_flat(5);
+    let x = randv(4 * plan.sample_len(), 1.0, 19);
+    let y = vec![1i32, 3, 5, 7];
+    let (l_fp, g_fp) = net::mean_loss_grad(&plan, &params, &x, &y, 4, None);
+    let (lw, la) = (plan.n_weight_blocks(), plan.n_act_blocks());
+    let (bits_w, bits_a) = (vec![0.0f32; lw], vec![0.0f32; la]);
+    let (lo, hi) = (vec![0.0f32; la], vec![1.0f32; la]);
+    let q = QuantArgs { bits_w: &bits_w, bits_a: &bits_a, act_lo: &lo, act_hi: &hi };
+    let (l_q, g_q) = net::mean_loss_grad(&plan, &params, &x, &y, 4, Some(q));
+    assert_eq!(l_fp.to_bits(), l_q.to_bits());
+    assert_eq!(
+        g_fp.flat.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        g_q.flat.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+
+    // active quantization: the quantized forward is piecewise constant
+    // (no gradient of its own), yet STE gradients land on the raw weight
+    // slots, finite and nonzero
+    let (bits_w4, bits_a4) = (vec![4.0f32; lw], vec![4.0f32; la]);
+    let (lo4, hi4) = (vec![0.0f32; la], vec![4.0f32; la]);
+    let q4 = QuantArgs { bits_w: &bits_w4, bits_a: &bits_a4, act_lo: &lo4, act_hi: &hi4 };
+    let (l4, g4) = net::mean_loss_grad(&plan, &params, &x, &y, 4, Some(q4));
+    assert!(l4.is_finite());
+    for l in 0..lw {
+        let (off, size) = plan.weight_block(l);
+        assert!(
+            g4.flat[off..off + size].iter().any(|&g| g != 0.0 && g.is_finite()),
+            "block {l} must receive STE gradients"
+        );
+    }
+
+    // and fake_quant itself is locally constant away from boundaries
+    let xs = randv(64, 1.0, 20);
+    let mut q1 = vec![0.0f32; 64];
+    let mut q2 = vec![0.0f32; 64];
+    quant::fake_quant(&xs, -3.0, 3.0, 4.0, &mut q1);
+    let nudged: Vec<f32> = xs.iter().map(|&v| v + 1e-5).collect();
+    quant::fake_quant(&nudged, -3.0, 3.0, 4.0, &mut q2);
+    let same = q1.iter().zip(&q2).filter(|(a, b)| a == b).count();
+    assert!(same >= 60, "fake_quant must be piecewise constant ({same}/64 unchanged)");
+}
+
+fn train_epoch_bits(rt: &Runtime, seed: u32) -> Vec<u32> {
+    let mm = rt.model("cnn_mnist").unwrap().clone();
+    let exe = rt.load("cnn_mnist", "train_epoch").unwrap();
+    let st = ModelState::init(rt, "cnn_mnist", seed).unwrap();
+    let ds = SynthClass::synmnist(seed as u64);
+    let (eb, _) = EpochBatch::generate(&ds, mm.train_k, mm.train_b, 0);
+    let out = exe
+        .run(&[
+            Arg::F32(&st.params),
+            Arg::F32(&st.m),
+            Arg::F32(&st.v),
+            Arg::F32Scalar(0.0),
+            Arg::F32(&eb.xs),
+            Arg::I32(&eb.ys),
+        ])
+        .unwrap();
+    let mut bits: Vec<u32> =
+        out.f32("params").unwrap().iter().map(|v| v.to_bits()).collect();
+    bits.push(out.scalar("loss").unwrap().to_bits());
+    bits
+}
+
+#[test]
+fn train_epoch_bit_identical_across_runs_and_jobs() {
+    // same seed, fresh runtimes: bit-identical params and loss
+    let a = train_epoch_bits(&Runtime::native().unwrap(), 3);
+    let b = train_epoch_bits(&Runtime::native().unwrap(), 3);
+    assert_eq!(a, b, "two runs must replay bit-exactly");
+    assert_ne!(a, train_epoch_bits(&Runtime::native().unwrap(), 4), "seed must matter");
+
+    // and across --jobs values: a pool of per-seed epochs is bitwise
+    // invariant to the worker count (the parallel determinism contract)
+    let epochs = |jobs: usize| -> Vec<Vec<u32>> {
+        run_pool(6, jobs, Runtime::native, |rt, i| Ok(train_epoch_bits(rt, i as u32))).unwrap()
+    };
+    assert_eq!(epochs(1), epochs(4));
+}
+
+#[test]
+fn native_runtime_end_to_end_train_and_trace() {
+    // the zero-setup loop: init -> FP epochs -> EF trace, all through the
+    // Runtime dispatch path (no artifacts directory anywhere near this)
+    let rt = Runtime::native().unwrap();
+    let ds = dataset_for(&rt, "cnn_mnist", 1).unwrap();
+    let mut trainer = Trainer::new(&rt, ds.as_ref());
+    let mut st = ModelState::init(&rt, "cnn_mnist", 1).unwrap();
+    let losses = trainer.train(&mut st, 3).unwrap();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "3 FP epochs must reduce the loss: {losses:?}"
+    );
+    let engine = TraceEngine::new(&rt, ds.as_ref());
+    let opt = TraceOptions::fixed_iters(32, 5, 1);
+    let r = engine.run("cnn_mnist", &st.params, Estimator::EmpiricalFisher, opt).unwrap();
+    assert_eq!(r.w_traces.len(), 4);
+    assert_eq!(r.a_traces.len(), 3);
+    assert!(r.w_traces.iter().all(|&t| t.is_finite() && t > 0.0));
+    assert_eq!(r.iterations, 5);
+}
+
+#[test]
+fn native_entry_validation_matches_manifest() {
+    let rt = Runtime::native().unwrap();
+    let exe = rt.load("cnn_mnist", "init").unwrap();
+    assert!(exe.run(&[Arg::F32Scalar(1.0)]).is_err(), "dtype mismatch");
+    assert!(exe.run(&[]).is_err(), "arity mismatch");
+    let pr = rt.load("cnn_mnist", "param_ranges").unwrap();
+    let too_short = vec![0.0f32; 3];
+    assert!(pr.run(&[Arg::F32(&too_short)]).is_err(), "shape mismatch");
+    // entries absent from the study set stay absent
+    assert!(rt.load("cnn_mnist", "hutch_bs4").is_err());
+    assert!(rt.load("cnn_s", "init").is_err(), "scale models are PJRT-only");
+}

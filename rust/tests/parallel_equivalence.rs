@@ -1,10 +1,13 @@
 //! Serial-vs-parallel equivalence: the determinism contract of
 //! `coordinator::parallel` (results at `jobs = N` are bit-identical to
-//! `jobs = 1`), exercised on the pure pool and — when artifacts are present
-//! — on a small end-to-end `run_study`.
+//! `jobs = 1`), exercised on the pure pool and on a small end-to-end
+//! `run_study` — over PJRT artifacts when present, else the zero-setup
+//! native backend, so the study-level check runs on every checkout.
 
 use fitq::coordinator::{derive_seed, run_pool, run_study, Pipeline, StudyOptions};
-use fitq::runtime::Runtime;
+
+mod common;
+use common::runtime;
 
 /// Equal, treating two NaNs as equal (rank correlations can be NaN when a
 /// metric is constant across the sampled configs).
@@ -50,14 +53,9 @@ fn pool_init_runs_once_per_worker_without_reordering() {
 
 #[test]
 fn run_study_identical_at_jobs_1_and_4() {
-    // end-to-end equivalence over real artifacts; skipped (not failed) on a
-    // fresh checkout, like the other PJRT integration tests.
-    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(root).join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return;
-    }
-    let rt = Runtime::new(root).expect("runtime");
+    // end-to-end equivalence; runs everywhere now that the native backend
+    // exists (PJRT is used when artifacts are present)
+    let rt = runtime();
     let mut opt = StudyOptions {
         n_configs: 6,
         fp_epochs: 3,

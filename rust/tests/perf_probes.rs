@@ -7,12 +7,10 @@ use std::time::Instant;
 use fitq::data::{EpochBatch, SynthClass};
 use fitq::runtime::{Arg, Runtime};
 
+mod common;
+
 fn runtime() -> Option<Runtime> {
-    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(root).join("manifest.json").exists() {
-        return None;
-    }
-    Some(Runtime::new(root).expect("runtime"))
+    common::artifact_root().map(|root| Runtime::new(root).expect("runtime"))
 }
 
 /// L2 §Perf: scanned K=10 epoch vs 10 single-step dispatches.

@@ -1,7 +1,8 @@
 //! Artifact-cache coverage: round-trip + version-bump invalidation +
-//! truncated-file fallback for every serialized stage type, and — when
-//! artifacts are present — the cold-vs-warm `run_study` bit-identity and
-//! exactly-once stage accounting the pipeline promises.
+//! truncated-file fallback for every serialized stage type, plus the
+//! cold-vs-warm `run_study` bit-identity and exactly-once stage
+//! accounting the pipeline promises — run end-to-end on PJRT when
+//! artifacts are present, else on the zero-setup native backend.
 
 use fitq::coordinator::evaluator::ConfigOutcome;
 use fitq::coordinator::pipeline::{codec, ArtifactCache, Hasher, Pipeline};
@@ -11,6 +12,8 @@ use fitq::coordinator::{
 };
 use fitq::metrics::{Metric, SensitivityInputs};
 use fitq::quant::BitConfig;
+
+mod common;
 
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("fitq_plc_{tag}_{}", std::process::id()));
@@ -149,18 +152,14 @@ fn study_decode_preserves_structure() {
     assert_eq!(back.sens.inputs.bn_gamma, s.sens.inputs.bn_gamma);
 }
 
-/// End-to-end over real artifacts: a cold study computes each stage once,
-/// an in-process rerun computes nothing, and a fresh pipeline over the
-/// same cache (the cross-process case) reproduces the cold result
-/// bit-for-bit without recomputing. Skipped on a fresh checkout.
+/// End-to-end: a cold study computes each stage once, an in-process
+/// rerun computes nothing, and a fresh pipeline over the same cache (the
+/// cross-process case) reproduces the cold result bit-for-bit without
+/// recomputing. Runs on every checkout: PJRT when artifacts are present,
+/// the native backend otherwise.
 #[test]
 fn run_study_cold_vs_warm_bit_identity_and_stage_counts() {
-    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(root).join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return;
-    }
-    let rt = fitq::runtime::Runtime::new(root).expect("runtime");
+    let rt = common::runtime();
     let dir = tmp_dir("coldwarm");
     let mut opt = StudyOptions {
         n_configs: 4,

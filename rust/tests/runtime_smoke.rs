@@ -1,18 +1,14 @@
-//! Integration: compile and dispatch real artifacts through PJRT.
-//!
-//! These tests require `make artifacts` to have run; they are skipped
-//! (not failed) when the artifact directory is missing so `cargo test`
-//! stays usable in a fresh checkout.
+//! Integration: compile and dispatch entry points through the runtime —
+//! over PJRT artifacts when `make artifacts` has run, else through the
+//! zero-setup native backend, so these exercise a real backend on every
+//! checkout.
 
 use fitq::runtime::{Arg, Runtime};
 
+mod common;
+
 fn runtime() -> Option<Runtime> {
-    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if !std::path::Path::new(root).join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return None;
-    }
-    Some(Runtime::new(root).expect("runtime"))
+    Some(common::runtime())
 }
 
 #[test]
