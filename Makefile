@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring bench-native
+.PHONY: artifacts test bench bench-scoring bench-native bench-smoke check-bench-schema
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -20,7 +20,18 @@ bench:
 bench-scoring:
 	cargo bench --bench fit_scoring
 
-# Serial-vs-parallel study + warm-cache bench on the native backend (no
+# Native kernel before/after (scalar reference vs GEMM layer) +
+# serial-vs-parallel study + warm-cache bench on the native backend (no
 # artifacts needed); refreshes BENCH_parallel_study.json at the repo root.
 bench-native:
 	FITQ_BACKEND=native cargo bench --bench parallel_study
+
+# CI tripwire: 1-iteration timed native train_epoch, asserts the GEMM
+# kernel layer still beats the scalar reference (does not touch the
+# committed BENCH json).
+bench-smoke:
+	FITQ_BENCH_SMOKE=1 FITQ_BACKEND=native cargo bench --bench parallel_study
+
+# Structural validation of the committed BENCH_*.json perf records.
+check-bench-schema:
+	python3 scripts/check_bench_schema.py BENCH_parallel_study.json BENCH_fit_scoring.json

@@ -156,7 +156,9 @@ pub fn run_study(
             configs.len(),
             parallel::effective_jobs(opt.jobs, configs.len())
         );
-        let spec = rt.spec();
+        // per-config QAT workers run the backend serially: the sweep
+        // already saturates the budget with independent configs
+        let spec = rt.spec().intra_serial();
         parallel::run_pool(
             configs.len(),
             opt.jobs,

@@ -156,6 +156,68 @@ where
     Ok(out)
 }
 
+/// Run one closure per item on `threads` scoped worker threads with a
+/// *static* contiguous schedule, returning nothing: each item is consumed
+/// by `f(index, item)` for its original index.
+///
+/// This is the intra-op fan-out primitive of the native backend's GEMM
+/// layer (`native::gemm`): items are typically disjoint `&mut` output
+/// panels, so workers write results in place and no collection step (or
+/// `Result` plumbing) is needed. Where [`run_pool`] hands out jobs
+/// dynamically through an atomic counter, `run_static` fixes the
+/// item→worker assignment up front (worker `t` gets a contiguous run of
+/// `n/threads` items, earlier workers taking the remainder): combined
+/// with the determinism contract above (each item's result is a pure
+/// function of its index), the output is bit-identical at every thread
+/// count — the schedule only decides *who* computes a panel, never what
+/// the panel contains. The calling thread executes the first chunk
+/// itself, so `threads = 1` spawns nothing and is the serial reference
+/// path.
+pub fn run_static<T, F>(items: Vec<T>, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    // contiguous static split: chunk t covers indices [base_t, base_t + len_t)
+    let mut chunks: Vec<(usize, Vec<T>)> = Vec::with_capacity(threads);
+    let mut it = items.into_iter();
+    let mut base = 0usize;
+    for t in 0..threads {
+        let len = n / threads + usize::from(t < n % threads);
+        chunks.push((base, it.by_ref().take(len).collect()));
+        base += len;
+    }
+    std::thread::scope(|scope| {
+        let mut own = None;
+        for (i, chunk) in chunks.into_iter().enumerate() {
+            if i == 0 {
+                own = Some(chunk);
+                continue;
+            }
+            let fr = &f;
+            scope.spawn(move || {
+                let (cbase, citems) = chunk;
+                for (off, item) in citems.into_iter().enumerate() {
+                    fr(cbase + off, item);
+                }
+            });
+        }
+        if let Some((cbase, citems)) = own {
+            for (off, item) in citems.into_iter().enumerate() {
+                f(cbase + off, item);
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,5 +306,33 @@ mod tests {
     fn pool_zero_jobs_is_auto() {
         let out = run_pool(8, 0, || Ok(()), |_, i| Ok(i)).unwrap();
         assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_static_visits_every_index_once() {
+        // disjoint &mut panels of one buffer, exactly the GEMM use case
+        for threads in [1usize, 2, 3, 4, 7, 16] {
+            let mut buf = vec![0u32; 11 * 3];
+            let panels: Vec<(usize, &mut [u32])> =
+                buf.chunks_mut(3).enumerate().collect();
+            run_static(panels, threads, |i, (pi, panel)| {
+                assert_eq!(i, pi, "schedule must preserve item order");
+                for v in panel.iter_mut() {
+                    *v += 1 + pi as u32;
+                }
+            });
+            let expect: Vec<u32> =
+                (0..11u32).flat_map(|p| [p + 1, p + 1, p + 1]).collect();
+            assert_eq!(buf, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_static_handles_empty_and_oversubscribed() {
+        run_static(Vec::<usize>::new(), 4, |_, _| panic!("no items"));
+        let mut hits = vec![0u8; 2];
+        let items: Vec<&mut u8> = hits.iter_mut().collect();
+        run_static(items, 9, |_, h| *h += 1);
+        assert_eq!(hits, vec![1, 1]);
     }
 }

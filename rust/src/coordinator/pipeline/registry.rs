@@ -238,7 +238,8 @@ pub fn run_all(
         }
     } else {
         let inner = ExpOptions { jobs: 1, ..o.clone() };
-        let spec = rt.spec();
+        // workers run serial inside: the outer fan-out owns the cores
+        let spec = rt.spec().intra_serial();
         let results_root = pipe.results_root().to_path_buf();
         let counters = pipe.counters();
         parallel::run_pool(
@@ -281,7 +282,7 @@ fn run_stage_batch(
         }
         return Ok(());
     }
-    let spec = rt.spec();
+    let spec = rt.spec().intra_serial();
     let results_root = pipe.results_root().to_path_buf();
     let counters = pipe.counters();
     parallel::run_pool(

@@ -223,7 +223,9 @@ impl TraceEngine<'_> {
         if parallel::effective_jobs(jobs, specs.len()) <= 1 {
             return specs.iter().map(|&(est, opt)| self.run(model, params, est, opt)).collect();
         }
-        let spec = self.rt.spec();
+        // intra-op GEMM threads off in workers: the trace fan-out owns
+        // the cores (outputs are identical either way)
+        let spec = self.rt.spec().intra_serial();
         let ds = self.ds;
         parallel::run_pool(
             specs.len(),

@@ -8,8 +8,9 @@
 //!   paper's methodology (fanning independent work over the
 //!   `coordinator::parallel` worker pool), and
 //!   `data`/`quant`/`stats`/`metrics`/`tensor` are the from-scratch
-//!   substrates it stands on. (One deliberate upward edge:
-//!   `metrics::FitTable::score_batch` fans over `coordinator::parallel`,
+//!   substrates it stands on. (Two deliberate upward edges:
+//!   `metrics::FitTable::score_batch` and the native backend's
+//!   `native::gemm` kernels both fan over `coordinator::parallel`,
 //!   which is itself a std-only substrate that happens to live under the
 //!   coordinator.)
 //!

@@ -99,7 +99,10 @@ const USAGE: &str = "fitq <command>\n\
   Every command takes --backend native|pjrt (also $FITQ_BACKEND):\n\
      native = pure-Rust interpreter, zero setup, study models only;\n\
      pjrt   = compiled HLO artifacts ($FITQ_ARTIFACTS, `make artifacts`).\n\
-     Default: pjrt when the artifact root has a manifest, else native.\n";
+     Default: pjrt when the artifact root has a manifest, else native.\n\
+     $FITQ_NATIVE_THREADS=N threads the native GEMM kernels intra-op\n\
+     (default 1, 0 = all cores; bit-identical output at every setting —\n\
+     parallel phases switch workers back to serial on their own).\n";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();

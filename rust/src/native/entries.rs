@@ -8,13 +8,14 @@
 //! pre-validated against the manifest IoSpecs (shape, dtype, arity), so
 //! this module only moves numbers.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use super::model::{Plan, FP_LR, QAT_LR};
 use super::net::{self, QuantArgs};
-use super::ops;
+use super::ops::{self, ExecCtx};
 use crate::runtime::backend::{Dispatcher, OutBuf};
 use crate::runtime::Arg;
 
@@ -54,10 +55,23 @@ impl EntryKind {
     }
 }
 
-/// The native executable: a plan plus the program to run over it.
+/// The native executable: a plan, the program to run over it, and the
+/// per-dispatcher GEMM execution context.
+///
+/// The context lives behind a `RefCell` because [`Dispatcher::run`]
+/// takes `&self` (the `Runtime` is single-threaded by design): its
+/// scratch arena is allocated lazily by the first conv lowering and then
+/// reused across every op, scanned train step and dispatch this
+/// executable serves — the loop-nest implementation re-derived those
+/// buffers per batch. The thread budget comes from the backend
+/// ([`NativeBackend`](super::NativeBackend)); it only affects wall
+/// clock, never bits.
 pub struct NativeExec {
     pub plan: Rc<Plan>,
     pub kind: EntryKind,
+    /// GEMM scratch + intra-op thread budget (interior-mutable: `run`
+    /// takes `&self`, and dispatches never nest).
+    pub ctx: RefCell<ExecCtx>,
 }
 
 fn f32_arg<'a>(args: &'a [Arg], i: usize) -> Result<&'a [f32]> {
@@ -112,6 +126,8 @@ impl NativeExec {
 
     fn run_train(&self, args: &[Arg], k: usize, qat: bool) -> Result<Vec<OutBuf>> {
         let plan = &*self.plan;
+        let mut ctx_guard = self.ctx.borrow_mut();
+        let ctx = &mut *ctx_guard;
         let mut params = f32_arg(args, 0)?.to_vec();
         let mut m = f32_arg(args, 1)?.to_vec();
         let mut v = f32_arg(args, 2)?.to_vec();
@@ -125,7 +141,7 @@ impl NativeExec {
         for ki in 0..k {
             let x = &xs[ki * b * plan.sample_len()..][..b * plan.sample_len()];
             let y = &ys[ki * b..][..b];
-            let (loss, grads) = net::mean_loss_grad(plan, &params, x, y, b, q);
+            let (loss, grads) = net::mean_loss_grad(plan, &params, x, y, b, q, ctx);
             step += 1.0;
             adam_update(&mut params, &mut m, &mut v, &grads.flat, step, lr);
             loss_sum += loss as f64;
@@ -141,6 +157,8 @@ impl NativeExec {
 
     fn run_eval(&self, args: &[Arg], qat: bool) -> Result<Vec<OutBuf>> {
         let plan = &*self.plan;
+        let mut ctx_guard = self.ctx.borrow_mut();
+        let ctx = &mut *ctx_guard;
         let params = f32_arg(args, 0)?;
         let x = f32_arg(args, 1)?;
         let y = i32_arg(args, 2)?;
@@ -148,7 +166,7 @@ impl NativeExec {
         let q = if qat { Some(self.quant_args(args, 4)?) } else { None };
         let b = mask.len();
         let ncls = plan.spec.n_classes;
-        let tape = net::forward(plan, params, x, b, q);
+        let tape = net::forward(plan, params, x, b, q, ctx);
         let mut per = vec![0.0f32; b];
         ops::softmax_xent(&tape.logits, y, b, ncls, &mut per);
         let mut loss_sum = 0.0f64;
@@ -171,10 +189,12 @@ impl NativeExec {
 
     fn run_ef_trace(&self, args: &[Arg], batch: usize) -> Result<Vec<OutBuf>> {
         let plan = &*self.plan;
+        let mut ctx_guard = self.ctx.borrow_mut();
+        let ctx = &mut *ctx_guard;
         let params = f32_arg(args, 0)?;
         let x = f32_arg(args, 1)?;
         let y = i32_arg(args, 2)?;
-        let (_, grads) = net::mean_loss_grad(plan, params, x, y, batch, None);
+        let (_, grads) = net::mean_loss_grad(plan, params, x, y, batch, None, ctx);
         let bf = batch as f64;
         let w_tr: Vec<f32> = (0..plan.n_weight_blocks())
             .map(|l| {
@@ -213,7 +233,8 @@ impl Dispatcher for NativeExec {
                 let params = f32_arg(args, 0)?;
                 let x = f32_arg(args, 1)?;
                 let b = x.len() / plan.sample_len();
-                let tape = net::forward(plan, params, x, b, None);
+                let tape =
+                    net::forward(plan, params, x, b, None, &mut self.ctx.borrow_mut());
                 Ok(vec![OutBuf::F32(tape.logits)])
             }
             EntryKind::ParamRanges => {
@@ -233,7 +254,8 @@ impl Dispatcher for NativeExec {
                 let params = f32_arg(args, 0)?;
                 let x = f32_arg(args, 1)?;
                 let b = x.len() / plan.sample_len();
-                let tape = net::forward(plan, params, x, b, None);
+                let tape =
+                    net::forward(plan, params, x, b, None, &mut self.ctx.borrow_mut());
                 let mut lo = Vec::with_capacity(plan.n_act_blocks());
                 let mut hi = Vec::with_capacity(plan.n_act_blocks());
                 for i in 0..plan.n_act_blocks() {

@@ -1,0 +1,608 @@
+//! Math-kernel layer of the native backend: im2col/col2im lowering, a
+//! panel-parallel rank-1 `sgemm` with a fixed-order `f32` accumulation
+//! contract, and threaded direct-convolution kernels — everything
+//! fanned over
+//! [`coordinator::parallel::run_static`](crate::coordinator::parallel::run_static).
+//!
+//! # Determinism contract (why this can replace the loop nests)
+//!
+//! Every kernel here reproduces the scalar reference implementation in
+//! [`ops::reference`](super::ops::reference) to 0 ULP, because for every
+//! output element the chain of `f32` operations is *identical*, not
+//! merely mathematically equivalent:
+//!
+//! - [`sgemm`] keeps one running `f32` accumulator chain per output
+//!   element, initialized from the bias (or zero) and advanced strictly
+//!   in ascending-`k` order (a rank-1 update per `k`). Rust never
+//!   contracts `a*b + c` into an FMA on its own, so `acc += a * b`
+//!   rounds exactly like the reference loop nest.
+//! - The im2col layout (rows = output pixels in `(n, i, j)` order,
+//!   columns = `(di, dj, ci)`) matches both the HWIO kernel layout and
+//!   the reference tap order, so "ascending k" *is* the reference's
+//!   `(di, dj, ci)` visitation order.
+//! - **Exact-zero skipping is bit-exact.** [`sgemm`], [`sgemm_atb`] and
+//!   [`conv2d_bwd_w_direct`] skip `A` entries that are exactly `0.0`
+//!   (im2col padding, post-ReLU zeros, relu-masked gradients). Adding
+//!   the skipped `±0.0` product could only differ from skipping it in
+//!   the sign of a zero result, and a `-0.0` accumulator is unreachable
+//!   here: IEEE-754 round-to-nearest produces `-0.0` only from
+//!   `(-0.0) + (-0.0)`, and every accumulator chain in this backend
+//!   starts from a `+0.0`-zeroed buffer or a bias Adam can never drive
+//!   to `-0.0`. (The contract assumes finite inputs — `0 * inf = NaN`
+//!   would distinguish a skipped term, but a NaN forward pass is
+//!   already outside every other contract.)
+//! - [`col2im3x3`] is a *gather*, not a scatter: each `dx` element sums
+//!   its (at most 9) tap contributions in ascending `(di, dj)` order —
+//!   the reference `conv2d_bwd_x` order — rather than streaming over
+//!   `dout` pixels, which would visit taps in descending order and
+//!   round differently.
+//! - [`conv2d_direct`] *is* the reference loop run per image-range, and
+//!   [`conv2d_bwd_w_direct`] re-nests the reference loops tap-outermost;
+//!   each `dw` element belongs to exactly one tap, so its `(ni, i, j)`
+//!   accumulation order is untouched.
+//!
+//! Because outputs are bit-identical to the reference (and therefore to
+//! PR 4's kernels), pipeline cache digests are untouched: a checkpoint
+//! trained before this layer existed validates against one trained
+//! through it. The whole contract is pinned by `tests/native_gemm.rs`
+//! and was cross-validated bitwise in C (`tools/cmirror/`) through full
+//! multi-epoch train loops before this layer shipped.
+//!
+//! # Which lowering runs where (measured, not assumed)
+//!
+//! The PR that introduced this layer assumed the scalar loop nests were
+//! slow and im2col+GEMM would dominate. Measurement (tools/cmirror, gcc
+//! -O3 proxy at the same SSE2 baseline rustc targets) says otherwise:
+//! the reference forward/backward-by-weights loops — whose inner loop
+//! is a `c_out`-wide rank-1 update — already vectorize to roughly half
+//! of machine peak, which an im2col+GEMM of the *same* arithmetic
+//! cannot beat after paying the 9x im2col materialization. A
+//! register-tiled micro-kernel variant measured *slower* than the plain
+//! rank-1 stream at this baseline, which is why [`sgemm`] is the simple
+//! form. The measured routing (encoded in `ops.rs`, before/after in
+//! BENCH_parallel_study.json):
+//!
+//! - conv forward → [`conv2d_direct`] (reference loop, image-range
+//!   threaded). The im2col+GEMM lowering (`ops::conv2d_im2col`) is
+//!   kept, property-tested, for wide-`c_out` models where the direct
+//!   form's out-row store/load traffic overtakes the lowering cost.
+//! - conv backward-by-weights → [`conv2d_bwd_w_direct`] (tap-threaded,
+//!   zero-skip; no im2col materialization).
+//! - conv backward-by-input → `W^T` pack + [`sgemm`] (`G = dout * W^T`)
+//!   + [`col2im3x3`]: 1.3-3x faster than the reference's per-element
+//!   dot products *serially*, because the rank-1 form vectorizes where
+//!   the reference's horizontal `c_out` reduction does not, and the
+//!   relu-masked `dout` rows are ~half exact zeros.
+//! - dense forward/backward → [`sgemm`] / [`sgemm_atb`].
+//!
+//! **Rule for new ops**: route through the threaded GEMM layer only if
+//! (a) the per-output-element `f32` chain is provably identical to the
+//! scalar reference at every thread count, and (b) a measurement (not
+//! an assumption) shows the lowering beats the direct loop for the
+//! shapes that op actually runs. Reductions whose order would depend on
+//! the fan-out (e.g. a tree-reduced batch sum) must stay serial or keep
+//! a per-element sequential accumulator.
+//!
+//! # Parallelism
+//!
+//! Only loops whose iterations own disjoint output slices are fanned
+//! out: `sgemm` over M-panels of `C`, `sgemm_atb` over row-panels of
+//! `dw`, `conv2d_direct` over image ranges, `conv2d_bwd_w_direct` over
+//! kernel taps (each tap owns a contiguous `dw` block — an
+//! output-channel split was measured and discarded: adjacent workers
+//! false-share `dw` cache lines), `col2im3x3` over images. The schedule
+//! is static ([`run_static`]) and the per-element operation chain is
+//! independent of the panel assignment, so results are bit-identical at
+//! every thread budget — `threads` is purely a wall-clock knob, which
+//! is why it is *not* part of any pipeline cache key.
+//! [`effective_threads`] caps the fan-out by a FLOP threshold so
+//! dispatch-sized problems never pay a thread spawn for microseconds of
+//! work.
+
+use crate::coordinator::parallel::run_static;
+use super::ops::reference;
+
+/// M-dimension panel height of [`sgemm`]: the unit of intra-op
+/// parallelism and the write-locality granule (one panel of `C` rows
+/// per work item).
+pub const MC: usize = 64;
+
+/// Minimum multiply-add FLOPs that justify one additional worker thread
+/// (a scoped spawn costs ~tens of microseconds; at a few GFLOP/s this
+/// keeps spawn overhead under a few percent of the fanned-out work).
+const PAR_FLOPS_PER_THREAD: usize = 4_000_000;
+
+/// Resolve an intra-op thread budget for a kernel invocation: never more
+/// than `budget` (the backend's configured budget), than `panels`
+/// (disjoint work items), or than the FLOP count supports.
+pub fn effective_threads(budget: usize, panels: usize, flops: usize) -> usize {
+    budget.max(1).min(panels.max(1)).min(1 + flops / PAR_FLOPS_PER_THREAD)
+}
+
+/// How a [`sgemm`] output buffer is initialized before accumulation.
+#[derive(Debug, Clone, Copy)]
+pub enum Init<'a> {
+    /// Each of the M output rows starts as a copy of this length-N bias
+    /// row (the conv/dense forward shape).
+    Bias(&'a [f32]),
+    /// Output starts at `+0.0` (the `G = dout * W^T` backward shape).
+    Zero,
+}
+
+/// Reusable scratch for the GEMM lowering of one dispatcher: `a` holds
+/// the current im2col / `G` matrix, `b` the transposed weight panel.
+/// Buffers grow to the largest layer of the plan once and are then
+/// reused across ops, scanned train steps and dispatches — hoisting the
+/// per-batch allocation churn the loop-nest implementation paid into a
+/// per-worker arena.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// im2col / `G` matrix buffer (`M x K`).
+    pub a: Vec<f32>,
+    /// Transposed-weights buffer (`N x K` packs of `W^T`).
+    pub b: Vec<f32>,
+}
+
+/// Per-dispatcher execution context of the GEMM layer: the intra-op
+/// thread budget, the reference-kernel escape hatch, and the scratch
+/// arena. One lives behind a `RefCell` in every
+/// [`NativeExec`](super::entries::NativeExec); tests and oracles use
+/// [`ExecCtx::serial`].
+#[derive(Debug, Default)]
+pub struct ExecCtx {
+    /// Intra-op thread budget for the kernel fan-out (`0`/`1` = serial).
+    pub threads: usize,
+    /// Route conv/dense ops through the scalar
+    /// [`ops::reference`](super::ops::reference) kernels instead of this
+    /// layer (`FITQ_NATIVE_REFERENCE=1`) — the measured "before" of the
+    /// before/after benchmark, and an A/B oracle for debugging.
+    pub use_reference: bool,
+    /// The per-worker scratch arena.
+    pub scratch: Scratch,
+}
+
+impl ExecCtx {
+    /// A context with the given intra-op thread budget.
+    pub fn new(threads: usize) -> ExecCtx {
+        ExecCtx { threads, ..ExecCtx::default() }
+    }
+
+    /// The serial kernel-path context (what op-level tests use).
+    pub fn serial() -> ExecCtx {
+        ExecCtx::new(1)
+    }
+}
+
+/// Lower an NHWC batch to the im2col matrix of the 3x3 SAME stride-1
+/// conv: row `m = (ni*h + i)*w + j` holds the `9*cin` input values under
+/// the kernel window centered on output pixel `(i, j)`, in `(di, dj,
+/// ci)` column order; out-of-image taps are `+0.0`. `out` is resized
+/// (and fully re-zeroed) to `n*h*w * 9*cin`.
+pub fn im2col3x3(x: &[f32], n: usize, h: usize, w: usize, cin: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    let k = 9 * cin;
+    out.clear();
+    out.resize(n * h * w * k, 0.0);
+    for ni in 0..n {
+        for i in 0..h {
+            for j in 0..w {
+                let row = &mut out[((ni * h + i) * w + j) * k..][..k];
+                for di in 0..3 {
+                    let ii = i + di;
+                    if ii < 1 || ii - 1 >= h {
+                        continue;
+                    }
+                    let xi = ii - 1;
+                    for dj in 0..3 {
+                        let jj = j + dj;
+                        if jj < 1 || jj - 1 >= w {
+                            continue;
+                        }
+                        let xj = jj - 1;
+                        let src = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                        row[(di * 3 + dj) * cin..][..cin].copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The adjoint of [`im2col3x3`] as a *gather*: `dx[ni, xi, xj, ci]` sums
+/// `g[m(i, j)][k(di, dj, ci)]` over the valid taps in ascending `(di,
+/// dj)` order — exactly the reference `conv2d_bwd_x` accumulation order.
+/// Overwrites `dx`; fans out over batch images.
+pub fn col2im3x3(
+    g: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dx: &mut [f32],
+    threads: usize,
+) {
+    let k = 9 * cin;
+    debug_assert_eq!(g.len(), n * h * w * k);
+    debug_assert_eq!(dx.len(), n * h * w * cin);
+    let threads = effective_threads(threads, n, 2 * n * h * w * k);
+    let panels: Vec<(usize, &mut [f32])> = dx.chunks_mut(h * w * cin).enumerate().collect();
+    run_static(panels, threads, |_, (ni, panel)| {
+        for xi in 0..h {
+            for xj in 0..w {
+                let drow = &mut panel[(xi * w + xj) * cin..][..cin];
+                drow.fill(0.0);
+                for di in 0..3 {
+                    // dout pixel row i = xi + 1 - di, when in range
+                    if xi + 1 < di || xi + 1 - di >= h {
+                        continue;
+                    }
+                    let i = xi + 1 - di;
+                    for dj in 0..3 {
+                        if xj + 1 < dj || xj + 1 - dj >= w {
+                            continue;
+                        }
+                        let j = xj + 1 - dj;
+                        let grow =
+                            &g[((ni * h + i) * w + j) * k + (di * 3 + dj) * cin..][..cin];
+                        for (d, &v) in drow.iter_mut().zip(grow) {
+                            *d += v;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Transpose a row-major `rows x cols` matrix into `out` (`cols x rows`,
+/// resized) — the weight pack `W^T` the backward-by-input GEMM streams.
+pub fn transpose(src: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(src.len(), rows * cols);
+    // size only — every element is overwritten below, so no re-zeroing
+    out.resize(rows * cols, 0.0);
+    for r in 0..rows {
+        for (c, &v) in src[r * cols..][..cols].iter().enumerate() {
+            out[c * rows + r] = v;
+        }
+    }
+}
+
+/// `C = init + A * B` over row-major `A (m x k)`, `B (k x n)`, `C (m x
+/// n)`: per `C` row, `k`-outer rank-1 updates with exact-zero `A`
+/// entries skipped; M-panels of [`MC`] rows fanned over `threads`
+/// scoped workers. Per output element the `f32` accumulation is `init`
+/// then strictly ascending `k` — see the module determinism contract.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    init: Init,
+    c: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if let Init::Bias(bias) = init {
+        debug_assert_eq!(bias.len(), n);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let n_panels = m.div_ceil(MC);
+    let threads = effective_threads(threads, n_panels, 2 * m * n * k);
+    let panels: Vec<(usize, &mut [f32])> = c.chunks_mut(MC * n).enumerate().collect();
+    run_static(panels, threads, |_, (pi, c_panel)| {
+        let row0 = pi * MC;
+        for (r, crow) in c_panel.chunks_exact_mut(n).enumerate() {
+            match init {
+                Init::Bias(bias) => crow.copy_from_slice(bias),
+                Init::Zero => crow.fill(0.0),
+            }
+            let arow = &a[(row0 + r) * k..][..k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..][..n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `DW += A^T * D` over row-major `A (m x k)`, `D (m x n)`, `DW (k x
+/// n)` — the dense backward-by-weights shape. Per `dw` element the
+/// reduction runs over `m` in strictly ascending order (the reference
+/// batch scan); exact-zero `A` entries are skipped (bit-exact, see the
+/// module contract). Fans out over row-panels of `DW`.
+pub fn sgemm_atb(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    d: &[f32],
+    dw: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let n_panels = k.div_ceil(MC.min(k));
+    let threads = effective_threads(threads, n_panels, 2 * m * n * k);
+    let panel_rows = k.div_ceil(threads.max(1));
+    let panels: Vec<(usize, &mut [f32])> =
+        dw.chunks_mut(panel_rows * n).enumerate().collect();
+    run_static(panels, threads, |_, (pi, dw_panel)| {
+        let k0 = pi * panel_rows;
+        let krows = dw_panel.len() / n;
+        for mi in 0..m {
+            let arow = &a[mi * k + k0..][..krows];
+            let drow = &d[mi * n..][..n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                for (dv, &dd) in dw_panel[kk * n..][..n].iter_mut().zip(drow) {
+                    *dv += av * dd;
+                }
+            }
+        }
+    });
+}
+
+/// Direct 3x3 SAME conv forward, threaded over contiguous image ranges:
+/// each range executes [`reference::conv2d`] verbatim on its disjoint
+/// slice of `x`/`out`, so `threads = 1` *is* the reference and every
+/// budget is bit-identical. The production forward lowering (see the
+/// module routing notes).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_direct(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
+    let threads = effective_threads(threads, n, 2 * n * h * w * 9 * cin * cout);
+    if threads <= 1 {
+        return reference::conv2d(x, n, h, w, cin, wgt, cout, bias, out);
+    }
+    let per = n.div_ceil(threads);
+    let panels: Vec<(usize, &mut [f32])> =
+        out.chunks_mut(per * h * w * cout).enumerate().collect();
+    run_static(panels, threads, |_, (t, out_panel)| {
+        let n0 = t * per;
+        let nn = out_panel.len() / (h * w * cout);
+        let x_panel = &x[n0 * h * w * cin..][..nn * h * w * cin];
+        reference::conv2d(x_panel, nn, h, w, cin, wgt, cout, bias, out_panel);
+    });
+}
+
+/// Direct conv backward-by-weights, threaded over the 9 kernel taps:
+/// each tap owns the contiguous `dw` rows `[(di*3 + dj)*cin, +cin)` so
+/// writes never collide (an output-channel split was measured and
+/// discarded for false sharing), and per `dw` element the `(ni, i, j)`
+/// scan is the reference order — each element belongs to exactly one
+/// tap. Exact-zero inputs (post-ReLU/pool activations) are skipped.
+/// Accumulates into `dw`/`db` (callers zero them).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_w_direct(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dout: &[f32],
+    cout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    threads: usize,
+) {
+    let threads = effective_threads(threads, 9, 2 * n * h * w * 9 * cin * cout);
+    let taps: Vec<(usize, &mut [f32])> = dw.chunks_mut(cin * cout).enumerate().collect();
+    run_static(taps, threads, |_, (tap, dw_tap)| {
+        let (di, dj) = (tap / 3, tap % 3);
+        let (i0, i1) = reference::tap_range(di, h);
+        let (j0, j1) = reference::tap_range(dj, w);
+        for ni in 0..n {
+            for i in i0..i1 {
+                let xi = i + di - 1;
+                for j in j0..j1 {
+                    let xj = j + dj - 1;
+                    let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                    let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
+                    for (ci, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (dwv, &dv) in dw_tap[ci * cout..][..cout].iter_mut().zip(drow) {
+                            *dwv += xv * dv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    for drow in dout.chunks_exact(cout) {
+        for (b, &dv) in db.iter_mut().zip(drow) {
+            *b += dv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 21);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// The plainest possible oracle: one accumulator, ascending k.
+    fn naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], bias: Option<&[f32]>) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = bias.map_or(0.0, |bs| bs[j]);
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn sgemm_matches_naive_bitwise_on_odd_shapes() {
+        // shapes straddling the panel boundary, single rows/cols, and a
+        // zero-sparse A exercising the skip path
+        for &(m, n, k) in
+            &[(1, 1, 1), (3, 5, 7), (63, 8, 40), (65, 10, 27), (130, 3, 259)]
+        {
+            let mut a = randv(m * k, 1000 + m as u64);
+            for v in a.iter_mut().step_by(3) {
+                *v = v.max(0.0); // exact zeros, post-ReLU style
+            }
+            let b = randv(k * n, 2000 + n as u64);
+            let bias = randv(n, 3000 + k as u64);
+            let want = naive(m, n, k, &a, &b, Some(&bias));
+            let mut got = vec![0.0f32; m * n];
+            sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut got, 1);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "({m},{n},{k})"
+            );
+            let want0 = naive(m, n, k, &a, &b, None);
+            sgemm(m, n, k, &a, &b, Init::Zero, &mut got, 1);
+            assert_eq!(got, want0, "zero-init ({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn sgemm_bit_identical_across_thread_budgets() {
+        let (m, n, k) = (517, 13, 40);
+        let a = randv(m * k, 7);
+        let b = randv(k * n, 8);
+        let bias = randv(n, 9);
+        let mut c1 = vec![0.0f32; m * n];
+        sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut c1, 1);
+        for threads in [2usize, 4, 16] {
+            let mut ct = vec![0.0f32; m * n];
+            sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut ct, threads);
+            assert_eq!(
+                c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn sgemm_atb_matches_naive_and_threads() {
+        let (m, n, k) = (91, 6, 35);
+        let mut a = randv(m * k, 11);
+        // inject exact zeros (the post-ReLU pattern the skip targets)
+        for v in a.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let d = randv(m * n, 12);
+        let mut want = vec![0.0f32; k * n];
+        for mi in 0..m {
+            for kk in 0..k {
+                for o in 0..n {
+                    want[kk * n + o] += a[mi * k + kk] * d[mi * n + o];
+                }
+            }
+        }
+        for threads in [1usize, 2, 4] {
+            let mut got = vec![0.0f32; k * n];
+            sgemm_atb(m, n, k, &a, &d, &mut got, threads);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn im2col_layout_and_padding() {
+        // 1x2x2x1 image, values 1..4: check tap placement + zero padding
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut a = Vec::new();
+        im2col3x3(&x, 1, 2, 2, 1, &mut a);
+        assert_eq!(a.len(), 4 * 9);
+        // output pixel (0,0): center tap (1,1)=k4 is x[0,0]=1, right
+        // (1,2)=k5 is x[0,1]=2, down (2,1)=k7 is x[1,0]=3, diag k8 = 4
+        assert_eq!(&a[0..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // output pixel (1,1): center is x[1,1]=4, up-left k0 = x[0,0]=1
+        assert_eq!(&a[3 * 9..4 * 9], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_of_im2col_is_tap_multiplicity() {
+        // col2im(im2col(x))[p] = x[p] * (# valid taps covering p): 9 in
+        // the interior, 6 on edges, 4 in corners. Integer-valued x keeps
+        // the small repeated sums exact in f32.
+        let (n, h, w, cin) = (2usize, 5, 4, 3);
+        let mut rng = Pcg32::new(31, 2);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.below(17) as f32 - 8.0).collect();
+        let mut a = Vec::new();
+        im2col3x3(&x, n, h, w, cin, &mut a);
+        let mut back = vec![0.0f32; x.len()];
+        col2im3x3(&a, n, h, w, cin, &mut back, 1);
+        for ni in 0..n {
+            for i in 0..h {
+                let ri = if i == 0 || i == h - 1 { 2 } else { 3 };
+                for j in 0..w {
+                    let rj = if j == 0 || j == w - 1 { 2 } else { 3 };
+                    for ci in 0..cin {
+                        let at = ((ni * h + i) * w + j) * cin + ci;
+                        assert_eq!(
+                            back[at],
+                            x[at] * (ri * rj) as f32,
+                            "pixel ({ni},{i},{j},{ci})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let src = randv(7 * 3, 41);
+        let mut t = Vec::new();
+        transpose(&src, 7, 3, &mut t);
+        assert_eq!(t[4], src[4 * 3], "t[0][4] == src[4][0]");
+        let mut back = Vec::new();
+        transpose(&t, 3, 7, &mut back);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn effective_threads_caps_by_work_and_panels() {
+        assert_eq!(effective_threads(8, 1, usize::MAX), 1, "one panel, one thread");
+        assert_eq!(effective_threads(8, 100, 1000), 1, "tiny work stays serial");
+        assert_eq!(effective_threads(4, 100, usize::MAX), 4, "budget is the cap");
+        assert_eq!(effective_threads(0, 4, usize::MAX), 1, "zero budget means serial");
+    }
+}

@@ -8,8 +8,15 @@
 //!   their flat parameter layout (identical tensor order and block
 //!   indexing to layers.py), He-normal init, and the generated
 //!   [`Manifest`] with aot.py-shaped entry IoSpecs.
+//! - [`gemm`] — the math-kernel layer: im2col/col2im lowering, a
+//!   panel-parallel rank-1 `sgemm`, and threaded direct-conv kernels,
+//!   all under a fixed-order `f32` accumulation contract and fanned
+//!   over `coordinator::parallel::run_static`.
 //! - [`ops`] — conv2d / dense / max-pool / batch-norm / relu /
-//!   softmax-CE, forward *and* hand-derived backward.
+//!   softmax-CE, forward *and* hand-derived backward; conv/dense run
+//!   through [`gemm`] under a *measured* per-op routing, with the
+//!   original scalar loop nests kept as `ops::reference` oracles
+//!   (0-ULP pinned by `tests/native_gemm.rs`).
 //! - [`quant`] — `fake_quant` bit-faithful to the L1 Pallas kernel
 //!   (ties-to-even, fused `q*delta+lo`), with the straight-through
 //!   backward convention.
@@ -32,11 +39,13 @@
 //! into every pipeline stage key (DESIGN.md "Backends").
 
 pub mod entries;
+pub mod gemm;
 pub mod model;
 pub mod net;
 pub mod ops;
 pub mod quant;
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -47,16 +56,26 @@ use crate::runtime::backend::{Backend, Dispatcher};
 use crate::runtime::{EntrySpec, Manifest, ModelManifest};
 use entries::{EntryKind, NativeExec};
 use model::{Plan, STUDY_CNNS};
+use ops::ExecCtx;
 
-/// The native backend: execution plans for every built-in model.
+/// The native backend: execution plans for every built-in model, plus
+/// the intra-op GEMM thread budget its dispatchers run under.
 pub struct NativeBackend {
     plans: BTreeMap<String, Rc<Plan>>,
+    /// Intra-op threads each compiled dispatcher may fan GEMM panels
+    /// over (`1` = serial; only wall clock changes, never bits).
+    threads: usize,
+    /// Route conv/dense through the scalar `ops::reference` kernels
+    /// (`FITQ_NATIVE_REFERENCE=1`) — the before/after benchmark's
+    /// "before" leg.
+    use_reference: bool,
 }
 
 impl NativeBackend {
     /// Build the backend plus its generated manifest (the pair
-    /// `Runtime::native` assembles into a runtime).
-    pub fn create() -> (NativeBackend, Manifest) {
+    /// `Runtime::native` assembles into a runtime) with an intra-op
+    /// thread budget for the GEMM layer.
+    pub fn create_with_threads(threads: usize) -> (NativeBackend, Manifest) {
         let mut plans = BTreeMap::new();
         let mut models = BTreeMap::new();
         for spec in STUDY_CNNS {
@@ -64,7 +83,17 @@ impl NativeBackend {
             models.insert(spec.name.to_string(), plan.manifest());
             plans.insert(spec.name.to_string(), Rc::new(plan));
         }
-        (NativeBackend { plans }, Manifest { root: PathBuf::from("<native>"), models })
+        let use_reference = std::env::var_os("FITQ_NATIVE_REFERENCE").is_some();
+        (
+            NativeBackend { plans, threads: threads.max(1), use_reference },
+            Manifest { root: PathBuf::from("<native>"), models },
+        )
+    }
+
+    /// [`NativeBackend::create_with_threads`] with the serial budget —
+    /// the historical constructor.
+    pub fn create() -> (NativeBackend, Manifest) {
+        NativeBackend::create_with_threads(1)
     }
 }
 
@@ -81,7 +110,12 @@ impl Backend for NativeBackend {
         // the manifest is the source of truth for dispatch shapes, so the
         // scanned-epoch K comes from it, not the global constant
         let kind = EntryKind::parse(&entry.name, model.train_k)?;
-        Ok(Box::new(NativeExec { plan: plan.clone(), kind }))
+        let ctx = ExecCtx {
+            threads: self.threads,
+            use_reference: self.use_reference,
+            ..ExecCtx::default()
+        };
+        Ok(Box::new(NativeExec { plan: plan.clone(), kind, ctx: RefCell::new(ctx) }))
     }
 }
 

@@ -20,16 +20,21 @@ use crate::tensor::Pcg32;
 
 /// Microbatch steps per train/qat dispatch (aot.py TRAIN_K).
 pub const TRAIN_K: usize = 10;
+/// Train microbatch size (aot.py TRAIN_B).
 pub const TRAIN_B: usize = 32;
+/// Masked-evaluation batch size (aot.py EVAL_B).
 pub const EVAL_B: usize = 256;
+/// Activation-range calibration batch size (aot.py CALIB_B).
 pub const CALIB_B: usize = 128;
+/// Predict-entry batch size (aot.py PREDICT_B).
 pub const PREDICT_B: usize = 32;
 /// EF-trace batch sizes lowered for study models (aot.py STUDY_TRACE_BS).
 pub const TRACE_BS: &[usize] = &[32];
 
-/// Adam learning rates (train.py: ADAM / QAT_ADAM; study models have no
+/// FP-training Adam learning rate (train.py ADAM; study models have no
 /// per-model overrides).
 pub const FP_LR: f32 = 1e-2;
+/// QAT fine-tune Adam learning rate (train.py QAT_ADAM).
 pub const QAT_LR: f32 = 1e-3;
 
 /// Stream-seed salt for the He-normal init RNG (one `Pcg32` per tensor).
@@ -112,6 +117,18 @@ impl ConvLayer {
     pub fn act_size(&self) -> usize {
         self.h * self.w * self.c_out
     }
+
+    /// GEMM reduction depth of this layer's im2col lowering (`9 * c_in`
+    /// — one column per `(di, dj, ci)` tap; see `native::gemm`).
+    pub fn gemm_k(&self) -> usize {
+        9 * self.c_in
+    }
+
+    /// GEMM row count of this layer for a batch (= output pixels; the
+    /// axis the M-panel fan-out splits).
+    pub fn gemm_m(&self, batch: usize) -> usize {
+        batch * self.h * self.w
+    }
 }
 
 /// The interpreter's execution plan for one model: geometry, offsets and
@@ -134,6 +151,8 @@ fn tensor(name: String, shape: Vec<usize>, offset: usize, kind: &str, block: i64
 }
 
 impl Plan {
+    /// Build the execution plan (geometry, flat offsets, manifest
+    /// tensors) for one study CNN spec.
     pub fn new(spec: CnnSpec) -> Plan {
         let (mut h, mut w) = (spec.input.0, spec.input.1);
         let mut c_in = spec.input.2;
@@ -177,10 +196,12 @@ impl Plan {
         Plan { spec, convs, fc_w_off, fc_b_off, feat, n_params: off, tensors }
     }
 
+    /// Quantizable weight blocks (one per conv kernel, plus fc).
     pub fn n_weight_blocks(&self) -> usize {
         self.convs.len() + 1
     }
 
+    /// Quantizable activation sites (one per conv layer's post-relu).
     pub fn n_act_blocks(&self) -> usize {
         self.convs.len()
     }

@@ -13,6 +13,7 @@
 //! are simply skipped on the way back (see `native::quant`).
 
 use super::model::Plan;
+use super::ops::ExecCtx;
 use super::{ops, quant};
 
 /// Borrowed runtime quantization configuration (QAT mode).
@@ -58,7 +59,16 @@ impl Tape {
 }
 
 /// Run the forward pass for a batch; `x` is (B, H, W, C) flattened.
-pub fn forward(plan: &Plan, params: &[f32], x: &[f32], batch: usize, q: Option<QuantArgs>) -> Tape {
+/// `ctx` carries the GEMM scratch arena and the intra-op thread budget
+/// (see `native::gemm`); outputs are bit-identical at every budget.
+pub fn forward(
+    plan: &Plan,
+    params: &[f32],
+    x: &[f32],
+    batch: usize,
+    q: Option<QuantArgs>,
+    ctx: &mut ExecCtx,
+) -> Tape {
     debug_assert_eq!(x.len(), batch * plan.sample_len());
     debug_assert_eq!(params.len(), plan.n_params);
     let mut convs = Vec::with_capacity(plan.convs.len());
@@ -78,7 +88,7 @@ pub fn forward(plan: &Plan, params: &[f32], x: &[f32], batch: usize, q: Option<Q
         };
         let bias = &params[layer.b_off..layer.b_off + cout];
         let mut z = vec![0.0f32; batch * h * w * cout];
-        ops::conv2d(&xin, batch, h, w, cin, &wq, cout, bias, &mut z);
+        ops::conv2d(&xin, batch, h, w, cin, &wq, cout, bias, &mut z, ctx);
         let (mut xhat, mut ivar) = (Vec::new(), Vec::new());
         if let (Some(g_off), Some(b_off)) = (layer.gamma_off, layer.beta_off) {
             let gamma = &params[g_off..g_off + cout];
@@ -122,7 +132,7 @@ pub fn forward(plan: &Plan, params: &[f32], x: &[f32], batch: usize, q: Option<Q
     };
     let fc_b = &params[plan.fc_b_off..plan.fc_b_off + ncls];
     let mut logits = vec![0.0f32; batch * ncls];
-    ops::dense(&cur, batch, plan.feat, &fwq, ncls, fc_b, &mut logits);
+    ops::dense(&cur, batch, plan.feat, &fwq, ncls, fc_b, &mut logits, ctx);
     Tape { batch, convs, feat: cur, fwq, logits }
 }
 
@@ -137,7 +147,13 @@ pub struct Grads {
 /// Backpropagate `dlogits` through the tape. STE convention: weight
 /// gradients land on the *raw* parameter slots even when the forward
 /// convolved fake-quantized copies.
-pub fn backward(plan: &Plan, params: &[f32], tape: &Tape, dlogits: &[f32]) -> Grads {
+pub fn backward(
+    plan: &Plan,
+    params: &[f32],
+    tape: &Tape,
+    dlogits: &[f32],
+    ctx: &mut ExecCtx,
+) -> Grads {
     let batch = tape.batch;
     let ncls = plan.spec.n_classes;
     let mut flat = vec![0.0f32; plan.n_params];
@@ -148,7 +164,9 @@ pub fn backward(plan: &Plan, params: &[f32], tape: &Tape, dlogits: &[f32]) -> Gr
     {
         let (dw, rest) = flat[plan.fc_w_off..].split_at_mut(plan.feat * ncls);
         let db = &mut rest[..ncls];
-        ops::dense_bwd(&tape.feat, &tape.fwq, batch, plan.feat, ncls, dlogits, dw, db, &mut dfeat);
+        ops::dense_bwd(
+            &tape.feat, &tape.fwq, batch, plan.feat, ncls, dlogits, dw, db, &mut dfeat, ctx,
+        );
     }
 
     // conv stack, last to first
@@ -181,11 +199,11 @@ pub fn backward(plan: &Plan, params: &[f32], tape: &Tape, dlogits: &[f32]) -> Gr
         {
             let (dw, rest) = flat[layer.w_off..].split_at_mut(layer.w_size());
             let db = &mut rest[..cout];
-            ops::conv2d_bwd_w(&t.xin, batch, h, w, cin, &da, cout, dw, db);
+            ops::conv2d_bwd_w(&t.xin, batch, h, w, cin, &da, cout, dw, db, ctx);
         }
         if i > 0 {
             let mut dx = vec![0.0f32; batch * h * w * cin];
-            ops::conv2d_bwd_x(&t.wq, batch, h, w, cin, &da, cout, &mut dx);
+            ops::conv2d_bwd_x(&t.wq, batch, h, w, cin, &da, cout, &mut dx, ctx);
             da = dx;
         }
     }
@@ -202,16 +220,17 @@ pub fn mean_loss_grad(
     y: &[i32],
     batch: usize,
     q: Option<QuantArgs>,
+    ctx: &mut ExecCtx,
 ) -> (f32, Grads) {
     let ncls = plan.spec.n_classes;
-    let tape = forward(plan, params, x, batch, q);
+    let tape = forward(plan, params, x, batch, q, ctx);
     let mut per = vec![0.0f32; batch];
     ops::softmax_xent(&tape.logits, y, batch, ncls, &mut per);
     let loss = (per.iter().map(|&v| v as f64).sum::<f64>() / batch as f64) as f32;
     let dper = vec![1.0f32 / batch as f32; batch];
     let mut dlogits = vec![0.0f32; tape.logits.len()];
     ops::softmax_xent_bwd(&tape.logits, y, batch, ncls, &dper, &mut dlogits);
-    let grads = backward(plan, params, &tape, &dlogits);
+    let grads = backward(plan, params, &tape, &dlogits, ctx);
     (loss, grads)
 }
 
@@ -220,6 +239,10 @@ mod tests {
     use super::*;
     use crate::native::model::{Plan, STUDY_CNNS};
     use crate::tensor::Pcg32;
+
+    fn ctx() -> ExecCtx {
+        ExecCtx::serial()
+    }
 
     fn rand_batch(plan: &Plan, batch: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
         let mut rng = Pcg32::new(seed, 5);
@@ -235,7 +258,7 @@ mod tests {
             let plan = Plan::new(*spec);
             let params = plan.init_flat(1);
             let (x, _) = rand_batch(&plan, 4, 2);
-            let tape = forward(&plan, &params, &x, 4, None);
+            let tape = forward(&plan, &params, &x, 4, None, &mut ctx());
             assert_eq!(tape.logits.len(), 4 * spec.n_classes);
             assert!(tape.logits.iter().all(|v| v.is_finite()), "{}", spec.name);
             for (i, layer) in plan.convs.iter().enumerate() {
@@ -249,7 +272,7 @@ mod tests {
         let plan = Plan::new(STUDY_CNNS[1]); // BN variant
         let params = plan.init_flat(3);
         let (x, y) = rand_batch(&plan, 4, 7);
-        let (loss, g) = mean_loss_grad(&plan, &params, &x, &y, 4, None);
+        let (loss, g) = mean_loss_grad(&plan, &params, &x, &y, 4, None, &mut ctx());
         assert!(loss.is_finite() && loss > 0.0);
         assert_eq!(g.flat.len(), plan.n_params);
         assert_eq!(g.act.len(), plan.n_act_blocks());
@@ -265,12 +288,12 @@ mod tests {
         let plan = Plan::new(STUDY_CNNS[0]);
         let params = plan.init_flat(5);
         let (x, _) = rand_batch(&plan, 2, 9);
-        let plain = forward(&plan, &params, &x, 2, None);
+        let plain = forward(&plan, &params, &x, 2, None, &mut ctx());
         let (lw, la) = (plan.n_weight_blocks(), plan.n_act_blocks());
         let (bits_w, bits_a) = (vec![3.0f32; lw], vec![3.0f32; la]);
         let (act_lo, act_hi) = (vec![0.0f32; la], vec![4.0f32; la]);
         let q = QuantArgs { bits_w: &bits_w, bits_a: &bits_a, act_lo: &act_lo, act_hi: &act_hi };
-        let quanted = forward(&plan, &params, &x, 2, Some(q));
+        let quanted = forward(&plan, &params, &x, 2, Some(q), &mut ctx());
         assert_eq!(plain.logits.len(), quanted.logits.len());
         assert_ne!(plain.logits, quanted.logits, "3-bit quant must perturb logits");
     }
@@ -280,8 +303,8 @@ mod tests {
         let plan = Plan::new(STUDY_CNNS[1]);
         let params = plan.init_flat(11);
         let (x, y) = rand_batch(&plan, 3, 13);
-        let (l1, g1) = mean_loss_grad(&plan, &params, &x, &y, 3, None);
-        let (l2, g2) = mean_loss_grad(&plan, &params, &x, &y, 3, None);
+        let (l1, g1) = mean_loss_grad(&plan, &params, &x, &y, 3, None, &mut ctx());
+        let (l2, g2) = mean_loss_grad(&plan, &params, &x, &y, 3, None, &mut ctx());
         assert_eq!(l1.to_bits(), l2.to_bits());
         assert_eq!(g1.flat, g2.flat);
     }

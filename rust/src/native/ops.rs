@@ -6,9 +6,245 @@
 //! — the backward of each op is the exact derivative of the forward *as
 //! implemented here*, which is what the finite-difference gradient checks
 //! in `tests/native_backend.rs` pin down.
+//!
+//! The conv/dense family executes through the math-kernel layer in
+//! [`gemm`](super::gemm), with the scratch matrices and the intra-op
+//! thread budget carried by the caller's [`ExecCtx`]. The routing is
+//! *measured*, not assumed (see the `gemm` module docs and DESIGN.md
+//! "Native math kernels"): conv forward and backward-by-weights run the
+//! threaded direct kernels (the reference loop shape, which already
+//! vectorizes near roofline), while backward-by-input and the dense
+//! layer lower to the rank-1 `sgemm` — the one place the GEMM form is a
+//! measured win (1.3-3x serially). The im2col+GEMM conv lowerings
+//! ([`conv2d_im2col`], [`conv2d_bwd_w_im2col`]) are kept, 0-ULP
+//! property-tested, as the alternative for wide-`c_out` shapes. The
+//! original scalar loop nests live on in [`reference`] as the oracles
+//! every path is pinned against (`tests/native_gemm.rs`) — and as the
+//! measured "before" of the before/after benchmark
+//! (`FITQ_NATIVE_REFERENCE=1`). Elementwise and reduction ops (ReLU,
+//! max-pool, batch-norm, softmax-CE) are memory-bound and stay scalar.
+//!
+//! **Rule for new ops** (DESIGN.md "Native math kernels"): an op may use
+//! the threaded kernel layer only if it can state its per-output-element
+//! `f32` operation chain and show it unchanged from the scalar reference
+//! at every thread count, and a measurement shows the lowering actually
+//! wins for its shapes; anything whose reduction order would depend on
+//! the fan-out (e.g. a tree-reduced batch sum) must stay serial or keep
+//! a per-element sequential accumulator.
 
-/// SAME-padded 3x3 stride-1 conv: `out[n,i,j,o] += x[n,i+di-1,j+dj-1,ci] *
-/// w[di,dj,ci,o]`, then `+ bias[o]`. `out` is overwritten.
+/// Re-exported execution context (scratch arena + thread budget) every
+/// conv/dense wrapper below takes — defined in [`gemm`](super::gemm).
+pub use super::gemm::ExecCtx;
+use super::gemm::{self, Init};
+
+/// The scalar loop-nest kernels the GEMM path replaced, kept as oracles.
+///
+/// These are PR 4's implementations, bit-for-bit: `tests/native_gemm.rs`
+/// pins the GEMM wrappers to them at 0 ULP, the FD gradchecks in
+/// `tests/native_backend.rs` run against them, and
+/// `FITQ_NATIVE_REFERENCE=1` routes whole dispatches through them for
+/// A/B measurement. They take no [`ExecCtx`]: no scratch, no threads.
+pub mod reference {
+    /// Valid output-row range for kernel tap `d` (SAME padding, 3-tap).
+    #[inline]
+    pub(crate) fn tap_range(d: usize, len: usize) -> (usize, usize) {
+        (if d == 0 { 1 } else { 0 }, if d == 2 { len - 1 } else { len })
+    }
+
+    /// SAME-padded 3x3 stride-1 conv: `out[n,i,j,o] += x[n,i+di-1,j+dj-1,ci]
+    /// * w[di,dj,ci,o]`, then `+ bias[o]`. `out` is overwritten.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        x: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        wgt: &[f32],
+        cout: usize,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), n * h * w * cin);
+        debug_assert_eq!(wgt.len(), 9 * cin * cout);
+        debug_assert_eq!(out.len(), n * h * w * cout);
+        for orow in out.chunks_exact_mut(cout) {
+            orow.copy_from_slice(bias);
+        }
+        for ni in 0..n {
+            for di in 0..3 {
+                let (i0, i1) = tap_range(di, h);
+                for dj in 0..3 {
+                    let (j0, j1) = tap_range(dj, w);
+                    for i in i0..i1 {
+                        let xi = i + di - 1;
+                        for j in j0..j1 {
+                            let xj = j + dj - 1;
+                            let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                            let orow = &mut out[((ni * h + i) * w + j) * cout..][..cout];
+                            for (ci, &xv) in xrow.iter().enumerate() {
+                                let wrow = &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                    *o += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Conv backward w.r.t. kernel and bias; accumulates into `dw`/`db`
+    /// (callers zero them).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_bwd_w(
+        x: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        dout: &[f32],
+        cout: usize,
+        dw: &mut [f32],
+        db: &mut [f32],
+    ) {
+        for ni in 0..n {
+            for di in 0..3 {
+                let (i0, i1) = tap_range(di, h);
+                for dj in 0..3 {
+                    let (j0, j1) = tap_range(dj, w);
+                    for i in i0..i1 {
+                        let xi = i + di - 1;
+                        for j in j0..j1 {
+                            let xj = j + dj - 1;
+                            let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                            let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
+                            for (ci, &xv) in xrow.iter().enumerate() {
+                                let dwrow =
+                                    &mut dw[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                                for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
+                                    *dwv += xv * dv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for drow in dout.chunks_exact(cout) {
+            for (b, &dv) in db.iter_mut().zip(drow) {
+                *b += dv;
+            }
+        }
+    }
+
+    /// Conv backward w.r.t. the input; overwrites `dx`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_bwd_x(
+        wgt: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        dout: &[f32],
+        cout: usize,
+        dx: &mut [f32],
+    ) {
+        dx.fill(0.0);
+        for ni in 0..n {
+            for di in 0..3 {
+                let (i0, i1) = tap_range(di, h);
+                for dj in 0..3 {
+                    let (j0, j1) = tap_range(dj, w);
+                    for i in i0..i1 {
+                        let xi = i + di - 1;
+                        for j in j0..j1 {
+                            let xj = j + dj - 1;
+                            let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
+                            let dxrow = &mut dx[((ni * h + xi) * w + xj) * cin..][..cin];
+                            for (ci, dxv) in dxrow.iter_mut().enumerate() {
+                                let wrow = &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                                let mut acc = 0.0f32;
+                                for (&wv, &dv) in wrow.iter().zip(drow) {
+                                    acc += wv * dv;
+                                }
+                                *dxv += acc;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dense layer: `out[n,o] = sum_i x[n,i] w[i,o] + b[o]`; overwrites
+    /// `out`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense(
+        x: &[f32],
+        n: usize,
+        fin: usize,
+        wgt: &[f32],
+        fout: usize,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        for ni in 0..n {
+            let orow = &mut out[ni * fout..][..fout];
+            orow.copy_from_slice(bias);
+            let xrow = &x[ni * fin..][..fin];
+            for (fi, &xv) in xrow.iter().enumerate() {
+                let wrow = &wgt[fi * fout..][..fout];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+
+    /// Dense backward: accumulates `dw`/`db`, overwrites `dx`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dense_bwd(
+        x: &[f32],
+        wgt: &[f32],
+        n: usize,
+        fin: usize,
+        fout: usize,
+        dout: &[f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+        dx: &mut [f32],
+    ) {
+        for ni in 0..n {
+            let xrow = &x[ni * fin..][..fin];
+            let drow = &dout[ni * fout..][..fout];
+            for (fi, &xv) in xrow.iter().enumerate() {
+                let dwrow = &mut dw[fi * fout..][..fout];
+                for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
+                    *dwv += xv * dv;
+                }
+            }
+            for (b, &dv) in db.iter_mut().zip(drow) {
+                *b += dv;
+            }
+            let dxrow = &mut dx[ni * fin..][..fin];
+            for (fi, dxv) in dxrow.iter_mut().enumerate() {
+                let wrow = &wgt[fi * fout..][..fout];
+                let mut acc = 0.0f32;
+                for (&wv, &dv) in wrow.iter().zip(drow) {
+                    acc += wv * dv;
+                }
+                *dxv = acc;
+            }
+        }
+    }
+}
+
+/// SAME-padded 3x3 stride-1 conv, production lowering: the threaded
+/// direct kernel ([`gemm::conv2d_direct`] — bit-identical to
+/// [`reference::conv2d`], and literally the same loop when serial).
+/// `out` is overwritten; the thread budget comes from `ctx`.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     x: &[f32],
@@ -20,45 +256,43 @@ pub fn conv2d(
     cout: usize,
     bias: &[f32],
     out: &mut [f32],
+    ctx: &mut ExecCtx,
 ) {
-    debug_assert_eq!(x.len(), n * h * w * cin);
-    debug_assert_eq!(wgt.len(), 9 * cin * cout);
-    debug_assert_eq!(out.len(), n * h * w * cout);
-    for orow in out.chunks_exact_mut(cout) {
-        orow.copy_from_slice(bias);
+    if ctx.use_reference {
+        return reference::conv2d(x, n, h, w, cin, wgt, cout, bias, out);
     }
-    for ni in 0..n {
-        for di in 0..3 {
-            let (i0, i1) = tap_range(di, h);
-            for dj in 0..3 {
-                let (j0, j1) = tap_range(dj, w);
-                for i in i0..i1 {
-                    let xi = i + di - 1;
-                    for j in j0..j1 {
-                        let xj = j + dj - 1;
-                        let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
-                        let orow = &mut out[((ni * h + i) * w + j) * cout..][..cout];
-                        for (ci, &xv) in xrow.iter().enumerate() {
-                            let wrow = &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
-                            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                                *o += xv * wv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
+    gemm::conv2d_direct(x, n, h, w, cin, wgt, cout, bias, out, ctx.threads);
 }
 
-/// Valid output-row range for kernel tap `d` (SAME padding, 3-tap).
-#[inline]
-fn tap_range(d: usize, len: usize) -> (usize, usize) {
-    (if d == 0 { 1 } else { 0 }, if d == 2 { len - 1 } else { len })
+/// The im2col + GEMM conv lowering (`out = im2col(x) * W + bias`);
+/// bit-identical to [`reference::conv2d`] and [`conv2d`]. Not routed by
+/// default — measured slower than the direct kernel for the study
+/// models' narrow `c_out` (the im2col materialization outweighs the
+/// GEMM's locality edge); kept tested for wide-`c_out` shapes per the
+/// module routing rule.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    ctx: &mut ExecCtx,
+) {
+    let m = n * h * w;
+    let k = 9 * cin;
+    gemm::im2col3x3(x, n, h, w, cin, &mut ctx.scratch.a);
+    gemm::sgemm(m, cout, k, &ctx.scratch.a, wgt, Init::Bias(bias), out, ctx.threads);
 }
 
-/// Conv backward w.r.t. kernel and bias; accumulates into `dw`/`db`
-/// (callers zero them).
+/// Conv backward w.r.t. kernel and bias, production lowering: the
+/// tap-threaded direct kernel with exact-zero skipping
+/// ([`gemm::conv2d_bwd_w_direct`]); accumulates into `dw`/`db` (callers
+/// zero them). Bit-identical to [`reference::conv2d_bwd_w`].
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd_w(
     x: &[f32],
@@ -70,29 +304,35 @@ pub fn conv2d_bwd_w(
     cout: usize,
     dw: &mut [f32],
     db: &mut [f32],
+    ctx: &mut ExecCtx,
 ) {
-    for ni in 0..n {
-        for di in 0..3 {
-            let (i0, i1) = tap_range(di, h);
-            for dj in 0..3 {
-                let (j0, j1) = tap_range(dj, w);
-                for i in i0..i1 {
-                    let xi = i + di - 1;
-                    for j in j0..j1 {
-                        let xj = j + dj - 1;
-                        let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
-                        let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
-                        for (ci, &xv) in xrow.iter().enumerate() {
-                            let dwrow = &mut dw[((di * 3 + dj) * cin + ci) * cout..][..cout];
-                            for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
-                                *dwv += xv * dv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
+    if ctx.use_reference {
+        return reference::conv2d_bwd_w(x, n, h, w, cin, dout, cout, dw, db);
     }
+    gemm::conv2d_bwd_w_direct(x, n, h, w, cin, dout, cout, dw, db, ctx.threads);
+}
+
+/// The im2col + GEMM backward-by-weights lowering (`dw += im2col(x)^T *
+/// dout`); bit-identical to [`reference::conv2d_bwd_w`] and
+/// [`conv2d_bwd_w`]. Not routed by default (same measured reasoning as
+/// [`conv2d_im2col`]); kept tested as the alternative.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_w_im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dout: &[f32],
+    cout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    ctx: &mut ExecCtx,
+) {
+    let m = n * h * w;
+    let k = 9 * cin;
+    gemm::im2col3x3(x, n, h, w, cin, &mut ctx.scratch.a);
+    gemm::sgemm_atb(m, cout, k, &ctx.scratch.a, dout, dw, ctx.threads);
     for drow in dout.chunks_exact(cout) {
         for (b, &dv) in db.iter_mut().zip(drow) {
             *b += dv;
@@ -100,7 +340,9 @@ pub fn conv2d_bwd_w(
     }
 }
 
-/// Conv backward w.r.t. the input; overwrites `dx`.
+/// Conv backward w.r.t. the input (`G = dout * W^T`, then the col2im
+/// gather); overwrites `dx`. Bit-identical to
+/// [`reference::conv2d_bwd_x`].
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd_x(
     wgt: &[f32],
@@ -111,35 +353,23 @@ pub fn conv2d_bwd_x(
     dout: &[f32],
     cout: usize,
     dx: &mut [f32],
+    ctx: &mut ExecCtx,
 ) {
-    dx.fill(0.0);
-    for ni in 0..n {
-        for di in 0..3 {
-            let (i0, i1) = tap_range(di, h);
-            for dj in 0..3 {
-                let (j0, j1) = tap_range(dj, w);
-                for i in i0..i1 {
-                    let xi = i + di - 1;
-                    for j in j0..j1 {
-                        let xj = j + dj - 1;
-                        let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
-                        let dxrow = &mut dx[((ni * h + xi) * w + xj) * cin..][..cin];
-                        for (ci, dxv) in dxrow.iter_mut().enumerate() {
-                            let wrow = &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
-                            let mut acc = 0.0f32;
-                            for (&wv, &dv) in wrow.iter().zip(drow) {
-                                acc += wv * dv;
-                            }
-                            *dxv += acc;
-                        }
-                    }
-                }
-            }
-        }
+    if ctx.use_reference {
+        return reference::conv2d_bwd_x(wgt, n, h, w, cin, dout, cout, dx);
     }
+    let m = n * h * w;
+    let k = 9 * cin;
+    gemm::transpose(wgt, k, cout, &mut ctx.scratch.b);
+    // size (don't re-zero) the G buffer: the Init::Zero sgemm overwrites
+    // every element before accumulating
+    ctx.scratch.a.resize(m * k, 0.0);
+    gemm::sgemm(m, k, cout, dout, &ctx.scratch.b, Init::Zero, &mut ctx.scratch.a, ctx.threads);
+    gemm::col2im3x3(&ctx.scratch.a, n, h, w, cin, dx, ctx.threads);
 }
 
-/// Dense layer: `out[n,o] = sum_i x[n,i] w[i,o] + b[o]`; overwrites `out`.
+/// Dense layer as one GEMM (`out = x * W + bias`); overwrites `out`.
+/// Bit-identical to [`reference::dense`].
 #[allow(clippy::too_many_arguments)]
 pub fn dense(
     x: &[f32],
@@ -149,21 +379,17 @@ pub fn dense(
     fout: usize,
     bias: &[f32],
     out: &mut [f32],
+    ctx: &mut ExecCtx,
 ) {
-    for ni in 0..n {
-        let orow = &mut out[ni * fout..][..fout];
-        orow.copy_from_slice(bias);
-        let xrow = &x[ni * fin..][..fin];
-        for (fi, &xv) in xrow.iter().enumerate() {
-            let wrow = &wgt[fi * fout..][..fout];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
+    if ctx.use_reference {
+        return reference::dense(x, n, fin, wgt, fout, bias, out);
     }
+    gemm::sgemm(n, fout, fin, x, wgt, Init::Bias(bias), out, ctx.threads);
 }
 
-/// Dense backward: accumulates `dw`/`db`, overwrites `dx`.
+/// Dense backward (`dw += x^T * dout`, `db += column sums`, `dx = dout *
+/// W^T`): accumulates `dw`/`db`, overwrites `dx`. Bit-identical to
+/// [`reference::dense_bwd`].
 #[allow(clippy::too_many_arguments)]
 pub fn dense_bwd(
     x: &[f32],
@@ -175,29 +401,19 @@ pub fn dense_bwd(
     dw: &mut [f32],
     db: &mut [f32],
     dx: &mut [f32],
+    ctx: &mut ExecCtx,
 ) {
-    for ni in 0..n {
-        let xrow = &x[ni * fin..][..fin];
-        let drow = &dout[ni * fout..][..fout];
-        for (fi, &xv) in xrow.iter().enumerate() {
-            let dwrow = &mut dw[fi * fout..][..fout];
-            for (dwv, &dv) in dwrow.iter_mut().zip(drow) {
-                *dwv += xv * dv;
-            }
-        }
+    if ctx.use_reference {
+        return reference::dense_bwd(x, wgt, n, fin, fout, dout, dw, db, dx);
+    }
+    gemm::sgemm_atb(n, fout, fin, x, dout, dw, ctx.threads);
+    for drow in dout.chunks_exact(fout) {
         for (b, &dv) in db.iter_mut().zip(drow) {
             *b += dv;
         }
-        let dxrow = &mut dx[ni * fin..][..fin];
-        for (fi, dxv) in dxrow.iter_mut().enumerate() {
-            let wrow = &wgt[fi * fout..][..fout];
-            let mut acc = 0.0f32;
-            for (&wv, &dv) in wrow.iter().zip(drow) {
-                acc += wv * dv;
-            }
-            *dxv = acc;
-        }
     }
+    gemm::transpose(wgt, fin, fout, &mut ctx.scratch.b);
+    gemm::sgemm(n, fin, fout, dout, &ctx.scratch.b, Init::Zero, dx, ctx.threads);
 }
 
 /// ReLU; overwrites `out` (the backward masks on this output).
@@ -446,7 +662,8 @@ mod tests {
             wgt[(4 * c + ci) * c + ci] = 1.0;
         }
         let mut out = vec![0.0f32; x.len()];
-        conv2d(&x, n, h, w, c, &wgt, c, &[0.0, 0.0], &mut out);
+        let mut ctx = ExecCtx::serial();
+        conv2d(&x, n, h, w, c, &wgt, c, &[0.0, 0.0], &mut out, &mut ctx);
         assert_eq!(out, x);
     }
 
@@ -456,7 +673,8 @@ mod tests {
         let x = vec![0.0f32; n * h * w * cin];
         let wgt = vec![0.0f32; 9 * cin * cout];
         let mut out = vec![0.0f32; n * h * w * cout];
-        conv2d(&x, n, h, w, cin, &wgt, cout, &[1.0, 2.0, 3.0], &mut out);
+        let mut ctx = ExecCtx::serial();
+        conv2d(&x, n, h, w, cin, &wgt, cout, &[1.0, 2.0, 3.0], &mut out, &mut ctx);
         assert_eq!(&out[..3], &[1.0, 2.0, 3.0]);
         assert_eq!(&out[9..12], &[1.0, 2.0, 3.0]);
     }
@@ -468,9 +686,31 @@ mod tests {
         let x = vec![1.0f32; n * h * w * cin];
         let wgt = vec![1.0f32; 9 * cin * cout];
         let mut out = vec![0.0f32; n * h * w * cout];
-        conv2d(&x, n, h, w, cin, &wgt, cout, &[0.0], &mut out);
+        let mut ctx = ExecCtx::serial();
+        conv2d(&x, n, h, w, cin, &wgt, cout, &[0.0], &mut out, &mut ctx);
         assert_eq!(out[2 * 5 + 2], 18.0, "interior: 9 taps x 2 channels");
         assert_eq!(out[0], 8.0, "corner: 4 taps x 2 channels");
+    }
+
+    #[test]
+    fn gemm_and_reference_paths_agree_through_the_ctx_switch() {
+        // the FITQ_NATIVE_REFERENCE escape hatch flows through
+        // `use_reference`; both paths must agree bitwise (the full
+        // property sweep lives in tests/native_gemm.rs)
+        let (n, h, w, cin, cout) = (2, 5, 4, 3, 6);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|i| (i as f32 * 0.37).sin()).collect();
+        let wgt: Vec<f32> = (0..9 * cin * cout).map(|i| (i as f32 * 0.11).cos()).collect();
+        let bias: Vec<f32> = (0..cout).map(|i| i as f32 * 0.25 - 0.5).collect();
+        let mut a = vec![0.0f32; n * h * w * cout];
+        let mut b = vec![0.0f32; n * h * w * cout];
+        let mut ctx = ExecCtx::serial();
+        conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut a, &mut ctx);
+        ctx.use_reference = true;
+        conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut b, &mut ctx);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

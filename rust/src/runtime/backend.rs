@@ -60,8 +60,15 @@ pub trait Backend {
 pub enum BackendSpec {
     /// PJRT over an artifact root (`artifacts/manifest.json` + HLO text).
     Pjrt(PathBuf),
-    /// The pure-Rust interpreter with its built-in model manifest.
-    Native,
+    /// The pure-Rust interpreter with its built-in model manifest and an
+    /// intra-op GEMM thread budget (`native::gemm`). The budget is a
+    /// wall-clock knob only — outputs are bit-identical at every value —
+    /// so it is deliberately *not* part of any pipeline cache digest
+    /// (those hash [`BackendSpec::name`], which ignores it).
+    Native {
+        /// Threads the GEMM layer may fan panels over (`1` = serial).
+        threads: usize,
+    },
 }
 
 impl BackendSpec {
@@ -69,7 +76,21 @@ impl BackendSpec {
     pub fn name(&self) -> &'static str {
         match self {
             BackendSpec::Pjrt(_) => "pjrt",
-            BackendSpec::Native => "native",
+            BackendSpec::Native { .. } => "native",
+        }
+    }
+
+    /// This spec with intra-op parallelism disabled — what outer
+    /// parallel phases (`run_study` sweeps, `TraceEngine::run_many`,
+    /// `experiment all`) hand their workers, so a `--jobs` fan-out never
+    /// multiplies into `jobs x threads` oversubscription. Inter-op
+    /// parallelism always wins that conflict: the outer pool already
+    /// fills the cores with independent work (DESIGN.md "Native math
+    /// kernels").
+    pub fn intra_serial(&self) -> BackendSpec {
+        match self {
+            BackendSpec::Pjrt(root) => BackendSpec::Pjrt(root.clone()),
+            BackendSpec::Native { .. } => BackendSpec::Native { threads: 1 },
         }
     }
 }
@@ -80,8 +101,19 @@ mod tests {
 
     #[test]
     fn spec_names_are_stable() {
-        // these strings are part of the pipeline cache-key contract
-        assert_eq!(BackendSpec::Native.name(), "native");
+        // these strings are part of the pipeline cache-key contract; the
+        // native thread budget must never leak into the name (cache keys
+        // are thread-count invariant because outputs are)
+        assert_eq!(BackendSpec::Native { threads: 1 }.name(), "native");
+        assert_eq!(BackendSpec::Native { threads: 8 }.name(), "native");
         assert_eq!(BackendSpec::Pjrt(PathBuf::from("x")).name(), "pjrt");
+    }
+
+    #[test]
+    fn intra_serial_strips_only_the_thread_budget() {
+        let s = BackendSpec::Native { threads: 6 }.intra_serial();
+        assert_eq!(s, BackendSpec::Native { threads: 1 });
+        let p = BackendSpec::Pjrt(PathBuf::from("a/b")).intra_serial();
+        assert_eq!(p, BackendSpec::Pjrt(PathBuf::from("a/b")));
     }
 }

@@ -75,18 +75,29 @@ impl Runtime {
     }
 
     /// The pure-Rust native backend with its built-in manifest — no
-    /// artifacts, no PJRT, study models only.
+    /// artifacts, no PJRT, study models only. The intra-op GEMM thread
+    /// budget comes from `$FITQ_NATIVE_THREADS` (default 1; `0` = one
+    /// per core); outputs are bit-identical at every budget.
     pub fn native() -> Result<Runtime> {
-        let (backend, manifest) = crate::native::NativeBackend::create();
-        Ok(Runtime::assemble(Box::new(backend), BackendSpec::Native, manifest))
+        Runtime::native_with_threads(native_threads_from_env())
+    }
+
+    /// [`Runtime::native`] with an explicit intra-op thread budget
+    /// (`0` = one thread per available core).
+    pub fn native_with_threads(threads: usize) -> Result<Runtime> {
+        let threads = resolve_native_threads(threads);
+        let (backend, manifest) = crate::native::NativeBackend::create_with_threads(threads);
+        Ok(Runtime::assemble(Box::new(backend), BackendSpec::Native { threads }, manifest))
     }
 
     /// Rebuild a runtime from a worker-portable spec (`Runtime` itself is
-    /// deliberately not `Send`; parallel phases ship the spec instead).
+    /// deliberately not `Send`; parallel phases ship the spec instead —
+    /// usually [`BackendSpec::intra_serial`]'d first, so outer `--jobs`
+    /// fan-outs don't multiply into the intra-op budget).
     pub fn from_spec(spec: &BackendSpec) -> Result<Runtime> {
         match spec {
             BackendSpec::Pjrt(root) => Runtime::pjrt(root),
-            BackendSpec::Native => Runtime::native(),
+            BackendSpec::Native { threads } => Runtime::native_with_threads(*threads),
         }
     }
 
@@ -113,6 +124,15 @@ impl Runtime {
                     Runtime::native()
                 }
             }
+        }
+    }
+
+    /// Snapshot of this runtime's intra-op thread budget (native: the
+    /// GEMM fan-out width; PJRT: always 1 — XLA owns its own threading).
+    pub fn intra_threads(&self) -> usize {
+        match &self.spec {
+            BackendSpec::Pjrt(_) => 1,
+            BackendSpec::Native { threads } => *threads,
         }
     }
 
@@ -170,6 +190,20 @@ impl Runtime {
     /// Drop compiled executables (frees backend memory between experiments).
     pub fn evict_model(&self, model: &str) {
         self.cache.borrow_mut().retain(|(m, _), _| m != model);
+    }
+}
+
+/// `$FITQ_NATIVE_THREADS` resolution: unset/unparseable = 1 (serial).
+fn native_threads_from_env() -> usize {
+    std::env::var("FITQ_NATIVE_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
+/// `0` means "one thread per available core", like `--jobs 0`.
+fn resolve_native_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
     }
 }
 

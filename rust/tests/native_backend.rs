@@ -3,6 +3,11 @@
 //! bit-exact determinism across runs and `--jobs` values, and a small
 //! end-to-end train → EF-trace loop through the `Runtime` dispatch path.
 //!
+//! The conv/dense gradchecks run against the scalar `ops::reference`
+//! oracles — the ground truth the GEMM path is pinned to at 0 ULP by
+//! `tests/native_gemm.rs`, so the checks transfer to the GEMM kernels
+//! verbatim; whole-net checks exercise the GEMM path itself.
+//!
 //! Gradcheck scheme (tolerances calibrated against a NumPy mirror of
 //! these kernels validated against the JAX reference graphs): scalar
 //! objective `L = sum(c * kernel_out)` with fixed random `c` (analytic
@@ -18,6 +23,7 @@ use fitq::coordinator::{
 use fitq::data::{EpochBatch, SynthClass};
 use fitq::native::model::{Plan, STUDY_CNNS};
 use fitq::native::net::{self, QuantArgs};
+use fitq::native::ops::{reference, ExecCtx};
 use fitq::native::{ops, quant};
 use fitq::runtime::{Arg, Runtime};
 use fitq::tensor::Pcg32;
@@ -64,13 +70,13 @@ fn gradcheck_conv2d() {
 
     let mut dw = vec![0.0f32; wgt.len()];
     let mut db = vec![0.0f32; cout];
-    ops::conv2d_bwd_w(&x, n, h, w, cin, &c, cout, &mut dw, &mut db);
+    reference::conv2d_bwd_w(&x, n, h, w, cin, &c, cout, &mut dw, &mut db);
     let mut dx = vec![0.0f32; x.len()];
-    ops::conv2d_bwd_x(&wgt, n, h, w, cin, &c, cout, &mut dx);
+    reference::conv2d_bwd_x(&wgt, n, h, w, cin, &c, cout, &mut dx);
 
     let run = |xx: &[f32], ww: &[f32], bb: &[f32]| {
         let mut out = vec![0.0f32; n * h * w * cout];
-        ops::conv2d(xx, n, h, w, cin, ww, cout, bb, &mut out);
+        reference::conv2d(xx, n, h, w, cin, ww, cout, bb, &mut out);
         dot64(&c, &out)
     };
     fd_check("conv2d d/dw", &wgt, &dw, |t| run(&x, t, &bias), H, TOL);
@@ -89,11 +95,11 @@ fn gradcheck_dense() {
     let mut dw = vec![0.0f32; wgt.len()];
     let mut db = vec![0.0f32; fout];
     let mut dx = vec![0.0f32; x.len()];
-    ops::dense_bwd(&x, &wgt, n, fin, fout, &c, &mut dw, &mut db, &mut dx);
+    reference::dense_bwd(&x, &wgt, n, fin, fout, &c, &mut dw, &mut db, &mut dx);
 
     let run = |xx: &[f32], ww: &[f32], bb: &[f32]| {
         let mut out = vec![0.0f32; n * fout];
-        ops::dense(xx, n, fin, ww, fout, bb, &mut out);
+        reference::dense(xx, n, fin, ww, fout, bb, &mut out);
         dot64(&c, &out)
     };
     fd_check("dense d/dw", &wgt, &dw, |t| run(&x, t, &bias), H, TOL);
@@ -184,12 +190,13 @@ fn gradcheck_whole_net() {
             let mut rng = Pcg32::new(18, 2);
             (0..8).map(|_| rng.below(10) as i32).collect()
         };
-        let (_, grads) = net::mean_loss_grad(&plan, &params, &x, &y, 8, None);
+        let (_, grads) =
+            net::mean_loss_grad(&plan, &params, &x, &y, 8, None, &mut ExecCtx::serial());
         fd_check(
             &format!("{} mean loss d/dparams", spec.name),
             &params,
             &grads.flat,
-            |t| net::mean_loss_grad(&plan, t, &x, &y, 8, None).0 as f64,
+            |t| net::mean_loss_grad(&plan, t, &x, &y, 8, None, &mut ExecCtx::serial()).0 as f64,
             3e-3,
             tol,
         );
@@ -206,12 +213,13 @@ fn ste_backward_is_identity_through_quant_nodes() {
     let params = plan.init_flat(5);
     let x = randv(4 * plan.sample_len(), 1.0, 19);
     let y = vec![1i32, 3, 5, 7];
-    let (l_fp, g_fp) = net::mean_loss_grad(&plan, &params, &x, &y, 4, None);
+    let mut ctx = ExecCtx::serial();
+    let (l_fp, g_fp) = net::mean_loss_grad(&plan, &params, &x, &y, 4, None, &mut ctx);
     let (lw, la) = (plan.n_weight_blocks(), plan.n_act_blocks());
     let (bits_w, bits_a) = (vec![0.0f32; lw], vec![0.0f32; la]);
     let (lo, hi) = (vec![0.0f32; la], vec![1.0f32; la]);
     let q = QuantArgs { bits_w: &bits_w, bits_a: &bits_a, act_lo: &lo, act_hi: &hi };
-    let (l_q, g_q) = net::mean_loss_grad(&plan, &params, &x, &y, 4, Some(q));
+    let (l_q, g_q) = net::mean_loss_grad(&plan, &params, &x, &y, 4, Some(q), &mut ctx);
     assert_eq!(l_fp.to_bits(), l_q.to_bits());
     assert_eq!(
         g_fp.flat.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
@@ -224,7 +232,7 @@ fn ste_backward_is_identity_through_quant_nodes() {
     let (bits_w4, bits_a4) = (vec![4.0f32; lw], vec![4.0f32; la]);
     let (lo4, hi4) = (vec![0.0f32; la], vec![4.0f32; la]);
     let q4 = QuantArgs { bits_w: &bits_w4, bits_a: &bits_a4, act_lo: &lo4, act_hi: &hi4 };
-    let (l4, g4) = net::mean_loss_grad(&plan, &params, &x, &y, 4, Some(q4));
+    let (l4, g4) = net::mean_loss_grad(&plan, &params, &x, &y, 4, Some(q4), &mut ctx);
     assert!(l4.is_finite());
     for l in 0..lw {
         let (off, size) = plan.weight_block(l);
@@ -274,6 +282,11 @@ fn train_epoch_bit_identical_across_runs_and_jobs() {
     let b = train_epoch_bits(&Runtime::native().unwrap(), 3);
     assert_eq!(a, b, "two runs must replay bit-exactly");
     assert_ne!(a, train_epoch_bits(&Runtime::native().unwrap(), 4), "seed must matter");
+
+    // the intra-op GEMM thread budget is a pure wall-clock knob: a
+    // 4-thread runtime must replay the serial bits exactly
+    let c = train_epoch_bits(&Runtime::native_with_threads(4).unwrap(), 3);
+    assert_eq!(a, c, "intra-op threading must not change a single bit");
 
     // and across --jobs values: a pool of per-seed epochs is bitwise
     // invariant to the worker count (the parallel determinism contract)

@@ -1,0 +1,263 @@
+//! GEMM-vs-reference equivalence: the native backend's im2col + GEMM
+//! kernels (`native::gemm`, the `ops` wrappers) must reproduce the
+//! scalar `ops::reference` loop nests to 0 ULP — same bits, every
+//! shape, every thread budget. This is the contract that lets the GEMM
+//! layer replace the loop nests without bumping a single pipeline cache
+//! digest (DESIGN.md "Native math kernels").
+
+use fitq::native::gemm::{self, ExecCtx};
+use fitq::native::model::{Plan, STUDY_CNNS};
+use fitq::native::net::{self, QuantArgs};
+use fitq::native::ops::{self, reference};
+use fitq::tensor::Pcg32;
+
+fn randv(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 77);
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Odd conv geometries: nothing a multiple of the MR/NR/KC tile sizes,
+/// single-sample batches, single channels, non-square images.
+const CONV_SHAPES: &[(usize, usize, usize, usize, usize)] = &[
+    (1, 2, 2, 1, 1),
+    (1, 5, 7, 3, 5),
+    (2, 4, 4, 1, 8),
+    (3, 6, 5, 2, 10),
+    (1, 3, 9, 4, 3),
+    (2, 16, 16, 8, 16), // a real study-model layer shape
+];
+
+#[test]
+fn conv2d_forward_matches_reference_bitwise() {
+    for (t, &(n, h, w, cin, cout)) in CONV_SHAPES.iter().enumerate() {
+        let x = randv(n * h * w * cin, 1.0, 100 + t as u64);
+        let wgt = randv(9 * cin * cout, 0.4, 200 + t as u64);
+        let bias = randv(cout, 0.1, 300 + t as u64);
+        let mut want = vec![0.0f32; n * h * w * cout];
+        reference::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut want);
+        for threads in [1usize, 4] {
+            let mut ctx = ExecCtx::new(threads);
+            let mut got = vec![0.0f32; want.len()];
+            ops::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut got, &mut ctx);
+            assert_eq!(bits(&got), bits(&want), "shape {t} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn conv2d_bwd_w_matches_reference_bitwise() {
+    for (t, &(n, h, w, cin, cout)) in CONV_SHAPES.iter().enumerate() {
+        // post-ReLU-like input: exact zeros exercise the zero-skip path
+        let mut x = randv(n * h * w * cin, 1.0, 400 + t as u64);
+        for v in x.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let dout = randv(n * h * w * cout, 1.0, 500 + t as u64);
+        let mut want_dw = vec![0.0f32; 9 * cin * cout];
+        let mut want_db = vec![0.0f32; cout];
+        reference::conv2d_bwd_w(&x, n, h, w, cin, &dout, cout, &mut want_dw, &mut want_db);
+        for threads in [1usize, 4] {
+            let mut ctx = ExecCtx::new(threads);
+            let mut dw = vec![0.0f32; want_dw.len()];
+            let mut db = vec![0.0f32; cout];
+            ops::conv2d_bwd_w(&x, n, h, w, cin, &dout, cout, &mut dw, &mut db, &mut ctx);
+            assert_eq!(bits(&dw), bits(&want_dw), "dw shape {t} threads {threads}");
+            assert_eq!(bits(&db), bits(&want_db), "db shape {t} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn conv2d_im2col_lowerings_match_reference_bitwise() {
+    // the alternative im2col + GEMM lowerings (not routed by default —
+    // see the measured routing rule in `native::gemm`) carry the same
+    // 0-ULP contract as the production direct kernels
+    for (t, &(n, h, w, cin, cout)) in CONV_SHAPES.iter().enumerate() {
+        let mut x = randv(n * h * w * cin, 1.0, 1200 + t as u64);
+        for v in x.iter_mut().skip(1).step_by(2) {
+            *v = v.max(0.0); // exact zeros through the skip paths
+        }
+        let wgt = randv(9 * cin * cout, 0.4, 1300 + t as u64);
+        let bias = randv(cout, 0.1, 1400 + t as u64);
+        let dout = randv(n * h * w * cout, 1.0, 1500 + t as u64);
+        let mut want = vec![0.0f32; n * h * w * cout];
+        reference::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut want);
+        let mut want_dw = vec![0.0f32; 9 * cin * cout];
+        let mut want_db = vec![0.0f32; cout];
+        reference::conv2d_bwd_w(&x, n, h, w, cin, &dout, cout, &mut want_dw, &mut want_db);
+        for threads in [1usize, 4] {
+            let mut ctx = ExecCtx::new(threads);
+            let mut got = vec![0.0f32; want.len()];
+            ops::conv2d_im2col(&x, n, h, w, cin, &wgt, cout, &bias, &mut got, &mut ctx);
+            assert_eq!(bits(&got), bits(&want), "fwd shape {t} threads {threads}");
+            let mut dw = vec![0.0f32; want_dw.len()];
+            let mut db = vec![0.0f32; cout];
+            ops::conv2d_bwd_w_im2col(&x, n, h, w, cin, &dout, cout, &mut dw, &mut db, &mut ctx);
+            assert_eq!(bits(&dw), bits(&want_dw), "dw shape {t} threads {threads}");
+            assert_eq!(bits(&db), bits(&want_db), "db shape {t} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn conv2d_bwd_x_matches_reference_bitwise() {
+    for (t, &(n, h, w, cin, cout)) in CONV_SHAPES.iter().enumerate() {
+        let wgt = randv(9 * cin * cout, 0.4, 600 + t as u64);
+        let dout = randv(n * h * w * cout, 1.0, 700 + t as u64);
+        let mut want = vec![0.0f32; n * h * w * cin];
+        reference::conv2d_bwd_x(&wgt, n, h, w, cin, &dout, cout, &mut want);
+        for threads in [1usize, 4] {
+            let mut ctx = ExecCtx::new(threads);
+            let mut dx = vec![0.0f32; want.len()];
+            ops::conv2d_bwd_x(&wgt, n, h, w, cin, &dout, cout, &mut dx, &mut ctx);
+            assert_eq!(bits(&dx), bits(&want), "shape {t} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn dense_fwd_bwd_match_reference_bitwise() {
+    // odd (batch, fin, fout) incl. batch 1 and a real fc layer shape
+    for (t, &(n, fin, fout)) in [(1usize, 3usize, 2usize), (5, 129, 10), (32, 256, 10)]
+        .iter()
+        .enumerate()
+    {
+        let x = randv(n * fin, 1.0, 800 + t as u64);
+        let wgt = randv(fin * fout, 0.3, 900 + t as u64);
+        let bias = randv(fout, 0.1, 1000 + t as u64);
+        let dout = randv(n * fout, 1.0, 1100 + t as u64);
+
+        let mut want = vec![0.0f32; n * fout];
+        reference::dense(&x, n, fin, &wgt, fout, &bias, &mut want);
+        let mut want_dw = vec![0.0f32; fin * fout];
+        let mut want_db = vec![0.0f32; fout];
+        let mut want_dx = vec![0.0f32; n * fin];
+        reference::dense_bwd(
+            &x, &wgt, n, fin, fout, &dout, &mut want_dw, &mut want_db, &mut want_dx,
+        );
+
+        for threads in [1usize, 4] {
+            let mut ctx = ExecCtx::new(threads);
+            let mut out = vec![0.0f32; want.len()];
+            ops::dense(&x, n, fin, &wgt, fout, &bias, &mut out, &mut ctx);
+            assert_eq!(bits(&out), bits(&want), "fwd shape {t} threads {threads}");
+            let mut dw = vec![0.0f32; fin * fout];
+            let mut db = vec![0.0f32; fout];
+            let mut dx = vec![0.0f32; n * fin];
+            ops::dense_bwd(&x, &wgt, n, fin, fout, &dout, &mut dw, &mut db, &mut dx, &mut ctx);
+            assert_eq!(bits(&dw), bits(&want_dw), "dw shape {t} threads {threads}");
+            assert_eq!(bits(&db), bits(&want_db), "db shape {t} threads {threads}");
+            assert_eq!(bits(&dx), bits(&want_dx), "dx shape {t} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn im2col_col2im_round_trip_is_tap_multiplicity() {
+    // col2im(im2col(x)) multiplies each pixel by its valid-tap count
+    // (9 interior / 6 edge / 4 corner); integer-valued x keeps the
+    // repeated f32 sums exact. Exercised at a real study-layer geometry.
+    let plan = Plan::new(STUDY_CNNS[2]); // cnn_cifar
+    let layer = &plan.convs[1];
+    let (n, h, w, cin) = (2usize, layer.h, layer.w, layer.c_in);
+    let mut rng = Pcg32::new(9, 4);
+    let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.below(21) as f32 - 10.0).collect();
+    let mut a = Vec::new();
+    gemm::im2col3x3(&x, n, h, w, cin, &mut a);
+    assert_eq!(a.len(), layer.gemm_m(n) * layer.gemm_k(), "plan helpers agree with lowering");
+    let mut back = vec![0.0f32; x.len()];
+    gemm::col2im3x3(&a, n, h, w, cin, &mut back, 2);
+    for i in 0..h {
+        let ri = if i == 0 || i == h - 1 { 2 } else { 3 };
+        for j in 0..w {
+            let rj = if j == 0 || j == w - 1 { 2 } else { 3 };
+            for ni in 0..n {
+                for ci in 0..cin {
+                    let at = ((ni * h + i) * w + j) * cin + ci;
+                    assert_eq!(back[at], x[at] * (ri * rj) as f32, "({ni},{i},{j},{ci})");
+                }
+            }
+        }
+    }
+}
+
+/// Whole-net A/B: a full forward + backward through every study model on
+/// the GEMM path must be bit-identical to the reference path — in plain
+/// FP mode and in QAT mode (quantized activations put exact grid values
+/// and rich cancellation patterns through the kernels).
+#[test]
+fn whole_net_gemm_equals_reference_bitwise() {
+    for spec in STUDY_CNNS {
+        let plan = Plan::new(*spec);
+        let params = plan.init_flat(13);
+        let batch = 4;
+        let x = randv(batch * plan.sample_len(), 1.0, 23);
+        let y: Vec<i32> = {
+            let mut rng = Pcg32::new(29, 6);
+            (0..batch).map(|_| rng.below(plan.spec.n_classes as u32) as i32).collect()
+        };
+        let (lw, la) = (plan.n_weight_blocks(), plan.n_act_blocks());
+        let (bits_w, bits_a) = (vec![4.0f32; lw], vec![4.0f32; la]);
+        let (lo, hi) = (vec![0.0f32; la], vec![4.0f32; la]);
+        for qat in [false, true] {
+            let q = qat.then_some(QuantArgs {
+                bits_w: &bits_w,
+                bits_a: &bits_a,
+                act_lo: &lo,
+                act_hi: &hi,
+            });
+            let mut rctx = ExecCtx::serial();
+            rctx.use_reference = true;
+            let (l_ref, g_ref) = net::mean_loss_grad(&plan, &params, &x, &y, batch, q, &mut rctx);
+            for threads in [1usize, 4] {
+                let mut ctx = ExecCtx::new(threads);
+                let (l, g) = net::mean_loss_grad(&plan, &params, &x, &y, batch, q, &mut ctx);
+                assert_eq!(
+                    l.to_bits(),
+                    l_ref.to_bits(),
+                    "{} qat={qat} threads={threads} loss",
+                    spec.name
+                );
+                assert_eq!(
+                    bits(&g.flat),
+                    bits(&g_ref.flat),
+                    "{} qat={qat} threads={threads} grads",
+                    spec.name
+                );
+                for (i, (a, b)) in g.act.iter().zip(&g_ref.act).enumerate() {
+                    assert_eq!(
+                        bits(a),
+                        bits(b),
+                        "{} qat={qat} threads={threads} act grad {i}",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Scratch-arena reuse across heterogeneous op shapes must not leak
+/// state: interleave every layer shape through one context and compare
+/// against fresh-context results.
+#[test]
+fn scratch_reuse_across_shapes_is_stateless() {
+    let mut shared = ExecCtx::serial();
+    for round in 0..2 {
+        for (t, &(n, h, w, cin, cout)) in CONV_SHAPES.iter().enumerate() {
+            let x = randv(n * h * w * cin, 1.0, 2000 + t as u64);
+            let wgt = randv(9 * cin * cout, 0.4, 2100 + t as u64);
+            let bias = randv(cout, 0.1, 2200 + t as u64);
+            let mut fresh = ExecCtx::serial();
+            let mut a = vec![0.0f32; n * h * w * cout];
+            let mut b = vec![0.0f32; n * h * w * cout];
+            ops::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut a, &mut shared);
+            ops::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut b, &mut fresh);
+            assert_eq!(bits(&a), bits(&b), "round {round} shape {t}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Validate the committed BENCH_*.json files against their schemas.
+
+CI runs this so a bench that writes malformed JSON (or a hand edit that
+drops a field) fails loudly instead of silently breaking the perf
+trajectory record. Values may be numbers or null (null = "awaiting the
+first measurement on a capable host", which the status string must
+explain); structure and types are what this enforces.
+"""
+
+import json
+import sys
+
+NUM = (int, float)
+
+
+def fail(path, msg):
+    print(f"{path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def num_or_null(path, obj, key):
+    v = obj.get(key, "<missing>")
+    if v != "<missing>" and (v is None or isinstance(v, NUM)):
+        return
+    fail(path, f"field {key!r} must be a number or null, got {v!r}")
+
+
+def check_parallel_study(path, d):
+    for key in ("bench", "status"):
+        if not isinstance(d.get(key), str):
+            fail(path, f"field {key!r} must be a string")
+    if d.get("backend") is not None and not isinstance(d["backend"], str):
+        fail(path, "field 'backend' must be a string or null")
+    if d["bench"] != "parallel_study":
+        fail(path, f"bench must be 'parallel_study', got {d['bench']!r}")
+    nte = d.get("native_train_epoch")
+    if nte is not None:
+        if not isinstance(nte, list) or not nte:
+            fail(path, "native_train_epoch must be null or a non-empty list")
+        for row in nte:
+            if not isinstance(row, dict) or not isinstance(row.get("model"), str):
+                fail(path, "native_train_epoch rows must be objects with a 'model' string")
+            for key in (
+                "scalar_ms",
+                "gemm_ms_t1",
+                "gemm_ms_t2",
+                "gemm_ms_t4",
+                "speedup_scalar_to_gemm_t1",
+                "intra_op_speedup_t1_to_t4",
+            ):
+                num_or_null(path, row, key)
+    for key, jobs in (("pool_64x2M", [1, 2, 4, 8]), ("run_study_8cfg_cold", [1, 2, 4])):
+        rows = d.get(key)
+        if not isinstance(rows, list) or not all(isinstance(r, dict) for r in rows):
+            fail(path, f"{key} must be a list of objects")
+        if [r.get("jobs") for r in rows] != jobs:
+            fail(path, f"{key} must list jobs {jobs}")
+        for r in rows:
+            num_or_null(path, r, "mean_s")
+    num_or_null(path, d, "study_speedup_j1_to_j4")
+    num_or_null(path, d, "run_study_warm_s")
+
+
+def check_fit_scoring(path, d):
+    if d.get("bench") != "fit_scoring":
+        fail(path, f"bench must be 'fit_scoring', got {d.get('bench')!r}")
+    if not isinstance(d.get("status"), str):
+        fail(path, "status must be a string")
+    shape = d.get("shape", {})
+    for key in ("weight_blocks", "act_blocks"):
+        if not isinstance(shape.get(key), int):
+            fail(path, f"shape.{key} must be an int")
+    if not isinstance(shape.get("precisions"), list):
+        fail(path, "shape.precisions must be a list")
+    for key in ("naive_ns_per_config", "table_ns_per_config", "speedup"):
+        num_or_null(path, d.get("single", {}), key)
+    batch = d.get("batch")
+    if not isinstance(batch, list) or not batch:
+        fail(path, "batch must be a non-empty list")
+    for row in batch:
+        if not isinstance(row, dict):
+            fail(path, "batch rows must be objects")
+        for key in ("n", "jobs"):
+            if not isinstance(row.get(key), int):
+                fail(path, f"batch rows need int {key!r}")
+        num_or_null(path, row, "configs_per_sec")
+    greedy = d.get("greedy", {})
+    if not isinstance(greedy.get("blocks"), int):
+        fail(path, "greedy.blocks must be an int")
+    for key in ("naive_ns", "heap_ns", "speedup"):
+        num_or_null(path, greedy, key)
+
+
+CHECKS = {
+    "BENCH_parallel_study.json": check_parallel_study,
+    "BENCH_fit_scoring.json": check_fit_scoring,
+}
+
+
+def main(argv):
+    paths = argv[1:] or list(CHECKS)
+    for path in paths:
+        name = path.rsplit("/", 1)[-1]
+        if name not in CHECKS:
+            fail(path, f"no schema registered (known: {sorted(CHECKS)})")
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            fail(path, f"unreadable or invalid JSON: {e}")
+        CHECKS[name](path, d)
+        print(f"{path}: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

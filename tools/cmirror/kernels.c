@@ -1,0 +1,935 @@
+/* C mirror of the native backend's math kernels (rust/src/native/{ops,gemm}.rs).
+ *
+ * Purpose (see tools/cmirror/README.md): the authoring container for this
+ * repository ships no Rust toolchain, so this mirror is (a) the numeric
+ * validation harness for the GEMM rewrite — it transcribes BOTH the scalar
+ * reference loop nests and the im2col+GEMM path line-for-line and asserts
+ * they agree to 0 ULP (bitwise) on random and ReLU-sparse data, through a
+ * full multi-step train loop — and (b) the measurement harness behind the
+ * "c-mirror" numbers committed in BENCH_parallel_study.json, pending the
+ * first `make bench-native` on a cargo-equipped host.
+ *
+ * Fidelity rules: float for Rust f32, double for the f64 reduction
+ * accumulators, identical loop orders, and NO fp contraction — build with
+ *   gcc -O2 -std=c11 -ffp-contract=off -pthread kernels.c -lm
+ * so `acc += a*b` rounds twice exactly like rustc emits it.
+ */
+#define _USE_MATH_DEFINES
+#include <assert.h>
+#include <math.h>
+#include <pthread.h>
+#include <stdatomic.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ---------------- blocking parameters (gemm.rs) ---------------- */
+#define MR 4
+#define NR 8
+#define KC 128
+#define MC 64
+#define PAR_FLOPS_PER_THREAD 4000000ull
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+/* splitmix-ish rng for data */
+static uint64_t rng_state = 0x12345678;
+static uint64_t rng_u64(void) {
+    uint64_t z = (rng_state += 0x9e3779b97f4a7c15ull);
+    z = (z ^ (z >> 30)) * 0xbf58476d1ce4e5b9ull;
+    z = (z ^ (z >> 27)) * 0x94d049bb133111ebull;
+    return z ^ (z >> 31);
+}
+static float rng_normal(void) {
+    /* Box-Muller, like tensor::Pcg32::normal in spirit */
+    double u1 = (rng_u64() >> 11) * (1.0 / 9007199254740992.0);
+    double u2 = (rng_u64() >> 11) * (1.0 / 9007199254740992.0);
+    if (u1 < 1e-300) u1 = 1e-300;
+    return (float)(sqrt(-2.0 * log(u1)) * cos(2.0 * 3.14159265358979323846 * u2));
+}
+
+/* ---------------- run_static mirror (parallel.rs) ---------------- */
+typedef void (*item_fn)(void *env, size_t index);
+typedef struct {
+    item_fn fn;
+    void *env;
+    size_t base, len;
+} chunk_t;
+static void *chunk_main(void *p) {
+    chunk_t *c = (chunk_t *)p;
+    for (size_t i = 0; i < c->len; i++) c->fn(c->env, c->base + i);
+    return NULL;
+}
+/* static contiguous split; caller runs chunk 0 (run_static semantics) */
+static void run_static(size_t n, size_t threads, item_fn fn, void *env) {
+    if (threads < 1) threads = 1;
+    if (threads > n) threads = n ? n : 1;
+    if (threads <= 1) {
+        for (size_t i = 0; i < n; i++) fn(env, i);
+        return;
+    }
+    chunk_t chunks[64];
+    pthread_t tids[64];
+    size_t base = 0;
+    for (size_t t = 0; t < threads; t++) {
+        size_t len = n / threads + (t < n % threads ? 1 : 0);
+        chunks[t] = (chunk_t){fn, env, base, len};
+        base += len;
+    }
+    for (size_t t = 1; t < threads; t++) pthread_create(&tids[t], NULL, chunk_main, &chunks[t]);
+    chunk_main(&chunks[0]);
+    for (size_t t = 1; t < threads; t++) pthread_join(tids[t], NULL);
+}
+
+static size_t effective_threads(size_t budget, size_t panels, uint64_t flops) {
+    size_t t = budget < 1 ? 1 : budget;
+    if (panels < 1) panels = 1;
+    if (t > panels) t = panels;
+    uint64_t by_work = 1 + flops / PAR_FLOPS_PER_THREAD;
+    if (t > by_work) t = (size_t)by_work;
+    return t;
+}
+
+/* ---------------- reference kernels (ops::reference) ---------------- */
+static void tap_range(size_t d, size_t len, size_t *lo, size_t *hi) {
+    *lo = d == 0 ? 1 : 0;
+    *hi = d == 2 ? len - 1 : len;
+}
+
+static void conv2d_ref(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                       const float *wgt, size_t cout, const float *bias, float *out) {
+    for (size_t r = 0; r < n * h * w; r++) memcpy(out + r * cout, bias, cout * sizeof(float));
+    for (size_t ni = 0; ni < n; ni++)
+        for (size_t di = 0; di < 3; di++) {
+            size_t i0, i1;
+            tap_range(di, h, &i0, &i1);
+            for (size_t dj = 0; dj < 3; dj++) {
+                size_t j0, j1;
+                tap_range(dj, w, &j0, &j1);
+                for (size_t i = i0; i < i1; i++) {
+                    size_t xi = i + di - 1;
+                    for (size_t j = j0; j < j1; j++) {
+                        size_t xj = j + dj - 1;
+                        const float *xrow = x + ((ni * h + xi) * w + xj) * cin;
+                        float *orow = out + ((ni * h + i) * w + j) * cout;
+                        for (size_t ci = 0; ci < cin; ci++) {
+                            const float *wrow = wgt + ((di * 3 + dj) * cin + ci) * cout;
+                            float xv = xrow[ci];
+                            for (size_t o = 0; o < cout; o++) orow[o] += xv * wrow[o];
+                        }
+                    }
+                }
+            }
+        }
+}
+
+static void conv2d_bwd_w_ref(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                             const float *dout, size_t cout, float *dw, float *db) {
+    for (size_t ni = 0; ni < n; ni++)
+        for (size_t di = 0; di < 3; di++) {
+            size_t i0, i1;
+            tap_range(di, h, &i0, &i1);
+            for (size_t dj = 0; dj < 3; dj++) {
+                size_t j0, j1;
+                tap_range(dj, w, &j0, &j1);
+                for (size_t i = i0; i < i1; i++) {
+                    size_t xi = i + di - 1;
+                    for (size_t j = j0; j < j1; j++) {
+                        size_t xj = j + dj - 1;
+                        const float *xrow = x + ((ni * h + xi) * w + xj) * cin;
+                        const float *drow = dout + ((ni * h + i) * w + j) * cout;
+                        for (size_t ci = 0; ci < cin; ci++) {
+                            float *dwrow = dw + ((di * 3 + dj) * cin + ci) * cout;
+                            float xv = xrow[ci];
+                            for (size_t o = 0; o < cout; o++) dwrow[o] += xv * drow[o];
+                        }
+                    }
+                }
+            }
+        }
+    for (size_t r = 0; r < n * h * w; r++)
+        for (size_t o = 0; o < cout; o++) db[o] += dout[r * cout + o];
+}
+
+static void conv2d_bwd_x_ref(const float *wgt, size_t n, size_t h, size_t w, size_t cin,
+                             const float *dout, size_t cout, float *dx) {
+    memset(dx, 0, n * h * w * cin * sizeof(float));
+    for (size_t ni = 0; ni < n; ni++)
+        for (size_t di = 0; di < 3; di++) {
+            size_t i0, i1;
+            tap_range(di, h, &i0, &i1);
+            for (size_t dj = 0; dj < 3; dj++) {
+                size_t j0, j1;
+                tap_range(dj, w, &j0, &j1);
+                for (size_t i = i0; i < i1; i++) {
+                    size_t xi = i + di - 1;
+                    for (size_t j = j0; j < j1; j++) {
+                        size_t xj = j + dj - 1;
+                        const float *drow = dout + ((ni * h + i) * w + j) * cout;
+                        float *dxrow = dx + ((ni * h + xi) * w + xj) * cin;
+                        for (size_t ci = 0; ci < cin; ci++) {
+                            const float *wrow = wgt + ((di * 3 + dj) * cin + ci) * cout;
+                            float acc = 0.0f;
+                            for (size_t o = 0; o < cout; o++) acc += wrow[o] * drow[o];
+                            dxrow[ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+}
+
+static void dense_ref(const float *x, size_t n, size_t fin, const float *wgt, size_t fout,
+                      const float *bias, float *out) {
+    for (size_t ni = 0; ni < n; ni++) {
+        float *orow = out + ni * fout;
+        memcpy(orow, bias, fout * sizeof(float));
+        const float *xrow = x + ni * fin;
+        for (size_t fi = 0; fi < fin; fi++) {
+            const float *wrow = wgt + fi * fout;
+            float xv = xrow[fi];
+            for (size_t o = 0; o < fout; o++) orow[o] += xv * wrow[o];
+        }
+    }
+}
+
+static void dense_bwd_ref(const float *x, const float *wgt, size_t n, size_t fin, size_t fout,
+                          const float *dout, float *dw, float *db, float *dx) {
+    for (size_t ni = 0; ni < n; ni++) {
+        const float *xrow = x + ni * fin;
+        const float *drow = dout + ni * fout;
+        for (size_t fi = 0; fi < fin; fi++) {
+            float *dwrow = dw + fi * fout;
+            float xv = xrow[fi];
+            for (size_t o = 0; o < fout; o++) dwrow[o] += xv * drow[o];
+        }
+        for (size_t o = 0; o < fout; o++) db[o] += drow[o];
+        float *dxrow = dx + ni * fin;
+        for (size_t fi = 0; fi < fin; fi++) {
+            const float *wrow = wgt + fi * fout;
+            float acc = 0.0f;
+            for (size_t o = 0; o < fout; o++) acc += wrow[o] * drow[o];
+            dxrow[fi] = acc;
+        }
+    }
+}
+
+/* ---------------- gemm path (gemm.rs) ---------------- */
+static void im2col3x3(const float *x, size_t n, size_t h, size_t w, size_t cin, float *out) {
+    size_t k = 9 * cin;
+    memset(out, 0, n * h * w * k * sizeof(float));
+    for (size_t ni = 0; ni < n; ni++)
+        for (size_t i = 0; i < h; i++)
+            for (size_t j = 0; j < w; j++) {
+                float *row = out + ((ni * h + i) * w + j) * k;
+                for (size_t di = 0; di < 3; di++) {
+                    size_t ii = i + di;
+                    if (ii < 1 || ii - 1 >= h) continue;
+                    size_t xi = ii - 1;
+                    for (size_t dj = 0; dj < 3; dj++) {
+                        size_t jj = j + dj;
+                        if (jj < 1 || jj - 1 >= w) continue;
+                        size_t xj = jj - 1;
+                        memcpy(row + (di * 3 + dj) * cin,
+                               x + ((ni * h + xi) * w + xj) * cin, cin * sizeof(float));
+                    }
+                }
+            }
+}
+
+typedef struct {
+    const float *g;
+    size_t h, w, cin;
+    float *dx;
+} col2im_env;
+static void col2im_item(void *envp, size_t ni) {
+    col2im_env *e = (col2im_env *)envp;
+    size_t h = e->h, w = e->w, cin = e->cin, k = 9 * cin;
+    float *panel = e->dx + ni * h * w * cin;
+    for (size_t xi = 0; xi < h; xi++)
+        for (size_t xj = 0; xj < w; xj++) {
+            float *drow = panel + (xi * w + xj) * cin;
+            memset(drow, 0, cin * sizeof(float));
+            for (size_t di = 0; di < 3; di++) {
+                if (xi + 1 < di || xi + 1 - di >= h) continue;
+                size_t i = xi + 1 - di;
+                for (size_t dj = 0; dj < 3; dj++) {
+                    if (xj + 1 < dj || xj + 1 - dj >= w) continue;
+                    size_t j = xj + 1 - dj;
+                    const float *grow =
+                        e->g + ((ni * h + i) * w + j) * k + (di * 3 + dj) * cin;
+                    for (size_t ci = 0; ci < cin; ci++) drow[ci] += grow[ci];
+                }
+            }
+        }
+}
+static void col2im3x3(const float *g, size_t n, size_t h, size_t w, size_t cin, float *dx,
+                      size_t threads) {
+    size_t k = 9 * cin;
+    threads = effective_threads(threads, n, 2ull * n * h * w * k);
+    col2im_env env = {g, h, w, cin, dx};
+    run_static(n, threads, col2im_item, &env);
+}
+
+static void transpose_mat(const float *src, size_t rows, size_t cols, float *out) {
+    for (size_t r = 0; r < rows; r++)
+        for (size_t c = 0; c < cols; c++) out[c * rows + r] = src[r * cols + c];
+}
+
+/* rank-1 sgemm: per C row, bias/zero init then k-outer rank-1 updates
+ * (ascending k per element; zero-skip on A — bit-exact, see gemm.rs);
+ * M-panels of MC rows fanned over threads */
+typedef struct {
+    size_t m, n, k;
+    const float *a, *b, *bias;
+    float *c;
+} sgemm_env;
+static void sgemm_item(void *envp, size_t pi) {
+    sgemm_env *e = (sgemm_env *)envp;
+    size_t row0 = pi * MC;
+    size_t rows = e->m - row0 < MC ? e->m - row0 : MC;
+    size_t n = e->n, k = e->k;
+    const float *a = e->a, *b = e->b, *bias = e->bias;
+    float *c = e->c;
+    for (size_t r = row0; r < row0 + rows; r++) {
+        float *crow = c + r * n;
+        if (bias)
+            memcpy(crow, bias, n * sizeof(float));
+        else
+            memset(crow, 0, n * sizeof(float));
+        const float *arow = a + r * k;
+        for (size_t p = 0; p < k; p++) {
+            float av = arow[p];
+            if (av == 0.0f) continue;
+            const float *brow = b + p * n;
+            for (size_t o = 0; o < n; o++) crow[o] += av * brow[o];
+        }
+    }
+}
+static void sgemm(size_t m, size_t n, size_t k, const float *a, const float *b,
+                  const float *bias, float *c, size_t threads) {
+    if (m == 0 || n == 0) return;
+    size_t n_panels = (m + MC - 1) / MC;
+    threads = effective_threads(threads, n_panels, 2ull * m * n * k);
+    sgemm_env env = {m, n, k, a, b, bias, c};
+    run_static(n_panels, threads, sgemm_item, &env);
+}
+
+/* direct conv forward, threaded over contiguous image ranges (each range
+ * runs the exact reference loop; disjoint out slices) */
+typedef struct {
+    const float *x, *wgt, *bias;
+    size_t n, h, w, cin, cout, per;
+    float *out;
+} dconv_env;
+static void dconv_item(void *envp, size_t t) {
+    dconv_env *e = (dconv_env *)envp;
+    size_t n0 = t * e->per;
+    size_t nn = e->n - n0 < e->per ? e->n - n0 : e->per;
+    conv2d_ref(e->x + n0 * e->h * e->w * e->cin, nn, e->h, e->w, e->cin, e->wgt, e->cout,
+               e->bias, e->out + n0 * e->h * e->w * e->cout);
+}
+static void conv2d_direct(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                          const float *wgt, size_t cout, const float *bias, float *out,
+                          size_t threads) {
+    threads = effective_threads(threads, n, 2ull * n * h * w * 9 * cin * cout);
+    if (threads <= 1) {
+        conv2d_ref(x, n, h, w, cin, wgt, cout, bias, out);
+        return;
+    }
+    size_t per = (n + threads - 1) / threads;
+    size_t chunks = (n + per - 1) / per;
+    dconv_env env = {x, wgt, bias, n, h, w, cin, cout, per, out};
+    run_static(chunks, threads, dconv_item, &env);
+}
+
+/* direct conv bwd_w, threaded over the 9 kernel taps: each tap owns the
+ * contiguous dw rows [(di*3+dj)*cin, +cin) so writes never collide; per
+ * dw element the (ni, i, j) scan order is the reference order */
+typedef struct {
+    const float *x, *dout;
+    size_t n, h, w, cin, cout;
+    float *dw;
+} dwt_env;
+static void dwt_item(void *envp, size_t tap) {
+    dwt_env *e = (dwt_env *)envp;
+    size_t di = tap / 3, dj = tap % 3;
+    size_t h = e->h, w = e->w, cin = e->cin, cout = e->cout;
+    size_t i0, i1, j0, j1;
+    tap_range(di, h, &i0, &i1);
+    tap_range(dj, w, &j0, &j1);
+    for (size_t ni = 0; ni < e->n; ni++) {
+        const float *x = e->x + ni * h * w * cin;
+        const float *dout = e->dout + ni * h * w * cout;
+        for (size_t i = i0; i < i1; i++) {
+            size_t xi = i + di - 1;
+            for (size_t j = j0; j < j1; j++) {
+                size_t xj = j + dj - 1;
+                const float *xrow = x + (xi * w + xj) * cin;
+                const float *drow = dout + (i * w + j) * cout;
+                for (size_t ci = 0; ci < cin; ci++) {
+                    float xv = xrow[ci];
+                    if (xv == 0.0f) continue;
+                    float *dwrow = e->dw + ((di * 3 + dj) * cin + ci) * cout;
+                    for (size_t o = 0; o < cout; o++) dwrow[o] += xv * drow[o];
+                }
+            }
+        }
+    }
+}
+static void conv2d_bwd_w_direct(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                                const float *dout, size_t cout, float *dw, float *db,
+                                size_t threads) {
+    threads = effective_threads(threads, 9, 2ull * n * h * w * 9 * cin * cout);
+    dwt_env env = {x, dout, n, h, w, cin, cout, dw};
+    run_static(9, threads, dwt_item, &env);
+    for (size_t r = 0; r < n * h * w; r++)
+        for (size_t o = 0; o < cout; o++) db[o] += dout[r * cout + o];
+}
+
+typedef struct {
+    size_t m, n, k, panel_rows;
+    const float *a, *d;
+    float *dw;
+} atb_env;
+static void atb_item(void *envp, size_t pi) {
+    atb_env *e = (atb_env *)envp;
+    size_t k0 = pi * e->panel_rows;
+    size_t krows = e->k - k0 < e->panel_rows ? e->k - k0 : e->panel_rows;
+    for (size_t mi = 0; mi < e->m; mi++) {
+        const float *arow = e->a + mi * e->k + k0;
+        const float *drow = e->d + mi * e->n;
+        for (size_t kk = 0; kk < krows; kk++) {
+            float av = arow[kk];
+            if (av == 0.0f) continue;
+            float *dwrow = e->dw + (k0 + kk) * e->n;
+            for (size_t o = 0; o < e->n; o++) dwrow[o] += av * drow[o];
+        }
+    }
+}
+static void sgemm_atb(size_t m, size_t n, size_t k, const float *a, const float *d, float *dw,
+                      size_t threads) {
+    if (k == 0 || n == 0) return;
+    size_t mc = MC < k ? MC : k;
+    size_t n_panels = (k + mc - 1) / mc;
+    threads = effective_threads(threads, n_panels, 2ull * m * n * k);
+    size_t panel_rows = (k + threads - 1) / threads;
+    size_t chunks = (k + panel_rows - 1) / panel_rows;
+    atb_env env = {m, n, k, panel_rows, a, d, dw};
+    run_static(chunks, threads, atb_item, &env);
+}
+
+/* gemm-path op wrappers (scratch passed in) */
+static void conv2d_gemm(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                        const float *wgt, size_t cout, const float *bias, float *out,
+                        float *scratch_a, size_t threads) {
+    im2col3x3(x, n, h, w, cin, scratch_a);
+    sgemm(n * h * w, cout, 9 * cin, scratch_a, wgt, bias, out, threads);
+}
+static void conv2d_bwd_w_gemm(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                              const float *dout, size_t cout, float *dw, float *db,
+                              float *scratch_a, size_t threads) {
+    im2col3x3(x, n, h, w, cin, scratch_a);
+    sgemm_atb(n * h * w, cout, 9 * cin, scratch_a, dout, dw, threads);
+    for (size_t r = 0; r < n * h * w; r++)
+        for (size_t o = 0; o < cout; o++) db[o] += dout[r * cout + o];
+}
+static void conv2d_bwd_x_gemm(const float *wgt, size_t n, size_t h, size_t w, size_t cin,
+                              const float *dout, size_t cout, float *dx, float *scratch_a,
+                              float *scratch_b, size_t threads) {
+    size_t k = 9 * cin;
+    transpose_mat(wgt, k, cout, scratch_b);
+    sgemm(n * h * w, k, cout, dout, scratch_b, NULL, scratch_a, threads);
+    col2im3x3(scratch_a, n, h, w, cin, dx, threads);
+}
+static void dense_gemm(const float *x, size_t n, size_t fin, const float *wgt, size_t fout,
+                       const float *bias, float *out, size_t threads) {
+    sgemm(n, fout, fin, x, wgt, bias, out, threads);
+}
+static void dense_bwd_gemm(const float *x, const float *wgt, size_t n, size_t fin, size_t fout,
+                           const float *dout, float *dw, float *db, float *dx,
+                           float *scratch_b, size_t threads) {
+    sgemm_atb(n, fout, fin, x, dout, dw, threads);
+    for (size_t r = 0; r < n; r++)
+        for (size_t o = 0; o < fout; o++) db[o] += dout[r * fout + o];
+    transpose_mat(wgt, fin, fout, scratch_b);
+    sgemm(n, fin, fout, dout, scratch_b, NULL, dx, threads);
+}
+
+/* ---------------- elementwise / pool / loss (ops.rs, unchanged) -------- */
+static void relu(const float *x, float *out, size_t len) {
+    for (size_t i = 0; i < len; i++) out[i] = x[i] > 0.0f ? x[i] : 0.0f;
+}
+static void relu_bwd_inplace(const float *act, float *da, size_t len) {
+    for (size_t i = 0; i < len; i++)
+        if (act[i] <= 0.0f) da[i] = 0.0f;
+}
+static void max_pool(const float *x, size_t n, size_t h, size_t w, size_t c, float *out,
+                     uint8_t *idx) {
+    size_t oh = h / 2, ow = w / 2;
+    for (size_t ni = 0; ni < n; ni++)
+        for (size_t oi = 0; oi < oh; oi++)
+            for (size_t oj = 0; oj < ow; oj++) {
+                size_t obase = ((ni * oh + oi) * ow + oj) * c;
+                for (size_t ci = 0; ci < c; ci++) {
+                    float best = -INFINITY;
+                    uint8_t bk = 0;
+                    for (size_t kk = 0; kk < 4; kk++) {
+                        size_t di = kk / 2, dj = kk % 2;
+                        float v = x[((ni * h + 2 * oi + di) * w + 2 * oj + dj) * c + ci];
+                        if (v > best) {
+                            best = v;
+                            bk = (uint8_t)kk;
+                        }
+                    }
+                    out[obase + ci] = best;
+                    idx[obase + ci] = bk;
+                }
+            }
+}
+static void max_pool_bwd(const float *dout, const uint8_t *idx, size_t n, size_t h, size_t w,
+                         size_t c, float *dx) {
+    memset(dx, 0, n * h * w * c * sizeof(float));
+    size_t oh = h / 2, ow = w / 2;
+    for (size_t ni = 0; ni < n; ni++)
+        for (size_t oi = 0; oi < oh; oi++)
+            for (size_t oj = 0; oj < ow; oj++) {
+                size_t obase = ((ni * oh + oi) * ow + oj) * c;
+                for (size_t ci = 0; ci < c; ci++) {
+                    size_t kk = idx[obase + ci];
+                    size_t di = kk / 2, dj = kk % 2;
+                    dx[((ni * h + 2 * oi + di) * w + 2 * oj + dj) * c + ci] +=
+                        dout[obase + ci];
+                }
+            }
+}
+static void softmax_xent(const float *logits, const int32_t *labels, size_t n, size_t ncls,
+                         float *per) {
+    for (size_t ni = 0; ni < n; ni++) {
+        const float *row = logits + ni * ncls;
+        float mx = -INFINITY;
+        for (size_t i = 0; i < ncls; i++)
+            if (row[i] > mx) mx = row[i];
+        double s = 0.0;
+        for (size_t i = 0; i < ncls; i++) s += exp((double)(row[i] - mx));
+        float lse = (float)log(s) + mx;
+        per[ni] = lse - row[labels[ni]];
+    }
+}
+static void softmax_xent_bwd(const float *logits, const int32_t *labels, size_t n, size_t ncls,
+                             const float *dper, float *dl) {
+    for (size_t ni = 0; ni < n; ni++) {
+        const float *row = logits + ni * ncls;
+        float *drow = dl + ni * ncls;
+        float mx = -INFINITY;
+        for (size_t i = 0; i < ncls; i++)
+            if (row[i] > mx) mx = row[i];
+        double s = 0.0;
+        for (size_t i = 0; i < ncls; i++) s += exp((double)(row[i] - mx));
+        float inv = (float)(1.0 / s);
+        for (size_t i = 0; i < ncls; i++) drow[i] = expf(row[i] - mx) * inv * dper[ni];
+        drow[labels[ni]] -= dper[ni];
+    }
+}
+static void adam_update(float *params, float *m, float *v, const float *g, size_t len,
+                        float step, float lr) {
+    const float B1 = 0.9f, B2 = 0.999f, EPS = 1e-8f;
+    float c1 = 1.0f - powf(B1, step);
+    float c2 = 1.0f - powf(B2, step);
+    for (size_t i = 0; i < len; i++) {
+        float gi = g[i];
+        m[i] = B1 * m[i] + (1.0f - B1) * gi;
+        v[i] = B2 * v[i] + (1.0f - B2) * gi * gi;
+        float mhat = m[i] / c1;
+        float vhat = v[i] / c2;
+        params[i] -= lr * mhat / (sqrtf(vhat) + EPS);
+    }
+}
+
+/* ---------------- a study CNN (model.rs cnn_mnist / cnn_cifar) --------- */
+typedef struct {
+    const char *name;
+    size_t h, w, cin;
+    size_t filters[3];
+    size_t ncls;
+} cnn_t;
+/* non-BN study models, pool after conv0 and conv1 (model.rs STUDY_CNNS) */
+static const cnn_t CNN_MNIST = {"cnn_mnist", 16, 16, 1, {8, 16, 16}, 10};
+static const cnn_t CNN_CIFAR = {"cnn_cifar", 32, 32, 3, {16, 32, 32}, 10};
+
+typedef struct {
+    size_t h, w, cin, cout, w_off, b_off;
+    int pooled;
+} layer_t;
+typedef struct {
+    cnn_t spec;
+    layer_t conv[3];
+    size_t feat, fc_w_off, fc_b_off, n_params;
+} plan_t;
+
+static plan_t plan_new(const cnn_t *spec) {
+    plan_t p;
+    p.spec = *spec;
+    size_t h = spec->h, w = spec->w, cin = spec->cin, off = 0;
+    for (int i = 0; i < 3; i++) {
+        size_t cout = spec->filters[i];
+        p.conv[i] = (layer_t){h, w, cin, cout, off, off + 9 * cin * cout, i < 2};
+        off += 9 * cin * cout + cout;
+        if (p.conv[i].pooled) {
+            h /= 2;
+            w /= 2;
+        }
+        cin = cout;
+    }
+    p.feat = h * w * cin;
+    p.fc_w_off = off;
+    off += p.feat * spec->ncls;
+    p.fc_b_off = off;
+    off += spec->ncls;
+    p.n_params = off;
+    return p;
+}
+
+/* tape buffers sized for the largest use; one set per net */
+typedef struct {
+    float *xin[3], *act[3], *pooled[3];
+    uint8_t *pidx[3];
+    float *feat, *logits;
+    float *scratch_a, *scratch_b, *buf1, *buf2;
+} tape_t;
+
+static float *fmalloc(size_t n) {
+    float *p = (float *)malloc(n * sizeof(float));
+    assert(p);
+    return p;
+}
+
+static tape_t tape_new(const plan_t *p, size_t batch) {
+    tape_t t;
+    size_t max_a = 0, max_b = 0;
+    for (int i = 0; i < 3; i++) {
+        const layer_t *l = &p->conv[i];
+        size_t m = batch * l->h * l->w, k = 9 * l->cin;
+        if (m * k > max_a) max_a = m * k;
+        if (k * l->cout > max_b) max_b = k * l->cout;
+        t.xin[i] = fmalloc(batch * l->h * l->w * l->cin);
+        t.act[i] = fmalloc(batch * l->h * l->w * l->cout);
+        t.pooled[i] = fmalloc(batch * l->h * l->w * l->cout);
+        t.pidx[i] = (uint8_t *)malloc(batch * l->h * l->w * l->cout);
+    }
+    if (p->feat * p->spec.ncls > max_b) max_b = p->feat * p->spec.ncls;
+    t.feat = fmalloc(batch * p->feat);
+    t.logits = fmalloc(batch * p->spec.ncls);
+    t.scratch_a = fmalloc(max_a);
+    t.scratch_b = fmalloc(max_b);
+    size_t max_hw = batch * p->conv[0].h * p->conv[0].w * 32;
+    t.buf1 = fmalloc(max_hw);
+    t.buf2 = fmalloc(max_hw);
+    return t;
+}
+
+/* forward + backward + mean CE loss; gemm=0 -> reference kernels */
+static float loss_grad(const plan_t *p, const float *params, const float *x,
+                       const int32_t *y, size_t batch, float *gflat, int gemm,
+                       size_t threads, tape_t *t) {
+    size_t ncls = p->spec.ncls;
+    memset(gflat, 0, p->n_params * sizeof(float));
+    /* forward */
+    memcpy(t->xin[0], x, batch * p->conv[0].h * p->conv[0].w * p->conv[0].cin * sizeof(float));
+    for (int i = 0; i < 3; i++) {
+        const layer_t *l = &p->conv[i];
+        float *z = t->buf1;
+        if (gemm)
+            conv2d_direct(t->xin[i], batch, l->h, l->w, l->cin, params + l->w_off, l->cout,
+                          params + l->b_off, z, threads);
+        else
+            conv2d_ref(t->xin[i], batch, l->h, l->w, l->cin, params + l->w_off, l->cout,
+                       params + l->b_off, z);
+        relu(z, t->act[i], batch * l->h * l->w * l->cout);
+        const float *post = t->act[i];
+        float *next = (i < 2) ? t->xin[i + 1] : t->feat;
+        if (l->pooled) {
+            max_pool(post, batch, l->h, l->w, l->cout, t->pooled[i], t->pidx[i]);
+            memcpy(next, t->pooled[i],
+                   batch * (l->h / 2) * (l->w / 2) * l->cout * sizeof(float));
+        } else {
+            memcpy(next, post, batch * l->h * l->w * l->cout * sizeof(float));
+        }
+    }
+    if (gemm)
+        dense_gemm(t->feat, batch, p->feat, params + p->fc_w_off, ncls, params + p->fc_b_off,
+                   t->logits, threads);
+    else
+        dense_ref(t->feat, batch, p->feat, params + p->fc_w_off, ncls, params + p->fc_b_off,
+                  t->logits);
+    /* loss */
+    float per[512];
+    softmax_xent(t->logits, y, batch, ncls, per);
+    double lsum = 0.0;
+    for (size_t i = 0; i < batch; i++) lsum += (double)per[i];
+    float loss = (float)(lsum / (double)batch);
+    /* backward */
+    float dper[512];
+    for (size_t i = 0; i < batch; i++) dper[i] = 1.0f / (float)batch;
+    float *dlogits = t->buf1;
+    softmax_xent_bwd(t->logits, y, batch, ncls, dper, dlogits);
+    float *da = t->buf2;
+    if (gemm)
+        dense_bwd_gemm(t->feat, params + p->fc_w_off, batch, p->feat, ncls, dlogits,
+                       gflat + p->fc_w_off, gflat + p->fc_b_off, da, t->scratch_b, threads);
+    else
+        dense_bwd_ref(t->feat, params + p->fc_w_off, batch, p->feat, ncls, dlogits,
+                      gflat + p->fc_w_off, gflat + p->fc_b_off, da);
+    for (int i = 2; i >= 0; i--) {
+        const layer_t *l = &p->conv[i];
+        if (l->pooled) {
+            max_pool_bwd(da, t->pidx[i], batch, l->h, l->w, l->cout, t->buf1);
+            float *tmp = da;
+            da = t->buf1;
+            t->buf1 = tmp;
+        }
+        relu_bwd_inplace(t->act[i], da, batch * l->h * l->w * l->cout);
+        if (gemm)
+            conv2d_bwd_w_direct(t->xin[i], batch, l->h, l->w, l->cin, da, l->cout,
+                                gflat + l->w_off, gflat + l->b_off, threads);
+        else
+            conv2d_bwd_w_ref(t->xin[i], batch, l->h, l->w, l->cin, da, l->cout,
+                             gflat + l->w_off, gflat + l->b_off);
+        if (i > 0) {
+            if (gemm)
+                conv2d_bwd_x_gemm(params + l->w_off, batch, l->h, l->w, l->cin, da, l->cout,
+                                  t->buf1, t->scratch_a, t->scratch_b, threads);
+            else
+                conv2d_bwd_x_ref(params + l->w_off, batch, l->h, l->w, l->cin, da, l->cout,
+                                 t->buf1);
+            float *tmp = da;
+            da = t->buf1;
+            t->buf1 = tmp;
+        }
+    }
+    if (da != t->buf2) { /* keep buffer identity stable across calls */
+        float *tmp = t->buf2;
+        t->buf2 = da;
+        t->buf1 = tmp;
+    }
+    return loss;
+}
+
+/* K=10 scanned Adam steps (entries.rs run_train), B=32 */
+static float train_epoch(const plan_t *p, float *params, float *m, float *v, float *step,
+                         const float *xs, const int32_t *ys, size_t K, size_t B, int gemm,
+                         size_t threads, tape_t *t, float *gflat) {
+    size_t sample = p->conv[0].h * p->conv[0].w * p->conv[0].cin;
+    double loss_sum = 0.0;
+    for (size_t ki = 0; ki < K; ki++) {
+        float loss = loss_grad(p, params, xs + ki * B * sample, ys + ki * B, B, gflat, gemm,
+                               threads, t);
+        *step += 1.0f;
+        adam_update(params, m, v, gflat, p->n_params, *step, 1e-2f);
+        loss_sum += (double)loss;
+    }
+    return (float)(loss_sum / (double)K);
+}
+
+static void he_init(const plan_t *p, float *params) {
+    memset(params, 0, p->n_params * sizeof(float));
+    for (int i = 0; i < 3; i++) {
+        const layer_t *l = &p->conv[i];
+        float std = (float)sqrt(2.0 / (9.0 * (double)l->cin));
+        for (size_t j = 0; j < 9 * l->cin * l->cout; j++)
+            params[l->w_off + j] = rng_normal() * std;
+    }
+    float std = (float)sqrt(2.0 / (double)p->feat);
+    for (size_t j = 0; j < p->feat * p->spec.ncls; j++)
+        params[p->fc_w_off + j] = rng_normal() * std;
+}
+
+/* ---------------- equivalence checks ---------------- */
+static size_t check_op_equivalence(void) {
+    size_t fails = 0;
+    /* odd shapes straddling the tile sizes, matching tests/native_gemm.rs */
+    size_t shapes[][5] = {{1, 2, 2, 1, 1},  {1, 5, 7, 3, 5},  {2, 4, 4, 1, 8},
+                          {3, 6, 5, 2, 10}, {1, 3, 9, 4, 3},  {2, 16, 16, 8, 16}};
+    for (size_t s = 0; s < 6; s++) {
+        size_t n = shapes[s][0], h = shapes[s][1], w = shapes[s][2], cin = shapes[s][3],
+               cout = shapes[s][4];
+        size_t xl = n * h * w * cin, ol = n * h * w * cout, wl = 9 * cin * cout;
+        float *x = fmalloc(xl), *wgt = fmalloc(wl), *bias = fmalloc(cout);
+        float *dout = fmalloc(ol);
+        for (size_t i = 0; i < xl; i++) {
+            x[i] = rng_normal();
+            if ((i % 3) == 0) x[i] = x[i] > 0 ? x[i] : 0.0f; /* exact zeros */
+        }
+        for (size_t i = 0; i < wl; i++) wgt[i] = rng_normal() * 0.4f;
+        for (size_t i = 0; i < cout; i++) bias[i] = rng_normal() * 0.1f;
+        for (size_t i = 0; i < ol; i++) dout[i] = rng_normal();
+        float *scr_a = fmalloc(n * h * w * 9 * cin), *scr_b = fmalloc(wl);
+        float *o1 = fmalloc(ol), *o2 = fmalloc(ol);
+        for (size_t th = 1; th <= 4; th += 3) {
+            conv2d_ref(x, n, h, w, cin, wgt, cout, bias, o1);
+            conv2d_gemm(x, n, h, w, cin, wgt, cout, bias, o2, scr_a, th);
+            if (memcmp(o1, o2, ol * sizeof(float))) {
+                printf("FAIL conv2d fwd shape %zu threads %zu\n", s, th);
+                fails++;
+            }
+            float *dw1 = fmalloc(wl), *dw2 = fmalloc(wl);
+            float *db1 = fmalloc(cout), *db2 = fmalloc(cout);
+            memset(dw1, 0, wl * 4);
+            memset(dw2, 0, wl * 4);
+            memset(db1, 0, cout * 4);
+            memset(db2, 0, cout * 4);
+            conv2d_bwd_w_ref(x, n, h, w, cin, dout, cout, dw1, db1);
+            conv2d_bwd_w_gemm(x, n, h, w, cin, dout, cout, dw2, db2, scr_a, th);
+            if (memcmp(dw1, dw2, wl * 4) || memcmp(db1, db2, cout * 4)) {
+                printf("FAIL conv2d bwd_w shape %zu threads %zu\n", s, th);
+                fails++;
+            }
+            float *dx1 = fmalloc(xl), *dx2 = fmalloc(xl);
+            conv2d_bwd_x_ref(wgt, n, h, w, cin, dout, cout, dx1);
+            conv2d_bwd_x_gemm(wgt, n, h, w, cin, dout, cout, dx2, scr_a, scr_b, th);
+            if (memcmp(dx1, dx2, xl * 4)) {
+                printf("FAIL conv2d bwd_x shape %zu threads %zu\n", s, th);
+                fails++;
+            }
+            free(dw1);
+            free(dw2);
+            free(db1);
+            free(db2);
+            free(dx1);
+            free(dx2);
+        }
+        free(x);
+        free(wgt);
+        free(bias);
+        free(dout);
+        free(scr_a);
+        free(scr_b);
+        free(o1);
+        free(o2);
+    }
+    return fails;
+}
+
+static size_t check_train_equivalence(const cnn_t *spec) {
+    /* full K=10 x several epochs train loop: params must stay bitwise
+     * identical between the reference and GEMM paths (any 1-ULP drift
+     * would compound and be caught here) */
+    plan_t p = plan_new(spec);
+    size_t B = 32, K = 10, sample = spec->h * spec->w * spec->cin;
+    tape_t t1 = tape_new(&p, B), t2 = tape_new(&p, B);
+    float *pa = fmalloc(p.n_params), *pb = fmalloc(p.n_params);
+    float *ma = fmalloc(p.n_params), *mb = fmalloc(p.n_params);
+    float *va = fmalloc(p.n_params), *vb = fmalloc(p.n_params);
+    float *g = fmalloc(p.n_params);
+    he_init(&p, pa);
+    memcpy(pb, pa, p.n_params * 4);
+    memset(ma, 0, p.n_params * 4);
+    memset(mb, 0, p.n_params * 4);
+    memset(va, 0, p.n_params * 4);
+    memset(vb, 0, p.n_params * 4);
+    float *xs = fmalloc(K * B * sample);
+    int32_t *ys = (int32_t *)malloc(K * B * 4);
+    for (size_t i = 0; i < K * B * sample; i++) xs[i] = rng_normal();
+    for (size_t i = 0; i < K * B; i++) ys[i] = (int32_t)(rng_u64() % spec->ncls);
+    size_t fails = 0;
+    float sa = 0.0f, sb = 0.0f, last = 0.0f;
+    for (int e = 0; e < 3; e++) {
+        float la = train_epoch(&p, pa, ma, va, &sa, xs, ys, K, B, 0, 1, &t1, g);
+        float lb = train_epoch(&p, pb, mb, vb, &sb, xs, ys, K, B, 1, 2, &t2, g);
+        if (memcmp(pa, pb, p.n_params * 4) || memcmp(&la, &lb, 4) ||
+            memcmp(ma, mb, p.n_params * 4) || memcmp(va, vb, p.n_params * 4)) {
+            printf("FAIL %s train epoch %d: state or loss diverged\n", spec->name, e);
+            fails++;
+        }
+        last = la;
+    }
+    printf("  %s: 3 epochs x K=10 steps bitwise identical (last loss %.6f)\n", spec->name,
+           (double)last);
+    return fails;
+}
+
+/* ---------------- timing ---------------- */
+static double time_train_epoch(const cnn_t *spec, int gemm, size_t threads, int iters) {
+    plan_t p = plan_new(spec);
+    size_t B = 32, K = 10, sample = spec->h * spec->w * spec->cin;
+    tape_t t = tape_new(&p, B);
+    float *params = fmalloc(p.n_params), *m = fmalloc(p.n_params), *v = fmalloc(p.n_params);
+    float *g = fmalloc(p.n_params);
+    he_init(&p, params);
+    memset(m, 0, p.n_params * 4);
+    memset(v, 0, p.n_params * 4);
+    float *xs = fmalloc(K * B * sample);
+    int32_t *ys = (int32_t *)malloc(K * B * 4);
+    for (size_t i = 0; i < K * B * sample; i++) xs[i] = rng_normal();
+    for (size_t i = 0; i < K * B; i++) ys[i] = (int32_t)(rng_u64() % spec->ncls);
+    float step = 0.0f;
+    train_epoch(&p, params, m, v, &step, xs, ys, K, B, gemm, threads, &t, g); /* warmup */
+    double best_sum = 0.0;
+    for (int it = 0; it < iters; it++) {
+        double t0 = now_s();
+        train_epoch(&p, params, m, v, &step, xs, ys, K, B, gemm, threads, &t, g);
+        best_sum += now_s() - t0;
+    }
+    return best_sum / iters;
+}
+
+/* pool_64x2M mirror: 64 jobs x 2M LCG mixes (benches/parallel_study.rs) */
+typedef struct {
+    uint64_t out[64];
+} pool_env;
+static void pool_item(void *envp, size_t i) {
+    pool_env *e = (pool_env *)envp;
+    uint64_t x = 0x9e3779b97f4a7c15ull + (uint64_t)i * 0xbf58476d1ce4e5b9ull;
+    for (int j = 0; j < 2000000; j++) x = x * 6364136223846793005ull + 1442695040888963407ull;
+    e->out[i] = x;
+}
+static double time_pool(size_t jobs) {
+    pool_env env;
+    double t0 = now_s();
+    run_static(64, jobs, pool_item, &env);
+    return now_s() - t0;
+}
+
+#ifndef NO_MAIN
+int main(int argc, char **argv) {
+    (void)argc;
+    (void)argv;
+    printf("== equivalence: scalar reference vs im2col+GEMM (bitwise) ==\n");
+    size_t fails = check_op_equivalence();
+    fails += check_train_equivalence(&CNN_MNIST);
+    fails += check_train_equivalence(&CNN_CIFAR);
+    if (fails) {
+        printf("EQUIVALENCE FAILURES: %zu\n", fails);
+        return 1;
+    }
+    printf("all op-level and train-loop checks bitwise identical\n\n");
+
+    printf("== timing: train_epoch (K=10, B=32), mean of 5 ==\n");
+    const cnn_t *models[2] = {&CNN_MNIST, &CNN_CIFAR};
+    for (int mi = 0; mi < 2; mi++) {
+        const cnn_t *s = models[mi];
+        double ref = time_train_epoch(s, 0, 1, 5);
+        double g1 = time_train_epoch(s, 1, 1, 5);
+        double g2 = time_train_epoch(s, 1, 2, 5);
+        double g4 = time_train_epoch(s, 1, 4, 5);
+        printf("%s: scalar %.3f ms | gemm t1 %.3f ms (%.2fx) | t2 %.3f ms | t4 %.3f ms "
+               "(intra t1->t4 %.2fx)\n",
+               s->name, ref * 1e3, g1 * 1e3, ref / g1, g2 * 1e3, g4 * 1e3, g1 / g4);
+    }
+
+    printf("\n== pool 64x2M mixes (mean of 5, 1 warmup) ==\n");
+    for (size_t jobs = 1; jobs <= 8; jobs *= 2) {
+        time_pool(jobs); /* warmup */
+        double sum = 0.0;
+        for (int it = 0; it < 5; it++) sum += time_pool(jobs);
+        printf("jobs=%zu: %.4f s\n", jobs, sum / 5.0);
+    }
+    return 0;
+}
+#endif /* NO_MAIN */

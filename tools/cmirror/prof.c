@@ -1,0 +1,109 @@
+/* Per-op breakdown of the GEMM-path train step (experiment harness; not
+ * part of the recorded benchmarks). Build:
+ *   gcc -O3 -std=c11 -ffp-contract=off -DNO_MAIN -o prof prof.c kernels.c? no —
+ *   gcc -O3 -std=c11 -ffp-contract=off -o prof prof.c -lm -pthread
+ */
+#define NO_MAIN
+#include "kernels.c"
+
+static double t_im2col, t_sgemm, t_atb, t_bwdx_gemm, t_col2im, t_transpose, t_rest;
+
+static void breakdown(const cnn_t *spec, size_t threads, int iters) {
+    plan_t p = plan_new(spec);
+    size_t B = 32, sample = spec->h * spec->w * spec->cin;
+    tape_t t = tape_new(&p, B);
+    float *params = fmalloc(p.n_params), *g = fmalloc(p.n_params);
+    he_init(&p, params);
+    float *xs = fmalloc(B * sample);
+    int32_t *ys = (int32_t *)malloc(B * 4);
+    for (size_t i = 0; i < B * sample; i++) xs[i] = rng_normal();
+    for (size_t i = 0; i < B; i++) ys[i] = (int32_t)(rng_u64() % spec->ncls);
+    t_im2col = t_sgemm = t_atb = t_bwdx_gemm = t_col2im = t_transpose = t_rest = 0;
+    double total = 0;
+    for (int it = 0; it < iters; it++) {
+        double t0 = now_s();
+        /* forward with instrumented ops */
+        memcpy(t.xin[0], xs, B * sample * sizeof(float));
+        for (int i = 0; i < 3; i++) {
+            const layer_t *l = &p.conv[i];
+            double a0 = now_s();
+            im2col3x3(t.xin[i], B, l->h, l->w, l->cin, t.scratch_a);
+            double a1 = now_s();
+            sgemm(B * l->h * l->w, l->cout, 9 * l->cin, t.scratch_a, params + l->w_off,
+                  params + l->b_off, t.buf1, threads);
+            double a2 = now_s();
+            t_im2col += a1 - a0;
+            t_sgemm += a2 - a1;
+            relu(t.buf1, t.act[i], B * l->h * l->w * l->cout);
+            float *next = (i < 2) ? t.xin[i + 1] : t.feat;
+            if (l->pooled) {
+                max_pool(t.act[i], B, l->h, l->w, l->cout, t.pooled[i], t.pidx[i]);
+                memcpy(next, t.pooled[i], B * (l->h / 2) * (l->w / 2) * l->cout * 4);
+            } else
+                memcpy(next, t.act[i], B * l->h * l->w * l->cout * 4);
+        }
+        double d0 = now_s();
+        dense_gemm(t.feat, B, p.feat, params + p.fc_w_off, p.spec.ncls,
+                   params + p.fc_b_off, t.logits, threads);
+        t_sgemm += now_s() - d0;
+        /* backward */
+        memset(g, 0, p.n_params * 4);
+        float per[64], dper[64];
+        softmax_xent(t.logits, ys, B, p.spec.ncls, per);
+        for (size_t i = 0; i < B; i++) dper[i] = 1.0f / B;
+        softmax_xent_bwd(t.logits, ys, B, p.spec.ncls, dper, t.buf1);
+        double e0 = now_s();
+        dense_bwd_gemm(t.feat, params + p.fc_w_off, B, p.feat, p.spec.ncls, t.buf1,
+                       g + p.fc_w_off, g + p.fc_b_off, t.buf2, t.scratch_b, threads);
+        t_atb += now_s() - e0;
+        float *da = t.buf2;
+        for (int i = 2; i >= 0; i--) {
+            const layer_t *l = &p.conv[i];
+            if (l->pooled) {
+                max_pool_bwd(da, t.pidx[i], B, l->h, l->w, l->cout, t.buf1);
+                float *tmp = da; da = t.buf1; t.buf1 = tmp;
+            }
+            relu_bwd_inplace(t.act[i], da, B * l->h * l->w * l->cout);
+            double b0 = now_s();
+            im2col3x3(t.xin[i], B, l->h, l->w, l->cin, t.scratch_a);
+            double b1 = now_s();
+            sgemm_atb(B * l->h * l->w, l->cout, 9 * l->cin, t.scratch_a, da, g + l->w_off,
+                      threads);
+            for (size_t r = 0; r < B * l->h * l->w; r++)
+                for (size_t o = 0; o < l->cout; o++) g[l->b_off + o] += da[r * l->cout + o];
+            double b2 = now_s();
+            t_im2col += b1 - b0;
+            t_atb += b2 - b1;
+            if (i > 0) {
+                double c0 = now_s();
+                size_t k = 9 * l->cin;
+                transpose_mat(params + l->w_off, k, l->cout, t.scratch_b);
+                double c1 = now_s();
+                sgemm(B * l->h * l->w, k, l->cout, da, t.scratch_b, NULL, t.scratch_a,
+                      threads);
+                double c2 = now_s();
+                col2im3x3(t.scratch_a, B, l->h, l->w, l->cin, t.buf1, threads);
+                double c3 = now_s();
+                t_transpose += c1 - c0;
+                t_bwdx_gemm += c2 - c1;
+                t_col2im += c3 - c2;
+                float *tmp = da; da = t.buf1; t.buf1 = tmp;
+            }
+        }
+        total += now_s() - t0;
+    }
+    double acct = t_im2col + t_sgemm + t_atb + t_bwdx_gemm + t_col2im + t_transpose;
+    printf("%s t=%zu (per step, %d iters): total %.3f ms | im2col %.3f | sgemm %.3f | "
+           "atb %.3f | bwdx-gemm %.3f | col2im %.3f | transp %.3f | other %.3f ms\n",
+           spec->name, threads, iters, total / iters * 1e3, t_im2col / iters * 1e3,
+           t_sgemm / iters * 1e3, t_atb / iters * 1e3, t_bwdx_gemm / iters * 1e3,
+           t_col2im / iters * 1e3, t_transpose / iters * 1e3,
+           (total - acct) / iters * 1e3);
+}
+
+int main(void) {
+    breakdown(&CNN_MNIST, 1, 50);
+    breakdown(&CNN_CIFAR, 1, 10);
+    breakdown(&CNN_CIFAR, 2, 10);
+    return 0;
+}

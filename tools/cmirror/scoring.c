@@ -1,0 +1,343 @@
+/* C mirror of the FIT scoring engine (rust/src/metrics/{fit,table}.rs and
+ * the greedy allocators in coordinator/search.rs) — the measurement
+ * harness behind the "c-mirror" numbers in BENCH_fit_scoring.json,
+ * pending the first `make bench-scoring` on a cargo-equipped host.
+ * Same algorithmic shapes: naive per-config noise_power/powf scoring vs
+ * the precomputed per-block x per-precision gather table; clone-and-
+ * rescore greedy vs the heap step-walk.
+ *
+ * gcc -O3 -std=c11 -ffp-contract=off -o scoring scoring.c -lm -pthread
+ */
+#include <math.h>
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+static uint64_t rng_state = 0xfeedbeef;
+static uint64_t rng_u64(void) {
+    uint64_t z = (rng_state += 0x9e3779b97f4a7c15ull);
+    z = (z ^ (z >> 30)) * 0xbf58476d1ce4e5b9ull;
+    z = (z ^ (z >> 27)) * 0x94d049bb133111ebull;
+    return z ^ (z >> 31);
+}
+static double rng_f64(void) { return (rng_u64() >> 11) * (1.0 / 9007199254740992.0); }
+
+/* quant/noise.rs */
+static double noise_power(double lo, double hi, double bits) {
+    double levels = pow(2.0, bits) - 1.0;
+    if (hi <= lo || levels < 1.0) return 0.0;
+    double delta = (hi - lo) / levels;
+    return delta * delta / 12.0;
+}
+
+#define LW 48
+#define LA 16
+#define NP 4
+static const uint32_t PRECS[NP] = {8, 6, 4, 3};
+
+typedef struct {
+    double w_traces[LW], w_lo[LW], w_hi[LW];
+    double a_traces[LA], a_lo[LA], a_hi[LA];
+    size_t block_sizes[LW];
+} inputs_t;
+
+typedef struct {
+    double w_fit[LW * NP], a_fit[LA * NP];
+    uint64_t w_bits[LW * NP];
+    uint64_t base_bits;
+} table_t;
+
+static void table_new(const inputs_t *s, size_t n_unq, table_t *t) {
+    for (size_t l = 0; l < LW; l++)
+        for (size_t p = 0; p < NP; p++) {
+            t->w_fit[l * NP + p] =
+                s->w_traces[l] * noise_power(s->w_lo[l], s->w_hi[l], (double)PRECS[p]);
+            t->w_bits[l * NP + p] = (uint64_t)s->block_sizes[l] * PRECS[p];
+        }
+    for (size_t l = 0; l < LA; l++)
+        for (size_t p = 0; p < NP; p++)
+            t->a_fit[l * NP + p] =
+                s->a_traces[l] * noise_power(s->a_lo[l], s->a_hi[l], (double)PRECS[p]);
+    t->base_bits = (uint64_t)n_unq * 32;
+}
+
+/* naive fit(): powf per block per call (metrics/fit.rs) */
+static double fit_naive(const inputs_t *s, const uint8_t *idx) {
+    double acc = 0.0;
+    for (size_t l = 0; l < LW; l++)
+        acc += s->w_traces[l] * noise_power(s->w_lo[l], s->w_hi[l], (double)PRECS[idx[l]]);
+    double acc_a = 0.0;
+    for (size_t l = 0; l < LA; l++)
+        acc_a += s->a_traces[l] *
+                 noise_power(s->a_lo[l], s->a_hi[l], (double)PRECS[idx[LW + l]]);
+    return acc + acc_a;
+}
+
+/* table score: flat gather-sum (metrics/table.rs) */
+static double fit_table(const table_t *t, const uint8_t *idx) {
+    double acc = 0.0;
+    for (size_t l = 0; l < LW; l++) acc += t->w_fit[l * NP + idx[l]];
+    double acc_a = 0.0;
+    for (size_t l = 0; l < LA; l++) acc_a += t->a_fit[l * NP + idx[LW + l]];
+    return acc + acc_a;
+}
+static uint64_t size_table(const table_t *t, const uint8_t *idx) {
+    uint64_t bits = t->base_bits;
+    for (size_t l = 0; l < LW; l++) bits += t->w_bits[l * NP + idx[l]];
+    return bits;
+}
+
+/* score_batch fan-out (4096-config chunks) */
+typedef struct {
+    const table_t *t;
+    const uint8_t *idx;
+    size_t n;
+    double *out;
+} batch_env;
+typedef struct {
+    batch_env *e;
+    size_t base, len;
+} bchunk_t;
+static void *bchunk_main(void *p) {
+    bchunk_t *c = p;
+    for (size_t i = c->base; i < c->base + c->len; i++)
+        c->e->out[i] = fit_table(c->e->t, c->e->idx + i * (LW + LA));
+    return NULL;
+}
+static double batch_throughput(const table_t *t, const uint8_t *idx, size_t n, size_t jobs,
+                               double *out) {
+    double t0 = now_s();
+    if (jobs <= 1) {
+        for (size_t i = 0; i < n; i++) out[i] = fit_table(t, idx + i * (LW + LA));
+    } else {
+        bchunk_t ch[8];
+        pthread_t tid[8];
+        batch_env env = {t, idx, n, out};
+        size_t base = 0;
+        for (size_t j = 0; j < jobs; j++) {
+            size_t len = n / jobs + (j < n % jobs ? 1 : 0);
+            ch[j] = (bchunk_t){&env, base, len};
+            base += len;
+        }
+        for (size_t j = 1; j < jobs; j++) pthread_create(&tid[j], NULL, bchunk_main, &ch[j]);
+        bchunk_main(&ch[0]);
+        for (size_t j = 1; j < jobs; j++) pthread_join(tid[j], NULL);
+    }
+    return (double)n / (now_s() - t0);
+}
+
+/* ---- greedy allocators over GB blocks (search.rs) ---- */
+#define GB 64
+typedef struct {
+    double rate;
+    int is_act, block, to_level;
+    uint64_t d_bits;
+} step_t;
+
+/* naive: clone config + full rescore per candidate step */
+static uint64_t model_bits_g(const size_t *sizes, uint64_t base, const uint32_t *bw) {
+    uint64_t bits = base;
+    for (size_t l = 0; l < GB; l++) bits += (uint64_t)sizes[l] * bw[l];
+    return bits;
+}
+static double fit_g(const double *tr, const double *lo, const double *hi,
+                    const uint32_t *bw) {
+    double acc = 0.0;
+    for (size_t l = 0; l < GB; l++) acc += tr[l] * noise_power(lo[l], hi[l], (double)bw[l]);
+    return acc;
+}
+static double greedy_naive(const double *tr, const double *lo, const double *hi,
+                           const size_t *sizes, uint64_t base, uint64_t budget,
+                           uint32_t *bw) {
+    for (size_t l = 0; l < GB; l++) bw[l] = PRECS[0];
+    while (model_bits_g(sizes, base, bw) > budget) {
+        double cur = fit_g(tr, lo, hi, bw);
+        double best_rate = 0.0;
+        int best_l = -1;
+        uint32_t best_nb = 0;
+        for (size_t l = 0; l < GB; l++) {
+            uint32_t nb = 0;
+            for (int p = NP - 1; p >= 0; p--)
+                if (PRECS[p] < bw[l]) {
+                    nb = PRECS[p];
+                    break;
+                }
+            /* PRECS sorted descending here, find next lower */
+            for (size_t p = 0; p < NP; p++)
+                if (PRECS[p] < bw[l] && (nb == 0 || PRECS[p] > nb)) nb = PRECS[p];
+            if (nb == 0) continue;
+            uint32_t keep = bw[l];
+            bw[l] = nb;
+            double d_fit = fit_g(tr, lo, hi, bw) - cur;
+            bw[l] = keep;
+            uint64_t d_bits = (uint64_t)(keep - nb) * sizes[l];
+            double rate = d_fit / (double)d_bits;
+            if (best_l < 0 || rate < best_rate) {
+                best_rate = rate;
+                best_l = (int)l;
+                best_nb = nb;
+            }
+        }
+        if (best_l < 0) break;
+        bw[best_l] = best_nb;
+    }
+    return fit_g(tr, lo, hi, bw);
+}
+
+/* heap: one candidate step per block, incremental bits (search.rs) */
+static void heap_push(step_t *heap, size_t *n, step_t s) {
+    size_t i = (*n)++;
+    heap[i] = s;
+    while (i > 0) {
+        size_t par = (i - 1) / 2;
+        if (heap[par].rate <= heap[i].rate) break;
+        step_t tmp = heap[par];
+        heap[par] = heap[i];
+        heap[i] = tmp;
+        i = par;
+    }
+}
+static step_t heap_pop(step_t *heap, size_t *n) {
+    step_t top = heap[0];
+    heap[0] = heap[--(*n)];
+    size_t i = 0;
+    for (;;) {
+        size_t l = 2 * i + 1, r = l + 1, m = i;
+        if (l < *n && heap[l].rate < heap[m].rate) m = l;
+        if (r < *n && heap[r].rate < heap[m].rate) m = r;
+        if (m == i) break;
+        step_t tmp = heap[m];
+        heap[m] = heap[i];
+        heap[i] = tmp;
+        i = m;
+    }
+    return top;
+}
+int main(void) {
+    inputs_t s;
+    for (size_t l = 0; l < LW; l++) {
+        s.w_traces[l] = rng_f64() * 10.0;
+        s.w_lo[l] = -rng_f64();
+        s.w_hi[l] = rng_f64() + 0.1;
+        s.block_sizes[l] = 1000 + (rng_u64() % 50000);
+    }
+    for (size_t l = 0; l < LA; l++) {
+        s.a_traces[l] = rng_f64() * 5.0;
+        s.a_lo[l] = 0.0;
+        s.a_hi[l] = rng_f64() * 4.0 + 0.1;
+    }
+    table_t tab;
+    table_new(&s, 1234, &tab);
+
+    /* single-score ns */
+    size_t n1 = 200000;
+    uint8_t *idx = malloc(n1 * (LW + LA));
+    for (size_t i = 0; i < n1 * (LW + LA); i++) idx[i] = (uint8_t)(rng_u64() % NP);
+    double acc = 0.0;
+    double t0 = now_s();
+    for (size_t i = 0; i < n1; i++) acc += fit_naive(&s, idx + i * (LW + LA));
+    double naive_ns = (now_s() - t0) / n1 * 1e9;
+    t0 = now_s();
+    for (size_t i = 0; i < n1; i++) acc += fit_table(&tab, idx + i * (LW + LA));
+    double table_ns = (now_s() - t0) / n1 * 1e9;
+    printf("single: naive %.1f ns | table %.1f ns | speedup %.1fx (checksum %.3f)\n",
+           naive_ns, table_ns, naive_ns / table_ns, acc);
+    /* sanity: table == naive to near-ULP */
+    for (size_t i = 0; i < 100; i++) {
+        double a = fit_naive(&s, idx + i * (LW + LA));
+        double b = fit_table(&tab, idx + i * (LW + LA));
+        if (fabs(a - b) > 1e-15 * fabs(a)) {
+            printf("TABLE MISMATCH %zu: %.17g vs %.17g\n", i, a, b);
+            return 1;
+        }
+    }
+    (void)size_table(&tab, idx);
+
+    /* batch throughput at n = 1k / 100k / 1M, jobs 1 and 2 */
+    double *out = malloc(1000000 * sizeof(double));
+    uint8_t *big = malloc((size_t)1000000 * (LW + LA));
+    for (size_t i = 0; i < (size_t)1000000 * (LW + LA); i++)
+        big[i] = (uint8_t)(rng_u64() % NP);
+    size_t ns[3] = {1000, 100000, 1000000};
+    for (int c = 0; c < 3; c++) {
+        for (size_t jobs = 1; jobs <= 2; jobs++) {
+            batch_throughput(&tab, big, ns[c], jobs, out); /* warm */
+            double sum = 0;
+            for (int it = 0; it < 5; it++) sum += batch_throughput(&tab, big, ns[c], jobs, out);
+            printf("batch n=%zu jobs=%zu: %.3fM configs/s\n", ns[c], jobs, sum / 5 / 1e6);
+        }
+    }
+
+    /* greedy: naive vs heap, 64 blocks */
+    double gtr[GB], glo[GB], ghi[GB];
+    size_t gsz[GB];
+    for (int l = 0; l < GB; l++) {
+        gtr[l] = rng_f64() * 10.0;
+        glo[l] = -rng_f64();
+        ghi[l] = rng_f64() + 0.1;
+        gsz[l] = 1000 + (rng_u64() % 50000);
+    }
+    /* GB == 64 > LW == 48: use dedicated flat tables for the heap walk */
+    static double hw_fit[GB * NP];
+    static uint64_t hw_bits[GB * NP];
+    for (int l = 0; l < GB; l++)
+        for (size_t p = 0; p < NP; p++) {
+            hw_fit[l * NP + p] = gtr[l] * noise_power(glo[l], ghi[l], (double)PRECS[p]);
+            hw_bits[l * NP + p] = (uint64_t)gsz[l] * PRECS[p];
+        }
+    uint64_t base = 1234ull * 32;
+    uint64_t max_bits = base;
+    for (int l = 0; l < GB; l++) max_bits += (uint64_t)gsz[l] * PRECS[0];
+    uint64_t budget = max_bits / 2;
+    uint32_t bw[GB];
+    int level[GB];
+    double tn = 0, th = 0, fn = 0, fh = 0;
+    int iters = 200;
+    t0 = now_s();
+    for (int it = 0; it < iters; it++) fn = greedy_naive(gtr, glo, ghi, gsz, base, budget, bw);
+    tn = (now_s() - t0) / iters;
+    /* heap version over the flat GB arrays */
+    t0 = now_s();
+    for (int it = 0; it < iters; it++) {
+        step_t heap[GB + 4];
+        size_t hn = 0;
+        for (int l = 0; l < GB; l++) level[l] = 0;
+        for (int l = 0; l < GB; l++) {
+            double d_fit = hw_fit[l * NP + 1] - hw_fit[l * NP + 0];
+            uint64_t d_bits = hw_bits[l * NP + 0] - hw_bits[l * NP + 1];
+            step_t st = {d_fit / (double)d_bits, 0, l, 1, d_bits};
+            heap_push(heap, &hn, st);
+        }
+        uint64_t bits_now = base;
+        for (int l = 0; l < GB; l++) bits_now += hw_bits[l * NP + 0];
+        while (bits_now > budget && hn > 0) {
+            step_t st = heap_pop(heap, &hn);
+            level[st.block] = st.to_level;
+            bits_now -= st.d_bits;
+            if (st.to_level + 1 < NP) {
+                double d_fit = hw_fit[st.block * NP + st.to_level + 1] -
+                               hw_fit[st.block * NP + st.to_level];
+                uint64_t d_bits = hw_bits[st.block * NP + st.to_level] -
+                                  hw_bits[st.block * NP + st.to_level + 1];
+                step_t nx = {d_fit / (double)d_bits, 0, st.block, st.to_level + 1, d_bits};
+                heap_push(heap, &hn, nx);
+            }
+        }
+        fh = 0;
+        for (int l = 0; l < GB; l++) fh += hw_fit[l * NP + level[l]];
+    }
+    th = (now_s() - t0) / iters;
+    printf("greedy %d blocks: naive %.1f us | heap %.1f us | speedup %.1fx "
+           "(fit naive %.6g heap %.6g)\n",
+           GB, tn * 1e6, th * 1e6, tn / th, fn, fh);
+    if (fabs(fn - fh) > 1e-9 * fabs(fn)) printf("GREEDY RESULT MISMATCH\n");
+    return 0;
+}
