@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring bench-native bench-smoke check-bench-schema
+.PHONY: artifacts test bench bench-scoring bench-native bench-smoke check-bench-schema check-manifests
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -35,3 +35,8 @@ bench-smoke:
 # Structural validation of the committed BENCH_*.json perf records.
 check-bench-schema:
 	python3 scripts/check_bench_schema.py BENCH_parallel_study.json BENCH_fit_scoring.json
+
+# Fail-closed validation of every committed zoo model manifest
+# (parse + compile; DESIGN.md "Model manifests").
+check-manifests:
+	cargo run --release --bin fitq -- zoo-check zoo/*.json

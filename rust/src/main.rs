@@ -21,6 +21,7 @@
 //! part of the from-scratch substrate.)
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -96,13 +97,18 @@ const USAGE: &str = "fitq <command>\n\
      setting — but ms/iter and speedup columns are wall-clock, so keep\n\
      --jobs 1 when the timing itself is the result. `all` walks the\n\
      experiment DAG once, deduping shared pipeline stages.\n\
+  zoo-check  zoo/<name>.json ...          validate model manifests (parse + compile)\n\
   Every command takes --backend native|pjrt (also $FITQ_BACKEND):\n\
      native = pure-Rust interpreter, zero setup, study models only;\n\
      pjrt   = compiled HLO artifacts ($FITQ_ARTIFACTS, `make artifacts`).\n\
      Default: pjrt when the artifact root has a manifest, else native.\n\
      $FITQ_NATIVE_THREADS=N threads the native GEMM kernels intra-op\n\
      (default 1, 0 = all cores; bit-identical output at every setting —\n\
-     parallel phases switch workers back to serial on their own).\n";
+     parallel phases switch workers back to serial on their own).\n\
+  --model also accepts the path of a zoo model manifest ending in .json\n\
+     (e.g. --model zoo/cnn_cifar_deep.json): the manifest is strictly\n\
+     validated, compiled into a native plan, and runs on the native\n\
+     backend under the name it declares (DESIGN.md \"Model manifests\").\n";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -124,6 +130,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "traces" => cmd_traces(&args),
         "search" => cmd_search(&args),
         "experiment" => cmd_experiment(&args),
+        "zoo-check" => cmd_zoo_check(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -134,15 +141,54 @@ fn dispatch(argv: &[String]) -> Result<()> {
 
 /// Backend resolution shared by every command: `--backend` flag first,
 /// then `$FITQ_BACKEND`, then automatic (pjrt when artifacts exist).
-fn runtime_for(args: &Args) -> Result<Runtime> {
-    match args.get("backend") {
-        Some(b) => Runtime::from_backend_arg(Some(b)),
-        None => Runtime::from_env(),
+/// `zoo` carries any manifest paths `--model` resolved; a non-empty zoo
+/// forces the native backend (zoo models exist nowhere else).
+fn runtime_for(args: &Args, zoo: Vec<PathBuf>) -> Result<Runtime> {
+    let env_backend = std::env::var("FITQ_BACKEND").ok();
+    let arg = args.get("backend").or_else(|| env_backend.as_deref());
+    Runtime::from_backend_arg_with_zoo(arg, zoo)
+}
+
+/// Resolve one `--model` value: a path ending in `.json` is a zoo model
+/// manifest — validate it *now* (fail-closed, before any `Runtime`
+/// exists), record the path for backend construction, and substitute the
+/// model name the manifest declares. Anything else is a builtin name,
+/// passed through untouched.
+fn resolve_model(value: &str, zoo: &mut Vec<PathBuf>) -> Result<String> {
+    if !value.ends_with(".json") {
+        return Ok(value.to_string());
     }
+    let path = PathBuf::from(value);
+    let model = fitq::native::manifest::load_file(&path)?;
+    if !zoo.contains(&path) {
+        zoo.push(path);
+    }
+    Ok(model.spec.name)
+}
+
+/// Validate model manifests from the command line (what
+/// `make check-manifests` runs over every committed `zoo/*.json`).
+fn cmd_zoo_check(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("zoo-check needs at least one manifest path, e.g. `fitq zoo-check zoo/*.json`");
+    }
+    for p in &args.positional {
+        let path = PathBuf::from(p);
+        let model = fitq::native::manifest::load_file(&path)?;
+        let plan = fitq::native::model::Plan::from_spec(model.spec.clone());
+        println!(
+            "{p}: ok — model {}: {} conv layers, {} classes, {} params",
+            model.spec.name,
+            model.spec.convs.len(),
+            model.spec.n_classes,
+            plan.n_params
+        );
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let rt = runtime_for(args)?;
+    let rt = runtime_for(args, Vec::new())?;
     println!("backend: {} (root: {})", rt.backend_name(), rt.manifest.root.display());
     for (name, m) in &rt.manifest.models {
         println!(
@@ -158,13 +204,14 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "cnn_mnist");
+    let mut zoo = Vec::new();
+    let model = resolve_model(args.str_or("model", "cnn_mnist"), &mut zoo)?;
     let epochs = args.usize_or("epochs", 30)?;
     let seed = args.usize_or("seed", 0)? as u64;
-    let rt = runtime_for(args)?;
-    let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
+    let rt = runtime_for(args, zoo)?;
+    let ds = dataset_for(&rt, &model, seed ^ 0xda7a)?;
     let mut trainer = Trainer::new(&rt, ds.as_ref());
-    let mut st = ModelState::init(&rt, model, seed as u32)?;
+    let mut st = ModelState::init(&rt, &model, seed as u32)?;
     let losses = trainer.train(&mut st, epochs)?;
     let ev = EvalSet::materialize(ds.as_ref(), 512);
     let res = trainer.evaluate(&st, &ev)?;
@@ -180,7 +227,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_traces(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "cnn_m");
+    let mut zoo = Vec::new();
+    let model = resolve_model(args.str_or("model", "cnn_m"), &mut zoo)?;
     let seed = args.usize_or("seed", 0)? as u64;
     let epochs = args.usize_or("epochs", 15)?;
     let est = match args.str_or("estimator", "ef") {
@@ -188,9 +236,9 @@ fn cmd_traces(args: &Args) -> Result<()> {
         "hessian" => Estimator::Hutchinson,
         other => bail!("unknown estimator {other:?}"),
     };
-    let rt = runtime_for(args)?;
-    let st = fitq::coordinator::experiments::get_trained(&rt, model, epochs, seed)?;
-    let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
+    let rt = runtime_for(args, zoo)?;
+    let st = fitq::coordinator::experiments::get_trained(&rt, &model, epochs, seed)?;
+    let ds = dataset_for(&rt, &model, seed ^ 0xda7a)?;
     let engine = TraceEngine::new(&rt, ds.as_ref());
     let opt = TraceOptions {
         batch: args.usize_or("batch", 32)?,
@@ -199,7 +247,7 @@ fn cmd_traces(args: &Args) -> Result<()> {
         max_iters: args.usize_or("max-iters", 500)? as u64,
         seed,
     };
-    let r = engine.run(model, &st.params, est, opt)?;
+    let r = engine.run(&model, &st.params, est, opt)?;
     println!(
         "{model} {} trace: {} iterations ({:.1} ms/iter), norm variance {:.3}",
         r.estimator.name(),
@@ -218,15 +266,16 @@ fn cmd_traces(args: &Args) -> Result<()> {
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "cnn_cifar");
+    let mut zoo = Vec::new();
+    let model = resolve_model(args.str_or("model", "cnn_cifar"), &mut zoo)?;
     let seed = args.usize_or("seed", 0)? as u64;
     let ratio = args.f64_or("budget-ratio", 0.15)?;
     let samples = args.usize_or("samples", 100_000)?;
     let jobs = args.usize_or("jobs", 0)?;
-    let rt = runtime_for(args)?;
-    let mm = rt.model(model)?.clone();
-    let st = fitq::coordinator::experiments::get_trained(&rt, model, 30, seed)?;
-    let ds = dataset_for(&rt, model, seed ^ 0xda7a)?;
+    let rt = runtime_for(args, zoo)?;
+    let mm = rt.model(&model)?.clone();
+    let st = fitq::coordinator::experiments::get_trained(&rt, &model, 30, seed)?;
+    let ds = dataset_for(&rt, &model, seed ^ 0xda7a)?;
     let trainer = Trainer::new(&rt, ds.as_ref());
     let ev = EvalSet::materialize(ds.as_ref(), 256);
     let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default())?;
@@ -320,8 +369,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             bail!("unknown flag --{key} for experiment {which}\n{}", registry::usage());
         }
     }
-    let o = exp_options(args)?;
-    let rt = runtime_for(args)?;
+    let mut o = exp_options(args)?;
+    // `--models` entries may be zoo manifest paths; resolve them to the
+    // declared names and collect the paths for backend construction
+    let mut zoo = Vec::new();
+    for m in &mut o.models {
+        *m = resolve_model(m, &mut zoo)?;
+    }
+    let rt = runtime_for(args, zoo)?;
     let pipe = Pipeline::from_env()?;
     registry::run_all(&rt, &pipe, &specs, &o)
 }

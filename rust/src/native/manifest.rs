@@ -1,0 +1,661 @@
+//! Declarative model manifests — the JSON zoo (`zoo/*.json`) and its
+//! fail-closed compiler into the interpreter's [`ModelSpec`].
+//!
+//! A manifest describes one model in the native op vocabulary: a chain
+//! of `conv3x3` stages (bias, optional batch-norm, relu, optional 2x2
+//! max-pool) ending in one `dense` classifier head, plus input shape,
+//! init scheme and explicit quantizer placement. Parsing is strict in
+//! the serde `deny_unknown_fields` sense, hand-rolled over the
+//! [`Json`] substrate: unknown fields, missing fields, wrong types,
+//! schema-version skew, duplicate or dangling layer references,
+//! non-topological declaration order, shape mismatches and contradictory
+//! quantizer placement are all *typed* errors ([`ManifestError`]) —
+//! never a fallback or a best-effort guess.
+//!
+//! **Digest rule.** A compiled zoo model feeds the same
+//! [`Plan`](super::model::Plan) builder and generated
+//! [`ModelManifest`](crate::runtime::ModelManifest) as the builtins, so
+//! pipeline cache keys hash its *layout* (`stages::hash_model`): a
+//! manifest equivalent to a builtin shares the builtin's digests
+//! bit-for-bit, and any structural difference separates them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::anyhow;
+
+use super::model::{ConvSpec, ModelSpec};
+use crate::runtime::json::Json;
+
+/// The manifest schema revision this build understands. A bump is a
+/// deliberate breaking change: any other value is a typed
+/// [`ManifestError::SchemaVersion`], never a best-effort parse.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The usage line appended to every CLI-facing manifest failure.
+pub const ZOO_USAGE: &str = "usage: --model takes a builtin name (see `fitq info`) or the \
+     path of a zoo model manifest ending in .json (schema: DESIGN.md \"Model manifests\"; \
+     validate with `fitq zoo-check zoo/*.json`)";
+
+/// A manifest rejection: every variant names what failed and where.
+///
+/// The negative corpus (`tests/corpus/manifests/bad/`) keys on
+/// [`ManifestError::kind`], so the variants and their kind strings are a
+/// stable contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ManifestError {
+    /// The text is not well-formed JSON, or the top level is not an object.
+    Json(String),
+    /// `schema_version` is missing or not exactly [`SCHEMA_VERSION`].
+    SchemaVersion(String),
+    /// A field this schema does not define (typos must never silently
+    /// change meaning).
+    UnknownField { context: String, field: String },
+    /// A required field is absent.
+    MissingField { context: String, field: String },
+    /// A field holds the wrong JSON type.
+    WrongType { context: String, field: String, expected: &'static str },
+    /// A field parses but holds a value outside the schema's vocabulary.
+    BadValue { context: String, detail: String },
+    /// Two layers share a name, or a layer claims the reserved `"input"`.
+    DuplicateLayer { name: String },
+    /// `after` or `output` names a layer that does not exist.
+    DanglingRef { context: String, target: String },
+    /// A layer consumes itself or a later layer — declaration order must
+    /// be topological, so this is the non-DAG case.
+    CyclicOrder { layer: String, after: String },
+    /// The layer graph is not a single `input -> conv3x3* -> dense` chain.
+    Structure { detail: String },
+    /// An op outside the native vocabulary (`conv3x3` | `dense`).
+    UnsupportedOp { layer: String, op: String },
+    /// Shape arithmetic fails (odd dims under pool, zero-size dims, …).
+    ShapeMismatch { context: String, detail: String },
+    /// Quantizer placement contradicts the interpreter's block structure.
+    QuantPlacement { layer: String, detail: String },
+}
+
+impl ManifestError {
+    /// Stable machine-readable name of this rejection class — the
+    /// `<kind>__*.json` filename convention of the negative corpus.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ManifestError::Json(_) => "json",
+            ManifestError::SchemaVersion(_) => "schema-version",
+            ManifestError::UnknownField { .. } => "unknown-field",
+            ManifestError::MissingField { .. } => "missing-field",
+            ManifestError::WrongType { .. } => "wrong-type",
+            ManifestError::BadValue { .. } => "bad-value",
+            ManifestError::DuplicateLayer { .. } => "duplicate-layer",
+            ManifestError::DanglingRef { .. } => "dangling-ref",
+            ManifestError::CyclicOrder { .. } => "cyclic-order",
+            ManifestError::Structure { .. } => "structure",
+            ManifestError::UnsupportedOp { .. } => "unsupported-op",
+            ManifestError::ShapeMismatch { .. } => "shape-mismatch",
+            ManifestError::QuantPlacement { .. } => "quant-placement",
+        }
+    }
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Json(detail) => write!(f, "not valid JSON: {detail}"),
+            ManifestError::SchemaVersion(found) => write!(
+                f,
+                "schema_version {found} is not supported (this build reads version \
+                 {SCHEMA_VERSION} only)"
+            ),
+            ManifestError::UnknownField { context, field } => {
+                write!(f, "{context}: unknown field {field:?}")
+            }
+            ManifestError::MissingField { context, field } => {
+                write!(f, "{context}: missing field {field:?}")
+            }
+            ManifestError::WrongType { context, field, expected } => {
+                write!(f, "{context}: field {field:?} must be {expected}")
+            }
+            ManifestError::BadValue { context, detail } => write!(f, "field {context}: {detail}"),
+            ManifestError::DuplicateLayer { name } => {
+                write!(f, "duplicate layer name {name:?} (\"input\" is reserved)")
+            }
+            ManifestError::DanglingRef { context, target } => {
+                write!(f, "{context} references unknown layer {target:?}")
+            }
+            ManifestError::CyclicOrder { layer, after } => write!(
+                f,
+                "layer {layer:?} consumes {after:?}, which is not declared before it \
+                 (layers must be declared in topological order)"
+            ),
+            ManifestError::Structure { detail } => write!(f, "bad model structure: {detail}"),
+            ManifestError::UnsupportedOp { layer, op } => write!(
+                f,
+                "layer {layer:?}: op {op:?} is outside the native vocabulary \
+                 (conv3x3 | dense)"
+            ),
+            ManifestError::ShapeMismatch { context, detail } => {
+                write!(f, "shape mismatch at {context}: {detail}")
+            }
+            ManifestError::QuantPlacement { layer, detail } => {
+                write!(f, "layer {layer:?}: bad quantizer placement: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// A parsed (not yet validated) model manifest — the typed form of one
+/// `zoo/*.json` document. `PartialEq` backs the round-trip contract:
+/// `parse(m.to_json()) == m`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ZooManifest {
+    pub name: String,
+    /// Task vocabulary: `"classify"`.
+    pub task: String,
+    /// `[h, w, c]` input shape.
+    pub input: Vec<usize>,
+    /// Weight-init scheme vocabulary: `"he_normal"`.
+    pub init: String,
+    /// Layers in declaration (= execution) order.
+    pub layers: Vec<ZooLayer>,
+    /// Name of the layer whose output is the model output.
+    pub output: String,
+}
+
+/// One declared layer of a [`ZooManifest`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ZooLayer {
+    pub name: String,
+    /// Producer this layer consumes: `"input"` or an earlier layer name.
+    pub after: String,
+    pub op: ZooOp,
+    /// Declared weight-quantizer placement.
+    pub quant_weight: bool,
+    /// Declared activation-quantizer placement.
+    pub quant_act: bool,
+}
+
+/// The native op vocabulary a manifest layer may use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZooOp {
+    /// 3x3 SAME stride-1 convolution + bias (+ optional batch-norm) +
+    /// relu (+ optional 2x2 max-pool) — the interpreter's conv stage.
+    Conv3x3 { filters: usize, batch_norm: bool, pool: bool },
+    /// The terminal dense classifier head (`units` = classes).
+    Dense { units: usize },
+}
+
+/// One zoo model ready for the backend: the parsed manifest plus its
+/// compiled spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ZooModel {
+    pub manifest: ZooManifest,
+    pub spec: ModelSpec,
+}
+
+// -- strict field extraction over the Json substrate ---------------------
+
+fn check_fields(
+    ctx: &str,
+    obj: &BTreeMap<String, Json>,
+    allowed: &[&str],
+) -> Result<(), ManifestError> {
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(ManifestError::UnknownField {
+                context: ctx.to_string(),
+                field: key.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn req<'a>(
+    ctx: &str,
+    obj: &'a BTreeMap<String, Json>,
+    field: &str,
+) -> Result<&'a Json, ManifestError> {
+    obj.get(field).ok_or_else(|| ManifestError::MissingField {
+        context: ctx.to_string(),
+        field: field.to_string(),
+    })
+}
+
+fn wrong(ctx: &str, field: &str, expected: &'static str) -> ManifestError {
+    ManifestError::WrongType { context: ctx.to_string(), field: field.to_string(), expected }
+}
+
+fn req_str(ctx: &str, obj: &BTreeMap<String, Json>, field: &str) -> Result<String, ManifestError> {
+    req(ctx, obj, field)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| wrong(ctx, field, "a string"))
+}
+
+fn req_bool(ctx: &str, obj: &BTreeMap<String, Json>, field: &str) -> Result<bool, ManifestError> {
+    match req(ctx, obj, field)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(wrong(ctx, field, "a boolean")),
+    }
+}
+
+fn req_usize(ctx: &str, obj: &BTreeMap<String, Json>, field: &str) -> Result<usize, ManifestError> {
+    req(ctx, obj, field)?
+        .as_usize()
+        .ok_or_else(|| wrong(ctx, field, "a non-negative integer"))
+}
+
+fn req_obj<'a>(
+    ctx: &str,
+    obj: &'a BTreeMap<String, Json>,
+    field: &str,
+) -> Result<&'a BTreeMap<String, Json>, ManifestError> {
+    req(ctx, obj, field)?.as_obj().ok_or_else(|| wrong(ctx, field, "an object"))
+}
+
+fn req_usize_arr(
+    ctx: &str,
+    obj: &BTreeMap<String, Json>,
+    field: &str,
+) -> Result<Vec<usize>, ManifestError> {
+    let arr = req(ctx, obj, field)?
+        .as_arr()
+        .ok_or_else(|| wrong(ctx, field, "an array of non-negative integers"))?;
+    arr.iter()
+        .map(|v| v.as_usize())
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| wrong(ctx, field, "an array of non-negative integers"))
+}
+
+fn parse_layer(i: usize, v: &Json) -> Result<ZooLayer, ManifestError> {
+    let slot = format!("layers[{i}]");
+    let m = v.as_obj().ok_or_else(|| wrong("layers", &slot, "an object"))?;
+    let name = req_str(&slot, m, "name")?;
+    let ctx = format!("layer {name:?}");
+    let op_name = req_str(&ctx, m, "op")?;
+    let after = req_str(&ctx, m, "after")?;
+    let quant = req_obj(&ctx, m, "quant")?;
+    let qctx = format!("{ctx}.quant");
+    check_fields(&qctx, quant, &["weight", "act"])?;
+    let quant_weight = req_bool(&qctx, quant, "weight")?;
+    let quant_act = req_bool(&qctx, quant, "act")?;
+    let op = match op_name.as_str() {
+        "conv3x3" => {
+            let allowed = ["name", "op", "after", "filters", "batch_norm", "pool", "quant"];
+            check_fields(&ctx, m, &allowed)?;
+            ZooOp::Conv3x3 {
+                filters: req_usize(&ctx, m, "filters")?,
+                batch_norm: req_bool(&ctx, m, "batch_norm")?,
+                pool: req_bool(&ctx, m, "pool")?,
+            }
+        }
+        "dense" => {
+            check_fields(&ctx, m, &["name", "op", "after", "units", "quant"])?;
+            ZooOp::Dense { units: req_usize(&ctx, m, "units")? }
+        }
+        other => return Err(ManifestError::UnsupportedOp { layer: name, op: other.to_string() }),
+    };
+    Ok(ZooLayer { name, after, op, quant_weight, quant_act })
+}
+
+impl ZooManifest {
+    /// Strictly parse one manifest document: typed rejection on malformed
+    /// JSON, schema-version skew, unknown fields, missing fields and
+    /// wrong types. Semantic validation (references, structure, shapes,
+    /// quantizer placement) happens in [`ZooManifest::compile`].
+    pub fn parse(text: &str) -> Result<ZooManifest, ManifestError> {
+        let v = Json::parse(text).map_err(ManifestError::Json)?;
+        let top = v
+            .as_obj()
+            .ok_or_else(|| ManifestError::Json("top level is not an object".to_string()))?;
+        // version gate first: a future-schema file should fail as a
+        // version skew, not trip over whatever field that version added
+        let sv = req("manifest", top, "schema_version")?;
+        match sv.as_f64() {
+            Some(n) if n == SCHEMA_VERSION as f64 => {}
+            Some(n) => return Err(ManifestError::SchemaVersion(n.to_string())),
+            None => return Err(ManifestError::SchemaVersion("(not a number)".to_string())),
+        }
+        check_fields(
+            "manifest",
+            top,
+            &["schema_version", "name", "task", "input", "init", "layers", "output"],
+        )?;
+        let name = req_str("manifest", top, "name")?;
+        let task = req_str("manifest", top, "task")?;
+        let input_obj = req_obj("manifest", top, "input")?;
+        check_fields("input", input_obj, &["shape"])?;
+        let input = req_usize_arr("input", input_obj, "shape")?;
+        let init_obj = req_obj("manifest", top, "init")?;
+        check_fields("init", init_obj, &["scheme"])?;
+        let init = req_str("init", init_obj, "scheme")?;
+        let layers_v = req("manifest", top, "layers")?
+            .as_arr()
+            .ok_or_else(|| wrong("manifest", "layers", "an array"))?;
+        let mut layers = Vec::with_capacity(layers_v.len());
+        for (i, lv) in layers_v.iter().enumerate() {
+            layers.push(parse_layer(i, lv)?);
+        }
+        let output = req_str("manifest", top, "output")?;
+        Ok(ZooManifest { name, task, input, init, layers, output })
+    }
+
+    /// Validate the manifest's semantics and compile it into the
+    /// interpreter's [`ModelSpec`]. Fail-closed: any structural doubt is
+    /// a typed error, never a guessed fallback.
+    pub fn compile(&self) -> Result<ModelSpec, ManifestError> {
+        if self.name.is_empty() {
+            return Err(ManifestError::BadValue {
+                context: "name".to_string(),
+                detail: "must be non-empty".to_string(),
+            });
+        }
+        if self.task != "classify" {
+            return Err(ManifestError::BadValue {
+                context: "task".to_string(),
+                detail: format!("{:?} (vocabulary: \"classify\")", self.task),
+            });
+        }
+        if self.init != "he_normal" {
+            return Err(ManifestError::BadValue {
+                context: "init.scheme".to_string(),
+                detail: format!("{:?} (vocabulary: \"he_normal\")", self.init),
+            });
+        }
+        if self.input.len() != 3 || self.input.contains(&0) {
+            return Err(ManifestError::ShapeMismatch {
+                context: "input.shape".to_string(),
+                detail: format!("need [h, w, c] with every dim >= 1, got {:?}", self.input),
+            });
+        }
+        if self.layers.len() < 2 {
+            return Err(ManifestError::Structure {
+                detail: "a model needs at least one conv3x3 stage and a terminal dense head"
+                    .to_string(),
+            });
+        }
+        // layer names: unique, non-empty, "input" reserved for the source
+        let mut seen = std::collections::BTreeSet::new();
+        for l in &self.layers {
+            if l.name.is_empty() {
+                return Err(ManifestError::BadValue {
+                    context: "layers[].name".to_string(),
+                    detail: "must be non-empty".to_string(),
+                });
+            }
+            if l.name == "input" || !seen.insert(l.name.as_str()) {
+                return Err(ManifestError::DuplicateLayer { name: l.name.clone() });
+            }
+        }
+        // references: declaration order is the chain order, so layer i
+        // must consume layer i-1 ("input" for the first). Anything else
+        // is classified precisely: a self/forward reference breaks the
+        // topological order; a backward reference that skips the
+        // predecessor is a branch or an orphan; an unknown name dangles.
+        for (i, l) in self.layers.iter().enumerate() {
+            let expected = match i {
+                0 => "input",
+                _ => self.layers[i - 1].name.as_str(),
+            };
+            if l.after == expected {
+                continue;
+            }
+            if l.after == l.name || self.layers[i..].iter().any(|m| m.name == l.after) {
+                return Err(ManifestError::CyclicOrder {
+                    layer: l.name.clone(),
+                    after: l.after.clone(),
+                });
+            }
+            if l.after == "input" || self.layers[..i].iter().any(|m| m.name == l.after) {
+                return Err(ManifestError::Structure {
+                    detail: format!(
+                        "layer {:?} consumes {:?}, but the vocabulary is a single chain \
+                         (expected {:?})",
+                        l.name, l.after, expected
+                    ),
+                });
+            }
+            return Err(ManifestError::DanglingRef {
+                context: format!("layer {:?} field \"after\"", l.name),
+                target: l.after.clone(),
+            });
+        }
+        let last = self.layers.last().expect("layers checked non-empty");
+        if self.output != last.name {
+            if self.layers.iter().any(|l| l.name == self.output) {
+                return Err(ManifestError::Structure {
+                    detail: format!(
+                        "output is {:?}, but the chain ends at {:?}",
+                        self.output, last.name
+                    ),
+                });
+            }
+            return Err(ManifestError::DanglingRef {
+                context: "field \"output\"".to_string(),
+                target: self.output.clone(),
+            });
+        }
+        let units = match last.op {
+            ZooOp::Dense { units } => units,
+            ZooOp::Conv3x3 { .. } => {
+                return Err(ManifestError::Structure {
+                    detail: format!("the final layer ({:?}) must be the dense head", last.name),
+                })
+            }
+        };
+        if units < 2 {
+            return Err(ManifestError::ShapeMismatch {
+                context: format!("layer {:?} field \"units\"", last.name),
+                detail: format!("a classifier head needs >= 2 classes, got {units}"),
+            });
+        }
+        if !last.quant_weight || last.quant_act {
+            return Err(ManifestError::QuantPlacement {
+                layer: last.name.clone(),
+                detail: "the dense head quantizes weights only — quant.weight must be true \
+                         and quant.act false (logits are not an activation site)"
+                    .to_string(),
+            });
+        }
+        // conv chain: shape walk + structural quantizer placement
+        let (mut h, mut w) = (self.input[0], self.input[1]);
+        let mut convs = Vec::with_capacity(self.layers.len() - 1);
+        for l in &self.layers[..self.layers.len() - 1] {
+            let (filters, batch_norm, pool) = match l.op {
+                ZooOp::Conv3x3 { filters, batch_norm, pool } => (filters, batch_norm, pool),
+                ZooOp::Dense { .. } => {
+                    return Err(ManifestError::Structure {
+                        detail: format!(
+                            "layer {:?}: dense must be the single terminal layer",
+                            l.name
+                        ),
+                    })
+                }
+            };
+            if filters == 0 {
+                return Err(ManifestError::ShapeMismatch {
+                    context: format!("layer {:?} field \"filters\"", l.name),
+                    detail: "needs >= 1 output channel".to_string(),
+                });
+            }
+            if !(l.quant_weight && l.quant_act) {
+                return Err(ManifestError::QuantPlacement {
+                    layer: l.name.clone(),
+                    detail: "conv3x3 kernels and post-relu activations are always \
+                             quantization blocks — quant.weight and quant.act must both \
+                             be true"
+                        .to_string(),
+                });
+            }
+            if pool {
+                if h % 2 != 0 || w % 2 != 0 {
+                    return Err(ManifestError::ShapeMismatch {
+                        context: format!("layer {:?} field \"pool\"", l.name),
+                        detail: format!("2x2 max-pool needs even spatial dims, got {h}x{w}"),
+                    });
+                }
+                h /= 2;
+                w /= 2;
+            }
+            convs.push(ConvSpec { c_out: filters, batch_norm, pooled: pool });
+        }
+        Ok(ModelSpec {
+            name: self.name.clone(),
+            input: (self.input[0], self.input[1], self.input[2]),
+            convs,
+            n_classes: units,
+        })
+    }
+
+    /// Canonical serialization: stable field order and layout, so
+    /// `parse(m.to_json()) == m` and committed zoo files diff cleanly.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {SCHEMA_VERSION},\n"));
+        s.push_str(&format!("  \"name\": {},\n", quote(&self.name)));
+        s.push_str(&format!("  \"task\": {},\n", quote(&self.task)));
+        let dims: Vec<String> = self.input.iter().map(usize::to_string).collect();
+        s.push_str(&format!("  \"input\": {{\"shape\": [{}]}},\n", dims.join(", ")));
+        s.push_str(&format!("  \"init\": {{\"scheme\": {}}},\n", quote(&self.init)));
+        s.push_str("  \"layers\": [\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            let comma = if i + 1 < self.layers.len() { "," } else { "" };
+            let quant = format!(
+                "\"quant\": {{\"weight\": {}, \"act\": {}}}",
+                l.quant_weight, l.quant_act
+            );
+            let line = match l.op {
+                ZooOp::Conv3x3 { filters, batch_norm, pool } => format!(
+                    "    {{\"name\": {}, \"op\": \"conv3x3\", \"after\": {}, \
+                     \"filters\": {filters}, \"batch_norm\": {batch_norm}, \
+                     \"pool\": {pool}, {quant}}}{comma}\n",
+                    quote(&l.name),
+                    quote(&l.after),
+                ),
+                ZooOp::Dense { units } => format!(
+                    "    {{\"name\": {}, \"op\": \"dense\", \"after\": {}, \
+                     \"units\": {units}, {quant}}}{comma}\n",
+                    quote(&l.name),
+                    quote(&l.after),
+                ),
+            };
+            s.push_str(&line);
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"output\": {}\n", quote(&self.output)));
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// JSON string literal with the escapes [`Json::parse`] understands.
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Parse + compile one manifest document (the corpus-test entry point).
+pub fn load_str(text: &str) -> Result<ZooModel, ManifestError> {
+    let manifest = ZooManifest::parse(text)?;
+    let spec = manifest.compile()?;
+    Ok(ZooModel { manifest, spec })
+}
+
+/// Read, parse and compile a manifest file, wrapping every failure with
+/// the file path and the zoo usage line — the fail-before-`Runtime`
+/// surface the CLI and the backend share.
+pub fn load_file(path: &Path) -> anyhow::Result<ZooModel> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("model manifest {}: {e}\n{ZOO_USAGE}", path.display()))?;
+    load_str(&text).map_err(|e| anyhow!("model manifest {}: {e}\n{ZOO_USAGE}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> String {
+        r#"{
+  "schema_version": 1,
+  "name": "tiny",
+  "task": "classify",
+  "input": {"shape": [8, 8, 1]},
+  "init": {"scheme": "he_normal"},
+  "layers": [
+    {"name": "conv0", "op": "conv3x3", "after": "input", "filters": 4, "batch_norm": false, "pool": true, "quant": {"weight": true, "act": true}},
+    {"name": "fc", "op": "dense", "after": "conv0", "units": 3, "quant": {"weight": true, "act": false}}
+  ],
+  "output": "fc"
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn minimal_manifest_parses_and_compiles() {
+        let m = load_str(&minimal()).unwrap();
+        assert_eq!(m.spec.name, "tiny");
+        assert_eq!(m.spec.input, (8, 8, 1));
+        assert_eq!(m.spec.convs.len(), 1);
+        assert_eq!(m.spec.convs[0], ConvSpec { c_out: 4, batch_norm: false, pooled: true });
+        assert_eq!(m.spec.n_classes, 3);
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let m = ZooManifest::parse(&minimal()).unwrap();
+        let re = ZooManifest::parse(&m.to_json()).unwrap();
+        assert_eq!(re, m);
+        assert_eq!(re.compile().unwrap(), m.compile().unwrap());
+    }
+
+    #[test]
+    fn typed_rejections_carry_stable_kinds() {
+        let sub = |from: &str, to: &str| minimal().replace(from, to);
+        let v2 = "\"schema_version\": 2";
+        let cases: Vec<(String, &str)> = vec![
+            ("{".to_string(), "json"),
+            ("[1, 2]".to_string(), "json"),
+            (sub("\"schema_version\": 1", v2), "schema-version"),
+            (sub("\"task\": \"classify\"", "\"task\": \"classify\", \"x\": 1"), "unknown-field"),
+            (sub("\"filters\": 4", "\"filters\": \"4\""), "wrong-type"),
+            (sub("\"after\": \"conv0\"", "\"after\": \"conv9\""), "dangling-ref"),
+            (sub("\"op\": \"dense\"", "\"op\": \"upsample2\""), "unsupported-op"),
+            (sub("[8, 8, 1]", "[7, 8, 1]"), "shape-mismatch"),
+            (sub("\"act\": true", "\"act\": false"), "quant-placement"),
+            (sub("\"name\": \"fc\"", "\"name\": \"conv0\""), "duplicate-layer"),
+            (sub("\"after\": \"input\"", "\"after\": \"conv0\""), "cyclic-order"),
+            (sub("\"scheme\": \"he_normal\"", "\"scheme\": \"xavier\""), "bad-value"),
+        ];
+        for (text, kind) in &cases {
+            match load_str(text) {
+                Ok(_) => panic!("case {kind} unexpectedly parsed"),
+                Err(e) => assert_eq!(e.kind(), *kind, "got {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn errors_name_the_offending_field() {
+        let text = minimal().replace("\"filters\": 4", "\"filters\": 4, \"stride\": 2");
+        let e = load_str(&text).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("stride"), "{msg}");
+        assert!(msg.contains("conv0"), "{msg}");
+    }
+}

@@ -8,6 +8,10 @@
 //!   their flat parameter layout (identical tensor order and block
 //!   indexing to layers.py), He-normal init, and the generated
 //!   [`Manifest`] with aot.py-shaped entry IoSpecs.
+//! - [`manifest`] — the declarative model zoo: strict, fail-closed
+//!   JSON manifests (`zoo/*.json`) compiled into the same plan
+//!   representation, so new architectures in the op vocabulary run
+//!   with zero Rust changes.
 //! - [`gemm`] — the math-kernel layer: im2col/col2im lowering, a
 //!   panel-parallel rank-1 `sgemm`, and threaded direct-conv kernels,
 //!   all under a fixed-order `f32` accumulation contract and fanned
@@ -40,17 +44,18 @@
 
 pub mod entries;
 pub mod gemm;
+pub mod manifest;
 pub mod model;
 pub mod net;
 pub mod ops;
 pub mod quant;
 
 use std::cell::RefCell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::backend::{Backend, Dispatcher};
 use crate::runtime::{EntrySpec, Manifest, ModelManifest};
@@ -94,6 +99,31 @@ impl NativeBackend {
     /// the historical constructor.
     pub fn create() -> (NativeBackend, Manifest) {
         NativeBackend::create_with_threads(1)
+    }
+
+    /// [`NativeBackend::create_with_threads`] plus a set of zoo model
+    /// manifests (`zoo/*.json`), each strictly validated and compiled
+    /// into a plan alongside the builtins. A zoo model may shadow a
+    /// builtin name (the bit-identity tests rely on the shadowed pair
+    /// being equivalent anyway); two zoo files claiming the same name
+    /// is an error, since "last file wins" would be a silent fallback.
+    pub fn create_with_zoo(threads: usize, zoo: &[PathBuf]) -> Result<(NativeBackend, Manifest)> {
+        let (mut backend, mut manifest) = NativeBackend::create_with_threads(threads);
+        let mut zoo_names = BTreeSet::new();
+        for path in zoo {
+            let model = crate::native::manifest::load_file(path)?;
+            let name = model.spec.name.clone();
+            if !zoo_names.insert(name.clone()) {
+                bail!(
+                    "model manifest {}: a zoo model named {name:?} was already loaded",
+                    path.display()
+                );
+            }
+            let plan = Plan::from_spec(model.spec);
+            manifest.models.insert(name.clone(), plan.manifest());
+            backend.plans.insert(name, Rc::new(plan));
+        }
+        Ok((backend, manifest))
     }
 }
 

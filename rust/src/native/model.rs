@@ -54,6 +54,56 @@ pub struct CnnSpec {
     pub pool_after: &'static [usize],
 }
 
+impl CnnSpec {
+    /// Desugar the static table entry into the owned [`ModelSpec`] the
+    /// plan builder consumes (table-wide `batch_norm` becomes per-layer).
+    pub fn to_model_spec(&self) -> ModelSpec {
+        ModelSpec {
+            name: self.name.to_string(),
+            input: self.input,
+            convs: self
+                .filters
+                .iter()
+                .enumerate()
+                .map(|(i, &c_out)| ConvSpec {
+                    c_out,
+                    batch_norm: self.batch_norm,
+                    pooled: self.pool_after.contains(&i),
+                })
+                .collect(),
+            n_classes: self.n_classes,
+        }
+    }
+}
+
+/// One conv stage of a [`ModelSpec`]: output width, normalization and
+/// pooling — everything the interpreter needs beyond the running shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    /// Output channels of the 3x3 SAME stride-1 convolution.
+    pub c_out: usize,
+    /// Insert batch-norm between bias and relu for this layer.
+    pub batch_norm: bool,
+    /// 2x2 max-pool after this layer's relu.
+    pub pooled: bool,
+}
+
+/// An owned model description — the single input of [`Plan::from_spec`].
+///
+/// Builtin [`CnnSpec`] table entries desugar into this via
+/// [`CnnSpec::to_model_spec`], and `native::manifest` compiles validated
+/// zoo manifests into it, so both construction paths share one plan
+/// builder. Unlike `CnnSpec`, batch-norm is a per-layer property.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// (H, W, C) input shape.
+    pub input: (usize, usize, usize),
+    /// Conv stages in execution order; the dense head follows.
+    pub convs: Vec<ConvSpec>,
+    pub n_classes: usize,
+}
+
 /// The Table-2 study models the native backend implements.
 pub const STUDY_CNNS: &[CnnSpec] = &[
     CnnSpec {
@@ -135,7 +185,7 @@ impl ConvLayer {
 /// the generated [`ModelManifest`].
 #[derive(Debug)]
 pub struct Plan {
-    pub spec: CnnSpec,
+    pub spec: ModelSpec,
     pub convs: Vec<ConvLayer>,
     pub fc_w_off: usize,
     pub fc_b_off: usize,
@@ -151,16 +201,28 @@ fn tensor(name: String, shape: Vec<usize>, offset: usize, kind: &str, block: i64
 }
 
 impl Plan {
-    /// Build the execution plan (geometry, flat offsets, manifest
-    /// tensors) for one study CNN spec.
+    /// Build the execution plan for one study CNN table entry — the
+    /// historical constructor, now a [`CnnSpec`] desugaring over
+    /// [`Plan::from_spec`].
     pub fn new(spec: CnnSpec) -> Plan {
+        Plan::from_spec(spec.to_model_spec())
+    }
+
+    /// Build the execution plan (geometry, flat offsets, manifest
+    /// tensors) from an owned [`ModelSpec`] — the one constructor both
+    /// the builtin table and `native::manifest`'s compiled zoo models
+    /// flow through. Tensor naming stays positional (`convI.w`, `fc.w`),
+    /// independent of any manifest layer names, so an equivalent zoo
+    /// manifest reproduces the builtin layout bit-for-bit.
+    pub fn from_spec(spec: ModelSpec) -> Plan {
         let (mut h, mut w) = (spec.input.0, spec.input.1);
         let mut c_in = spec.input.2;
         let mut off = 0usize;
         let mut convs = Vec::new();
         let mut tensors = Vec::new();
         let mut block = 0i64;
-        for (i, &c_out) in spec.filters.iter().enumerate() {
+        for (i, cs) in spec.convs.iter().enumerate() {
+            let c_out = cs.c_out;
             let w_off = off;
             let w_shape = vec![3, 3, c_in, c_out];
             tensors.push(tensor(format!("conv{i}.w"), w_shape, off, "conv_w", block));
@@ -170,7 +232,7 @@ impl Plan {
             tensors.push(tensor(format!("conv{i}.b"), vec![c_out], off, "bias", -1));
             off += c_out;
             let (mut gamma_off, mut beta_off) = (None, None);
-            if spec.batch_norm {
+            if cs.batch_norm {
                 gamma_off = Some(off);
                 tensors.push(tensor(format!("conv{i}.gamma"), vec![c_out], off, "bn_gamma", -1));
                 off += c_out;
@@ -178,7 +240,7 @@ impl Plan {
                 tensors.push(tensor(format!("conv{i}.beta"), vec![c_out], off, "bn_beta", -1));
                 off += c_out;
             }
-            let pooled = spec.pool_after.contains(&i);
+            let pooled = cs.pooled;
             convs.push(ConvLayer { h, w, c_in, c_out, w_off, b_off, gamma_off, beta_off, pooled });
             if pooled {
                 h /= 2;
@@ -274,7 +336,7 @@ impl Plan {
             })
             .collect();
         ModelManifest {
-            name: spec.name.to_string(),
+            name: spec.name.clone(),
             n_params: self.n_params,
             input_shape: vec![spec.input.0, spec.input.1, spec.input.2],
             n_classes: spec.n_classes,
@@ -463,6 +525,39 @@ mod tests {
     fn train_step_only_on_cnn_mnist() {
         assert!(Plan::new(STUDY_CNNS[0]).manifest().entry("train_step").is_ok());
         assert!(Plan::new(STUDY_CNNS[1]).manifest().entry("train_step").is_err());
+    }
+
+    #[test]
+    fn model_spec_desugaring_matches_the_table() {
+        for spec in STUDY_CNNS {
+            let a = Plan::new(*spec);
+            let b = Plan::from_spec(spec.to_model_spec());
+            assert_eq!(a.n_params, b.n_params, "{}", spec.name);
+            assert_eq!(a.spec, b.spec, "{}", spec.name);
+            assert_eq!(a.init_flat(3), b.init_flat(3), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn per_layer_batch_norm_is_expressible() {
+        // beyond the CnnSpec vocabulary: BN on only the first conv
+        let p = Plan::from_spec(ModelSpec {
+            name: "mixed".into(),
+            input: (8, 8, 1),
+            convs: vec![
+                ConvSpec { c_out: 4, batch_norm: true, pooled: true },
+                ConvSpec { c_out: 4, batch_norm: false, pooled: false },
+            ],
+            n_classes: 3,
+        });
+        assert!(p.convs[0].gamma_off.is_some());
+        assert!(p.convs[1].gamma_off.is_none());
+        let views = p.manifest().bn_gamma_views();
+        assert!(views[0].is_some());
+        assert!(views[1].is_none() && views[2].is_none());
+        let f = p.init_flat(1);
+        let g = p.convs[0].gamma_off.unwrap();
+        assert!(f[g..g + 4].iter().all(|&x| x == 1.0));
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub enum BackendSpec {
     Native {
         /// Threads the GEMM layer may fan panels over (`1` = serial).
         threads: usize,
+        /// Zoo model-manifest paths (`zoo/*.json`) loaded alongside the
+        /// builtins. Part of the spec so worker threads rebuild the same
+        /// model set — but *not* part of any pipeline cache digest:
+        /// those hash the compiled model's block layout (`hash_model`),
+        /// so an equivalent manifest shares the builtin's digests and a
+        /// different one separates automatically.
+        zoo: Vec<PathBuf>,
     },
 }
 
@@ -90,7 +97,9 @@ impl BackendSpec {
     pub fn intra_serial(&self) -> BackendSpec {
         match self {
             BackendSpec::Pjrt(root) => BackendSpec::Pjrt(root.clone()),
-            BackendSpec::Native { .. } => BackendSpec::Native { threads: 1 },
+            BackendSpec::Native { zoo, .. } => {
+                BackendSpec::Native { threads: 1, zoo: zoo.clone() }
+            }
         }
     }
 }
@@ -104,15 +113,22 @@ mod tests {
         // these strings are part of the pipeline cache-key contract; the
         // native thread budget must never leak into the name (cache keys
         // are thread-count invariant because outputs are)
-        assert_eq!(BackendSpec::Native { threads: 1 }.name(), "native");
-        assert_eq!(BackendSpec::Native { threads: 8 }.name(), "native");
+        assert_eq!(BackendSpec::Native { threads: 1, zoo: vec![] }.name(), "native");
+        assert_eq!(BackendSpec::Native { threads: 8, zoo: vec![] }.name(), "native");
+        assert_eq!(
+            BackendSpec::Native { threads: 1, zoo: vec![PathBuf::from("zoo/x.json")] }.name(),
+            "native",
+            "zoo manifests must not leak into the name either — digests \
+             separate on the compiled block layout, not the file list"
+        );
         assert_eq!(BackendSpec::Pjrt(PathBuf::from("x")).name(), "pjrt");
     }
 
     #[test]
     fn intra_serial_strips_only_the_thread_budget() {
-        let s = BackendSpec::Native { threads: 6 }.intra_serial();
-        assert_eq!(s, BackendSpec::Native { threads: 1 });
+        let zoo = vec![PathBuf::from("zoo/deep.json")];
+        let s = BackendSpec::Native { threads: 6, zoo: zoo.clone() }.intra_serial();
+        assert_eq!(s, BackendSpec::Native { threads: 1, zoo });
         let p = BackendSpec::Pjrt(PathBuf::from("a/b")).intra_serial();
         assert_eq!(p, BackendSpec::Pjrt(PathBuf::from("a/b")));
     }

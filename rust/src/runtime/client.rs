@@ -85,9 +85,18 @@ impl Runtime {
     /// [`Runtime::native`] with an explicit intra-op thread budget
     /// (`0` = one thread per available core).
     pub fn native_with_threads(threads: usize) -> Result<Runtime> {
+        Runtime::native_with_zoo(threads, Vec::new())
+    }
+
+    /// [`Runtime::native_with_threads`] plus zoo model manifests
+    /// (`zoo/*.json`), each strictly validated and compiled alongside
+    /// the builtins (`native::manifest`). Fail-closed: any manifest
+    /// rejection aborts runtime construction with the path and the
+    /// offending field.
+    pub fn native_with_zoo(threads: usize, zoo: Vec<PathBuf>) -> Result<Runtime> {
         let threads = resolve_native_threads(threads);
-        let (backend, manifest) = crate::native::NativeBackend::create_with_threads(threads);
-        Ok(Runtime::assemble(Box::new(backend), BackendSpec::Native { threads }, manifest))
+        let (backend, manifest) = crate::native::NativeBackend::create_with_zoo(threads, &zoo)?;
+        Ok(Runtime::assemble(Box::new(backend), BackendSpec::Native { threads, zoo }, manifest))
     }
 
     /// Rebuild a runtime from a worker-portable spec (`Runtime` itself is
@@ -97,7 +106,9 @@ impl Runtime {
     pub fn from_spec(spec: &BackendSpec) -> Result<Runtime> {
         match spec {
             BackendSpec::Pjrt(root) => Runtime::pjrt(root),
-            BackendSpec::Native { threads } => Runtime::native_with_threads(*threads),
+            BackendSpec::Native { threads, zoo } => {
+                Runtime::native_with_zoo(*threads, zoo.clone())
+            }
         }
     }
 
@@ -127,12 +138,30 @@ impl Runtime {
         }
     }
 
+    /// [`Runtime::from_backend_arg`] plus zoo model manifests. Zoo
+    /// models exist only in the native interpreter, so a non-empty zoo
+    /// forces the native backend; asking for PJRT alongside one is a
+    /// contradiction, refused rather than silently re-routed.
+    pub fn from_backend_arg_with_zoo(arg: Option<&str>, zoo: Vec<PathBuf>) -> Result<Runtime> {
+        if zoo.is_empty() {
+            return Runtime::from_backend_arg(arg);
+        }
+        match arg {
+            Some("native") | None => Runtime::native_with_zoo(native_threads_from_env(), zoo),
+            Some("pjrt") => bail!(
+                "zoo model manifests run on the native backend only — drop \
+                 `--backend pjrt` or pass a builtin model name"
+            ),
+            Some(other) => bail!("unknown backend {other:?} (expected native|pjrt)"),
+        }
+    }
+
     /// Snapshot of this runtime's intra-op thread budget (native: the
     /// GEMM fan-out width; PJRT: always 1 — XLA owns its own threading).
     pub fn intra_threads(&self) -> usize {
         match &self.spec {
             BackendSpec::Pjrt(_) => 1,
-            BackendSpec::Native { threads } => *threads,
+            BackendSpec::Native { threads, .. } => *threads,
         }
     }
 

@@ -134,3 +134,83 @@ fn native_backend_needs_no_artifacts() {
         assert!(text.contains(model), "info must list {model}: {text}");
     }
 }
+
+/// Path of a committed zoo manifest, valid from the test's cwd.
+fn zoo(name: &str) -> String {
+    format!("{}/../zoo/{name}.json", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn missing_zoo_manifest_fails_before_runtime_with_usage() {
+    let out = fitq(&["train", "--model", "zoo/definitely-missing.json"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("zoo/definitely-missing.json"), "must name the path: {err}");
+    assert!(err.contains("usage:"), "must carry the zoo usage line: {err}");
+    assert!(err.contains("--model"), "{err}");
+}
+
+#[test]
+fn malformed_zoo_manifest_fails_before_runtime() {
+    let dir = std::env::temp_dir().join(format!("fitq_cli_zoo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("broken.json");
+    std::fs::write(&path, "{\"schema_version\": 1, \"name\": \"bro").unwrap();
+    let out = fitq(&["traces", "--model", path.to_str().unwrap()]);
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("broken.json"), "must name the path: {err}");
+    assert!(err.contains("JSON"), "must say why: {err}");
+    assert!(err.contains("usage:"), "{err}");
+}
+
+#[test]
+fn out_of_vocabulary_op_names_the_layer_and_field() {
+    let bad = format!(
+        "{}/tests/corpus/manifests/bad/unsupported-op__upsample2.json",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let out = fitq(&["train", "--model", &bad]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("upsample2"), "must name the op: {err}");
+    assert!(err.contains("up0"), "must name the layer: {err}");
+    assert!(err.contains("unsupported-op__upsample2.json"), "must name the path: {err}");
+}
+
+#[test]
+fn zoo_manifest_conflicts_with_pjrt_backend() {
+    let out = fitq(&["train", "--model", &zoo("cnn_mnist"), "--backend", "pjrt"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("native backend only"), "{err}");
+}
+
+#[test]
+fn train_runs_from_a_zoo_manifest() {
+    let out = fitq(&["train", "--model", &zoo("cnn_mnist"), "--epochs", "1"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cnn_mnist: 1 epochs"), "{text}");
+}
+
+#[test]
+fn zoo_check_validates_the_committed_zoo() {
+    let names = ["cnn_mnist", "cnn_mnist_bn", "cnn_cifar", "cnn_cifar_bn", "cnn_cifar_deep"];
+    let paths: Vec<String> = names.iter().map(|n| zoo(n)).collect();
+    let mut args = vec!["zoo-check"];
+    args.extend(paths.iter().map(|p| p.as_str()));
+    let out = fitq(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for n in names {
+        assert!(text.contains(&format!("model {n}:")), "{text}");
+    }
+    assert_eq!(text.matches(": ok").count(), names.len(), "{text}");
+
+    // and with no paths it explains itself
+    let out = fitq(&["zoo-check"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("zoo-check zoo/*.json"), "{}", stderr(&out));
+}

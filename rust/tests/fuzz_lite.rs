@@ -1,0 +1,218 @@
+//! Fuzz-lite: deterministic seeded byte-mutation loops over the three
+//! fail-closed parsers — the model-manifest parser
+//! (`native::manifest`), the artifact-cache container header
+//! (`pipeline::cache`), and the binary payload codec
+//! (`pipeline::codec`). No cargo-fuzz in this container, so this is the
+//! bounded in-tree half of the ROADMAP hardening item: a splitmix64
+//! stream drives ~10k mutations per `cargo test -q` run, and every
+//! mutated input must produce an error or a valid value — never a
+//! panic, never a silently-wrong accept.
+
+use fitq::coordinator::evaluator::{ConfigOutcome, StudyResult};
+use fitq::coordinator::pipeline::codec::{
+    decode_sensitivity, decode_study, decode_trace, encode_sensitivity, encode_study,
+    encode_trace,
+};
+use fitq::coordinator::pipeline::{ArtifactCache, Hasher};
+use fitq::coordinator::{ActRanges, Estimator, SensitivityReport, TraceResult};
+use fitq::metrics::{Metric, SensitivityInputs};
+use fitq::native::manifest::{load_str, ZooManifest};
+use fitq::quant::BitConfig;
+
+/// splitmix64 — the standard seeded mixer, deterministic across runs and
+/// platforms, so any failure reproduces from the iteration number alone.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Apply one random byte-level mutation: flip, insert, delete, or
+/// truncate. Never leaves the buffer unchanged (except the empty case).
+fn mutate(bytes: &mut Vec<u8>, rng: &mut u64) {
+    if bytes.is_empty() {
+        bytes.push(splitmix64(rng) as u8);
+        return;
+    }
+    let r = splitmix64(rng);
+    let pos = (splitmix64(rng) as usize) % bytes.len();
+    match r % 4 {
+        0 => bytes[pos] ^= (splitmix64(rng) as u8) | 1,
+        1 => bytes.insert(pos, splitmix64(rng) as u8),
+        2 => {
+            bytes.remove(pos);
+        }
+        _ => bytes.truncate(pos),
+    }
+}
+
+fn zoo_seed_texts() -> Vec<String> {
+    let dirs = [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../zoo"),
+        concat!(env!("CARGO_MANIFEST_DIR"), "/tests/corpus/manifests/good"),
+    ];
+    let mut texts = Vec::new();
+    for dir in dirs {
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .unwrap_or_else(|e| panic!("reading {dir}: {e}"))
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            texts.push(std::fs::read_to_string(p).unwrap());
+        }
+    }
+    assert!(texts.len() >= 7, "expected the zoo + good corpus as mutation seeds");
+    texts
+}
+
+/// Manifest parser: ~6k mutated documents. Accepted outputs must also
+/// survive the canonical round trip — a mutation that parses into a
+/// manifest which fails `parse(to_json(m)) == m` would mean the parser
+/// and serializer disagree about the accepted language.
+#[test]
+fn fuzz_manifest_parser_never_panics() {
+    let seeds = zoo_seed_texts();
+    let mut rng = 0x5EED_0001_u64;
+    let mut accepted = 0_u64;
+    for (si, seed) in seeds.iter().enumerate() {
+        for _ in 0..850 {
+            let mut bytes = seed.clone().into_bytes();
+            let n_mut = 1 + (splitmix64(&mut rng) as usize) % 4;
+            for _ in 0..n_mut {
+                mutate(&mut bytes, &mut rng);
+            }
+            let text = String::from_utf8_lossy(&bytes);
+            if let Ok(m) = load_str(&text) {
+                accepted += 1;
+                let re = ZooManifest::parse(&m.manifest.to_json())
+                    .unwrap_or_else(|e| panic!("seed {si}: canonical form rejected: {e}"));
+                assert_eq!(re, m.manifest, "seed {si}: round trip diverged after mutation");
+            }
+        }
+    }
+    // sanity: the loop actually exercised the accept path too (some
+    // mutations — e.g. inside a layer name — keep the document valid)
+    assert!(accepted > 0, "no mutated manifest ever parsed; mutator too destructive?");
+}
+
+/// Cache container: ~800 mutated entry files. Every load must be a miss
+/// or return the original payload byte-for-byte — corruption degrades to
+/// a recompute, never to wrong results.
+#[test]
+fn fuzz_cache_header_rejects_or_returns_original() {
+    let dir = std::env::temp_dir().join(format!("fitq_fuzzcache_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = ArtifactCache::new(&dir).unwrap();
+    let key = Hasher::new().u64(0xF1F1).finish();
+    let payload: Vec<u8> = (0..257u16).map(|i| (i % 251) as u8).collect();
+    let path = cache.store("trace", 1, &key, &payload).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+
+    let mut rng = 0x5EED_0002_u64;
+    for i in 0..800 {
+        let mut bytes = pristine.clone();
+        let n_mut = 1 + (splitmix64(&mut rng) as usize) % 3;
+        for _ in 0..n_mut {
+            mutate(&mut bytes, &mut rng);
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        if let Some(got) = cache.load("trace", 1, &key) {
+            assert_eq!(got, payload, "iteration {i}: corrupt entry validated with new bytes");
+        }
+    }
+    // restore and confirm the pristine entry still hits
+    std::fs::write(&path, &pristine).unwrap();
+    assert_eq!(cache.load("trace", 1, &key), Some(payload));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn sample_trace() -> TraceResult {
+    TraceResult {
+        estimator: Estimator::Hutchinson,
+        w_traces: vec![1.5, -2.25, 0.0],
+        a_traces: vec![3.5],
+        w_std_errors: vec![0.1, 0.2, 0.3],
+        iterations: 42,
+        iter_time_s: 0.0125,
+        norm_variance: 7.75,
+        history_total: vec![1.0, 1.25, 1.5],
+    }
+}
+
+fn sample_sensitivity() -> SensitivityReport {
+    SensitivityReport {
+        inputs: SensitivityInputs {
+            w_traces: vec![10.0, 2.0],
+            a_traces: vec![4.0],
+            w_lo: vec![-1.0, -0.5],
+            w_hi: vec![1.0, 0.5],
+            a_lo: vec![0.0],
+            a_hi: vec![6.0],
+            bn_gamma: vec![Some(1.0), None],
+        },
+        act: ActRanges { lo: vec![0.0], hi: vec![5.5] },
+        trace: sample_trace(),
+    }
+}
+
+fn sample_study() -> StudyResult {
+    StudyResult {
+        model: "cnn_mnist".into(),
+        fp_test_score: 0.91,
+        outcomes: vec![ConfigOutcome {
+            cfg: BitConfig { bits_w: vec![8, 4], bits_a: vec![3] },
+            metrics: vec![(Metric::Fit, Some(0.5)), (Metric::Bn, None)],
+            test_score: 0.8,
+            train_score: 0.85,
+            mean_bits: 5.0,
+        }],
+        sens: sample_sensitivity(),
+        correlations: vec![(Metric::Fit, Some(0.86))],
+    }
+}
+
+/// Binary codec: ~3k mutated payloads across the three kinds. Decoders
+/// must return `Err` or a value whose re-encoding is itself decodable —
+/// no panic, no unbounded allocation (the length-prefix guard).
+#[test]
+fn fuzz_codec_decoders_error_or_produce_valid_values() {
+    let kinds: Vec<(&str, Vec<u8>)> = vec![
+        ("trace", encode_trace(&sample_trace())),
+        ("sensitivity", encode_sensitivity(&sample_sensitivity())),
+        ("study", encode_study(&sample_study())),
+    ];
+    let mut rng = 0x5EED_0003_u64;
+    for (kind, pristine) in &kinds {
+        for i in 0..1000 {
+            let mut bytes = pristine.clone();
+            let n_mut = 1 + (splitmix64(&mut rng) as usize) % 4;
+            for _ in 0..n_mut {
+                mutate(&mut bytes, &mut rng);
+            }
+            match *kind {
+                "trace" => {
+                    if let Ok(t) = decode_trace(&bytes) {
+                        decode_trace(&encode_trace(&t))
+                            .unwrap_or_else(|e| panic!("{kind} {i}: re-encode broke: {e}"));
+                    }
+                }
+                "sensitivity" => {
+                    if let Ok(s) = decode_sensitivity(&bytes) {
+                        decode_sensitivity(&encode_sensitivity(&s))
+                            .unwrap_or_else(|e| panic!("{kind} {i}: re-encode broke: {e}"));
+                    }
+                }
+                _ => {
+                    if let Ok(s) = decode_study(&bytes) {
+                        decode_study(&encode_study(&s))
+                            .unwrap_or_else(|e| panic!("{kind} {i}: re-encode broke: {e}"));
+                    }
+                }
+            }
+        }
+    }
+}

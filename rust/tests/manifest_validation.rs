@@ -1,0 +1,155 @@
+//! The manifest golden corpus: every file under
+//! `tests/corpus/manifests/bad/` must fail closed with the error kind
+//! its filename declares (`<kind>__<description>.json`), and every file
+//! under `good/` — plus every committed `zoo/*.json` — must round-trip
+//! parse → serialize → parse identically and compile to the same spec.
+
+use std::path::{Path, PathBuf};
+
+use fitq::native::manifest::{load_str, ManifestError, ZooManifest};
+
+fn corpus(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus/manifests").join(sub)
+}
+
+fn json_files(dir: &Path) -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    files.sort();
+    files
+}
+
+/// The error-kind contract: `bad/<kind>__<desc>.json` fails with exactly
+/// `<kind>`. A case that parses, or fails with a *different* kind, is a
+/// validation hole — both directions matter.
+#[test]
+fn bad_corpus_fails_closed_with_the_named_error() {
+    let files = json_files(&corpus("bad"));
+    assert!(
+        files.len() >= 12,
+        "the negative corpus thinned out: {} cases left",
+        files.len()
+    );
+    for path in files {
+        let stem = path.file_stem().unwrap().to_str().unwrap();
+        let expected = stem
+            .split_once("__")
+            .unwrap_or_else(|| panic!("{stem}: corpus files are named <kind>__<desc>.json"))
+            .0;
+        let text = std::fs::read_to_string(&path).unwrap();
+        match load_str(&text) {
+            Ok(_) => panic!("{stem}: expected a {expected:?} rejection, but it parsed"),
+            Err(e) => assert_eq!(
+                e.kind(),
+                expected,
+                "{stem}: wrong rejection class: {e}"
+            ),
+        }
+    }
+}
+
+/// Every rejection's Display must carry enough context to act on — at
+/// minimum it never collapses to an empty or kind-only string.
+#[test]
+fn bad_corpus_errors_are_descriptive() {
+    for path in json_files(&corpus("bad")) {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let e = load_str(&text).unwrap_err();
+        let msg = e.to_string();
+        assert!(
+            msg.len() > e.kind().len() + 4,
+            "{}: error message {msg:?} carries no detail",
+            path.display()
+        );
+    }
+}
+
+fn assert_round_trips(path: &Path) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let m = ZooManifest::parse(&text)
+        .unwrap_or_else(|e| panic!("{}: should parse: {e}", path.display()));
+    let spec = m
+        .compile()
+        .unwrap_or_else(|e| panic!("{}: should compile: {e}", path.display()));
+    let re = ZooManifest::parse(&m.to_json())
+        .unwrap_or_else(|e| panic!("{}: canonical form should re-parse: {e}", path.display()));
+    assert_eq!(re, m, "{}: parse(to_json(m)) must equal m", path.display());
+    assert_eq!(re.compile().unwrap(), spec, "{}: compile must agree too", path.display());
+}
+
+#[test]
+fn good_corpus_round_trips_identically() {
+    let files = json_files(&corpus("good"));
+    assert!(files.len() >= 2, "good corpus is empty");
+    for path in &files {
+        assert_round_trips(path);
+    }
+}
+
+/// The committed zoo is held to the same contract as the good corpus —
+/// it *is* the production corpus.
+#[test]
+fn committed_zoo_round_trips_identically() {
+    let zoo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../zoo");
+    let files = json_files(&zoo);
+    assert!(files.len() >= 5, "expected the 4 builtins + >=1 zoo-only model");
+    for path in &files {
+        assert_round_trips(path);
+        // zoo files additionally declare the name they are stored under
+        let text = std::fs::read_to_string(path).unwrap();
+        let m = load_str(&text).unwrap();
+        assert_eq!(
+            Some(m.spec.name.as_str()),
+            path.file_stem().and_then(|s| s.to_str()),
+            "{}: zoo filename must match the declared model name",
+            path.display()
+        );
+    }
+}
+
+/// `kind()` strings are a stable API (the corpus and CLI lean on them);
+/// pin the full set.
+#[test]
+fn error_kinds_are_stable() {
+    let kinds = [
+        ManifestError::Json(String::new()).kind(),
+        ManifestError::SchemaVersion(String::new()).kind(),
+        ManifestError::UnknownField { context: String::new(), field: String::new() }.kind(),
+        ManifestError::MissingField { context: String::new(), field: String::new() }.kind(),
+        ManifestError::WrongType {
+            context: String::new(),
+            field: String::new(),
+            expected: "",
+        }
+        .kind(),
+        ManifestError::BadValue { context: String::new(), detail: String::new() }.kind(),
+        ManifestError::DuplicateLayer { name: String::new() }.kind(),
+        ManifestError::DanglingRef { context: String::new(), target: String::new() }.kind(),
+        ManifestError::CyclicOrder { layer: String::new(), after: String::new() }.kind(),
+        ManifestError::Structure { detail: String::new() }.kind(),
+        ManifestError::UnsupportedOp { layer: String::new(), op: String::new() }.kind(),
+        ManifestError::ShapeMismatch { context: String::new(), detail: String::new() }.kind(),
+        ManifestError::QuantPlacement { layer: String::new(), detail: String::new() }.kind(),
+    ];
+    assert_eq!(
+        kinds,
+        [
+            "json",
+            "schema-version",
+            "unknown-field",
+            "missing-field",
+            "wrong-type",
+            "bad-value",
+            "duplicate-layer",
+            "dangling-ref",
+            "cyclic-order",
+            "structure",
+            "unsupported-op",
+            "shape-mismatch",
+            "quant-placement",
+        ]
+    );
+}

@@ -1,0 +1,185 @@
+//! The zoo bit-identity gate: every builtin model re-expressed as a
+//! committed `zoo/*.json` manifest must be indistinguishable from the
+//! hand-written builder — identical cache digests (via `hash_model` on
+//! the compiled block layout), bit-identical init/train/trace outputs,
+//! and byte-identical serialized study results at `jobs ∈ {1, 4}`. The
+//! manifest-only `cnn_cifar_deep` then proves the zero-Rust-change
+//! claim: a model no builder knows completes train → trace → study.
+
+use std::path::PathBuf;
+
+use fitq::coordinator::pipeline::codec::encode_study;
+use fitq::coordinator::pipeline::stages::{study_key, train_fp_key};
+use fitq::coordinator::{
+    dataset_for, run_study, Estimator, ModelState, Pipeline, StudyOptions, StudyResult,
+    TraceEngine, TraceOptions, Trainer,
+};
+use fitq::runtime::Runtime;
+
+const BUILTINS: [&str; 4] = ["cnn_mnist", "cnn_mnist_bn", "cnn_cifar", "cnn_cifar_bn"];
+
+fn zoo_path(name: &str) -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../zoo")).join(format!("{name}.json"))
+}
+
+/// Native runtime whose model came from the committed manifest (the zoo
+/// plan shadows the builtin of the same name).
+fn zoo_runtime(name: &str) -> Runtime {
+    Runtime::native_with_zoo(1, vec![zoo_path(name)]).expect("zoo runtime")
+}
+
+fn hand_runtime() -> Runtime {
+    Runtime::native_with_threads(1).expect("native runtime")
+}
+
+fn cold_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fitq_zoo_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+/// Serialize a study with the single wall-clock field (the embedded
+/// trace's ms/iter measurement) normalized away — everything else must
+/// be byte-identical across equivalent runs.
+fn study_bytes(mut s: StudyResult) -> Vec<u8> {
+    s.sens.trace.iter_time_s = 0.0;
+    encode_study(&s)
+}
+
+/// Init, two training epochs, and an EF trace are bit-identical between
+/// the hand-built and manifest-built plan of every builtin — and their
+/// pipeline cache digests coincide, so artifacts are interchangeable.
+#[test]
+fn manifest_builtins_are_bit_identical_to_hand_built() {
+    for name in BUILTINS {
+        let hand = hand_runtime();
+        let zoo = zoo_runtime(name);
+
+        // identical digests: hash_model sees the same block layout
+        let k_hand = train_fp_key("native", hand.model(name).unwrap(), 2, 7);
+        let k_zoo = train_fp_key("native", zoo.model(name).unwrap(), 2, 7);
+        assert_eq!(k_hand, k_zoo, "{name}: manifest must share the builtin's cache digests");
+
+        // bit-identical init
+        let st_hand = ModelState::init(&hand, name, 3).unwrap();
+        let st_zoo = ModelState::init(&zoo, name, 3).unwrap();
+        assert_eq!(st_hand.params, st_zoo.params, "{name}: init diverged");
+
+        // bit-identical training (losses and final parameters)
+        let run = |rt: &Runtime| {
+            let ds = dataset_for(rt, name, 7 ^ 0xda7a).unwrap();
+            let mut trainer = Trainer::new(rt, ds.as_ref());
+            let mut st = ModelState::init(rt, name, 3).unwrap();
+            let losses = trainer.train(&mut st, 2).unwrap();
+            (losses, st.params)
+        };
+        let (l_hand, p_hand) = run(&hand);
+        let (l_zoo, p_zoo) = run(&zoo);
+        assert_eq!(l_hand, l_zoo, "{name}: training losses diverged");
+        assert_eq!(p_hand, p_zoo, "{name}: trained parameters diverged");
+
+        // bit-identical EF trace over the trained parameters
+        let trace = |rt: &Runtime, params: &[f32]| {
+            let ds = dataset_for(rt, name, 7 ^ 0xda7a).unwrap();
+            let engine = TraceEngine::new(rt, ds.as_ref());
+            let opt =
+                TraceOptions { batch: 32, tol: 0.01, min_iters: 4, max_iters: 12, seed: 5 };
+            engine.run(name, params, Estimator::EmpiricalFisher, opt).unwrap()
+        };
+        let t_hand = trace(&hand, &p_hand);
+        let t_zoo = trace(&zoo, &p_zoo);
+        assert_eq!(t_hand.w_traces, t_zoo.w_traces, "{name}: weight traces diverged");
+        assert_eq!(t_hand.a_traces, t_zoo.a_traces, "{name}: activation traces diverged");
+        assert_eq!(t_hand.iterations, t_zoo.iterations, "{name}: iteration counts diverged");
+    }
+}
+
+/// Full `run_study` is byte-identical (serialized through the cache
+/// codec) between the hand-built plan at `jobs = 1` and the
+/// manifest-built plan at `jobs ∈ {1, 4}` — cold pipelines each time, so
+/// every run actually computes rather than reading a shared cache.
+#[test]
+fn manifest_builtins_study_byte_identical_across_jobs() {
+    for name in BUILTINS {
+        let mut opt = StudyOptions {
+            n_configs: 3,
+            fp_epochs: 2,
+            qat_epochs: 1,
+            eval_n: 128,
+            seed: 11,
+            ..Default::default()
+        };
+        opt.trace.max_iters = 24;
+
+        let study = |rt: &Runtime, jobs: usize, tag: &str| {
+            let dir = cold_dir(&format!("{name}_{tag}"));
+            let pipe = Pipeline::new(&dir).expect("pipeline");
+            let mut o = opt.clone();
+            o.jobs = jobs;
+            let s = run_study(rt, &pipe, name, &o).expect("study");
+            std::fs::remove_dir_all(&dir).ok();
+            study_bytes(s)
+        };
+
+        let hand = study(&hand_runtime(), 1, "hand_j1");
+        let zoo_j1 = study(&zoo_runtime(name), 1, "zoo_j1");
+        let zoo_j4 = study(&zoo_runtime(name), 4, "zoo_j4");
+        assert_eq!(hand, zoo_j1, "{name}: hand vs manifest study bytes diverged");
+        assert_eq!(zoo_j1, zoo_j4, "{name}: jobs=4 study bytes diverged");
+    }
+}
+
+/// Key separation: a genuinely different manifest model must never
+/// collide with a builtin's digests (the other half of the digest rule).
+#[test]
+fn new_manifest_model_gets_its_own_digests() {
+    let rt = Runtime::native_with_zoo(
+        1,
+        vec![zoo_path("cnn_cifar_deep"), zoo_path("cnn_cifar_bn")],
+    )
+    .expect("zoo runtime");
+    let deep = rt.model("cnn_cifar_deep").unwrap();
+    let bn = rt.model("cnn_cifar_bn").unwrap();
+    assert_ne!(
+        train_fp_key("native", deep, 2, 7),
+        train_fp_key("native", bn, 2, 7),
+        "different architectures must separate in the train digest"
+    );
+    let opt = StudyOptions::default();
+    assert_ne!(
+        study_key("native", deep, &opt),
+        study_key("native", bn, &opt),
+        "…and in the study digest"
+    );
+}
+
+/// The zero-Rust-change claim, end to end: the manifest-only
+/// `cnn_cifar_deep` (4 conv stages — no builder knows it) trains,
+/// traces, and completes a full study on the native backend.
+#[test]
+fn manifest_only_model_runs_train_trace_study() {
+    let rt = Runtime::native_with_zoo(1, vec![zoo_path("cnn_cifar_deep")]).expect("zoo runtime");
+    let mm = rt.model("cnn_cifar_deep").unwrap();
+    assert_eq!(mm.n_weight_blocks(), 5, "4 convs + fc");
+    assert_eq!(mm.n_act_blocks(), 4, "one activation block per conv");
+
+    let mut opt = StudyOptions {
+        n_configs: 2,
+        fp_epochs: 1,
+        qat_epochs: 1,
+        eval_n: 128,
+        seed: 13,
+        ..Default::default()
+    };
+    opt.trace.max_iters = 16;
+    let dir = cold_dir("deep_e2e");
+    let pipe = Pipeline::new(&dir).expect("pipeline");
+    let s = run_study(&rt, &pipe, "cnn_cifar_deep", &opt).expect("study on a manifest-only model");
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(s.model, "cnn_cifar_deep");
+    assert_eq!(s.outcomes.len(), 2);
+    assert!(s.fp_test_score.is_finite());
+    assert_eq!(s.sens.inputs.w_traces.len(), 5);
+    assert_eq!(s.sens.inputs.a_traces.len(), 4);
+}
