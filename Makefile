@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring bench-native bench-smoke check-bench-schema check-manifests
+.PHONY: artifacts test bench bench-scoring bench-native bench-smoke check-bench-schema check-manifests check-faults
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -40,3 +40,14 @@ check-bench-schema:
 # (parse + compile; DESIGN.md "Model manifests").
 check-manifests:
 	cargo run --release --bin fitq -- zoo-check zoo/*.json
+
+# Fault drills (DESIGN.md "Failure model"): the deterministic
+# fault-injection suite — every registered site degrades to a recompute
+# or a typed error, with recovery bit-identical to the fault-free
+# baseline — then a CLI-level smoke where a $FITQ_FAULTS-armed run
+# publishes one corrupt entry and `fitq cache verify` must quarantine
+# it and exit nonzero.
+check-faults:
+	cargo test -q --test fault_injection
+	cargo build --release
+	bash scripts/check_faults.sh

@@ -20,8 +20,15 @@
 //! stream starts at a cursor derived from `(study seed, config index)` —
 //! never from shared trainer state — so `jobs = 1` and `jobs = N` produce
 //! bit-identical outcomes and correlations.
+//!
+//! The sweep *degrades* instead of aborting: a configuration whose QAT run
+//! errors or panics becomes a [`ConfigFailure`] entry (surfaced in the
+//! study report) while every other configuration completes normally, and
+//! correlations are computed over the surviving outcomes. A degraded study
+//! is never cached — rerunning after the fault is fixed recomputes the
+//! full table, bit-identical to a run that never faulted.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::parallel::{self, derive_seed};
 use super::pipeline::Pipeline;
@@ -77,6 +84,20 @@ pub struct ConfigOutcome {
     pub mean_bits: f64,
 }
 
+/// One configuration of the sweep that failed to train or evaluate —
+/// recorded in the study instead of aborting the run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigFailure {
+    /// Sweep index of the failed configuration.
+    pub index: usize,
+    /// Compact human identity of the configuration (bit widths).
+    pub label: String,
+    /// Whether the job panicked (vs returned an error).
+    pub panicked: bool,
+    /// Stringified cause.
+    pub error: String,
+}
+
 #[derive(Debug, Clone)]
 pub struct StudyResult {
     pub model: String,
@@ -85,6 +106,10 @@ pub struct StudyResult {
     pub sens: SensitivityReport,
     /// metric name -> spearman rank correlation of (-metric) vs test score.
     pub correlations: Vec<(Metric, Option<f64>)>,
+    /// Configurations that failed (empty on a clean run). Correlations and
+    /// outcomes cover only the surviving configurations; a study with
+    /// failures is reported but never cached.
+    pub failures: Vec<ConfigFailure>,
 }
 
 impl StudyResult {
@@ -99,17 +124,26 @@ impl StudyResult {
 /// sensitivity report come from `pipe` (computed once per process and
 /// across processes), and the finished outcome table is itself cached —
 /// a warm rerun with the same options (any `jobs` value) decodes the
-/// stored study and reproduces the cold run bit-for-bit.
+/// stored study and reproduces the cold run bit-for-bit. Processes racing
+/// the same cold study coordinate through the cache's lease layer
+/// ([`Pipeline::study_coordinated`]), so only one of them sweeps.
 pub fn run_study(
     rt: &Runtime,
     pipe: &Pipeline,
     model: &str,
     opt: &StudyOptions,
 ) -> Result<StudyResult> {
-    if let Some(cached) = pipe.study_cached(rt, model, opt) {
-        eprintln!("  [{model}] study loaded from cache");
-        return Ok(cached);
-    }
+    pipe.study_coordinated(rt, model, opt, || compute_study(rt, pipe, model, opt))
+}
+
+/// The uncached study computation (stages 1-5 above); callers go through
+/// [`run_study`], which wraps this in cache + lease coordination.
+fn compute_study(
+    rt: &Runtime,
+    pipe: &Pipeline,
+    model: &str,
+    opt: &StudyOptions,
+) -> Result<StudyResult> {
     let ds = dataset_for(rt, model, opt.seed ^ 0xda7a)?;
     let mm = rt.model(model)?.clone();
     let trainer = Trainer::new(rt, ds.as_ref());
@@ -139,17 +173,16 @@ pub fn run_study(
         opt.seed ^ 0x5a395a39,
     );
     let configs = sampler.take(opt.n_configs);
-    let outcomes = if parallel::effective_jobs(opt.jobs, configs.len()) <= 1 {
-        let mut out = Vec::with_capacity(configs.len());
-        for (i, cfg) in configs.iter().enumerate() {
-            out.push(evaluate_config(
-                rt, ds.as_ref(), fp, sens, &ftab, &ev, &ev_train, cfg, opt, i,
-            )?);
+    let slots = if parallel::effective_jobs(opt.jobs, configs.len()) <= 1 {
+        parallel::run_serial_fallible(configs.len(), &mut (), |_, i| {
+            let r = evaluate_config(
+                rt, ds.as_ref(), fp, sens, &ftab, &ev, &ev_train, &configs[i], opt, i,
+            );
             if (i + 1) % 20 == 0 {
                 eprintln!("  [{model}] config {}/{}", i + 1, configs.len());
             }
-        }
-        out
+            r
+        })
     } else {
         eprintln!(
             "  [{model}] sweeping {} configs on {} workers",
@@ -159,7 +192,7 @@ pub fn run_study(
         // per-config QAT workers run the backend serially: the sweep
         // already saturates the budget with independent configs
         let spec = rt.spec().intra_serial();
-        parallel::run_pool(
+        parallel::run_pool_fallible(
             configs.len(),
             opt.jobs,
             || Runtime::from_spec(&spec),
@@ -170,6 +203,37 @@ pub fn run_study(
             },
         )?
     };
+
+    // Degrade, don't abort: failed configs become report entries and the
+    // survivors carry the study (the sweep is N independent experiments).
+    let mut outcomes = Vec::with_capacity(slots.len());
+    let mut failures = Vec::new();
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Ok(o) => outcomes.push(o),
+            Err(e) => {
+                let label = configs[i].label();
+                eprintln!(
+                    "  [{model}] config {}/{} {label} degraded: {e}",
+                    i + 1,
+                    configs.len()
+                );
+                failures.push(ConfigFailure {
+                    index: i,
+                    label,
+                    panicked: e.panicked,
+                    error: e.message,
+                });
+            }
+        }
+    }
+    if outcomes.is_empty() {
+        bail!(
+            "[{model}] every configuration of the sweep failed ({} failures; first: {})",
+            failures.len(),
+            failures.first().map(|f| f.error.as_str()).unwrap_or("?")
+        );
+    }
 
     // 5. correlations: metric predicts degradation, so correlate against
     // -metric (higher metric -> lower accuracy); report positive rho for a
@@ -188,15 +252,14 @@ pub fn run_study(
         })
         .collect();
 
-    let res = StudyResult {
+    Ok(StudyResult {
         model: model.to_string(),
         fp_test_score: fp_eval.score,
         outcomes,
         sens: sens.clone(),
         correlations,
-    };
-    pipe.study_store(rt, model, opt, &res)?;
-    Ok(res)
+        failures,
+    })
 }
 
 /// Score, QAT-fine-tune and evaluate one configuration of the sweep.

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::coordinator::evaluator::{metric_value, run_study, StudyOptions};
 use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
-use crate::coordinator::report::{md_table, Reporter};
+use crate::coordinator::report::{degraded_section, md_table, Reporter};
 use crate::metrics::Metric;
 use crate::runtime::Runtime;
 
@@ -107,11 +107,12 @@ pub fn run(rt: &Runtime, pipe: &Pipeline, opt: &Fig4Options) -> Result<()> {
     )?;
 
     let rho = res.correlation(Metric::Fit).unwrap_or(f64::NAN);
+    let degraded = degraded_section("unet", &res.failures);
     let md = format!(
         "# Fig 4 — U-Net / synthetic segmentation\n\n\
          - FP mIoU: {:.3}\n\
          - EF trace early-stopped at tol={} after **{} iterations** (paper: 82)\n\
-         - rank correlation FIT vs mIoU over {} configs: **{:.2}** (paper: 0.86)\n\n{}\n",
+         - rank correlation FIT vs mIoU over {} configs: **{:.2}** (paper: 0.86)\n\n{}\n{degraded}",
         res.fp_test_score,
         opt.study.trace.tol,
         res.sens.trace.iterations,

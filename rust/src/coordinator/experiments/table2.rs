@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::coordinator::evaluator::{metric_value, run_study, StudyOptions, StudyResult};
 use crate::coordinator::experiments::STUDIES;
 use crate::coordinator::pipeline::{ExpOptions, Pipeline, StageRequest};
-use crate::coordinator::report::{fmt, md_table, Reporter};
+use crate::coordinator::report::{degraded_section, fmt, md_table, Reporter};
 use crate::metrics::Metric;
 use crate::quant::PRECISIONS;
 use crate::runtime::Runtime;
@@ -171,10 +171,15 @@ pub fn run(
     header.push("FIT(vs train acc)");
     header.push("FP score");
 
+    // per-experiment failure sections (empty strings on clean runs)
+    let degraded: String = results
+        .iter()
+        .map(|(exp, res)| degraded_section(&format!("experiment {exp}"), &res.failures))
+        .collect();
     let md = format!(
         "# Table 2 — rank correlation (Spearman) of sensitivity metrics vs final accuracy\n\n\
          {} configs per experiment, bits in {:?}, QAT fine-tune {} epochs.\n\n{}\n\n\
-         ## FIT fusion check (paper: FIT_A inclusion helps, QR_A hurts)\n\n{}\n",
+         ## FIT fusion check (paper: FIT_A inclusion helps, QR_A hurts)\n\n{}\n{degraded}",
         opt.study.n_configs,
         PRECISIONS,
         opt.study.qat_epochs,

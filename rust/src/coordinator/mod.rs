@@ -30,9 +30,11 @@ pub mod traces;
 pub mod trainer;
 
 pub use allocate::{exact_allocate, exact_allocate_table};
-pub use evaluator::{run_study, StudyOptions, StudyResult};
-pub use parallel::{derive_seed, run_pool};
-pub use pipeline::{Pipeline, StageCounters, StageRequest};
+pub use evaluator::{run_study, ConfigFailure, StudyOptions, StudyResult};
+pub use parallel::{
+    derive_seed, run_pool, run_pool_fallible, run_serial_fallible, run_static_caught, JobError,
+};
+pub use pipeline::{FaultPlan, Pipeline, StageCounters, StageRequest};
 pub use search::{
     greedy_allocate, greedy_allocate_naive, greedy_allocate_table, pareto_front,
     pareto_front_scores, score, ScoredConfig,

@@ -22,10 +22,25 @@
 //! timing-sensitive experiments (Table 1/3 speedups) should use `jobs = 1`
 //! when the per-iteration times are the quantity of interest. All numeric
 //! outputs other than wall-clock are unaffected.
+//!
+//! **Panic isolation.** Every job (and every worker `init`) runs under
+//! `catch_unwind`: a panicking job becomes an error instead of tearing
+//! down the worker thread (and with it the whole process via scope join).
+//! [`run_pool`] keeps its abort-on-first-error contract — a panic is just
+//! another failing job. [`run_pool_fallible`] is the degrading variant the
+//! study sweep uses: every job's outcome is returned as a
+//! `Result<T, JobError>` slot, a panicked worker's state is rebuilt with a
+//! fresh `init()` before it claims more work (the old state may hold a
+//! broken invariant), and non-failing jobs keep bit-identity with the
+//! serial path because job→result assignment stays a pure function of the
+//! index. [`run_static_caught`] is the same idea for the static scheduler.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use anyhow::{anyhow, Result};
+
+use crate::coordinator::pipeline::fault::{self, site};
 
 /// Derive an independent 64-bit seed for job `index` of a study seeded with
 /// `study_seed` (splitmix64-style finalizer).
@@ -43,6 +58,74 @@ pub fn derive_seed(study_seed: u64, index: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
     z ^ (z >> 31)
+}
+
+/// One job's failure inside a fallible pool: which index, whether it
+/// panicked (vs returned an error), and the stringified cause. Stringified
+/// deliberately — job errors cross thread and serialization boundaries
+/// (study reports persist them), so they carry no live error chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobError {
+    pub index: usize,
+    pub panicked: bool,
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let how = if self.panicked { "panicked" } else { "failed" };
+        write!(f, "job {} {how}: {}", self.index, self.message)
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Best-effort human message out of a caught panic payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `work(state, i)` under `catch_unwind`, flattening panics and errors
+/// into [`JobError`]. The `parallel.job.panic` injection site lives here,
+/// inside the catch region, so the harness exercises the real unwind path.
+///
+/// `AssertUnwindSafe` caveat: after a panic the state may hold a broken
+/// invariant — callers must either stop using it (abort-on-error pool) or
+/// rebuild it via `init` (fallible pool) before the next job.
+fn call_caught<W, T, F>(state: &mut W, i: usize, work: &F) -> std::result::Result<T, JobError>
+where
+    F: Fn(&mut W, usize) -> Result<T>,
+{
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        if fault::fires(site::PARALLEL_JOB_PANIC) {
+            panic!("injected fault: worker job {i} panicked");
+        }
+        work(state, i)
+    }));
+    match caught {
+        Ok(Ok(t)) => Ok(t),
+        Ok(Err(e)) => Err(JobError { index: i, panicked: false, message: format!("{e:#}") }),
+        Err(p) => Err(JobError { index: i, panicked: true, message: panic_message(&p) }),
+    }
+}
+
+/// Worker-state construction under `catch_unwind`: a panicking `init`
+/// (e.g. inside Runtime bring-up) degrades to an init error instead of
+/// aborting the scope.
+fn init_caught<W, I>(init: &I) -> Result<W>
+where
+    I: Fn() -> Result<W>,
+{
+    match catch_unwind(AssertUnwindSafe(init)) {
+        Ok(r) => r,
+        Err(p) => Err(anyhow!("worker init panicked: {}", panic_message(&p))),
+    }
 }
 
 /// Resolve a `--jobs` setting: `0` means "one worker per available core",
@@ -71,7 +154,9 @@ pub fn effective_jobs(jobs: usize, n: usize) -> usize {
 /// flight finish), and the lowest-index failure among the executed jobs is
 /// returned as the error; if a worker fails to initialize and some jobs
 /// were consequently never executed, that initialization error is returned
-/// instead.
+/// instead. A *panicking* job is caught and counts as a failing job — it
+/// aborts the sweep with a typed error, never the process. Sweeps that
+/// should degrade per job instead of aborting use [`run_pool_fallible`].
 pub fn run_pool<W, T, I, F>(n: usize, jobs: usize, init: I, work: F) -> Result<Vec<T>>
 where
     T: Send,
@@ -80,8 +165,24 @@ where
 {
     let jobs = effective_jobs(jobs, n);
     if jobs <= 1 {
-        let mut w = init()?;
-        return (0..n).map(|i| work(&mut w, i)).collect();
+        let mut w = init_caught(&init)?;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                if fault::fires(site::PARALLEL_JOB_PANIC) {
+                    panic!("injected fault: worker job {i} panicked");
+                }
+                work(&mut w, i)
+            }));
+            match r {
+                Ok(Ok(t)) => out.push(t),
+                Ok(Err(e)) => return Err(e.context(format!("parallel job {i} failed"))),
+                Err(p) => {
+                    return Err(anyhow!("parallel job {i} panicked: {}", panic_message(&p)))
+                }
+            }
+        }
+        return Ok(out);
     }
 
     let counter = AtomicUsize::new(0);
@@ -95,7 +196,7 @@ where
                 .map(|_| {
                     scope.spawn(|| {
                         let mut out = Vec::new();
-                        let mut state = match init() {
+                        let mut state = match init_caught(&init) {
                             Ok(w) => w,
                             Err(e) => {
                                 stop.store(true, Ordering::Relaxed);
@@ -107,7 +208,21 @@ where
                             if i >= n {
                                 break;
                             }
-                            let r = work(&mut state, i);
+                            let r = match catch_unwind(AssertUnwindSafe(|| {
+                                if fault::fires(site::PARALLEL_JOB_PANIC) {
+                                    panic!("injected fault: worker job {i} panicked");
+                                }
+                                work(&mut state, i)
+                            })) {
+                                Ok(r) => r,
+                                Err(p) => Err(anyhow!(
+                                    "parallel job {i} panicked: {}",
+                                    panic_message(&p)
+                                )),
+                            };
+                            // A panic (or error) raises `stop`, so the
+                            // possibly-poisoned state is never handed
+                            // another job before the loop exits.
                             if r.is_err() {
                                 stop.store(true, Ordering::Relaxed);
                             }
@@ -154,6 +269,137 @@ where
         return Err(e);
     }
     Ok(out)
+}
+
+/// Degrading variant of [`run_pool`]: every job's outcome comes back as a
+/// `Result<T, JobError>` slot in index order, and a failing (or panicking)
+/// job never stops the sweep — one poisoned config degrades one slot, not
+/// a million-config run.
+///
+/// After a *panicked* job the worker's state is rebuilt with a fresh
+/// `init()` before it claims more work, since the old state may have been
+/// unwound mid-update. Errors returned by `work` leave the state in place
+/// (returning `Err` is a normal, invariant-preserving exit). If a worker's
+/// (re-)`init` fails its remaining share is picked up by the other
+/// workers; jobs that never executed because *every* worker died are
+/// reported as failed slots carrying the init error, and the call itself
+/// only errors when no worker ever initialized (nothing executed at all).
+///
+/// Bit-identity: non-failing jobs produce the same bytes at every `jobs`
+/// value — job→result assignment is a pure function of the index, exactly
+/// as in [`run_pool`].
+pub fn run_pool_fallible<W, T, I, F>(
+    n: usize,
+    jobs: usize,
+    init: I,
+    work: F,
+) -> Result<Vec<std::result::Result<T, JobError>>>
+where
+    T: Send,
+    I: Fn() -> Result<W> + Sync,
+    F: Fn(&mut W, usize) -> Result<T> + Sync,
+{
+    let jobs = effective_jobs(jobs, n);
+    if jobs <= 1 {
+        let mut w = init_caught(&init)?;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let r = call_caught(&mut w, i, &work);
+            let poisoned = r.as_ref().is_err_and(|je| je.panicked);
+            out.push(r);
+            if poisoned && i + 1 < n {
+                w = init_caught(&init)?;
+            }
+        }
+        return Ok(out);
+    }
+
+    let counter = AtomicUsize::new(0);
+    let per_worker: Vec<(Vec<(usize, std::result::Result<T, JobError>)>, Option<anyhow::Error>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..jobs)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out = Vec::new();
+                        let mut state = match init_caught(&init) {
+                            Ok(w) => w,
+                            Err(e) => return (out, Some(e)),
+                        };
+                        loop {
+                            let i = counter.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let r = call_caught(&mut state, i, &work);
+                            let poisoned = r.as_ref().is_err_and(|je| je.panicked);
+                            out.push((i, r));
+                            if poisoned {
+                                // the unwound state may hold a broken
+                                // invariant — rebuild before the next job
+                                state = match init_caught(&init) {
+                                    Ok(w) => w,
+                                    Err(e) => return (out, Some(e)),
+                                };
+                            }
+                        }
+                        (out, None)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fitq worker thread panicked"))
+                .collect()
+        });
+
+    let mut init_errors = Vec::new();
+    let mut executed = 0usize;
+    let mut slots: Vec<Option<std::result::Result<T, JobError>>> = (0..n).map(|_| None).collect();
+    for (results, init_err) in per_worker {
+        executed += results.len();
+        for (i, r) in results {
+            slots[i] = Some(r);
+        }
+        if let Some(e) = init_err {
+            init_errors.push(e);
+        }
+    }
+    if executed == 0 {
+        if let Some(e) = init_errors.pop() {
+            return Err(e.context("worker initialization failed"));
+        }
+    }
+    let init_msg = init_errors
+        .first()
+        .map(|e| format!("never executed: worker init failed: {e:#}"))
+        .unwrap_or_else(|| "never executed: pool exited early".to_string());
+    Ok(slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.unwrap_or_else(|| {
+                Err(JobError { index: i, panicked: false, message: init_msg.clone() })
+            })
+        })
+        .collect())
+}
+
+/// Serial counterpart of [`run_pool_fallible`] for state that cannot
+/// cross threads (the caller's own non-`Sync` `Runtime`): every job runs
+/// under `catch_unwind` on the calling thread and degrades to a
+/// [`JobError`] slot, same injection site included. Unlike the pool, the
+/// state is *reused* after a panic — it must be unwind-tolerant (at worst
+/// losing interior cache entries), which `Runtime` is: its interior
+/// mutability is memoization, and unwinding drops any live borrow guards.
+pub fn run_serial_fallible<W, T, F>(
+    n: usize,
+    state: &mut W,
+    work: F,
+) -> Vec<std::result::Result<T, JobError>>
+where
+    F: Fn(&mut W, usize) -> Result<T>,
+{
+    (0..n).map(|i| call_caught(state, i, &work)).collect()
 }
 
 /// Run one closure per item on `threads` scoped worker threads with a
@@ -216,6 +462,84 @@ where
             }
         }
     });
+}
+
+/// Fallible variant of [`run_static`]: each `f(index, item)` call runs
+/// under `catch_unwind`, a panicking item degrades to a [`JobError`] while
+/// the rest of its chunk (and every other chunk) still executes, and the
+/// collected errors come back sorted by index. `Ok(())` means every item
+/// ran clean. `f` must be per-item stateless (it is `Fn`), so continuing
+/// a chunk after one item unwound is sound.
+pub fn run_static_caught<T, F>(
+    items: Vec<T>,
+    threads: usize,
+    f: F,
+) -> std::result::Result<(), Vec<JobError>>
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let call = |i: usize, item: T| -> Option<JobError> {
+        match catch_unwind(AssertUnwindSafe(|| f(i, item))) {
+            Ok(()) => None,
+            Err(p) => Some(JobError { index: i, panicked: true, message: panic_message(&p) }),
+        }
+    };
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    let mut errors: Vec<JobError> = if threads <= 1 {
+        items.into_iter().enumerate().filter_map(|(i, item)| call(i, item)).collect()
+    } else {
+        let mut chunks: Vec<(usize, Vec<T>)> = Vec::with_capacity(threads);
+        let mut it = items.into_iter();
+        let mut base = 0usize;
+        for t in 0..threads {
+            let len = n / threads + usize::from(t < n % threads);
+            chunks.push((base, it.by_ref().take(len).collect()));
+            base += len;
+        }
+        std::thread::scope(|scope| {
+            let mut own = None;
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .enumerate()
+                .filter_map(|(t, chunk)| {
+                    if t == 0 {
+                        own = Some(chunk);
+                        return None;
+                    }
+                    let callr = &call;
+                    Some(scope.spawn(move || {
+                        let (cbase, citems) = chunk;
+                        citems
+                            .into_iter()
+                            .enumerate()
+                            .filter_map(|(off, item)| callr(cbase + off, item))
+                            .collect::<Vec<_>>()
+                    }))
+                })
+                .collect();
+            let mut errs: Vec<JobError> = own
+                .map(|(cbase, citems)| {
+                    citems
+                        .into_iter()
+                        .enumerate()
+                        .filter_map(|(off, item)| call(cbase + off, item))
+                        .collect()
+                })
+                .unwrap_or_default();
+            for h in handles {
+                errs.extend(h.join().expect("fitq worker thread panicked"));
+            }
+            errs
+        })
+    };
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        errors.sort_by_key(|e| e.index);
+        Err(errors)
+    }
 }
 
 #[cfg(test)]
@@ -334,5 +658,150 @@ mod tests {
         let items: Vec<&mut u8> = hits.iter_mut().collect();
         run_static(items, 9, |_, h| *h += 1);
         assert_eq!(hits, vec![1, 1]);
+    }
+
+    #[test]
+    fn pool_converts_job_panic_to_typed_error() {
+        for jobs in [1usize, 4] {
+            let r: Result<Vec<usize>> = run_pool(
+                12,
+                jobs,
+                || Ok(()),
+                |_, i| {
+                    if i == 2 {
+                        panic!("wrecked at {i}");
+                    }
+                    Ok(i)
+                },
+            );
+            let msg = format!("{:#}", r.unwrap_err());
+            assert!(msg.contains("panicked"), "jobs={jobs}: {msg}");
+            assert!(msg.contains("wrecked at 2"), "jobs={jobs}: {msg}");
+        }
+    }
+
+    #[test]
+    fn pool_converts_init_panic_to_error() {
+        let r: Result<Vec<usize>> = run_pool(
+            4,
+            2,
+            || -> Result<()> { panic!("init exploded") },
+            |_, i| Ok(i),
+        );
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("init panicked"), "{msg}");
+        assert!(msg.contains("init exploded"), "{msg}");
+    }
+
+    #[test]
+    fn fallible_pool_degrades_per_job_and_keeps_the_rest() {
+        for jobs in [1usize, 3] {
+            let out = run_pool_fallible(
+                10,
+                jobs,
+                || Ok(()),
+                |_, i| match i {
+                    3 => Err(anyhow!("bad config {i}")),
+                    5 => panic!("poisoned config {i}"),
+                    _ => Ok(i * 10),
+                },
+            )
+            .unwrap();
+            assert_eq!(out.len(), 10);
+            for (i, slot) in out.iter().enumerate() {
+                match i {
+                    3 => {
+                        let e = slot.as_ref().unwrap_err();
+                        assert!(!e.panicked);
+                        assert!(e.message.contains("bad config 3"), "{e}");
+                        assert_eq!(e.index, 3);
+                    }
+                    5 => {
+                        let e = slot.as_ref().unwrap_err();
+                        assert!(e.panicked);
+                        assert!(e.message.contains("poisoned config 5"), "{e}");
+                    }
+                    _ => assert_eq!(*slot.as_ref().unwrap(), i * 10, "jobs={jobs}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fallible_pool_rebuilds_state_after_panic() {
+        use std::sync::atomic::AtomicUsize;
+        let inits = AtomicUsize::new(0);
+        let out = run_pool_fallible(
+            4,
+            1,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Ok(0u64)
+            },
+            |w, i| {
+                if i == 0 {
+                    *w = 999; // poison, then unwind mid-update
+                    panic!("die at 0");
+                }
+                *w += 1;
+                Ok(*w)
+            },
+        )
+        .unwrap();
+        assert_eq!(inits.load(Ordering::Relaxed), 2, "state rebuilt after the panic");
+        assert!(out[0].as_ref().unwrap_err().panicked);
+        // jobs 1..3 ran on the *fresh* state: 1, 2, 3 — never 1000
+        let rest: Vec<u64> = out[1..].iter().map(|r| *r.as_ref().unwrap()).collect();
+        assert_eq!(rest, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn fallible_pool_surfaces_total_init_failure() {
+        let r = run_pool_fallible(4, 3, || Err::<(), _>(anyhow!("no runtime")), |_, i| Ok(i));
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("no runtime"), "{msg}");
+    }
+
+    #[test]
+    fn fallible_pool_fires_injected_panic_site() {
+        use crate::coordinator::pipeline::fault::FaultPlan;
+        let scope = fault::scoped(FaultPlan::single(site::PARALLEL_JOB_PANIC));
+        let out = run_pool_fallible(6, 2, || Ok(()), |_, i| Ok(i)).unwrap();
+        let failed: Vec<&JobError> = out.iter().filter_map(|r| r.as_ref().err()).collect();
+        assert_eq!(failed.len(), 1, "exactly one injected failure");
+        assert!(failed[0].panicked);
+        assert!(failed[0].message.contains("injected fault"), "{}", failed[0]);
+        assert_eq!(scope.fired(site::PARALLEL_JOB_PANIC), 1);
+        let ok: Vec<usize> = out.iter().filter_map(|r| r.as_ref().ok().copied()).collect();
+        assert_eq!(ok.len(), 5, "non-failing jobs all survived");
+    }
+
+    #[test]
+    fn run_static_caught_collects_panics_and_finishes_the_rest() {
+        use std::sync::atomic::AtomicU32;
+        for threads in [1usize, 3] {
+            let ran = AtomicU32::new(0);
+            let err = run_static_caught((0..7).collect::<Vec<usize>>(), threads, |i, item| {
+                assert_eq!(i, item);
+                ran.fetch_add(1 << i, Ordering::Relaxed);
+                if i == 2 || i == 5 {
+                    panic!("item {i} down");
+                }
+            })
+            .unwrap_err();
+            let idx: Vec<usize> = err.iter().map(|e| e.index).collect();
+            assert_eq!(idx, vec![2, 5], "threads={threads}");
+            assert!(err.iter().all(|e| e.panicked));
+            assert_eq!(ran.load(Ordering::Relaxed), 0b111_1111, "every item executed");
+        }
+        assert!(run_static_caught(vec![1, 2], 2, |_, _| {}).is_ok());
+    }
+
+    #[test]
+    fn job_error_display_names_index_and_mode() {
+        let e = JobError { index: 7, panicked: true, message: "kaboom".into() };
+        assert_eq!(e.to_string(), "job 7 panicked: kaboom");
+        let e = JobError { index: 3, panicked: false, message: "bad input".into() };
+        assert_eq!(e.to_string(), "job 3 failed: bad input");
     }
 }

@@ -14,27 +14,225 @@
 //! kind, key digest, length, and the payload's own digest — and returns
 //! `None` on any mismatch, so corrupt, truncated, renamed, or stale entries
 //! degrade to a recompute, never to wrong results. Writes go through a
-//! temp file + rename so a crash mid-write leaves no half-entry behind.
+//! per-writer temp file (pid + counter suffix, so concurrent writers never
+//! truncate each other's in-flight bytes) + rename, so a crash mid-write
+//! leaves no half-entry behind.
+//!
+//! # Leases
+//!
+//! N processes sharing one cache dir coordinate cold stages through
+//! `<kind>_<key-hex>.lease` files and [`try_claim`](ArtifactCache::try_claim):
+//! an atomic create-new of the lease file wins the claim; the record inside
+//! carries `(pid, monotonic token, expiry)` plus a self-digest, and peers
+//! that lose the race poll the entry until the winner publishes or the
+//! lease expires. A lease that is expired *or unparsable* is stale and
+//! gets reaped (rename to a `.tmp` name, then unlink — only one reaper's
+//! rename succeeds), after which the takeover retries the create-new.
+//! [`LeaseGuard`] releases on drop — including on panic unwind — and only
+//! unlinks the file if it still holds this guard's own `(pid, token)`.
+//!
+//! The contract is intentionally *exactly-once in the common case, at-least
+//! once under faults*: artifacts are deterministic, stores are atomic, and
+//! a duplicate computation publishes byte-identical content, so the rare
+//! takeover race (a lease released and re-acquired in the instant between
+//! a peer's staleness check and its reap rename) costs a redundant compute
+//! and never a wrong or corrupt result.
+//!
+//! # Recovery
+//!
+//! [`verify`](ArtifactCache::verify) rescans the store and moves entries
+//! that fail validation (or `.bin` files the store cannot even address)
+//! into `quarantine/`; [`gc`](ArtifactCache::gc) reaps expired or mangled
+//! leases and aged-out temp files; [`stats`](ArtifactCache::stats)
+//! summarizes what is on disk. All three back the `fitq cache` CLI.
 
+use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::codec::{ByteReader, ByteWriter};
 use super::digest::{digest_bytes, Digest};
+use super::fault::{self, site};
 
 const MAGIC: &[u8; 8] = b"FITQCACH";
 /// Version of the container layout itself (headers), independent of the
 /// per-kind payload schema versions in `codec`.
 pub const CONTAINER_VERSION: u32 = 1;
 
+const LEASE_MAGIC: &[u8; 8] = b"FITQLEAS";
+/// Version of the lease-record layout.
+pub const LEASE_VERSION: u32 = 1;
+
 static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+/// Per-process monotonic lease token; `(pid, token)` identifies one
+/// acquisition uniquely, so a guard never unlinks a lease it no longer
+/// owns (e.g. after an expiry + takeover by a peer).
+static LEASE_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+fn now_unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Timing policy for lease coordination. All three knobs have env
+/// overrides (`FITQ_LEASE_TTL_MS`, `FITQ_LEASE_POLL_MS`,
+/// `FITQ_LEASE_MAX_WAIT_MS`) so tests and operators can shrink or stretch
+/// the windows without recompiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseConfig {
+    /// How long a freshly written lease is considered held. Must exceed
+    /// the slowest stage computation; an expired lease is taken over.
+    pub ttl: Duration,
+    /// Sleep between polls while waiting for a peer's computation.
+    pub poll: Duration,
+    /// Total time a non-holder waits before giving up on the peer and
+    /// computing locally (the at-least-once fallback).
+    pub max_wait: Duration,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> Self {
+        LeaseConfig {
+            ttl: Duration::from_secs(600),
+            poll: Duration::from_millis(50),
+            max_wait: Duration::from_secs(600),
+        }
+    }
+}
+
+impl LeaseConfig {
+    /// Defaults with `FITQ_LEASE_{TTL,POLL,MAX_WAIT}_MS` applied on top.
+    /// Unparsable values are ignored (the default wins) — lease timing is
+    /// policy, not correctness, so this knob does not fail closed.
+    pub fn from_env() -> LeaseConfig {
+        fn ms(var: &str) -> Option<Duration> {
+            std::env::var(var).ok()?.trim().parse::<u64>().ok().map(Duration::from_millis)
+        }
+        let d = LeaseConfig::default();
+        LeaseConfig {
+            ttl: ms("FITQ_LEASE_TTL_MS").unwrap_or(d.ttl),
+            poll: ms("FITQ_LEASE_POLL_MS").unwrap_or(d.poll),
+            max_wait: ms("FITQ_LEASE_MAX_WAIT_MS").unwrap_or(d.max_wait),
+        }
+    }
+}
+
+/// The record inside a lease file. Encoded with a trailing self-digest;
+/// [`parse`](LeaseRecord::parse) fails closed, and *any* parse failure is
+/// treated by readers as stale-and-reapable — a mangled lease can delay a
+/// claim by one reap, never wedge a key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseRecord {
+    pub pid: u32,
+    pub token: u64,
+    pub expires_unix_ms: u64,
+}
+
+impl LeaseRecord {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.raw(LEASE_MAGIC);
+        w.u32(LEASE_VERSION);
+        w.u32(self.pid);
+        w.u64(self.token);
+        w.u64(self.expires_unix_ms);
+        let mut bytes = w.into_bytes();
+        let digest = digest_bytes(&bytes);
+        bytes.extend_from_slice(&digest.to_le_bytes());
+        bytes
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<LeaseRecord> {
+        let mut r = ByteReader::new(bytes);
+        if r.raw(8)? != LEASE_MAGIC {
+            bail!("bad lease magic");
+        }
+        if r.u32()? != LEASE_VERSION {
+            bail!("lease version skew");
+        }
+        let rec = LeaseRecord { pid: r.u32()?, token: r.u64()?, expires_unix_ms: r.u64()? };
+        let stored = Digest::from_le_bytes(r.raw(16)?.try_into().unwrap());
+        r.done()?;
+        let body_len = bytes.len() - 16;
+        if digest_bytes(&bytes[..body_len]) != stored {
+            bail!("lease record digest mismatch");
+        }
+        Ok(rec)
+    }
+
+    pub fn expired(&self, now_ms: u64) -> bool {
+        self.expires_unix_ms <= now_ms
+    }
+}
+
+/// Outcome of a single (non-blocking) claim attempt.
+#[derive(Debug)]
+pub enum Claim {
+    /// This caller holds the lease and must compute + publish (then
+    /// release, or let the guard's drop release on unwind).
+    Won(LeaseGuard),
+    /// A peer holds a valid lease; poll the cache entry and retry after
+    /// `expires_unix_ms` if it never appears.
+    Busy { expires_unix_ms: u64 },
+}
+
+/// Held lease; releasing unlinks the file iff it still contains this
+/// guard's `(pid, token)`. Drop releases too, so a panicking stage
+/// computation cannot leave the key wedged for a full TTL.
+#[derive(Debug)]
+pub struct LeaseGuard {
+    path: PathBuf,
+    pid: u32,
+    token: u64,
+    released: bool,
+}
+
+impl LeaseGuard {
+    /// Explicit release (same as drop, but callable at the natural point
+    /// right after the entry is published).
+    pub fn release(mut self) {
+        self.release_inner();
+    }
+
+    fn release_inner(&mut self) {
+        if self.released {
+            return;
+        }
+        self.released = true;
+        if fault::fires(site::LEASE_RELEASE_UNLINK_FAIL) {
+            // Injected: the unlink is lost. The abandoned lease must age
+            // out via its expiry, not wedge the key forever.
+            return;
+        }
+        // Only unlink our own record — after an expiry + takeover the
+        // path may hold a peer's fresh lease.
+        let ours = std::fs::read(&self.path)
+            .ok()
+            .and_then(|b| LeaseRecord::parse(&b).ok())
+            .is_some_and(|rec| rec.pid == self.pid && rec.token == self.token);
+        if ours {
+            std::fs::remove_file(&self.path).ok();
+        }
+    }
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        self.release_inner();
+    }
+}
 
 /// A directory of digest-keyed, header-validated binary entries.
 #[derive(Debug, Clone)]
 pub struct ArtifactCache {
     dir: PathBuf,
+    lease: LeaseConfig,
 }
 
 impl ArtifactCache {
@@ -42,16 +240,41 @@ impl ArtifactCache {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        Ok(ArtifactCache { dir })
+        Ok(ArtifactCache { dir, lease: LeaseConfig::default() })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    pub fn lease_config(&self) -> LeaseConfig {
+        self.lease
+    }
+
+    pub fn set_lease_config(&mut self, cfg: LeaseConfig) {
+        self.lease = cfg;
+    }
+
     /// On-disk location of an entry (exists or not).
     pub fn entry_path(&self, kind: &str, key: &Digest) -> PathBuf {
         self.dir.join(format!("{kind}_{}.bin", key.hex()))
+    }
+
+    /// On-disk location of the lease coordinating an entry's computation.
+    pub fn lease_path(&self, kind: &str, key: &Digest) -> PathBuf {
+        self.dir.join(format!("{kind}_{}.lease", key.hex()))
+    }
+
+    /// Unique in-flight temp name for an entry write: pid + per-process
+    /// counter suffix, so concurrent writers (threads *or* processes)
+    /// never collide on the same temp path.
+    fn tmp_path(&self, kind: &str, key: &Digest) -> PathBuf {
+        self.dir.join(format!(
+            ".{kind}_{}.{}.{}.tmp",
+            key.hex(),
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ))
     }
 
     /// Write an entry atomically (temp file + rename). Overwrites any
@@ -66,15 +289,32 @@ impl ArtifactCache {
         w.u64(payload.len() as u64);
         w.raw(&digest_bytes(payload).to_le_bytes());
         w.raw(payload);
+        let mut bytes = w.into_bytes();
+        // Injection sites: the first three publish a *corrupt* entry (the
+        // write "succeeds" but the bytes are wrong — torn tail, flipped
+        // header byte, flipped payload byte); load-side validation must
+        // turn each into a miss. The last two fail the write itself.
+        if fault::fires(site::CACHE_STORE_SHORT_WRITE) {
+            bytes.truncate(bytes.len() / 2);
+        }
+        if fault::fires(site::CACHE_STORE_HEADER_CORRUPT) {
+            bytes[9] ^= 0xff; // inside the container-version u32
+        }
+        if fault::fires(site::CACHE_STORE_PAYLOAD_CORRUPT) {
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0xff;
+        }
+        if fault::fires(site::CACHE_STORE_TMP_WRITE_FAIL) {
+            bail!("injected fault: cache tmp write failed for {kind}_{}", key.hex());
+        }
         let path = self.entry_path(kind, key);
-        let tmp = self.dir.join(format!(
-            ".{kind}_{}.{}.{}.tmp",
-            key.hex(),
-            std::process::id(),
-            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
-        ));
-        std::fs::write(&tmp, w.into_bytes())
+        let tmp = self.tmp_path(kind, key);
+        std::fs::write(&tmp, bytes)
             .with_context(|| format!("writing cache entry {}", tmp.display()))?;
+        if fault::fires(site::CACHE_STORE_RENAME_FAIL) {
+            // The orphaned temp file stays behind — `cache gc` fodder.
+            bail!("injected fault: cache publish rename failed for {}", tmp.display());
+        }
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("publishing cache entry {}", path.display()))?;
         Ok(path)
@@ -84,11 +324,17 @@ impl ArtifactCache {
     /// magic, version skew, wrong kind/key, truncation, payload-digest
     /// mismatch) is a miss.
     pub fn load(&self, kind: &str, schema: u32, key: &Digest) -> Option<Vec<u8>> {
-        let bytes = std::fs::read(self.entry_path(kind, key)).ok()?;
-        Self::validate(&bytes, kind, schema, key).ok()
+        if fault::fires(site::CACHE_LOAD_READ_FAIL) {
+            return None; // injected EIO: degrade to a miss
+        }
+        let mut bytes = std::fs::read(self.entry_path(kind, key)).ok()?;
+        if fault::fires(site::CACHE_LOAD_TORN_READ) {
+            bytes.truncate(bytes.len() / 2);
+        }
+        Self::validate(&bytes, kind, Some(schema), key).ok()
     }
 
-    fn validate(bytes: &[u8], kind: &str, schema: u32, key: &Digest) -> Result<Vec<u8>> {
+    fn validate(bytes: &[u8], kind: &str, schema: Option<u32>, key: &Digest) -> Result<Vec<u8>> {
         let mut r = ByteReader::new(bytes);
         if r.raw(8)? != MAGIC {
             bail!("bad magic");
@@ -99,7 +345,8 @@ impl ArtifactCache {
         if r.str()? != kind {
             bail!("kind mismatch");
         }
-        if r.u32()? != schema {
+        let got_schema = r.u32()?;
+        if schema.is_some_and(|s| s != got_schema) {
             bail!("schema version skew");
         }
         if Digest::from_le_bytes(r.raw(16)?.try_into().unwrap()) != *key {
@@ -114,6 +361,226 @@ impl ArtifactCache {
         }
         Ok(payload)
     }
+
+    /// One non-blocking claim pass over `(kind, key)`'s lease: win it,
+    /// report it busy, or (transparently) reap a stale lease and retry the
+    /// create, a bounded number of times. Never sleeps — the block/poll
+    /// loop lives in the caller so it can interleave cache polls.
+    pub fn try_claim(&self, kind: &str, key: &Digest) -> Result<Claim> {
+        let path = self.lease_path(kind, key);
+        // Bounded retries: each iteration either creates the lease or
+        // observes/reaps an existing one. Contention can consume
+        // iterations, so on exhaustion we report Busy (callers poll and
+        // come back) rather than erroring.
+        for _ in 0..8 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let rec = LeaseRecord {
+                        pid: std::process::id(),
+                        token: LEASE_TOKEN.fetch_add(1, Ordering::Relaxed),
+                        expires_unix_ms: now_unix_ms() + self.lease.ttl.as_millis() as u64,
+                    };
+                    let mut bytes = rec.encode();
+                    if fault::fires(site::LEASE_ACQUIRE_RECORD_CORRUPT) {
+                        let mid = bytes.len() / 2;
+                        bytes[mid] ^= 0xff;
+                    }
+                    f.write_all(&bytes)
+                        .with_context(|| format!("writing lease {}", path.display()))?;
+                    drop(f);
+                    if fault::fires(site::LEASE_ACQUIRE_HOLDER_DEATH) {
+                        // Injected: the holder dies after writing its
+                        // lease — no guard, no release. Peers (and this
+                        // process's own retries) must take over after TTL.
+                        bail!(
+                            "injected fault: lease holder died before releasing {}",
+                            path.display()
+                        );
+                    }
+                    return Ok(Claim::Won(LeaseGuard {
+                        path,
+                        pid: rec.pid,
+                        token: rec.token,
+                        released: false,
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let now = now_unix_ms();
+                    let held = std::fs::read(&path)
+                        .ok()
+                        .and_then(|b| LeaseRecord::parse(&b).ok())
+                        .filter(|rec| !rec.expired(now));
+                    if let Some(rec) = held {
+                        return Ok(Claim::Busy { expires_unix_ms: rec.expires_unix_ms });
+                    }
+                    // Stale (expired) or unparsable (corrupt / torn /
+                    // foreign bytes): reap and retry. Rename first so only
+                    // one of several concurrent reapers proceeds.
+                    if fault::fires(site::LEASE_TAKEOVER_REAP_FAIL) {
+                        continue; // injected: this reap attempt is lost
+                    }
+                    let reap = self.dir.join(format!(
+                        ".{kind}_{}.reap.{}.{}.tmp",
+                        key.hex(),
+                        std::process::id(),
+                        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+                    ));
+                    if std::fs::rename(&path, &reap).is_ok() {
+                        std::fs::remove_file(&reap).ok();
+                    }
+                    // Either way, loop: create_new decides the next winner.
+                }
+                Err(e) => {
+                    return Err(anyhow!(e).context(format!("creating lease {}", path.display())));
+                }
+            }
+        }
+        Ok(Claim::Busy { expires_unix_ms: now_unix_ms() })
+    }
+
+    /// Scan every `.bin` entry, re-validating headers and payload digests
+    /// (schema-agnostic: version skew is staleness, not corruption), and
+    /// move entries that fail — or `.bin` files whose names the store
+    /// cannot even address — into `quarantine/`. Read-only for valid
+    /// entries; never deletes bytes, only relocates them.
+    pub fn verify(&self) -> Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        for (path, name) in self.scan(".bin")? {
+            let ok = match parse_entry_name(&name) {
+                Some((kind, key)) => std::fs::read(&path)
+                    .ok()
+                    .and_then(|bytes| Self::validate(&bytes, &kind, None, &key).ok())
+                    .is_some(),
+                None => false, // unaddressable .bin in the store's namespace
+            };
+            if ok {
+                report.valid += 1;
+            } else {
+                let qdir = self.dir.join("quarantine");
+                std::fs::create_dir_all(&qdir)
+                    .with_context(|| format!("creating {}", qdir.display()))?;
+                let dest = qdir.join(&name);
+                std::fs::rename(&path, &dest)
+                    .with_context(|| format!("quarantining {}", path.display()))?;
+                report.quarantined.push(dest);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Reap expired or unparsable leases and temp files older than
+    /// `tmp_max_age` (orphans from crashed or fault-injected writers).
+    /// Live leases are counted but left alone.
+    pub fn gc(&self, tmp_max_age: Duration) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        let now = now_unix_ms();
+        for (path, _) in self.scan(".lease")? {
+            let live = std::fs::read(&path)
+                .ok()
+                .and_then(|b| LeaseRecord::parse(&b).ok())
+                .is_some_and(|rec| !rec.expired(now));
+            if live {
+                report.leases_live += 1;
+            } else if std::fs::remove_file(&path).is_ok() {
+                report.leases_reaped += 1;
+            }
+        }
+        for (path, _) in self.scan(".tmp")? {
+            let old = std::fs::metadata(&path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| SystemTime::now().duration_since(t).ok())
+                .is_some_and(|age| age >= tmp_max_age);
+            if old && std::fs::remove_file(&path).is_ok() {
+                report.tmp_reaped += 1;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Per-kind entry counts and sizes, plus lease / temp / quarantine
+    /// counts. Purely informational.
+    pub fn stats(&self) -> Result<StatsReport> {
+        let mut kinds: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        let mut unaddressable = 0_u64;
+        for (path, name) in self.scan(".bin")? {
+            let size = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            match parse_entry_name(&name) {
+                Some((kind, _)) => {
+                    let e = kinds.entry(kind).or_insert((0, 0));
+                    e.0 += 1;
+                    e.1 += size;
+                }
+                None => unaddressable += 1,
+            }
+        }
+        let leases = self.scan(".lease")?.len() as u64;
+        let tmp_files = self.scan(".tmp")?.len() as u64;
+        let quarantined = match std::fs::read_dir(self.dir.join("quarantine")) {
+            Ok(rd) => rd.filter_map(|e| e.ok()).count() as u64,
+            Err(_) => 0,
+        };
+        Ok(StatsReport { kinds, unaddressable, leases, tmp_files, quarantined })
+    }
+
+    /// Sorted `(path, file name)` list of regular files in the cache dir
+    /// with the given suffix. Skips subdirectories (`quarantine/`).
+    fn scan(&self, suffix: &str) -> Result<Vec<(PathBuf, String)>> {
+        let rd = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("reading cache dir {}", self.dir.display()))?;
+        let mut out = Vec::new();
+        for entry in rd {
+            let entry = entry.with_context(|| format!("reading {}", self.dir.display()))?;
+            if !entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+                continue;
+            }
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(suffix) {
+                out.push((entry.path(), name));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// `<kind>_<32 lower hex>.bin` → `(kind, key)`; `None` for anything the
+/// store would never have written (kind may itself contain `_`, so the
+/// split is anchored at the *last* underscore).
+fn parse_entry_name(name: &str) -> Option<(String, Digest)> {
+    let stem = name.strip_suffix(".bin")?;
+    let (kind, hex) = stem.rsplit_once('_')?;
+    if kind.is_empty() || kind.starts_with('.') {
+        return None;
+    }
+    Some((kind.to_string(), Digest::from_hex(hex)?))
+}
+
+/// Outcome of [`ArtifactCache::verify`].
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub valid: u64,
+    /// New (post-move) locations of everything quarantined.
+    pub quarantined: Vec<PathBuf>,
+}
+
+/// Outcome of [`ArtifactCache::gc`].
+#[derive(Debug, Default)]
+pub struct GcReport {
+    pub leases_live: u64,
+    pub leases_reaped: u64,
+    pub tmp_reaped: u64,
+}
+
+/// Outcome of [`ArtifactCache::stats`].
+#[derive(Debug, Default)]
+pub struct StatsReport {
+    /// kind → (entry count, total bytes).
+    pub kinds: BTreeMap<String, (u64, u64)>,
+    pub unaddressable: u64,
+    pub leases: u64,
+    pub tmp_files: u64,
+    pub quarantined: u64,
 }
 
 #[cfg(test)]
@@ -121,10 +588,13 @@ mod tests {
     use super::*;
     use crate::coordinator::pipeline::digest::Hasher;
 
-    fn tmp_cache(tag: &str) -> ArtifactCache {
+    /// Each test holds a quiet fault scope alongside its cache: the empty
+    /// plan fires nothing, but holding the process-wide scope lock keeps
+    /// a sibling fault-harness test from injecting into this test's IO.
+    fn tmp_cache(tag: &str) -> (fault::FaultScope, ArtifactCache) {
         let dir = std::env::temp_dir().join(format!("fitq_cache_{tag}_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
-        ArtifactCache::new(&dir).unwrap()
+        (fault::scoped(fault::FaultPlan::default()), ArtifactCache::new(&dir).unwrap())
     }
 
     fn key(n: u64) -> Digest {
@@ -133,7 +603,7 @@ mod tests {
 
     #[test]
     fn roundtrip_hits() {
-        let c = tmp_cache("roundtrip");
+        let (_quiet, c) = tmp_cache("roundtrip");
         let k = key(1);
         let payload = b"stage output bytes".to_vec();
         c.store("trace", 1, &k, &payload).unwrap();
@@ -143,7 +613,7 @@ mod tests {
 
     #[test]
     fn missing_wrong_kind_or_wrong_key_miss() {
-        let c = tmp_cache("miss");
+        let (_quiet, c) = tmp_cache("miss");
         let k = key(2);
         assert_eq!(c.load("trace", 1, &k), None, "missing file");
         c.store("trace", 1, &k, b"x").unwrap();
@@ -154,7 +624,7 @@ mod tests {
 
     #[test]
     fn schema_bump_invalidates() {
-        let c = tmp_cache("schema");
+        let (_quiet, c) = tmp_cache("schema");
         let k = key(4);
         c.store("study", 1, &k, b"v1 payload").unwrap();
         assert!(c.load("study", 1, &k).is_some());
@@ -164,7 +634,7 @@ mod tests {
 
     #[test]
     fn truncated_and_corrupt_entries_miss() {
-        let c = tmp_cache("corrupt");
+        let (_quiet, c) = tmp_cache("corrupt");
         let k = key(5);
         let path = c.store("ckpt", 1, &k, b"a long enough payload").unwrap();
         let full = std::fs::read(&path).unwrap();
@@ -186,7 +656,7 @@ mod tests {
 
     #[test]
     fn entry_paths_are_digest_addressed() {
-        let c = tmp_cache("paths");
+        let (_quiet, c) = tmp_cache("paths");
         let k = key(6);
         let p = c.entry_path("trace", &k);
         let name = p.file_name().unwrap().to_string_lossy().into_owned();
@@ -194,5 +664,257 @@ mod tests {
         assert!(name.ends_with(".bin"));
         assert!(name.contains(&k.hex()));
         std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    /// Regression pin for the tmp-file collision fix: concurrent writers
+    /// of the same `(kind, key)` must get distinct in-flight temp paths
+    /// (pid + per-process counter suffix), so one can never truncate a
+    /// peer's half-written bytes.
+    #[test]
+    fn tmp_paths_are_unique_per_writer() {
+        let (_quiet, c) = tmp_cache("tmpnames");
+        let k = key(7);
+        let a = c.tmp_path("trace", &k);
+        let b = c.tmp_path("trace", &k);
+        assert_ne!(a, b, "same process, same key: still distinct temp names");
+        let name = a.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.starts_with('.') && name.ends_with(".tmp"));
+        assert!(
+            name.contains(&format!(".{}.", std::process::id())),
+            "tmp name {name} must embed the writer pid"
+        );
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    /// The end-to-end face of the same fix: writers racing one key each
+    /// publish through their own temp file, so the survivor is a complete
+    /// valid entry and nothing in-flight is left behind.
+    #[test]
+    fn racing_stores_to_one_key_leave_a_single_valid_entry_and_no_tmps() {
+        let (_quiet, c) = tmp_cache("racingstores");
+        let k = key(9);
+        let payload: Vec<u8> = (0..1024u32).map(|i| (i % 253) as u8).collect();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (c, payload) = (&c, &payload);
+                s.spawn(move || c.store("trace", 1, &k, payload).unwrap());
+            }
+        });
+        assert_eq!(c.load("trace", 1, &k), Some(payload), "survivor must validate");
+        let leftovers: Vec<String> = std::fs::read_dir(c.dir())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "in-flight temp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn lease_record_roundtrip_and_any_bitflip_rejected() {
+        let rec = LeaseRecord { pid: 4321, token: 99, expires_unix_ms: 1_700_000_000_123 };
+        let bytes = rec.encode();
+        assert_eq!(LeaseRecord::parse(&bytes).unwrap(), rec);
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0x01;
+            assert!(LeaseRecord::parse(&m).is_err(), "bitflip at {i} accepted");
+        }
+        assert!(LeaseRecord::parse(&bytes[..bytes.len() - 1]).is_err(), "truncated");
+        assert!(LeaseRecord::parse(&[]).is_err(), "empty");
+    }
+
+    #[test]
+    fn claim_win_busy_release_cycle() {
+        let (_quiet, c) = tmp_cache("claim");
+        let k = key(8);
+        let guard = match c.try_claim("trace", &k).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("cold key must be claimable"),
+        };
+        assert!(c.lease_path("trace", &k).exists());
+        // Same process, second claimant: busy (leases are per-key, not
+        // per-process — a second pipeline in this process must also wait).
+        match c.try_claim("trace", &k).unwrap() {
+            Claim::Busy { expires_unix_ms } => assert!(expires_unix_ms > now_unix_ms()),
+            Claim::Won(_) => panic!("held lease re-won"),
+        }
+        guard.release();
+        assert!(!c.lease_path("trace", &k).exists(), "release unlinks");
+        assert!(matches!(c.try_claim("trace", &k).unwrap(), Claim::Won(_)));
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn guard_drop_releases_even_without_explicit_release() {
+        let (_quiet, c) = tmp_cache("drop");
+        let k = key(9);
+        {
+            let _guard = match c.try_claim("sens", &k).unwrap() {
+                Claim::Won(g) => g,
+                Claim::Busy { .. } => panic!("cold key must be claimable"),
+            };
+            assert!(c.lease_path("sens", &k).exists());
+        }
+        assert!(!c.lease_path("sens", &k).exists(), "drop released the lease");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn expired_lease_is_taken_over() {
+        let (_quiet, mut c) = tmp_cache("takeover");
+        c.set_lease_config(LeaseConfig { ttl: Duration::ZERO, ..LeaseConfig::default() });
+        let k = key(10);
+        let guard = match c.try_claim("trace", &k).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("cold key must be claimable"),
+        };
+        // Simulate the holder dying without releasing.
+        std::mem::forget(guard);
+        assert!(c.lease_path("trace", &k).exists());
+        // ttl=0 ⇒ already expired: the next claim reaps and wins.
+        let g2 = match c.try_claim("trace", &k).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("expired lease must be taken over"),
+        };
+        g2.release();
+        assert!(!c.lease_path("trace", &k).exists());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn mangled_lease_is_stale_never_held() {
+        let (_quiet, c) = tmp_cache("mangled");
+        let k = key(11);
+        std::fs::write(c.lease_path("trace", &k), b"not a lease record at all").unwrap();
+        match c.try_claim("trace", &k).unwrap() {
+            Claim::Won(g) => g.release(),
+            Claim::Busy { .. } => panic!("unparsable lease treated as held"),
+        }
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn stale_guard_does_not_unlink_successor_lease() {
+        let (_quiet, mut c) = tmp_cache("staleguard");
+        c.set_lease_config(LeaseConfig { ttl: Duration::ZERO, ..LeaseConfig::default() });
+        let k = key(12);
+        let old = match c.try_claim("trace", &k).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("cold key must be claimable"),
+        };
+        // A peer takes over the expired lease with a long-ttl config...
+        let mut c2 = ArtifactCache::new(c.dir()).unwrap();
+        c2.set_lease_config(LeaseConfig::default());
+        let fresh = match c2.try_claim("trace", &k).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("expired lease must be taken over"),
+        };
+        // ...and the original guard's late release must NOT unlink the
+        // successor's lease.
+        old.release();
+        assert!(c.lease_path("trace", &k).exists(), "successor lease survived");
+        fresh.release();
+        assert!(!c.lease_path("trace", &k).exists());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn verify_quarantines_corrupt_and_foreign_entries() {
+        let (_quiet, c) = tmp_cache("verify");
+        c.store("trace", 1, &key(13), b"good one").unwrap();
+        let bad = c.store("trace", 1, &key(14), b"about to corrupt").unwrap();
+        let mut bytes = std::fs::read(&bad).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&bad, bytes).unwrap();
+        std::fs::write(c.dir().join("garbage_entry.bin"), b"not ours").unwrap();
+
+        let report = c.verify().unwrap();
+        assert_eq!(report.valid, 1);
+        assert_eq!(report.quarantined.len(), 2);
+        for q in &report.quarantined {
+            assert!(q.exists(), "quarantined file kept at {}", q.display());
+            assert!(q.parent().unwrap().ends_with("quarantine"));
+        }
+        assert!(!bad.exists(), "corrupt entry moved out of the store");
+        assert!(c.load("trace", 1, &key(13)).is_some(), "good entry untouched");
+        // Idempotent: a second pass finds a clean store.
+        let again = c.verify().unwrap();
+        assert_eq!((again.valid, again.quarantined.len()), (1, 0));
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn gc_reaps_expired_leases_and_old_tmps_only() {
+        let (_quiet, mut c) = tmp_cache("gc");
+        c.set_lease_config(LeaseConfig { ttl: Duration::ZERO, ..LeaseConfig::default() });
+        let abandoned = match c.try_claim("trace", &key(15)).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("cold key must be claimable"),
+        };
+        std::mem::forget(abandoned); // expired (ttl=0) and never released
+        std::fs::write(c.lease_path("sens", &key(16)), b"mangled").unwrap();
+        std::fs::write(c.tmp_path("study", &key(17)), b"orphan write").unwrap();
+        let mut live_cache = ArtifactCache::new(c.dir()).unwrap();
+        live_cache.set_lease_config(LeaseConfig::default());
+        let live = match live_cache.try_claim("study", &key(18)).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("cold key must be claimable"),
+        };
+
+        let report = c.gc(Duration::ZERO).unwrap();
+        assert_eq!(report.leases_reaped, 2, "expired + mangled");
+        assert_eq!(report.leases_live, 1);
+        assert_eq!(report.tmp_reaped, 1);
+        assert!(live_cache.lease_path("study", &key(18)).exists(), "live lease kept");
+        // A generous age threshold leaves young tmps alone.
+        std::fs::write(c.tmp_path("study", &key(19)), b"fresh write").unwrap();
+        let report = c.gc(Duration::from_secs(3600)).unwrap();
+        assert_eq!(report.tmp_reaped, 0);
+        live.release();
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn stats_summarize_kinds_leases_tmps_quarantine() {
+        let (_quiet, c) = tmp_cache("stats");
+        c.store("trace", 1, &key(20), b"aaaa").unwrap();
+        c.store("trace", 1, &key(21), b"bbbb").unwrap();
+        c.store("train_fp", 1, &key(22), b"cc").unwrap();
+        std::fs::write(c.dir().join("garbage_entry.bin"), b"not ours").unwrap();
+        let g = match c.try_claim("study", &key(23)).unwrap() {
+            Claim::Won(g) => g,
+            Claim::Busy { .. } => panic!("cold key must be claimable"),
+        };
+        std::fs::write(c.tmp_path("study", &key(24)), b"orphan").unwrap();
+
+        let s = c.stats().unwrap();
+        assert_eq!(s.kinds.get("trace").map(|&(n, _)| n), Some(2));
+        assert_eq!(s.kinds.get("train_fp").map(|&(n, _)| n), Some(1));
+        assert!(s.kinds.get("trace").is_some_and(|&(_, b)| b > 0));
+        assert_eq!(s.unaddressable, 1);
+        assert_eq!(s.leases, 1);
+        assert_eq!(s.tmp_files, 1);
+        assert_eq!(s.quarantined, 0);
+        c.verify().unwrap(); // quarantines the garbage entry
+        assert_eq!(c.stats().unwrap().quarantined, 1);
+        g.release();
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn entry_name_parse_is_anchored_at_last_underscore() {
+        let k = key(25);
+        let hex = k.hex();
+        assert_eq!(
+            parse_entry_name(&format!("train_fp_{hex}.bin")),
+            Some(("train_fp".to_string(), k))
+        );
+        assert_eq!(parse_entry_name(&format!("trace_{hex}.txt")), None, "wrong suffix");
+        assert_eq!(parse_entry_name(&format!("_{hex}.bin")), None, "empty kind");
+        assert_eq!(parse_entry_name("trace_deadbeef.bin"), None, "short hex");
+        assert_eq!(parse_entry_name(&format!(".trace_{hex}.bin")), None, "hidden file");
+        assert_eq!(parse_entry_name("no-underscore.bin"), None);
     }
 }

@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Result};
 
-use super::super::evaluator::{ConfigOutcome, StudyResult};
+use super::super::evaluator::{ConfigFailure, ConfigOutcome, StudyResult};
 use super::super::sensitivity::SensitivityReport;
 use super::super::traces::{Estimator, TraceResult};
 use super::super::trainer::ActRanges;
@@ -29,7 +29,8 @@ use crate::quant::BitConfig;
 /// `SENSITIVITY_SCHEMA`.
 pub const TRACE_SCHEMA: u32 = 1;
 pub const SENSITIVITY_SCHEMA: u32 = 1;
-pub const STUDY_SCHEMA: u32 = 1;
+/// v2: appended the per-config failure list (degraded sweep slots).
+pub const STUDY_SCHEMA: u32 = 2;
 pub const CKPT_SCHEMA: u32 = 1;
 
 /// Little-endian byte sink for cache payloads and headers.
@@ -350,6 +351,13 @@ pub fn encode_study(s: &StudyResult) -> Vec<u8> {
         w.u8(metric_tag(m));
         w.opt_f64(v);
     }
+    w.u64(s.failures.len() as u64);
+    for f in &s.failures {
+        w.u64(f.index as u64);
+        w.str(&f.label);
+        w.bool(f.panicked);
+        w.str(&f.error);
+    }
     w.into_bytes()
 }
 
@@ -382,8 +390,18 @@ pub fn decode_study(bytes: &[u8]) -> Result<StudyResult> {
         let m = metric_from_tag(r.u8()?)?;
         correlations.push((m, r.opt_f64()?));
     }
+    let n_f = r.u64()? as usize;
+    let mut failures = Vec::with_capacity(n_f.min(r.remaining()));
+    for _ in 0..n_f {
+        failures.push(ConfigFailure {
+            index: r.u64()? as usize,
+            label: r.str()?,
+            panicked: r.bool()?,
+            error: r.str()?,
+        });
+    }
     r.done()?;
-    Ok(StudyResult { model, fp_test_score, outcomes, sens, correlations })
+    Ok(StudyResult { model, fp_test_score, outcomes, sens, correlations, failures })
 }
 
 #[cfg(test)]
@@ -458,6 +476,12 @@ mod tests {
             }],
             sens: sample_sensitivity(),
             correlations: vec![(Metric::Fit, Some(0.86)), (Metric::Qr, Some(f64::NAN))],
+            failures: vec![ConfigFailure {
+                index: 17,
+                label: "w[8,4] a[3]".into(),
+                panicked: true,
+                error: "worker job 17 panicked".into(),
+            }],
         };
         let bytes = encode_study(&s);
         let back = decode_study(&bytes).unwrap();
@@ -466,6 +490,7 @@ mod tests {
         assert_eq!(encode_study(&back), bytes);
         assert_eq!(back.outcomes[0].cfg, s.outcomes[0].cfg);
         assert_eq!(back.outcomes[0].metrics, s.outcomes[0].metrics);
+        assert_eq!(back.failures, s.failures);
     }
 
     #[test]

@@ -21,6 +21,16 @@ impl Digest {
         format!("{:032x}", self.0)
     }
 
+    /// Inverse of [`hex`](Digest::hex): parse the lower-case 32-char file
+    /// name form. `None` for anything else — used by `cache verify` to
+    /// decide whether a `.bin` file is even addressable by the store.
+    pub fn from_hex(hex: &str) -> Option<Digest> {
+        if hex.len() != 32 || !hex.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f')) {
+            return None;
+        }
+        u128::from_str_radix(hex, 16).ok().map(Digest)
+    }
+
     /// The raw 16 bytes, little-endian (cache header form).
     pub fn to_le_bytes(self) -> [u8; 16] {
         self.0.to_le_bytes()
@@ -130,5 +140,17 @@ mod tests {
         let d = digest_bytes(b"roundtrip");
         assert_eq!(Digest::from_le_bytes(d.to_le_bytes()), d);
         assert_eq!(d.hex().len(), 32);
+        assert_eq!(Digest::from_hex(&d.hex()), Some(d));
+    }
+
+    #[test]
+    fn from_hex_rejects_non_filename_forms() {
+        let ok = digest_bytes(b"x").hex();
+        assert!(Digest::from_hex(&ok).is_some());
+        assert_eq!(Digest::from_hex(&ok[..31]), None, "short");
+        assert_eq!(Digest::from_hex(&format!("{ok}0")), None, "long");
+        assert_eq!(Digest::from_hex(&ok.to_uppercase()), None, "uppercase");
+        assert_eq!(Digest::from_hex(&format!("+{}", &ok[..31])), None, "sign");
+        assert_eq!(Digest::from_hex(&format!("g{}", &ok[..31])), None, "non-hex");
     }
 }

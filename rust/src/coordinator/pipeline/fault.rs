@@ -1,0 +1,313 @@
+//! Deterministic fault injection for the artifact store and worker pool.
+//!
+//! Every failure path the pipeline claims to survive — torn writes,
+//! rename failures, header corruption, abandoned leases, mid-sweep worker
+//! panics — has a *named injection site* in `cache.rs` / `stages.rs` /
+//! `parallel.rs`. A [`FaultPlan`] arms a subset of those sites with a
+//! firing rule (first hit, Nth hit, or every hit); code at a site asks
+//! [`fires`] whether to inject. Unarmed, `fires` is a single relaxed
+//! atomic load returning `false`, so the hooks compile to effectively
+//! nothing on the production path.
+//!
+//! Arming is process-global:
+//!
+//! - the CLI arms from `$FITQ_FAULTS` at startup (`site`, `site@N` for
+//!   the Nth hit, `site@*` for every hit, comma-separated) — this is how
+//!   the CI fault smoke drives the real binary;
+//! - tests use [`scoped`], which holds a global lock for the scope's
+//!   lifetime so concurrently running fault tests serialize instead of
+//!   contaminating each other, and disarms on drop.
+//!
+//! The hit/fired counters are part of the contract: a fault test asserts
+//! its armed site actually fired, so a refactor that silently removes an
+//! injection site fails the suite instead of quietly passing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use anyhow::{bail, Result};
+
+/// Injection-site names, one constant per fault the harness can inject.
+/// `SITES` is the registry the fault suite iterates over.
+pub mod site {
+    /// Entry bytes truncated to half before the tmp-file write (torn write
+    /// published by a non-atomic filesystem / lost tail on power cut).
+    pub const CACHE_STORE_SHORT_WRITE: &str = "cache.store.short_write";
+    /// One container-header byte flipped before the write.
+    pub const CACHE_STORE_HEADER_CORRUPT: &str = "cache.store.header_corrupt";
+    /// One payload byte flipped before the write (header parses, payload
+    /// digest must catch it).
+    pub const CACHE_STORE_PAYLOAD_CORRUPT: &str = "cache.store.payload_corrupt";
+    /// The tmp-file write itself fails (disk full / EIO); nothing is left.
+    pub const CACHE_STORE_TMP_WRITE_FAIL: &str = "cache.store.tmp_write_fail";
+    /// The publishing rename fails; the orphaned tmp file stays behind
+    /// for `cache gc` to reap.
+    pub const CACHE_STORE_RENAME_FAIL: &str = "cache.store.rename_fail";
+    /// An entry read fails outright (EIO) — load degrades to a miss.
+    pub const CACHE_LOAD_READ_FAIL: &str = "cache.load.read_fail";
+    /// An entry read returns only a prefix of the file (torn read).
+    pub const CACHE_LOAD_TORN_READ: &str = "cache.load.torn_read";
+    /// The claimant writes its lease, then dies without computing or
+    /// releasing — peers must take the lease over once it expires.
+    pub const LEASE_ACQUIRE_HOLDER_DEATH: &str = "lease.acquire.holder_death";
+    /// The lease record is corrupted as written — peers must treat it as
+    /// stale-and-reapable, never as held.
+    pub const LEASE_ACQUIRE_RECORD_CORRUPT: &str = "lease.acquire.record_corrupt";
+    /// Releasing the lease fails to unlink it — the abandoned lease must
+    /// age out via its expiry, not wedge the key.
+    pub const LEASE_RELEASE_UNLINK_FAIL: &str = "lease.release.unlink_fail";
+    /// Reaping a stale lease during takeover fails once — the claimant
+    /// must retry, not give up or corrupt the store.
+    pub const LEASE_TAKEOVER_REAP_FAIL: &str = "lease.takeover.reap_fail";
+    /// A pooled worker job panics mid-flight — `run_pool_fallible` must
+    /// degrade that one job to a typed error.
+    pub const PARALLEL_JOB_PANIC: &str = "parallel.job.panic";
+    /// A stage computation panics under the claim guard — the guard must
+    /// release on unwind and the stage must surface a typed error.
+    pub const STAGE_COMPUTE_PANIC: &str = "stage.compute.panic";
+}
+
+/// Every registered injection site (the fault suite's iteration set).
+pub const SITES: &[&str] = &[
+    site::CACHE_STORE_SHORT_WRITE,
+    site::CACHE_STORE_HEADER_CORRUPT,
+    site::CACHE_STORE_PAYLOAD_CORRUPT,
+    site::CACHE_STORE_TMP_WRITE_FAIL,
+    site::CACHE_STORE_RENAME_FAIL,
+    site::CACHE_LOAD_READ_FAIL,
+    site::CACHE_LOAD_TORN_READ,
+    site::LEASE_ACQUIRE_HOLDER_DEATH,
+    site::LEASE_ACQUIRE_RECORD_CORRUPT,
+    site::LEASE_RELEASE_UNLINK_FAIL,
+    site::LEASE_TAKEOVER_REAP_FAIL,
+    site::PARALLEL_JOB_PANIC,
+    site::STAGE_COMPUTE_PANIC,
+];
+
+/// When an armed site injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Rule {
+    /// Fire exactly once, on the Nth hit (1-based).
+    Nth(u64),
+    /// Fire on every hit.
+    Every,
+}
+
+/// A set of armed sites with firing rules. Parsed from `$FITQ_FAULTS` or
+/// built programmatically; arming validates site names fail-closed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: Vec<(String, Rule)>,
+}
+
+impl FaultPlan {
+    /// Fire `site` once, on its first hit.
+    pub fn single(site: &str) -> FaultPlan {
+        FaultPlan { entries: vec![(site.to_string(), Rule::Nth(1))] }
+    }
+
+    /// Parse a `$FITQ_FAULTS` spec: comma-separated `site` (first hit),
+    /// `site@N` (Nth hit, 1-based), or `site@*` (every hit). Unknown site
+    /// names are an error — a typo must not silently disarm a fault run.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, rule) = match part.split_once('@') {
+                None => (part, Rule::Nth(1)),
+                Some((name, "*")) => (name, Rule::Every),
+                Some((name, n)) => {
+                    let n: u64 = n
+                        .parse()
+                        .ok()
+                        .filter(|&n| n >= 1)
+                        .ok_or_else(|| anyhow::anyhow!("bad fault hit count in {part:?}"))?;
+                    (name, Rule::Nth(n))
+                }
+            };
+            if !SITES.contains(&name) {
+                bail!(
+                    "unknown fault site {name:?}; registered sites: {}",
+                    SITES.join(", ")
+                );
+            }
+            entries.push((name.to_string(), rule));
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[derive(Debug, Default)]
+struct State {
+    plan: FaultPlan,
+    /// site -> (times reached, times fired)
+    counts: HashMap<&'static str, (u64, u64)>,
+}
+
+/// Fast-path gate: `fires` returns immediately when unarmed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+/// Held by [`scoped`] for a fault scope's whole lifetime, so concurrent
+/// fault tests in one process serialize instead of cross-firing.
+static SCOPE_LOCK: Mutex<()> = Mutex::new(());
+
+fn state() -> MutexGuard<'static, Option<State>> {
+    STATE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Record a hit at `site` and report whether the armed plan injects here.
+/// `site` must be one of [`SITES`] (hit accounting is keyed by the
+/// canonical `&'static str`).
+pub fn fires(site: &'static str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let mut guard = state();
+    let Some(st) = guard.as_mut() else {
+        return false;
+    };
+    let counts = st.counts.entry(site).or_insert((0, 0));
+    counts.0 += 1;
+    let n = counts.0;
+    let fire = st.plan.entries.iter().any(|(name, rule)| {
+        name == site
+            && match rule {
+                Rule::Every => true,
+                Rule::Nth(k) => *k == n,
+            }
+    });
+    if fire {
+        if let Some(c) = st.counts.get_mut(site) {
+            c.1 += 1;
+        }
+    }
+    fire
+}
+
+/// How many times `site` injected under the currently armed plan.
+pub fn fired(site: &str) -> u64 {
+    state()
+        .as_ref()
+        .and_then(|st| st.counts.get(site))
+        .map(|&(_, fired)| fired)
+        .unwrap_or(0)
+}
+
+pub fn is_armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm from `$FITQ_FAULTS` for the process lifetime (the CLI entry path).
+/// Unset or empty leaves the harness disarmed; a malformed spec is an
+/// error so a fault run can't silently become a clean run.
+pub fn arm_from_env() -> Result<()> {
+    let Some(spec) = std::env::var_os("FITQ_FAULTS") else {
+        return Ok(());
+    };
+    let plan = FaultPlan::parse(&spec.to_string_lossy())?;
+    if plan.is_empty() {
+        return Ok(());
+    }
+    eprintln!("[fault] armed from $FITQ_FAULTS: {plan:?}");
+    *state() = Some(State { plan, counts: HashMap::new() });
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Exclusive fault scope for tests: arms `plan`, serializes against every
+/// other scope in the process, disarms and clears counters on drop.
+pub fn scoped(plan: FaultPlan) -> FaultScope {
+    let lock = SCOPE_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    *state() = Some(State { plan, counts: HashMap::new() });
+    ARMED.store(true, Ordering::Relaxed);
+    FaultScope { _lock: lock }
+}
+
+/// Guard returned by [`scoped`]; dropping it disarms the harness.
+pub struct FaultScope {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl FaultScope {
+    /// Fired count for `site` within this scope.
+    pub fn fired(&self, site: &str) -> u64 {
+        fired(site)
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::Relaxed);
+        *state() = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_and_disarm_never_fire() {
+        {
+            let scope = scoped(FaultPlan::default());
+            assert!(!fires(site::CACHE_STORE_SHORT_WRITE), "empty plan fires nothing");
+            assert_eq!(scope.fired(site::CACHE_STORE_SHORT_WRITE), 0);
+        }
+        // scope dropped: fully disarmed again, counters cleared
+        let scope = scoped(FaultPlan::default());
+        assert!(is_armed());
+        assert_eq!(scope.fired(site::CACHE_STORE_SHORT_WRITE), 0);
+    }
+
+    #[test]
+    fn single_fires_exactly_once() {
+        let scope = scoped(FaultPlan::single(site::CACHE_LOAD_READ_FAIL));
+        assert!(fires(site::CACHE_LOAD_READ_FAIL), "first hit fires");
+        assert!(!fires(site::CACHE_LOAD_READ_FAIL), "second hit does not");
+        assert!(!fires(site::CACHE_LOAD_TORN_READ), "unarmed site never fires");
+        assert_eq!(scope.fired(site::CACHE_LOAD_READ_FAIL), 1);
+        assert_eq!(scope.fired(site::CACHE_LOAD_TORN_READ), 0);
+    }
+
+    #[test]
+    fn nth_and_every_rules() {
+        let plan = FaultPlan::parse(&format!(
+            "{}@2, {}@*",
+            site::CACHE_STORE_RENAME_FAIL,
+            site::PARALLEL_JOB_PANIC
+        ))
+        .unwrap();
+        let scope = scoped(plan);
+        assert!(!fires(site::CACHE_STORE_RENAME_FAIL), "hit 1 of @2");
+        assert!(fires(site::CACHE_STORE_RENAME_FAIL), "hit 2 of @2");
+        assert!(!fires(site::CACHE_STORE_RENAME_FAIL), "hit 3 of @2");
+        for _ in 0..3 {
+            assert!(fires(site::PARALLEL_JOB_PANIC), "@* fires every hit");
+        }
+        assert_eq!(scope.fired(site::PARALLEL_JOB_PANIC), 3);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_sites_and_bad_counts() {
+        assert!(FaultPlan::parse("no.such.site").is_err());
+        assert!(FaultPlan::parse(&format!("{}@0", site::PARALLEL_JOB_PANIC)).is_err());
+        assert!(FaultPlan::parse(&format!("{}@x", site::PARALLEL_JOB_PANIC)).is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        let p = FaultPlan::parse(&format!(" {} , {}@3 ", SITES[0], SITES[1])).unwrap();
+        assert_eq!(p.entries.len(), 2);
+    }
+
+    #[test]
+    fn sites_registry_is_unique() {
+        let mut names: Vec<&str> = SITES.to_vec();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate site name");
+        assert!(n >= 10, "acceptance floor: at least 10 registered sites");
+    }
+}

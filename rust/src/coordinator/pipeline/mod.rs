@@ -19,14 +19,23 @@
 //! - [`registry`]: the declarative experiment registry and the
 //!   cross-experiment scheduler that turns `experiment all` into a
 //!   stage-deduping DAG walk over `coordinator::parallel`.
+//! - [`fault`]: the deterministic fault-injection harness — named
+//!   injection sites in the cache/lease/worker paths, armed via
+//!   `$FITQ_FAULTS` or a test-scoped [`fault::FaultPlan`], no-ops when
+//!   unarmed.
 
 pub mod cache;
 pub mod codec;
 pub mod digest;
+pub mod fault;
 pub mod registry;
 pub mod stages;
 
-pub use cache::ArtifactCache;
+pub use cache::{
+    ArtifactCache, Claim, GcReport, LeaseConfig, LeaseGuard, LeaseRecord, StatsReport,
+    VerifyReport,
+};
 pub use digest::{digest_bytes, Digest, Hasher};
+pub use fault::FaultPlan;
 pub use registry::{ExpOptions, ExperimentSpec};
 pub use stages::{Pipeline, StageCounters, StageRequest};

@@ -19,18 +19,37 @@
 //! `Pipeline` is deliberately not `Send` (like `Runtime`): parallel phases
 //! give each worker its own `Pipeline` over the same cache directory,
 //! sharing only the atomic [`StageCounters`].
+//!
+//! # Cross-process coordination
+//!
+//! When several *processes* share one cache directory, each cold stage is
+//! claimed through the cache's lease layer before computing
+//! (`ArtifactCache::try_claim`): the winner computes and publishes, the
+//! losers poll for the published artifact and decode it. The contract is
+//! exactly-once in the common case and at-least-once under faults — if a
+//! lease holder dies, its lease expires and a waiter takes over; if the
+//! wait budget is exhausted, the waiter computes without a claim. Both
+//! fallbacks are harmless because stage outputs are deterministic in their
+//! key and stores are atomic: a duplicate compute publishes byte-identical
+//! bytes. Stage computations are panic-isolated (`catch_unwind`), so a
+//! poisoned job surfaces as a typed error with the lease released, never a
+//! stuck lease held by a dead thread.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::cache::ArtifactCache;
+use super::cache::{ArtifactCache, Claim, LeaseConfig, LeaseGuard};
 use super::codec;
+use super::fault::{self, site};
+use crate::coordinator::parallel::panic_message;
 use super::digest::{Digest, Hasher};
 use crate::coordinator::evaluator::{StudyOptions, StudyResult};
 use crate::coordinator::sensitivity::{gather, SensitivityReport};
@@ -55,6 +74,8 @@ pub struct StageCounters {
     traces: AtomicU64,
     sensitivity: AtomicU64,
     study: AtomicU64,
+    claims_won: AtomicU64,
+    claim_waits: AtomicU64,
 }
 
 impl StageCounters {
@@ -72,6 +93,18 @@ impl StageCounters {
 
     pub fn study_computed(&self) -> u64 {
         self.study.load(Ordering::Relaxed)
+    }
+
+    /// Stage leases this process won (each corresponds to one exclusive
+    /// compute-and-publish).
+    pub fn claims_won(&self) -> u64 {
+        self.claims_won.load(Ordering::Relaxed)
+    }
+
+    /// Cold stages this process waited out rather than computed — another
+    /// process held the lease.
+    pub fn claim_waits(&self) -> u64 {
+        self.claim_waits.load(Ordering::Relaxed)
     }
 }
 
@@ -244,7 +277,8 @@ impl Pipeline {
         counters: Arc<StageCounters>,
     ) -> Result<Pipeline> {
         let results_root = results_root.as_ref().to_path_buf();
-        let cache = ArtifactCache::new(results_root.join("cache"))?;
+        let mut cache = ArtifactCache::new(results_root.join("cache"))?;
+        cache.set_lease_config(LeaseConfig::from_env());
         Ok(Pipeline {
             results_root,
             cache,
@@ -252,6 +286,12 @@ impl Pipeline {
             memo_fp: RefCell::new(HashMap::new()),
             memo_sens: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// Override the lease policy (tests shorten the TTL/poll/wait budget
+    /// to exercise takeover paths in milliseconds).
+    pub fn set_lease_config(&mut self, cfg: LeaseConfig) {
+        self.cache.set_lease_config(cfg);
     }
 
     /// Pipeline over `$FITQ_RESULTS` (default `results/`), matching where
@@ -274,6 +314,107 @@ impl Pipeline {
         &self.cache
     }
 
+    /// Best-effort store: the artifact cache is an accelerator, not a
+    /// correctness dependency, so a failed publish (disk full, injected
+    /// fault) degrades to an uncached-but-correct run instead of aborting.
+    fn store_stage(&self, kind: &str, schema: u32, key: &Digest, payload: &[u8]) {
+        if let Err(e) = self.cache.store(kind, schema, key, payload) {
+            eprintln!("  [warn] failed to store {kind} artifact ({e:#}); continuing uncached");
+        }
+    }
+
+    /// Claim-coordinated compute-or-load of one stage artifact.
+    ///
+    /// Returns `(value, computed)` where `computed` is false when the value
+    /// was decoded from a peer's published artifact. The sequence:
+    ///
+    /// 1. load — someone may already have published;
+    /// 2. claim the key's lease; while another process holds it, poll for
+    ///    the published artifact (counted in [`StageCounters::claim_waits`]);
+    /// 3. on winning (fresh or by stale-lease takeover), re-check the cache
+    ///    (the previous holder may have published between our miss and the
+    ///    claim), else compute under `catch_unwind`, publish best-effort,
+    ///    and release the lease;
+    /// 4. if the wait budget (`LeaseConfig::max_wait`) is exhausted, compute
+    ///    without a claim — duplicate work, identical bytes.
+    ///
+    /// A panicking compute surfaces as a typed error *after* the lease is
+    /// released (release-on-drop), so a poisoned stage never wedges peers
+    /// for longer than one poll interval.
+    fn compute_exclusive<T>(
+        &self,
+        kind: &'static str,
+        schema: u32,
+        key: &Digest,
+        try_load: impl Fn(&[u8]) -> Option<T>,
+        encode: impl FnOnce(&T) -> Option<Vec<u8>>,
+        compute: impl FnOnce() -> Result<T>,
+    ) -> Result<(T, bool)> {
+        if let Some(v) = self.cache.load(kind, schema, key).and_then(|b| try_load(&b)) {
+            return Ok((v, false));
+        }
+        let lease = self.cache.lease_config();
+        let deadline = Instant::now() + lease.max_wait;
+        let mut waited = false;
+        let guard: Option<LeaseGuard> = loop {
+            match self.cache.try_claim(kind, key) {
+                Ok(Claim::Won(g)) => break Some(g),
+                Ok(Claim::Busy { .. }) => {}
+                // claim-layer errors are policy failures, not correctness
+                // failures: fall back to waiting, then to unguarded compute
+                Err(e) => eprintln!("  [warn] claiming {kind} lease failed ({e:#}); waiting"),
+            }
+            if !waited {
+                waited = true;
+                self.counters.claim_waits.fetch_add(1, Ordering::Relaxed);
+            }
+            if Instant::now() >= deadline {
+                eprintln!(
+                    "  [warn] lease wait for {kind} exceeded {:?}; computing without a claim",
+                    lease.max_wait
+                );
+                break None;
+            }
+            std::thread::sleep(lease.poll);
+            if let Some(v) = self.cache.load(kind, schema, key).and_then(|b| try_load(&b)) {
+                return Ok((v, false));
+            }
+        };
+        let guard = match guard {
+            Some(g) => {
+                self.counters.claims_won.fetch_add(1, Ordering::Relaxed);
+                if let Some(v) = self.cache.load(kind, schema, key).and_then(|b| try_load(&b)) {
+                    g.release();
+                    return Ok((v, false));
+                }
+                Some(g)
+            }
+            None => None,
+        };
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            if fault::fires(site::STAGE_COMPUTE_PANIC) {
+                panic!("injected fault: {}", site::STAGE_COMPUTE_PANIC);
+            }
+            compute()
+        }));
+        let out = match caught {
+            Ok(Ok(v)) => {
+                if let Some(payload) = encode(&v) {
+                    self.store_stage(kind, schema, key, &payload);
+                }
+                Ok((v, true))
+            }
+            Ok(Err(e)) => Err(e.context(format!("{kind} stage failed"))),
+            Err(p) => {
+                Err(anyhow!("{kind} stage panicked: {}", panic_message(p.as_ref())))
+            }
+        };
+        if let Some(g) = guard {
+            g.release();
+        }
+        out
+    }
+
     /// Load-or-train the FP checkpoint for `(model, epochs, seed)`.
     ///
     /// Training state is deterministic in the key (model init seed, data
@@ -293,39 +434,45 @@ impl Pipeline {
             return Ok(st.clone());
         }
         let n_params = rt.model(model)?.n_params;
-        let mut state: Option<ModelState> = None;
-        if let Some(bytes) = self.cache.load(KIND_TRAIN_FP, codec::CKPT_SCHEMA, &key) {
-            // undecodable or wrong-shape payloads fall through to recompute
-            if let Ok(st) = ModelState::from_bytes(&bytes, model) {
-                if st.n_params() == n_params {
-                    state = Some(st);
-                }
-            }
-        }
         // legacy results/ckpt/ checkpoints predate the native backend, so
         // their provenance is necessarily PJRT — adopting one under a
         // native key would be exactly the cross-backend mixing the
         // backend-qualified digests forbid
-        if state.is_none() && rt.backend_name() == "pjrt" {
-            state = self.adopt_legacy_ckpt(model, epochs, seed, n_params, &key)?;
-        }
-        let st = match state {
-            Some(st) => st,
-            None => {
-                let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
-                let mut trainer = Trainer::new(rt, ds.as_ref());
-                let mut st = ModelState::init(rt, model, seed as u32)?;
-                let losses = trainer.train(&mut st, epochs)?;
-                eprintln!(
-                    "  [{model}] FP trained {epochs} epochs, loss {:.4} -> {:.4}",
-                    losses.first().copied().unwrap_or(f64::NAN),
-                    losses.last().copied().unwrap_or(f64::NAN)
-                );
-                self.cache.store(KIND_TRAIN_FP, codec::CKPT_SCHEMA, &key, &st.to_bytes())?;
-                self.counters.train_fp.fetch_add(1, Ordering::Relaxed);
-                st
-            }
+        let adopted = if rt.backend_name() == "pjrt" {
+            self.adopt_legacy_ckpt(model, epochs, seed, n_params, &key)?
+        } else {
+            None
         };
+        let (st, computed) = match adopted {
+            Some(st) => (st, false),
+            None => self.compute_exclusive(
+                KIND_TRAIN_FP,
+                codec::CKPT_SCHEMA,
+                &key,
+                // undecodable or wrong-shape payloads fall through to recompute
+                |bytes| {
+                    ModelState::from_bytes(bytes, model)
+                        .ok()
+                        .filter(|st| st.n_params() == n_params)
+                },
+                |st| Some(st.to_bytes()),
+                || {
+                    let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+                    let mut trainer = Trainer::new(rt, ds.as_ref());
+                    let mut st = ModelState::init(rt, model, seed as u32)?;
+                    let losses = trainer.train(&mut st, epochs)?;
+                    eprintln!(
+                        "  [{model}] FP trained {epochs} epochs, loss {:.4} -> {:.4}",
+                        losses.first().copied().unwrap_or(f64::NAN),
+                        losses.last().copied().unwrap_or(f64::NAN)
+                    );
+                    Ok(st)
+                },
+            )?,
+        };
+        if computed {
+            self.counters.train_fp.fetch_add(1, Ordering::Relaxed);
+        }
         let rc = Rc::new(st);
         self.memo_fp.borrow_mut().insert(key, rc.clone());
         Ok(rc)
@@ -352,7 +499,7 @@ impl Pipeline {
         match ModelState::load(&legacy, model) {
             Ok(st) if st.n_params() == n_params => {
                 eprintln!("  [{model}] adopting legacy checkpoint {}", legacy.display());
-                self.cache.store(KIND_TRAIN_FP, codec::CKPT_SCHEMA, key, &st.to_bytes())?;
+                self.store_stage(KIND_TRAIN_FP, codec::CKPT_SCHEMA, key, &st.to_bytes());
                 Ok(Some(st))
             }
             _ => Ok(None),
@@ -375,22 +522,28 @@ impl Pipeline {
         if let Some(rep) = self.memo_sens.borrow().get(&key) {
             return Ok(rep.clone());
         }
-        if let Some(bytes) = self.cache.load(KIND_SENSITIVITY, codec::SENSITIVITY_SCHEMA, &key) {
-            if let Ok(rep) = codec::decode_sensitivity(&bytes) {
-                let rc = Rc::new(rep);
-                self.memo_sens.borrow_mut().insert(key, rc.clone());
-                return Ok(rc);
-            }
-        }
         let calib_b = rt.model(model)?.calib_b;
-        let st = self.train_fp(rt, model, fp_epochs, seed)?;
-        let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
-        let trainer = Trainer::new(rt, ds.as_ref());
-        let calib = EvalSet::materialize(ds.as_ref(), calib_b);
-        let rep = gather(&trainer, ds.as_ref(), &st, &calib, trace)?;
-        let payload = codec::encode_sensitivity(&rep);
-        self.cache.store(KIND_SENSITIVITY, codec::SENSITIVITY_SCHEMA, &key, &payload)?;
-        self.counters.sensitivity.fetch_add(1, Ordering::Relaxed);
+        // holding the sensitivity lease while waiting on the train_fp lease
+        // cannot deadlock: lease acquisition follows the stage DAG, so no
+        // process ever holds a downstream key while waiting on an upstream
+        // holder of *its* key
+        let (rep, computed) = self.compute_exclusive(
+            KIND_SENSITIVITY,
+            codec::SENSITIVITY_SCHEMA,
+            &key,
+            |bytes| codec::decode_sensitivity(bytes).ok(),
+            |rep| Some(codec::encode_sensitivity(rep)),
+            || {
+                let st = self.train_fp(rt, model, fp_epochs, seed)?;
+                let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+                let trainer = Trainer::new(rt, ds.as_ref());
+                let calib = EvalSet::materialize(ds.as_ref(), calib_b);
+                gather(&trainer, ds.as_ref(), &st, &calib, trace)
+            },
+        )?;
+        if computed {
+            self.counters.sensitivity.fetch_add(1, Ordering::Relaxed);
+        }
         let rc = Rc::new(rep);
         self.memo_sens.borrow_mut().insert(key, rc.clone());
         Ok(rc)
@@ -411,20 +564,20 @@ impl Pipeline {
         specs: &[(Estimator, TraceOptions)],
         jobs: usize,
     ) -> Result<Vec<TraceResult>> {
-        let mut out: Vec<Option<TraceResult>> = Vec::with_capacity(specs.len());
-        {
+        let keys: Vec<Digest> = {
             let mm = rt.model(model)?;
-            for (est, opt) in specs {
-                let key = trace_key(rt.backend_name(), mm, fp_epochs, seed, *est, opt);
-                let hit = self
-                    .cache
-                    .load(KIND_TRACES, codec::TRACE_SCHEMA, &key)
-                    .and_then(|b| codec::decode_trace(&b).ok());
-                out.push(hit);
-            }
-        }
-        let missing: Vec<usize> = (0..specs.len()).filter(|&i| out[i].is_none()).collect();
-        let hits = specs.len() - missing.len();
+            specs
+                .iter()
+                .map(|(est, opt)| trace_key(rt.backend_name(), mm, fp_epochs, seed, *est, opt))
+                .collect()
+        };
+        let load = |i: usize| {
+            self.cache
+                .load(KIND_TRACES, codec::TRACE_SCHEMA, &keys[i])
+                .and_then(|b| codec::decode_trace(&b).ok())
+        };
+        let mut out: Vec<Option<TraceResult>> = (0..specs.len()).map(|i| load(i)).collect();
+        let hits = out.iter().filter(|r| r.is_some()).count();
         if hits > 0 {
             // cached runs carry the wall-clock of their original
             // measurement conditions; flag that for timing-bearing tables
@@ -434,23 +587,109 @@ impl Pipeline {
                 specs.len()
             );
         }
-        if !missing.is_empty() {
-            let st = self.train_fp(rt, model, fp_epochs, seed)?;
-            let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
-            let engine = TraceEngine::new(rt, ds.as_ref());
-            let sub: Vec<(Estimator, TraceOptions)> = missing.iter().map(|&i| specs[i]).collect();
-            let results = engine.run_many(model, &st.params, &sub, jobs)?;
-            let mm = rt.model(model)?;
-            for (&i, r) in missing.iter().zip(results) {
-                let (est, opt) = &specs[i];
-                let key = trace_key(rt.backend_name(), mm, fp_epochs, seed, *est, opt);
-                let payload = codec::encode_trace(&r);
-                self.cache.store(KIND_TRACES, codec::TRACE_SCHEMA, &key, &payload)?;
-                out[i] = Some(r);
-            }
-            self.counters.traces.fetch_add(missing.len() as u64, Ordering::Relaxed);
+        let missing: Vec<usize> = (0..specs.len()).filter(|&i| out[i].is_none()).collect();
+        if missing.is_empty() {
+            return Ok(out.into_iter().map(|r| r.expect("all trace slots filled")).collect());
         }
+        // claim every miss up front; misses another process is already
+        // computing are deferred and polled after our own batch runs
+        let mut first: Vec<(usize, Option<LeaseGuard>)> = Vec::new();
+        let mut deferred: Vec<usize> = Vec::new();
+        for &i in &missing {
+            match self.cache.try_claim(KIND_TRACES, &keys[i]) {
+                Ok(Claim::Won(g)) => {
+                    self.counters.claims_won.fetch_add(1, Ordering::Relaxed);
+                    // the previous holder may have published before dying
+                    if let Some(r) = load(i) {
+                        g.release();
+                        out[i] = Some(r);
+                    } else {
+                        first.push((i, Some(g)));
+                    }
+                }
+                Ok(Claim::Busy { .. }) => deferred.push(i),
+                Err(e) => {
+                    eprintln!("  [warn] claiming a trace lease failed ({e:#}); waiting");
+                    deferred.push(i);
+                }
+            }
+        }
+        self.compute_trace_batch(rt, model, fp_epochs, seed, specs, &keys, first, jobs, &mut out)?;
+        // wait out the peers computing the deferred keys; takeover (holder
+        // died) and wait-budget exhaustion both fall back to a local batch
+        if !deferred.is_empty() {
+            self.counters.claim_waits.fetch_add(deferred.len() as u64, Ordering::Relaxed);
+        }
+        let lease = self.cache.lease_config();
+        let deadline = Instant::now() + lease.max_wait;
+        let mut second: Vec<(usize, Option<LeaseGuard>)> = Vec::new();
+        for i in deferred {
+            loop {
+                if let Some(r) = load(i) {
+                    out[i] = Some(r);
+                    break;
+                }
+                if let Ok(Claim::Won(g)) = self.cache.try_claim(KIND_TRACES, &keys[i]) {
+                    self.counters.claims_won.fetch_add(1, Ordering::Relaxed);
+                    if let Some(r) = load(i) {
+                        g.release();
+                        out[i] = Some(r);
+                    } else {
+                        second.push((i, Some(g)));
+                    }
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    eprintln!(
+                        "  [{model}] lease wait for a trace run exceeded {:?}; \
+                         computing without a claim",
+                        lease.max_wait
+                    );
+                    second.push((i, None));
+                    break;
+                }
+                std::thread::sleep(lease.poll);
+            }
+        }
+        self.compute_trace_batch(rt, model, fp_epochs, seed, specs, &keys, second, jobs, &mut out)?;
         Ok(out.into_iter().map(|r| r.expect("all trace slots filled")).collect())
+    }
+
+    /// Run one batch of trace estimations (the slots this process owns),
+    /// publish each best-effort, and release the accompanying leases.
+    /// Guards travel with their slot so an error drops (= releases) them.
+    #[allow(clippy::too_many_arguments)]
+    fn compute_trace_batch(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        fp_epochs: usize,
+        seed: u64,
+        specs: &[(Estimator, TraceOptions)],
+        keys: &[Digest],
+        batch: Vec<(usize, Option<LeaseGuard>)>,
+        jobs: usize,
+        out: &mut [Option<TraceResult>],
+    ) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let n = batch.len() as u64;
+        let st = self.train_fp(rt, model, fp_epochs, seed)?;
+        let ds = dataset_for(rt, model, seed ^ 0xda7a)?;
+        let engine = TraceEngine::new(rt, ds.as_ref());
+        let sub: Vec<(Estimator, TraceOptions)> =
+            batch.iter().map(|(i, _)| specs[*i]).collect();
+        let results = engine.run_many(model, &st.params, &sub, jobs)?;
+        for ((i, guard), r) in batch.into_iter().zip(results) {
+            self.store_stage(KIND_TRACES, codec::TRACE_SCHEMA, &keys[i], &codec::encode_trace(&r));
+            if let Some(g) = guard {
+                g.release();
+            }
+            out[i] = Some(r);
+        }
+        self.counters.traces.fetch_add(n, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Cached study outcome table for `(model, opt)`, if present and valid.
@@ -478,6 +717,36 @@ impl Pipeline {
         self.cache.store(KIND_STUDY, codec::STUDY_SCHEMA, &key, &codec::encode_study(res))?;
         self.counters.study.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Claim-coordinated run of the full study for `(model, opt)`: load the
+    /// cached table, else win the study lease and run `compute` (peers
+    /// poll-and-decode instead of sweeping). A *degraded* study — one with
+    /// a non-empty failure list — is returned to the caller but never
+    /// cached, so a rerun after the fault is gone recomputes the complete
+    /// table instead of serving the degraded one forever.
+    pub fn study_coordinated(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        opt: &StudyOptions,
+        compute: impl FnOnce() -> Result<StudyResult>,
+    ) -> Result<StudyResult> {
+        let key = study_key(rt.backend_name(), rt.model(model)?, opt);
+        let (res, computed) = self.compute_exclusive(
+            KIND_STUDY,
+            codec::STUDY_SCHEMA,
+            &key,
+            |bytes| codec::decode_study(bytes).ok(),
+            |res| res.failures.is_empty().then(|| codec::encode_study(res)),
+            compute,
+        )?;
+        if computed {
+            self.counters.study.fetch_add(1, Ordering::Relaxed);
+        } else {
+            eprintln!("  [{model}] study loaded from cache");
+        }
+        Ok(res)
     }
 
     /// Materialize one declared stage (the prepass executor).
@@ -592,9 +861,11 @@ mod tests {
                 c.train_fp_computed(),
                 c.traces_computed(),
                 c.sensitivity_computed(),
-                c.study_computed()
+                c.study_computed(),
+                c.claims_won(),
+                c.claim_waits()
             ),
-            (0, 0, 0, 0)
+            (0, 0, 0, 0, 0, 0)
         );
     }
 }

@@ -81,6 +81,30 @@ pub fn fmt(v: Option<f64>, digits: usize) -> String {
     }
 }
 
+/// Render a study's failure list as a markdown section — empty string for
+/// a clean run, so reports can append it unconditionally.
+pub fn degraded_section(scope: &str, failures: &[super::evaluator::ConfigFailure]) -> String {
+    if failures.is_empty() {
+        return String::new();
+    }
+    let rows: Vec<Vec<String>> = failures
+        .iter()
+        .map(|f| {
+            vec![
+                f.index.to_string(),
+                f.label.clone(),
+                if f.panicked { "panic" } else { "error" }.to_string(),
+                f.error.clone(),
+            ]
+        })
+        .collect();
+    format!(
+        "\n## Degraded configurations — {scope} ({} failed; correlations cover the survivors)\n\n{}",
+        failures.len(),
+        md_table(&["config", "bits", "kind", "cause"], &rows)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +129,33 @@ mod tests {
         assert_eq!(fmt(Some(0.8567), 2), "0.86");
         assert_eq!(fmt(None, 2), "-");
         assert_eq!(fmt(Some(f64::NAN), 2), "-");
+    }
+
+    #[test]
+    fn degraded_section_empty_for_clean_run() {
+        assert_eq!(degraded_section("exp A", &[]), "");
+    }
+
+    #[test]
+    fn degraded_section_lists_each_failure() {
+        use crate::coordinator::evaluator::ConfigFailure;
+        let fs = vec![
+            ConfigFailure {
+                index: 3,
+                label: "w[8,4] a[3]".into(),
+                panicked: true,
+                error: "boom".into(),
+            },
+            ConfigFailure {
+                index: 7,
+                label: "w[2,2] a[8]".into(),
+                panicked: false,
+                error: "io".into(),
+            },
+        ];
+        let md = degraded_section("experiment B", &fs);
+        assert!(md.contains("experiment B (2 failed"));
+        assert!(md.contains("| 3 | w[8,4] a[3] | panic | boom |"));
+        assert!(md.contains("| 7 | w[2,2] a[8] | error | io |"));
     }
 }

@@ -25,7 +25,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use fitq::coordinator::pipeline::{registry, ExpOptions, Pipeline};
+use fitq::coordinator::pipeline::{fault, registry, stages, ArtifactCache, ExpOptions, Pipeline};
 use fitq::coordinator::{
     dataset_for, exact_allocate_table, gather, greedy_allocate_table, pareto_front_scores,
     Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
@@ -98,6 +98,11 @@ const USAGE: &str = "fitq <command>\n\
      --jobs 1 when the timing itself is the result. `all` walks the\n\
      experiment DAG once, deduping shared pipeline stages.\n\
   zoo-check  zoo/<name>.json ...          validate model manifests (parse + compile)\n\
+  cache      verify|gc|stats [--results DIR] [--tmp-age-secs N]\n\
+     verify quarantines corrupt store entries (nonzero exit if any);\n\
+     gc reaps expired leases and stale temp files; stats summarizes.\n\
+  A config that fails mid-sweep degrades to a report entry (the study\n\
+     completes on the survivors) instead of aborting the experiment.\n\
   Every command takes --backend native|pjrt (also $FITQ_BACKEND):\n\
      native = pure-Rust interpreter, zero setup, study models only;\n\
      pjrt   = compiled HLO artifacts ($FITQ_ARTIFACTS, `make artifacts`).\n\
@@ -123,6 +128,10 @@ fn dispatch(argv: &[String]) -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    // arm the deterministic fault-injection harness when $FITQ_FAULTS is
+    // set; a malformed spec is a hard error (a typo silently running the
+    // *fault-free* path would defeat the point of a fault drill)
+    fault::arm_from_env()?;
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "info" => cmd_info(&args),
@@ -131,6 +140,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "search" => cmd_search(&args),
         "experiment" => cmd_experiment(&args),
         "zoo-check" => cmd_zoo_check(&args),
+        "cache" => cmd_cache(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -185,6 +195,59 @@ fn cmd_zoo_check(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Operate on the artifact store directly (no Runtime/backend needed):
+/// `fitq cache verify|gc|stats [--results DIR] [--tmp-age-secs N]`.
+fn cmd_cache(args: &Args) -> Result<()> {
+    let Some(op) = args.positional.first() else {
+        bail!("cache needs an operation: verify, gc or stats");
+    };
+    let root = args
+        .get("results")
+        .map(PathBuf::from)
+        .unwrap_or_else(stages::results_root_from_env);
+    let cache = ArtifactCache::new(root.join("cache"))?;
+    match op.as_str() {
+        "verify" => {
+            let rep = cache.verify()?;
+            let total = rep.valid + rep.quarantined.len() as u64;
+            println!("verified {total} entries: {} valid", rep.valid);
+            for p in &rep.quarantined {
+                println!("  quarantined {}", p.display());
+            }
+            if !rep.quarantined.is_empty() {
+                bail!(
+                    "{} corrupt entries moved to {} (they will recompute on next use)",
+                    rep.quarantined.len(),
+                    cache.dir().join("quarantine").display()
+                );
+            }
+            Ok(())
+        }
+        "gc" => {
+            let age = std::time::Duration::from_secs(args.usize_or("tmp-age-secs", 3600)? as u64);
+            let rep = cache.gc(age)?;
+            println!(
+                "gc: {} live leases kept, {} stale leases reaped, {} temp files (older than {:?}) reaped",
+                rep.leases_live, rep.leases_reaped, rep.tmp_reaped, age
+            );
+            Ok(())
+        }
+        "stats" => {
+            let rep = cache.stats()?;
+            println!("cache {}", cache.dir().display());
+            for (kind, (n, bytes)) in &rep.kinds {
+                println!("  {kind}: {n} entries, {bytes} bytes");
+            }
+            println!(
+                "  leases: {}, temp files: {}, quarantined: {}, unaddressable: {}",
+                rep.leases, rep.tmp_files, rep.quarantined, rep.unaddressable
+            );
+            Ok(())
+        }
+        other => bail!("unknown cache operation {other:?} (want verify, gc or stats)"),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -5,15 +5,21 @@
 use std::process::{Command, Output};
 
 fn fitq(args: &[&str]) -> Output {
+    fitq_env(args, &[])
+}
+
+fn fitq_env(args: &[&str], envs: &[(&str, &str)]) -> Output {
     // point the artifact root at nowhere so even an artifact-equipped
     // checkout stops at manifest load instead of actually training
-    Command::new(env!("CARGO_BIN_EXE_fitq"))
-        .env("FITQ_ARTIFACTS", "fitq-no-such-artifact-root")
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_fitq"));
+    cmd.env("FITQ_ARTIFACTS", "fitq-no-such-artifact-root")
         .env("FITQ_RESULTS", std::env::temp_dir().join("fitq_cli_smoke_results"))
         .env_remove("FITQ_BACKEND")
-        .args(args)
-        .output()
-        .expect("spawn fitq binary")
+        .env_remove("FITQ_FAULTS");
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.args(args).output().expect("spawn fitq binary")
 }
 
 fn stderr(out: &Output) -> String {
@@ -193,6 +199,68 @@ fn train_runs_from_a_zoo_manifest() {
     assert!(out.status.success(), "{}", stderr(&out));
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("cnn_mnist: 1 epochs"), "{text}");
+}
+
+#[test]
+fn cache_commands_run_on_an_empty_store() {
+    let dir = std::env::temp_dir().join(format!("fitq_cli_cache_empty_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let d = dir.to_str().unwrap();
+    let out = fitq(&["cache", "stats", "--results", d]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("leases: 0"), "{out:?}");
+    let out = fitq(&["cache", "gc", "--results", d]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let out = fitq(&["cache", "verify", "--results", d]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let out = fitq(&["cache", "defrag", "--results", d]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown cache operation"), "{}", stderr(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_verify_quarantines_corruption_and_exits_nonzero() {
+    let dir = std::env::temp_dir().join(format!("fitq_cli_cache_bad_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache_dir = dir.join("cache");
+    std::fs::create_dir_all(&cache_dir).unwrap();
+    let name = format!("study_{:032x}.bin", 0xabc_u128);
+    std::fs::write(cache_dir.join(&name), b"definitely not a cache entry").unwrap();
+
+    let out = fitq(&["cache", "verify", "--results", dir.to_str().unwrap()]);
+    assert!(!out.status.success(), "corrupt store must exit nonzero");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("quarantined"), "{text}");
+    assert!(stderr(&out).contains("corrupt"), "{}", stderr(&out));
+    assert!(cache_dir.join("quarantine").join(&name).exists(), "entry must move, not vanish");
+    assert!(!cache_dir.join(&name).exists());
+
+    // with the corruption quarantined, a second verify is clean
+    let out = fitq(&["cache", "verify", "--results", dir.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_fault_spec_fails_fast() {
+    // a typo'd $FITQ_FAULTS must abort the run, not silently run clean
+    let out = fitq_env(&["info", "--backend", "native"], &[("FITQ_FAULTS", "no.such.site")]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown fault site"), "{}", stderr(&out));
+    let out = fitq_env(
+        &["info", "--backend", "native"],
+        &[("FITQ_FAULTS", "cache.store.short_write@zero")],
+    );
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("bad fault hit count"), "{}", stderr(&out));
+    // a well-formed spec arms and announces itself
+    let out = fitq_env(
+        &["info", "--backend", "native"],
+        &[("FITQ_FAULTS", "cache.store.short_write")],
+    );
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stderr(&out).contains("[fault] armed"), "{}", stderr(&out));
 }
 
 #[test]

@@ -1,0 +1,231 @@
+//! Deterministic fault-injection drills over the artifact store, lease
+//! layer and worker pool (DESIGN.md "Failure model").
+//!
+//! One scenario per registered injection site: arm the site, run the full
+//! study pipeline against a stage-prewarmed store, and require the
+//! contract — every fault degrades to a recompute, a wait-and-takeover,
+//! or a typed error; never a crash, never wrong bytes. After the fault
+//! clears, a recovery run over the same store must reproduce the
+//! fault-free baseline bit-for-bit.
+//!
+//! The store is prewarmed with the baseline's *stage* artifacts (FP
+//! checkpoint, sensitivity report) because trace wall-clock is part of
+//! the cached sensitivity payload: sharing the expensive prefix is what
+//! makes study bytes comparable across scenarios.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use fitq::coordinator::pipeline::codec::encode_study;
+use fitq::coordinator::pipeline::fault::{self, site, FaultPlan};
+use fitq::coordinator::pipeline::stages::{study_key, KIND_STUDY};
+use fitq::coordinator::pipeline::{LeaseConfig, Pipeline, StageCounters};
+use fitq::coordinator::{run_study, StudyOptions};
+
+mod common;
+
+const MODEL: &str = "cnn_mnist";
+
+fn study_opt() -> StudyOptions {
+    let mut opt = StudyOptions {
+        n_configs: 3,
+        fp_epochs: 1,
+        qat_epochs: 1,
+        eval_n: 64,
+        seed: 11,
+        ..Default::default()
+    };
+    opt.trace.max_iters = 15;
+    opt
+}
+
+/// Millisecond-scale lease policy so holder-death takeover happens inside
+/// the test budget instead of after the 10-minute production TTL.
+fn short_leases() -> LeaseConfig {
+    LeaseConfig {
+        ttl: Duration::from_millis(150),
+        poll: Duration::from_millis(10),
+        max_wait: Duration::from_secs(5),
+    }
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fitq_fault_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn pipeline(dir: &Path) -> Pipeline {
+    let mut p = Pipeline::new(dir).expect("pipeline");
+    p.set_lease_config(short_leases());
+    p
+}
+
+/// Fresh results root seeded with the baseline's cached stage artifacts —
+/// everything except the study entry, which each scenario must produce
+/// (or fail to produce) under its own fault.
+fn seeded_dir(tag: &str, baseline_dir: &Path) -> PathBuf {
+    let dir = tmp_root(tag);
+    let cache = dir.join("cache");
+    std::fs::create_dir_all(&cache).unwrap();
+    for entry in std::fs::read_dir(baseline_dir.join("cache")).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".bin") && !name.starts_with("study_") {
+            std::fs::copy(entry.path(), cache.join(&name)).unwrap();
+        }
+    }
+    dir
+}
+
+/// The per-site drill. `spec` goes to `FaultPlan::parse` (so `@N`
+/// counting rules are exercised through the real front door); `fired`
+/// names the site the scenario must actually trigger.
+#[test]
+fn every_fault_site_degrades_to_recompute_or_typed_error() {
+    let rt = common::runtime();
+    let opt = study_opt();
+
+    // fault-free baseline; its stage artifacts seed every scenario
+    let base_dir = tmp_root("baseline");
+    let base_pipe = pipeline(&base_dir);
+    let baseline = run_study(&rt, &base_pipe, MODEL, &opt).expect("baseline study");
+    assert!(baseline.failures.is_empty(), "baseline must be clean");
+    let baseline_bytes = encode_study(&baseline);
+
+    // `cache.load.read_fail@3` targets the third load of the run — the FP
+    // checkpoint's cache read (loads 1-2 are the study's own misses) — so
+    // the fault lands on an entry that exists and would otherwise hit.
+    let scenarios: &[(&str, &str)] = &[
+        (site::CACHE_STORE_SHORT_WRITE, site::CACHE_STORE_SHORT_WRITE),
+        (site::CACHE_STORE_HEADER_CORRUPT, site::CACHE_STORE_HEADER_CORRUPT),
+        (site::CACHE_STORE_PAYLOAD_CORRUPT, site::CACHE_STORE_PAYLOAD_CORRUPT),
+        (site::CACHE_STORE_TMP_WRITE_FAIL, site::CACHE_STORE_TMP_WRITE_FAIL),
+        (site::CACHE_STORE_RENAME_FAIL, site::CACHE_STORE_RENAME_FAIL),
+        ("cache.load.read_fail@3", site::CACHE_LOAD_READ_FAIL),
+        (site::CACHE_LOAD_TORN_READ, site::CACHE_LOAD_TORN_READ),
+        (site::LEASE_ACQUIRE_HOLDER_DEATH, site::LEASE_ACQUIRE_HOLDER_DEATH),
+        (site::LEASE_ACQUIRE_RECORD_CORRUPT, site::LEASE_ACQUIRE_RECORD_CORRUPT),
+        (site::LEASE_RELEASE_UNLINK_FAIL, site::LEASE_RELEASE_UNLINK_FAIL),
+        (site::LEASE_TAKEOVER_REAP_FAIL, site::LEASE_TAKEOVER_REAP_FAIL),
+        (site::PARALLEL_JOB_PANIC, site::PARALLEL_JOB_PANIC),
+        (site::STAGE_COMPUTE_PANIC, site::STAGE_COMPUTE_PANIC),
+    ];
+    assert!(scenarios.len() >= 10, "the drill must cover the registered sites");
+
+    for (i, (spec, fired)) in scenarios.iter().enumerate() {
+        let dir = seeded_dir(&format!("s{i}"), &base_dir);
+        if *fired == site::LEASE_TAKEOVER_REAP_FAIL {
+            // takeover needs something to take over: a mangled lease left
+            // by a "crashed" process at the study's lease path
+            let key = study_key(rt.backend_name(), rt.model(MODEL).unwrap(), &opt);
+            let cache = pipeline(&dir);
+            std::fs::write(cache.cache().lease_path(KIND_STUDY, &key), b"mangled lease").unwrap();
+        }
+
+        let scope = fault::scoped(FaultPlan::parse(spec).unwrap());
+        let pipe = pipeline(&dir);
+        let result = run_study(&rt, &pipe, MODEL, &opt);
+        assert!(scope.fired(fired) >= 1, "{spec}: the armed site never fired");
+        drop(scope);
+
+        match result {
+            Ok(res) if res.failures.is_empty() => {
+                // recompute / wait-and-takeover path: output unaffected
+                assert_eq!(
+                    encode_study(&res),
+                    baseline_bytes,
+                    "{spec}: faulted run diverged from baseline"
+                );
+            }
+            Ok(res) => {
+                // degraded sweep: the failed config is reported, the
+                // survivors complete, and the study is NOT cached
+                assert_eq!(*fired, site::PARALLEL_JOB_PANIC, "{spec}: unexpected degradation");
+                assert_eq!(res.failures.len(), 1, "{spec}: one injected failure");
+                assert!(res.failures[0].panicked, "{spec}: must be typed as a panic");
+                assert!(!res.failures[0].label.is_empty(), "{spec}: failure must be labeled");
+                assert_eq!(res.outcomes.len(), opt.n_configs - 1, "{spec}: survivors complete");
+                assert!(
+                    pipe.study_cached(&rt, MODEL, &opt).is_none(),
+                    "{spec}: a degraded study must never be cached"
+                );
+            }
+            Err(e) => {
+                // typed abort: only the whole-stage panic takes this path
+                assert_eq!(*fired, site::STAGE_COMPUTE_PANIC, "{spec}: unexpected abort: {e:#}");
+                assert!(format!("{e:#}").contains("panicked"), "{spec}: untyped error: {e:#}");
+            }
+        }
+
+        // recovery: fault gone, fresh pipeline, same store — bit-identical
+        let pipe2 = pipeline(&dir);
+        let recovered = run_study(&rt, &pipe2, MODEL, &opt)
+            .unwrap_or_else(|e| panic!("{spec}: recovery run failed: {e:#}"));
+        assert_eq!(
+            encode_study(&recovered),
+            baseline_bytes,
+            "{spec}: recovery not bit-identical to the fault-free baseline"
+        );
+
+        if *fired == site::CACHE_STORE_RENAME_FAIL {
+            // the orphaned temp file from the failed publish is gc fodder
+            let g = pipe2.cache().gc(Duration::ZERO).unwrap();
+            assert!(g.tmp_reaped >= 1, "{spec}: orphan tmp must be reaped");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_dir_all(&base_dir).ok();
+}
+
+/// Two pipelines (one per thread, as two processes would) race the same
+/// cold study: the lease layer must hand each stage to exactly one of
+/// them, the loser must serve the winner's published bytes, and both must
+/// agree bit-for-bit.
+#[test]
+fn concurrent_pipelines_compute_each_stage_exactly_once() {
+    // empty plan fires nothing but holds the process-wide fault scope, so
+    // this test never overlaps an armed scenario on a sibling test thread
+    let _quiet = fault::scoped(FaultPlan::default());
+    let dir = tmp_root("concurrent");
+    let opt = study_opt();
+    let counters = Arc::new(StageCounters::default());
+    let barrier = Arc::new(Barrier::new(2));
+    // production-scale TTL (no takeover mid-compute), fast polling
+    let lease = LeaseConfig {
+        ttl: Duration::from_secs(600),
+        poll: Duration::from_millis(10),
+        max_wait: Duration::from_secs(600),
+    };
+
+    let mut agreed: Vec<Vec<u8>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let dir = &dir;
+                let opt = &opt;
+                let counters = counters.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    let rt = common::runtime();
+                    let mut pipe = Pipeline::with_counters(dir, counters).expect("pipeline");
+                    pipe.set_lease_config(lease);
+                    barrier.wait();
+                    let res = run_study(&rt, &pipe, MODEL, opt).expect("racing study");
+                    encode_study(&res)
+                })
+            })
+            .collect();
+        for h in handles {
+            agreed.push(h.join().expect("racer thread"));
+        }
+    });
+
+    assert_eq!(agreed[0], agreed[1], "racers must agree byte-for-byte");
+    assert_eq!(counters.train_fp_computed(), 1, "FP training must run exactly once");
+    assert_eq!(counters.sensitivity_computed(), 1, "sensitivity must run exactly once");
+    assert_eq!(counters.study_computed(), 1, "the sweep must run exactly once");
+    assert!(counters.claims_won() >= 3, "each stage needs a claim winner");
+    std::fs::remove_dir_all(&dir).ok();
+}

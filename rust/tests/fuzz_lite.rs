@@ -1,19 +1,20 @@
-//! Fuzz-lite: deterministic seeded byte-mutation loops over the three
+//! Fuzz-lite: deterministic seeded byte-mutation loops over the four
 //! fail-closed parsers — the model-manifest parser
 //! (`native::manifest`), the artifact-cache container header
-//! (`pipeline::cache`), and the binary payload codec
-//! (`pipeline::codec`). No cargo-fuzz in this container, so this is the
-//! bounded in-tree half of the ROADMAP hardening item: a splitmix64
-//! stream drives ~10k mutations per `cargo test -q` run, and every
-//! mutated input must produce an error or a valid value — never a
-//! panic, never a silently-wrong accept.
+//! (`pipeline::cache`), the binary payload codec (`pipeline::codec`),
+//! and the lease-record parser (`pipeline::cache::LeaseRecord`). No
+//! cargo-fuzz in this container, so this is the bounded in-tree half of
+//! the ROADMAP hardening item: a splitmix64 stream drives ~12k mutations
+//! per `cargo test -q` run, and every mutated input must produce an
+//! error or a valid value — never a panic, never a silently-wrong
+//! accept.
 
-use fitq::coordinator::evaluator::{ConfigOutcome, StudyResult};
+use fitq::coordinator::evaluator::{ConfigFailure, ConfigOutcome, StudyResult};
 use fitq::coordinator::pipeline::codec::{
     decode_sensitivity, decode_study, decode_trace, encode_sensitivity, encode_study,
     encode_trace,
 };
-use fitq::coordinator::pipeline::{ArtifactCache, Hasher};
+use fitq::coordinator::pipeline::{ArtifactCache, Hasher, LeaseRecord};
 use fitq::coordinator::{ActRanges, Estimator, SensitivityReport, TraceResult};
 use fitq::metrics::{Metric, SensitivityInputs};
 use fitq::native::manifest::{load_str, ZooManifest};
@@ -130,6 +131,30 @@ fn fuzz_cache_header_rejects_or_returns_original() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Lease records: ~2k mutated lease files. The parser must error or
+/// return the pristine record (the trailing self-digest covers every
+/// byte) — so a mangled lease always reads as stale-and-reapable, never
+/// as a live hold by a phantom pid/token/expiry.
+#[test]
+fn fuzz_lease_record_parser_errors_or_roundtrips() {
+    let rec = LeaseRecord { pid: 4242, token: 0xDEAD_BEEF, expires_unix_ms: u64::MAX / 2 };
+    let pristine = rec.encode();
+    assert_eq!(LeaseRecord::parse(&pristine).unwrap(), rec);
+
+    let mut rng = 0x5EED_0004_u64;
+    for i in 0..2000 {
+        let mut bytes = pristine.clone();
+        let n_mut = 1 + (splitmix64(&mut rng) as usize) % 3;
+        for _ in 0..n_mut {
+            mutate(&mut bytes, &mut rng);
+        }
+        if let Ok(got) = LeaseRecord::parse(&bytes) {
+            // a pair of mutations can cancel out; anything else must fail
+            assert_eq!(got, rec, "iteration {i}: mutated lease accepted with different fields");
+        }
+    }
+}
+
 fn sample_trace() -> TraceResult {
     TraceResult {
         estimator: Estimator::Hutchinson,
@@ -172,6 +197,12 @@ fn sample_study() -> StudyResult {
         }],
         sens: sample_sensitivity(),
         correlations: vec![(Metric::Fit, Some(0.86))],
+        failures: vec![ConfigFailure {
+            index: 1,
+            label: "w[2,2] a[2]".into(),
+            panicked: true,
+            error: "job 1 panicked".into(),
+        }],
     }
 }
 

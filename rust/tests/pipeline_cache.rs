@@ -4,7 +4,7 @@
 //! accounting the pipeline promises — run end-to-end on PJRT when
 //! artifacts are present, else on the zero-setup native backend.
 
-use fitq::coordinator::evaluator::ConfigOutcome;
+use fitq::coordinator::evaluator::{ConfigFailure, ConfigOutcome};
 use fitq::coordinator::pipeline::{codec, ArtifactCache, Hasher, Pipeline};
 use fitq::coordinator::{
     run_study, ActRanges, Estimator, ModelState, SensitivityReport, StudyOptions, StudyResult,
@@ -72,6 +72,12 @@ fn sample_study() -> StudyResult {
         ],
         sens: sample_sensitivity(),
         correlations: vec![(Metric::Fit, Some(0.86)), (Metric::Qr, None)],
+        failures: vec![ConfigFailure {
+            index: 2,
+            label: "w[2,2,2] a[2,2]".into(),
+            panicked: false,
+            error: "qat diverged".into(),
+        }],
     }
 }
 
@@ -150,6 +156,7 @@ fn study_decode_preserves_structure() {
     assert_eq!(back.outcomes[0].metrics, s.outcomes[0].metrics);
     assert_eq!(back.correlations, s.correlations);
     assert_eq!(back.sens.inputs.bn_gamma, s.sens.inputs.bn_gamma);
+    assert_eq!(back.failures, s.failures);
 }
 
 /// End-to-end: a cold study computes each stage once, an in-process

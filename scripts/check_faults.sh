@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# CLI-level fault drill for `make check-faults` (the deterministic
+# in-tree suite runs first; see tests/fault_injection.rs):
+#
+#   1. an env-armed experiment: $FITQ_FAULTS corrupts the first cache
+#      publish through the real CLI front door — the run must still
+#      succeed (the store is an accelerator, not a correctness
+#      dependency) and must announce the armed plan on stderr
+#   2. `fitq cache verify` over that store must quarantine the corrupt
+#      entry and exit nonzero
+#   3. a second verify over the cleaned store must exit zero
+set -euo pipefail
+
+BIN=${FITQ_BIN:-target/release/fitq}
+DIR=$(mktemp -d)
+trap 'rm -rf "$DIR"' EXIT
+
+echo "== armed run: first cache publish gets corrupt bytes =="
+FITQ_FAULTS=cache.store.payload_corrupt FITQ_RESULTS="$DIR" \
+  "$BIN" experiment table2 --backend native --jobs 1 \
+  --configs 2 --fp-epochs 1 --qat-epochs 1 --eval-n 64 --only C \
+  2> "$DIR/stderr.log" || { cat "$DIR/stderr.log" >&2; exit 1; }
+grep -q "\[fault\] armed" "$DIR/stderr.log" || {
+  echo "error: armed run never announced its fault plan" >&2
+  exit 1
+}
+
+echo "== cache verify must quarantine and exit nonzero =="
+if "$BIN" cache verify --results "$DIR"; then
+  echo "error: verify exited zero over a corrupt store" >&2
+  exit 1
+fi
+[ -n "$(ls -A "$DIR/cache/quarantine" 2>/dev/null)" ] || {
+  echo "error: nothing was quarantined" >&2
+  exit 1
+}
+
+echo "== verify over the cleaned store must pass =="
+"$BIN" cache verify --results "$DIR"
+echo "check-faults: ok"
