@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring bench-native bench-smoke check-bench-schema check-manifests check-faults
+.PHONY: artifacts test bench bench-scoring bench-native bench-kernels bench-smoke check-bench-schema check-manifests check-faults
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -26,6 +26,12 @@ bench-scoring:
 bench-native:
 	FITQ_BACKEND=native cargo bench --bench parallel_study
 
+# Per-kernel per-variant GFLOP/s + train_epoch wall across forced SIMD
+# kernel variants (scalar/sse2/avx2/neon/auto; native backend, no
+# artifacts needed); refreshes BENCH_kernels.json at the repo root.
+bench-kernels:
+	FITQ_BACKEND=native cargo bench --bench kernel_variants
+
 # CI tripwire: 1-iteration timed native train_epoch, asserts the GEMM
 # kernel layer still beats the scalar reference (does not touch the
 # committed BENCH json).
@@ -34,7 +40,7 @@ bench-smoke:
 
 # Structural validation of the committed BENCH_*.json perf records.
 check-bench-schema:
-	python3 scripts/check_bench_schema.py BENCH_parallel_study.json BENCH_fit_scoring.json
+	python3 scripts/check_bench_schema.py BENCH_parallel_study.json BENCH_fit_scoring.json BENCH_kernels.json
 
 # Fail-closed validation of every committed zoo model manifest
 # (parse + compile; DESIGN.md "Model manifests").

@@ -1,0 +1,314 @@
+//! Bench: the SIMD kernel-variant record (`make bench-kernels`).
+//!
+//! Two sections, both on the native backend:
+//!
+//! 1. Per-kernel nominal GFLOP/s for every hot kernel (direct conv
+//!    forward/backward, the im2col lowerings, the G-GEMM backward-x
+//!    path, the im2col/col2im packers) at three study-layer shapes,
+//!    across every SIMD variant this host detects. These are the raw
+//!    numbers the autotuner's winners should be explainable from.
+//! 2. `train_epoch` wall clock per model across the `FITQ_NATIVE_KERNEL`
+//!    settings (plus the scalar `ops::reference` "before" leg) — the
+//!    whole-net before/after record.
+//!
+//! Timing is min-of-N, not mean: the minimum rejects scheduler noise on
+//! loaded hosts, and these kernels have no warm-up-dependent state.
+//! Results land in `BENCH_kernels.json` at the repo root; the committed
+//! point was measured via the C mirror (`tools/cmirror/kernels.c`) on
+//! the single-core container this repo grows in — rerun this bench on a
+//! real host to refresh it.
+
+use std::time::Instant;
+
+use fitq::bench_util::black_box;
+use fitq::coordinator::ModelState;
+use fitq::data::{EpochBatch, SynthClass};
+use fitq::native::gemm::{self, Init};
+use fitq::native::simd::{self, Isa};
+use fitq::runtime::{Arg, Runtime};
+use fitq::tensor::Pcg32;
+
+/// Best-of-`reps` seconds for one call of `f` (after one warmup call).
+fn min_time_s(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn randv(len: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 19);
+    (0..len).map(|_| rng.normal() * scale).collect()
+}
+
+/// Post-ReLU-like data: ~half exact zeros, so the zero-skip paths are
+/// priced in exactly as they are in a real net.
+fn sparse_randv(len: usize, seed: u64) -> Vec<f32> {
+    let mut v = randv(len, 1.0, seed);
+    for x in v.iter_mut() {
+        *x = x.max(0.0);
+    }
+    v
+}
+
+struct KernelRow {
+    kernel: &'static str,
+    shape: &'static str,
+    variants: Vec<(Isa, f64)>,
+}
+
+/// Study-layer geometries: first conv of each model plus the mid cifar
+/// conv (the widest vector axis the nets have).
+const SHAPES: &[(&str, usize, usize, usize, usize, usize)] = &[
+    ("b32 32x32 3->16 (cifar L0)", 32, 32, 32, 3, 16),
+    ("b32 16x16 16->32 (cifar L1)", 32, 16, 16, 16, 32),
+    ("b32 16x16 1->8 (mnist L0)", 32, 16, 16, 1, 8),
+];
+
+fn kernel_rows() -> Vec<KernelRow> {
+    const REPS: usize = 5;
+    let isas = Isa::detected();
+    let mut rows = Vec::new();
+    for &(label, n, h, w, cin, cout) in SHAPES {
+        let x = sparse_randv(n * h * w * cin, 2);
+        let wgt = randv(9 * cin * cout, 0.3, 3);
+        let bias = randv(cout, 0.1, 4);
+        let dout = randv(n * h * w * cout, 1.0, 5);
+        let m = n * h * w;
+        let k = 9 * cin;
+        // nominal FLOPs: the dense count, ignoring the zero-skip — so a
+        // variant that skips more work shows up as *higher* GFLOP/s,
+        // which is exactly the ranking the autotuner needs
+        let conv_flops = 2.0 * (m * k * cout) as f64;
+        let pack_flops = (m * k) as f64; // one move/add per G cell
+
+        let mut out = vec![0.0f32; m * cout];
+        let mut dw = vec![0.0f32; k * cout];
+        let mut db = vec![0.0f32; cout];
+        let mut dx = vec![0.0f32; n * h * w * cin];
+        let mut a = Vec::new();
+        let mut bt = Vec::new();
+        let mut g = vec![0.0f32; m * k];
+
+        let mut per_isa = |f: &mut dyn FnMut(Isa)| -> Vec<(Isa, f64)> {
+            isas.iter().map(|&isa| (isa, min_time_s(REPS, || f(isa)))).collect()
+        };
+
+        let direct_fwd = per_isa(&mut |isa| {
+            gemm::conv2d_direct(&x, n, h, w, cin, &wgt, cout, &bias, &mut out, 1, isa);
+            black_box(out[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "conv2d_fwd_direct",
+            shape: label,
+            variants: direct_fwd.iter().map(|&(i, s)| (i, conv_flops / s / 1e9)).collect(),
+        });
+
+        let im2col_fwd = per_isa(&mut |isa| {
+            gemm::im2col3x3(&x, n, h, w, cin, &mut a);
+            gemm::sgemm(m, cout, k, &a, &wgt, Init::Bias(&bias), &mut out, 1, isa);
+            black_box(out[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "conv2d_fwd_im2col",
+            shape: label,
+            variants: im2col_fwd.iter().map(|&(i, s)| (i, conv_flops / s / 1e9)).collect(),
+        });
+
+        let direct_bwd_w = per_isa(&mut |isa| {
+            dw.fill(0.0);
+            db.fill(0.0);
+            gemm::conv2d_bwd_w_direct(&x, n, h, w, cin, &dout, cout, &mut dw, &mut db, 1, isa);
+            black_box(dw[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "conv2d_bwd_w_direct",
+            shape: label,
+            variants: direct_bwd_w.iter().map(|&(i, s)| (i, conv_flops / s / 1e9)).collect(),
+        });
+
+        let im2col_bwd_w = per_isa(&mut |isa| {
+            dw.fill(0.0);
+            db.fill(0.0);
+            gemm::im2col3x3(&x, n, h, w, cin, &mut a);
+            gemm::sgemm_atb(m, cout, k, &a, &dout, &mut dw, 1, isa);
+            simd::col_sum(isa, &mut db, &dout, cout);
+            black_box(dw[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "conv2d_bwd_w_im2col",
+            shape: label,
+            variants: im2col_bwd_w.iter().map(|&(i, s)| (i, conv_flops / s / 1e9)).collect(),
+        });
+
+        let bwd_x = per_isa(&mut |isa| {
+            gemm::transpose(&wgt, k, cout, &mut bt);
+            gemm::sgemm(m, k, cout, &dout, &bt, Init::Zero, &mut g, 1, isa);
+            gemm::col2im3x3(&g, n, h, w, cin, &mut dx, 1, isa);
+            black_box(dx[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "conv2d_bwd_x_gemm",
+            shape: label,
+            variants: bwd_x.iter().map(|&(i, s)| (i, conv_flops / s / 1e9)).collect(),
+        });
+
+        gemm::im2col3x3(&x, n, h, w, cin, &mut a);
+        let col2im = per_isa(&mut |isa| {
+            gemm::col2im3x3(&a, n, h, w, cin, &mut dx, 1, isa);
+            black_box(dx[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "col2im3x3",
+            shape: label,
+            variants: col2im.iter().map(|&(i, s)| (i, pack_flops / s / 1e9)).collect(),
+        });
+
+        // the pack is a pure gather/copy — it has no SIMD variants
+        let pack_s = min_time_s(REPS, || {
+            gemm::im2col3x3(&x, n, h, w, cin, &mut a);
+            black_box(a[0]);
+        });
+        rows.push(KernelRow {
+            kernel: "im2col3x3",
+            shape: label,
+            variants: vec![(Isa::Scalar, pack_flops / pack_s / 1e9)],
+        });
+    }
+    rows
+}
+
+/// Min-of-`reps` `train_epoch` wall (ms) on a fresh serial runtime.
+fn train_epoch_ms(model: &str, reps: usize) -> f64 {
+    let rt = Runtime::native_with_threads(1).unwrap();
+    let mm = rt.model(model).unwrap().clone();
+    let exe = rt.load(model, "train_epoch").unwrap();
+    let st = ModelState::init(&rt, model, 7).unwrap();
+    let ds = if model.starts_with("cnn_cifar") {
+        SynthClass::syncifar(7)
+    } else {
+        SynthClass::synmnist(7)
+    };
+    let (eb, _) = EpochBatch::generate(&ds, mm.train_k, mm.train_b, 0);
+    1e3 * min_time_s(reps, || {
+        black_box(
+            exe.run(&[
+                Arg::F32(&st.params),
+                Arg::F32(&st.m),
+                Arg::F32(&st.v),
+                Arg::F32Scalar(0.0),
+                Arg::F32(&eb.xs),
+                Arg::I32(&eb.ys),
+            ])
+            .unwrap(),
+        );
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    // keep tuner artifacts out of the checkout: the auto leg resolves its
+    // route table under the results root
+    let results = std::env::temp_dir().join(format!("fitq_bench_kern_{}", std::process::id()));
+    std::env::set_var("FITQ_RESULTS", &results);
+
+    let isas = Isa::detected();
+    println!("# per-kernel nominal GFLOP/s (min-of-5, threads=1)\n");
+    let rows = kernel_rows();
+    for r in &rows {
+        let cols: Vec<String> =
+            r.variants.iter().map(|(i, g)| format!("{} {:>6.2}", i.name(), g)).collect();
+        println!("  {:<20} {:<30} {}", r.kernel, r.shape, cols.join("  "));
+    }
+
+    println!("\n# train_epoch (K=10 Adam steps, B=32) across kernel variants, min-of-7\n");
+    const TRAIN_REPS: usize = 7;
+    let mut train_rows = Vec::new();
+    for model in ["cnn_mnist", "cnn_cifar"] {
+        // "before" leg: PR-4's scalar loop nests via the reference hatch
+        std::env::set_var("FITQ_NATIVE_REFERENCE", "1");
+        let reference_ms = train_epoch_ms(model, TRAIN_REPS);
+        std::env::remove_var("FITQ_NATIVE_REFERENCE");
+        let mut legs: Vec<(String, f64)> = Vec::new();
+        for isa in &isas {
+            std::env::set_var("FITQ_NATIVE_KERNEL", isa.name());
+            legs.push((isa.name().to_string(), train_epoch_ms(model, TRAIN_REPS)));
+        }
+        std::env::set_var("FITQ_NATIVE_KERNEL", "auto");
+        let auto_ms = train_epoch_ms(model, TRAIN_REPS);
+        std::env::remove_var("FITQ_NATIVE_KERNEL");
+        let scalar_ms = legs[0].1;
+        let cols: Vec<String> =
+            legs.iter().map(|(n, ms)| format!("{n} {ms:.3} ms")).collect();
+        println!(
+            "  {model}: ref {reference_ms:.3} ms | {} | auto {auto_ms:.3} ms \
+             (auto vs ref {:.2}x, vs scalar {:.2}x)",
+            cols.join(" | "),
+            reference_ms / auto_ms,
+            scalar_ms / auto_ms,
+        );
+        train_rows.push((model, reference_ms, legs, auto_ms));
+    }
+
+    // -- record the trajectory point --------------------------------------
+    let kernel_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let vars: Vec<String> =
+                r.variants.iter().map(|(i, g)| format!("\"{}\": {g:.3}", i.name())).collect();
+            format!(
+                "{{\"kernel\": \"{}\", \"shape\": \"{}\", \"variants\": {{{}}}}}",
+                r.kernel,
+                r.shape,
+                vars.join(", ")
+            )
+        })
+        .collect();
+    let train_json: Vec<String> = train_rows
+        .iter()
+        .map(|(model, reference_ms, legs, auto_ms)| {
+            let per_isa: Vec<String> =
+                legs.iter().map(|(n, ms)| format!("\"{n}_ms\": {ms:.3}")).collect();
+            format!(
+                "{{\"model\": \"{model}\", \"reference_ms\": {reference_ms:.3}, {}, \
+                 \"auto_ms\": {auto_ms:.3}, \
+                 \"speedup_auto_vs_reference\": {:.2}, \"speedup_auto_vs_scalar\": {:.2}}}",
+                per_isa.join(", "),
+                reference_ms / auto_ms,
+                legs[0].1 / auto_ms,
+            )
+        })
+        .collect();
+    let isa_names: Vec<String> = isas.iter().map(|i| format!("\"{}\"", i.name())).collect();
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    // the routes object records the tuner's per-op winner at the widest
+    // class (the headline routing; the full table is per width class)
+    let table = fitq::native::tune::tune(1);
+    let routes: Vec<String> = fitq::native::tune::OPS
+        .iter()
+        .map(|&op| {
+            let c = table.choice(op, 64);
+            format!("\"{}\": \"{}/{}\"", op.name(), c.lowering.name(), c.isa.name())
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"kernel_variants\",\n  \"status\": \"measured\",\n  \
+         \"host\": {{\"arch\": \"{}\", \"isas\": [{}], \"cores\": {cores}}},\n  \
+         \"routes\": {{{}}},\n  \
+         \"kernels\": [\n    {}\n  ],\n  \
+         \"train_epoch\": [\n    {}\n  ]\n}}\n",
+        std::env::consts::ARCH,
+        isa_names.join(", "),
+        routes.join(", "),
+        kernel_json.join(",\n    "),
+        train_json.join(",\n    "),
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    std::fs::write(path, &json).expect("write BENCH_kernels.json");
+    println!("\nwrote {path}");
+    let _ = std::fs::remove_dir_all(&results);
+    Ok(())
+}

@@ -87,10 +87,11 @@ fn native_kernel_ab(smoke: bool) -> String {
         );
         if smoke {
             assert!(
-                speedup >= 1.2,
+                speedup >= 1.3,
                 "kernel perf regression: {model} GEMM-layer train_epoch only {speedup:.2}x \
-                 over the scalar reference (floor 1.2x; the C-mirror-measured point is \
-                 ~1.9x — see BENCH_parallel_study.json)"
+                 over the scalar reference (floor 1.3x; the C-mirror-measured point is \
+                 ~1.7x with the autotuned SIMD routing — see BENCH_kernels.json and \
+                 BENCH_parallel_study.json)"
             );
         }
         rows.push(format!(

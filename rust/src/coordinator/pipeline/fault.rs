@@ -66,6 +66,10 @@ pub mod site {
     /// A stage computation panics under the claim guard — the guard must
     /// release on unwind and the stage must surface a typed error.
     pub const STAGE_COMPUTE_PANIC: &str = "stage.compute.panic";
+    /// The autotuner wins the tuning lease but dies before publishing its
+    /// route table — the run must continue on the unpersisted table and a
+    /// later resolver must be able to tune-and-publish cleanly.
+    pub const TUNER_PUBLISH_FAIL: &str = "tuner.publish.fail";
 }
 
 /// Every registered injection site (the fault suite's iteration set).
@@ -83,6 +87,7 @@ pub const SITES: &[&str] = &[
     site::LEASE_TAKEOVER_REAP_FAIL,
     site::PARALLEL_JOB_PANIC,
     site::STAGE_COMPUTE_PANIC,
+    site::TUNER_PUBLISH_FAIL,
 ];
 
 /// When an armed site injects.

@@ -32,6 +32,7 @@ use fitq::coordinator::{
 };
 use fitq::data::EvalSet;
 use fitq::metrics::{FitTable, PackedConfig};
+use fitq::native::{simd, tune};
 use fitq::quant::{model_bits, BitConfig, BitConfigSampler, PRECISIONS};
 use fitq::runtime::Runtime;
 
@@ -101,6 +102,11 @@ const USAGE: &str = "fitq <command>\n\
   cache      verify|gc|stats [--results DIR] [--tmp-age-secs N]\n\
      verify quarantines corrupt store entries (nonzero exit if any);\n\
      gc reaps expired leases and stale temp files; stats summarizes.\n\
+  tune       [--results DIR] [--threads N]  measure per-host kernel routing\n\
+     micro-benchmarks every (op, shape-class, SIMD-variant) triple and\n\
+     persists the winner table in the artifact cache keyed by a host\n\
+     fingerprint; native runs do the same lazily on first dispatch, so\n\
+     `tune` just runs it eagerly and prints the table.\n\
   A config that fails mid-sweep degrades to a report entry (the study\n\
      completes on the survivors) instead of aborting the experiment.\n\
   Every command takes --backend native|pjrt (also $FITQ_BACKEND):\n\
@@ -110,6 +116,10 @@ const USAGE: &str = "fitq <command>\n\
      $FITQ_NATIVE_THREADS=N threads the native GEMM kernels intra-op\n\
      (default 1, 0 = all cores; bit-identical output at every setting —\n\
      parallel phases switch workers back to serial on their own).\n\
+     $FITQ_NATIVE_KERNEL=auto|scalar|sse2|avx2|neon pins the native SIMD\n\
+     kernel variant (default auto = the tuned per-host routing; every\n\
+     variant is bit-identical — only wall clock differs). Unknown or\n\
+     unavailable values are a hard error, never a silent fallback.\n\
   --model also accepts the path of a zoo model manifest ending in .json\n\
      (e.g. --model zoo/cnn_cifar_deep.json): the manifest is strictly\n\
      validated, compiled into a native plan, and runs on the native\n\
@@ -141,6 +151,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "zoo-check" => cmd_zoo_check(&args),
         "cache" => cmd_cache(&args),
+        "tune" => cmd_tune(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -248,6 +259,61 @@ fn cmd_cache(args: &Args) -> Result<()> {
         }
         other => bail!("unknown cache operation {other:?} (want verify, gc or stats)"),
     }
+}
+
+/// `fitq tune`: resolve this host's kernel route table — cache hit, or
+/// micro-benchmark under the tuning lease and publish — and print it.
+/// This is exactly the path a native run takes lazily on its first
+/// conv/dense dispatch; the command just runs it eagerly and shows the
+/// winners plus the measurements they were picked from.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let root = args
+        .get("results")
+        .map(PathBuf::from)
+        .unwrap_or_else(stages::results_root_from_env);
+    let cache = ArtifactCache::new(root.join("cache"))?;
+    let threads = args.usize_or("threads", 1)?;
+    let (table, how) = tune::resolve_at(&cache, threads);
+
+    let isas: Vec<&str> = simd::Isa::detected().into_iter().map(|i| i.name()).collect();
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    println!(
+        "host {} (arch {}, isas [{}], {cores} cores): {}",
+        tune::host_fingerprint().hex(),
+        std::env::consts::ARCH,
+        isas.join(" "),
+        how.name()
+    );
+    let class_names = ["<=4", "<=8", "<=16", "<=32", ">32"];
+    println!("routes (per vector-axis width class):");
+    for op in tune::OPS {
+        let cells: Vec<String> = (0..tune::N_CLASSES)
+            .map(|c| {
+                let ch = table.choice(op, tune::CLASS_WIDTHS[c]);
+                format!("{}:{}/{}", class_names[c], ch.lowering.name(), ch.isa.name())
+            })
+            .collect();
+        println!("  {:<11} {}", op.name(), cells.join("  "));
+    }
+    if table.measurements.is_empty() {
+        println!("(no stored measurements — table was built without tuning)");
+        return Ok(());
+    }
+    println!("measurements (nominal GFLOP/s, min-of-reps; comparable within a row):");
+    for op in tune::OPS {
+        for c in 0..tune::N_CLASSES {
+            let row: Vec<String> = table
+                .measurements
+                .iter()
+                .filter(|m| m.op == op && m.class == c)
+                .map(|m| format!("{}/{} {:.3}", m.lowering.name(), m.isa.name(), m.gflops))
+                .collect();
+            if !row.is_empty() {
+                println!("  {:<11} {:<5} {}", op.name(), class_names[c], row.join(" | "));
+            }
+        }
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

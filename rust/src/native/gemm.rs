@@ -48,32 +48,29 @@
 //! and was cross-validated bitwise in C (`tools/cmirror/`) through full
 //! multi-epoch train loops before this layer shipped.
 //!
-//! # Which lowering runs where (measured, not assumed)
+//! # SIMD variants and routing (measured per host, not assumed)
 //!
-//! The PR that introduced this layer assumed the scalar loop nests were
-//! slow and im2col+GEMM would dominate. Measurement (tools/cmirror, gcc
-//! -O3 proxy at the same SSE2 baseline rustc targets) says otherwise:
-//! the reference forward/backward-by-weights loops — whose inner loop
-//! is a `c_out`-wide rank-1 update — already vectorize to roughly half
-//! of machine peak, which an im2col+GEMM of the *same* arithmetic
-//! cannot beat after paying the 9x im2col materialization. A
-//! register-tiled micro-kernel variant measured *slower* than the plain
-//! rank-1 stream at this baseline, which is why [`sgemm`] is the simple
-//! form. The measured routing (encoded in `ops.rs`, before/after in
-//! BENCH_parallel_study.json):
+//! Every kernel here takes an [`Isa`] argument and bottoms out in the
+//! `native::simd` panel routines, which vectorize across *independent
+//! output elements* (the channel axis) with explicit SSE2/AVX2/NEON
+//! intrinsics — mul-then-add, never FMA — so the per-element chain
+//! above is literally unchanged and the 0-ULP contract holds for every
+//! variant (pinned by the variant matrix in `tests/native_gemm.rs`).
 //!
-//! - conv forward → [`conv2d_direct`] (reference loop, image-range
-//!   threaded). The im2col+GEMM lowering (`ops::conv2d_im2col`) is
-//!   kept, property-tested, for wide-`c_out` models where the direct
-//!   form's out-row store/load traffic overtakes the lowering cost.
-//! - conv backward-by-weights → [`conv2d_bwd_w_direct`] (tap-threaded,
-//!   zero-skip; no im2col materialization).
-//! - conv backward-by-input → `W^T` pack + [`sgemm`] (`G = dout * W^T`)
-//!   + [`col2im3x3`]: 1.3-3x faster than the reference's per-element
-//!   dot products *serially*, because the rank-1 form vectorizes where
-//!   the reference's horizontal `c_out` reduction does not, and the
-//!   relu-masked `dout` rows are ~half exact zeros.
-//! - dense forward/backward → [`sgemm`] / [`sgemm_atb`].
+//! *Which* variant and *which* lowering (direct loop vs im2col+GEMM)
+//! runs for a given op and shape is no longer hand-pinned: PR 5's
+//! routing was measured on one 2-core box, and re-measurement showed
+//! the winner flips with both the host and the channel width — e.g. on
+//! the AVX2 measurement host, AVX2 wins the wide CIFAR convs while
+//! SSE2 wins the `c_out = 8` MNIST stem, where 8-lane vectors never
+//! fill (BENCH_kernels.json). The per-host autotuner (`native::tune`)
+//! micro-benchmarks each (op, width-class, lowering, ISA) candidate
+//! once, persists the winner table in the artifact cache keyed by a
+//! host fingerprint, and [`ExecCtx::choice`] consults it per dispatch;
+//! `FITQ_NATIVE_KERNEL={auto,scalar,sse2,avx2,neon}` forces a single
+//! variant instead. A register-tiled micro-kernel variant measured
+//! *slower* than the plain rank-1 stream, which is why [`sgemm`] keeps
+//! the simple form.
 //!
 //! **Rule for new ops**: route through the threaded GEMM layer only if
 //! (a) the per-output-element `f32` chain is provably identical to the
@@ -99,8 +96,11 @@
 //! dispatch-sized problems never pay a thread spawn for microseconds of
 //! work.
 
+use std::sync::Arc;
+
 use crate::coordinator::parallel::run_static;
-use super::ops::reference;
+use super::simd::{self, Isa};
+use super::tune::{self, Choice, KernelMode, RouteTable, TunedOp};
 
 /// M-dimension panel height of [`sgemm`]: the unit of intra-op
 /// parallelism and the write-locality granule (one panel of `C` rows
@@ -144,8 +144,9 @@ pub struct Scratch {
 }
 
 /// Per-dispatcher execution context of the GEMM layer: the intra-op
-/// thread budget, the reference-kernel escape hatch, and the scratch
-/// arena. One lives behind a `RefCell` in every
+/// thread budget, the kernel-variant selection policy, the
+/// reference-kernel escape hatch, and the scratch arena. One lives
+/// behind a `RefCell` in every
 /// [`NativeExec`](super::entries::NativeExec); tests and oracles use
 /// [`ExecCtx::serial`].
 #[derive(Debug, Default)]
@@ -157,6 +158,14 @@ pub struct ExecCtx {
     /// layer (`FITQ_NATIVE_REFERENCE=1`) — the measured "before" of the
     /// before/after benchmark, and an A/B oracle for debugging.
     pub use_reference: bool,
+    /// Kernel-variant policy. The backend parses it from
+    /// `FITQ_NATIVE_KERNEL` (unset = `Auto`); contexts built directly
+    /// default to forcing the best available ISA (no tuner IO).
+    pub mode: KernelMode,
+    /// The resolved route table (`Auto` mode only, installed lazily on
+    /// the first [`ExecCtx::choice`] or up front by
+    /// [`ExecCtx::with_routes`]).
+    routes: Option<Arc<RouteTable>>,
     /// The per-worker scratch arena.
     pub scratch: Scratch,
 }
@@ -170,6 +179,40 @@ impl ExecCtx {
     /// The serial kernel-path context (what op-level tests use).
     pub fn serial() -> ExecCtx {
         ExecCtx::new(1)
+    }
+
+    /// A serial context forced to one kernel variant — the variant
+    /// matrix in `tests/native_gemm.rs` is built from these.
+    pub fn forced(isa: Isa) -> ExecCtx {
+        ExecCtx { threads: 1, mode: KernelMode::Forced(isa), ..ExecCtx::default() }
+    }
+
+    /// An `Auto`-mode context with a pre-resolved route table — lets
+    /// tests exercise tuned routing without touching any cache
+    /// directory.
+    pub fn with_routes(threads: usize, routes: Arc<RouteTable>) -> ExecCtx {
+        ExecCtx {
+            threads,
+            mode: KernelMode::Auto,
+            routes: Some(routes),
+            ..ExecCtx::default()
+        }
+    }
+
+    /// Resolve the (ISA, lowering) choice for `op` at vector-axis width
+    /// `width`. `Forced` mode pairs the forced ISA with the op's static
+    /// lowering; `Auto` consults the host's tuned table, resolving it
+    /// through the artifact cache on first use
+    /// ([`tune::resolve`](super::tune::resolve)).
+    pub fn choice(&mut self, op: TunedOp, width: usize) -> Choice {
+        match self.mode {
+            KernelMode::Forced(isa) => Choice { isa, lowering: tune::static_lowering(op) },
+            KernelMode::Auto => {
+                let routes =
+                    self.routes.get_or_insert_with(|| tune::resolve(self.threads));
+                routes.choice(op, width)
+            }
+        }
     }
 }
 
@@ -220,6 +263,7 @@ pub fn col2im3x3(
     cin: usize,
     dx: &mut [f32],
     threads: usize,
+    isa: Isa,
 ) {
     let k = 9 * cin;
     debug_assert_eq!(g.len(), n * h * w * k);
@@ -227,30 +271,7 @@ pub fn col2im3x3(
     let threads = effective_threads(threads, n, 2 * n * h * w * k);
     let panels: Vec<(usize, &mut [f32])> = dx.chunks_mut(h * w * cin).enumerate().collect();
     run_static(panels, threads, |_, (ni, panel)| {
-        for xi in 0..h {
-            for xj in 0..w {
-                let drow = &mut panel[(xi * w + xj) * cin..][..cin];
-                drow.fill(0.0);
-                for di in 0..3 {
-                    // dout pixel row i = xi + 1 - di, when in range
-                    if xi + 1 < di || xi + 1 - di >= h {
-                        continue;
-                    }
-                    let i = xi + 1 - di;
-                    for dj in 0..3 {
-                        if xj + 1 < dj || xj + 1 - dj >= w {
-                            continue;
-                        }
-                        let j = xj + 1 - dj;
-                        let grow =
-                            &g[((ni * h + i) * w + j) * k + (di * 3 + dj) * cin..][..cin];
-                        for (d, &v) in drow.iter_mut().zip(grow) {
-                            *d += v;
-                        }
-                    }
-                }
-            }
-        }
+        simd::col2im_image(isa, g, panel, h, w, cin, ni);
     });
 }
 
@@ -282,6 +303,7 @@ pub fn sgemm(
     init: Init,
     c: &mut [f32],
     threads: usize,
+    isa: Isa,
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -292,27 +314,15 @@ pub fn sgemm(
     if m == 0 || n == 0 {
         return;
     }
+    let bias = match init {
+        Init::Bias(bias) => Some(bias),
+        Init::Zero => None,
+    };
     let n_panels = m.div_ceil(MC);
     let threads = effective_threads(threads, n_panels, 2 * m * n * k);
     let panels: Vec<(usize, &mut [f32])> = c.chunks_mut(MC * n).enumerate().collect();
     run_static(panels, threads, |_, (pi, c_panel)| {
-        let row0 = pi * MC;
-        for (r, crow) in c_panel.chunks_exact_mut(n).enumerate() {
-            match init {
-                Init::Bias(bias) => crow.copy_from_slice(bias),
-                Init::Zero => crow.fill(0.0),
-            }
-            let arow = &a[(row0 + r) * k..][..k];
-            for (p, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[p * n..][..n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
+        simd::sgemm_panel(isa, c_panel, pi * MC, n, k, a, b, bias);
     });
 }
 
@@ -329,6 +339,7 @@ pub fn sgemm_atb(
     d: &[f32],
     dw: &mut [f32],
     threads: usize,
+    isa: Isa,
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(d.len(), m * n);
@@ -342,28 +353,16 @@ pub fn sgemm_atb(
     let panels: Vec<(usize, &mut [f32])> =
         dw.chunks_mut(panel_rows * n).enumerate().collect();
     run_static(panels, threads, |_, (pi, dw_panel)| {
-        let k0 = pi * panel_rows;
-        let krows = dw_panel.len() / n;
-        for mi in 0..m {
-            let arow = &a[mi * k + k0..][..krows];
-            let drow = &d[mi * n..][..n];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                for (dv, &dd) in dw_panel[kk * n..][..n].iter_mut().zip(drow) {
-                    *dv += av * dd;
-                }
-            }
-        }
+        simd::sgemm_atb_panel(isa, dw_panel, pi * panel_rows, m, n, k, a, d);
     });
 }
 
 /// Direct 3x3 SAME conv forward, threaded over contiguous image ranges:
-/// each range executes [`reference::conv2d`] verbatim on its disjoint
-/// slice of `x`/`out`, so `threads = 1` *is* the reference and every
-/// budget is bit-identical. The production forward lowering (see the
-/// module routing notes).
+/// each range executes the reference loop nest
+/// (`simd::conv_fwd_block`, the `ops::reference::conv2d` order at the
+/// chosen ISA) on its disjoint slice of `x`/`out`, so `threads = 1`
+/// *is* the reference chain and every budget is bit-identical. The
+/// default forward lowering (see the module routing notes).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_direct(
     x: &[f32],
@@ -376,10 +375,11 @@ pub fn conv2d_direct(
     bias: &[f32],
     out: &mut [f32],
     threads: usize,
+    isa: Isa,
 ) {
     let threads = effective_threads(threads, n, 2 * n * h * w * 9 * cin * cout);
     if threads <= 1 {
-        return reference::conv2d(x, n, h, w, cin, wgt, cout, bias, out);
+        return simd::conv_fwd_block(isa, x, n, h, w, cin, wgt, cout, bias, out);
     }
     let per = n.div_ceil(threads);
     let panels: Vec<(usize, &mut [f32])> =
@@ -388,7 +388,7 @@ pub fn conv2d_direct(
         let n0 = t * per;
         let nn = out_panel.len() / (h * w * cout);
         let x_panel = &x[n0 * h * w * cin..][..nn * h * w * cin];
-        reference::conv2d(x_panel, nn, h, w, cin, wgt, cout, bias, out_panel);
+        simd::conv_fwd_block(isa, x_panel, nn, h, w, cin, wgt, cout, bias, out_panel);
     });
 }
 
@@ -411,37 +411,14 @@ pub fn conv2d_bwd_w_direct(
     dw: &mut [f32],
     db: &mut [f32],
     threads: usize,
+    isa: Isa,
 ) {
     let threads = effective_threads(threads, 9, 2 * n * h * w * 9 * cin * cout);
     let taps: Vec<(usize, &mut [f32])> = dw.chunks_mut(cin * cout).enumerate().collect();
     run_static(taps, threads, |_, (tap, dw_tap)| {
-        let (di, dj) = (tap / 3, tap % 3);
-        let (i0, i1) = reference::tap_range(di, h);
-        let (j0, j1) = reference::tap_range(dj, w);
-        for ni in 0..n {
-            for i in i0..i1 {
-                let xi = i + di - 1;
-                for j in j0..j1 {
-                    let xj = j + dj - 1;
-                    let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
-                    let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
-                    for (ci, &xv) in xrow.iter().enumerate() {
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        for (dwv, &dv) in dw_tap[ci * cout..][..cout].iter_mut().zip(drow) {
-                            *dwv += xv * dv;
-                        }
-                    }
-                }
-            }
-        }
+        simd::conv_bwd_w_tap(isa, x, n, h, w, cin, dout, cout, dw_tap, tap / 3, tap % 3);
     });
-    for drow in dout.chunks_exact(cout) {
-        for (b, &dv) in db.iter_mut().zip(drow) {
-            *b += dv;
-        }
-    }
+    simd::col_sum(isa, db, dout, cout);
 }
 
 #[cfg(test)]
@@ -472,27 +449,30 @@ mod tests {
     #[test]
     fn sgemm_matches_naive_bitwise_on_odd_shapes() {
         // shapes straddling the panel boundary, single rows/cols, and a
-        // zero-sparse A exercising the skip path
-        for &(m, n, k) in
-            &[(1, 1, 1), (3, 5, 7), (63, 8, 40), (65, 10, 27), (130, 3, 259)]
-        {
-            let mut a = randv(m * k, 1000 + m as u64);
-            for v in a.iter_mut().step_by(3) {
-                *v = v.max(0.0); // exact zeros, post-ReLU style
+        // zero-sparse A exercising the skip path — for every detected
+        // SIMD variant (the naive oracle is the reference chain)
+        for isa in Isa::detected() {
+            for &(m, n, k) in
+                &[(1, 1, 1), (3, 5, 7), (63, 8, 40), (65, 10, 27), (130, 3, 259)]
+            {
+                let mut a = randv(m * k, 1000 + m as u64);
+                for v in a.iter_mut().step_by(3) {
+                    *v = v.max(0.0); // exact zeros, post-ReLU style
+                }
+                let b = randv(k * n, 2000 + n as u64);
+                let bias = randv(n, 3000 + k as u64);
+                let want = naive(m, n, k, &a, &b, Some(&bias));
+                let mut got = vec![0.0f32; m * n];
+                sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut got, 1, isa);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "({m},{n},{k}) {isa}"
+                );
+                let want0 = naive(m, n, k, &a, &b, None);
+                sgemm(m, n, k, &a, &b, Init::Zero, &mut got, 1, isa);
+                assert_eq!(got, want0, "zero-init ({m},{n},{k}) {isa}");
             }
-            let b = randv(k * n, 2000 + n as u64);
-            let bias = randv(n, 3000 + k as u64);
-            let want = naive(m, n, k, &a, &b, Some(&bias));
-            let mut got = vec![0.0f32; m * n];
-            sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut got, 1);
-            assert_eq!(
-                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                "({m},{n},{k})"
-            );
-            let want0 = naive(m, n, k, &a, &b, None);
-            sgemm(m, n, k, &a, &b, Init::Zero, &mut got, 1);
-            assert_eq!(got, want0, "zero-init ({m},{n},{k})");
         }
     }
 
@@ -503,15 +483,17 @@ mod tests {
         let b = randv(k * n, 8);
         let bias = randv(n, 9);
         let mut c1 = vec![0.0f32; m * n];
-        sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut c1, 1);
-        for threads in [2usize, 4, 16] {
-            let mut ct = vec![0.0f32; m * n];
-            sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut ct, threads);
-            assert_eq!(
-                c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                ct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                "threads={threads}"
-            );
+        sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut c1, 1, Isa::Scalar);
+        for isa in Isa::detected() {
+            for threads in [2usize, 4, 16] {
+                let mut ct = vec![0.0f32; m * n];
+                sgemm(m, n, k, &a, &b, Init::Bias(&bias), &mut ct, threads, isa);
+                assert_eq!(
+                    c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    ct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "threads={threads} {isa}"
+                );
+            }
         }
     }
 
@@ -532,14 +514,16 @@ mod tests {
                 }
             }
         }
-        for threads in [1usize, 2, 4] {
-            let mut got = vec![0.0f32; k * n];
-            sgemm_atb(m, n, k, &a, &d, &mut got, threads);
-            assert_eq!(
-                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                "threads={threads}"
-            );
+        for isa in Isa::detected() {
+            for threads in [1usize, 2, 4] {
+                let mut got = vec![0.0f32; k * n];
+                sgemm_atb(m, n, k, &a, &d, &mut got, threads, isa);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "threads={threads} {isa}"
+                );
+            }
         }
     }
 
@@ -568,7 +552,7 @@ mod tests {
         let mut a = Vec::new();
         im2col3x3(&x, n, h, w, cin, &mut a);
         let mut back = vec![0.0f32; x.len()];
-        col2im3x3(&a, n, h, w, cin, &mut back, 1);
+        col2im3x3(&a, n, h, w, cin, &mut back, 1, Isa::Scalar);
         for ni in 0..n {
             for i in 0..h {
                 let ri = if i == 0 || i == h - 1 { 2 } else { 3 };

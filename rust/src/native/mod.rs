@@ -16,11 +16,19 @@
 //!   panel-parallel rank-1 `sgemm`, and threaded direct-conv kernels,
 //!   all under a fixed-order `f32` accumulation contract and fanned
 //!   over `coordinator::parallel::run_static`.
+//! - [`simd`] — explicit SSE2/AVX2/NEON panel kernels behind runtime
+//!   feature detection, vectorized across *independent outputs* so
+//!   every variant reproduces the scalar accumulation order bit-exactly
+//!   (the 0-ULP contract; see the module doc for the never-FMA rule).
+//! - [`tune`] — the per-host autotuner: micro-benchmarks each
+//!   (op, shape-class, variant) triple once, persists the winner table
+//!   in the artifact cache under a host fingerprint, and honors the
+//!   `FITQ_NATIVE_KERNEL` escape hatch.
 //! - [`ops`] — conv2d / dense / max-pool / batch-norm / relu /
 //!   softmax-CE, forward *and* hand-derived backward; conv/dense run
-//!   through [`gemm`] under a *measured* per-op routing, with the
-//!   original scalar loop nests kept as `ops::reference` oracles
-//!   (0-ULP pinned by `tests/native_gemm.rs`).
+//!   through [`gemm`] under the *measured* per-op routing from
+//!   [`tune`], with the original scalar loop nests kept as
+//!   `ops::reference` oracles (0-ULP pinned by `tests/native_gemm.rs`).
 //! - [`quant`] — `fake_quant` bit-faithful to the L1 Pallas kernel
 //!   (ties-to-even, fused `q*delta+lo`), with the straight-through
 //!   backward convention.
@@ -49,6 +57,8 @@ pub mod model;
 pub mod net;
 pub mod ops;
 pub mod quant;
+pub mod simd;
+pub mod tune;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
@@ -140,9 +150,13 @@ impl Backend for NativeBackend {
         // the manifest is the source of truth for dispatch shapes, so the
         // scanned-epoch K comes from it, not the global constant
         let kind = EntryKind::parse(&entry.name, model.train_k)?;
+        // fail-closed: an unknown/unavailable FITQ_NATIVE_KERNEL value is
+        // a compile error, not a silent fallback to some other variant
+        let mode = tune::KernelMode::from_env()?;
         let ctx = ExecCtx {
             threads: self.threads,
             use_reference: self.use_reference,
+            mode,
             ..ExecCtx::default()
         };
         Ok(Box::new(NativeExec { plan: plan.clone(), kind, ctx: RefCell::new(ctx) }))

@@ -8,19 +8,24 @@
 //! in `tests/native_backend.rs` pin down.
 //!
 //! The conv/dense family executes through the math-kernel layer in
-//! [`gemm`](super::gemm), with the scratch matrices and the intra-op
-//! thread budget carried by the caller's [`ExecCtx`]. The routing is
-//! *measured*, not assumed (see the `gemm` module docs and DESIGN.md
-//! "Native math kernels"): conv forward and backward-by-weights run the
-//! threaded direct kernels (the reference loop shape, which already
-//! vectorizes near roofline), while backward-by-input and the dense
-//! layer lower to the rank-1 `sgemm` — the one place the GEMM form is a
-//! measured win (1.3-3x serially). The im2col+GEMM conv lowerings
-//! ([`conv2d_im2col`], [`conv2d_bwd_w_im2col`]) are kept, 0-ULP
-//! property-tested, as the alternative for wide-`c_out` shapes. The
-//! original scalar loop nests live on in [`reference`] as the oracles
-//! every path is pinned against (`tests/native_gemm.rs`) — and as the
-//! measured "before" of the before/after benchmark
+//! [`gemm`](super::gemm), with the scratch matrices, the intra-op
+//! thread budget, and the kernel-variant policy carried by the caller's
+//! [`ExecCtx`]. The routing is *measured on the running host*, not
+//! assumed (see the `gemm` module docs and DESIGN.md "Kernel dispatch &
+//! autotuning"): each wrapper asks [`ExecCtx::choice`] which (ISA,
+//! lowering) won the autotuner's micro-benchmark for its op and
+//! vector-axis width class — direct loop vs im2col+GEMM for the convs
+//! ([`conv2d_im2col`], [`conv2d_bwd_w_im2col`] are first-class tunable
+//! variants, 0-ULP property-tested), the rank-1 `sgemm` form for
+//! backward-by-input and dense. PR 5's hand-pinned routing survives
+//! only as the deterministic fallback under a forced
+//! `FITQ_NATIVE_KERNEL` (its one-host evidence — "im2col loses for the
+//! study models' narrow `c_out`" — turned out width- and host-specific;
+//! BENCH_kernels.json has the multi-width data). Every variant of every
+//! route is bit-identical, so routing can never change a result, only
+//! wall-clock. The original scalar loop nests live on in [`reference`]
+//! as the oracles every path is pinned against (`tests/native_gemm.rs`)
+//! — and as the measured "before" of the before/after benchmark
 //! (`FITQ_NATIVE_REFERENCE=1`). Elementwise and reduction ops (ReLU,
 //! max-pool, batch-norm, softmax-CE) are memory-bound and stay scalar.
 //!
@@ -36,6 +41,8 @@
 /// conv/dense wrapper below takes — defined in [`gemm`](super::gemm).
 pub use super::gemm::ExecCtx;
 use super::gemm::{self, Init};
+use super::simd::{self, Isa};
+use super::tune::{Lowering, TunedOp};
 
 /// The scalar loop-nest kernels the GEMM path replaced, kept as oracles.
 ///
@@ -241,10 +248,11 @@ pub mod reference {
     }
 }
 
-/// SAME-padded 3x3 stride-1 conv, production lowering: the threaded
-/// direct kernel ([`gemm::conv2d_direct`] — bit-identical to
-/// [`reference::conv2d`], and literally the same loop when serial).
-/// `out` is overwritten; the thread budget comes from `ctx`.
+/// SAME-padded 3x3 stride-1 conv: routed per the tuned [`ExecCtx::choice`]
+/// for [`TunedOp::ConvFwd`] at this `c_out` — the threaded direct kernel
+/// ([`gemm::conv2d_direct`]) or the im2col+GEMM lowering
+/// ([`conv2d_im2col`]), both bit-identical to [`reference::conv2d`] at
+/// every ISA. `out` is overwritten.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d(
     x: &[f32],
@@ -261,15 +269,20 @@ pub fn conv2d(
     if ctx.use_reference {
         return reference::conv2d(x, n, h, w, cin, wgt, cout, bias, out);
     }
-    gemm::conv2d_direct(x, n, h, w, cin, wgt, cout, bias, out, ctx.threads);
+    let c = ctx.choice(TunedOp::ConvFwd, cout);
+    match c.lowering {
+        Lowering::Im2col => conv2d_im2col_at(x, n, h, w, cin, wgt, cout, bias, out, ctx, c.isa),
+        _ => gemm::conv2d_direct(x, n, h, w, cin, wgt, cout, bias, out, ctx.threads, c.isa),
+    }
 }
 
 /// The im2col + GEMM conv lowering (`out = im2col(x) * W + bias`);
-/// bit-identical to [`reference::conv2d`] and [`conv2d`]. Not routed by
-/// default — measured slower than the direct kernel for the study
-/// models' narrow `c_out` (the im2col materialization outweighs the
-/// GEMM's locality edge); kept tested for wide-`c_out` shapes per the
-/// module routing rule.
+/// bit-identical to [`reference::conv2d`] and [`conv2d`]. A first-class
+/// tunable variant: the autotuner routes [`conv2d`] here whenever the
+/// micro-benchmark shows the GEMM's locality edge beating the 9x im2col
+/// materialization for the op's width class on the running host (PR 5
+/// pinned this off everywhere from one host's narrow-`c_out` evidence —
+/// the tuner re-decides per host and per width).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_im2col(
     x: &[f32],
@@ -283,16 +296,36 @@ pub fn conv2d_im2col(
     out: &mut [f32],
     ctx: &mut ExecCtx,
 ) {
+    let isa = ctx.choice(TunedOp::ConvFwd, cout).isa;
+    conv2d_im2col_at(x, n, h, w, cin, wgt, cout, bias, out, ctx, isa);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_im2col_at(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    bias: &[f32],
+    out: &mut [f32],
+    ctx: &mut ExecCtx,
+    isa: Isa,
+) {
     let m = n * h * w;
     let k = 9 * cin;
     gemm::im2col3x3(x, n, h, w, cin, &mut ctx.scratch.a);
-    gemm::sgemm(m, cout, k, &ctx.scratch.a, wgt, Init::Bias(bias), out, ctx.threads);
+    gemm::sgemm(m, cout, k, &ctx.scratch.a, wgt, Init::Bias(bias), out, ctx.threads, isa);
 }
 
-/// Conv backward w.r.t. kernel and bias, production lowering: the
-/// tap-threaded direct kernel with exact-zero skipping
-/// ([`gemm::conv2d_bwd_w_direct`]); accumulates into `dw`/`db` (callers
-/// zero them). Bit-identical to [`reference::conv2d_bwd_w`].
+/// Conv backward w.r.t. kernel and bias: routed per the tuned
+/// [`ExecCtx::choice`] for [`TunedOp::ConvBwdW`] — the tap-threaded
+/// direct kernel with exact-zero skipping
+/// ([`gemm::conv2d_bwd_w_direct`]) or the im2col+GEMM lowering
+/// ([`conv2d_bwd_w_im2col`]); accumulates into `dw`/`db` (callers zero
+/// them). Bit-identical to [`reference::conv2d_bwd_w`] at every ISA.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd_w(
     x: &[f32],
@@ -309,13 +342,19 @@ pub fn conv2d_bwd_w(
     if ctx.use_reference {
         return reference::conv2d_bwd_w(x, n, h, w, cin, dout, cout, dw, db);
     }
-    gemm::conv2d_bwd_w_direct(x, n, h, w, cin, dout, cout, dw, db, ctx.threads);
+    let c = ctx.choice(TunedOp::ConvBwdW, cout);
+    match c.lowering {
+        Lowering::Im2col => {
+            conv2d_bwd_w_im2col_at(x, n, h, w, cin, dout, cout, dw, db, ctx, c.isa)
+        }
+        _ => gemm::conv2d_bwd_w_direct(x, n, h, w, cin, dout, cout, dw, db, ctx.threads, c.isa),
+    }
 }
 
 /// The im2col + GEMM backward-by-weights lowering (`dw += im2col(x)^T *
 /// dout`); bit-identical to [`reference::conv2d_bwd_w`] and
-/// [`conv2d_bwd_w`]. Not routed by default (same measured reasoning as
-/// [`conv2d_im2col`]); kept tested as the alternative.
+/// [`conv2d_bwd_w`]. A first-class tunable variant (same per-host
+/// reasoning as [`conv2d_im2col`]).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd_w_im2col(
     x: &[f32],
@@ -329,15 +368,29 @@ pub fn conv2d_bwd_w_im2col(
     db: &mut [f32],
     ctx: &mut ExecCtx,
 ) {
+    let isa = ctx.choice(TunedOp::ConvBwdW, cout).isa;
+    conv2d_bwd_w_im2col_at(x, n, h, w, cin, dout, cout, dw, db, ctx, isa);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_bwd_w_im2col_at(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dout: &[f32],
+    cout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    ctx: &mut ExecCtx,
+    isa: Isa,
+) {
     let m = n * h * w;
     let k = 9 * cin;
     gemm::im2col3x3(x, n, h, w, cin, &mut ctx.scratch.a);
-    gemm::sgemm_atb(m, cout, k, &ctx.scratch.a, dout, dw, ctx.threads);
-    for drow in dout.chunks_exact(cout) {
-        for (b, &dv) in db.iter_mut().zip(drow) {
-            *b += dv;
-        }
-    }
+    gemm::sgemm_atb(m, cout, k, &ctx.scratch.a, dout, dw, ctx.threads, isa);
+    simd::col_sum(isa, db, dout, cout);
 }
 
 /// Conv backward w.r.t. the input (`G = dout * W^T`, then the col2im
@@ -358,14 +411,26 @@ pub fn conv2d_bwd_x(
     if ctx.use_reference {
         return reference::conv2d_bwd_x(wgt, n, h, w, cin, dout, cout, dx);
     }
+    // the vector axis of both the G GEMM and the col2im gather is c_in
+    let isa = ctx.choice(TunedOp::ConvBwdX, cin).isa;
     let m = n * h * w;
     let k = 9 * cin;
     gemm::transpose(wgt, k, cout, &mut ctx.scratch.b);
     // size (don't re-zero) the G buffer: the Init::Zero sgemm overwrites
     // every element before accumulating
     ctx.scratch.a.resize(m * k, 0.0);
-    gemm::sgemm(m, k, cout, dout, &ctx.scratch.b, Init::Zero, &mut ctx.scratch.a, ctx.threads);
-    gemm::col2im3x3(&ctx.scratch.a, n, h, w, cin, dx, ctx.threads);
+    gemm::sgemm(
+        m,
+        k,
+        cout,
+        dout,
+        &ctx.scratch.b,
+        Init::Zero,
+        &mut ctx.scratch.a,
+        ctx.threads,
+        isa,
+    );
+    gemm::col2im3x3(&ctx.scratch.a, n, h, w, cin, dx, ctx.threads, isa);
 }
 
 /// Dense layer as one GEMM (`out = x * W + bias`); overwrites `out`.
@@ -384,7 +449,8 @@ pub fn dense(
     if ctx.use_reference {
         return reference::dense(x, n, fin, wgt, fout, bias, out);
     }
-    gemm::sgemm(n, fout, fin, x, wgt, Init::Bias(bias), out, ctx.threads);
+    let isa = ctx.choice(TunedOp::DenseFwd, fout).isa;
+    gemm::sgemm(n, fout, fin, x, wgt, Init::Bias(bias), out, ctx.threads, isa);
 }
 
 /// Dense backward (`dw += x^T * dout`, `db += column sums`, `dx = dout *
@@ -406,14 +472,11 @@ pub fn dense_bwd(
     if ctx.use_reference {
         return reference::dense_bwd(x, wgt, n, fin, fout, dout, dw, db, dx);
     }
-    gemm::sgemm_atb(n, fout, fin, x, dout, dw, ctx.threads);
-    for drow in dout.chunks_exact(fout) {
-        for (b, &dv) in db.iter_mut().zip(drow) {
-            *b += dv;
-        }
-    }
+    let isa = ctx.choice(TunedOp::DenseBwd, fout).isa;
+    gemm::sgemm_atb(n, fout, fin, x, dout, dw, ctx.threads, isa);
+    simd::col_sum(isa, db, dout, fout);
     gemm::transpose(wgt, fin, fout, &mut ctx.scratch.b);
-    gemm::sgemm(n, fin, fout, dout, &ctx.scratch.b, Init::Zero, dx, ctx.threads);
+    gemm::sgemm(n, fin, fout, dout, &ctx.scratch.b, Init::Zero, dx, ctx.threads, isa);
 }
 
 /// ReLU; overwrites `out` (the backward masks on this output).

@@ -1,0 +1,642 @@
+//! Runtime-dispatched SIMD panel kernels behind the GEMM layer.
+//!
+//! Every hot kernel in `gemm.rs` bottoms out in one of six *panel*
+//! routines defined here, generated once per instruction set by
+//! [`define_panel_kernels!`]: scalar always, SSE2 + AVX2 on x86-64
+//! (SSE2 is the baseline rustc already targets; AVX2 is gated on
+//! `is_x86_feature_detected!`), NEON on aarch64. The variant to run is
+//! picked at dispatch time from an [`Isa`] value the caller threads
+//! through — either forced (`FITQ_NATIVE_KERNEL`) or chosen per
+//! (op, shape-class) by the autotuner (`native::tune`).
+//!
+//! # The 0-ULP contract survives vectorization
+//!
+//! All variants are bit-identical to `ops::reference` because
+//! vectorization only ever runs across *independent output elements*
+//! (the channel / column axis); the reduction over k (or taps) stays a
+//! serial `acc += a * b` per output in the reference order. Two rules
+//! make that literal:
+//!
+//! - **never FMA**: `axpy` uses a separate multiply then add
+//!   (`_mm_add_ps(acc, _mm_mul_ps(s, v))`), i.e. the same two
+//!   roundings as the scalar `*c += s * v`. A fused `vfmadd`/`vfmaq`
+//!   would round once and break bit-identity.
+//! - **skip semantics are preserved, not approximated**: the exact-zero
+//!   skips (`a == 0.0` in `sgemm`/`sgemm_atb`, `xv == 0.0` in the conv
+//!   weight gradient) guard whole `axpy` rows, so the signed-zero
+//!   algebra of the remaining adds is untouched. The conv *forward*
+//!   has no skip — neither does `ops::reference::conv2d`, and skipping
+//!   there would turn `(+0.0) + (-0.0)*w` into `+0.0` vs `-0.0`.
+//!
+//! Adding an ISA = one `mod` with `axpy`/`vadd` intrinsics + a
+//! `define_panel_kernels!` invocation + an [`Isa`] arm; the variant
+//! matrix in `tests/native_gemm.rs` then pins it at 0 ULP
+//! automatically (it iterates [`Isa::detected`]).
+
+use super::ops::reference::tap_range;
+
+/// One kernel-variant instruction set. Discriminants are stable — they
+/// are persisted inside tuner tables (`native::tune`) and folded into
+/// the host fingerprint bitmask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Plain loops — the portable baseline, available everywhere.
+    Scalar = 0,
+    /// 4-wide `_mm` intrinsics; x86-64 baseline, no runtime gate.
+    Sse2 = 1,
+    /// 8-wide `_mm256` intrinsics; gated on `is_x86_feature_detected!`.
+    Avx2 = 2,
+    /// 4-wide `vld1q`/`vst1q` intrinsics; aarch64 baseline.
+    Neon = 3,
+}
+
+/// All variants this build knows about, ascending by preference.
+pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon];
+
+impl Isa {
+    /// Stable lowercase name (the `FITQ_NATIVE_KERNEL` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`Isa::name`]; `None` for unknown strings.
+    pub fn parse(s: &str) -> Option<Isa> {
+        ALL.into_iter().find(|isa| isa.name() == s)
+    }
+
+    /// Decode a persisted discriminant (tuner table codec).
+    pub fn from_u8(v: u8) -> Option<Isa> {
+        ALL.into_iter().find(|isa| *isa as u8 == v)
+    }
+
+    /// Can this variant run on the current host?
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every variant available on this host, ascending (scalar first).
+    pub fn detected() -> Vec<Isa> {
+        ALL.into_iter().filter(|isa| isa.available()).collect()
+    }
+
+    /// The widest available variant (what `Forced` mode defaults to and
+    /// what an untuned table routes everything to).
+    pub fn best() -> Isa {
+        *Isa::detected().last().expect("scalar is always available")
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Generates the six panel routines in terms of the enclosing module's
+/// `axpy`/`vadd` helpers. `$attr` is forwarded to every generated fn so
+/// feature-gated modules (AVX2) put `#[target_feature]` on the whole
+/// panel — dispatch pays the feature check once per panel, not per row.
+/// All generated fns are uniformly `unsafe` (the intrinsic modules need
+/// it; the scalar module just inherits the signature).
+macro_rules! define_panel_kernels {
+    ($(#[$attr:meta])*) => {
+        /// One M-panel of `sgemm`: rows `row0..row0+rows` of `C`, row
+        /// init from `bias` (`None` = zero), exact-zero A entries
+        /// skipped, k ascending per row.
+        ///
+        /// # Safety
+        /// Caller must ensure this ISA is available on the host (see
+        /// [`Isa::available`](super::Isa::available)); all memory access
+        /// is bounds-checked slice indexing.
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        pub(super) unsafe fn sgemm_panel(
+            c_panel: &mut [f32],
+            row0: usize,
+            n: usize,
+            k: usize,
+            a: &[f32],
+            b: &[f32],
+            bias: Option<&[f32]>,
+        ) {
+            for (r, crow) in c_panel.chunks_exact_mut(n).enumerate() {
+                match bias {
+                    Some(init) => crow.copy_from_slice(init),
+                    None => crow.fill(0.0),
+                }
+                let arow = &a[(row0 + r) * k..][..k];
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy(crow, &b[p * n..][..n], av);
+                }
+            }
+        }
+
+        /// One K-panel of `sgemm_atb`: rows `k0..k0+krows` of
+        /// `dW += A^T D`, m ascending per row (the accumulation axis).
+        /// Accumulates — callers zero `dw` (the `sgemm_atb` contract).
+        ///
+        /// # Safety
+        /// Caller must ensure this ISA is available on the host; all
+        /// memory access is bounds-checked slice indexing.
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        pub(super) unsafe fn sgemm_atb_panel(
+            dw_panel: &mut [f32],
+            k0: usize,
+            m: usize,
+            n: usize,
+            k: usize,
+            a: &[f32],
+            d: &[f32],
+        ) {
+            let krows = dw_panel.len() / n;
+            for mi in 0..m {
+                let arow = &a[mi * k + k0..][..krows];
+                let drow = &d[mi * n..][..n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy(&mut dw_panel[kk * n..][..n], drow, av);
+                }
+            }
+        }
+
+        /// Direct 3x3 same-pad conv forward over a block of `nn`
+        /// images — the `ops::reference::conv2d` nest verbatim, with the
+        /// innermost per-`cout` loop as `axpy`. Deliberately NO
+        /// exact-zero skip: the reference has none, and skipping would
+        /// change signed-zero outputs.
+        ///
+        /// # Safety
+        /// Caller must ensure this ISA is available on the host; all
+        /// memory access is bounds-checked slice indexing.
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        pub(super) unsafe fn conv_fwd_block(
+            x: &[f32],
+            nn: usize,
+            h: usize,
+            w: usize,
+            cin: usize,
+            wgt: &[f32],
+            cout: usize,
+            bias: &[f32],
+            out: &mut [f32],
+        ) {
+            for orow in out.chunks_exact_mut(cout) {
+                orow.copy_from_slice(bias);
+            }
+            for ni in 0..nn {
+                for di in 0..3usize {
+                    let (i0, i1) = super::tap_range(di, h);
+                    for dj in 0..3usize {
+                        let (j0, j1) = super::tap_range(dj, w);
+                        for i in i0..i1 {
+                            let xi = i + di - 1;
+                            for j in j0..j1 {
+                                let xj = j + dj - 1;
+                                let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                                let orow =
+                                    &mut out[((ni * h + i) * w + j) * cout..][..cout];
+                                for (ci, &xv) in xrow.iter().enumerate() {
+                                    let wrow =
+                                        &wgt[((di * 3 + dj) * cin + ci) * cout..][..cout];
+                                    axpy(orow, wrow, xv);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        /// One (di, dj) tap of the conv weight gradient: accumulates
+        /// `dw_tap[ci*cout..]` over images/pixels in reference order,
+        /// with the reference's exact-zero skip on `xv` (post-ReLU
+        /// activations are ~half zeros).
+        ///
+        /// # Safety
+        /// Caller must ensure this ISA is available on the host; all
+        /// memory access is bounds-checked slice indexing.
+        $(#[$attr])*
+        #[allow(clippy::too_many_arguments)]
+        pub(super) unsafe fn conv_bwd_w_tap(
+            x: &[f32],
+            n: usize,
+            h: usize,
+            w: usize,
+            cin: usize,
+            dout: &[f32],
+            cout: usize,
+            dw_tap: &mut [f32],
+            di: usize,
+            dj: usize,
+        ) {
+            let (i0, i1) = super::tap_range(di, h);
+            let (j0, j1) = super::tap_range(dj, w);
+            for ni in 0..n {
+                for i in i0..i1 {
+                    let xi = i + di - 1;
+                    for j in j0..j1 {
+                        let xj = j + dj - 1;
+                        let xrow = &x[((ni * h + xi) * w + xj) * cin..][..cin];
+                        let drow = &dout[((ni * h + i) * w + j) * cout..][..cout];
+                        for (ci, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            axpy(&mut dw_tap[ci * cout..][..cout], drow, xv);
+                        }
+                    }
+                }
+            }
+        }
+
+        /// col2im for one image: per destination pixel, zero then add
+        /// the (up to 9) gathered tap columns in ascending (di, dj)
+        /// order — `vadd` across the independent `cin` lanes.
+        ///
+        /// # Safety
+        /// Caller must ensure this ISA is available on the host; all
+        /// memory access is bounds-checked slice indexing.
+        $(#[$attr])*
+        pub(super) unsafe fn col2im_image(
+            g: &[f32],
+            panel: &mut [f32],
+            h: usize,
+            w: usize,
+            cin: usize,
+            ni: usize,
+        ) {
+            let k = 9 * cin;
+            for xi in 0..h {
+                for xj in 0..w {
+                    let drow = &mut panel[(xi * w + xj) * cin..][..cin];
+                    drow.fill(0.0);
+                    for di in 0..3usize {
+                        if xi + 1 < di || xi + 1 - di >= h {
+                            continue;
+                        }
+                        let i = xi + 1 - di;
+                        for dj in 0..3usize {
+                            if xj + 1 < dj || xj + 1 - dj >= w {
+                                continue;
+                            }
+                            let j = xj + 1 - dj;
+                            let grow = &g
+                                [((ni * h + i) * w + j) * k + (di * 3 + dj) * cin..][..cin];
+                            vadd(drow, grow);
+                        }
+                    }
+                }
+            }
+        }
+
+        /// Column sums of `dout` into `db` (bias gradient): rows
+        /// ascending, `vadd` across the independent `cout` lanes.
+        /// Does NOT zero `db` — callers accumulate into a zeroed slice.
+        ///
+        /// # Safety
+        /// Caller must ensure this ISA is available on the host; all
+        /// memory access is bounds-checked slice indexing.
+        $(#[$attr])*
+        pub(super) unsafe fn col_sum(db: &mut [f32], dout: &[f32], cout: usize) {
+            for drow in dout.chunks_exact(cout) {
+                vadd(db, drow);
+            }
+        }
+    };
+}
+
+/// Portable plain-loop panels (the "scalar" variant). The `unsafe` on
+/// `axpy`/`vadd` is signature-only (macro uniformity); the bodies are
+/// safe code.
+mod scalar {
+    #[inline]
+    unsafe fn axpy(acc: &mut [f32], src: &[f32], s: f32) {
+        for (c, &v) in acc.iter_mut().zip(src) {
+            *c += s * v;
+        }
+    }
+
+    #[inline]
+    unsafe fn vadd(acc: &mut [f32], src: &[f32]) {
+        for (c, &v) in acc.iter_mut().zip(src) {
+            *c += v;
+        }
+    }
+
+    define_panel_kernels!();
+}
+
+#[cfg(target_arch = "x86_64")]
+mod sse2 {
+    use std::arch::x86_64::*;
+
+    /// `acc[i] += s * src[i]`, 4 lanes at a time. Separate mul and add
+    /// (never `_mm_fmadd_ps`): two roundings, exactly the scalar chain.
+    #[inline]
+    unsafe fn axpy(acc: &mut [f32], src: &[f32], s: f32) {
+        let n = acc.len().min(src.len());
+        let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+        let vs = _mm_set1_ps(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = _mm_mul_ps(vs, _mm_loadu_ps(sp.add(i)));
+            _mm_storeu_ps(ap.add(i), _mm_add_ps(_mm_loadu_ps(ap.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *ap.add(i) += s * *sp.add(i);
+            i += 1;
+        }
+    }
+
+    #[inline]
+    unsafe fn vadd(acc: &mut [f32], src: &[f32]) {
+        let n = acc.len().min(src.len());
+        let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let sum = _mm_add_ps(_mm_loadu_ps(ap.add(i)), _mm_loadu_ps(sp.add(i)));
+            _mm_storeu_ps(ap.add(i), sum);
+            i += 4;
+        }
+        while i < n {
+            *ap.add(i) += *sp.add(i);
+            i += 1;
+        }
+    }
+
+    define_panel_kernels!();
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// `acc[i] += s * src[i]`, 8 lanes at a time. Separate mul and add
+    /// (never `_mm256_fmadd_ps`): two roundings, exactly the scalar
+    /// chain, even though AVX2 hosts always have FMA.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy(acc: &mut [f32], src: &[f32], s: f32) {
+        let n = acc.len().min(src.len());
+        let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(vs, _mm256_loadu_ps(sp.add(i)));
+            _mm256_storeu_ps(ap.add(i), _mm256_add_ps(_mm256_loadu_ps(ap.add(i)), prod));
+            i += 8;
+        }
+        while i < n {
+            *ap.add(i) += s * *sp.add(i);
+            i += 1;
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn vadd(acc: &mut [f32], src: &[f32]) {
+        let n = acc.len().min(src.len());
+        let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+        let mut i = 0;
+        while i + 8 <= n {
+            let sum = _mm256_add_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(sp.add(i)));
+            _mm256_storeu_ps(ap.add(i), sum);
+            i += 8;
+        }
+        while i < n {
+            *ap.add(i) += *sp.add(i);
+            i += 1;
+        }
+    }
+
+    define_panel_kernels!(#[target_feature(enable = "avx2")]);
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// `acc[i] += s * src[i]`, 4 lanes at a time. `vmulq` then `vaddq`
+    /// (never `vfmaq_f32`): two roundings, exactly the scalar chain.
+    #[inline]
+    unsafe fn axpy(acc: &mut [f32], src: &[f32], s: f32) {
+        let n = acc.len().min(src.len());
+        let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+        let vs = vdupq_n_f32(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = vmulq_f32(vs, vld1q_f32(sp.add(i)));
+            vst1q_f32(ap.add(i), vaddq_f32(vld1q_f32(ap.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *ap.add(i) += s * *sp.add(i);
+            i += 1;
+        }
+    }
+
+    #[inline]
+    unsafe fn vadd(acc: &mut [f32], src: &[f32]) {
+        let n = acc.len().min(src.len());
+        let (ap, sp) = (acc.as_mut_ptr(), src.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(ap.add(i), vaddq_f32(vld1q_f32(ap.add(i)), vld1q_f32(sp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *ap.add(i) += *sp.add(i);
+            i += 1;
+        }
+    }
+
+    define_panel_kernels!();
+}
+
+/// Dispatch one panel call to the `isa`-selected module.
+///
+/// SAFETY: panel bodies only do bounds-checked slice access plus
+/// baseline or feature-gated intrinsics. Non-baseline arms are only
+/// reachable for ISAs that [`Isa::available`] reported (the forced-mode
+/// parser and the tuner both filter on it, and dispatch debug-asserts
+/// it); ISAs of a foreign architecture fall through to scalar, which is
+/// sound because all variants are bit-identical by contract.
+macro_rules! dispatch {
+    ($isa:expr, $f:ident($($arg:expr),* $(,)?)) => {{
+        debug_assert!($isa.available(), "dispatch on unavailable ISA {:?}", $isa);
+        match $isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => unsafe { sse2::$f($($arg),*) },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::$f($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::$f($($arg),*) },
+            _ => unsafe { scalar::$f($($arg),*) },
+        }
+    }};
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sgemm_panel(
+    isa: Isa,
+    c_panel: &mut [f32],
+    row0: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+) {
+    dispatch!(isa, sgemm_panel(c_panel, row0, n, k, a, b, bias))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sgemm_atb_panel(
+    isa: Isa,
+    dw_panel: &mut [f32],
+    k0: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    d: &[f32],
+) {
+    dispatch!(isa, sgemm_atb_panel(dw_panel, k0, m, n, k, a, d))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_fwd_block(
+    isa: Isa,
+    x: &[f32],
+    nn: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    wgt: &[f32],
+    cout: usize,
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    dispatch!(isa, conv_fwd_block(x, nn, h, w, cin, wgt, cout, bias, out))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_bwd_w_tap(
+    isa: Isa,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    dout: &[f32],
+    cout: usize,
+    dw_tap: &mut [f32],
+    di: usize,
+    dj: usize,
+) {
+    dispatch!(isa, conv_bwd_w_tap(x, n, h, w, cin, dout, cout, dw_tap, di, dj))
+}
+
+pub(crate) fn col2im_image(
+    isa: Isa,
+    g: &[f32],
+    panel: &mut [f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    ni: usize,
+) {
+    dispatch!(isa, col2im_image(g, panel, h, w, cin, ni))
+}
+
+pub(crate) fn col_sum(isa: Isa, db: &mut [f32], dout: &[f32], cout: usize) {
+    dispatch!(isa, col_sum(db, dout, cout))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 41);
+        // mixed signs + exact zeros so every skip path runs
+        (0..n)
+            .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal() })
+            .collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn detection_is_sane() {
+        let det = Isa::detected();
+        assert_eq!(det[0], Isa::Scalar, "scalar is always first");
+        assert!(det.windows(2).all(|w| w[0] < w[1]), "ascending");
+        assert_eq!(Isa::best(), *det.last().unwrap());
+        for isa in det {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+            assert_eq!(Isa::from_u8(isa as u8), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512"), None);
+        assert_eq!(Isa::from_u8(9), None);
+    }
+
+    /// Panel-level pin at lengths that straddle every vector width
+    /// (1..=19 covers 4- and 8-lane bodies plus every tail size). The
+    /// op- and net-level matrices live in `tests/native_gemm.rs`.
+    #[test]
+    fn panels_are_bitwise_identical_across_detected_isas() {
+        for isa in Isa::detected().into_iter().skip(1) {
+            for n in 1..=19usize {
+                let (m, k) = (3usize, 7);
+                let a = randv(m * k, 100 + n as u64);
+                let b = randv(k * n, 200 + n as u64);
+                let bias = randv(n, 300 + n as u64);
+                let mut want = vec![0.0f32; m * n];
+                let mut got = vec![0.0f32; m * n];
+                sgemm_panel(Isa::Scalar, &mut want, 0, n, k, &a, &b, Some(&bias));
+                sgemm_panel(isa, &mut got, 0, n, k, &a, &b, Some(&bias));
+                assert_eq!(bits(&want), bits(&got), "sgemm_panel {isa} n={n}");
+
+                let mut want_dw = vec![0.0f32; k * n];
+                let mut got_dw = vec![0.0f32; k * n];
+                sgemm_atb_panel(Isa::Scalar, &mut want_dw, 0, m, n, k, &a, &b);
+                sgemm_atb_panel(isa, &mut got_dw, 0, m, n, k, &a, &b);
+                assert_eq!(bits(&want_dw), bits(&got_dw), "sgemm_atb_panel {isa} n={n}");
+
+                let rows = randv(6 * n, 400 + n as u64);
+                let mut want_db = vec![0.0f32; n];
+                let mut got_db = vec![0.0f32; n];
+                col_sum(Isa::Scalar, &mut want_db, &rows, n);
+                col_sum(isa, &mut got_db, &rows, n);
+                assert_eq!(bits(&want_db), bits(&got_db), "col_sum {isa} n={n}");
+            }
+        }
+    }
+}

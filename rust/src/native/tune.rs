@@ -1,0 +1,678 @@
+//! Per-host kernel autotuner: measures every (op, shape-class,
+//! kernel-variant) triple once per host and persists the winner table
+//! through the content-addressed artifact cache.
+//!
+//! PR 5 hand-pinned the direct-vs-im2col routing from measurements on
+//! one box; this module replaces that with evidence gathered where the
+//! code actually runs. Because every variant is bit-identical to
+//! `ops::reference` (the `native::simd` contract), routing is *purely*
+//! a wall-clock decision: the tuner table, the host it came from, and
+//! `FITQ_NATIVE_KERNEL` must never enter a pipeline stage digest —
+//! `tests/kernel_dispatch.rs` pins that exclusion.
+//!
+//! # Persistence and coordination
+//!
+//! The table is stored under artifact kind `"tuner"` keyed by
+//! [`host_fingerprint`] (arch + detected-ISA bitmask + core count +
+//! tuner schema version — retune when any of them changes, share
+//! otherwise). Concurrent `--jobs` workers reuse the PR 7 lease layer:
+//! the first resolver claims the lease and tunes; peers poll and adopt
+//! the published table; a resolver that loses the race to a dead lease
+//! or hits the wait deadline tunes privately without publishing
+//! ([`Resolution::TunedUnpersisted`]) — tuning is an accelerator, never
+//! a correctness dependency, so every failure path degrades to
+//! "measure again locally". The `tuner.publish.fail` fault site drills
+//! the crash between tuning and publishing: the lease must release and
+//! the next resolver must retune and publish cleanly.
+
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::pipeline::cache::{ArtifactCache, Claim};
+use crate::coordinator::pipeline::codec::{ByteReader, ByteWriter};
+use crate::coordinator::pipeline::digest::{Digest, Hasher};
+use crate::coordinator::pipeline::fault::{self, site};
+use crate::coordinator::pipeline::stages::results_root_from_env;
+use crate::tensor::Pcg32;
+
+use super::gemm::{self, Init};
+use super::simd::{self, Isa};
+
+/// Artifact kind of persisted route tables.
+pub const TUNER_KIND: &str = "tuner";
+
+/// Payload schema version of [`encode`]/[`decode`]. Also folded into
+/// [`host_fingerprint`], so bumping it retunes rather than misparses.
+pub const TUNER_SCHEMA: u32 = 1;
+
+/// How the dispatch layer selects kernel variants, parsed fail-closed
+/// from `FITQ_NATIVE_KERNEL` (unset = `Auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Route per (op, shape-class) by the host's autotuned table,
+    /// resolved lazily on first kernel dispatch.
+    Auto,
+    /// Force one ISA everywhere, with each op's static default
+    /// lowering — the escape hatch and the A/B leg of benches and CI.
+    Forced(Isa),
+}
+
+impl Default for KernelMode {
+    /// Contexts built without consulting the environment (op-level
+    /// tests, oracles) force the best available ISA — deterministic and
+    /// IO-free, no tuner resolution.
+    fn default() -> KernelMode {
+        KernelMode::Forced(Isa::best())
+    }
+}
+
+impl KernelMode {
+    /// Parse a `FITQ_NATIVE_KERNEL` value. Fail-closed: unknown names
+    /// and ISAs this host lacks are hard errors, not silent fallbacks.
+    pub fn parse(s: &str) -> Result<KernelMode> {
+        if s == "auto" {
+            return Ok(KernelMode::Auto);
+        }
+        let Some(isa) = Isa::parse(s) else {
+            bail!("unknown FITQ_NATIVE_KERNEL value {s:?} (want auto, scalar, sse2, avx2 or neon)");
+        };
+        if !isa.available() {
+            let have: Vec<&str> = Isa::detected().iter().map(|i| i.name()).collect();
+            bail!(
+                "FITQ_NATIVE_KERNEL={s}: ISA not available on this host (detected: {})",
+                have.join(", ")
+            );
+        }
+        Ok(KernelMode::Forced(isa))
+    }
+
+    /// Read `FITQ_NATIVE_KERNEL` from the environment; unset = `Auto`.
+    pub fn from_env() -> Result<KernelMode> {
+        match std::env::var("FITQ_NATIVE_KERNEL") {
+            Ok(v) => KernelMode::parse(v.trim()),
+            Err(std::env::VarError::NotPresent) => Ok(KernelMode::Auto),
+            Err(e) => bail!("FITQ_NATIVE_KERNEL: {e}"),
+        }
+    }
+}
+
+/// The ops the tuner routes. Discriminants are persisted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunedOp {
+    /// 3x3 conv forward (vector axis: `c_out`).
+    ConvFwd = 0,
+    /// Conv backward-by-weights (vector axis: `c_out`).
+    ConvBwdW = 1,
+    /// Conv backward-by-input (vector axis: `c_in` — the `W^T` GEMM and
+    /// col2im both stream `c_in` lanes).
+    ConvBwdX = 2,
+    /// Dense forward (vector axis: `f_out`).
+    DenseFwd = 3,
+    /// Dense backward (vector axis: `f_out`).
+    DenseBwd = 4,
+}
+
+/// Number of tuned ops (first axis of the route table).
+pub const N_OPS: usize = 5;
+
+/// All tuned ops, in discriminant order.
+pub const OPS: [TunedOp; N_OPS] = [
+    TunedOp::ConvFwd,
+    TunedOp::ConvBwdW,
+    TunedOp::ConvBwdX,
+    TunedOp::DenseFwd,
+    TunedOp::DenseBwd,
+];
+
+impl TunedOp {
+    /// Stable name (CLI output, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            TunedOp::ConvFwd => "conv_fwd",
+            TunedOp::ConvBwdW => "conv_bwd_w",
+            TunedOp::ConvBwdX => "conv_bwd_x",
+            TunedOp::DenseFwd => "dense_fwd",
+            TunedOp::DenseBwd => "dense_bwd",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<TunedOp> {
+        OPS.into_iter().find(|op| *op as u8 == v)
+    }
+}
+
+/// Which algorithm an op runs (orthogonal to the ISA). Discriminants
+/// are persisted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lowering {
+    /// The direct loop-nest kernel (`conv2d_direct` /
+    /// `conv2d_bwd_w_direct`).
+    Direct = 0,
+    /// im2col materialization + GEMM (`ops::conv2d_im2col` /
+    /// `ops::conv2d_bwd_w_im2col`).
+    Im2col = 1,
+    /// The op is inherently a GEMM (dense, conv backward-by-input).
+    Gemm = 2,
+}
+
+impl Lowering {
+    /// Stable name (CLI output, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Lowering::Direct => "direct",
+            Lowering::Im2col => "im2col",
+            Lowering::Gemm => "gemm",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Lowering> {
+        [Lowering::Direct, Lowering::Im2col, Lowering::Gemm]
+            .into_iter()
+            .find(|l| *l as u8 == v)
+    }
+}
+
+/// The lowering an op runs when no tuned table applies
+/// ([`KernelMode::Forced`]) — the PR 5 hand-pinned routing, kept as the
+/// deterministic fallback.
+pub fn static_lowering(op: TunedOp) -> Lowering {
+    match op {
+        TunedOp::ConvFwd | TunedOp::ConvBwdW => Lowering::Direct,
+        _ => Lowering::Gemm,
+    }
+}
+
+fn candidate_lowerings(op: TunedOp) -> &'static [Lowering] {
+    match op {
+        TunedOp::ConvFwd | TunedOp::ConvBwdW => &[Lowering::Direct, Lowering::Im2col],
+        _ => &[Lowering::Gemm],
+    }
+}
+
+/// Number of vector-axis width classes (second axis of the table).
+pub const N_CLASSES: usize = 5;
+
+/// Representative width micro-benchmarked for each class.
+pub const CLASS_WIDTHS: [usize; N_CLASSES] = [4, 8, 16, 32, 64];
+
+/// Map an op's vector-axis width (`c_out`, `c_in` or `f_out`) to its
+/// width class. Classes exist because the winner genuinely flips with
+/// width: on the measurement host, AVX2 wins wide convs but loses to
+/// SSE2 at `c_out = 8` (8-lane vectors never fill; see
+/// BENCH_kernels.json).
+pub fn shape_class(width: usize) -> usize {
+    match width {
+        0..=4 => 0,
+        5..=8 => 1,
+        9..=16 => 2,
+        17..=32 => 3,
+        _ => 4,
+    }
+}
+
+/// One routing decision: which ISA runs which lowering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Choice {
+    pub isa: Isa,
+    pub lowering: Lowering,
+}
+
+/// One micro-benchmark sample (kept in the table for `fitq tune`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub op: TunedOp,
+    pub class: usize,
+    pub isa: Isa,
+    pub lowering: Lowering,
+    /// Nominal-FLOP throughput, min-of-reps (comparable within one
+    /// (op, class) cell; not across ops).
+    pub gflops: f64,
+}
+
+/// The per-host winner table: one [`Choice`] per (op, width-class),
+/// plus the measurements it was derived from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteTable {
+    choices: [[Choice; N_CLASSES]; N_OPS],
+    pub measurements: Vec<Measurement>,
+}
+
+impl RouteTable {
+    /// A table that routes every cell to `isa` with the op's static
+    /// lowering (the untuned baseline the tuner refines).
+    pub fn static_for(isa: Isa) -> RouteTable {
+        let mut choices = [[Choice { isa, lowering: Lowering::Gemm }; N_CLASSES]; N_OPS];
+        for op in OPS {
+            for cell in &mut choices[op as usize] {
+                cell.lowering = static_lowering(op);
+            }
+        }
+        RouteTable { choices, measurements: Vec::new() }
+    }
+
+    /// The tuned choice for `op` at vector-axis width `width`.
+    pub fn choice(&self, op: TunedOp, width: usize) -> Choice {
+        self.choices[op as usize][shape_class(width)]
+    }
+}
+
+/// Host identity the table is keyed by: retune when the architecture,
+/// the detected ISA set, the core count, or the tuner schema changes;
+/// reuse otherwise. Deliberately *not* part of any stage digest.
+pub fn host_fingerprint() -> Digest {
+    let mut h = Hasher::new();
+    h.str("tuner/v1");
+    h.str(std::env::consts::ARCH);
+    let mut mask = 0u64;
+    for isa in Isa::detected() {
+        mask |= 1 << (isa as u64);
+    }
+    h.u64(mask);
+    h.usize(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    h.u64(TUNER_SCHEMA as u64);
+    h.finish()
+}
+
+/// Serialize a table (artifact payload).
+pub fn encode(table: &RouteTable) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(N_OPS as u32);
+    w.u32(N_CLASSES as u32);
+    for op in 0..N_OPS {
+        for class in 0..N_CLASSES {
+            let c = table.choices[op][class];
+            w.u8(c.isa as u8);
+            w.u8(c.lowering as u8);
+        }
+    }
+    w.u64(table.measurements.len() as u64);
+    for m in &table.measurements {
+        w.u8(m.op as u8);
+        w.u8(m.class as u8);
+        w.u8(m.isa as u8);
+        w.u8(m.lowering as u8);
+        w.f64(m.gflops);
+    }
+    w.into_bytes()
+}
+
+/// Deserialize a table, refusing shape skew and (defensively) ISAs the
+/// current host cannot run — the fingerprint key should make that
+/// impossible, but a bad route must fail closed, not crash in dispatch.
+pub fn decode(bytes: &[u8]) -> Result<RouteTable> {
+    let mut r = ByteReader::new(bytes);
+    if r.u32()? as usize != N_OPS || r.u32()? as usize != N_CLASSES {
+        bail!("tuner table has a different op/class grid than this build");
+    }
+    fn read_choice(r: &mut ByteReader) -> Result<Choice> {
+        let isa = Isa::from_u8(r.u8()?).ok_or_else(|| anyhow::anyhow!("bad tuner isa"))?;
+        let lowering =
+            Lowering::from_u8(r.u8()?).ok_or_else(|| anyhow::anyhow!("bad tuner lowering"))?;
+        if !isa.available() {
+            bail!("tuner table routes to {isa}, unavailable on this host");
+        }
+        Ok(Choice { isa, lowering })
+    }
+    fn read_meas(r: &mut ByteReader) -> Result<Measurement> {
+        let op = TunedOp::from_u8(r.u8()?).ok_or_else(|| anyhow::anyhow!("bad tuner op"))?;
+        let class = r.u8()? as usize;
+        let isa = Isa::from_u8(r.u8()?).ok_or_else(|| anyhow::anyhow!("bad tuner isa"))?;
+        let lowering =
+            Lowering::from_u8(r.u8()?).ok_or_else(|| anyhow::anyhow!("bad tuner lowering"))?;
+        let gflops = r.f64()?;
+        Ok(Measurement { op, class, isa, lowering, gflops })
+    }
+    let mut table = RouteTable::static_for(Isa::Scalar);
+    for op in 0..N_OPS {
+        for class in 0..N_CLASSES {
+            table.choices[op][class] = read_choice(&mut r)?;
+        }
+    }
+    let n = r.u64()? as usize;
+    table.measurements = (0..n).map(|_| read_meas(&mut r)).collect::<Result<_>>()?;
+    r.done()?;
+    Ok(table)
+}
+
+/// How [`resolve_at`] obtained its table — lets callers (and the
+/// exactly-once test) distinguish the lease outcomes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    /// A previously published table was loaded.
+    CacheHit,
+    /// This process won the lease, tuned, and published.
+    TunedPublished,
+    /// A peer tuned while this process polled; the peer's table was
+    /// adopted.
+    PeerPublished,
+    /// Tuned locally without publishing (cache unusable, injected
+    /// publish fault, or the lease wait deadline expired).
+    TunedUnpersisted,
+}
+
+impl Resolution {
+    /// Stable name (CLI output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Resolution::CacheHit => "cache hit",
+            Resolution::TunedPublished => "tuned + published",
+            Resolution::PeerPublished => "published by a peer",
+            Resolution::TunedUnpersisted => "tuned (unpersisted)",
+        }
+    }
+}
+
+fn load_table(cache: &ArtifactCache, key: &Digest) -> Option<RouteTable> {
+    cache.load(TUNER_KIND, TUNER_SCHEMA, key).and_then(|b| decode(&b).ok())
+}
+
+/// Resolve this host's route table through `cache`: load if published,
+/// otherwise lease-coordinate so concurrent workers tune exactly once.
+/// Never fails — every degraded path returns a locally tuned table.
+pub fn resolve_at(cache: &ArtifactCache, threads: usize) -> (RouteTable, Resolution) {
+    let key = host_fingerprint();
+    if let Some(table) = load_table(cache, &key) {
+        return (table, Resolution::CacheHit);
+    }
+    let cfg = cache.lease_config();
+    let deadline = Instant::now() + cfg.max_wait;
+    loop {
+        match cache.try_claim(TUNER_KIND, &key) {
+            Ok(Claim::Won(guard)) => {
+                let table = tune(threads);
+                if fault::fires(site::TUNER_PUBLISH_FAIL) {
+                    // injected crash between tuning and publishing: the
+                    // guard drop releases the lease, nothing is stored,
+                    // and the next resolver retunes cleanly
+                    drop(guard);
+                    return (table, Resolution::TunedUnpersisted);
+                }
+                let published =
+                    cache.store(TUNER_KIND, TUNER_SCHEMA, &key, &encode(&table)).is_ok();
+                guard.release();
+                let how = if published {
+                    Resolution::TunedPublished
+                } else {
+                    Resolution::TunedUnpersisted
+                };
+                return (table, how);
+            }
+            Ok(Claim::Busy { .. }) => {
+                std::thread::sleep(cfg.poll);
+                if let Some(table) = load_table(cache, &key) {
+                    return (table, Resolution::PeerPublished);
+                }
+                if Instant::now() >= deadline {
+                    return (tune(threads), Resolution::TunedUnpersisted);
+                }
+            }
+            Err(_) => return (tune(threads), Resolution::TunedUnpersisted),
+        }
+    }
+}
+
+/// Process-wide lazy resolution against the default results root
+/// (`FITQ_RESULTS` or `./results`) — what `KernelMode::Auto` dispatch
+/// uses. Resolved once per process; `threads` only parameterizes the
+/// first (resolving) call.
+pub fn resolve(threads: usize) -> Arc<RouteTable> {
+    static TABLE: OnceLock<Arc<RouteTable>> = OnceLock::new();
+    TABLE
+        .get_or_init(|| {
+            let table = match ArtifactCache::new(results_root_from_env().join("cache")) {
+                Ok(cache) => resolve_at(&cache, threads).0,
+                Err(_) => tune(threads),
+            };
+            Arc::new(table)
+        })
+        .clone()
+}
+
+/// Micro-benchmark every (op, class, lowering, ISA) candidate and keep
+/// the winners. Problems are synthetic but shaped like the study nets
+/// (post-ReLU zero density included, so the skip paths are priced in);
+/// timing is min-of-3 on purpose — minimum, not mean, rejects scheduler
+/// noise on loaded hosts.
+pub fn tune(threads: usize) -> RouteTable {
+    let mut table = RouteTable::static_for(Isa::best());
+    let isas = Isa::detected();
+    for op in OPS {
+        for (class, &width) in CLASS_WIDTHS.iter().enumerate() {
+            let mut best: Option<(f64, Choice)> = None;
+            for &lowering in candidate_lowerings(op) {
+                for &isa in &isas {
+                    let gflops = bench_variant(op, lowering, isa, width, threads);
+                    table.measurements.push(Measurement { op, class, isa, lowering, gflops });
+                    if best.is_none_or(|(g, _)| gflops > g) {
+                        best = Some((gflops, Choice { isa, lowering }));
+                    }
+                }
+            }
+            if let Some((_, choice)) = best {
+                table.choices[op as usize][class] = choice;
+            }
+        }
+    }
+    table
+}
+
+fn sparse_randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 53);
+    // ~half exact zeros: the post-ReLU density the zero-skip paths see
+    (0..n).map(|_| rng.normal().max(0.0)).collect()
+}
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, 59);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+const REPS: usize = 3;
+
+fn min_time(mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Time one candidate on a synthetic problem whose vector axis is
+/// `width`; returns nominal GFLOP/s.
+fn bench_variant(op: TunedOp, lowering: Lowering, isa: Isa, width: usize, threads: usize) -> f64 {
+    match op {
+        TunedOp::ConvFwd | TunedOp::ConvBwdW | TunedOp::ConvBwdX => {
+            // ConvFwd/ConvBwdW vectorize over c_out; ConvBwdX over c_in.
+            let (n, h, w) = (2usize, 12, 12);
+            let (cin, cout) =
+                if op == TunedOp::ConvBwdX { (width, 8) } else { (8, width) };
+            let x = sparse_randv(n * h * w * cin, 7 + width as u64);
+            let wgt = randv(9 * cin * cout, 11 + width as u64);
+            let bias = randv(cout, 13);
+            let dout = sparse_randv(n * h * w * cout, 17 + width as u64);
+            let flops = (2 * n * h * w * 9 * cin * cout) as f64;
+            let mut scratch = gemm::Scratch::default();
+            let secs = match (op, lowering) {
+                (TunedOp::ConvFwd, Lowering::Im2col) => {
+                    let mut out = vec![0.0f32; n * h * w * cout];
+                    min_time(|| {
+                        gemm::im2col3x3(&x, n, h, w, cin, &mut scratch.a);
+                        let m = n * h * w;
+                        gemm::sgemm(
+                            m,
+                            cout,
+                            9 * cin,
+                            &scratch.a,
+                            &wgt,
+                            Init::Bias(&bias),
+                            &mut out,
+                            threads,
+                            isa,
+                        );
+                    })
+                }
+                (TunedOp::ConvFwd, _) => {
+                    let mut out = vec![0.0f32; n * h * w * cout];
+                    min_time(|| {
+                        gemm::conv2d_direct(
+                            &x, n, h, w, cin, &wgt, cout, &bias, &mut out, threads, isa,
+                        );
+                    })
+                }
+                (TunedOp::ConvBwdW, Lowering::Im2col) => {
+                    let mut dw = vec![0.0f32; 9 * cin * cout];
+                    let mut db = vec![0.0f32; cout];
+                    min_time(|| {
+                        dw.fill(0.0);
+                        db.fill(0.0);
+                        gemm::im2col3x3(&x, n, h, w, cin, &mut scratch.a);
+                        let m = n * h * w;
+                        gemm::sgemm_atb(
+                            m, cout, 9 * cin, &scratch.a, &dout, &mut dw, threads, isa,
+                        );
+                        simd::col_sum(isa, &mut db, &dout, cout);
+                    })
+                }
+                (TunedOp::ConvBwdW, _) => {
+                    let mut dw = vec![0.0f32; 9 * cin * cout];
+                    let mut db = vec![0.0f32; cout];
+                    min_time(|| {
+                        dw.fill(0.0);
+                        db.fill(0.0);
+                        gemm::conv2d_bwd_w_direct(
+                            &x, n, h, w, cin, &dout, cout, &mut dw, &mut db, threads, isa,
+                        );
+                    })
+                }
+                (TunedOp::ConvBwdX, _) => {
+                    let mut dx = vec![0.0f32; n * h * w * cin];
+                    let m = n * h * w;
+                    let k = 9 * cin;
+                    min_time(|| {
+                        gemm::transpose(&wgt, k, cout, &mut scratch.b);
+                        scratch.a.clear();
+                        scratch.a.resize(m * k, 0.0);
+                        gemm::sgemm(
+                            m,
+                            k,
+                            cout,
+                            &dout,
+                            &scratch.b,
+                            Init::Zero,
+                            &mut scratch.a,
+                            threads,
+                            isa,
+                        );
+                        gemm::col2im3x3(&scratch.a, n, h, w, cin, &mut dx, threads, isa);
+                    })
+                }
+                _ => unreachable!("conv op with dense lowering"),
+            };
+            flops / secs / 1e9
+        }
+        TunedOp::DenseFwd | TunedOp::DenseBwd => {
+            let (rows, fin, fout) = (64usize, 128, width);
+            let x = sparse_randv(rows * fin, 19 + width as u64);
+            let wgt = randv(fin * fout, 23 + width as u64);
+            let bias = randv(fout, 29);
+            let dout = randv(rows * fout, 31 + width as u64);
+            let mut scratch = gemm::Scratch::default();
+            let secs = if op == TunedOp::DenseFwd {
+                let mut out = vec![0.0f32; rows * fout];
+                min_time(|| {
+                    gemm::sgemm(
+                        rows,
+                        fout,
+                        fin,
+                        &x,
+                        &wgt,
+                        Init::Bias(&bias),
+                        &mut out,
+                        threads,
+                        isa,
+                    );
+                })
+            } else {
+                let mut dw = vec![0.0f32; fin * fout];
+                let mut db = vec![0.0f32; fout];
+                let mut dx = vec![0.0f32; rows * fin];
+                min_time(|| {
+                    dw.fill(0.0);
+                    db.fill(0.0);
+                    gemm::sgemm_atb(rows, fout, fin, &x, &dout, &mut dw, threads, isa);
+                    simd::col_sum(isa, &mut db, &dout, fout);
+                    gemm::transpose(&wgt, fin, fout, &mut scratch.b);
+                    gemm::sgemm(
+                        rows,
+                        fin,
+                        fout,
+                        &dout,
+                        &scratch.b,
+                        Init::Zero,
+                        &mut dx,
+                        threads,
+                        isa,
+                    );
+                })
+            };
+            let mults = if op == TunedOp::DenseFwd { 2.0 } else { 6.0 };
+            mults * (rows * fin * fout) as f64 / secs / 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trips_and_rejects_garbage() {
+        let mut table = RouteTable::static_for(Isa::Scalar);
+        table.measurements.push(Measurement {
+            op: TunedOp::DenseBwd,
+            class: 3,
+            isa: Isa::Scalar,
+            lowering: Lowering::Gemm,
+            gflops: 3.25,
+        });
+        let bytes = encode(&table);
+        assert_eq!(decode(&bytes).unwrap(), table);
+        assert!(decode(&bytes[..bytes.len() - 1]).is_err(), "truncation");
+        assert!(decode(&[]).is_err(), "empty");
+        let mut skew = bytes.clone();
+        skew[0] ^= 0xff; // N_OPS field
+        assert!(decode(&skew).is_err(), "grid skew");
+    }
+
+    #[test]
+    fn static_table_uses_pinned_lowerings() {
+        let t = RouteTable::static_for(Isa::Scalar);
+        assert_eq!(t.choice(TunedOp::ConvFwd, 16).lowering, Lowering::Direct);
+        assert_eq!(t.choice(TunedOp::ConvBwdW, 16).lowering, Lowering::Direct);
+        assert_eq!(t.choice(TunedOp::ConvBwdX, 16).lowering, Lowering::Gemm);
+        assert_eq!(t.choice(TunedOp::DenseFwd, 16).lowering, Lowering::Gemm);
+        assert_eq!(t.choice(TunedOp::DenseBwd, 16).lowering, Lowering::Gemm);
+    }
+
+    #[test]
+    fn shape_classes_partition_widths() {
+        assert_eq!(shape_class(1), 0);
+        assert_eq!(shape_class(4), 0);
+        assert_eq!(shape_class(8), 1);
+        assert_eq!(shape_class(10), 2);
+        assert_eq!(shape_class(32), 3);
+        assert_eq!(shape_class(1000), 4);
+        for (class, &w) in CLASS_WIDTHS.iter().enumerate() {
+            assert_eq!(shape_class(w), class, "representative width maps to its class");
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_within_a_process() {
+        assert_eq!(host_fingerprint(), host_fingerprint());
+    }
+}

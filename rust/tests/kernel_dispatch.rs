@@ -1,0 +1,240 @@
+//! Kernel dispatch & autotuning contracts (DESIGN.md "Kernel dispatch
+//! & autotuning"):
+//!
+//! - `FITQ_NATIVE_KERNEL` parses fail-closed: unknown or unavailable
+//!   variants are hard errors, never silent fallbacks.
+//! - The tuner's route table persists through the artifact cache under
+//!   the host fingerprint and round-trips exactly.
+//! - Concurrent resolvers tune exactly once (lease coordination); the
+//!   losers adopt the winner's published table.
+//! - A crash between winning the tuning lease and publishing the table
+//!   (the `tuner.publish.fail` injection site) degrades that resolver to
+//!   an unpersisted local table and leaves the cache clean for the next.
+//! - Kernel-variant selection never enters any pipeline stage digest:
+//!   tuned hosts and forced-scalar hosts share cache entries, which is
+//!   only sound because every variant is bit-identical (pinned op-level
+//!   and whole-net by `tests/native_gemm.rs`, and through the `Runtime`
+//!   dispatch path below).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use fitq::coordinator::pipeline::fault::{self, site, FaultPlan};
+use fitq::coordinator::pipeline::{stages, ArtifactCache};
+use fitq::coordinator::{ModelState, StudyOptions, TraceOptions};
+use fitq::data::{EpochBatch, SynthClass};
+use fitq::native::simd::{self, Isa};
+use fitq::native::tune::{self, KernelMode, Resolution};
+use fitq::runtime::{Arg, Runtime};
+
+/// Serializes the tests in this binary that mutate process environment
+/// (`FITQ_NATIVE_KERNEL`, `FITQ_RESULTS`) — cargo runs tests in threads.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fitq_kdisp_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn kernel_mode_parses_fail_closed() {
+    assert_eq!(KernelMode::parse("auto").unwrap(), KernelMode::Auto);
+    for isa in Isa::detected() {
+        assert_eq!(KernelMode::parse(isa.name()).unwrap(), KernelMode::Forced(isa));
+    }
+    // scalar is always available, on every arch
+    assert_eq!(KernelMode::parse("scalar").unwrap(), KernelMode::Forced(Isa::Scalar));
+    assert!(KernelMode::parse("").is_err(), "empty value is an error");
+    assert!(KernelMode::parse("avx512").is_err(), "unknown variant is an error");
+    assert!(KernelMode::parse("AUTO-ish").is_err());
+    // a variant that exists in the registry but not on this host must be
+    // rejected too — running "neon" on x86 silently as scalar would be a
+    // silent fallback
+    for isa in simd::ALL {
+        if !isa.available() {
+            let err = KernelMode::parse(isa.name()).unwrap_err().to_string();
+            assert!(
+                err.contains(isa.name()),
+                "unavailable {isa} must be named in the error: {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_mode_from_env_defaults_to_auto() {
+    let _env = ENV_LOCK.lock().unwrap();
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+    assert_eq!(KernelMode::from_env().unwrap(), KernelMode::Auto);
+    std::env::set_var("FITQ_NATIVE_KERNEL", "scalar");
+    assert_eq!(KernelMode::from_env().unwrap(), KernelMode::Forced(Isa::Scalar));
+    std::env::set_var("FITQ_NATIVE_KERNEL", "definitely-not-a-kernel");
+    assert!(KernelMode::from_env().is_err(), "typos must fail, not fall back");
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+}
+
+#[test]
+fn tuner_table_persists_and_round_trips() {
+    let dir = tmp("persist");
+    let cache = ArtifactCache::new(dir.join("cache")).unwrap();
+    let (t1, how1) = tune::resolve_at(&cache, 1);
+    assert_eq!(how1, Resolution::TunedPublished, "first resolver tunes and publishes");
+    let key = tune::host_fingerprint();
+    assert!(
+        cache.entry_path(tune::TUNER_KIND, &key).exists(),
+        "published table must be a cache entry under the host fingerprint"
+    );
+    let (t2, how2) = tune::resolve_at(&cache, 1);
+    assert_eq!(how2, Resolution::CacheHit, "second resolver hits the stored table");
+    assert_eq!(t1, t2, "the table round-trips through the codec exactly");
+    assert!(!t1.measurements.is_empty(), "tuned tables carry their measurements");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_resolvers_tune_exactly_once() {
+    // hold an (empty) fault scope for the whole test: it owns the
+    // process-global fault lock, so the publish-fault drill below can
+    // never interleave its armed plan with our resolvers
+    let _scope = fault::scoped(FaultPlan::default());
+    let dir = tmp("race");
+    let outcomes: Vec<(tune::RouteTable, Resolution)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let root = dir.join("cache");
+                s.spawn(move || {
+                    let cache = ArtifactCache::new(root).unwrap();
+                    tune::resolve_at(&cache, 1)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let published =
+        outcomes.iter().filter(|(_, how)| *how == Resolution::TunedPublished).count();
+    assert_eq!(published, 1, "exactly one resolver may tune and publish: {outcomes:?}");
+    for (table, how) in &outcomes {
+        assert_ne!(*how, Resolution::TunedUnpersisted, "nobody may time out or fail");
+        if *how != Resolution::TunedPublished {
+            assert!(
+                matches!(how, Resolution::PeerPublished | Resolution::CacheHit),
+                "losers adopt the winner's table: {how:?}"
+            );
+        }
+        assert!(!table.measurements.is_empty(), "adopted tables carry the winner's measurements");
+    }
+    let first = &outcomes[0].0;
+    for (table, _) in &outcomes[1..] {
+        assert_eq!(table, first, "all resolvers must agree on one table");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tuner_publish_fault_recovers_cleanly() {
+    let dir = tmp("fault");
+    let cache = ArtifactCache::new(dir.join("cache")).unwrap();
+    let key = tune::host_fingerprint();
+    {
+        let scope = fault::scoped(FaultPlan::single(site::TUNER_PUBLISH_FAIL));
+        let (table, how) = tune::resolve_at(&cache, 1);
+        assert_eq!(scope.fired(site::TUNER_PUBLISH_FAIL), 1, "the site must be reached");
+        assert_eq!(
+            how,
+            Resolution::TunedUnpersisted,
+            "a publish crash degrades to the local table, not an error"
+        );
+        assert!(!table.measurements.is_empty(), "the local table is still fully tuned");
+        assert!(
+            !cache.entry_path(tune::TUNER_KIND, &key).exists(),
+            "the crashed publish must not leave a cache entry"
+        );
+        assert!(
+            !cache.lease_path(tune::TUNER_KIND, &key).exists(),
+            "the crashed publish must not wedge the tuning lease"
+        );
+    }
+    // fault disarmed: the next resolver finds a clean cache and publishes
+    let (_, how) = tune::resolve_at(&cache, 1);
+    assert_eq!(how, Resolution::TunedPublished, "recovery tunes and publishes normally");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stage_keys_exclude_kernel_mode() {
+    let _env = ENV_LOCK.lock().unwrap();
+    let rt = Runtime::native().unwrap();
+    let mm = rt.model("cnn_mnist").unwrap().clone();
+    let keys = || {
+        (
+            stages::train_fp_key("native", &mm, 3, 0),
+            stages::sensitivity_key("native", &mm, 3, 0, &TraceOptions::default()),
+            stages::study_key("native", &mm, &StudyOptions::default()),
+        )
+    };
+    std::env::set_var("FITQ_NATIVE_KERNEL", "scalar");
+    let scalar_keys = keys();
+    std::env::set_var("FITQ_NATIVE_KERNEL", "auto");
+    let auto_keys = keys();
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+    assert_eq!(
+        scalar_keys, auto_keys,
+        "kernel-variant selection must never enter a stage digest: a tuned \
+         host and a forced-scalar host share cache entries bit-for-bit"
+    );
+    assert_eq!(scalar_keys, keys(), "and unset (auto) agrees too");
+}
+
+/// One optimizer epoch through the real `Runtime` dispatch path under
+/// every `FITQ_NATIVE_KERNEL` setting this host supports, serial and
+/// threaded: identical bits everywhere. This is the end-to-end guarantee
+/// that makes the digest-exclusion above sound.
+#[test]
+fn train_epoch_bit_identical_across_forced_env_variants() {
+    let _env = ENV_LOCK.lock().unwrap();
+    let dir = tmp("train");
+    // auto mode resolves its route table under the results root
+    std::env::set_var("FITQ_RESULTS", &dir);
+
+    let epoch_bits = |threads: usize| -> Vec<u32> {
+        let rt = Runtime::native_with_threads(threads).unwrap();
+        let mm = rt.model("cnn_mnist").unwrap().clone();
+        let exe = rt.load("cnn_mnist", "train_epoch").unwrap();
+        let st = ModelState::init(&rt, "cnn_mnist", 3).unwrap();
+        let ds = SynthClass::synmnist(3);
+        let (eb, _) = EpochBatch::generate(&ds, mm.train_k, mm.train_b, 0);
+        let out = exe
+            .run(&[
+                Arg::F32(&st.params),
+                Arg::F32(&st.m),
+                Arg::F32(&st.v),
+                Arg::F32Scalar(0.0),
+                Arg::F32(&eb.xs),
+                Arg::I32(&eb.ys),
+            ])
+            .unwrap();
+        let mut bits: Vec<u32> = out.f32("params").unwrap().iter().map(|v| v.to_bits()).collect();
+        bits.push(out.scalar("loss").unwrap().to_bits());
+        bits
+    };
+
+    std::env::set_var("FITQ_NATIVE_KERNEL", "scalar");
+    let baseline = epoch_bits(1);
+    let mut modes: Vec<String> = Isa::detected().into_iter().map(|i| i.name().into()).collect();
+    modes.push("auto".into());
+    for mode in &modes {
+        std::env::set_var("FITQ_NATIVE_KERNEL", mode);
+        for threads in [1usize, 4] {
+            assert_eq!(
+                epoch_bits(threads),
+                baseline,
+                "FITQ_NATIVE_KERNEL={mode} threads={threads} must replay the scalar bits"
+            );
+        }
+    }
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+    std::env::remove_var("FITQ_RESULTS");
+    let _ = std::fs::remove_dir_all(&dir);
+}

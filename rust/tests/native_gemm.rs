@@ -5,10 +5,14 @@
 //! layer replace the loop nests without bumping a single pipeline cache
 //! digest (DESIGN.md "Native math kernels").
 
+use std::sync::Arc;
+
 use fitq::native::gemm::{self, ExecCtx};
 use fitq::native::model::{Plan, STUDY_CNNS};
 use fitq::native::net::{self, QuantArgs};
 use fitq::native::ops::{self, reference};
+use fitq::native::simd::Isa;
+use fitq::native::tune;
 use fitq::tensor::Pcg32;
 
 fn randv(n: usize, scale: f32, seed: u64) -> Vec<f32> {
@@ -170,7 +174,7 @@ fn im2col_col2im_round_trip_is_tap_multiplicity() {
     gemm::im2col3x3(&x, n, h, w, cin, &mut a);
     assert_eq!(a.len(), layer.gemm_m(n) * layer.gemm_k(), "plan helpers agree with lowering");
     let mut back = vec![0.0f32; x.len()];
-    gemm::col2im3x3(&a, n, h, w, cin, &mut back, 2);
+    gemm::col2im3x3(&a, n, h, w, cin, &mut back, 2, Isa::Scalar);
     for i in 0..h {
         let ri = if i == 0 || i == h - 1 { 2 } else { 3 };
         for j in 0..w {
@@ -235,6 +239,142 @@ fn whole_net_gemm_equals_reference_bitwise() {
                         "{} qat={qat} threads={threads} act grad {i}",
                         spec.name
                     );
+                }
+            }
+        }
+    }
+}
+
+/// The variant matrix: every detected SIMD ISA, forced through every
+/// tunable op wrapper (both lowerings where two exist), at serial and
+/// threaded budgets, must reproduce the scalar reference bit-for-bit.
+/// This is the op-level half of the 0-ULP contract for the explicit
+/// SIMD paths — whichever winner the autotuner picks on any host, it
+/// was proven here first.
+#[test]
+fn forced_variant_matrix_is_bitwise_identical() {
+    for isa in Isa::detected() {
+        for (t, &(n, h, w, cin, cout)) in CONV_SHAPES.iter().enumerate() {
+            // exact zeros exercise the signed-zero-safe skip paths
+            let mut x = randv(n * h * w * cin, 1.0, 3000 + t as u64);
+            for v in x.iter_mut().skip(1).step_by(2) {
+                *v = v.max(0.0);
+            }
+            let wgt = randv(9 * cin * cout, 0.4, 3100 + t as u64);
+            let bias = randv(cout, 0.1, 3200 + t as u64);
+            let dout = randv(n * h * w * cout, 1.0, 3300 + t as u64);
+            let mut want = vec![0.0f32; n * h * w * cout];
+            reference::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut want);
+            let mut want_dw = vec![0.0f32; 9 * cin * cout];
+            let mut want_db = vec![0.0f32; cout];
+            reference::conv2d_bwd_w(&x, n, h, w, cin, &dout, cout, &mut want_dw, &mut want_db);
+            let mut want_dx = vec![0.0f32; n * h * w * cin];
+            reference::conv2d_bwd_x(&wgt, n, h, w, cin, &dout, cout, &mut want_dx);
+            for threads in [1usize, 4] {
+                let mut ctx = ExecCtx::forced(isa);
+                ctx.threads = threads;
+                let tag = format!("isa {isa} shape {t} threads {threads}");
+                let mut got = vec![0.0f32; want.len()];
+                ops::conv2d(&x, n, h, w, cin, &wgt, cout, &bias, &mut got, &mut ctx);
+                assert_eq!(bits(&got), bits(&want), "fwd direct {tag}");
+                got.fill(0.0);
+                ops::conv2d_im2col(&x, n, h, w, cin, &wgt, cout, &bias, &mut got, &mut ctx);
+                assert_eq!(bits(&got), bits(&want), "fwd im2col {tag}");
+                let (mut dw, mut db) = (vec![0.0f32; want_dw.len()], vec![0.0f32; cout]);
+                ops::conv2d_bwd_w(&x, n, h, w, cin, &dout, cout, &mut dw, &mut db, &mut ctx);
+                assert_eq!(bits(&dw), bits(&want_dw), "dw direct {tag}");
+                assert_eq!(bits(&db), bits(&want_db), "db direct {tag}");
+                dw.fill(0.0);
+                db.fill(0.0);
+                ops::conv2d_bwd_w_im2col(&x, n, h, w, cin, &dout, cout, &mut dw, &mut db, &mut ctx);
+                assert_eq!(bits(&dw), bits(&want_dw), "dw im2col {tag}");
+                assert_eq!(bits(&db), bits(&want_db), "db im2col {tag}");
+                let mut dx = vec![0.0f32; want_dx.len()];
+                ops::conv2d_bwd_x(&wgt, n, h, w, cin, &dout, cout, &mut dx, &mut ctx);
+                assert_eq!(bits(&dx), bits(&want_dx), "dx {tag}");
+            }
+        }
+        // dense fwd + bwd at odd and real-layer shapes
+        for (t, &(n, fin, fout)) in [(1usize, 3usize, 2usize), (5, 129, 10), (32, 256, 10)]
+            .iter()
+            .enumerate()
+        {
+            let x = randv(n * fin, 1.0, 3400 + t as u64);
+            let wgt = randv(fin * fout, 0.3, 3500 + t as u64);
+            let bias = randv(fout, 0.1, 3600 + t as u64);
+            let dout = randv(n * fout, 1.0, 3700 + t as u64);
+            let mut want = vec![0.0f32; n * fout];
+            reference::dense(&x, n, fin, &wgt, fout, &bias, &mut want);
+            let mut want_dw = vec![0.0f32; fin * fout];
+            let mut want_db = vec![0.0f32; fout];
+            let mut want_dx = vec![0.0f32; n * fin];
+            reference::dense_bwd(
+                &x, &wgt, n, fin, fout, &dout, &mut want_dw, &mut want_db, &mut want_dx,
+            );
+            for threads in [1usize, 4] {
+                let mut ctx = ExecCtx::forced(isa);
+                ctx.threads = threads;
+                let tag = format!("isa {isa} dense {t} threads {threads}");
+                let mut out = vec![0.0f32; want.len()];
+                ops::dense(&x, n, fin, &wgt, fout, &bias, &mut out, &mut ctx);
+                assert_eq!(bits(&out), bits(&want), "fwd {tag}");
+                let mut dw = vec![0.0f32; fin * fout];
+                let mut db = vec![0.0f32; fout];
+                let mut dx = vec![0.0f32; n * fin];
+                ops::dense_bwd(&x, &wgt, n, fin, fout, &dout, &mut dw, &mut db, &mut dx, &mut ctx);
+                assert_eq!(bits(&dw), bits(&want_dw), "dw {tag}");
+                assert_eq!(bits(&db), bits(&want_db), "db {tag}");
+                assert_eq!(bits(&dx), bits(&want_dx), "dx {tag}");
+            }
+        }
+    }
+}
+
+/// Whole-net half of the variant contract: a full forward + backward
+/// through every study model must produce identical bits under the
+/// forced-scalar path, every forced detected ISA, and the autotuned
+/// route table (whatever winners this host's tuner picked), at serial
+/// and threaded budgets, in FP and QAT modes. `FITQ_NATIVE_KERNEL` can
+/// therefore never change results — only wall clock.
+#[test]
+fn whole_net_forced_and_tuned_variants_are_bitwise_identical() {
+    let tuned = Arc::new(tune::tune(1));
+    for spec in STUDY_CNNS {
+        let plan = Plan::new(*spec);
+        let params = plan.init_flat(13);
+        let batch = 4;
+        let x = randv(batch * plan.sample_len(), 1.0, 37);
+        let y: Vec<i32> = {
+            let mut rng = Pcg32::new(41, 6);
+            (0..batch).map(|_| rng.below(plan.spec.n_classes as u32) as i32).collect()
+        };
+        let (lw, la) = (plan.n_weight_blocks(), plan.n_act_blocks());
+        let (bits_w, bits_a) = (vec![4.0f32; lw], vec![4.0f32; la]);
+        let (lo, hi) = (vec![0.0f32; la], vec![4.0f32; la]);
+        for qat in [false, true] {
+            let q = qat.then_some(QuantArgs {
+                bits_w: &bits_w,
+                bits_a: &bits_a,
+                act_lo: &lo,
+                act_hi: &hi,
+            });
+            let mut sctx = ExecCtx::forced(Isa::Scalar);
+            let (l0, g0) = net::mean_loss_grad(&plan, &params, &x, &y, batch, q, &mut sctx);
+            for threads in [1usize, 4] {
+                let mut ctxs: Vec<(String, ExecCtx)> = Isa::detected()
+                    .into_iter()
+                    .map(|isa| {
+                        let mut c = ExecCtx::forced(isa);
+                        c.threads = threads;
+                        (format!("forced {isa}"), c)
+                    })
+                    .collect();
+                ctxs.push(("auto".into(), ExecCtx::with_routes(threads, tuned.clone())));
+                for (label, mut ctx) in ctxs {
+                    let (l, g) = net::mean_loss_grad(&plan, &params, &x, &y, batch, q, &mut ctx);
+                    let tag = format!("{} qat={qat} threads={threads} {label}", spec.name);
+                    assert_eq!(l.to_bits(), l0.to_bits(), "{tag} loss");
+                    assert_eq!(bits(&g.flat), bits(&g0.flat), "{tag} grads");
                 }
             }
         }

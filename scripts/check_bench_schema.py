@@ -92,9 +92,60 @@ def check_fit_scoring(path, d):
         num_or_null(path, greedy, key)
 
 
+def check_kernels(path, d):
+    if d.get("bench") != "kernel_variants":
+        fail(path, f"bench must be 'kernel_variants', got {d.get('bench')!r}")
+    if not isinstance(d.get("status"), str):
+        fail(path, "status must be a string")
+    host = d.get("host")
+    if not isinstance(host, dict) or not isinstance(host.get("arch"), str):
+        fail(path, "host must be an object with an 'arch' string")
+    if not isinstance(host.get("isas"), list) or not all(
+        isinstance(i, str) for i in host["isas"]
+    ):
+        fail(path, "host.isas must be a list of strings")
+    if not isinstance(host.get("cores"), int):
+        fail(path, "host.cores must be an int")
+    routes = d.get("routes")
+    if not isinstance(routes, dict) or not routes:
+        fail(path, "routes must be a non-empty object")
+    for op, route in routes.items():
+        if not isinstance(route, str):
+            fail(path, f"routes.{op} must be a 'lowering/isa' string")
+    kernels = d.get("kernels")
+    if not isinstance(kernels, list) or not kernels:
+        fail(path, "kernels must be a non-empty list")
+    for row in kernels:
+        if not isinstance(row, dict):
+            fail(path, "kernels rows must be objects")
+        for key in ("kernel", "shape"):
+            if not isinstance(row.get(key), str):
+                fail(path, f"kernels rows need a {key!r} string")
+        variants = row.get("variants")
+        if not isinstance(variants, dict) or not variants:
+            fail(path, "kernels rows need a non-empty 'variants' object")
+        for name, gflops in variants.items():
+            if not isinstance(gflops, NUM):
+                fail(path, f"variants.{name} must be a number (GFLOP/s)")
+    train = d.get("train_epoch")
+    if not isinstance(train, list) or not train:
+        fail(path, "train_epoch must be a non-empty list")
+    for row in train:
+        if not isinstance(row, dict) or not isinstance(row.get("model"), str):
+            fail(path, "train_epoch rows must be objects with a 'model' string")
+        ms_keys = [k for k in row if k.endswith("_ms")]
+        if "reference_ms" not in ms_keys or "scalar_ms" not in ms_keys:
+            fail(path, "train_epoch rows need reference_ms and scalar_ms")
+        for key in ms_keys:
+            num_or_null(path, row, key)
+        for key in ("speedup_auto_vs_reference", "speedup_auto_vs_scalar"):
+            num_or_null(path, row, key)
+
+
 CHECKS = {
     "BENCH_parallel_study.json": check_parallel_study,
     "BENCH_fit_scoring.json": check_fit_scoring,
+    "BENCH_kernels.json": check_kernels,
 }
 
 

@@ -12,7 +12,20 @@
  * Fidelity rules: float for Rust f32, double for the f64 reduction
  * accumulators, identical loop orders, and NO fp contraction — build with
  *   gcc -O2 -std=c11 -ffp-contract=off -pthread kernels.c -lm
- * so `acc += a*b` rounds twice exactly like rustc emits it.
+ * so `acc += a*b` rounds twice exactly like rustc emits it.  For SIMD
+ * measurement use -O3 (gcc only autovectorizes at -O3; rustc -O always
+ * does), which is safe here: autovectorization across independent output
+ * elements is bit-exact and no reduction is ever contracted.
+ *
+ * PR 8 adds explicit SSE2/AVX2 variants of the hot kernels (mirroring
+ * rust/src/native/simd.rs): each variant vectorizes across independent
+ * output elements (the cout/n axis of the rank-1 updates) with separate
+ * mul+add intrinsics — never FMA, whose single rounding would break the
+ * two-rounding scalar chain — so every output element sees the exact
+ * reference accumulation order and the zero-skip on the scalar A element
+ * survives untouched.  A per-op route table (g_route, mirroring
+ * tune::RouteTable) selects the variant at panel granularity, exactly
+ * where rustc's #[target_feature] boundary sits.
  */
 #define _USE_MATH_DEFINES
 #include <assert.h>
@@ -24,6 +37,10 @@
 #include <stdlib.h>
 #include <string.h>
 #include <time.h>
+
+#if defined(__x86_64__)
+#include <immintrin.h>
+#endif
 
 /* ---------------- blocking parameters (gemm.rs) ---------------- */
 #define MR 4
@@ -94,6 +111,29 @@ static size_t effective_threads(size_t budget, size_t panels, uint64_t flops) {
     uint64_t by_work = 1 + flops / PAR_FLOPS_PER_THREAD;
     if (t > by_work) t = (size_t)by_work;
     return t;
+}
+
+/* ---------------- ISA route table (tune.rs mirror) ---------------- */
+/* 0 = scalar (compiler-autovectorized plain loops), 1 = SSE2 explicit,
+ * 2 = AVX2 explicit.  One route slot per tunable kernel site, mirroring
+ * tune::RouteTable; set_route_all() mirrors the FITQ_NATIVE_KERNEL
+ * forced modes. */
+enum { ISA_SCALAR = 0, ISA_SSE2 = 1, ISA_AVX2 = 2 };
+enum { OP_CONV_FWD = 0, OP_CONV_BWD_W, OP_SGEMM, OP_ATB, OP_COL2IM, N_ROUTE_OPS };
+static int g_route[N_ROUTE_OPS] = {0, 0, 0, 0, 0};
+static void set_route_all(int isa) {
+    for (int i = 0; i < N_ROUTE_OPS; i++) g_route[i] = isa;
+}
+static int isa_available(int isa) {
+#if defined(__x86_64__)
+    if (isa == ISA_AVX2) return __builtin_cpu_supports("avx2");
+    return 1; /* scalar + SSE2 (x86_64 baseline) */
+#else
+    return isa == ISA_SCALAR;
+#endif
+}
+static const char *isa_name(int isa) {
+    return isa == ISA_AVX2 ? "avx2" : isa == ISA_SSE2 ? "sse2" : "scalar";
 }
 
 /* ---------------- reference kernels (ops::reference) ---------------- */
@@ -220,6 +260,180 @@ static void dense_bwd_ref(const float *x, const float *wgt, size_t n, size_t fin
     }
 }
 
+/* ---------------- explicit SIMD kernel bodies (simd.rs mirror) -------- */
+/* Per-ISA axpy (dst += a*src) and vadd (dst += src) helpers plus whole
+ * panel bodies.  mul+add, never FMA: each lane must round twice like the
+ * scalar `d += a*s`.  The panel bodies repeat the exact scalar loop nests
+ * with the innermost independent-output loop replaced by the helper, so
+ * per output element the accumulation chain is unchanged. */
+#if defined(__x86_64__)
+static inline void axpy_sse2(float *dst, const float *src, size_t len, float a) {
+    __m128 va = _mm_set1_ps(a);
+    size_t i = 0;
+    for (; i + 4 <= len; i += 4) {
+        __m128 s = _mm_loadu_ps(src + i);
+        __m128 d = _mm_loadu_ps(dst + i);
+        _mm_storeu_ps(dst + i, _mm_add_ps(d, _mm_mul_ps(va, s)));
+    }
+    for (; i < len; i++) dst[i] += a * src[i];
+}
+static inline void vadd_sse2(float *dst, const float *src, size_t len) {
+    size_t i = 0;
+    for (; i + 4 <= len; i += 4)
+        _mm_storeu_ps(dst + i, _mm_add_ps(_mm_loadu_ps(dst + i), _mm_loadu_ps(src + i)));
+    for (; i < len; i++) dst[i] += src[i];
+}
+__attribute__((target("avx2"))) static inline void axpy_avx2(float *dst, const float *src,
+                                                             size_t len, float a) {
+    __m256 va = _mm256_set1_ps(a);
+    size_t i = 0;
+    for (; i + 8 <= len; i += 8) {
+        __m256 s = _mm256_loadu_ps(src + i);
+        __m256 d = _mm256_loadu_ps(dst + i);
+        _mm256_storeu_ps(dst + i, _mm256_add_ps(d, _mm256_mul_ps(va, s)));
+    }
+    for (; i < len; i++) dst[i] += a * src[i];
+}
+__attribute__((target("avx2"))) static inline void vadd_avx2(float *dst, const float *src,
+                                                             size_t len) {
+    size_t i = 0;
+    for (; i + 8 <= len; i += 8)
+        _mm256_storeu_ps(dst + i,
+                         _mm256_add_ps(_mm256_loadu_ps(dst + i), _mm256_loadu_ps(src + i)));
+    for (; i < len; i++) dst[i] += src[i];
+}
+
+/* One macro instantiation per ISA so the helpers inline into the panel
+ * bodies (the C analogue of same-#[target_feature] inlining in Rust). */
+#define DEF_ISA_PANELS(SUF, TATTR)                                                            \
+    TATTR static void sgemm_rows_##SUF(float *c, size_t row0, size_t rows, size_t n,          \
+                                       size_t k, const float *a, const float *b,              \
+                                       const float *bias) {                                   \
+        for (size_t r = row0; r < row0 + rows; r++) {                                         \
+            float *crow = c + r * n;                                                          \
+            if (bias)                                                                         \
+                memcpy(crow, bias, n * sizeof(float));                                        \
+            else                                                                              \
+                memset(crow, 0, n * sizeof(float));                                           \
+            const float *arow = a + r * k;                                                    \
+            for (size_t p = 0; p < k; p++) {                                                  \
+                float av = arow[p];                                                           \
+                if (av == 0.0f) continue;                                                     \
+                axpy_##SUF(crow, b + p * n, n, av);                                           \
+            }                                                                                 \
+        }                                                                                     \
+    }                                                                                         \
+    TATTR static void atb_panel_##SUF(float *dw, size_t k0, size_t krows, size_t m,           \
+                                      size_t n, size_t k, const float *a, const float *d) {   \
+        for (size_t mi = 0; mi < m; mi++) {                                                   \
+            const float *arow = a + mi * k + k0;                                              \
+            const float *drow = d + mi * n;                                                   \
+            for (size_t kk = 0; kk < krows; kk++) {                                           \
+                float av = arow[kk];                                                          \
+                if (av == 0.0f) continue;                                                     \
+                axpy_##SUF(dw + (k0 + kk) * n, drow, n, av);                                  \
+            }                                                                                 \
+        }                                                                                     \
+    }                                                                                         \
+    TATTR static void conv_fwd_##SUF(const float *x, size_t n, size_t h, size_t w,            \
+                                     size_t cin, const float *wgt, size_t cout,               \
+                                     const float *bias, float *out) {                         \
+        for (size_t r = 0; r < n * h * w; r++)                                                \
+            memcpy(out + r * cout, bias, cout * sizeof(float));                               \
+        for (size_t ni = 0; ni < n; ni++)                                                     \
+            for (size_t di = 0; di < 3; di++) {                                               \
+                size_t i0, i1;                                                                \
+                tap_range(di, h, &i0, &i1);                                                   \
+                for (size_t dj = 0; dj < 3; dj++) {                                           \
+                    size_t j0, j1;                                                            \
+                    tap_range(dj, w, &j0, &j1);                                               \
+                    for (size_t i = i0; i < i1; i++) {                                        \
+                        size_t xi = i + di - 1;                                               \
+                        for (size_t j = j0; j < j1; j++) {                                    \
+                            size_t xj = j + dj - 1;                                           \
+                            const float *xrow = x + ((ni * h + xi) * w + xj) * cin;           \
+                            float *orow = out + ((ni * h + i) * w + j) * cout;                \
+                            for (size_t ci = 0; ci < cin; ci++) {                             \
+                                const float *wrow = wgt + ((di * 3 + dj) * cin + ci) * cout;  \
+                                axpy_##SUF(orow, wrow, cout, xrow[ci]);                       \
+                            }                                                                 \
+                        }                                                                     \
+                    }                                                                         \
+                }                                                                             \
+            }                                                                                 \
+    }                                                                                         \
+    TATTR static void conv_bwd_w_tap_##SUF(const float *xall, const float *dall, size_t n,    \
+                                           size_t h, size_t w, size_t cin, size_t cout,       \
+                                           float *dw, size_t di, size_t dj) {                 \
+        size_t i0, i1, j0, j1;                                                                \
+        tap_range(di, h, &i0, &i1);                                                           \
+        tap_range(dj, w, &j0, &j1);                                                           \
+        for (size_t ni = 0; ni < n; ni++) {                                                   \
+            const float *x = xall + ni * h * w * cin;                                         \
+            const float *dout = dall + ni * h * w * cout;                                     \
+            for (size_t i = i0; i < i1; i++) {                                                \
+                size_t xi = i + di - 1;                                                       \
+                for (size_t j = j0; j < j1; j++) {                                            \
+                    size_t xj = j + dj - 1;                                                   \
+                    const float *xrow = x + (xi * w + xj) * cin;                              \
+                    const float *drow = dout + (i * w + j) * cout;                            \
+                    for (size_t ci = 0; ci < cin; ci++) {                                     \
+                        float xv = xrow[ci];                                                  \
+                        if (xv == 0.0f) continue;                                             \
+                        axpy_##SUF(dw + ((di * 3 + dj) * cin + ci) * cout, drow, cout, xv);   \
+                    }                                                                         \
+                }                                                                             \
+            }                                                                                 \
+        }                                                                                     \
+    }                                                                                         \
+    TATTR static void col2im_image_##SUF(const float *g, float *panel, size_t h, size_t w,    \
+                                         size_t cin, size_t ni) {                             \
+        size_t k = 9 * cin;                                                                   \
+        for (size_t xi = 0; xi < h; xi++)                                                     \
+            for (size_t xj = 0; xj < w; xj++) {                                               \
+                float *drow = panel + (xi * w + xj) * cin;                                    \
+                memset(drow, 0, cin * sizeof(float));                                         \
+                for (size_t di = 0; di < 3; di++) {                                           \
+                    if (xi + 1 < di || xi + 1 - di >= h) continue;                            \
+                    size_t i = xi + 1 - di;                                                   \
+                    for (size_t dj = 0; dj < 3; dj++) {                                       \
+                        if (xj + 1 < dj || xj + 1 - dj >= w) continue;                        \
+                        size_t j = xj + 1 - dj;                                               \
+                        const float *grow =                                                   \
+                            g + ((ni * h + i) * w + j) * k + (di * 3 + dj) * cin;             \
+                        vadd_##SUF(drow, grow, cin);                                          \
+                    }                                                                         \
+                }                                                                             \
+            }                                                                                 \
+    }                                                                                         \
+    TATTR static void col_sum_##SUF(float *db, const float *dout, size_t rows,                \
+                                    size_t cout) {                                            \
+        for (size_t r = 0; r < rows; r++) vadd_##SUF(db, dout + r * cout, cout);              \
+    }
+
+DEF_ISA_PANELS(sse2, )
+DEF_ISA_PANELS(avx2, __attribute__((target("avx2"))))
+#endif /* __x86_64__ */
+
+/* db column sum at the routed ISA (same ascending-row chain per output) */
+static void col_sum_dispatch(int isa, float *db, const float *dout, size_t rows,
+                             size_t cout) {
+#if defined(__x86_64__)
+    if (isa == ISA_AVX2) {
+        col_sum_avx2(db, dout, rows, cout);
+        return;
+    }
+    if (isa == ISA_SSE2) {
+        col_sum_sse2(db, dout, rows, cout);
+        return;
+    }
+#else
+    (void)isa;
+#endif
+    for (size_t r = 0; r < rows; r++)
+        for (size_t o = 0; o < cout; o++) db[o] += dout[r * cout + o];
+}
+
 /* ---------------- gemm path (gemm.rs) ---------------- */
 static void im2col3x3(const float *x, size_t n, size_t h, size_t w, size_t cin, float *out) {
     size_t k = 9 * cin;
@@ -252,6 +466,16 @@ static void col2im_item(void *envp, size_t ni) {
     col2im_env *e = (col2im_env *)envp;
     size_t h = e->h, w = e->w, cin = e->cin, k = 9 * cin;
     float *panel = e->dx + ni * h * w * cin;
+#if defined(__x86_64__)
+    if (g_route[OP_COL2IM] == ISA_AVX2) {
+        col2im_image_avx2(e->g, panel, h, w, cin, ni);
+        return;
+    }
+    if (g_route[OP_COL2IM] == ISA_SSE2) {
+        col2im_image_sse2(e->g, panel, h, w, cin, ni);
+        return;
+    }
+#endif
     for (size_t xi = 0; xi < h; xi++)
         for (size_t xj = 0; xj < w; xj++) {
             float *drow = panel + (xi * w + xj) * cin;
@@ -297,6 +521,16 @@ static void sgemm_item(void *envp, size_t pi) {
     size_t n = e->n, k = e->k;
     const float *a = e->a, *b = e->b, *bias = e->bias;
     float *c = e->c;
+#if defined(__x86_64__)
+    if (g_route[OP_SGEMM] == ISA_AVX2) {
+        sgemm_rows_avx2(c, row0, rows, n, k, a, b, bias);
+        return;
+    }
+    if (g_route[OP_SGEMM] == ISA_SSE2) {
+        sgemm_rows_sse2(c, row0, rows, n, k, a, b, bias);
+        return;
+    }
+#endif
     for (size_t r = row0; r < row0 + rows; r++) {
         float *crow = c + r * n;
         if (bias)
@@ -328,19 +562,33 @@ typedef struct {
     size_t n, h, w, cin, cout, per;
     float *out;
 } dconv_env;
+static void conv_fwd_range(const float *x, size_t n, size_t h, size_t w, size_t cin,
+                           const float *wgt, size_t cout, const float *bias, float *out) {
+#if defined(__x86_64__)
+    if (g_route[OP_CONV_FWD] == ISA_AVX2) {
+        conv_fwd_avx2(x, n, h, w, cin, wgt, cout, bias, out);
+        return;
+    }
+    if (g_route[OP_CONV_FWD] == ISA_SSE2) {
+        conv_fwd_sse2(x, n, h, w, cin, wgt, cout, bias, out);
+        return;
+    }
+#endif
+    conv2d_ref(x, n, h, w, cin, wgt, cout, bias, out);
+}
 static void dconv_item(void *envp, size_t t) {
     dconv_env *e = (dconv_env *)envp;
     size_t n0 = t * e->per;
     size_t nn = e->n - n0 < e->per ? e->n - n0 : e->per;
-    conv2d_ref(e->x + n0 * e->h * e->w * e->cin, nn, e->h, e->w, e->cin, e->wgt, e->cout,
-               e->bias, e->out + n0 * e->h * e->w * e->cout);
+    conv_fwd_range(e->x + n0 * e->h * e->w * e->cin, nn, e->h, e->w, e->cin, e->wgt, e->cout,
+                   e->bias, e->out + n0 * e->h * e->w * e->cout);
 }
 static void conv2d_direct(const float *x, size_t n, size_t h, size_t w, size_t cin,
                           const float *wgt, size_t cout, const float *bias, float *out,
                           size_t threads) {
     threads = effective_threads(threads, n, 2ull * n * h * w * 9 * cin * cout);
     if (threads <= 1) {
-        conv2d_ref(x, n, h, w, cin, wgt, cout, bias, out);
+        conv_fwd_range(x, n, h, w, cin, wgt, cout, bias, out);
         return;
     }
     size_t per = (n + threads - 1) / threads;
@@ -361,6 +609,16 @@ static void dwt_item(void *envp, size_t tap) {
     dwt_env *e = (dwt_env *)envp;
     size_t di = tap / 3, dj = tap % 3;
     size_t h = e->h, w = e->w, cin = e->cin, cout = e->cout;
+#if defined(__x86_64__)
+    if (g_route[OP_CONV_BWD_W] == ISA_AVX2) {
+        conv_bwd_w_tap_avx2(e->x, e->dout, e->n, h, w, cin, cout, e->dw, di, dj);
+        return;
+    }
+    if (g_route[OP_CONV_BWD_W] == ISA_SSE2) {
+        conv_bwd_w_tap_sse2(e->x, e->dout, e->n, h, w, cin, cout, e->dw, di, dj);
+        return;
+    }
+#endif
     size_t i0, i1, j0, j1;
     tap_range(di, h, &i0, &i1);
     tap_range(dj, w, &j0, &j1);
@@ -389,8 +647,7 @@ static void conv2d_bwd_w_direct(const float *x, size_t n, size_t h, size_t w, si
     threads = effective_threads(threads, 9, 2ull * n * h * w * 9 * cin * cout);
     dwt_env env = {x, dout, n, h, w, cin, cout, dw};
     run_static(9, threads, dwt_item, &env);
-    for (size_t r = 0; r < n * h * w; r++)
-        for (size_t o = 0; o < cout; o++) db[o] += dout[r * cout + o];
+    col_sum_dispatch(g_route[OP_CONV_BWD_W], db, dout, n * h * w, cout);
 }
 
 typedef struct {
@@ -402,6 +659,16 @@ static void atb_item(void *envp, size_t pi) {
     atb_env *e = (atb_env *)envp;
     size_t k0 = pi * e->panel_rows;
     size_t krows = e->k - k0 < e->panel_rows ? e->k - k0 : e->panel_rows;
+#if defined(__x86_64__)
+    if (g_route[OP_ATB] == ISA_AVX2) {
+        atb_panel_avx2(e->dw, k0, krows, e->m, e->n, e->k, e->a, e->d);
+        return;
+    }
+    if (g_route[OP_ATB] == ISA_SSE2) {
+        atb_panel_sse2(e->dw, k0, krows, e->m, e->n, e->k, e->a, e->d);
+        return;
+    }
+#endif
     for (size_t mi = 0; mi < e->m; mi++) {
         const float *arow = e->a + mi * e->k + k0;
         const float *drow = e->d + mi * e->n;
@@ -437,8 +704,7 @@ static void conv2d_bwd_w_gemm(const float *x, size_t n, size_t h, size_t w, size
                               float *scratch_a, size_t threads) {
     im2col3x3(x, n, h, w, cin, scratch_a);
     sgemm_atb(n * h * w, cout, 9 * cin, scratch_a, dout, dw, threads);
-    for (size_t r = 0; r < n * h * w; r++)
-        for (size_t o = 0; o < cout; o++) db[o] += dout[r * cout + o];
+    col_sum_dispatch(g_route[OP_CONV_BWD_W], db, dout, n * h * w, cout);
 }
 static void conv2d_bwd_x_gemm(const float *wgt, size_t n, size_t h, size_t w, size_t cin,
                               const float *dout, size_t cout, float *dx, float *scratch_a,
@@ -456,8 +722,7 @@ static void dense_bwd_gemm(const float *x, const float *wgt, size_t n, size_t fi
                            const float *dout, float *dw, float *db, float *dx,
                            float *scratch_b, size_t threads) {
     sgemm_atb(n, fout, fin, x, dout, dw, threads);
-    for (size_t r = 0; r < n; r++)
-        for (size_t o = 0; o < fout; o++) db[o] += dout[r * fout + o];
+    col_sum_dispatch(g_route[OP_ATB], db, dout, n, fout);
     transpose_mat(wgt, fin, fout, scratch_b);
     sgemm(n, fin, fout, dout, scratch_b, NULL, dx, threads);
 }
@@ -854,6 +1119,168 @@ static size_t check_train_equivalence(const cnn_t *spec) {
     return fails;
 }
 
+/* ---------------- SIMD variant equivalence (vs routed-scalar) --------- */
+static size_t check_isa_equivalence(int isa) {
+    /* every production op at the forced ISA must be bitwise identical to
+     * the routed-scalar production path (itself pinned to ops::reference
+     * by check_op_equivalence), on the same odd shapes, threads 1 and 4 */
+    size_t fails = 0;
+    size_t shapes[][5] = {{1, 2, 2, 1, 1},  {1, 5, 7, 3, 5},  {2, 4, 4, 1, 8},
+                          {3, 6, 5, 2, 10}, {1, 3, 9, 4, 3},  {2, 16, 16, 8, 16}};
+    for (size_t s = 0; s < 6; s++) {
+        size_t n = shapes[s][0], h = shapes[s][1], w = shapes[s][2], cin = shapes[s][3],
+               cout = shapes[s][4];
+        size_t xl = n * h * w * cin, ol = n * h * w * cout, wl = 9 * cin * cout;
+        float *x = fmalloc(xl), *wgt = fmalloc(wl), *bias = fmalloc(cout);
+        float *dout = fmalloc(ol);
+        for (size_t i = 0; i < xl; i++) {
+            x[i] = rng_normal();
+            if ((i % 3) == 0) x[i] = x[i] > 0 ? x[i] : 0.0f; /* exact zeros */
+        }
+        for (size_t i = 0; i < wl; i++) wgt[i] = rng_normal() * 0.4f;
+        for (size_t i = 0; i < cout; i++) bias[i] = rng_normal() * 0.1f;
+        for (size_t i = 0; i < ol; i++) dout[i] = rng_normal();
+        float *scr_a = fmalloc(n * h * w * 9 * cin), *scr_b = fmalloc(wl);
+        float *o1 = fmalloc(ol), *o2 = fmalloc(ol);
+        float *dw1 = fmalloc(wl), *dw2 = fmalloc(wl);
+        float *db1 = fmalloc(cout), *db2 = fmalloc(cout);
+        float *dx1 = fmalloc(xl), *dx2 = fmalloc(xl);
+        for (size_t th = 1; th <= 4; th += 3) {
+            /* conv fwd: direct and im2col lowerings */
+            set_route_all(ISA_SCALAR);
+            conv2d_direct(x, n, h, w, cin, wgt, cout, bias, o1, th);
+            set_route_all(isa);
+            conv2d_direct(x, n, h, w, cin, wgt, cout, bias, o2, th);
+            if (memcmp(o1, o2, ol * 4)) {
+                printf("FAIL %s conv_fwd_direct shape %zu threads %zu\n", isa_name(isa), s, th);
+                fails++;
+            }
+            set_route_all(ISA_SCALAR);
+            conv2d_gemm(x, n, h, w, cin, wgt, cout, bias, o1, scr_a, th);
+            set_route_all(isa);
+            conv2d_gemm(x, n, h, w, cin, wgt, cout, bias, o2, scr_a, th);
+            if (memcmp(o1, o2, ol * 4)) {
+                printf("FAIL %s conv_fwd_im2col shape %zu threads %zu\n", isa_name(isa), s, th);
+                fails++;
+            }
+            /* conv bwd_w: direct and im2col lowerings */
+            memset(dw1, 0, wl * 4);
+            memset(db1, 0, cout * 4);
+            memset(dw2, 0, wl * 4);
+            memset(db2, 0, cout * 4);
+            set_route_all(ISA_SCALAR);
+            conv2d_bwd_w_direct(x, n, h, w, cin, dout, cout, dw1, db1, th);
+            set_route_all(isa);
+            conv2d_bwd_w_direct(x, n, h, w, cin, dout, cout, dw2, db2, th);
+            if (memcmp(dw1, dw2, wl * 4) || memcmp(db1, db2, cout * 4)) {
+                printf("FAIL %s conv_bwd_w_direct shape %zu threads %zu\n", isa_name(isa), s,
+                       th);
+                fails++;
+            }
+            memset(dw1, 0, wl * 4);
+            memset(db1, 0, cout * 4);
+            memset(dw2, 0, wl * 4);
+            memset(db2, 0, cout * 4);
+            set_route_all(ISA_SCALAR);
+            conv2d_bwd_w_gemm(x, n, h, w, cin, dout, cout, dw1, db1, scr_a, th);
+            set_route_all(isa);
+            conv2d_bwd_w_gemm(x, n, h, w, cin, dout, cout, dw2, db2, scr_a, th);
+            if (memcmp(dw1, dw2, wl * 4) || memcmp(db1, db2, cout * 4)) {
+                printf("FAIL %s conv_bwd_w_im2col shape %zu threads %zu\n", isa_name(isa), s,
+                       th);
+                fails++;
+            }
+            /* conv bwd_x (transpose + G-gemm + col2im) */
+            set_route_all(ISA_SCALAR);
+            conv2d_bwd_x_gemm(wgt, n, h, w, cin, dout, cout, dx1, scr_a, scr_b, th);
+            set_route_all(isa);
+            conv2d_bwd_x_gemm(wgt, n, h, w, cin, dout, cout, dx2, scr_a, scr_b, th);
+            if (memcmp(dx1, dx2, xl * 4)) {
+                printf("FAIL %s conv_bwd_x shape %zu threads %zu\n", isa_name(isa), s, th);
+                fails++;
+            }
+            /* dense fwd/bwd on (n*h*w, cin) -> cout */
+            set_route_all(ISA_SCALAR);
+            dense_gemm(x, n * h * w, cin, wgt, cout, bias, o1, th);
+            set_route_all(isa);
+            dense_gemm(x, n * h * w, cin, wgt, cout, bias, o2, th);
+            if (memcmp(o1, o2, ol * 4)) {
+                printf("FAIL %s dense shape %zu threads %zu\n", isa_name(isa), s, th);
+                fails++;
+            }
+            memset(dw1, 0, wl * 4);
+            memset(db1, 0, cout * 4);
+            memset(dw2, 0, wl * 4);
+            memset(db2, 0, cout * 4);
+            set_route_all(ISA_SCALAR);
+            dense_bwd_gemm(x, wgt, n * h * w, cin, cout, dout, dw1, db1, dx1, scr_b, th);
+            set_route_all(isa);
+            dense_bwd_gemm(x, wgt, n * h * w, cin, cout, dout, dw2, db2, dx2, scr_b, th);
+            if (memcmp(dw1, dw2, cin * cout * 4) || memcmp(db1, db2, cout * 4) ||
+                memcmp(dx1, dx2, xl * 4)) {
+                printf("FAIL %s dense_bwd shape %zu threads %zu\n", isa_name(isa), s, th);
+                fails++;
+            }
+        }
+        free(x);
+        free(wgt);
+        free(bias);
+        free(dout);
+        free(scr_a);
+        free(scr_b);
+        free(o1);
+        free(o2);
+        free(dw1);
+        free(dw2);
+        free(db1);
+        free(db2);
+        free(dx1);
+        free(dx2);
+    }
+    set_route_all(ISA_SCALAR);
+    return fails;
+}
+
+static size_t check_isa_train_equivalence(const cnn_t *spec, int isa) {
+    /* whole-net train loop: routed-scalar vs forced-ISA production path,
+     * bitwise on params/m/v/loss across 3 epochs x K=10 steps */
+    plan_t p = plan_new(spec);
+    size_t B = 32, K = 10, sample = spec->h * spec->w * spec->cin;
+    tape_t t1 = tape_new(&p, B), t2 = tape_new(&p, B);
+    float *pa = fmalloc(p.n_params), *pb = fmalloc(p.n_params);
+    float *ma = fmalloc(p.n_params), *mb = fmalloc(p.n_params);
+    float *va = fmalloc(p.n_params), *vb = fmalloc(p.n_params);
+    float *g = fmalloc(p.n_params);
+    he_init(&p, pa);
+    memcpy(pb, pa, p.n_params * 4);
+    memset(ma, 0, p.n_params * 4);
+    memset(mb, 0, p.n_params * 4);
+    memset(va, 0, p.n_params * 4);
+    memset(vb, 0, p.n_params * 4);
+    float *xs = fmalloc(K * B * sample);
+    int32_t *ys = (int32_t *)malloc(K * B * 4);
+    for (size_t i = 0; i < K * B * sample; i++) xs[i] = rng_normal();
+    for (size_t i = 0; i < K * B; i++) ys[i] = (int32_t)(rng_u64() % spec->ncls);
+    size_t fails = 0;
+    float sa = 0.0f, sb = 0.0f;
+    for (int e = 0; e < 3; e++) {
+        set_route_all(ISA_SCALAR);
+        float la = train_epoch(&p, pa, ma, va, &sa, xs, ys, K, B, 1, 1, &t1, g);
+        set_route_all(isa);
+        float lb = train_epoch(&p, pb, mb, vb, &sb, xs, ys, K, B, 1, 4, &t2, g);
+        if (memcmp(pa, pb, p.n_params * 4) || memcmp(&la, &lb, 4) ||
+            memcmp(ma, mb, p.n_params * 4) || memcmp(va, vb, p.n_params * 4)) {
+            printf("FAIL %s %s train epoch %d: state or loss diverged\n", spec->name,
+                   isa_name(isa), e);
+            fails++;
+        }
+    }
+    set_route_all(ISA_SCALAR);
+    printf("  %s @ %s: 3 epochs x K=10 steps bitwise identical to scalar route\n",
+           spec->name, isa_name(isa));
+    return fails;
+}
+
 /* ---------------- timing ---------------- */
 static double time_train_epoch(const cnn_t *spec, int gemm, size_t threads, int iters) {
     plan_t p = plan_new(spec);
@@ -877,6 +1304,196 @@ static double time_train_epoch(const cnn_t *spec, int gemm, size_t threads, int 
         best_sum += now_s() - t0;
     }
     return best_sum / iters;
+}
+
+/* like time_train_epoch but min-of-iters: the shared authoring box has
+ * noisy neighbours; min is the honest per-variant throughput estimate */
+static double time_train_epoch_min(const cnn_t *spec, int gemm, size_t threads, int iters) {
+    plan_t p = plan_new(spec);
+    size_t B = 32, K = 10, sample = spec->h * spec->w * spec->cin;
+    tape_t t = tape_new(&p, B);
+    float *params = fmalloc(p.n_params), *m = fmalloc(p.n_params), *v = fmalloc(p.n_params);
+    float *g = fmalloc(p.n_params);
+    he_init(&p, params);
+    memset(m, 0, p.n_params * 4);
+    memset(v, 0, p.n_params * 4);
+    float *xs = fmalloc(K * B * sample);
+    int32_t *ys = (int32_t *)malloc(K * B * 4);
+    for (size_t i = 0; i < K * B * sample; i++) xs[i] = rng_normal();
+    for (size_t i = 0; i < K * B; i++) ys[i] = (int32_t)(rng_u64() % spec->ncls);
+    float step = 0.0f;
+    train_epoch(&p, params, m, v, &step, xs, ys, K, B, gemm, threads, &t, g); /* warmup */
+    double best = 1e30;
+    for (int it = 0; it < iters; it++) {
+        double t0 = now_s();
+        train_epoch(&p, params, m, v, &step, xs, ys, K, B, gemm, threads, &t, g);
+        double dt = now_s() - t0;
+        if (dt < best) best = dt;
+    }
+    return best;
+}
+
+/* ---------------- per-kernel per-variant GFLOP/s (BENCH_kernels) ------ */
+/* Nominal flop counts (borders included as if full) on study-model layer
+ * shapes; data is dense-nonzero so the zero-skip never fires and the
+ * numbers are pure kernel throughput.  threads=1: the SIMD win is the
+ * single-thread axis (thread scaling is measured in BENCH_parallel_study).
+ */
+typedef struct {
+    const char *label;
+    size_t n, h, w, cin, cout;
+} conv_shape_t;
+static const conv_shape_t CONV_BENCH[3] = {
+    {"b32 32x32 3->16 (cifar L0)", 32, 32, 32, 3, 16},
+    {"b32 16x16 16->32 (cifar L1)", 32, 16, 16, 16, 32},
+    {"b32 16x16 1->8 (mnist L0)", 32, 16, 16, 1, 8},
+};
+
+typedef struct {
+    float *x, *wgt, *bias, *dout, *out, *dw, *db, *dx, *scr_a, *scr_b;
+} kbufs_t;
+static kbufs_t kbufs_new(const conv_shape_t *s) {
+    kbufs_t b;
+    size_t xl = s->n * s->h * s->w * s->cin, ol = s->n * s->h * s->w * s->cout;
+    size_t wl = 9 * s->cin * s->cout;
+    b.x = fmalloc(xl);
+    b.wgt = fmalloc(wl);
+    b.bias = fmalloc(s->cout);
+    b.dout = fmalloc(ol);
+    b.out = fmalloc(ol);
+    b.dw = fmalloc(wl);
+    b.db = fmalloc(s->cout);
+    b.dx = fmalloc(xl);
+    b.scr_a = fmalloc(s->n * s->h * s->w * 9 * s->cin);
+    b.scr_b = fmalloc(wl);
+    for (size_t i = 0; i < xl; i++) b.x[i] = rng_normal() + 0.001f; /* dense nonzero */
+    for (size_t i = 0; i < wl; i++) b.wgt[i] = rng_normal() * 0.4f;
+    for (size_t i = 0; i < s->cout; i++) b.bias[i] = rng_normal() * 0.1f;
+    for (size_t i = 0; i < ol; i++) b.dout[i] = rng_normal() + 0.001f;
+    return b;
+}
+static void kbufs_free(kbufs_t *b) {
+    free(b->x);
+    free(b->wgt);
+    free(b->bias);
+    free(b->dout);
+    free(b->out);
+    free(b->dw);
+    free(b->db);
+    free(b->dx);
+    free(b->scr_a);
+    free(b->scr_b);
+}
+
+/* kernel ids for bench_kernel_once */
+enum {
+    KB_CONV_FWD_DIRECT,
+    KB_CONV_FWD_IM2COL,
+    KB_CONV_BWD_W_DIRECT,
+    KB_CONV_BWD_W_IM2COL,
+    KB_CONV_BWD_X,
+    KB_COL2IM,
+    KB_IM2COL,
+    N_KB
+};
+static const char *KB_NAME[N_KB] = {
+    "conv2d_fwd_direct",  "conv2d_fwd_im2col", "conv2d_bwd_w_direct",
+    "conv2d_bwd_w_im2col", "conv2d_bwd_x_gemm", "col2im3x3",
+    "im2col3x3",
+};
+static double kb_flops(int kb, const conv_shape_t *s) {
+    double conv = 2.0 * s->n * s->h * s->w * 9.0 * s->cin * s->cout;
+    switch (kb) {
+        case KB_CONV_BWD_X: return conv + 9.0 * s->n * s->h * s->w * s->cin; /* gemm+adds */
+        case KB_COL2IM: return 9.0 * s->n * s->h * s->w * s->cin;            /* adds only */
+        case KB_IM2COL: return 9.0 * s->n * s->h * s->w * s->cin;            /* copies */
+        default: return conv;
+    }
+}
+static void bench_kernel_once(int kb, const conv_shape_t *s, kbufs_t *b) {
+    size_t n = s->n, h = s->h, w = s->w, cin = s->cin, cout = s->cout;
+    switch (kb) {
+        case KB_CONV_FWD_DIRECT:
+            conv2d_direct(b->x, n, h, w, cin, b->wgt, cout, b->bias, b->out, 1);
+            break;
+        case KB_CONV_FWD_IM2COL:
+            conv2d_gemm(b->x, n, h, w, cin, b->wgt, cout, b->bias, b->out, b->scr_a, 1);
+            break;
+        case KB_CONV_BWD_W_DIRECT:
+            memset(b->dw, 0, 9 * cin * cout * 4);
+            memset(b->db, 0, cout * 4);
+            conv2d_bwd_w_direct(b->x, n, h, w, cin, b->dout, cout, b->dw, b->db, 1);
+            break;
+        case KB_CONV_BWD_W_IM2COL:
+            memset(b->dw, 0, 9 * cin * cout * 4);
+            memset(b->db, 0, cout * 4);
+            conv2d_bwd_w_gemm(b->x, n, h, w, cin, b->dout, cout, b->dw, b->db, b->scr_a, 1);
+            break;
+        case KB_CONV_BWD_X:
+            conv2d_bwd_x_gemm(b->wgt, n, h, w, cin, b->dout, cout, b->dx, b->scr_a, b->scr_b,
+                              1);
+            break;
+        case KB_COL2IM:
+            im2col3x3(b->x, n, h, w, cin, b->scr_a); /* input once; not timed separately */
+            col2im3x3(b->scr_a, n, h, w, cin, b->dx, 1);
+            break;
+        case KB_IM2COL:
+            im2col3x3(b->x, n, h, w, cin, b->scr_a);
+            break;
+    }
+}
+static double bench_kernel_gflops(int kb, const conv_shape_t *s, kbufs_t *b, int isa) {
+    set_route_all(isa);
+    bench_kernel_once(kb, s, b); /* warmup */
+    double best = 1e30;
+    for (int it = 0; it < 5; it++) {
+        double t0 = now_s();
+        bench_kernel_once(kb, s, b);
+        double dt = now_s() - t0;
+        if (dt < best) best = dt;
+    }
+    set_route_all(ISA_SCALAR);
+    return kb_flops(kb, s) / best * 1e-9;
+}
+
+/* autotune mirror: min-time ISA per route slot on a representative study
+ * shape (tune.rs does this per shape-class; one class suffices here) */
+static void autotune_routes(void) {
+    const conv_shape_t *rep = &CONV_BENCH[1]; /* cifar L1: widest conv */
+    kbufs_t b = kbufs_new(rep);
+    int kb_of_op[N_ROUTE_OPS] = {KB_CONV_FWD_DIRECT, KB_CONV_BWD_W_DIRECT, KB_CONV_FWD_IM2COL,
+                                 KB_CONV_BWD_W_IM2COL, KB_CONV_BWD_X};
+    int winners[N_ROUTE_OPS];
+    for (int op = 0; op < N_ROUTE_OPS; op++) {
+        double best = -1.0;
+        winners[op] = ISA_SCALAR;
+        for (int isa = 0; isa <= ISA_AVX2; isa++) {
+            if (!isa_available(isa)) continue;
+            set_route_all(ISA_SCALAR);
+            g_route[op] = isa; /* only this slot forced; others scalar */
+            bench_kernel_once(kb_of_op[op], rep, &b);
+            double dt = 1e30;
+            for (int it = 0; it < 3; it++) { /* min-of-3: robust to noise */
+                double t0 = now_s();
+                bench_kernel_once(kb_of_op[op], rep, &b);
+                double d = now_s() - t0;
+                if (d < dt) dt = d;
+            }
+            double gf = kb_flops(kb_of_op[op], rep) / dt * 1e-9;
+            if (gf > best) {
+                best = gf;
+                winners[op] = isa;
+            }
+        }
+    }
+    kbufs_free(&b);
+    const char *op_names[N_ROUTE_OPS] = {"conv_fwd", "conv_bwd_w", "sgemm", "atb", "col2im"};
+    printf("autotuned routes:");
+    for (int op = 0; op < N_ROUTE_OPS; op++) {
+        g_route[op] = winners[op];
+        printf(" %s=%s", op_names[op], isa_name(winners[op]));
+    }
+    printf("\n");
 }
 
 /* pool_64x2M mirror: 64 jobs x 2M LCG mixes (benches/parallel_study.rs) */
@@ -909,6 +1526,99 @@ int main(int argc, char **argv) {
         return 1;
     }
     printf("all op-level and train-loop checks bitwise identical\n\n");
+
+    printf("== equivalence: explicit SIMD variants vs scalar route (bitwise) ==\n");
+    int have_avx2 = isa_available(ISA_AVX2);
+    for (int isa = ISA_SSE2; isa <= ISA_AVX2; isa++) {
+        if (!isa_available(isa)) {
+            printf("  %s: not available on this host, skipped\n", isa_name(isa));
+            continue;
+        }
+        fails += check_isa_equivalence(isa);
+        fails += check_isa_train_equivalence(&CNN_MNIST, isa);
+        fails += check_isa_train_equivalence(&CNN_CIFAR, isa);
+    }
+    if (fails) {
+        printf("SIMD EQUIVALENCE FAILURES: %zu\n", fails);
+        return 1;
+    }
+    printf("all SIMD variants bitwise identical to the scalar route\n\n");
+
+    printf("== per-kernel per-variant GFLOP/s (threads=1, min of 5) ==\n");
+    /* [kb][shape][isa]; -1 = not run */
+    static double gf[N_KB][3][3];
+    for (int kb = 0; kb < N_KB; kb++)
+        for (int si = 0; si < 3; si++)
+            for (int isa = 0; isa < 3; isa++) gf[kb][si][isa] = -1.0;
+    for (int si = 0; si < 3; si++) {
+        const conv_shape_t *s = &CONV_BENCH[si];
+        kbufs_t b = kbufs_new(s);
+        for (int kb = 0; kb < N_KB; kb++) {
+            int n_isa = kb == KB_IM2COL ? 1 : 3; /* packer read side is pure memcpy */
+            printf("  %-20s %-28s", KB_NAME[kb], s->label);
+            for (int isa = 0; isa < n_isa; isa++) {
+                if (!isa_available(isa)) continue;
+                gf[kb][si][isa] = bench_kernel_gflops(kb, s, &b, isa);
+                printf("  %s %6.2f", isa_name(isa), gf[kb][si][isa]);
+            }
+            printf("\n");
+        }
+        kbufs_free(&b);
+    }
+    printf("\n");
+
+    autotune_routes();
+    int tuned[N_ROUTE_OPS];
+    memcpy(tuned, g_route, sizeof(tuned));
+    printf("\n== timing: train_epoch (K=10, B=32), threads=1, min of 7 ==\n");
+    static double tr[2][5]; /* [model][reference, scalar, sse2, avx2, auto] */
+    const cnn_t *tmodels[2] = {&CNN_MNIST, &CNN_CIFAR};
+    for (int mi = 0; mi < 2; mi++) {
+        const cnn_t *s = tmodels[mi];
+        set_route_all(ISA_SCALAR);
+        tr[mi][0] = time_train_epoch_min(s, 0, 1, 7);
+        tr[mi][1] = time_train_epoch_min(s, 1, 1, 7);
+        set_route_all(ISA_SSE2);
+        tr[mi][2] = time_train_epoch_min(s, 1, 1, 7);
+        tr[mi][3] = -1.0;
+        if (have_avx2) {
+            set_route_all(ISA_AVX2);
+            tr[mi][3] = time_train_epoch_min(s, 1, 1, 7);
+        }
+        memcpy(g_route, tuned, sizeof(tuned));
+        tr[mi][4] = time_train_epoch_min(s, 1, 1, 7);
+        set_route_all(ISA_SCALAR);
+        double best = tr[mi][4];
+        printf("%s: ref %.3f ms | scalar %.3f ms | sse2 %.3f ms | avx2 %.3f ms | auto %.3f "
+               "ms (auto vs scalar %.2fx)\n",
+               s->name, tr[mi][0] * 1e3, tr[mi][1] * 1e3, tr[mi][2] * 1e3, tr[mi][3] * 1e3,
+               tr[mi][4] * 1e3, tr[mi][1] / best);
+    }
+    printf("\n=== BENCH_kernels.json payload ===\n");
+    printf("{\n  \"kernels\": [\n");
+    int first = 1;
+    for (int kb = 0; kb < N_KB; kb++)
+        for (int si = 0; si < 3; si++) {
+            if (!first) printf(",\n");
+            first = 0;
+            printf("    {\"kernel\": \"%s\", \"shape\": \"%s\", \"variants\": {", KB_NAME[kb],
+                   CONV_BENCH[si].label);
+            int f2 = 1;
+            for (int isa = 0; isa < 3; isa++) {
+                if (gf[kb][si][isa] < 0.0) continue;
+                printf("%s\"%s\": %.3f", f2 ? "" : ", ", isa_name(isa), gf[kb][si][isa]);
+                f2 = 0;
+            }
+            printf("}}");
+        }
+    printf("\n  ],\n  \"train_epoch\": [\n");
+    for (int mi = 0; mi < 2; mi++) {
+        printf("    {\"model\": \"%s\", \"reference_ms\": %.3f, \"scalar_ms\": %.3f, "
+               "\"sse2_ms\": %.3f, \"avx2_ms\": %.3f, \"auto_ms\": %.3f}%s\n",
+               tmodels[mi]->name, tr[mi][0] * 1e3, tr[mi][1] * 1e3, tr[mi][2] * 1e3,
+               tr[mi][3] * 1e3, tr[mi][4] * 1e3, mi == 0 ? "," : "");
+    }
+    printf("  ]\n}\n=== end payload ===\n\n");
 
     printf("== timing: train_epoch (K=10, B=32), mean of 5 ==\n");
     const cnn_t *models[2] = {&CNN_MNIST, &CNN_CIFAR};
