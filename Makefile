@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring bench-native bench-kernels bench-smoke check-bench-schema check-manifests check-faults
+.PHONY: artifacts test bench bench-scoring bench-native bench-kernels bench-search bench-smoke check-bench-schema check-manifests check-faults check-serve
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -32,6 +32,14 @@ bench-native:
 bench-kernels:
 	FITQ_BACKEND=native cargo bench --bench kernel_variants
 
+# Search-service bench: cold vs warm request latency and served vs
+# in-process scoring throughput (native backend, no artifacts needed;
+# equivalence-gated — the served front must be bit-identical to the
+# in-process sweep before anything is timed); refreshes
+# BENCH_search_service.json at the repo root.
+bench-search:
+	FITQ_BACKEND=native cargo bench --bench search_service
+
 # CI tripwire: 1-iteration timed native train_epoch, asserts the GEMM
 # kernel layer still beats the scalar reference (does not touch the
 # committed BENCH json).
@@ -40,7 +48,7 @@ bench-smoke:
 
 # Structural validation of the committed BENCH_*.json perf records.
 check-bench-schema:
-	python3 scripts/check_bench_schema.py BENCH_parallel_study.json BENCH_fit_scoring.json BENCH_kernels.json
+	python3 scripts/check_bench_schema.py BENCH_parallel_study.json BENCH_fit_scoring.json BENCH_kernels.json BENCH_search_service.json
 
 # Fail-closed validation of every committed zoo model manifest
 # (parse + compile; DESIGN.md "Model manifests").
@@ -57,3 +65,12 @@ check-faults:
 	cargo test -q --test fault_injection
 	cargo build --release
 	bash scripts/check_faults.sh
+
+# Search-service smoke (DESIGN.md "Search service"): a real `fitq serve`
+# on an ephemeral port driven through `fitq query` — score/search/pareto
+# round-trips, warm-table reuse, the streamed front tail, a malformed
+# request answering with a typed error and a nonzero client exit, and
+# `--stats` reporting the resident table.
+check-serve:
+	cargo build --release
+	bash scripts/check_serve.sh

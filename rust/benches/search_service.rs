@@ -1,0 +1,238 @@
+//! Bench: the search service vs in-process table scoring.
+//!
+//! The service's pitch is that a resident table makes config-space
+//! search latency-bound on scoring, not on table builds — so the
+//! numbers that matter are (a) cold-request latency (one train + trace
+//! + table build) vs warm-request latency, and (b) how much throughput
+//! the service layers (sharding, dominance merge, JSON, TCP) give up
+//! against a bare in-process `score_batch` loop over the same table.
+//! Acceptance target from the service issue: warm served throughput
+//! >= 0.9x the in-process batch scorer.
+//!
+//! Needs only the native backend (a real `cnn_mnist` study at one FP
+//! epoch and two trace iterations — cheap, but a *real* pipeline, so
+//! cold latency is honest). Equivalence is asserted before anything is
+//! timed: the served front must be bit-identical to the in-process
+//! sweep at every shard count tried here.
+//!
+//! Results go to `BENCH_search_service.json` at the repo root — the
+//! perf-trajectory record `make bench-search` refreshes.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fitq::bench_util::{bench, black_box};
+use fitq::coordinator::service::{
+    bind, parse_request, query, sample_indices_into, serve_on, ServiceConfig, ServiceCore,
+    ServiceWorker,
+};
+use fitq::coordinator::{pareto_front_scores, ParetoAccumulator};
+use fitq::metrics::{FitTable, PackedConfig};
+use fitq::quant::PRECISIONS;
+use fitq::runtime::{BackendSpec, Json};
+
+const MODEL: &str = "cnn_mnist";
+const SAMPLES: u64 = 200_000;
+
+fn study_json() -> String {
+    format!(
+        r#"{{"model":"{MODEL}","fp_epochs":1,"seed":0,"trace":{{"batch":8,"min_iters":2,"max_iters":2}}}}"#
+    )
+}
+
+fn search_line(samples: u64, shards: Option<usize>, stream: bool) -> String {
+    let shards = shards.map(|k| format!(r#","shards":{k}"#)).unwrap_or_default();
+    format!(
+        r#"{{"method":"search","study":{},"mode":"random","samples":{samples},"seed":9{shards},"stream":{stream}}}"#,
+        study_json()
+    )
+}
+
+/// Run one request in-process and return every emitted line.
+fn exec(core: &ServiceCore, w: &ServiceWorker, line: &str) -> Vec<String> {
+    let req = parse_request(line).expect("request parses");
+    let mut out: Vec<String> = Vec::new();
+    core.execute(w, &req, &mut |l: &str| {
+        out.push(l.to_string());
+        Ok(())
+    })
+    .expect("in-process transport");
+    out
+}
+
+fn invariant(line: &str) -> &str {
+    &line[..line.rfind(",\"metrics\":").expect("metrics trailer")]
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("fitq_bench_serve_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = BackendSpec::Native { threads: 1, zoo: Vec::new() };
+    let core = Arc::new(ServiceCore::new(
+        spec,
+        &dir,
+        ServiceConfig { jobs: 0, table_capacity: 8, shard_target: 16_384 },
+    ));
+    let worker = core.worker().expect("worker");
+
+    println!("# search_service — served vs in-process scoring ({MODEL}, {SAMPLES} samples)\n");
+
+    // -- 1. cold vs warm request latency -----------------------------------
+    let t0 = Instant::now();
+    let cold = exec(&core, &worker, &search_line(1_000, None, false));
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(cold[0].contains("\"table\":\"cold+compute\""), "first request is cold");
+    let t0 = Instant::now();
+    let warm = exec(&core, &worker, &search_line(1_000, None, false));
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(warm[0].contains("\"table\":\"warm\""), "second request is warm");
+    println!("cold request (train+trace+build): {cold_ms:.0} ms");
+    println!("warm request (1k samples):        {warm_ms:.2} ms\n");
+
+    // -- 2. the in-process reference table (same artifacts, same bits) -----
+    let mm = worker.rt.model(MODEL).expect("model");
+    let sens = worker
+        .pipe
+        .sensitivity(&worker.rt, MODEL, 1, 0, {
+            let mut t = fitq::coordinator::TraceOptions::default();
+            t.batch = 8;
+            t.min_iters = 2;
+            t.max_iters = 2;
+            t
+        })
+        .expect("sensitivity (cached by the cold request)");
+    let table = FitTable::new(&sens.inputs, &mm.block_sizes(), mm.n_unquantized(), &PRECISIONS);
+    let n_blocks = table.n_weight_blocks() + table.n_act_blocks();
+    let n_prec = table.precisions().len();
+
+    // equivalence gate: the served front == the in-process one-shot sweep
+    let mut idx = Vec::new();
+    let mut scores = Vec::with_capacity(SAMPLES as usize);
+    for k in 0..SAMPLES {
+        sample_indices_into(n_blocks, n_prec, 9, k, &mut idx);
+        scores.push(table.score_size_indices(&idx));
+    }
+    let front = pareto_front_scores(&scores);
+    let mut acc = ParetoAccumulator::new();
+    acc.absorb_scores(0, &scores);
+    assert_eq!(acc.indices(), front, "accumulator == sweep");
+    let served = exec(&core, &worker, &search_line(SAMPLES, None, false));
+    let served7 = exec(&core, &worker, &search_line(SAMPLES, Some(7), false));
+    assert_eq!(invariant(&served[0]), invariant(&served7[0]), "shard invariance");
+    let served_front = Json::parse(&served[0]).unwrap();
+    let served_front = served_front
+        .field("result")
+        .unwrap()
+        .arr_field("front")
+        .unwrap()
+        .iter()
+        .map(|p| p.usize_field("index").unwrap())
+        .collect::<Vec<_>>();
+    assert_eq!(served_front, front, "served front == in-process sweep");
+
+    // -- 3. throughput: in-process batch scorer (the floor to hold) --------
+    let packed: Vec<PackedConfig> = {
+        let mut out = Vec::with_capacity(SAMPLES as usize);
+        let mut idx = Vec::new();
+        for k in 0..SAMPLES {
+            sample_indices_into(n_blocks, n_prec, 9, k, &mut idx);
+            out.push(table.pack(&fitq::coordinator::service::sampled_config(&table, 9, k)));
+        }
+        out
+    };
+    let mut rows: Vec<(String, usize, f64)> = Vec::new();
+    let mut buf = Vec::new();
+    for jobs in [1usize, 0] {
+        let r = bench(&format!("in-process score_batch_into jobs={jobs}"), 1, 10, || {
+            table.score_batch_into(&packed, jobs, &mut buf);
+            black_box(buf.len());
+        });
+        rows.push(("in_process_batch".into(), jobs, SAMPLES as f64 * 1e9 / r.mean_ns));
+    }
+    // the sampled path (draw + score, no PackedConfig) — what search shards run
+    let r = bench("in-process sample+score serial", 1, 10, || {
+        let mut acc = 0.0;
+        for k in 0..SAMPLES {
+            sample_indices_into(n_blocks, n_prec, 9, k, &mut idx);
+            acc += table.score_size_indices(&idx).0;
+        }
+        black_box(acc);
+    });
+    rows.push(("in_process_sampled".into(), 1, SAMPLES as f64 * 1e9 / r.mean_ns));
+
+    // -- 4. throughput: warm served requests (core, then real TCP) ---------
+    for jobs in [1usize, 0] {
+        let core_j = ServiceCore::new(
+            BackendSpec::Native { threads: 1, zoo: Vec::new() },
+            &dir,
+            ServiceConfig { jobs, table_capacity: 8, shard_target: 16_384 },
+        );
+        let w_j = core_j.worker().expect("worker");
+        exec(&core_j, &w_j, &search_line(1, None, false)); // warm the LRU
+        let r = bench(&format!("served search (core) jobs={jobs}"), 1, 10, || {
+            black_box(exec(&core_j, &w_j, &search_line(SAMPLES, None, false)).len());
+        });
+        rows.push(("served_core".into(), jobs, SAMPLES as f64 * 1e9 / r.mean_ns));
+    }
+
+    let listener = bind("127.0.0.1", 0).expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    {
+        let core = core.clone();
+        std::thread::spawn(move || serve_on(core, listener));
+    }
+    let line = search_line(SAMPLES, None, false);
+    let r = bench("served search (tcp loopback)", 1, 10, || {
+        let mut out: Vec<u8> = Vec::new();
+        let err = query(&addr, std::slice::from_ref(&line), &mut out).expect("query");
+        assert!(!err);
+        black_box(out.len());
+    });
+    rows.push(("served_tcp".into(), 0, SAMPLES as f64 * 1e9 / r.mean_ns));
+
+    // -- 5. streaming overhead ---------------------------------------------
+    let r_oneshot = bench("one-shot front, 16 shards", 1, 10, || {
+        black_box(exec(&core, &worker, &search_line(SAMPLES, Some(16), false)).len());
+    });
+    let r_stream = bench("streamed front, 16 shards", 1, 10, || {
+        black_box(exec(&core, &worker, &search_line(SAMPLES, Some(16), true)).len());
+    });
+    let stream_overhead = r_stream.mean_ns / r_oneshot.mean_ns;
+    println!("  -> streaming overhead: {stream_overhead:.3}x\n");
+
+    let in_process = rows
+        .iter()
+        .filter(|(p, _, _)| p == "in_process_batch")
+        .map(|&(_, _, cps)| cps)
+        .fold(0.0f64, f64::max);
+    let served = rows
+        .iter()
+        .filter(|(p, _, _)| p.starts_with("served"))
+        .map(|&(_, _, cps)| cps)
+        .fold(0.0f64, f64::max);
+    let ratio = served / in_process;
+    println!("  -> best served / best in-process throughput: {ratio:.3} (target >= 0.9)");
+
+    // -- record the trajectory point ---------------------------------------
+    let mut rows_json = String::new();
+    for (i, (path, jobs, cps)) in rows.iter().enumerate() {
+        if i > 0 {
+            rows_json.push_str(",\n    ");
+        }
+        rows_json.push_str(&format!(
+            "{{\"path\": \"{path}\", \"jobs\": {jobs}, \"configs_per_sec\": {cps:.1}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"search_service\",\n  \"status\": \"measured\",\n  \
+         \"model\": \"{MODEL}\",\n  \"samples\": {SAMPLES},\n  \
+         \"cold_ms\": {cold_ms:.1},\n  \"warm_ms\": {warm_ms:.3},\n  \
+         \"throughput\": [\n    {rows_json}\n  ],\n  \
+         \"served_vs_inprocess\": {ratio:.4},\n  \
+         \"stream_overhead\": {stream_overhead:.4}\n}}\n"
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_search_service.json");
+    std::fs::write(path, &json).expect("write BENCH_search_service.json");
+    println!("\nwrote {path}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -14,6 +14,9 @@
 //!   stage-deduping scheduling.
 //! - `search` / `allocate`: Pareto front + greedy and exact budgeted bit
 //!   allocation, all table-driven over the shared `metrics::FitTable`.
+//! - `service`: the long-running search service behind `fitq serve` —
+//!   resident `FitTable` LRU, worker-sharded scoring, streamed
+//!   incremental Pareto fronts over a line-JSON protocol.
 //! - `experiments`: one module per paper table/figure.
 //! - `report`: CSV/markdown emission under results/.
 
@@ -25,6 +28,7 @@ pub mod pipeline;
 pub mod report;
 pub mod search;
 pub mod sensitivity;
+pub mod service;
 pub mod state;
 pub mod traces;
 pub mod trainer;
@@ -32,13 +36,16 @@ pub mod trainer;
 pub use allocate::{exact_allocate, exact_allocate_table};
 pub use evaluator::{run_study, ConfigFailure, StudyOptions, StudyResult};
 pub use parallel::{
-    derive_seed, run_pool, run_pool_fallible, run_serial_fallible, run_static_caught, JobError,
+    derive_seed, run_pool, run_pool_fallible, run_pool_streaming, run_serial_fallible,
+    run_static_caught, JobError,
 };
 pub use pipeline::{FaultPlan, Pipeline, StageCounters, StageRequest};
 pub use search::{
     greedy_allocate, greedy_allocate_naive, greedy_allocate_table, pareto_front,
-    pareto_front_scores, score, ScoredConfig,
+    pareto_front_scores, pareto_front_scores_naive, score, FrontPoint, ParetoAccumulator,
+    ScoredConfig,
 };
+pub use service::{ServiceConfig, ServiceCore, ServiceWorker};
 pub use sensitivity::{gather, SensitivityReport};
 pub use state::ModelState;
 pub use traces::{relative_speedup, Estimator, TraceEngine, TraceOptions, TraceResult};

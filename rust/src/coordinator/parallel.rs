@@ -271,6 +271,119 @@ where
     Ok(out)
 }
 
+/// Streaming variant of [`run_pool`]: results are handed to `on_result`
+/// on the *calling* thread as workers finish them, instead of being
+/// collected into an index-ordered `Vec` at the end. This is the search
+/// service's fan-out primitive — per-shard Pareto fronts are folded (and
+/// streamed to the client) the moment each shard lands, not after the
+/// slowest one.
+///
+/// Contract:
+/// - `on_result(index, value)` runs on the caller's thread, serially, in
+///   *completion* order — which is nondeterministic for `jobs > 1`.
+///   Callers needing bit-identical outcomes at every jobs value must fold
+///   order-invariantly (e.g. [`ParetoAccumulator`], or writing into a slot
+///   keyed by `index`). `jobs <= 1` runs inline in index order and is the
+///   serial reference path.
+/// - A failing or panicking job stops the pool claiming new work and the
+///   call returns that error (lowest-index error among those seen);
+///   results that were already in flight are dropped, not folded.
+/// - An error from `on_result` likewise stops the pool and is returned.
+///
+/// [`ParetoAccumulator`]: crate::coordinator::search::ParetoAccumulator
+pub fn run_pool_streaming<W, T, I, F, C>(
+    n: usize,
+    jobs: usize,
+    init: I,
+    work: F,
+    mut on_result: C,
+) -> Result<()>
+where
+    T: Send,
+    I: Fn() -> Result<W> + Sync,
+    F: Fn(&mut W, usize) -> Result<T> + Sync,
+    C: FnMut(usize, T) -> Result<()>,
+{
+    let jobs = effective_jobs(jobs, n);
+    if jobs <= 1 {
+        let mut w = init_caught(&init)?;
+        for i in 0..n {
+            match call_caught(&mut w, i, &work) {
+                Ok(t) => on_result(i, t)?,
+                Err(je) => return Err(anyhow!(je)),
+            }
+        }
+        return Ok(());
+    }
+
+    let counter = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    // workers push (index, outcome) into an unbounded channel; the caller
+    // drains it and folds on its own thread. `Sender` is cheaply cloned
+    // per worker; dropping the last clone ends the caller's drain loop.
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, std::result::Result<T, JobError>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let (init, work, counter, stop) = (&init, &work, &counter, &stop);
+            scope.spawn(move || {
+                let mut state = match init_caught(init) {
+                    Ok(w) => w,
+                    Err(e) => {
+                        stop.store(true, Ordering::Relaxed);
+                        // surface init failure as a job error on the next
+                        // unclaimed index (nothing was executed for it)
+                        let i = counter.fetch_add(1, Ordering::Relaxed).min(n);
+                        let je =
+                            JobError { index: i, panicked: false, message: format!("{e:#}") };
+                        let _ = tx.send((i, Err(je)));
+                        return;
+                    }
+                };
+                while !stop.load(Ordering::Relaxed) {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = call_caught(&mut state, i, work);
+                    if r.is_err() {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                    if tx.send((i, r)).is_err() {
+                        break; // caller stopped draining
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut first_err: Option<JobError> = None;
+        let mut consumer_err: Option<anyhow::Error> = None;
+        for (i, r) in rx {
+            match r {
+                Ok(t) => {
+                    if first_err.is_none() && consumer_err.is_none() {
+                        if let Err(e) = on_result(i, t) {
+                            stop.store(true, Ordering::Relaxed);
+                            consumer_err = Some(e);
+                        }
+                    }
+                }
+                Err(je) => {
+                    if first_err.as_ref().is_none_or(|f| je.index < f.index) {
+                        first_err = Some(je);
+                    }
+                }
+            }
+        }
+        match (consumer_err, first_err) {
+            (Some(e), _) => Err(e),
+            (None, Some(je)) => Err(anyhow!(je)),
+            (None, None) => Ok(()),
+        }
+    })
+}
+
 /// Degrading variant of [`run_pool`]: every job's outcome comes back as a
 /// `Result<T, JobError>` slot in index order, and a failing (or panicking)
 /// job never stops the sweep — one poisoned config degrades one slot, not
@@ -795,6 +908,96 @@ mod tests {
             assert_eq!(ran.load(Ordering::Relaxed), 0b111_1111, "every item executed");
         }
         assert!(run_static_caught(vec![1, 2], 2, |_, _| {}).is_ok());
+    }
+
+    #[test]
+    fn streaming_pool_delivers_every_result_exactly_once() {
+        for jobs in [1usize, 2, 4, 7] {
+            let mut seen = vec![0u8; 40];
+            run_pool_streaming(
+                40,
+                jobs,
+                || Ok(()),
+                |_, i| Ok(i * 3),
+                |i, v| {
+                    assert_eq!(v, i * 3);
+                    seen[i] += 1;
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert!(seen.iter().all(|&c| c == 1), "jobs={jobs}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn streaming_pool_serial_path_is_index_ordered() {
+        let mut order = Vec::new();
+        run_pool_streaming(
+            6,
+            1,
+            || Ok(()),
+            |_, i| Ok(i),
+            |i, _| {
+                order.push(i);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn streaming_pool_surfaces_job_and_consumer_errors() {
+        for jobs in [1usize, 4] {
+            let r = run_pool_streaming(
+                20,
+                jobs,
+                || Ok(()),
+                |_, i| if i == 5 { Err(anyhow!("shard 5 bad")) } else { Ok(i) },
+                |_, _| Ok(()),
+            );
+            let msg = format!("{:#}", r.unwrap_err());
+            assert!(msg.contains("shard 5 bad"), "jobs={jobs}: {msg}");
+
+            let r = run_pool_streaming(
+                20,
+                jobs,
+                || Ok(()),
+                |_, i| Ok(i),
+                |_, _| Err(anyhow!("client went away")),
+            );
+            let msg = format!("{:#}", r.unwrap_err());
+            assert!(msg.contains("client went away"), "jobs={jobs}: {msg}");
+        }
+    }
+
+    #[test]
+    fn streaming_pool_converts_panics_and_init_failures() {
+        let r = run_pool_streaming(
+            12,
+            3,
+            || Ok(()),
+            |_, i: usize| -> Result<usize> {
+                if i == 2 {
+                    panic!("shard 2 wrecked");
+                }
+                Ok(i)
+            },
+            |_, _| Ok(()),
+        );
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("shard 2 wrecked"), "{msg}");
+
+        let r = run_pool_streaming(
+            4,
+            2,
+            || Err::<(), _>(anyhow!("no runtime")),
+            |_, i| Ok(i),
+            |_, _| Ok(()),
+        );
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("no runtime"), "{msg}");
     }
 
     #[test]

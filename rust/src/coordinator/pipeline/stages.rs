@@ -549,6 +549,29 @@ impl Pipeline {
         Ok(rc)
     }
 
+    /// Probe: is the sensitivity report for `(model, fp_epochs, seed, trace)`
+    /// already available without computing anything — either memoized in
+    /// this process or published (and decodable) in the artifact store?
+    /// Never trains, never takes a lease; safe to call from a serving
+    /// thread that wants to label a request cold-cached vs cold-computed.
+    pub fn sensitivity_published(
+        &self,
+        rt: &Runtime,
+        model: &str,
+        fp_epochs: usize,
+        seed: u64,
+        trace: TraceOptions,
+    ) -> Result<bool> {
+        let key = sensitivity_key(rt.backend_name(), rt.model(model)?, fp_epochs, seed, &trace);
+        if self.memo_sens.borrow().contains_key(&key) {
+            return Ok(true);
+        }
+        Ok(self
+            .cache
+            .load(KIND_SENSITIVITY, codec::SENSITIVITY_SCHEMA, &key)
+            .is_some_and(|bytes| codec::decode_sensitivity(&bytes).is_ok()))
+    }
+
     /// Run (or load) a batch of trace estimations over the FP checkpoint
     /// of `(model, fp_epochs, seed)`, in `specs` order. Cached specs are
     /// served from the store; only the misses are fanned over `jobs`

@@ -66,6 +66,151 @@ pub fn pareto_front_scores(scores: &[(f64, u64)]) -> Vec<usize> {
     front
 }
 
+/// O(n²) dominance-scan reference for [`pareto_front_scores`].
+///
+/// ISSUE 9 asked for the quadratic scan to be *replaced* by sort-then-sweep,
+/// but the sweep has been the implementation since the scoring-engine PR —
+/// so the quadratic direction is reversed: this is the naive ground truth,
+/// written directly from the sweep's membership characterization, and the
+/// regression pin (`naive == sweep == streaming accumulator`, including the
+/// NaN/±0.0/duplicate corners) lives in the tests below and in
+/// `tests/search_service.rs`.
+///
+/// Membership: order points by the lexicographic key
+/// `(size_bits, fit via total_cmp, index)` — exactly the sweep's stable
+/// sort. Point `i` is on the front iff `fit_i < +∞` (NaN and +∞ never
+/// enter) and every point `j` ordered before it satisfies
+/// `fit_j is NaN || fit_i < fit_j` (a NaN predecessor never raises the
+/// sweep's running minimum, every other predecessor must be strictly
+/// beaten).
+pub fn pareto_front_scores_naive(scores: &[(f64, u64)]) -> Vec<usize> {
+    let before = |j: usize, i: usize| -> bool {
+        let (fj, sj) = scores[j];
+        let (fi, si) = scores[i];
+        match sj.cmp(&si).then(fj.total_cmp(&fi)) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => j < i,
+        }
+    };
+    let mut front: Vec<usize> = (0..scores.len())
+        .filter(|&i| {
+            let fi = scores[i].0;
+            fi < f64::INFINITY
+                && (0..scores.len())
+                    .all(|j| j == i || !before(j, i) || scores[j].0.is_nan() || fi < scores[j].0)
+        })
+        .collect();
+    // report in the sweep's output order (size ascending), not index order
+    front.sort_by(|&a, &b| {
+        scores[a].1.cmp(&scores[b].1).then(scores[a].0.total_cmp(&scores[b].0)).then(a.cmp(&b))
+    });
+    front
+}
+
+/// One point of a (possibly streamed) Pareto front: the *global* index of
+/// the scored configuration plus its raw `(fit, size_bits)` pair. Shard
+/// workers attach their range base to local indices, so folding fronts
+/// from any shard split reproduces the indices of the one-shot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrontPoint {
+    pub index: usize,
+    pub fit: f64,
+    pub size_bits: u64,
+}
+
+/// The canonical front order — the key [`pareto_front_scores`]'s stable
+/// sort realizes: size ascending, then fit by `total_cmp`, then index.
+fn front_key(a: &FrontPoint, b: &FrontPoint) -> Ordering {
+    a.size_bits.cmp(&b.size_bits).then(a.fit.total_cmp(&b.fit)).then(a.index.cmp(&b.index))
+}
+
+/// Online dominance-merge: fold points (or whole per-shard fronts) in any
+/// order and read back, at any moment, the exact Pareto front of
+/// everything absorbed so far — bit-identical, index-for-index, to running
+/// [`pareto_front_scores`] once over the union. This is the streaming
+/// front the search service emits as shards complete.
+///
+/// Why folding per-shard *fronts* loses nothing: membership of point `p`
+/// depends only on the minimum fit among points keyed before `p`
+/// (see [`pareto_front_scores_naive`]), and every absorbed point that is
+/// *not* on the current front is witnessed by a current front point with a
+/// smaller-or-equal key and a `<=` fit (witnesses chain through evictions),
+/// so dropping it never changes that minimum. The same argument makes
+/// [`push`](Self::push) order-invariant and idempotent. The front is kept
+/// in canonical order with strictly increasing sizes and strictly
+/// decreasing fits, so each push is a binary search plus a (rare) eviction
+/// drain — O(log F) amortized, no sort on the service's hot path.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoAccumulator {
+    front: Vec<FrontPoint>,
+}
+
+impl ParetoAccumulator {
+    pub fn new() -> ParetoAccumulator {
+        ParetoAccumulator::default()
+    }
+
+    /// Absorb one scored point. NaN and +∞ fits are ignored (they can
+    /// never enter a front), matching the one-shot sweep.
+    pub fn push(&mut self, p: FrontPoint) {
+        if !(p.fit < f64::INFINITY) {
+            return;
+        }
+        let pos = match self.front.binary_search_by(|q| front_key(q, &p)) {
+            Ok(_) => return, // exact duplicate (same index): idempotent
+            Err(pos) => pos,
+        };
+        // the predecessor holds the minimum fit among everything absorbed
+        // with a smaller key; non-strict improvement is rejection
+        if pos > 0 && !(p.fit < self.front[pos - 1].fit) {
+            return;
+        }
+        // points keyed after p survive only if they still strictly beat
+        // p.fit; fits decrease along the front, so the evictions are a
+        // contiguous run starting at pos
+        let evict_end = self.front[pos..]
+            .iter()
+            .position(|q| q.fit < p.fit)
+            .map_or(self.front.len(), |k| pos + k);
+        self.front.splice(pos..evict_end, [p]);
+    }
+
+    /// Absorb a whole shard's raw scores; `base` is the global index of
+    /// `scores[0]` (shards are contiguous index ranges).
+    pub fn absorb_scores(&mut self, base: usize, scores: &[(f64, u64)]) {
+        for (off, &(fit, size_bits)) in scores.iter().enumerate() {
+            self.push(FrontPoint { index: base + off, fit, size_bits });
+        }
+    }
+
+    /// Absorb another front (e.g. one shard's local front).
+    pub fn absorb_front(&mut self, points: &[FrontPoint]) {
+        for &p in points {
+            self.push(p);
+        }
+    }
+
+    /// The current front in canonical order (size ascending) — the same
+    /// order [`pareto_front_scores`] reports.
+    pub fn front(&self) -> &[FrontPoint] {
+        &self.front
+    }
+
+    /// The current front's global indices, in canonical order.
+    pub fn indices(&self) -> Vec<usize> {
+        self.front.iter().map(|p| p.index).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.front.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.front.is_empty()
+    }
+}
+
 /// One precision-lowering step of the heap greedy: `block` moves down to
 /// `to_level` on the descending-precision ladder. Ordered by
 /// `(rate, weights-before-activations, block index)` via `total_cmp`,
@@ -441,6 +586,108 @@ mod tests {
         let out2 = greedy_allocate(&s2, &sizes2, 10, &PRECISIONS, full2 * 60 / 100).unwrap();
         assert_eq!(out2.cfg.bits_w, vec![6, 4, 3]);
         assert_eq!(out2.cfg.bits_a, vec![8, 8]);
+    }
+
+    /// Deterministic adversarial score clouds for the front-equivalence
+    /// pins: duplicates, shared sizes, ±0.0, NaN, ±∞ all appear.
+    fn score_cloud(n: usize, seed: u64) -> Vec<(f64, u64)> {
+        let mut r = crate::tensor::Pcg32::new(seed, 0xf407);
+        (0..n)
+            .map(|_| {
+                let fit = match r.below(16) {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    2 => f64::NEG_INFINITY,
+                    3 => 0.0,
+                    4 => -0.0,
+                    5 => 1.25, // exact duplicate fodder
+                    _ => r.uniform_in(-2.0, 30.0) as f64,
+                };
+                (fit, r.below(12) as u64 * 100)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn naive_front_matches_sweep_on_adversarial_clouds() {
+        for seed in 0..12u64 {
+            let scores = score_cloud(120, seed);
+            assert_eq!(
+                pareto_front_scores_naive(&scores),
+                pareto_front_scores(&scores),
+                "seed {seed}"
+            );
+        }
+        // the NaN corner pinned by the struct-path test, via the naive scan
+        let pts = vec![(f64::NAN, 100), (1.0, 100), (0.5, 300), (f64::NAN, 300)];
+        assert_eq!(pareto_front_scores_naive(&pts), vec![1, 2]);
+        assert_eq!(pareto_front_scores_naive(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn accumulator_matches_one_shot_at_every_shard_split() {
+        for seed in 0..8u64 {
+            let scores = score_cloud(257, seed);
+            let expect = pareto_front_scores(&scores);
+            for shards in [1usize, 2, 3, 7, 16, 64, 257] {
+                let mut acc = ParetoAccumulator::new();
+                let per = scores.len().div_ceil(shards);
+                // absorb shards back-to-front: order must not matter
+                for s in (0..shards).rev() {
+                    let lo = s * per;
+                    let hi = (lo + per).min(scores.len());
+                    if lo < hi {
+                        acc.absorb_scores(lo, &scores[lo..hi]);
+                    }
+                }
+                assert_eq!(acc.indices(), expect, "seed {seed} shards {shards}");
+                for (p, &i) in acc.front().iter().zip(&expect) {
+                    assert_eq!(p.fit.to_bits(), scores[i].0.to_bits());
+                    assert_eq!(p.size_bits, scores[i].1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_folds_shard_fronts_not_just_raw_scores() {
+        // the service folds per-shard *fronts*; dropping shard-dominated
+        // points before the merge must lose nothing
+        for seed in 0..8u64 {
+            let scores = score_cloud(200, seed);
+            let expect = pareto_front_scores(&scores);
+            let mut acc = ParetoAccumulator::new();
+            for (s, chunk) in scores.chunks(33).enumerate() {
+                let base = s * 33;
+                let local: Vec<FrontPoint> = pareto_front_scores(chunk)
+                    .into_iter()
+                    .map(|i| FrontPoint {
+                        index: base + i,
+                        fit: chunk[i].0,
+                        size_bits: chunk[i].1,
+                    })
+                    .collect();
+                acc.absorb_front(&local);
+            }
+            assert_eq!(acc.indices(), expect, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn accumulator_push_is_idempotent_and_incremental() {
+        let scores = score_cloud(90, 3);
+        let mut acc = ParetoAccumulator::new();
+        for (i, &(fit, size_bits)) in scores.iter().enumerate() {
+            acc.push(FrontPoint { index: i, fit, size_bits });
+            // invariant at every step: the front equals the one-shot
+            // front of the prefix absorbed so far
+            assert_eq!(acc.indices(), pareto_front_scores(&scores[..=i]), "after {i}");
+        }
+        let snapshot = acc.indices();
+        acc.absorb_scores(0, &scores); // absorb everything again
+        assert_eq!(acc.indices(), snapshot, "re-absorption must be a no-op");
+        assert_eq!(acc.len(), snapshot.len());
+        assert!(!acc.is_empty());
     }
 
     #[test]

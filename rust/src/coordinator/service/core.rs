@@ -1,0 +1,763 @@
+//! Request execution: resident tables, sharded scoring, streamed fronts.
+//!
+//! [`ServiceCore`] is the shared, thread-safe heart of both `fitq serve`
+//! and `fitq search` — one instance per process, holding the resident
+//! [`FitTable`] LRU, the aggregate [`ServeStats`], and the shared
+//! [`StageCounters`]. Each serving thread (or the CLI's single thread)
+//! builds one [`ServiceWorker`] — a `Runtime` + `Pipeline`, neither of
+//! which is `Send` — and feeds validated [`Request`]s to
+//! [`ServiceCore::execute`], which writes response lines through an
+//! `emit` callback so the same code path serves TCP connections, the CLI,
+//! and in-process tests.
+//!
+//! # Sharding and determinism
+//!
+//! A scoring request over `n` configs is split by [`plan_shards`] into
+//! contiguous index ranges. Shard workers score their range and fold it
+//! into a shard-local [`ParetoAccumulator`]; the request thread absorbs
+//! per-shard fronts as they complete (streaming a `front` event after
+//! each when asked). Because accumulator `push` is order-invariant and
+//! absorbing a shard's *front* is equivalent to absorbing its raw scores
+//! (see `search.rs`), the final front — and therefore the terminal `done`
+//! line — is bit-identical to the serial one-shot sweep at every shard
+//! count and jobs setting. Only the *interleaving* of `front` progress
+//! events varies under `jobs > 1`.
+//!
+//! Random search stays shardable because sampling is index-pure: config
+//! `i` is drawn from `Pcg32::new(derive_seed(seed, i), SAMPLE_STREAM)`
+//! regardless of which shard or worker draws it, and is scored through
+//! [`FitTable::score_size_indices`] from one reused per-worker index
+//! buffer (no per-config allocation, no `PackedConfig` materialization).
+//! Sampling is with replacement — unlike `BitConfigSampler`, which
+//! dedups through a `HashSet` and is therefore inherently serial.
+//!
+//! # Table residency
+//!
+//! Tables are keyed by the study's `sensitivity_key` stage digest — the
+//! same digest the artifact cache uses — in a small mutex-guarded MRU
+//! list. A hit serves from memory ("warm"); a miss routes through the
+//! lease-coordinated `Pipeline`, so N concurrent cold requests for one
+//! study compute its sensitivity exactly once ("cold+cache" when a
+//! published artifact was decodable beforehand, "cold+compute" when this
+//! request had to run — or wait out — the train→trace pipeline).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::allocate::exact_allocate_table;
+use crate::coordinator::parallel::{derive_seed, effective_jobs, run_pool_streaming};
+use crate::coordinator::pipeline::stages::sensitivity_key;
+use crate::coordinator::pipeline::{Digest, Pipeline, StageCounters};
+use crate::coordinator::search::{greedy_allocate_table, FrontPoint, ParetoAccumulator};
+use crate::coordinator::traces::TraceOptions;
+use crate::metrics::{FitTable, PackedConfig};
+use crate::quant::{BitConfig, PRECISIONS};
+use crate::runtime::{BackendSpec, Runtime};
+use crate::tensor::Pcg32;
+
+use super::protocol::{
+    done_line, error_line, front_line, json_escape, json_num, Budget, ErrorKind, ProtocolError,
+    Request, RequestMetrics, SearchMode, StudySpec, TableResidency,
+};
+
+/// Tuning knobs of a [`ServiceCore`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads per request (0 = all cores) — same semantics as
+    /// every other `--jobs` flag.
+    pub jobs: usize,
+    /// Resident-table LRU capacity (tables, not bytes — a table is a few
+    /// hundred f64s per block).
+    pub table_capacity: usize,
+    /// Target configs per shard when the request doesn't pin `shards`.
+    pub shard_target: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig { jobs: 0, table_capacity: 8, shard_target: 65_536 }
+    }
+}
+
+/// One resident study table: the stage digest it is keyed by, plus
+/// everything needed to score and to convert budgets.
+pub struct StudyTable {
+    pub digest: Digest,
+    pub model: String,
+    pub table: FitTable,
+    /// Full-model fp32 storage bits (`n_params * 32`) — the denominator
+    /// of `budget_ratio`.
+    pub fp32_bits: u64,
+}
+
+/// Monotone service-lifetime counters, aggregated by `stats` requests.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    configs_scored: AtomicU64,
+    table_hits: AtomicU64,
+    table_misses: AtomicU64,
+    /// Requests currently in flight (gauge, not a counter).
+    active: AtomicUsize,
+}
+
+/// Per-thread execution state: a `Runtime` and a `Pipeline` are both
+/// deliberately not `Send` (interned executables, memo `Rc`s), so every
+/// serving thread builds its own pair via [`ServiceCore::worker`]. All
+/// workers share the core's `StageCounters`, and cross-thread
+/// exactly-once is the artifact store's lease protocol — same contract
+/// as the experiment scheduler's worker pipelines.
+pub struct ServiceWorker {
+    pub rt: Runtime,
+    pub pipe: Pipeline,
+}
+
+impl ServiceWorker {
+    /// Wrap an existing runtime + pipeline (the CLI path, which already
+    /// built both before deciding to route through the service core).
+    pub fn new(rt: Runtime, pipe: Pipeline) -> ServiceWorker {
+        ServiceWorker { rt, pipe }
+    }
+}
+
+/// Internal failure split: protocol errors become an `error` event and
+/// leave the connection open; transport errors (the client went away)
+/// propagate and close it.
+enum ExecError {
+    Protocol(ProtocolError),
+    Transport(anyhow::Error),
+}
+
+fn proto(kind: ErrorKind, e: impl std::fmt::Display) -> ExecError {
+    ExecError::Protocol(ProtocolError::new(kind, format!("{e}")))
+}
+
+/// The shared state of a search service process. `Send + Sync`; wrap in
+/// an `Arc` and hand a clone to every serving thread.
+pub struct ServiceCore {
+    spec: BackendSpec,
+    results_root: PathBuf,
+    cfg: ServiceConfig,
+    /// MRU-ordered resident tables (front = most recently used).
+    tables: Mutex<Vec<Arc<StudyTable>>>,
+    counters: Arc<StageCounters>,
+    stats: ServeStats,
+    started: Instant,
+}
+
+impl ServiceCore {
+    pub fn new(
+        spec: BackendSpec,
+        results_root: impl AsRef<Path>,
+        cfg: ServiceConfig,
+    ) -> ServiceCore {
+        ServiceCore {
+            spec,
+            results_root: results_root.as_ref().to_path_buf(),
+            cfg,
+            tables: Mutex::new(Vec::new()),
+            counters: Arc::new(StageCounters::default()),
+            stats: ServeStats::default(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    pub fn counters(&self) -> Arc<StageCounters> {
+        self.counters.clone()
+    }
+
+    /// Build this thread's execution state (one runtime + one pipeline
+    /// reporting into the shared counters).
+    pub fn worker(&self) -> Result<ServiceWorker> {
+        let rt = Runtime::from_spec(&self.spec)?;
+        let pipe = Pipeline::with_counters(&self.results_root, self.counters.clone())?;
+        Ok(ServiceWorker { rt, pipe })
+    }
+
+    /// Execute one validated request, writing every response line through
+    /// `emit`. Protocol-level failures (unknown study, bad config,
+    /// infeasible budget, worker panic) are emitted as a terminal `error`
+    /// event and return `Ok` — the connection survives. An `Err` return
+    /// means transport failure and the caller should drop the connection.
+    pub fn execute(
+        &self,
+        w: &ServiceWorker,
+        req: &Request,
+        emit: &mut dyn FnMut(&str) -> Result<()>,
+    ) -> Result<()> {
+        let queue_depth = self.stats.active.fetch_add(1, Ordering::SeqCst) + 1;
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
+        let out = self.run(w, req, queue_depth, started, emit);
+        self.stats.active.fetch_sub(1, Ordering::SeqCst);
+        match out {
+            Ok(()) => Ok(()),
+            Err(ExecError::Protocol(e)) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                emit(&error_line(&e))
+            }
+            Err(ExecError::Transport(e)) => Err(e),
+        }
+    }
+
+    fn run(
+        &self,
+        w: &ServiceWorker,
+        req: &Request,
+        queue_depth: usize,
+        started: Instant,
+        emit: &mut dyn FnMut(&str) -> Result<()>,
+    ) -> std::result::Result<(), ExecError> {
+        match req {
+            Request::Ping => {
+                let m = self.metrics(started, 0, 0, 0, TableResidency::None, queue_depth);
+                emit(&done_line("ping", "{\"ok\":true}", &m)).map_err(ExecError::Transport)
+            }
+            Request::Stats => {
+                let result = self.stats_json();
+                let m = self.metrics(started, 0, 0, 0, TableResidency::None, queue_depth);
+                emit(&done_line("stats", &result, &m)).map_err(ExecError::Transport)
+            }
+            Request::Score { study, configs } => {
+                let (entry, residency) = self.resolve(w, study)?;
+                let packed = pack_all(&entry.table, configs).map_err(ExecError::Protocol)?;
+                let mut scores = Vec::new();
+                entry.table.score_batch_into(&packed, self.cfg.jobs, &mut scores);
+                let shards = packed.len().div_ceil(FitTable::SCORE_CHUNK);
+                let jobs = effective_jobs(self.cfg.jobs, shards);
+                let result = scores_json(&scores);
+                let m =
+                    self.metrics(started, scores.len() as u64, shards, jobs, residency, queue_depth);
+                emit(&done_line("score", &result, &m)).map_err(ExecError::Transport)
+            }
+            Request::Pareto { study, configs, shards, stream } => {
+                let (entry, residency) = self.resolve(w, study)?;
+                let packed = pack_all(&entry.table, configs).map_err(ExecError::Protocol)?;
+                self.run_pareto(&entry, &packed, *shards, *stream, residency, queue_depth, started, emit)
+            }
+            Request::Search { study, mode, shards, stream } => {
+                let (entry, residency) = self.resolve(w, study)?;
+                match mode {
+                    SearchMode::Random { samples, seed } => self.run_search_random(
+                        &entry,
+                        *samples,
+                        *seed,
+                        *shards,
+                        *stream,
+                        residency,
+                        queue_depth,
+                        started,
+                        emit,
+                    ),
+                    SearchMode::Greedy(b) => {
+                        self.run_alloc(&entry, "greedy", *b, residency, queue_depth, started, emit)
+                    }
+                    SearchMode::Exact(b) => {
+                        self.run_alloc(&entry, "exact", *b, residency, queue_depth, started, emit)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Resolve a study spec to a resident table: LRU hit, or build
+    /// through the lease-coordinated pipeline (exactly-once across
+    /// concurrent requests and across processes sharing the store).
+    fn resolve(
+        &self,
+        w: &ServiceWorker,
+        spec: &StudySpec,
+    ) -> std::result::Result<(Arc<StudyTable>, TableResidency), ExecError> {
+        let mm = w.rt.model(&spec.model).map_err(|e| proto(ErrorKind::Study, format!("{e:#}")))?;
+        let digest =
+            sensitivity_key(w.rt.backend_name(), mm, spec.fp_epochs, spec.seed, &spec.trace);
+        if let Some(entry) = self.lookup(digest) {
+            self.stats.table_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((entry, TableResidency::Warm));
+        }
+        self.stats.table_misses.fetch_add(1, Ordering::Relaxed);
+        // Probe *before* computing: afterwards the artifact always exists,
+        // so the probe is what distinguishes cache-hit from full-compute.
+        let published = w
+            .pipe
+            .sensitivity_published(&w.rt, &spec.model, spec.fp_epochs, spec.seed, spec.trace)
+            .map_err(|e| proto(ErrorKind::Internal, format!("{e:#}")))?;
+        let sens = w
+            .pipe
+            .sensitivity(&w.rt, &spec.model, spec.fp_epochs, spec.seed, spec.trace)
+            .map_err(|e| proto(ErrorKind::Study, format!("{e:#}")))?;
+        let table = FitTable::new(&sens.inputs, &mm.block_sizes(), mm.n_unquantized(), &PRECISIONS);
+        let entry = Arc::new(StudyTable {
+            digest,
+            model: spec.model.clone(),
+            table,
+            fp32_bits: mm.n_params as u64 * 32,
+        });
+        let entry = self.insert(entry);
+        let residency =
+            if published { TableResidency::ColdCached } else { TableResidency::ColdComputed };
+        Ok((entry, residency))
+    }
+
+    fn lookup(&self, digest: Digest) -> Option<Arc<StudyTable>> {
+        let mut tables = self.tables.lock().unwrap();
+        let pos = tables.iter().position(|t| t.digest == digest)?;
+        let entry = tables.remove(pos);
+        tables.insert(0, entry.clone());
+        Some(entry)
+    }
+
+    fn insert(&self, entry: Arc<StudyTable>) -> Arc<StudyTable> {
+        let mut tables = self.tables.lock().unwrap();
+        if let Some(pos) = tables.iter().position(|t| t.digest == entry.digest) {
+            // Lost a build race to another request thread: keep the
+            // incumbent so concurrent requests share one allocation.
+            let incumbent = tables.remove(pos);
+            tables.insert(0, incumbent.clone());
+            return incumbent;
+        }
+        tables.insert(0, entry.clone());
+        let cap = self.cfg.table_capacity.max(1);
+        tables.truncate(cap);
+        entry
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_pareto(
+        &self,
+        entry: &StudyTable,
+        packed: &[PackedConfig],
+        shards: Option<usize>,
+        stream: bool,
+        residency: TableResidency,
+        queue_depth: usize,
+        started: Instant,
+        emit: &mut dyn FnMut(&str) -> Result<()>,
+    ) -> std::result::Result<(), ExecError> {
+        let table = &entry.table;
+        let plan = plan_shards(packed.len() as u64, shards, self.cfg.shard_target);
+        let jobs = effective_jobs(self.cfg.jobs, plan.len());
+        let mut acc = ParetoAccumulator::new();
+        let mut scored = 0u64;
+        let mut shards_done = 0usize;
+        let mut transport: Option<anyhow::Error> = None;
+        let pool = run_pool_streaming(
+            plan.len(),
+            self.cfg.jobs,
+            || Ok(Vec::<(f64, u64)>::new()),
+            |scratch, i| {
+                let (lo, hi) = plan[i];
+                table.score_batch_into(&packed[lo as usize..hi as usize], 1, scratch);
+                let mut local = ParetoAccumulator::new();
+                local.absorb_scores(lo as usize, scratch);
+                Ok((hi - lo, local))
+            },
+            |i, (count, local): (u64, ParetoAccumulator)| {
+                scored += count;
+                shards_done += 1;
+                acc.absorb_front(local.front());
+                if stream {
+                    let fj = front_json(acc.front(), &mut |ix| table.unpack(&packed[ix]));
+                    if let Err(e) = emit(&front_line(i, shards_done, plan.len(), &fj)) {
+                        transport = Some(e);
+                        anyhow::bail!("client write failed");
+                    }
+                }
+                Ok(())
+            },
+        );
+        if let Some(e) = transport {
+            return Err(ExecError::Transport(e));
+        }
+        pool.map_err(|e| proto(ErrorKind::Internal, format!("{e:#}")))?;
+        let fj = front_json(acc.front(), &mut |ix| table.unpack(&packed[ix]));
+        let result = format!("{{\"front\":{fj}}}");
+        let m = self.metrics(started, scored, plan.len(), jobs, residency, queue_depth);
+        emit(&done_line("pareto", &result, &m)).map_err(ExecError::Transport)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_search_random(
+        &self,
+        entry: &StudyTable,
+        samples: u64,
+        seed: u64,
+        shards: Option<usize>,
+        stream: bool,
+        residency: TableResidency,
+        queue_depth: usize,
+        started: Instant,
+        emit: &mut dyn FnMut(&str) -> Result<()>,
+    ) -> std::result::Result<(), ExecError> {
+        let table = &entry.table;
+        let n_blocks = table.n_weight_blocks() + table.n_act_blocks();
+        let n_prec = table.precisions().len();
+        let plan = plan_shards(samples, shards, self.cfg.shard_target);
+        let jobs = effective_jobs(self.cfg.jobs, plan.len());
+        let mut acc = ParetoAccumulator::new();
+        let mut scored = 0u64;
+        let mut shards_done = 0usize;
+        let mut transport: Option<anyhow::Error> = None;
+        let pool = run_pool_streaming(
+            plan.len(),
+            self.cfg.jobs,
+            || Ok(Vec::<u8>::new()),
+            |idx, i| {
+                let (lo, hi) = plan[i];
+                let mut local = ParetoAccumulator::new();
+                for k in lo..hi {
+                    sample_indices_into(n_blocks, n_prec, seed, k, idx);
+                    let (fit, size_bits) = table.score_size_indices(idx);
+                    local.push(FrontPoint { index: k as usize, fit, size_bits });
+                }
+                Ok((hi - lo, local))
+            },
+            |i, (count, local): (u64, ParetoAccumulator)| {
+                scored += count;
+                shards_done += 1;
+                acc.absorb_front(local.front());
+                if stream {
+                    let fj =
+                        front_json(acc.front(), &mut |ix| sampled_config(table, seed, ix as u64));
+                    if let Err(e) = emit(&front_line(i, shards_done, plan.len(), &fj)) {
+                        transport = Some(e);
+                        anyhow::bail!("client write failed");
+                    }
+                }
+                Ok(())
+            },
+        );
+        if let Some(e) = transport {
+            return Err(ExecError::Transport(e));
+        }
+        pool.map_err(|e| proto(ErrorKind::Internal, format!("{e:#}")))?;
+        let fj = front_json(acc.front(), &mut |ix| sampled_config(table, seed, ix as u64));
+        let result = format!("{{\"front\":{fj},\"samples\":{samples},\"seed\":{seed}}}");
+        let m = self.metrics(started, scored, plan.len(), jobs, residency, queue_depth);
+        emit(&done_line("search", &result, &m)).map_err(ExecError::Transport)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_alloc(
+        &self,
+        entry: &StudyTable,
+        mode: &str,
+        budget: Budget,
+        residency: TableResidency,
+        queue_depth: usize,
+        started: Instant,
+        emit: &mut dyn FnMut(&str) -> Result<()>,
+    ) -> std::result::Result<(), ExecError> {
+        let budget_bits = match budget {
+            Budget::Bits(b) => b,
+            Budget::Ratio(r) => (entry.fp32_bits as f64 * r) as u64,
+        };
+        let picked = match mode {
+            "greedy" => greedy_allocate_table(&entry.table, budget_bits),
+            _ => exact_allocate_table(&entry.table, budget_bits),
+        };
+        let sc = picked.ok_or_else(|| {
+            proto(
+                ErrorKind::Budget,
+                format!("budget of {budget_bits} bits is below the all-minimum-precision floor"),
+            )
+        })?;
+        let result = format!(
+            "{{\"mode\":\"{mode}\",\"budget_bits\":{budget_bits},\"fit\":{},\"size_bits\":{},\
+             \"config\":{}}}",
+            json_num(sc.fit),
+            sc.size_bits,
+            config_json(&sc.cfg),
+        );
+        let m = self.metrics(started, 0, 0, 1, residency, queue_depth);
+        emit(&done_line("search", &result, &m)).map_err(ExecError::Transport)
+    }
+
+    fn metrics(
+        &self,
+        started: Instant,
+        scored: u64,
+        shards: usize,
+        jobs: usize,
+        table: TableResidency,
+        queue_depth: usize,
+    ) -> RequestMetrics {
+        self.stats.configs_scored.fetch_add(scored, Ordering::Relaxed);
+        RequestMetrics {
+            elapsed_ms: started.elapsed().as_secs_f64() * 1e3,
+            configs_scored: scored,
+            shards,
+            jobs,
+            table,
+            queue_depth,
+        }
+    }
+
+    /// The `stats` result object: lifetime counters, resident tables
+    /// (MRU order), and the shared stage counters that pin exactly-once.
+    pub fn stats_json(&self) -> String {
+        let tables = self.tables.lock().unwrap();
+        let resident: Vec<String> = tables
+            .iter()
+            .map(|t| {
+                format!(
+                    "{{\"model\":\"{}\",\"digest\":\"{}\"}}",
+                    json_escape(&t.model),
+                    &t.digest.hex()[..16]
+                )
+            })
+            .collect();
+        drop(tables);
+        format!(
+            "{{\"uptime_ms\":{},\"requests\":{},\"errors\":{},\"configs_scored\":{},\
+             \"table_hits\":{},\"table_misses\":{},\"active\":{},\"tables\":[{}],\
+             \"stages\":{{\"sensitivity_computed\":{},\"claims_won\":{},\"claim_waits\":{}}}}}",
+            json_num(self.started.elapsed().as_secs_f64() * 1e3),
+            self.stats.requests.load(Ordering::Relaxed),
+            self.stats.errors.load(Ordering::Relaxed),
+            self.stats.configs_scored.load(Ordering::Relaxed),
+            self.stats.table_hits.load(Ordering::Relaxed),
+            self.stats.table_misses.load(Ordering::Relaxed),
+            self.stats.active.load(Ordering::SeqCst),
+            resident.join(","),
+            self.counters.sensitivity_computed(),
+            self.counters.claims_won(),
+            self.counters.claim_waits(),
+        )
+    }
+}
+
+/// Validate client configs against the study's table — block counts and
+/// precision-set membership — then pack. Validation precedes packing
+/// because `PackedConfig::pack` panics on a precision outside the set;
+/// a client mistake must be a typed [`ErrorKind::Config`], not a worker
+/// panic.
+fn pack_all(
+    table: &FitTable,
+    configs: &[BitConfig],
+) -> std::result::Result<Vec<PackedConfig>, ProtocolError> {
+    let (lw, la) = (table.n_weight_blocks(), table.n_act_blocks());
+    configs
+        .iter()
+        .enumerate()
+        .map(|(at, cfg)| {
+            if cfg.bits_w.len() != lw || cfg.bits_a.len() != la {
+                return Err(ProtocolError::new(
+                    ErrorKind::Config,
+                    format!(
+                        "configs[{at}]: study wants {lw} weight + {la} activation blocks, \
+                         got {} + {}",
+                        cfg.bits_w.len(),
+                        cfg.bits_a.len()
+                    ),
+                ));
+            }
+            for &b in cfg.bits_w.iter().chain(cfg.bits_a.iter()) {
+                if !table.precisions().contains(&b) {
+                    return Err(ProtocolError::new(
+                        ErrorKind::Config,
+                        format!(
+                            "configs[{at}]: precision {b} not in the candidate set {:?}",
+                            table.precisions()
+                        ),
+                    ));
+                }
+            }
+            Ok(table.pack(cfg))
+        })
+        .collect()
+}
+
+/// Split `[0, n)` into `k` contiguous ranges: the request's `shards`
+/// when pinned, else `ceil(n / target)`, always clamped to `[1, n]`.
+/// Earlier shards take the remainder (the `run_static` split), so sizes
+/// differ by at most one and concatenating the ranges reproduces
+/// `[0, n)` exactly — the property the sharding determinism contract
+/// rests on.
+pub fn plan_shards(n: u64, requested: Option<usize>, target: u64) -> Vec<(u64, u64)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = match requested {
+        Some(k) => k as u64,
+        None => n.div_ceil(target.max(1)),
+    }
+    .clamp(1, n);
+    let (base, rem) = (n / k, n % k);
+    let mut plan = Vec::with_capacity(k as usize);
+    let mut lo = 0u64;
+    for i in 0..k {
+        let len = base + u64::from(i < rem);
+        plan.push((lo, lo + len));
+        lo += len;
+    }
+    plan
+}
+
+/// RNG stream of the service's index-pure config sampling. Distinct from
+/// `BitConfigSampler`'s stream, so a served search and a sampler-driven
+/// study with the same seed do not draw correlated configs.
+pub const SAMPLE_STREAM: u64 = 0x5ea7_c4f6;
+
+/// Draw sample `index` of a random search into a reused index buffer:
+/// one precision index per block (weights first, then activations — the
+/// `PackedConfig::indices` layout). Pure in `(seed, index)`: any worker,
+/// any shard, any interleaving draws the same config for the same index.
+pub fn sample_indices_into(
+    n_blocks: usize,
+    n_prec: usize,
+    seed: u64,
+    index: u64,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    let mut rng = Pcg32::new(derive_seed(seed, index), SAMPLE_STREAM);
+    for _ in 0..n_blocks {
+        out.push(rng.below(n_prec as u32) as u8);
+    }
+}
+
+/// Re-draw sample `index` as a [`BitConfig`] (front points carry global
+/// sample indices; only the handful on the front ever need expanding).
+pub fn sampled_config(table: &FitTable, seed: u64, index: u64) -> BitConfig {
+    let lw = table.n_weight_blocks();
+    let mut idx = Vec::new();
+    sample_indices_into(lw + table.n_act_blocks(), table.precisions().len(), seed, index, &mut idx);
+    let precs = table.precisions();
+    BitConfig {
+        bits_w: idx[..lw].iter().map(|&i| precs[i as usize]).collect(),
+        bits_a: idx[lw..].iter().map(|&i| precs[i as usize]).collect(),
+    }
+}
+
+/// `{"w":[...],"a":[...]}` — the same shape the request decoder accepts,
+/// so responses round-trip into follow-up `score` requests.
+pub fn config_json(cfg: &BitConfig) -> String {
+    let join = |bits: &[u32]| {
+        bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")
+    };
+    format!("{{\"w\":[{}],\"a\":[{}]}}", join(&cfg.bits_w), join(&cfg.bits_a))
+}
+
+/// Encode a front as a JSON array, expanding each point's config through
+/// `cfg_of` (table unpack for explicit configs, re-sampling for random
+/// search). Fits are finite by the accumulator's invariant, so the
+/// shortest-round-trip `json_num` encoding is bit-faithful.
+pub fn front_json(points: &[FrontPoint], cfg_of: &mut dyn FnMut(usize) -> BitConfig) -> String {
+    let items: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"index\":{},\"fit\":{},\"size_bits\":{},\"config\":{}}}",
+                p.index,
+                json_num(p.fit),
+                p.size_bits,
+                config_json(&cfg_of(p.index))
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
+/// `[[fit, size_bits], ...]` in request order (a NaN fit — possible when
+/// a trace diverged — encodes as `null`, which the CLI renders as NaN).
+fn scores_json(scores: &[(f64, u64)]) -> String {
+    let items: Vec<String> =
+        scores.iter().map(|&(f, s)| format!("[{},{}]", json_num(f), s)).collect();
+    format!("{{\"scores\":[{}]}}", items.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shards_partitions_exactly() {
+        for n in [1u64, 2, 7, 100, 65_536, 65_537, 1_000_000] {
+            for req in [None, Some(1), Some(2), Some(3), Some(16), Some(10_000)] {
+                let plan = plan_shards(n, req, 65_536);
+                assert!(!plan.is_empty());
+                let mut expect = 0u64;
+                for &(lo, hi) in &plan {
+                    assert_eq!(lo, expect, "contiguous");
+                    assert!(hi > lo, "non-empty shard");
+                    expect = hi;
+                }
+                assert_eq!(expect, n, "covers [0, n)");
+                if let Some(k) = req {
+                    assert_eq!(plan.len() as u64, (k as u64).clamp(1, n));
+                }
+                let sizes: Vec<u64> = plan.iter().map(|&(lo, hi)| hi - lo).collect();
+                let (min, max) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "balanced: {sizes:?}");
+            }
+        }
+        assert!(plan_shards(0, None, 65_536).is_empty());
+        assert!(plan_shards(0, Some(8), 65_536).is_empty());
+        // auto shard count tracks the target
+        assert_eq!(plan_shards(65_536, None, 65_536).len(), 1);
+        assert_eq!(plan_shards(65_537, None, 65_536).len(), 2);
+        // degenerate target never divides by zero
+        assert_eq!(plan_shards(10, None, 0).len(), 10);
+    }
+
+    #[test]
+    fn sampling_is_index_pure_and_in_range() {
+        let mut a = Vec::new();
+        let mut b = vec![0xffu8; 64]; // stale contents must not leak
+        for index in [0u64, 1, 17, 1 << 40] {
+            sample_indices_into(12, 4, 7, index, &mut a);
+            sample_indices_into(12, 4, 7, index, &mut b);
+            assert_eq!(a, b, "pure in (seed, index)");
+            assert_eq!(a.len(), 12);
+            assert!(a.iter().all(|&i| i < 4), "indices in range: {a:?}");
+        }
+        // different indices / seeds draw different configs (overwhelmingly)
+        sample_indices_into(12, 4, 7, 0, &mut a);
+        sample_indices_into(12, 4, 7, 1, &mut b);
+        assert_ne!(a, b);
+        sample_indices_into(12, 4, 8, 0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn json_encoders_round_trip() {
+        use crate::runtime::Json;
+        let cfg = BitConfig { bits_w: vec![8, 4], bits_a: vec![3] };
+        let j = Json::parse(&config_json(&cfg)).unwrap();
+        assert_eq!(j.usize_array("w").unwrap(), vec![8, 4]);
+        assert_eq!(j.usize_array("a").unwrap(), vec![3]);
+
+        let pts = [
+            FrontPoint { index: 3, fit: 0.125, size_bits: 100 },
+            FrontPoint { index: 9, fit: 0.0625, size_bits: 200 },
+        ];
+        let fj = front_json(&pts, &mut |_| cfg.clone());
+        let arr = Json::parse(&fj).unwrap();
+        let arr = arr.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].usize_field("index").unwrap(), 3);
+        assert_eq!(arr[0].field("fit").unwrap().as_f64().unwrap(), 0.125);
+        assert_eq!(arr[1].usize_field("size_bits").unwrap(), 200);
+
+        let sj = scores_json(&[(0.5, 10), (f64::NAN, 20)]);
+        let back = Json::parse(&sj).unwrap();
+        let scores = back.arr_field("scores").unwrap();
+        assert_eq!(scores[0].as_arr().unwrap()[0].as_f64().unwrap(), 0.5);
+        assert!(matches!(scores[1].as_arr().unwrap()[0], Json::Null));
+    }
+}

@@ -1,0 +1,41 @@
+//! The config-space search service: `fitq serve`.
+//!
+//! Scoring a quantization config against a built [`FitTable`] is
+//! nanoseconds; building the table — train, trace, gather — is minutes.
+//! The one-shot CLI pays that build on every invocation. This module
+//! amortizes it: a long-running process keeps tables resident in an LRU
+//! keyed by the study's stage digest and serves `score` / `search` /
+//! `pareto` requests over a newline-delimited JSON protocol, sharding
+//! each request across the `coordinator::parallel` pool and streaming
+//! incremental Pareto fronts as shards complete.
+//!
+//! Layering (each layer is independently testable):
+//!
+//! - [`protocol`]: the wire format — strict fail-closed request decoding
+//!   with typed error kinds, and the response-event encoders.
+//! - [`core`]: execution — table residency, shard planning, index-pure
+//!   sampling, the streamed dominance merge, per-request metrics. No I/O;
+//!   responses leave through an `emit` callback.
+//! - [`server`]: the TCP skin — thread-per-connection serving, the
+//!   bounded line reader, and the line client behind `fitq query`.
+//!
+//! `fitq search` routes through the same [`ServiceCore`] with an
+//! in-process worker, so the CLI and the server exercise one tested
+//! path. Everything is std-only: `std::net` + scoped threads, no
+//! external dependencies.
+//!
+//! [`FitTable`]: crate::metrics::FitTable
+
+pub mod core;
+pub mod protocol;
+pub mod server;
+
+pub use self::core::{
+    plan_shards, sample_indices_into, sampled_config, ServiceConfig, ServiceCore, ServiceWorker,
+    StudyTable, SAMPLE_STREAM,
+};
+pub use protocol::{
+    parse_request, Budget, ErrorKind, ProtocolError, Request, RequestMetrics, SearchMode,
+    StudySpec, TableResidency,
+};
+pub use server::{bind, fetch_stats, query, serve_on, MAX_LINE};

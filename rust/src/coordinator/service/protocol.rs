@@ -1,0 +1,617 @@
+//! Wire protocol of the search service: newline-delimited JSON, strict
+//! and fail-closed in the manifest-error style.
+//!
+//! One request per line, one JSON object per request; responses are one
+//! or more event lines (`front` progress events for streamed requests,
+//! then exactly one terminal `done` or `error` event). The decoder
+//! rejects — with a typed, stable error kind — anything it does not
+//! fully understand: unknown methods, unknown or missing fields, wrong
+//! types, out-of-range values. There is no lenient mode and no default
+//! for a malformed field; a request either parses into a [`Request`]
+//! or produces a [`ProtocolError`] naming what was wrong.
+//!
+//! Requests (see DESIGN.md "Search service" for the full grammar):
+//!
+//! ```json
+//! {"method":"ping"}
+//! {"method":"stats"}
+//! {"method":"score","study":{...},"configs":[{"w":[8,4],"a":[3]}]}
+//! {"method":"search","study":{...},"mode":"random","samples":100000,
+//!  "seed":1,"shards":16,"stream":true}
+//! {"method":"search","study":{...},"mode":"greedy","budget_ratio":0.15}
+//! {"method":"pareto","study":{...},"configs":[...],"stream":true}
+//! ```
+//!
+//! A study is named by its inputs — `{"model":M,"fp_epochs":E,"seed":S}`
+//! plus an optional `"trace"` override object — which the service hashes
+//! into the same stage digest the pipeline caches under, so "the same
+//! study" means the same thing to the protocol, the resident-table LRU,
+//! and the artifact store.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::traces::TraceOptions;
+use crate::quant::BitConfig;
+use crate::runtime::Json;
+
+/// Largest integer JSON can carry exactly through the f64-backed parser.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+
+/// Typed, stable failure classes. The `name()` strings are wire format
+/// (clients and the smoke script match on them) — pinned by tests, never
+/// renamed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The line is not a JSON object (bad JSON, wrong top-level type,
+    /// invalid UTF-8, oversized line).
+    Parse,
+    /// The object shape is wrong: missing/unknown fields, wrong types,
+    /// out-of-range values.
+    Schema,
+    /// Unknown `method` value.
+    Method,
+    /// The study could not be resolved (unknown model, pipeline failure).
+    Study,
+    /// A submitted configuration is invalid for the study's table
+    /// (wrong block counts, precision outside the candidate set).
+    Config,
+    /// An infeasible allocation budget (below the all-minimum floor).
+    Budget,
+    /// Server-side failure unrelated to the request contents.
+    Internal,
+}
+
+impl ErrorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorKind::Parse => "parse",
+            ErrorKind::Schema => "schema",
+            ErrorKind::Method => "method",
+            ErrorKind::Study => "study",
+            ErrorKind::Config => "config",
+            ErrorKind::Budget => "budget",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+/// One protocol-level failure: the typed kind plus a human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtocolError {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl ProtocolError {
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> ProtocolError {
+        ProtocolError { kind, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.name(), self.message)
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+fn schema(msg: impl Into<String>) -> ProtocolError {
+    ProtocolError::new(ErrorKind::Schema, msg)
+}
+
+/// The study a request scores against: exactly the inputs of
+/// `stages::sensitivity_key`, so equal specs share one resident table
+/// and one cache artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudySpec {
+    pub model: String,
+    pub fp_epochs: usize,
+    pub seed: u64,
+    pub trace: TraceOptions,
+}
+
+/// Allocation budget of a greedy/exact search: absolute bits or a
+/// fraction of the model's fp32 size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Budget {
+    Bits(u64),
+    Ratio(f64),
+}
+
+/// Search flavor. `Random` samples the config space index-purely (see
+/// `core::sample_indices_into`), which is what makes it shardable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SearchMode {
+    Random { samples: u64, seed: u64 },
+    Greedy(Budget),
+    Exact(Budget),
+}
+
+/// A fully validated request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Stats,
+    Score {
+        study: StudySpec,
+        configs: Vec<BitConfig>,
+    },
+    Search {
+        study: StudySpec,
+        mode: SearchMode,
+        shards: Option<usize>,
+        stream: bool,
+    },
+    Pareto {
+        study: StudySpec,
+        configs: Vec<BitConfig>,
+        shards: Option<usize>,
+        stream: bool,
+    },
+}
+
+impl Request {
+    /// The wire name, echoed in the terminal `done` event.
+    pub fn method(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Stats => "stats",
+            Request::Score { .. } => "score",
+            Request::Search { .. } => "search",
+            Request::Pareto { .. } => "pareto",
+        }
+    }
+}
+
+/// Reject keys outside the allowed set — the fail-closed half of the
+/// manifest-parsing idiom: a typo'd or future field is an error today,
+/// never silently ignored.
+fn check_keys(
+    obj: &BTreeMap<String, Json>,
+    allowed: &[&str],
+    what: &str,
+) -> Result<(), ProtocolError> {
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(schema(format!("unknown {what} field {key:?}")));
+        }
+    }
+    Ok(())
+}
+
+fn u64_field(obj: &Json, key: &str) -> Result<u64, ProtocolError> {
+    let v = obj
+        .field(key)
+        .map_err(schema)?
+        .as_f64()
+        .ok_or_else(|| schema(format!("field {key:?} must be a number")))?;
+    if v < 0.0 || v.fract() != 0.0 || v > MAX_SAFE_INT {
+        return Err(schema(format!("field {key:?} must be an integer in [0, 2^53]")));
+    }
+    Ok(v as u64)
+}
+
+fn opt_u64_field(obj: &Json, key: &str, default: u64) -> Result<u64, ProtocolError> {
+    if obj.get(key).is_none() {
+        return Ok(default);
+    }
+    u64_field(obj, key)
+}
+
+fn bool_field(obj: &Json, key: &str, default: bool) -> Result<bool, ProtocolError> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(schema(format!("field {key:?} must be a boolean"))),
+    }
+}
+
+/// Parse the `"study"` object (strict; `trace` overrides are optional
+/// but individually strict, defaulting field-by-field to
+/// [`TraceOptions::default`]).
+fn parse_study(req: &Json) -> Result<StudySpec, ProtocolError> {
+    let study = req.field("study").map_err(schema)?;
+    let obj = study.as_obj().ok_or_else(|| schema("\"study\" must be an object"))?;
+    check_keys(obj, &["model", "fp_epochs", "seed", "trace"], "study")?;
+    let model = study.str_field("model").map_err(schema)?.to_string();
+    if model.is_empty() {
+        return Err(schema("study model must be non-empty"));
+    }
+    let fp_epochs = study.usize_field("fp_epochs").map_err(schema)?;
+    let seed = u64_field(study, "seed")?;
+    let mut trace = TraceOptions::default();
+    if let Some(t) = study.get("trace") {
+        let tobj = t.as_obj().ok_or_else(|| schema("\"trace\" must be an object"))?;
+        check_keys(tobj, &["batch", "tol", "min_iters", "max_iters", "seed"], "trace")?;
+        if t.get("batch").is_some() {
+            trace.batch = t.usize_field("batch").map_err(schema)?;
+            if trace.batch == 0 {
+                return Err(schema("trace batch must be >= 1"));
+            }
+        }
+        if let Some(tol) = t.get("tol") {
+            trace.tol =
+                tol.as_f64().ok_or_else(|| schema("field \"tol\" must be a number"))?;
+            if !trace.tol.is_finite() || trace.tol < 0.0 {
+                return Err(schema("trace tol must be finite and >= 0"));
+            }
+        }
+        trace.min_iters = opt_u64_field(t, "min_iters", trace.min_iters)?;
+        trace.max_iters = opt_u64_field(t, "max_iters", trace.max_iters)?;
+        if trace.min_iters == 0 || trace.max_iters < trace.min_iters {
+            return Err(schema("trace iters must satisfy 1 <= min_iters <= max_iters"));
+        }
+        trace.seed = opt_u64_field(t, "seed", trace.seed)?;
+    }
+    Ok(StudySpec { model, fp_epochs, seed, trace })
+}
+
+/// Parse the `"configs"` array: each element a strict
+/// `{"w":[bits...],"a":[bits...]}` object. Precision *values* are only
+/// type-checked here (u32 range); membership in the study's candidate
+/// set is an execution-time [`ErrorKind::Config`] error, because it
+/// depends on the table.
+fn parse_configs(req: &Json) -> Result<Vec<BitConfig>, ProtocolError> {
+    let arr = req.arr_field("configs").map_err(schema)?;
+    let bits_list = |cfg: &Json, key: &str, at: usize| -> Result<Vec<u32>, ProtocolError> {
+        cfg.arr_field(key)
+            .map_err(schema)?
+            .iter()
+            .map(|v| {
+                let n = v
+                    .as_f64()
+                    .ok_or_else(|| schema(format!("configs[{at}].{key}: not a number")))?;
+                if n < 1.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+                    return Err(schema(format!(
+                        "configs[{at}].{key}: precisions must be integers >= 1"
+                    )));
+                }
+                Ok(n as u32)
+            })
+            .collect()
+    };
+    arr.iter()
+        .enumerate()
+        .map(|(at, cfg)| {
+            let obj = cfg
+                .as_obj()
+                .ok_or_else(|| schema(format!("configs[{at}] must be an object")))?;
+            check_keys(obj, &["w", "a"], "config")?;
+            Ok(BitConfig { bits_w: bits_list(cfg, "w", at)?, bits_a: bits_list(cfg, "a", at)? })
+        })
+        .collect()
+}
+
+fn parse_shards(req: &Json) -> Result<Option<usize>, ProtocolError> {
+    match req.get("shards") {
+        None => Ok(None),
+        Some(_) => {
+            let n = req.usize_field("shards").map_err(schema)?;
+            if n == 0 {
+                return Err(schema("shards must be >= 1"));
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+/// Exactly one of `budget_bits` / `budget_ratio`, validated.
+fn parse_budget(req: &Json) -> Result<Budget, ProtocolError> {
+    match (req.get("budget_bits"), req.get("budget_ratio")) {
+        (Some(_), Some(_)) => {
+            Err(schema("give exactly one of budget_bits / budget_ratio, not both"))
+        }
+        (Some(_), None) => Ok(Budget::Bits(u64_field(req, "budget_bits")?)),
+        (None, Some(r)) => {
+            let ratio = r
+                .as_f64()
+                .ok_or_else(|| schema("field \"budget_ratio\" must be a number"))?;
+            if !ratio.is_finite() || ratio <= 0.0 {
+                return Err(schema("budget_ratio must be finite and > 0"));
+            }
+            Ok(Budget::Ratio(ratio))
+        }
+        (None, None) => Err(schema("greedy/exact search needs budget_bits or budget_ratio")),
+    }
+}
+
+/// Decode one request line. Every failure is a typed [`ProtocolError`];
+/// nothing is defaulted, coerced, or skipped.
+pub fn parse_request(line: &str) -> Result<Request, ProtocolError> {
+    let json =
+        Json::parse(line).map_err(|e| ProtocolError::new(ErrorKind::Parse, e))?;
+    let obj = json
+        .as_obj()
+        .ok_or_else(|| ProtocolError::new(ErrorKind::Parse, "request must be a JSON object"))?;
+    let method = json.str_field("method").map_err(schema)?;
+    match method {
+        "ping" | "stats" => {
+            check_keys(obj, &["method"], "request")?;
+            Ok(if method == "ping" { Request::Ping } else { Request::Stats })
+        }
+        "score" => {
+            check_keys(obj, &["method", "study", "configs"], "request")?;
+            Ok(Request::Score { study: parse_study(&json)?, configs: parse_configs(&json)? })
+        }
+        "pareto" => {
+            check_keys(obj, &["method", "study", "configs", "shards", "stream"], "request")?;
+            Ok(Request::Pareto {
+                study: parse_study(&json)?,
+                configs: parse_configs(&json)?,
+                shards: parse_shards(&json)?,
+                stream: bool_field(&json, "stream", false)?,
+            })
+        }
+        "search" => {
+            check_keys(
+                obj,
+                &[
+                    "method",
+                    "study",
+                    "mode",
+                    "samples",
+                    "seed",
+                    "shards",
+                    "stream",
+                    "budget_bits",
+                    "budget_ratio",
+                ],
+                "request",
+            )?;
+            let study = parse_study(&json)?;
+            let mode = json.str_field("mode").map_err(schema)?;
+            match mode {
+                "random" => {
+                    for key in ["budget_bits", "budget_ratio"] {
+                        if obj.contains_key(key) {
+                            return Err(schema(format!("random search does not take {key:?}")));
+                        }
+                    }
+                    let samples = u64_field(&json, "samples")?;
+                    if samples == 0 {
+                        return Err(schema("samples must be >= 1"));
+                    }
+                    Ok(Request::Search {
+                        study,
+                        mode: SearchMode::Random { samples, seed: opt_u64_field(&json, "seed", 0)? },
+                        shards: parse_shards(&json)?,
+                        stream: bool_field(&json, "stream", false)?,
+                    })
+                }
+                "greedy" | "exact" => {
+                    for key in ["samples", "seed", "shards", "stream"] {
+                        if obj.contains_key(key) {
+                            return Err(schema(format!(
+                                "{mode} search does not take {key:?} (nothing to shard)"
+                            )));
+                        }
+                    }
+                    let budget = parse_budget(&json)?;
+                    let mode = if mode == "greedy" {
+                        SearchMode::Greedy(budget)
+                    } else {
+                        SearchMode::Exact(budget)
+                    };
+                    Ok(Request::Search { study, mode, shards: None, stream: false })
+                }
+                other => Err(schema(format!(
+                    "unknown search mode {other:?} (want random, greedy or exact)"
+                ))),
+            }
+        }
+        other => Err(ProtocolError::new(
+            ErrorKind::Method,
+            format!("unknown method {other:?} (want ping, stats, score, search or pareto)"),
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response encoding. Hand-rolled like the bench JSON writers: the event
+// vocabulary is tiny and the hot path (front points) wants zero
+// intermediate structure.
+
+/// Escape a string for a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite f64 as a JSON number (Rust's shortest round-trip `Display`,
+/// so equal bit patterns always serialize identically); NaN/±∞ — which
+/// JSON cannot carry — as `null`. Front points never contain either
+/// (the sweep excludes them), so `null` only ever appears in metrics.
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// How the request's study table was obtained — the residency half of
+/// the metrics trailer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableResidency {
+    /// LRU hit: the table was already resident.
+    Warm,
+    /// Built this request, sensitivity decoded from a published artifact.
+    ColdCached,
+    /// Built this request, sensitivity computed through the full
+    /// train→trace pipeline (or loaded from a peer mid-lease).
+    ColdComputed,
+    /// No table involved (ping/stats).
+    None,
+}
+
+impl TableResidency {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TableResidency::Warm => "warm",
+            TableResidency::ColdCached => "cold+cache",
+            TableResidency::ColdComputed => "cold+compute",
+            TableResidency::None => "none",
+        }
+    }
+}
+
+/// Per-request measurements returned in the terminal event's `metrics`
+/// trailer. Wall-clock fields vary run to run; everything under
+/// `result` stays bit-identical — tests compare the line up to
+/// `,"metrics":`.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub elapsed_ms: f64,
+    pub configs_scored: u64,
+    pub shards: usize,
+    pub jobs: usize,
+    pub table: TableResidency,
+    /// Requests in flight (this one included) when this one started.
+    pub queue_depth: usize,
+}
+
+impl RequestMetrics {
+    pub fn to_json(&self) -> String {
+        let per_sec = if self.configs_scored > 0 && self.elapsed_ms > 0.0 {
+            json_num(self.configs_scored as f64 / (self.elapsed_ms / 1e3))
+        } else {
+            "null".to_string()
+        };
+        format!(
+            "{{\"elapsed_ms\":{},\"configs_scored\":{},\"configs_per_sec\":{},\
+             \"shards\":{},\"jobs\":{},\"table\":\"{}\",\"queue_depth\":{}}}",
+            json_num(self.elapsed_ms),
+            self.configs_scored,
+            per_sec,
+            self.shards,
+            self.jobs,
+            self.table.name(),
+            self.queue_depth,
+        )
+    }
+}
+
+/// Terminal success event. `result_json` must already be valid JSON.
+pub fn done_line(method: &str, result_json: &str, metrics: &RequestMetrics) -> String {
+    format!(
+        "{{\"event\":\"done\",\"method\":\"{method}\",\"result\":{result_json},\
+         \"metrics\":{}}}",
+        metrics.to_json()
+    )
+}
+
+/// Streamed front-progress event: the accumulated front after folding
+/// `shards_done` of `shards` shards (`shard` being the one that just
+/// landed). Emission order is completion order — nondeterministic under
+/// `jobs > 1` — but the *final* front, and therefore the `done` event,
+/// is shard- and order-invariant.
+pub fn front_line(shard: usize, shards_done: usize, shards: usize, front_json: &str) -> String {
+    format!(
+        "{{\"event\":\"front\",\"shard\":{shard},\"shards_done\":{shards_done},\
+         \"shards\":{shards},\"front\":{front_json}}}"
+    )
+}
+
+/// Terminal failure event.
+pub fn error_line(e: &ProtocolError) -> String {
+    format!(
+        "{{\"event\":\"error\",\"kind\":\"{}\",\"message\":\"{}\"}}",
+        e.kind.name(),
+        json_escape(&e.message)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kind_of(line: &str) -> ErrorKind {
+        parse_request(line).unwrap_err().kind
+    }
+
+    #[test]
+    fn minimal_requests_parse() {
+        assert_eq!(parse_request(r#"{"method":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(parse_request(r#"{"method":"stats"}"#).unwrap(), Request::Stats);
+        let r = parse_request(
+            r#"{"method":"search","study":{"model":"cnn_mnist","fp_epochs":1,"seed":0},
+               "mode":"random","samples":100}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Search {
+                study,
+                mode: SearchMode::Random { samples: 100, seed: 0 },
+                shards: None,
+                stream: false,
+            } => {
+                assert_eq!(study.model, "cnn_mnist");
+                assert_eq!(study.trace, TraceOptions::default());
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_kinds_are_typed_and_pinned() {
+        assert_eq!(kind_of("not json"), ErrorKind::Parse);
+        assert_eq!(kind_of("[1,2]"), ErrorKind::Parse);
+        assert_eq!(kind_of(r#"{"method":"frobnicate"}"#), ErrorKind::Method);
+        assert_eq!(kind_of(r#"{"method":"ping","extra":1}"#), ErrorKind::Schema);
+        assert_eq!(kind_of(r#"{"method":"score"}"#), ErrorKind::Schema);
+        // the wire names are protocol surface
+        for (kind, name) in [
+            (ErrorKind::Parse, "parse"),
+            (ErrorKind::Schema, "schema"),
+            (ErrorKind::Method, "method"),
+            (ErrorKind::Study, "study"),
+            (ErrorKind::Config, "config"),
+            (ErrorKind::Budget, "budget"),
+            (ErrorKind::Internal, "internal"),
+        ] {
+            assert_eq!(kind.name(), name);
+        }
+    }
+
+    #[test]
+    fn encoding_helpers_are_json_safe() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_num(1.0), "1");
+        assert_eq!(json_num(0.1), "0.1");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        let m = RequestMetrics {
+            elapsed_ms: 2.0,
+            configs_scored: 1000,
+            shards: 4,
+            jobs: 2,
+            table: TableResidency::Warm,
+            queue_depth: 1,
+        };
+        let line = done_line("search", r#"{"x":1}"#, &m);
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.str_field("event").unwrap(), "done");
+        assert_eq!(back.field("metrics").unwrap().usize_field("configs_scored").unwrap(), 1000);
+        assert_eq!(
+            back.field("metrics").unwrap().str_field("table").unwrap(),
+            "warm"
+        );
+        let err = error_line(&ProtocolError::new(ErrorKind::Budget, "too \"low\""));
+        let back = Json::parse(&err).unwrap();
+        assert_eq!(back.str_field("kind").unwrap(), "budget");
+        assert_eq!(back.str_field("message").unwrap(), "too \"low\"");
+    }
+}

@@ -1,0 +1,236 @@
+//! The TCP face of the search service: thread-per-connection serving
+//! over `std::net`, plus the line-oriented client used by `fitq query`
+//! and the smoke scripts.
+//!
+//! Framing is one JSON object per `\n`-terminated line, bounded at
+//! [`MAX_LINE`] bytes. Blank lines are skipped (harmless shell framing);
+//! everything else either parses or draws a typed error event. The
+//! fail-closed split on errors:
+//!
+//! - **`parse`-kind failures close the connection** — invalid JSON,
+//!   invalid UTF-8, or an oversized line means the byte stream can no
+//!   longer be trusted to be line-framed, so the server answers once and
+//!   hangs up.
+//! - **Every other error kind keeps the connection open** — the line was
+//!   well-framed JSON, the client merely asked for something invalid
+//!   (unknown method, bad schema, unknown study, infeasible budget), and
+//!   can try again on the same connection.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::core::ServiceCore;
+use super::protocol::{error_line, parse_request, ErrorKind, ProtocolError};
+use crate::runtime::Json;
+
+/// Request-line size bound. Generous — a million explicit configs ships
+/// comfortably — but finite, so a stray binary stream can't balloon the
+/// server's line buffer.
+pub const MAX_LINE: usize = 8 << 20;
+
+/// Bind the serving socket. `port` 0 asks the OS for an ephemeral port
+/// (the smoke script reads the resolved address from the `listening on`
+/// line `fitq serve` prints).
+pub fn bind(host: &str, port: u16) -> Result<TcpListener> {
+    TcpListener::bind((host, port)).with_context(|| format!("binding {host}:{port}"))
+}
+
+/// Accept loop: one detached serving thread per connection, each with
+/// its own [`ServiceWorker`](super::core::ServiceWorker) over the shared
+/// core. Blocks for the life of the listener.
+pub fn serve_on(core: Arc<ServiceCore>, listener: TcpListener) -> Result<()> {
+    for stream in listener.incoming() {
+        match stream {
+            Ok(stream) => {
+                let core = core.clone();
+                std::thread::Builder::new()
+                    .name("fitq-serve".into())
+                    .spawn(move || handle_connection(&core, stream))
+                    .context("spawning connection thread")?;
+            }
+            Err(e) => eprintln!("[serve] accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Read one `\n`-terminated line into `buf` (cleared first), reading at
+/// most `MAX_LINE + 1` bytes so an unframed stream cannot grow the
+/// buffer without bound. Returns the bytes read (0 = EOF); a result
+/// longer than [`MAX_LINE`] means the bound was hit.
+fn read_bounded_line(r: &mut impl BufRead, buf: &mut Vec<u8>) -> std::io::Result<usize> {
+    buf.clear();
+    r.by_ref().take(MAX_LINE as u64 + 1).read_until(b'\n', buf)
+}
+
+fn handle_connection(core: &ServiceCore, stream: TcpStream) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".to_string());
+    let reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("[serve] {peer}: socket clone failed: {e}");
+            return;
+        }
+    };
+    let mut reader = BufReader::new(reader);
+    let mut writer = BufWriter::new(stream);
+    let mut emit = |line: &str| -> Result<()> {
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        // flush per event: streamed fronts must reach the client as the
+        // shards land, not when the buffer happens to fill
+        writer.flush()?;
+        Ok(())
+    };
+    let worker = match core.worker() {
+        Ok(w) => w,
+        Err(e) => {
+            let err =
+                ProtocolError::new(ErrorKind::Internal, format!("worker init failed: {e:#}"));
+            let _ = emit(&error_line(&err));
+            eprintln!("[serve] {peer}: worker init failed: {e:#}");
+            return;
+        }
+    };
+    let mut buf = Vec::new();
+    loop {
+        let n = match read_bounded_line(&mut reader, &mut buf) {
+            Ok(0) => return, // client closed cleanly
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("[serve] {peer}: read failed: {e}");
+                return;
+            }
+        };
+        if n > MAX_LINE {
+            let err = ProtocolError::new(
+                ErrorKind::Parse,
+                format!("request line exceeds {MAX_LINE} bytes"),
+            );
+            let _ = emit(&error_line(&err));
+            return;
+        }
+        let line = match std::str::from_utf8(&buf) {
+            Ok(s) => s.trim_end_matches(['\n', '\r']),
+            Err(_) => {
+                let err = ProtocolError::new(ErrorKind::Parse, "request line is not UTF-8");
+                let _ = emit(&error_line(&err));
+                return;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match parse_request(line) {
+            Ok(req) => req,
+            Err(e) => {
+                if emit(&error_line(&e)).is_err() || e.kind == ErrorKind::Parse {
+                    return;
+                }
+                continue;
+            }
+        };
+        if let Err(e) = core.execute(&worker, &req, &mut emit) {
+            // transport failure: the client is gone, nothing left to say
+            eprintln!("[serve] {peer}: write failed mid-request: {e:#}");
+            return;
+        }
+    }
+}
+
+/// The `"event"` discriminator of a response line, if it parses.
+fn event_of(line: &str) -> Option<String> {
+    let json = Json::parse(line).ok()?;
+    Some(json.str_field("event").ok()?.to_string())
+}
+
+/// Line-oriented client: send `requests` down one connection, copy every
+/// response line to `out`, and return whether any terminal event was an
+/// error — `fitq query`'s exit status, and what lets `check_serve.sh`
+/// assert nonzero-exit on a malformed request. Errors out if the server
+/// hangs up before answering every request (unless the hangup followed
+/// an error event, which is the documented close-on-parse-error path).
+pub fn query(addr: &str, requests: &[String], out: &mut dyn Write) -> Result<bool> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut writer = BufWriter::new(stream.try_clone().context("cloning socket")?);
+    for req in requests {
+        writer.write_all(req.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    writer.flush()?;
+    // half-close: the server sees EOF once it has drained our requests,
+    // so its connection loop (and thus our response stream) terminates
+    let _ = writer.get_ref().shutdown(std::net::Shutdown::Write);
+    let reader = BufReader::new(stream);
+    let mut any_error = false;
+    let mut terminals = 0usize;
+    for line in reader.lines() {
+        let line = line.context("reading response")?;
+        writeln!(out, "{line}")?;
+        match event_of(&line).as_deref() {
+            Some("done") => terminals += 1,
+            Some("error") => {
+                terminals += 1;
+                any_error = true;
+            }
+            _ => {}
+        }
+        if terminals == requests.len() {
+            break;
+        }
+    }
+    if terminals < requests.len() && !any_error {
+        bail!("server closed after {terminals}/{} responses", requests.len());
+    }
+    Ok(any_error)
+}
+
+/// Fetch one `stats` snapshot and return the terminal line (the caller
+/// pretty-prints the `result` object).
+pub fn fetch_stats(addr: &str) -> Result<String> {
+    let mut out = Vec::new();
+    let any_error = query(addr, &["{\"method\":\"stats\"}".to_string()], &mut out)?;
+    let text = String::from_utf8(out).context("stats response is not UTF-8")?;
+    let line = text.lines().last().unwrap_or("").to_string();
+    if any_error {
+        bail!("stats request failed: {line}");
+    }
+    Ok(line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn bounded_reader_frames_and_bounds() {
+        let mut r = Cursor::new(b"abc\ndef".to_vec());
+        let mut buf = Vec::new();
+        assert_eq!(read_bounded_line(&mut r, &mut buf).unwrap(), 4);
+        assert_eq!(buf, b"abc\n");
+        assert_eq!(read_bounded_line(&mut r, &mut buf).unwrap(), 3);
+        assert_eq!(buf, b"def"); // EOF without newline still yields the tail
+        assert_eq!(read_bounded_line(&mut r, &mut buf).unwrap(), 0);
+
+        // an unframed blob stops at the bound instead of buffering it all
+        let blob = vec![b'x'; MAX_LINE + 100];
+        let mut r = Cursor::new(blob);
+        let n = read_bounded_line(&mut r, &mut buf).unwrap();
+        assert_eq!(n, MAX_LINE + 1, "bound hit is detectable");
+    }
+
+    #[test]
+    fn event_discriminator_reads_response_lines() {
+        assert_eq!(event_of(r#"{"event":"done","method":"ping"}"#).as_deref(), Some("done"));
+        assert_eq!(event_of(r#"{"event":"front","shard":0}"#).as_deref(), Some("front"));
+        assert_eq!(event_of("not json"), None);
+        assert_eq!(event_of(r#"{"no_event":1}"#), None);
+    }
+}

@@ -22,19 +22,22 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use fitq::coordinator::pipeline::{fault, registry, stages, ArtifactCache, ExpOptions, Pipeline};
+use fitq::coordinator::service::{
+    bind, fetch_stats, serve_on, Budget, Request, SearchMode, ServiceConfig, ServiceCore,
+    ServiceWorker, StudySpec,
+};
 use fitq::coordinator::{
-    dataset_for, exact_allocate_table, gather, greedy_allocate_table, pareto_front_scores,
-    Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
+    dataset_for, Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
 };
 use fitq::data::EvalSet;
-use fitq::metrics::{FitTable, PackedConfig};
 use fitq::native::{simd, tune};
-use fitq::quant::{model_bits, BitConfig, BitConfigSampler, PRECISIONS};
-use fitq::runtime::Runtime;
+use fitq::quant::BitConfig;
+use fitq::runtime::{Json, Runtime};
 
 /// Tiny positional+flag argument parser: `cmd [positionals] --key value`.
 struct Args {
@@ -84,6 +87,18 @@ impl Args {
     fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
+
+    /// Flags take values in this parser, so booleans are spelled
+    /// `--stream true` / `--stream false` (a bare `--stream` would eat
+    /// the next argument as its value).
+    fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(other) => bail!("--{key} must be true or false, got {other:?}"),
+        }
+    }
 }
 
 const USAGE: &str = "fitq <command>\n\
@@ -91,6 +106,23 @@ const USAGE: &str = "fitq <command>\n\
   train      --model M [--epochs N]      train FP model, report accuracy\n\
   traces     --model M [--estimator ef|hessian] [--tol T] [--batch B]\n\
   search     --model M [--budget-ratio R] [--samples N] [--jobs N]\n\
+             [--seed N] [--shards K] [--stream true|false] [--fp-epochs E]\n\
+     random-sample + greedy + exact search over one FIT table. Routes\n\
+     through the serve core: the sensitivity stage is pipeline-cached,\n\
+     scoring is sharded, and the front is bit-identical at every\n\
+     --jobs/--shards setting; --stream true prints front updates as\n\
+     shards land.\n\
+  serve      [--host H] [--port P] [--jobs N] [--tables N]\n\
+             [--shard-target N] [--models zoo1.json,...] [--results DIR]\n\
+     long-running search service over a line-JSON protocol (DESIGN.md\n\
+     \"Search service\"): resident FIT tables, sharded scoring, streamed\n\
+     Pareto fronts. --port 0 picks an ephemeral port; the resolved\n\
+     address is printed as `listening on HOST:PORT`.\n\
+     `fitq serve --stats HOST:PORT` prints a running server's counters.\n\
+  query      --connect HOST:PORT ['{\"method\":\"ping\"}' ...]\n\
+     send request lines (arguments, or stdin when none) to a running\n\
+     server and print the raw response lines; exits nonzero if any\n\
+     response is an error event.\n\
   experiment <name>|all [--seed N] [--jobs N] [flags]\n\
      run `fitq experiment` with no name for the per-experiment flag list.\n\
      Every experiment takes --seed/--jobs; --jobs N fans independent work\n\
@@ -148,6 +180,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "traces" => cmd_traces(&args),
         "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         "experiment" => cmd_experiment(&args),
         "zoo-check" => cmd_zoo_check(&args),
         "cache" => cmd_cache(&args),
@@ -394,87 +428,283 @@ fn cmd_traces(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fitq search`: the one-shot CLI over the serve core — same table
+/// residency, sharding and dominance merge as `fitq serve`, with an
+/// in-process worker. The sensitivity stage flows through the pipeline
+/// cache, so a re-run (or a later `fitq serve`) reuses it.
 fn cmd_search(args: &Args) -> Result<()> {
     let mut zoo = Vec::new();
     let model = resolve_model(args.str_or("model", "cnn_cifar"), &mut zoo)?;
     let seed = args.usize_or("seed", 0)? as u64;
     let ratio = args.f64_or("budget-ratio", 0.15)?;
-    let samples = args.usize_or("samples", 100_000)?;
+    let samples = args.usize_or("samples", 100_000)? as u64;
     let jobs = args.usize_or("jobs", 0)?;
+    let fp_epochs = args.usize_or("fp-epochs", 30)?;
+    let stream = args.bool_or("stream", false)?;
+    let shards = match args.get("shards") {
+        None => None,
+        Some(_) => {
+            let k = args.usize_or("shards", 1)?;
+            if k == 0 {
+                bail!("--shards must be >= 1");
+            }
+            Some(k)
+        }
+    };
+    if samples == 0 {
+        bail!("--samples must be >= 1");
+    }
     let rt = runtime_for(args, zoo)?;
-    let mm = rt.model(&model)?.clone();
-    let st = fitq::coordinator::experiments::get_trained(&rt, &model, 30, seed)?;
-    let ds = dataset_for(&rt, &model, seed ^ 0xda7a)?;
-    let trainer = Trainer::new(&rt, ds.as_ref());
-    let ev = EvalSet::materialize(ds.as_ref(), 256);
-    let sens = gather(&trainer, ds.as_ref(), &st, &ev, TraceOptions::default())?;
-
-    let sizes = mm.block_sizes();
-    let n_unq = mm.n_unquantized();
-    let fp32_bits = (mm.n_params as u64) * 32;
-    let budget = (fp32_bits as f64 * ratio) as u64;
-
-    // one scoring table for everything below: the Pareto sweep, the
-    // greedy walk and the exact allocator all gather from it
-    let table = FitTable::new(&sens.inputs, &sizes, n_unq, &PRECISIONS);
-
-    // random sample -> batch scores -> Pareto front
-    let mut sampler =
-        BitConfigSampler::new(mm.n_weight_blocks(), mm.n_act_blocks(), &PRECISIONS, seed);
-    let configs = sampler.take(samples);
-    let packed: Vec<PackedConfig> = configs.iter().map(|c| table.pack(c)).collect();
-    let t0 = std::time::Instant::now();
-    let scores = table.score_batch(&packed, jobs);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "scored {} configs in {:.1} ms ({:.3e} configs/s)",
-        scores.len(),
-        dt * 1e3,
-        scores.len() as f64 / dt.max(1e-9)
+    let pipe = Pipeline::from_env()?;
+    let fp32_bits = rt.model(&model)?.n_params as u64 * 32;
+    let (lw, la) = (rt.model(&model)?.n_weight_blocks(), rt.model(&model)?.n_act_blocks());
+    let core = ServiceCore::new(
+        rt.spec(),
+        pipe.results_root().to_path_buf(),
+        ServiceConfig { jobs, ..ServiceConfig::default() },
     );
-    let front = pareto_front_scores(&scores);
+    let worker = ServiceWorker::new(rt, pipe);
+    let study = StudySpec { model, fp_epochs, seed, trace: TraceOptions::default() };
+
+    run_service_request(
+        &core,
+        &worker,
+        &Request::Search {
+            study: study.clone(),
+            mode: SearchMode::Random { samples, seed },
+            shards,
+            stream,
+        },
+        fp32_bits,
+    )?;
+    for mode in [
+        SearchMode::Greedy(Budget::Ratio(ratio)),
+        SearchMode::Exact(Budget::Ratio(ratio)),
+    ] {
+        run_service_request(
+            &core,
+            &worker,
+            &Request::Search { study: study.clone(), mode, shards: None, stream: false },
+            fp32_bits,
+        )?;
+    }
+    println!("reference uniform-4bit:");
+    run_service_request(
+        &core,
+        &worker,
+        &Request::Score { study, configs: vec![BitConfig::uniform(lw, la, 4)] },
+        fp32_bits,
+    )
+}
+
+/// Execute one request against an in-process core, rendering the JSON
+/// event lines human-readably. Error events of kind `budget` print and
+/// continue (an infeasible budget is an answer, not a failure); every
+/// other error kind fails the command.
+fn run_service_request(
+    core: &ServiceCore,
+    worker: &ServiceWorker,
+    req: &Request,
+    fp32_bits: u64,
+) -> Result<()> {
+    let mut err: Option<(String, String)> = None;
+    let mut emit = |line: &str| render_service_event(line, fp32_bits, &mut err);
+    core.execute(worker, req, &mut emit)?;
+    if let Some((kind, message)) = err {
+        if kind == "budget" {
+            println!("{message}");
+        } else {
+            bail!("{kind}: {message}");
+        }
+    }
+    Ok(())
+}
+
+fn config_label(cfg: &Json) -> Result<String> {
+    let bits = |key: &str| -> Result<Vec<u32>> {
+        Ok(cfg.usize_array(key).map_err(|e| anyhow!(e))?.into_iter().map(|b| b as u32).collect())
+    };
+    Ok(BitConfig { bits_w: bits("w")?, bits_a: bits("a")? }.label())
+}
+
+fn render_front(front: &[Json], fp32_bits: u64) -> Result<()> {
     println!("Pareto front has {} points:", front.len());
-    for &i in front.iter().take(10) {
-        let (fit, size_bits) = scores[i];
+    for p in front.iter().take(10) {
+        let fit = p.field("fit").map_err(|e| anyhow!(e))?.as_f64().unwrap_or(f64::NAN);
+        let size_bits = p.usize_field("size_bits").map_err(|e| anyhow!(e))? as u64;
         println!(
             "  size {:>8} bits ({:.2}x comp)  FIT {:.5}  {}",
             size_bits,
             fp32_bits as f64 / size_bits as f64,
             fit,
-            configs[i].label()
+            config_label(p.field("config").map_err(|e| anyhow!(e))?)?
         );
     }
+    Ok(())
+}
 
-    // greedy allocation under the budget
-    match greedy_allocate_table(&table, budget) {
-        Some(g) => println!(
-            "greedy @ {:.0}% of fp32 ({budget} bits): size {} FIT {:.5} {}",
-            100.0 * ratio,
-            g.size_bits,
-            g.fit,
-            g.cfg.label()
-        ),
-        None => println!("budget {budget} bits is below the all-minimum-precision floor"),
+/// One service event line -> CLI output. Protocol errors land in `err`
+/// for the caller to classify; only transport-level problems (a line
+/// that is not valid event JSON) return `Err`.
+fn render_service_event(
+    line: &str,
+    fp32_bits: u64,
+    err: &mut Option<(String, String)>,
+) -> Result<()> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad service event line: {e}"))?;
+    match j.str_field("event").map_err(|e| anyhow!(e))? {
+        "error" => {
+            *err = Some((
+                j.str_field("kind").map_err(|e| anyhow!(e))?.to_string(),
+                j.str_field("message").map_err(|e| anyhow!(e))?.to_string(),
+            ));
+            Ok(())
+        }
+        "front" => {
+            let front = j.arr_field("front").map_err(|e| anyhow!(e))?;
+            println!(
+                "  [front] {}/{} shards: {} points",
+                j.usize_field("shards_done").map_err(|e| anyhow!(e))?,
+                j.usize_field("shards").map_err(|e| anyhow!(e))?,
+                front.len()
+            );
+            Ok(())
+        }
+        "done" => {
+            let result = j.field("result").map_err(|e| anyhow!(e))?;
+            let metrics = j.field("metrics").map_err(|e| anyhow!(e))?;
+            if let Ok(front) = result.arr_field("front") {
+                render_front(front, fp32_bits)?;
+            }
+            if let Ok(mode) = result.str_field("mode") {
+                println!(
+                    "{mode} @ {} bits budget: size {} FIT {:.5} {}",
+                    result.usize_field("budget_bits").map_err(|e| anyhow!(e))?,
+                    result.usize_field("size_bits").map_err(|e| anyhow!(e))?,
+                    result.field("fit").map_err(|e| anyhow!(e))?.as_f64().unwrap_or(f64::NAN),
+                    config_label(result.field("config").map_err(|e| anyhow!(e))?)?
+                );
+            }
+            if let Ok(scores) = result.arr_field("scores") {
+                for (i, s) in scores.iter().enumerate() {
+                    let pair = s.as_arr().ok_or_else(|| anyhow!("bad score entry"))?;
+                    let fit = pair[0].as_f64().unwrap_or(f64::NAN);
+                    let size = pair[1].as_f64().unwrap_or(f64::NAN) as u64;
+                    println!(
+                        "  config {i}: size {size} bits ({:.2}x comp)  FIT {fit:.5}",
+                        fp32_bits as f64 / size as f64
+                    );
+                }
+            }
+            let scored = metrics.usize_field("configs_scored").map_err(|e| anyhow!(e))?;
+            if scored > 0 {
+                let per_sec = metrics
+                    .field("configs_per_sec")
+                    .ok()
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::NAN);
+                println!(
+                    "scored {scored} configs in {:.1} ms ({per_sec:.3e} configs/s, {} shards, \
+                     {} jobs, table {})",
+                    metrics.field("elapsed_ms").map_err(|e| anyhow!(e))?.as_f64().unwrap_or(0.0),
+                    metrics.usize_field("shards").map_err(|e| anyhow!(e))?,
+                    metrics.usize_field("jobs").map_err(|e| anyhow!(e))?,
+                    metrics.str_field("table").map_err(|e| anyhow!(e))?
+                );
+            }
+            Ok(())
+        }
+        other => bail!("unknown service event {other:?}"),
     }
-    match exact_allocate_table(&table, budget) {
-        Some(e) => println!(
-            "exact  @ {:.0}% of fp32: size {} FIT {:.5} {}",
-            100.0 * ratio,
-            e.size_bits,
-            e.fit,
-            e.cfg.label()
-        ),
-        None => println!(
-            "exact: no allocation found (budget below the floor, or a \
-             non-finite sensitivity input poisoned the bound)"
-        ),
+}
+
+/// `fitq serve`: bind, print the resolved address, serve forever.
+/// `fitq serve --stats HOST:PORT` instead queries a running server and
+/// pretty-prints its aggregate counters.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("stats") {
+        let line = fetch_stats(addr)?;
+        let j = Json::parse(&line).map_err(|e| anyhow!("bad stats response: {e}"))?;
+        let r = j.field("result").map_err(|e| anyhow!(e))?;
+        println!("server {addr}:");
+        for key in
+            ["uptime_ms", "requests", "errors", "configs_scored", "table_hits", "table_misses"]
+        {
+            let v = r.field(key).map_err(|e| anyhow!(e))?.as_f64().unwrap_or(f64::NAN);
+            println!("  {key}: {v}");
+        }
+        let stages = r.field("stages").map_err(|e| anyhow!(e))?;
+        for key in ["sensitivity_computed", "claims_won", "claim_waits"] {
+            let v = stages.field(key).map_err(|e| anyhow!(e))?.as_f64().unwrap_or(f64::NAN);
+            println!("  stages.{key}: {v}");
+        }
+        let tables = r.arr_field("tables").map_err(|e| anyhow!(e))?;
+        println!("  resident tables ({}):", tables.len());
+        for t in tables {
+            println!(
+                "    {} @ {}",
+                t.str_field("model").map_err(|e| anyhow!(e))?,
+                t.str_field("digest").map_err(|e| anyhow!(e))?
+            );
+        }
+        return Ok(());
     }
-    let uniform = BitConfig::uniform(mm.n_weight_blocks(), mm.n_act_blocks(), 4);
-    println!(
-        "reference uniform-4bit: size {} bits FIT {:.5}",
-        model_bits(&sizes, n_unq, &uniform),
-        fitq::metrics::fit(&sens.inputs, &uniform)
-    );
+    let mut zoo = Vec::new();
+    if let Some(models) = args.get("models") {
+        for m in models.split(',') {
+            resolve_model(m.trim(), &mut zoo)?;
+        }
+    }
+    let host = args.str_or("host", "127.0.0.1").to_string();
+    let port = args.usize_or("port", 7151)?;
+    if port > u16::MAX as usize {
+        bail!("--port must fit in 16 bits");
+    }
+    let jobs = args.usize_or("jobs", 0)?;
+    let tables = args.usize_or("tables", 8)?.max(1);
+    let shard_target = (args.usize_or("shard-target", 65_536)? as u64).max(1);
+    let results = args
+        .get("results")
+        .map(PathBuf::from)
+        .unwrap_or_else(stages::results_root_from_env);
+    // build one runtime now so a bad backend/zoo fails before binding,
+    // then keep only its spec — each connection builds its own worker
+    let spec = runtime_for(args, zoo)?.spec();
+    let core = Arc::new(ServiceCore::new(
+        spec.clone(),
+        results,
+        ServiceConfig { jobs, table_capacity: tables, shard_target },
+    ));
+    let listener = bind(&host, port as u16)?;
+    let addr = listener.local_addr().context("resolving bound address")?;
+    println!("fitq serve: listening on {addr} (backend {}, jobs {jobs}, tables {tables}, shard target {shard_target})", spec.name());
+    serve_on(core, listener)
+}
+
+/// `fitq query`: raw line client for a running server.
+fn cmd_query(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("query needs --connect HOST:PORT"))?;
+    let mut requests: Vec<String> =
+        args.positional.iter().filter(|l| !l.trim().is_empty()).cloned().collect();
+    if requests.is_empty() {
+        use std::io::BufRead;
+        for line in std::io::stdin().lock().lines() {
+            let line = line.context("reading stdin")?;
+            if !line.trim().is_empty() {
+                requests.push(line);
+            }
+        }
+    }
+    if requests.is_empty() {
+        bail!("query needs at least one request line (arguments or stdin)");
+    }
+    let any_error =
+        fitq::coordinator::service::query(addr, &requests, &mut std::io::stdout().lock())?;
+    if any_error {
+        bail!("server returned an error event");
+    }
     Ok(())
 }
 

@@ -23,7 +23,7 @@
 //! pointer-chasing two heap allocations per config for the lookup keys.
 
 use super::SensitivityInputs;
-use crate::coordinator::parallel::{effective_jobs, run_pool};
+use crate::coordinator::parallel::{effective_jobs, run_static};
 use crate::quant::{noise_power, BitConfig, PRECISIONS};
 
 /// A mixed-precision configuration in precision-index form: `idx[i]` is an
@@ -242,29 +242,77 @@ impl FitTable {
         (self.score(p), self.size_bits(p))
     }
 
-    /// Score a batch of packed configurations, fanning fixed-size chunks
-    /// over the [`coordinator::parallel`](crate::coordinator::parallel)
-    /// worker pool. Returns `(fit, size_bits)` pairs in input order;
-    /// per-config scoring is pure, so the result is identical at every
-    /// `jobs` setting (`1` = serial reference, `0` = one worker per core).
-    pub fn score_batch(&self, configs: &[PackedConfig], jobs: usize) -> Vec<(f64, u64)> {
-        const CHUNK: usize = 4096;
-        let n_chunks = configs.len().div_ceil(CHUNK);
-        if effective_jobs(jobs, n_chunks) <= 1 {
-            return configs.iter().map(|c| self.score_size(c)).collect();
+    /// `(fit, size_bits)` straight from raw precision indices (weight
+    /// blocks first, then activation blocks — the
+    /// [`PackedConfig::indices`] layout), without materializing a
+    /// `PackedConfig`. Summation order matches [`score_size`]
+    /// (weight terms, activation terms, one final add), so the result is
+    /// bit-identical — the search service's sampled shards score through
+    /// this from one reused index buffer, allocating nothing per config.
+    ///
+    /// [`score_size`]: Self::score_size
+    pub fn score_size_indices(&self, idx: &[u8]) -> (f64, u64) {
+        assert_eq!(idx.len(), self.lw + self.la, "block count");
+        let np = self.precisions.len();
+        let mut acc_w = 0.0;
+        let mut bits = self.base_bits;
+        for (l, &ix) in idx[..self.lw].iter().enumerate() {
+            acc_w += self.w_fit[l * np + ix as usize];
+            bits += self.w_bits[l * np + ix as usize];
         }
-        let chunks = run_pool(
-            n_chunks,
-            jobs,
-            || Ok(()),
-            |_, i| {
-                let lo = i * CHUNK;
-                let hi = usize::min(lo + CHUNK, configs.len());
-                Ok(configs[lo..hi].iter().map(|c| self.score_size(c)).collect::<Vec<_>>())
-            },
-        )
-        .expect("batch scoring jobs are infallible");
-        chunks.into_iter().flatten().collect()
+        let mut acc_a = 0.0;
+        for (l, &ix) in idx[self.lw..].iter().enumerate() {
+            acc_a += self.a_fit[l * np + ix as usize];
+        }
+        (acc_w + acc_a, bits)
+    }
+
+    /// Batch chunk width: small enough that the static fan-out
+    /// load-balances, large enough that per-chunk dispatch is noise.
+    pub const SCORE_CHUNK: usize = 4096;
+
+    /// Buffer-reusing batch scorer: clear `out` and fill it with
+    /// `(fit, size_bits)` in input order. The parallel path hands workers
+    /// disjoint `&mut` panels of the single output buffer
+    /// ([`run_static`]'s contiguous schedule) instead of collecting
+    /// per-chunk `Vec`s, so a caller looping over requests — the search
+    /// service, `cmd_search` — reuses one allocation across its lifetime.
+    /// Bit-identical at every `jobs` setting (per-config scoring is pure;
+    /// the schedule only decides who computes a panel).
+    pub fn score_batch_into(
+        &self,
+        configs: &[PackedConfig],
+        jobs: usize,
+        out: &mut Vec<(f64, u64)>,
+    ) {
+        out.clear();
+        let n_chunks = configs.len().div_ceil(Self::SCORE_CHUNK);
+        let threads = effective_jobs(jobs, n_chunks);
+        if threads <= 1 {
+            out.extend(configs.iter().map(|c| self.score_size(c)));
+            return;
+        }
+        out.resize(configs.len(), (0.0, 0));
+        let panels: Vec<(&[PackedConfig], &mut [(f64, u64)])> = configs
+            .chunks(Self::SCORE_CHUNK)
+            .zip(out.chunks_mut(Self::SCORE_CHUNK))
+            .collect();
+        run_static(panels, threads, |_, (cfgs, dst)| {
+            for (c, d) in cfgs.iter().zip(dst.iter_mut()) {
+                *d = self.score_size(c);
+            }
+        });
+    }
+
+    /// Score a batch of packed configurations into a fresh `Vec` —
+    /// [`score_batch_into`](Self::score_batch_into) behind an allocating
+    /// convenience signature. Returns `(fit, size_bits)` pairs in input
+    /// order, identical at every `jobs` setting (`1` = serial reference,
+    /// `0` = one worker per core).
+    pub fn score_batch(&self, configs: &[PackedConfig], jobs: usize) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        self.score_batch_into(configs, jobs, &mut out);
+        out
     }
 }
 
@@ -390,5 +438,56 @@ mod tests {
         let s = test_inputs();
         let table = FitTable::new(&s, &[100, 400, 50], 10, &PRECISIONS);
         assert!(table.score_batch(&[], 4).is_empty());
+        let mut out = vec![(1.0, 1u64); 3];
+        table.score_batch_into(&[], 4, &mut out);
+        assert!(out.is_empty(), "score_batch_into must clear stale contents");
+    }
+
+    #[test]
+    fn score_batch_into_reuses_buffer_bit_identically() {
+        let s = test_inputs();
+        let sizes = vec![100usize, 400, 50];
+        let table = FitTable::new(&s, &sizes, 10, &PRECISIONS);
+        let mut sampler = BitConfigSampler::new(3, 2, &PRECISIONS, 21);
+        let small: Vec<PackedConfig> = sampler.take(500).iter().map(|c| table.pack(c)).collect();
+        let big: Vec<PackedConfig> =
+            (0..20).flat_map(|_| small.iter().cloned()).collect();
+        let serial: Vec<(f64, u64)> = big.iter().map(|p| table.score_size(p)).collect();
+        let mut out = Vec::new();
+        for jobs in [1usize, 2, 4, 0] {
+            // reuse the same buffer across calls and batch sizes, like a
+            // service looping over requests
+            table.score_batch_into(&big, jobs, &mut out);
+            assert_eq!(out.len(), serial.len(), "jobs={jobs}");
+            for (a, b) in out.iter().zip(&serial) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits());
+                assert_eq!(a.1, b.1);
+            }
+            table.score_batch_into(&big[..7], jobs, &mut out);
+            assert_eq!(out.len(), 7, "shrinking batch must truncate the buffer");
+        }
+    }
+
+    #[test]
+    fn score_size_indices_matches_packed_path_to_zero_ulp() {
+        let s = test_inputs();
+        let sizes = vec![100usize, 400, 50];
+        let table = FitTable::new(&s, &sizes, 10, &PRECISIONS);
+        let mut sampler = BitConfigSampler::new(3, 2, &PRECISIONS, 33);
+        for cfg in sampler.take(64) {
+            let p = table.pack(&cfg);
+            let (f_ref, b_ref) = table.score_size(&p);
+            let (f, b) = table.score_size_indices(p.indices());
+            assert_eq!(f.to_bits(), f_ref.to_bits(), "{}", cfg.label());
+            assert_eq!(b, b_ref);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "block count")]
+    fn score_size_indices_rejects_wrong_block_count() {
+        let s = test_inputs();
+        let table = FitTable::new(&s, &[100, 400, 50], 10, &PRECISIONS);
+        let _ = table.score_size_indices(&[0, 0]);
     }
 }

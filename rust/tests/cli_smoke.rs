@@ -264,6 +264,50 @@ fn malformed_fault_spec_fails_fast() {
 }
 
 #[test]
+fn search_flags_fail_fast_before_any_training() {
+    let out = fitq(&["search", "--model", "cnn_mnist", "--samples", "0"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--samples must be >= 1"), "{}", stderr(&out));
+
+    let out = fitq(&["search", "--model", "cnn_mnist", "--shards", "0"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--shards must be >= 1"), "{}", stderr(&out));
+
+    // booleans are spelled --stream true|false in this parser
+    let out = fitq(&["search", "--model", "cnn_mnist", "--stream", "maybe"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--stream must be true or false"), "{}", stderr(&out));
+}
+
+#[test]
+fn serve_flags_fail_fast_before_binding() {
+    let out = fitq(&["serve", "--port", "99999999"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--port must fit in 16 bits"), "{}", stderr(&out));
+
+    let out = fitq(&["serve", "--port", "no"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--port must be an integer"), "{}", stderr(&out));
+
+    // --stats against a dead address reports the connect failure
+    let out = fitq(&["serve", "--stats", "127.0.0.1:9"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("connecting 127.0.0.1:9"), "{}", stderr(&out));
+}
+
+#[test]
+fn query_needs_a_server_and_a_request() {
+    let out = fitq(&["query"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("query needs --connect"), "{}", stderr(&out));
+
+    // discard port (9) is reliably closed on loopback in the test env
+    let out = fitq(&["query", "--connect", "127.0.0.1:9", r#"{"method":"ping"}"#]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("connecting 127.0.0.1:9"), "{}", stderr(&out));
+}
+
+#[test]
 fn zoo_check_validates_the_committed_zoo() {
     let names = ["cnn_mnist", "cnn_mnist_bn", "cnn_cifar", "cnn_cifar_bn", "cnn_cifar_deep"];
     let paths: Vec<String> = names.iter().map(|n| zoo(n)).collect();

@@ -10,6 +10,7 @@
 //! accept.
 
 use fitq::coordinator::evaluator::{ConfigFailure, ConfigOutcome, StudyResult};
+use fitq::coordinator::service::parse_request;
 use fitq::coordinator::pipeline::codec::{
     decode_sensitivity, decode_study, decode_trace, encode_sensitivity, encode_study,
     encode_trace,
@@ -153,6 +154,49 @@ fn fuzz_lease_record_parser_errors_or_roundtrips() {
             assert_eq!(got, rec, "iteration {i}: mutated lease accepted with different fields");
         }
     }
+}
+
+/// Search-service request decoder: ~6k mutated request lines. The
+/// decoder is the fail-closed front door of `fitq serve` — it must
+/// return a typed `ProtocolError` or a valid `Request` for any byte
+/// salad, never panic. Accepted mutants must themselves be stable:
+/// parsing the same line twice yields the same request (the decoder is
+/// a pure function of the line — any nondeterminism here would break
+/// the service's bit-identity contract).
+#[test]
+fn fuzz_request_decoder_errors_or_parses() {
+    let seeds = [
+        r#"{"method":"ping"}"#.to_string(),
+        r#"{"method":"stats"}"#.to_string(),
+        r#"{"method":"score","study":{"model":"cnn_mnist","fp_epochs":1,"seed":0},"configs":[{"w":[8,4,3],"a":[6,3]}]}"#
+            .to_string(),
+        r#"{"method":"search","study":{"model":"cnn_mnist","fp_epochs":30,"seed":7,"trace":{"batch":16,"tol":0.01,"min_iters":8,"max_iters":200,"seed":3}},"mode":"random","samples":100000,"seed":1,"shards":16,"stream":true}"#
+            .to_string(),
+        r#"{"method":"search","study":{"model":"cnn_mnist","fp_epochs":1,"seed":0},"mode":"greedy","budget_ratio":0.15}"#
+            .to_string(),
+        r#"{"method":"pareto","study":{"model":"cnn_mnist","fp_epochs":1,"seed":0},"configs":[{"w":[8],"a":[]},{"w":[3],"a":[]}],"shards":2,"stream":false}"#
+            .to_string(),
+    ];
+    let mut rng = 0x5EED_0005_u64;
+    let mut accepted = 0u64;
+    for (si, seed) in seeds.iter().enumerate() {
+        for _ in 0..1000 {
+            let mut bytes = seed.clone().into_bytes();
+            let n_mut = 1 + (splitmix64(&mut rng) as usize) % 4;
+            for _ in 0..n_mut {
+                mutate(&mut bytes, &mut rng);
+            }
+            let text = String::from_utf8_lossy(&bytes);
+            if let Ok(req) = parse_request(&text) {
+                accepted += 1;
+                let again = parse_request(&text)
+                    .unwrap_or_else(|e| panic!("seed {si}: accept was not stable: {e}"));
+                assert_eq!(again, req, "seed {si}: decoder is not a pure function");
+            }
+        }
+    }
+    // mutations inside string values / digits keep many lines valid
+    assert!(accepted > 0, "no mutated request ever parsed; mutator too destructive?");
 }
 
 fn sample_trace() -> TraceResult {

@@ -1,0 +1,665 @@
+//! Search-service integration tests: the fail-closed request corpus,
+//! the index-pure sampling pins, the sharding determinism contract
+//! (streamed accumulator == one-shot sweep == quadratic reference at
+//! every shard count and jobs setting), end-to-end `ServiceCore`
+//! execution against the real pipeline, and real-TCP concurrent clients
+//! sharing one lease-coordinated cold study.
+//!
+//! Everything under a response's `result` key is part of the
+//! determinism contract; only the `metrics` trailer (wall-clock) may
+//! vary. Tests therefore compare terminal lines up to `,"metrics":`.
+
+mod common;
+
+use std::sync::Arc;
+
+use fitq::coordinator::service::{
+    bind, fetch_stats, parse_request, plan_shards, query, sample_indices_into, sampled_config,
+    serve_on, ErrorKind, ServiceConfig, ServiceCore, ServiceWorker,
+};
+use fitq::coordinator::{
+    pareto_front_scores, pareto_front_scores_naive, FrontPoint, ParetoAccumulator,
+};
+use fitq::metrics::{FitTable, SensitivityInputs};
+use fitq::quant::{BitConfig, PRECISIONS};
+use fitq::runtime::Json;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fitq_svc_{tag}_{}", std::process::id()))
+}
+
+/// The request-order-invariant prefix of a terminal `done` line: every
+/// byte of `result` but none of the wall-clock metrics.
+fn invariant(line: &str) -> &str {
+    let cut = line.rfind(",\"metrics\":").expect("done line has a metrics trailer");
+    &line[..cut]
+}
+
+fn kind_of(line: &str) -> ErrorKind {
+    parse_request(line).unwrap_err().kind
+}
+
+// ---------------------------------------------------------------------------
+// Protocol: fail-closed parse corpus
+
+#[test]
+fn request_corpus_fails_closed_with_typed_kinds() {
+    let study = r#""study":{"model":"cnn_mnist","fp_epochs":1,"seed":0}"#;
+    // Every line below must draw exactly the kind on the right — a new
+    // decoder that silently defaults or coerces any of them is a
+    // protocol regression, not a convenience.
+    let corpus: Vec<(String, ErrorKind)> = vec![
+        ("".into(), ErrorKind::Parse),
+        ("not json".into(), ErrorKind::Parse),
+        ("[1,2]".into(), ErrorKind::Parse),
+        ("\"ping\"".into(), ErrorKind::Parse),
+        (r#"{"method":"ping""#.into(), ErrorKind::Parse),
+        (r#"{"method":"frobnicate"}"#.into(), ErrorKind::Method),
+        (r#"{"method":"PING"}"#.into(), ErrorKind::Method),
+        (r#"{}"#.into(), ErrorKind::Schema), // no method
+        (r#"{"method":7}"#.into(), ErrorKind::Schema),
+        (r#"{"method":"ping","extra":1}"#.into(), ErrorKind::Schema),
+        (r#"{"method":"stats","study":{}}"#.into(), ErrorKind::Schema),
+        (r#"{"method":"score"}"#.into(), ErrorKind::Schema), // no study
+        (format!(r#"{{"method":"score",{study}}}"#), ErrorKind::Schema), // no configs
+        (r#"{"method":"score","study":[],"configs":[]}"#.into(), ErrorKind::Schema),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0,"bogus":1},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"","fp_epochs":1,"seed":0},"configs":[]}"#.into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":-1},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0.5},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":1e300},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        // strict trace overrides
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0,"trace":{"nope":1}},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0,"trace":{"batch":0}},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0,"trace":{"tol":-0.5}},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0,"trace":{"min_iters":0}},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        (
+            r#"{"method":"score","study":{"model":"m","fp_epochs":1,"seed":0,"trace":{"min_iters":8,"max_iters":4}},"configs":[]}"#
+                .into(),
+            ErrorKind::Schema,
+        ),
+        // configs shape
+        (
+            format!(r#"{{"method":"score",{study},"configs":[17]}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"score",{study},"configs":[{{"w":[8],"a":[3],"x":1}}]}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"score",{study},"configs":[{{"w":[8]}}]}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"score",{study},"configs":[{{"w":[0],"a":[]}}]}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"score",{study},"configs":[{{"w":[2.5],"a":[]}}]}}"#),
+            ErrorKind::Schema,
+        ),
+        // search: mode interlock
+        (format!(r#"{{"method":"search",{study}}}"#), ErrorKind::Schema),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"anneal","samples":1}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"random"}}"#),
+            ErrorKind::Schema, // no samples
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"random","samples":0}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(
+                r#"{{"method":"search",{study},"mode":"random","samples":10,"budget_bits":1}}"#
+            ),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"greedy","budget_bits":1,"samples":2}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"greedy","budget_bits":1,"shards":2}}"#),
+            ErrorKind::Schema,
+        ),
+        (format!(r#"{{"method":"search",{study},"mode":"greedy"}}"#), ErrorKind::Schema),
+        (
+            format!(
+                r#"{{"method":"search",{study},"mode":"exact","budget_bits":1,"budget_ratio":0.5}}"#
+            ),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"exact","budget_ratio":0}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"exact","budget_ratio":"x"}}"#),
+            ErrorKind::Schema,
+        ),
+        // shards / stream
+        (
+            format!(r#"{{"method":"search",{study},"mode":"random","samples":1,"shards":0}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"search",{study},"mode":"random","samples":1,"stream":1}}"#),
+            ErrorKind::Schema,
+        ),
+        (
+            format!(r#"{{"method":"pareto",{study},"configs":[],"budget_bits":1}}"#),
+            ErrorKind::Schema,
+        ),
+    ];
+    for (line, want) in &corpus {
+        assert_eq!(kind_of(line), *want, "corpus line: {line}");
+    }
+
+    // The accepted language, for contrast: every variant parses.
+    for line in [
+        r#"{"method":"ping"}"#.to_string(),
+        r#"{"method":"stats"}"#.to_string(),
+        format!(r#"{{"method":"score",{study},"configs":[{{"w":[8,4],"a":[3]}}]}}"#),
+        format!(
+            r#"{{"method":"search",{study},"mode":"random","samples":10,"seed":3,"shards":4,"stream":true}}"#
+        ),
+        format!(r#"{{"method":"search",{study},"mode":"greedy","budget_ratio":0.25}}"#),
+        format!(r#"{{"method":"search",{study},"mode":"exact","budget_bits":50000}}"#),
+        format!(r#"{{"method":"pareto",{study},"configs":[],"shards":2,"stream":false}}"#),
+    ] {
+        parse_request(&line).unwrap_or_else(|e| panic!("should parse: {line}: {e}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sampling: cross-implementation pins + purity
+
+/// Pins generated by an independent reimplementation (exact-integer
+/// splitmix64 + PCG-XSH-RR 64/32) of `derive_seed` and `Pcg32` — if the
+/// Rust stream ever drifts, served search results silently change, so
+/// the draw itself is protocol surface.
+#[test]
+fn sample_stream_matches_reference_pins() {
+    let mut idx = Vec::new();
+    let pins: [(u64, &[u8]); 4] = [
+        (0, &[2, 0, 3, 0, 1, 3]),
+        (1, &[2, 2, 1, 2, 3, 1]),
+        (2, &[1, 0, 1, 1, 3, 2]),
+        (3, &[0, 0, 2, 0, 3, 3]),
+    ];
+    for (index, want) in pins {
+        sample_indices_into(6, 4, 3, index, &mut idx);
+        assert_eq!(idx, want, "seed=3 index={index}");
+    }
+    sample_indices_into(5, 4, 0, 0, &mut idx);
+    assert_eq!(idx, [3, 1, 3, 2, 0], "seed=0 index=0");
+}
+
+fn synthetic_table() -> FitTable {
+    // Hand-picked so different precision choices produce well-spread
+    // fits and sizes (3 weight blocks of very different size, 2 act
+    // blocks) — enough structure for non-trivial fronts.
+    let inputs = SensitivityInputs {
+        w_traces: vec![40.0, 2.5, 0.125],
+        a_traces: vec![9.0, 0.75],
+        w_lo: vec![-1.0, -0.5, -0.25],
+        w_hi: vec![1.0, 0.5, 0.25],
+        a_lo: vec![0.0, 0.0],
+        a_hi: vec![6.0, 3.0],
+        bn_gamma: vec![Some(1.0), Some(0.5), None],
+    };
+    FitTable::new(&inputs, &[4096, 512, 64], 37, &PRECISIONS)
+}
+
+#[test]
+fn sampled_config_expands_indices_through_the_precision_set() {
+    let table = synthetic_table();
+    let n = table.n_weight_blocks() + table.n_act_blocks();
+    let mut idx = Vec::new();
+    for index in [0u64, 1, 999, 1 << 33] {
+        sample_indices_into(n, table.precisions().len(), 42, index, &mut idx);
+        let cfg = sampled_config(&table, 42, index);
+        let expand: Vec<u32> =
+            idx.iter().map(|&i| table.precisions()[i as usize]).collect();
+        assert_eq!(cfg.bits_w, expand[..table.n_weight_blocks()]);
+        assert_eq!(cfg.bits_a, expand[table.n_weight_blocks()..]);
+        // and the config scores identically through both paths
+        let (fit, size) = table.score_size_indices(&idx);
+        let (fit2, size2) = table.score_size(&table.pack(&cfg));
+        assert_eq!(fit.to_bits(), fit2.to_bits(), "index path == pack path");
+        assert_eq!(size, size2);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharding determinism: accumulator == sweep == quadratic reference
+
+/// The exact shard fold `run_search_random` performs, run here serially
+/// over a synthetic table at many shard counts: every split must
+/// reproduce the one-shot sweep bit-for-bit, and the sweep must agree
+/// with the O(n²) dominance-scan ground truth (the regression pin for
+/// the sort-then-sweep implementation).
+#[test]
+fn sharded_sampled_search_is_bit_identical_to_serial() {
+    let table = synthetic_table();
+    let n_blocks = table.n_weight_blocks() + table.n_act_blocks();
+    let n_prec = table.precisions().len();
+    let (samples, seed) = (3000u64, 11u64);
+
+    // serial reference: score every sample index in order
+    let mut idx = Vec::new();
+    let mut scores = Vec::with_capacity(samples as usize);
+    for k in 0..samples {
+        sample_indices_into(n_blocks, n_prec, seed, k, &mut idx);
+        scores.push(table.score_size_indices(&idx));
+    }
+    let want = pareto_front_scores(&scores);
+    assert_eq!(want, pareto_front_scores_naive(&scores), "sweep == quadratic reference");
+    assert!(!want.is_empty());
+
+    let as_points = |ix: &[usize]| -> Vec<FrontPoint> {
+        ix.iter()
+            .map(|&i| FrontPoint { index: i, fit: scores[i].0, size_bits: scores[i].1 })
+            .collect()
+    };
+    let want_points = as_points(&want);
+
+    for shards in [1usize, 2, 3, 7, 16, 61, 256] {
+        let plan = plan_shards(samples, Some(shards), 65_536);
+        // fold per-shard fronts in reverse completion order — the worst
+        // case for an order-sensitive merge
+        let mut acc = ParetoAccumulator::new();
+        for &(lo, hi) in plan.iter().rev() {
+            let mut local = ParetoAccumulator::new();
+            for k in lo..hi {
+                sample_indices_into(n_blocks, n_prec, seed, k, &mut idx);
+                let (fit, size_bits) = table.score_size_indices(&idx);
+                local.push(FrontPoint { index: k as usize, fit, size_bits });
+            }
+            acc.absorb_front(local.front());
+        }
+        let got = acc.front();
+        assert_eq!(got.len(), want_points.len(), "{shards} shards");
+        for (g, w) in got.iter().zip(&want_points) {
+            assert_eq!(g.index, w.index, "{shards} shards");
+            assert_eq!(g.fit.to_bits(), w.fit.to_bits(), "{shards} shards: fit bits");
+            assert_eq!(g.size_bits, w.size_bits, "{shards} shards");
+        }
+        // idempotent: re-absorbing every raw score changes nothing
+        let snapshot = acc.front().to_vec();
+        acc.absorb_scores(0, &scores);
+        assert_eq!(acc.front(), &snapshot[..], "{shards} shards: idempotent re-absorb");
+    }
+}
+
+/// `score_batch_into` is the service's explicit-config scorer: the
+/// buffer is reused across calls (shrinks included) and the parallel
+/// panel schedule never changes a single bit of the output.
+#[test]
+fn score_batch_into_reuses_buffer_and_is_jobs_invariant() {
+    let table = synthetic_table();
+    let configs: Vec<_> = (0..500u64).map(|i| table.pack(&sampled_config(&table, 9, i))).collect();
+    let mut out = vec![(f64::NAN, u64::MAX); 3]; // stale contents must be cleared
+    table.score_batch_into(&configs, 1, &mut out);
+    assert_eq!(out.len(), configs.len());
+    let serial = out.clone();
+    for jobs in [0usize, 2, 4] {
+        table.score_batch_into(&configs, jobs, &mut out);
+        assert_eq!(out.len(), serial.len());
+        for (a, b) in out.iter().zip(&serial) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "jobs={jobs}");
+            assert_eq!(a.1, b.1, "jobs={jobs}");
+        }
+    }
+    // shrinking reuse: a smaller batch must not leave stale tail entries
+    table.score_batch_into(&configs[..7], 4, &mut out);
+    assert_eq!(out.len(), 7);
+    assert_eq!(out[..7], serial[..7]);
+}
+
+// ---------------------------------------------------------------------------
+// ServiceCore end to end (real pipeline, cheap study)
+
+/// A study spec kept deliberately tiny: one FP epoch, two fixed trace
+/// iterations at batch 8, so the cold path trains once in seconds and
+/// every test below shares the artifacts within its own results root.
+fn study_json(seed: u64, max_iters: u64) -> String {
+    format!(
+        r#"{{"model":"cnn_mnist","fp_epochs":1,"seed":{seed},"trace":{{"batch":8,"min_iters":2,"max_iters":{max_iters}}}}}"#
+    )
+}
+
+fn exec(core: &ServiceCore, w: &ServiceWorker, line: &str) -> Vec<String> {
+    let req = parse_request(line).unwrap_or_else(|e| panic!("request parses: {line}: {e}"));
+    let mut out: Vec<String> = Vec::new();
+    core.execute(w, &req, &mut |l: &str| {
+        out.push(l.to_string());
+        Ok(())
+    })
+    .expect("in-process emit never fails transport");
+    out
+}
+
+fn residency_of(done: &str) -> String {
+    let j = Json::parse(done).expect("done line is JSON");
+    j.field("metrics").unwrap().str_field("table").unwrap().to_string()
+}
+
+#[test]
+fn service_core_serves_deterministic_sharded_results() {
+    let dir = tmp_dir("core");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = common::runtime().spec();
+    let cfg = ServiceConfig { jobs: 1, table_capacity: 1, shard_target: 512 };
+    let core = ServiceCore::new(spec.clone(), &dir, cfg);
+    let w = core.worker().expect("worker");
+    let study = study_json(0, 2);
+
+    // --- cold study: the first request trains + traces, later ones hit
+    let search =
+        |extra: &str| format!(r#"{{"method":"search","study":{study},"mode":"random","samples":600,"seed":7{extra}}}"#);
+    let cold = exec(&core, &w, &search(""));
+    assert_eq!(cold.len(), 1, "unstreamed search emits exactly one event");
+    assert_eq!(residency_of(&cold[0]), "cold+compute");
+    assert_eq!(core.counters().sensitivity_computed(), 1);
+    let reference = invariant(&cold[0]).to_string();
+    assert!(reference.contains("\"method\":\"search\""));
+    assert!(reference.contains("\"samples\":600"));
+
+    // --- shard-count invariance on the warm table
+    for shards in [1usize, 3, 7, 600] {
+        let line = exec(&core, &w, &search(&format!(r#","shards":{shards}"#)));
+        assert_eq!(invariant(&line[0]), reference, "shards={shards}");
+        assert_eq!(residency_of(&line[0]), "warm");
+    }
+
+    // --- jobs invariance: a second core (jobs=4) over the same results
+    // root resolves cold from the published artifact, never retraining
+    let core4 =
+        ServiceCore::new(spec, &dir, ServiceConfig { jobs: 4, table_capacity: 1, shard_target: 64 });
+    let w4 = core4.worker().expect("worker");
+    let line = exec(&core4, &w4, &search(r#","shards":9"#));
+    assert_eq!(invariant(&line[0]), reference, "jobs=4, shards=9");
+    assert_eq!(residency_of(&line[0]), "cold+cache");
+    assert_eq!(core4.counters().sensitivity_computed(), 0, "artifact reused, not recomputed");
+
+    // --- streaming: monotone front progress, terminal line unchanged
+    let streamed = exec(&core, &w, &search(r#","shards":5,"stream":true"#));
+    assert_eq!(streamed.len(), 6, "5 front events + 1 done");
+    for (i, line) in streamed[..5].iter().enumerate() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.str_field("event").unwrap(), "front");
+        assert_eq!(j.usize_field("shards_done").unwrap(), i + 1, "serial core: in-order");
+        assert_eq!(j.usize_field("shards").unwrap(), 5);
+    }
+    assert_eq!(invariant(&streamed[5]), reference);
+    // the last front event already carries the final front
+    let last_front = Json::parse(&streamed[4]).unwrap();
+    let done = Json::parse(&streamed[5]).unwrap();
+    assert_eq!(
+        last_front.field("front").unwrap(),
+        done.field("result").unwrap().field("front").unwrap(),
+        "front after the last shard == terminal front"
+    );
+
+    // --- explicit configs: score + pareto
+    let rt = common::runtime();
+    let mm = rt.model("cnn_mnist").unwrap();
+    let (lw, la) = (mm.n_weight_blocks(), mm.n_act_blocks());
+    let uni = |bits: u32| {
+        let cfg = BitConfig::uniform(lw, la, bits);
+        let join = |v: &[u32]| v.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+        format!(r#"{{"w":[{}],"a":[{}]}}"#, join(&cfg.bits_w), join(&cfg.bits_a))
+    };
+    let score_line = exec(
+        &core,
+        &w,
+        &format!(r#"{{"method":"score","study":{study},"configs":[{},{}]}}"#, uni(8), uni(3)),
+    );
+    let j = Json::parse(&score_line[0]).unwrap();
+    let scores = j.field("result").unwrap().arr_field("scores").unwrap().to_vec();
+    assert_eq!(scores.len(), 2);
+    let (fit8, size8) = (
+        scores[0].as_arr().unwrap()[0].as_f64().unwrap(),
+        scores[0].as_arr().unwrap()[1].as_f64().unwrap(),
+    );
+    let (fit3, size3) = (
+        scores[1].as_arr().unwrap()[0].as_f64().unwrap(),
+        scores[1].as_arr().unwrap()[1].as_f64().unwrap(),
+    );
+    assert!(fit8 <= fit3, "more bits, less noise: {fit8} vs {fit3}");
+    assert!(size8 > size3, "more bits, more storage");
+
+    let pareto = |shards: usize| {
+        exec(
+            &core,
+            &w,
+            &format!(
+                r#"{{"method":"pareto","study":{study},"configs":[{},{},{},{}],"shards":{shards}}}"#,
+                uni(8),
+                uni(6),
+                uni(4),
+                uni(3)
+            ),
+        )
+    };
+    let p1 = pareto(1);
+    let front = Json::parse(&p1[0]).unwrap();
+    let front = front.field("result").unwrap().arr_field("front").unwrap().to_vec();
+    assert!(!front.is_empty());
+    for p in &front {
+        let cfg = p.field("config").unwrap();
+        assert_eq!(cfg.usize_array("w").unwrap().len(), lw);
+        assert_eq!(cfg.usize_array("a").unwrap().len(), la);
+    }
+    assert_eq!(invariant(&p1[0]), invariant(&pareto(3)[0]), "pareto shard invariance");
+
+    // --- config validation is a typed error, not a worker panic
+    let bad = exec(
+        &core,
+        &w,
+        &format!(r#"{{"method":"score","study":{study},"configs":[{{"w":[8],"a":[3]}}]}}"#),
+    );
+    let j = Json::parse(&bad[0]).unwrap();
+    assert_eq!(j.str_field("event").unwrap(), "error");
+    assert_eq!(j.str_field("kind").unwrap(), "config");
+    let bad = exec(&core, &w, &format!(r#"{{"method":"score","study":{study},"configs":[{}]}}"#, uni(5)));
+    assert_eq!(Json::parse(&bad[0]).unwrap().str_field("kind").unwrap(), "config");
+
+    // --- unknown model is a study error
+    let bad = exec(
+        &core,
+        &w,
+        r#"{"method":"score","study":{"model":"nope","fp_epochs":1,"seed":0},"configs":[]}"#,
+    );
+    assert_eq!(Json::parse(&bad[0]).unwrap().str_field("kind").unwrap(), "study");
+
+    // --- greedy/exact allocation through the service
+    let g = exec(
+        &core,
+        &w,
+        &format!(r#"{{"method":"search","study":{study},"mode":"greedy","budget_ratio":0.5}}"#),
+    );
+    let j = Json::parse(&g[0]).unwrap();
+    let r = j.field("result").unwrap();
+    assert_eq!(r.str_field("mode").unwrap(), "greedy");
+    let budget = r.field("budget_bits").unwrap().as_f64().unwrap();
+    let size = r.field("size_bits").unwrap().as_f64().unwrap();
+    assert!(size <= budget, "allocation respects the budget");
+    assert!(r.field("fit").unwrap().as_f64().unwrap().is_finite());
+    assert_eq!(r.field("config").unwrap().usize_array("w").unwrap().len(), lw);
+
+    // an infeasible budget is a typed budget error — and the worker
+    // survives to answer the next request
+    let e = exec(
+        &core,
+        &w,
+        &format!(r#"{{"method":"search","study":{study},"mode":"exact","budget_bits":1}}"#),
+    );
+    assert_eq!(Json::parse(&e[0]).unwrap().str_field("kind").unwrap(), "budget");
+    let pong = exec(&core, &w, r#"{"method":"ping"}"#);
+    assert!(pong[0].contains("\"method\":\"ping\""));
+
+    // --- LRU eviction at capacity 1: a second study (different trace
+    // options => different stage digest, same training artifact) evicts
+    // the first; re-requesting the first rebuilds from cache
+    let study_b = study_json(0, 3);
+    let b = exec(
+        &core,
+        &w,
+        &format!(r#"{{"method":"search","study":{study_b},"mode":"random","samples":50,"seed":1}}"#),
+    );
+    assert_eq!(residency_of(&b[0]), "cold+compute", "new digest computes new traces");
+    assert_eq!(core.counters().sensitivity_computed(), 2);
+    let a_again = exec(&core, &w, &search(""));
+    assert_eq!(residency_of(&a_again[0]), "cold+cache", "evicted table rebuilds from artifact");
+    assert_eq!(invariant(&a_again[0]), reference, "rebuilt table scores identically");
+    assert_eq!(core.counters().sensitivity_computed(), 2, "no recompute after eviction");
+    let a_warm = exec(&core, &w, &search(""));
+    assert_eq!(residency_of(&a_warm[0]), "warm");
+
+    // --- stats reflect all of the above
+    let stats = exec(&core, &w, r#"{"method":"stats"}"#);
+    let j = Json::parse(&stats[0]).unwrap();
+    let r = j.field("result").unwrap();
+    assert!(r.field("requests").unwrap().as_f64().unwrap() >= 10.0);
+    assert!(r.field("errors").unwrap().as_f64().unwrap() >= 3.0);
+    assert!(r.field("table_hits").unwrap().as_f64().unwrap() >= 4.0);
+    assert!(r.field("table_misses").unwrap().as_f64().unwrap() >= 3.0);
+    assert_eq!(r.arr_field("tables").unwrap().len(), 1, "capacity-1 LRU holds one table");
+    assert_eq!(
+        r.field("stages").unwrap().field("sensitivity_computed").unwrap().as_f64().unwrap(),
+        2.0
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Real TCP: concurrent clients, one cold study, exactly-once compute
+
+#[test]
+fn tcp_concurrent_clients_get_identical_results_and_share_one_compute() {
+    let dir = tmp_dir("tcp");
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = common::runtime().spec();
+    let core = Arc::new(ServiceCore::new(
+        spec,
+        &dir,
+        ServiceConfig { jobs: 2, table_capacity: 4, shard_target: 128 },
+    ));
+    let listener = bind("127.0.0.1", 0).expect("ephemeral bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    {
+        let core = core.clone();
+        std::thread::spawn(move || serve_on(core, listener));
+    }
+
+    let study = study_json(3, 2);
+    let req = format!(
+        r#"{{"method":"search","study":{study},"mode":"random","samples":700,"seed":5,"shards":4,"stream":true}}"#
+    );
+    let clients: Vec<_> = (0..3)
+        .map(|_| {
+            let (addr, req) = (addr.clone(), req.clone());
+            std::thread::spawn(move || {
+                let mut out: Vec<u8> = Vec::new();
+                let any_error = query(&addr, &[req], &mut out).expect("query");
+                assert!(!any_error, "search must succeed");
+                String::from_utf8(out).expect("utf8 response")
+            })
+        })
+        .collect();
+    let outputs: Vec<String> = clients.into_iter().map(|c| c.join().expect("client")).collect();
+    let dones: Vec<&str> =
+        outputs.iter().map(|o| o.lines().last().expect("terminal line")).collect();
+    for d in &dones {
+        assert!(d.contains("\"event\":\"done\""), "terminal is a done event: {d}");
+    }
+    assert_eq!(invariant(dones[0]), invariant(dones[1]), "clients agree bit-for-bit");
+    assert_eq!(invariant(dones[0]), invariant(dones[2]), "clients agree bit-for-bit");
+    // each client saw 4 front events before its done line
+    for o in &outputs {
+        assert_eq!(o.lines().filter(|l| l.contains("\"event\":\"front\"")).count(), 4);
+    }
+    // three concurrent cold requests, one lease winner, one compute
+    assert_eq!(core.counters().sensitivity_computed(), 1, "exactly-once across connections");
+
+    // a parse failure answers once and hangs up — nonzero-ish for the CLI
+    let mut out: Vec<u8> = Vec::new();
+    let any_error = query(&addr, &["this is not json".to_string()], &mut out).expect("query");
+    assert!(any_error);
+    let text = String::from_utf8(out).unwrap();
+    assert!(text.contains("\"kind\":\"parse\""), "typed parse error: {text}");
+
+    // a schema failure keeps the connection serving subsequent requests
+    let mut out: Vec<u8> = Vec::new();
+    let any_error = query(
+        &addr,
+        &[r#"{"method":"ping","extra":1}"#.to_string(), r#"{"method":"ping"}"#.to_string()],
+        &mut out,
+    )
+    .expect("query");
+    assert!(any_error, "first request errored");
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines.len(), 2);
+    assert!(lines[0].contains("\"kind\":\"schema\""));
+    assert!(lines[1].contains("\"event\":\"done\""), "connection survived the schema error");
+
+    // the stats helper the CLI's --stats flag uses
+    let stats = fetch_stats(&addr).expect("stats");
+    let j = Json::parse(&stats).unwrap();
+    assert_eq!(
+        j.field("result")
+            .unwrap()
+            .field("stages")
+            .unwrap()
+            .field("sensitivity_computed")
+            .unwrap()
+            .as_f64()
+            .unwrap(),
+        1.0
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}

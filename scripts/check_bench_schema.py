@@ -142,10 +142,39 @@ def check_kernels(path, d):
             num_or_null(path, row, key)
 
 
+def check_search_service(path, d):
+    if d.get("bench") != "search_service":
+        fail(path, f"bench must be 'search_service', got {d.get('bench')!r}")
+    if not isinstance(d.get("status"), str):
+        fail(path, "status must be a string")
+    if not isinstance(d.get("model"), str):
+        fail(path, "model must be a string")
+    if not isinstance(d.get("samples"), int):
+        fail(path, "samples must be an int")
+    for key in ("cold_ms", "warm_ms", "served_vs_inprocess", "stream_overhead"):
+        num_or_null(path, d, key)
+    rows = d.get("throughput")
+    if not isinstance(rows, list) or not rows:
+        fail(path, "throughput must be a non-empty list")
+    paths = set()
+    for row in rows:
+        if not isinstance(row, dict) or not isinstance(row.get("path"), str):
+            fail(path, "throughput rows must be objects with a 'path' string")
+        if not isinstance(row.get("jobs"), int):
+            fail(path, "throughput rows need an int 'jobs'")
+        num_or_null(path, row, "configs_per_sec")
+        paths.add(row["path"])
+    # the ratio is meaningless unless both sides of it are recorded
+    for need in ("in_process_batch", "served_core", "served_tcp"):
+        if need not in paths:
+            fail(path, f"throughput must include a {need!r} row")
+
+
 CHECKS = {
     "BENCH_parallel_study.json": check_parallel_study,
     "BENCH_fit_scoring.json": check_fit_scoring,
     "BENCH_kernels.json": check_kernels,
+    "BENCH_search_service.json": check_search_service,
 }
 
 

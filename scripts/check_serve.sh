@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Search-service smoke for `make check-serve` (the in-tree protocol and
+# service suites run under `cargo test`; this drives the real binaries):
+#
+#   1. `fitq serve` on an ephemeral port over a temp results root
+#   2. a cold streamed search (trains + traces once, streams `front`
+#      events, answers with table residency cold+compute)
+#   3. the same search again — must be served from the resident table
+#      (residency warm, no second sensitivity computation)
+#   4. a `score` and a `pareto` round-trip over a config extracted from
+#      the search's own front (so the script needs no knowledge of the
+#      model's block layout)
+#   5. a malformed request: the server must answer a typed parse error
+#      and the client must exit nonzero
+#   6. `fitq serve --stats` must report the resident table and exactly
+#      one sensitivity computation across everything above
+set -euo pipefail
+
+BIN=${FITQ_BIN:-target/release/fitq}
+DIR=$(mktemp -d)
+SERVER_PID=
+cleanup() {
+  [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+  rm -rf "$DIR"
+}
+trap cleanup EXIT
+
+STUDY='{"model":"cnn_mnist","fp_epochs":1,"seed":0,"trace":{"batch":8,"min_iters":2,"max_iters":2}}'
+SEARCH='{"method":"search","study":'$STUDY',"mode":"random","samples":2000,"seed":7,"shards":4,"stream":true}'
+
+echo "== serve on an ephemeral port =="
+FITQ_RESULTS="$DIR" "$BIN" serve --backend native --port 0 --jobs 2 \
+  > "$DIR/serve.log" 2>&1 &
+SERVER_PID=$!
+ADDR=
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's/.*listening on \([^ ]*\) .*/\1/p' "$DIR/serve.log")
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { cat "$DIR/serve.log" >&2; exit 1; }
+  sleep 0.2
+done
+[ -n "$ADDR" ] || { echo "error: server never announced its address" >&2; exit 1; }
+echo "   listening on $ADDR"
+
+"$BIN" query --connect "$ADDR" '{"method":"ping"}' | grep -q '"event":"done"' || {
+  echo "error: ping got no done event" >&2
+  exit 1
+}
+
+echo "== cold streamed search (trains once, streams fronts) =="
+"$BIN" query --connect "$ADDR" "$SEARCH" > "$DIR/cold.jsonl"
+grep -q '"event":"front"' "$DIR/cold.jsonl" || {
+  echo "error: streamed search emitted no front events" >&2
+  exit 1
+}
+grep -q '"table":"cold+compute"' "$DIR/cold.jsonl" || {
+  echo "error: first search was not a cold computation" >&2
+  exit 1
+}
+
+echo "== warm repeat (served from the resident table) =="
+"$BIN" query --connect "$ADDR" "$SEARCH" > "$DIR/warm.jsonl"
+grep -q '"table":"warm"' "$DIR/warm.jsonl" || {
+  echo "error: repeat search did not hit the resident table" >&2
+  exit 1
+}
+
+echo "== score + pareto over a config from the search's own front =="
+python3 - "$DIR" "$STUDY" <<'EOF'
+import json, sys
+dir, study = sys.argv[1], sys.argv[2]
+done = [json.loads(l) for l in open(f"{dir}/warm.jsonl") if '"event":"done"' in l][-1]
+cfg = done["result"]["front"][0]["config"]
+req = {"method": "score", "study": json.loads(study), "configs": [cfg, cfg]}
+open(f"{dir}/score.json", "w").write(json.dumps(req))
+req["method"] = "pareto"
+del req["configs"]
+req["configs"] = [cfg]
+open(f"{dir}/pareto.json", "w").write(json.dumps(req))
+EOF
+"$BIN" query --connect "$ADDR" "$(cat "$DIR/score.json")" > "$DIR/score.jsonl"
+grep -q '"scores":\[\[' "$DIR/score.jsonl" || {
+  echo "error: score returned no score pairs" >&2
+  exit 1
+}
+"$BIN" query --connect "$ADDR" "$(cat "$DIR/pareto.json")" | grep -q '"front":\[' || {
+  echo "error: pareto returned no front" >&2
+  exit 1
+}
+
+echo "== malformed request: typed error, nonzero client exit =="
+if "$BIN" query --connect "$ADDR" 'this is not json' > "$DIR/bad.jsonl"; then
+  echo "error: client exited zero on a server error event" >&2
+  exit 1
+fi
+grep -q '"kind":"parse"' "$DIR/bad.jsonl" || {
+  echo "error: malformed request did not get a typed parse error" >&2
+  exit 1
+}
+
+echo "== stats: one resident table, exactly one sensitivity computation =="
+"$BIN" serve --stats "$ADDR" > "$DIR/stats.txt"
+grep -q 'stages.sensitivity_computed: 1$' "$DIR/stats.txt" || {
+  cat "$DIR/stats.txt" >&2
+  echo "error: expected exactly one sensitivity computation" >&2
+  exit 1
+}
+grep -q 'resident tables (1)' "$DIR/stats.txt" || {
+  cat "$DIR/stats.txt" >&2
+  echo "error: expected one resident table" >&2
+  exit 1
+}
+echo "check-serve: ok"
