@@ -1,7 +1,7 @@
 # Convenience targets; the Rust error messages and the examples refer to
 # `make artifacts`.
 
-.PHONY: artifacts test bench bench-scoring bench-native bench-kernels bench-search bench-smoke check-bench-schema check-manifests check-faults check-serve
+.PHONY: artifacts test bench bench-scoring bench-native bench-kernels bench-search bench-smoke check-bench-schema check-manifests check-faults check-serve check-trace
 
 # Lower every L2 entry point to HLO text + manifest.json (requires the
 # python/ toolchain: JAX CPU; see DESIGN.md "Compile side").
@@ -74,3 +74,11 @@ check-faults:
 check-serve:
 	cargo build --release
 	bash scripts/check_serve.sh
+
+# Op-trace smoke (DESIGN.md "Op tracing & analysis"): a traced native
+# train on cnn_mnist, `fitq trace-report` rendering conv rows with rate
+# and roofline columns (JSON leg schema-checked), the `fitq tune`
+# routing trailer, and a corrupted stored trace exiting nonzero.
+check-trace:
+	cargo build --release
+	bash scripts/check_trace.sh

@@ -1,0 +1,510 @@
+//! Cost-report analysis over op traces (`fitq trace-report`).
+//!
+//! Consumes two inputs, both already on disk:
+//!
+//! - an `optrace` artifact (kind `"optrace"`, schema v1 — encoded by
+//!   [`pipeline::codec`](super::pipeline::codec), recorded by the native
+//!   backend's opt-in profiler, [`native::trace`](crate::native::trace));
+//! - the measured kernel peaks in `BENCH_kernels.json`.
+//!
+//! and renders a per-(op, layer, variant) cost table: wall-time share,
+//! achieved GFLOP/s and GB/s, and — for ops whose kernels were bench-peaked
+//! — the roofline ratio (achieved / best measured variant for that op).
+//! The derived rates fall straight out of the trace units: the profiler
+//! stores FLOPs and `f32` element counts per aggregate, so
+//! `flops / wall_ns` *is* GFLOP/s and `4 * elems / wall_ns` *is* GB/s.
+//!
+//! Analysis is read-only and lossy by design (it never feeds anything back
+//! into the pipeline, so nothing here may touch a stage digest), and every
+//! failure mode is a typed [`AnalysisError`] — the fuzz harness
+//! (`tests/fuzz_lite.rs`) pins that malformed bench files and corrupt
+//! trace bytes surface as errors, never panics.
+
+use std::fmt;
+
+use crate::native::trace::{OpAggregate, OpTraceReport, TracedOp};
+use crate::native::tune::{RouteTable, TunedOp};
+use crate::runtime::Json;
+
+/// Typed failure modes of the analysis layer. `kind()` strings are part
+/// of the fuzz-harness stability pin (`tests/fuzz_lite.rs`) — extend the
+/// enum freely, but never rename an existing kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AnalysisError {
+    /// `BENCH_kernels.json` is not valid JSON.
+    BenchParse(String),
+    /// The bench file parsed but is missing/mistyping a required field.
+    BenchSchema(String),
+    /// The stored optrace artifact failed to decode.
+    TraceDecode(String),
+    /// The trace decoded but holds zero rows — nothing to report on.
+    EmptyTrace,
+}
+
+impl AnalysisError {
+    /// Stable machine-readable kind tag (pinned by `tests/fuzz_lite.rs`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AnalysisError::BenchParse(_) => "bench_parse",
+            AnalysisError::BenchSchema(_) => "bench_schema",
+            AnalysisError::TraceDecode(_) => "trace_decode",
+            AnalysisError::EmptyTrace => "empty_trace",
+        }
+    }
+}
+
+impl fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AnalysisError::BenchParse(e) => write!(f, "bench file is not valid JSON: {e}"),
+            AnalysisError::BenchSchema(e) => write!(f, "bench file schema: {e}"),
+            AnalysisError::TraceDecode(e) => write!(f, "optrace artifact: {e}"),
+            AnalysisError::EmptyTrace => write!(f, "trace holds zero op rows"),
+        }
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+/// Best measured GFLOP/s per kernel family, extracted from
+/// `BENCH_kernels.json`. Dense ops have no bench rows (the bench mirrors
+/// the conv kernels only), so their peak is `None` and the report prints
+/// `-` in the roofline column instead of inventing a denominator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchPeaks {
+    rows: Vec<(String, f64)>,
+}
+
+impl BenchPeaks {
+    /// The bench kernel-name prefix an op's measurements live under.
+    fn prefix(op: TracedOp) -> Option<&'static str> {
+        match op {
+            TracedOp::ConvFwd => Some("conv2d_fwd_"),
+            TracedOp::ConvBwdW => Some("conv2d_bwd_w_"),
+            TracedOp::ConvBwdX => Some("conv2d_bwd_x_"),
+            _ => None,
+        }
+    }
+
+    /// Best measured GFLOP/s across every benched (shape, variant) for
+    /// this op's kernel family, or `None` if the family was never benched.
+    pub fn peak_gflops(&self, op: TracedOp) -> Option<f64> {
+        let prefix = Self::prefix(op)?;
+        self.rows
+            .iter()
+            .filter(|(kernel, _)| kernel.starts_with(prefix))
+            .map(|(_, gflops)| *gflops)
+            .fold(None, |best, g| Some(best.map_or(g, |b: f64| b.max(g))))
+    }
+}
+
+/// Parse `BENCH_kernels.json` down to the per-kernel peak table.
+///
+/// Strict about what it reads (`kernels` must be an array of objects with
+/// a string `kernel` and a numeric `variants` map) and silent about the
+/// rest — extra top-level fields are the bench's business, not ours.
+pub fn parse_bench_kernels(text: &str) -> Result<BenchPeaks, AnalysisError> {
+    let json = Json::parse(text).map_err(AnalysisError::BenchParse)?;
+    let kernels = json.arr_field("kernels").map_err(AnalysisError::BenchSchema)?;
+    let mut rows = Vec::new();
+    for (i, row) in kernels.iter().enumerate() {
+        let kernel = row
+            .str_field("kernel")
+            .map_err(|e| AnalysisError::BenchSchema(format!("kernels[{i}]: {e}")))?;
+        let variants = row
+            .field("variants")
+            .map_err(|e| AnalysisError::BenchSchema(format!("kernels[{i}]: {e}")))?
+            .as_obj()
+            .ok_or_else(|| {
+                AnalysisError::BenchSchema(format!("kernels[{i}]: \"variants\" is not an object"))
+            })?;
+        for (isa, v) in variants {
+            let gflops = v.as_f64().ok_or_else(|| {
+                AnalysisError::BenchSchema(format!(
+                    "kernels[{i}].variants.{isa} is not a number"
+                ))
+            })?;
+            if !gflops.is_finite() || gflops < 0.0 {
+                return Err(AnalysisError::BenchSchema(format!(
+                    "kernels[{i}].variants.{isa} is not a finite non-negative number"
+                )));
+            }
+            rows.push((kernel.to_string(), gflops));
+        }
+    }
+    Ok(BenchPeaks { rows })
+}
+
+/// One rendered cost line: an aggregate plus its derived rates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostRow {
+    /// The underlying trace aggregate (op, layer, variant, counters).
+    pub agg: OpAggregate,
+    /// Share of the report's total wall time, in percent.
+    pub time_pct: f64,
+    /// Achieved GFLOP/s (`flops / wall_ns`); `0.0` when wall is zero
+    /// (e.g. a normalized trace).
+    pub gflops: f64,
+    /// Achieved GB/s over `4 * (elems_read + elems_written)` bytes.
+    pub gbs: f64,
+    /// `gflops / peak` against the best benched variant of this op's
+    /// kernel family; `None` when the family has no bench rows.
+    pub roofline: Option<f64>,
+}
+
+/// The full cost report: labeled trace rows, sorted by wall time
+/// descending (ties keep the trace's deterministic insertion order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostReport {
+    pub model: String,
+    pub workload: String,
+    pub threads: u32,
+    pub total_wall_ns: u64,
+    pub rows: Vec<CostRow>,
+}
+
+/// Derive the cost report from a decoded trace and the bench peaks.
+///
+/// Errors with [`AnalysisError::EmptyTrace`] on a rowless trace — an
+/// armed profiler that never saw a dispatch is a usage error worth a
+/// loud message, not an empty table.
+pub fn cost_report(report: &OpTraceReport, peaks: &BenchPeaks) -> Result<CostReport, AnalysisError> {
+    if report.rows.is_empty() {
+        return Err(AnalysisError::EmptyTrace);
+    }
+    let total = report.total_wall_ns();
+    let mut rows: Vec<CostRow> = report
+        .rows
+        .iter()
+        .map(|agg| {
+            let ns = agg.wall_ns as f64;
+            let gflops = if agg.wall_ns == 0 { 0.0 } else { agg.flops as f64 / ns };
+            let bytes = 4.0 * (agg.elems_read + agg.elems_written) as f64;
+            let gbs = if agg.wall_ns == 0 { 0.0 } else { bytes / ns };
+            let time_pct =
+                if total == 0 { 0.0 } else { 100.0 * agg.wall_ns as f64 / total as f64 };
+            let roofline = peaks
+                .peak_gflops(agg.op)
+                .filter(|p| *p > 0.0)
+                .map(|p| gflops / p);
+            CostRow { agg: agg.clone(), time_pct, gflops, gbs, roofline }
+        })
+        .collect();
+    // stable sort: equal wall times keep first-recorded-first order, so
+    // the report is deterministic even on a wall-normalized trace
+    rows.sort_by(|a, b| b.agg.wall_ns.cmp(&a.agg.wall_ns));
+    Ok(CostReport {
+        model: report.model.clone(),
+        workload: report.workload.clone(),
+        threads: report.threads,
+        total_wall_ns: total,
+        rows,
+    })
+}
+
+/// Render the cost report as a fixed-width text table (stdout surface of
+/// `fitq trace-report`).
+pub fn render_text(report: &CostReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "op trace: model={} workload={} threads={} total={:.3} ms\n",
+        report.model,
+        report.workload,
+        report.threads,
+        report.total_wall_ns as f64 / 1e6
+    ));
+    out.push_str(&format!(
+        "{:<18} {:<6} {:<14} {:<22} {:>8} {:>7} {:>10} {:>8} {:>8} {:>9}\n",
+        "op", "layer", "variant", "shape", "calls", "time%", "ms", "GFLOP/s", "GB/s", "roofline"
+    ));
+    for row in &report.rows {
+        let roofline = match row.roofline {
+            Some(r) => format!("{r:.2}"),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<18} {:<6} {:<14} {:<22} {:>8} {:>6.1}% {:>10.3} {:>8.2} {:>8.2} {:>9}\n",
+            row.agg.op.name(),
+            row.agg.layer,
+            row.agg.variant_name(),
+            row.agg.shape,
+            row.agg.calls,
+            row.time_pct,
+            row.agg.wall_ns as f64 / 1e6,
+            row.gflops,
+            row.gbs,
+            roofline,
+        ));
+    }
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render the cost report as the pinned machine-readable JSON shape
+/// checked by `scripts/check_bench_schema.py` (`TRACE_report.json`).
+pub fn render_json(report: &CostReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"report\": \"op_trace\",\n");
+    out.push_str(&format!("  \"model\": {},\n", json_str(&report.model)));
+    out.push_str(&format!("  \"workload\": {},\n", json_str(&report.workload)));
+    out.push_str(&format!("  \"threads\": {},\n", report.threads));
+    out.push_str(&format!("  \"total_ms\": {:.6},\n", report.total_wall_ns as f64 / 1e6));
+    out.push_str("  \"rows\": [\n");
+    for (i, row) in report.rows.iter().enumerate() {
+        let roofline = match row.roofline {
+            Some(r) => format!("{r:.6}"),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "    {{\"op\": {}, \"layer\": {}, \"variant\": {}, \"shape\": {}, \
+             \"calls\": {}, \"time_pct\": {:.6}, \"ms\": {:.6}, \"gflops\": {:.6}, \
+             \"gbs\": {:.6}, \"roofline\": {}}}{}\n",
+            json_str(row.agg.op.name()),
+            json_str(&row.agg.layer),
+            json_str(&row.agg.variant_name()),
+            json_str(&row.agg.shape),
+            row.agg.calls,
+            row.time_pct,
+            row.agg.wall_ns as f64 / 1e6,
+            row.gflops,
+            row.gbs,
+            roofline,
+            if i + 1 < report.rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Sanity-check the tuner's width-class routing against a real workload's
+/// traced shape distribution — the optional trailer on `fitq tune`.
+///
+/// For every traced row of a tuned op, look up what the route table would
+/// pick for that width today and report agreement or drift. A mismatch is
+/// not an error (the trace may predate a re-tune; the table may have been
+/// measured under a different thread budget) — it is exactly the signal
+/// the trailer exists to surface.
+pub fn routing_trailer(report: &OpTraceReport, table: &RouteTable) -> Vec<String> {
+    let mut lines = Vec::new();
+    for agg in &report.rows {
+        let Some((isa, lowering)) = agg.variant else { continue };
+        let Some(op) = TunedOp::from_u8(agg.op as u8) else { continue };
+        let expect = table.choice(op, agg.width as usize);
+        let traced = format!("{}/{}", lowering.name(), isa.name());
+        let routed = format!("{}/{}", expect.lowering.name(), expect.isa.name());
+        let verdict = if traced == routed { "ok" } else { "MISMATCH" };
+        lines.push(format!(
+            "{} w{} ({}): traced {traced}, table {routed} [{verdict}]",
+            op.name(),
+            agg.width,
+            agg.shape,
+        ));
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::simd::Isa;
+    use crate::native::tune::Lowering;
+
+    fn agg(
+        op: TracedOp,
+        layer: &str,
+        variant: Option<(Isa, Lowering)>,
+        wall_ns: u64,
+        flops: u64,
+    ) -> OpAggregate {
+        OpAggregate {
+            op,
+            layer: layer.to_string(),
+            variant,
+            width: 16,
+            shape: "b32 16x16 16->32".to_string(),
+            calls: 10,
+            elems_read: 1_000,
+            elems_written: 500,
+            flops,
+            wall_ns,
+        }
+    }
+
+    const BENCH: &str = r#"{
+        "kernels": [
+            {"kernel": "conv2d_fwd_direct", "shape": "s", "variants": {"scalar": 7.5, "avx2": 9.2}},
+            {"kernel": "conv2d_fwd_im2col", "shape": "s", "variants": {"scalar": 6.3, "avx2": 13.9}},
+            {"kernel": "conv2d_bwd_x_gemm", "shape": "s", "variants": {"avx2": 15.7}},
+            {"kernel": "im2col3x3", "shape": "s", "variants": {"scalar": 0.7}}
+        ]
+    }"#;
+
+    #[test]
+    fn error_kinds_are_stable() {
+        // these strings are pinned by tests/fuzz_lite.rs — renaming one
+        // breaks the fuzz harness's error-kind stability contract
+        assert_eq!(AnalysisError::BenchParse(String::new()).kind(), "bench_parse");
+        assert_eq!(AnalysisError::BenchSchema(String::new()).kind(), "bench_schema");
+        assert_eq!(AnalysisError::TraceDecode(String::new()).kind(), "trace_decode");
+        assert_eq!(AnalysisError::EmptyTrace.kind(), "empty_trace");
+    }
+
+    #[test]
+    fn peaks_take_the_family_max_across_kernels_and_variants() {
+        let peaks = parse_bench_kernels(BENCH).unwrap();
+        // conv_fwd family spans direct and im2col rows; max is im2col/avx2
+        assert_eq!(peaks.peak_gflops(TracedOp::ConvFwd), Some(13.9));
+        assert_eq!(peaks.peak_gflops(TracedOp::ConvBwdX), Some(15.7));
+        // no bench rows for that family at all
+        assert_eq!(peaks.peak_gflops(TracedOp::ConvBwdW), None);
+        // dense and element-wise ops are never benched
+        assert_eq!(peaks.peak_gflops(TracedOp::DenseFwd), None);
+        assert_eq!(peaks.peak_gflops(TracedOp::Relu), None);
+    }
+
+    #[test]
+    fn bench_parse_failures_are_typed() {
+        assert_eq!(parse_bench_kernels("not json").unwrap_err().kind(), "bench_parse");
+        assert_eq!(parse_bench_kernels("{}").unwrap_err().kind(), "bench_schema");
+        assert_eq!(
+            parse_bench_kernels(r#"{"kernels": [{"kernel": 3}]}"#).unwrap_err().kind(),
+            "bench_schema"
+        );
+        assert_eq!(
+            parse_bench_kernels(r#"{"kernels": [{"kernel": "k", "variants": {"scalar": "x"}}]}"#)
+                .unwrap_err()
+                .kind(),
+            "bench_schema"
+        );
+    }
+
+    #[test]
+    fn cost_report_sorts_by_wall_and_derives_rates() {
+        let peaks = parse_bench_kernels(BENCH).unwrap();
+        let trace = OpTraceReport {
+            model: "cnn_mnist".into(),
+            workload: "train_epoch".into(),
+            threads: 1,
+            rows: vec![
+                agg(TracedOp::Relu, "conv0", None, 1_000, 1_500),
+                agg(
+                    TracedOp::ConvFwd,
+                    "conv0",
+                    Some((Isa::Avx2, Lowering::Direct)),
+                    3_000,
+                    27_900,
+                ),
+            ],
+        };
+        let report = cost_report(&trace, &peaks).unwrap();
+        assert_eq!(report.total_wall_ns, 4_000);
+        // conv row (larger wall) sorts first
+        assert_eq!(report.rows[0].agg.op, TracedOp::ConvFwd);
+        assert!((report.rows[0].time_pct - 75.0).abs() < 1e-9);
+        // 27_900 flops / 3_000 ns = 9.3 GFLOP/s; peak 13.9 → roofline ≈ 0.669
+        assert!((report.rows[0].gflops - 9.3).abs() < 1e-9);
+        let roofline = report.rows[0].roofline.unwrap();
+        assert!((roofline - 9.3 / 13.9).abs() < 1e-9);
+        // 1_500 f32 elems = 6_000 bytes over 3_000 ns = 2 GB/s
+        assert!((report.rows[0].gbs - 2.0).abs() < 1e-9);
+        // relu has no bench family → no roofline denominator
+        assert_eq!(report.rows[1].roofline, None);
+    }
+
+    #[test]
+    fn empty_and_normalized_traces_are_handled() {
+        let peaks = parse_bench_kernels(BENCH).unwrap();
+        let empty = OpTraceReport {
+            model: String::new(),
+            workload: String::new(),
+            threads: 1,
+            rows: vec![],
+        };
+        assert_eq!(cost_report(&empty, &peaks).unwrap_err(), AnalysisError::EmptyTrace);
+
+        // a wall-normalized trace (codec byte-comparison form) must not
+        // divide by zero anywhere
+        let trace = OpTraceReport {
+            model: "m".into(),
+            workload: "w".into(),
+            threads: 4,
+            rows: vec![agg(TracedOp::ConvFwd, "conv0", None, 0, 100)],
+        };
+        let report = cost_report(&trace, &peaks).unwrap();
+        assert_eq!(report.total_wall_ns, 0);
+        assert_eq!(report.rows[0].time_pct, 0.0);
+        assert_eq!(report.rows[0].gflops, 0.0);
+        assert_eq!(report.rows[0].gbs, 0.0);
+    }
+
+    #[test]
+    fn renders_are_deterministic_and_json_is_parseable() {
+        let peaks = parse_bench_kernels(BENCH).unwrap();
+        let trace = OpTraceReport {
+            model: "cnn_mnist".into(),
+            workload: "train_epoch".into(),
+            threads: 2,
+            rows: vec![agg(
+                TracedOp::ConvFwd,
+                "conv0",
+                Some((Isa::Sse2, Lowering::Im2col)),
+                2_000,
+                10_000,
+            )],
+        };
+        let report = cost_report(&trace, &peaks).unwrap();
+        let text = render_text(&report);
+        assert!(text.contains("conv_fwd"));
+        assert!(text.contains("im2col/sse2"));
+        assert!(text.contains("GFLOP/s"));
+        assert_eq!(text, render_text(&report), "render must be pure");
+
+        let json = render_json(&report);
+        let parsed = Json::parse(&json).expect("render_json must emit valid JSON");
+        assert_eq!(parsed.str_field("report").unwrap(), "op_trace");
+        assert_eq!(parsed.str_field("model").unwrap(), "cnn_mnist");
+        assert_eq!(parsed.usize_field("threads").unwrap(), 2);
+        let rows = parsed.arr_field("rows").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].str_field("op").unwrap(), "conv_fwd");
+        // conv_fwd is bench-peaked, so roofline must be a number here
+        assert!(rows[0].field("roofline").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn routing_trailer_flags_drift_only() {
+        let table = RouteTable::static_for(Isa::Scalar);
+        let trace = OpTraceReport {
+            model: "m".into(),
+            workload: "w".into(),
+            threads: 1,
+            rows: vec![
+                // scalar static table routes everything to direct/scalar
+                agg(TracedOp::ConvFwd, "conv0", Some((Isa::Scalar, Lowering::Direct)), 1, 1),
+                agg(TracedOp::ConvFwd, "conv1", Some((Isa::Avx2, Lowering::Im2col)), 1, 1),
+                // untuned ops never appear in the trailer
+                agg(TracedOp::Relu, "conv0", None, 1, 1),
+            ],
+        };
+        let lines = routing_trailer(&trace, &table);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].ends_with("[ok]"), "{}", lines[0]);
+        assert!(lines[1].ends_with("[MISMATCH]"), "{}", lines[1]);
+    }
+}

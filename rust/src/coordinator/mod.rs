@@ -19,8 +19,12 @@
 //!   incremental Pareto fronts over a line-JSON protocol.
 //! - `experiments`: one module per paper table/figure.
 //! - `report`: CSV/markdown emission under results/.
+//! - `analysis`: read-only cost reports over native op traces
+//!   (`fitq trace-report`) — per-(op, layer, variant) time/GFLOP/s/GB/s
+//!   tables rooflined against the measured peaks in `BENCH_kernels.json`.
 
 pub mod allocate;
+pub mod analysis;
 pub mod evaluator;
 pub mod experiments;
 pub mod parallel;

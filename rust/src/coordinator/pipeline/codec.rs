@@ -18,6 +18,9 @@ use super::super::sensitivity::SensitivityReport;
 use super::super::traces::{Estimator, TraceResult};
 use super::super::trainer::ActRanges;
 use crate::metrics::{Metric, SensitivityInputs};
+use crate::native::simd::Isa;
+use crate::native::trace::{OpAggregate, OpTraceReport, TracedOp};
+use crate::native::tune::Lowering;
 use crate::quant::BitConfig;
 
 /// Schema versions, one per cached payload kind (the checkpoint kind
@@ -32,6 +35,8 @@ pub const SENSITIVITY_SCHEMA: u32 = 1;
 /// v2: appended the per-config failure list (degraded sweep slots).
 pub const STUDY_SCHEMA: u32 = 2;
 pub const CKPT_SCHEMA: u32 = 1;
+/// Op-trace payloads (kind `optrace`, `native::trace::OPTRACE_KIND`).
+pub const OPTRACE_SCHEMA: u32 = 1;
 
 /// Little-endian byte sink for cache payloads and headers.
 #[derive(Debug, Default)]
@@ -404,6 +409,91 @@ pub fn decode_study(bytes: &[u8]) -> Result<StudyResult> {
     Ok(StudyResult { model, fp_test_score, outcomes, sens, correlations, failures })
 }
 
+fn write_op_aggregate(w: &mut ByteWriter, row: &OpAggregate) {
+    w.u8(row.op as u8);
+    w.str(&row.layer);
+    match row.variant {
+        Some((isa, lowering)) => {
+            w.bool(true);
+            w.u8(isa as u8);
+            w.u8(lowering as u8);
+        }
+        None => w.bool(false),
+    }
+    w.u32(row.width);
+    w.str(&row.shape);
+    w.u64(row.calls);
+    w.u64(row.elems_read);
+    w.u64(row.elems_written);
+    w.u64(row.flops);
+    w.u64(row.wall_ns);
+}
+
+fn read_op_aggregate(r: &mut ByteReader) -> Result<OpAggregate> {
+    let op = match TracedOp::from_u8(r.u8()?) {
+        Some(op) => op,
+        None => bail!("unknown optrace op tag"),
+    };
+    let layer = r.str()?;
+    let variant = if r.bool()? {
+        let isa = match Isa::from_u8(r.u8()?) {
+            Some(isa) => isa,
+            None => bail!("unknown optrace isa tag"),
+        };
+        let lowering = match Lowering::from_u8(r.u8()?) {
+            Some(l) => l,
+            None => bail!("unknown optrace lowering tag"),
+        };
+        Some((isa, lowering))
+    } else {
+        None
+    };
+    Ok(OpAggregate {
+        op,
+        layer,
+        variant,
+        width: r.u32()?,
+        shape: r.str()?,
+        calls: r.u64()?,
+        elems_read: r.u64()?,
+        elems_written: r.u64()?,
+        flops: r.u64()?,
+        wall_ns: r.u64()?,
+    })
+}
+
+/// Serialize an op-trace report for the `optrace` cache kind. Every
+/// counter round trips bit-exactly; byte-stable comparisons go through
+/// [`OpTraceReport::normalized`] first (wall clock is the one
+/// nondeterministic field).
+pub fn encode_optrace(t: &OpTraceReport) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.str(&t.model);
+    w.str(&t.workload);
+    w.u32(t.threads);
+    w.u64(t.rows.len() as u64);
+    for row in &t.rows {
+        write_op_aggregate(&mut w, row);
+    }
+    w.into_bytes()
+}
+
+/// Decode an `optrace` payload; fail-closed on truncation, trailing
+/// bytes, and unknown op/isa/lowering tags.
+pub fn decode_optrace(bytes: &[u8]) -> Result<OpTraceReport> {
+    let mut r = ByteReader::new(bytes);
+    let model = r.str()?;
+    let workload = r.str()?;
+    let threads = r.u32()?;
+    let n_rows = r.u64()? as usize;
+    let mut rows = Vec::with_capacity(n_rows.min(r.remaining()));
+    for _ in 0..n_rows {
+        rows.push(read_op_aggregate(&mut r)?);
+    }
+    r.done()?;
+    Ok(OpTraceReport { model, workload, threads, rows })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,5 +616,90 @@ mod tests {
         w.f64(0.0);
         w.f64s(&[]);
         assert!(decode_trace(&w.into_bytes()).is_err(), "estimator tag 9");
+    }
+
+    fn sample_optrace() -> OpTraceReport {
+        OpTraceReport {
+            model: "cnn_mnist".into(),
+            workload: "train_epoch".into(),
+            threads: 2,
+            rows: vec![
+                OpAggregate {
+                    op: TracedOp::ConvFwd,
+                    layer: "conv0".into(),
+                    variant: Some((Isa::Scalar, Lowering::Im2col)),
+                    width: 8,
+                    shape: "b32 16x16 1->8".into(),
+                    calls: 10,
+                    elems_read: 81_920,
+                    elems_written: 655_360,
+                    flops: 11_796_480,
+                    wall_ns: 1_234_567,
+                },
+                OpAggregate {
+                    op: TracedOp::Relu,
+                    layer: "conv0".into(),
+                    variant: None,
+                    width: 0,
+                    shape: "b32 16x16 c8".into(),
+                    calls: 10,
+                    elems_read: 655_360,
+                    elems_written: 655_360,
+                    flops: 655_360,
+                    wall_ns: 7_890,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn optrace_roundtrip_reencodes_identically() {
+        let t = sample_optrace();
+        let bytes = encode_optrace(&t);
+        let back = decode_optrace(&bytes).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(encode_optrace(&back), bytes);
+    }
+
+    #[test]
+    fn optrace_truncations_error_instead_of_panicking() {
+        let bytes = encode_optrace(&sample_optrace());
+        for cut in [0, 1, 5, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_optrace(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_optrace(&long).is_err(), "trailing garbage");
+    }
+
+    #[test]
+    fn optrace_unknown_tags_are_rejected() {
+        // unknown op tag
+        let mut t = sample_optrace();
+        let mut bytes = encode_optrace(&t);
+        // first row's op tag sits right after the two header strings +
+        // threads + row count
+        let op_at = 8 + t.model.len() + 8 + t.workload.len() + 4 + 8;
+        bytes[op_at] = 200;
+        assert!(decode_optrace(&bytes).is_err(), "op tag 200");
+        // unknown isa tag inside the variant
+        let isa_at = op_at + 1 + 8 + t.rows[0].layer.len() + 1;
+        let mut bytes = encode_optrace(&t);
+        bytes[isa_at] = 201;
+        assert!(decode_optrace(&bytes).is_err(), "isa tag 201");
+        // unknown lowering tag
+        let mut bytes = encode_optrace(&t);
+        bytes[isa_at + 1] = 202;
+        assert!(decode_optrace(&bytes).is_err(), "lowering tag 202");
+        // normalized() then roundtrip stays byte-stable (the comparison
+        // form op_trace.rs relies on)
+        for row in &mut t.rows {
+            row.wall_ns = 7;
+        }
+        let norm = t.normalized();
+        assert_eq!(
+            encode_optrace(&decode_optrace(&encode_optrace(&norm)).unwrap()),
+            encode_optrace(&norm)
+        );
     }
 }

@@ -234,6 +234,19 @@ pub fn sensitivity_key(
     h.finish()
 }
 
+/// Op-trace key: backend + model identity + workload label, nothing
+/// else. Thread budgets, `--jobs`, kernel modes and the tracing switch
+/// itself are all deliberately excluded — the counters they could
+/// affect are wall-clock only, and profiling must never split a digest
+/// (`tests/op_trace.rs` pins the exclusion).
+pub fn optrace_key(backend: &str, m: &ModelManifest, workload: &str) -> Digest {
+    let mut h = Hasher::new();
+    h.str("optrace/v1");
+    hash_model(&mut h, backend, m);
+    h.str(workload);
+    h.finish()
+}
+
 /// Study key: every `StudyOptions` field *except* `jobs` — results are
 /// jobs-invariant by the parallel determinism contract, so a study cached
 /// at `--jobs 1` must hit at `--jobs 8` and vice versa. `calib_b` rides
@@ -874,6 +887,17 @@ mod tests {
         // jobs stays excluded from the study key at any backend
         let opt8 = StudyOptions { jobs: 8, ..StudyOptions::default() };
         assert_eq!(study_key("native", &m, &opt), study_key("native", &m, &opt8));
+    }
+
+    #[test]
+    fn optrace_key_separates_backend_model_and_workload_only() {
+        let m = crate::native::model::Plan::new(crate::native::model::STUDY_CNNS[0]).manifest();
+        let m2 = crate::native::model::Plan::new(crate::native::model::STUDY_CNNS[2]).manifest();
+        let k = optrace_key("native", &m, "train_epoch");
+        assert_eq!(k, optrace_key("native", &m, "train_epoch"), "pure in its inputs");
+        assert_ne!(k, optrace_key("pjrt", &m, "train_epoch"));
+        assert_ne!(k, optrace_key("native", &m2, "train_epoch"));
+        assert_ne!(k, optrace_key("native", &m, "study"));
     }
 
     #[test]

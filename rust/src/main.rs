@@ -26,7 +26,10 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use fitq::coordinator::pipeline::{fault, registry, stages, ArtifactCache, ExpOptions, Pipeline};
+use fitq::coordinator::analysis;
+use fitq::coordinator::pipeline::{
+    codec, fault, registry, stages, ArtifactCache, ExpOptions, Pipeline,
+};
 use fitq::coordinator::service::{
     bind, fetch_stats, serve_on, Budget, Request, SearchMode, ServiceConfig, ServiceCore,
     ServiceWorker, StudySpec,
@@ -35,7 +38,7 @@ use fitq::coordinator::{
     dataset_for, Estimator, ModelState, TraceEngine, TraceOptions, Trainer,
 };
 use fitq::data::EvalSet;
-use fitq::native::{simd, tune};
+use fitq::native::{simd, trace, tune};
 use fitq::quant::BitConfig;
 use fitq::runtime::{Json, Runtime};
 
@@ -103,7 +106,11 @@ impl Args {
 
 const USAGE: &str = "fitq <command>\n\
   info                                   list models and entry points\n\
-  train      --model M [--epochs N]      train FP model, report accuracy\n\
+  train      --model M [--epochs N] [--trace-ops true]\n\
+     train FP model, report accuracy. --trace-ops true arms the native\n\
+     op profiler (also $FITQ_TRACE_OPS) and stores the per-op aggregates\n\
+     as an `optrace` artifact for `fitq trace-report` — outputs stay\n\
+     bit-identical to an untraced run.\n\
   traces     --model M [--estimator ef|hessian] [--tol T] [--batch B]\n\
   search     --model M [--budget-ratio R] [--samples N] [--jobs N]\n\
              [--seed N] [--shards K] [--stream true|false] [--fp-epochs E]\n\
@@ -135,10 +142,18 @@ const USAGE: &str = "fitq <command>\n\
      verify quarantines corrupt store entries (nonzero exit if any);\n\
      gc reaps expired leases and stale temp files; stats summarizes.\n\
   tune       [--results DIR] [--threads N]  measure per-host kernel routing\n\
-     micro-benchmarks every (op, shape-class, SIMD-variant) triple and\n\
-     persists the winner table in the artifact cache keyed by a host\n\
-     fingerprint; native runs do the same lazily on first dispatch, so\n\
-     `tune` just runs it eagerly and prints the table.\n\
+     micro-benchmarks every (op, shape-class, SIMD-variant) triple at the\n\
+     given intra-op thread budget and persists the winner table in the\n\
+     artifact cache keyed by (host, budget); native runs do the same\n\
+     lazily on first dispatch, so `tune` just runs it eagerly and prints\n\
+     the table. --trace-model M [--trace-workload W] appends a trailer\n\
+     checking the routing against a stored op trace's real shapes.\n\
+  trace-report --model M [--workload W] [--results DIR]\n\
+             [--bench BENCH_kernels.json] [--json OUT.json]\n\
+     render the cost report for a stored op trace: per-(op, layer,\n\
+     variant) wall-time share, GFLOP/s, GB/s, and roofline ratio against\n\
+     the measured kernel peaks. Needs a prior\n\
+     `fitq train --trace-ops true --backend native` run.\n\
   A config that fails mid-sweep degrades to a report entry (the study\n\
      completes on the survivors) instead of aborting the experiment.\n\
   Every command takes --backend native|pjrt (also $FITQ_BACKEND):\n\
@@ -186,6 +201,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "zoo-check" => cmd_zoo_check(&args),
         "cache" => cmd_cache(&args),
         "tune" => cmd_tune(&args),
+        "trace-report" => cmd_trace_report(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -312,8 +328,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let isas: Vec<&str> = simd::Isa::detected().into_iter().map(|i| i.name()).collect();
     let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
     println!(
-        "host {} (arch {}, isas [{}], {cores} cores): {}",
-        tune::host_fingerprint().hex(),
+        "host {} (arch {}, isas [{}], {cores} cores, {threads} intra-op threads): {}",
+        tune::host_fingerprint(threads).hex(),
         std::env::consts::ARCH,
         isas.join(" "),
         how.name()
@@ -331,20 +347,31 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     if table.measurements.is_empty() {
         println!("(no stored measurements — table was built without tuning)");
-        return Ok(());
-    }
-    println!("measurements (nominal GFLOP/s, min-of-reps; comparable within a row):");
-    for op in tune::OPS {
-        for c in 0..tune::N_CLASSES {
-            let row: Vec<String> = table
-                .measurements
-                .iter()
-                .filter(|m| m.op == op && m.class == c)
-                .map(|m| format!("{}/{} {:.3}", m.lowering.name(), m.isa.name(), m.gflops))
-                .collect();
-            if !row.is_empty() {
-                println!("  {:<11} {:<5} {}", op.name(), class_names[c], row.join(" | "));
+    } else {
+        println!("measurements (nominal GFLOP/s, min-of-reps; comparable within a row):");
+        for op in tune::OPS {
+            for c in 0..tune::N_CLASSES {
+                let row: Vec<String> = table
+                    .measurements
+                    .iter()
+                    .filter(|m| m.op == op && m.class == c)
+                    .map(|m| format!("{}/{} {:.3}", m.lowering.name(), m.isa.name(), m.gflops))
+                    .collect();
+                if !row.is_empty() {
+                    println!("  {:<11} {:<5} {}", op.name(), class_names[c], row.join(" | "));
+                }
             }
+        }
+    }
+    // optional trailer: sanity-check the width-class routing against the
+    // shape distribution of a *real* traced workload (micro-benchmarks
+    // tune on synthetic shapes; the trace says what actually ran)
+    if let Some(trace_model) = args.get("trace-model") {
+        let workload = args.str_or("trace-workload", "train_epoch");
+        let report = load_optrace(&cache, trace_model, workload, &[])?;
+        println!("routing check vs traced {trace_model}/{workload}:");
+        for line in analysis::routing_trailer(&report, &table) {
+            println!("  {line}");
         }
     }
     Ok(())
@@ -371,6 +398,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model = resolve_model(args.str_or("model", "cnn_mnist"), &mut zoo)?;
     let epochs = args.usize_or("epochs", 30)?;
     let seed = args.usize_or("seed", 0)? as u64;
+    let trace_ops = args.bool_or("trace-ops", false)?;
+    if trace_ops {
+        // the backend arms its profiler at creation time by reading this
+        // env var, so it must be set before `runtime_for` builds one;
+        // tracing never changes outputs or digests, only observes them
+        std::env::set_var("FITQ_TRACE_OPS", "1");
+    }
     let rt = runtime_for(args, zoo)?;
     let ds = dataset_for(&rt, &model, seed ^ 0xda7a)?;
     let mut trainer = Trainer::new(&rt, ds.as_ref());
@@ -386,7 +420,94 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.score,
         res.n
     );
+    if trace_ops {
+        let mut report = rt.op_trace().ok_or_else(|| {
+            anyhow!(
+                "--trace-ops true: the {} backend does not expose an op trace \
+                 (tracing is native-only)",
+                rt.backend_name()
+            )
+        })?;
+        report.model = model.clone();
+        report.workload = "train_epoch".to_string();
+        let root = args
+            .get("results")
+            .map(PathBuf::from)
+            .unwrap_or_else(stages::results_root_from_env);
+        let cache = ArtifactCache::new(root.join("cache"))?;
+        let key = stages::optrace_key(rt.backend_name(), rt.model(&model)?, &report.workload);
+        let path = cache.store(
+            trace::OPTRACE_KIND,
+            codec::OPTRACE_SCHEMA,
+            &key,
+            &codec::encode_optrace(&report),
+        )?;
+        println!(
+            "op trace: {} aggregate rows over {:.3} ms stored at {} \
+             (render with `fitq trace-report --model {model}`)",
+            report.rows.len(),
+            report.total_wall_ns() as f64 / 1e6,
+            path.display()
+        );
+    }
     Ok(())
+}
+
+/// `fitq trace-report`: decode a stored `optrace` artifact and render
+/// the cost table (`coordinator::analysis`) against the measured kernel
+/// peaks in `BENCH_kernels.json`. `--json OUT.json` additionally writes
+/// the machine-readable report (schema checked by
+/// `scripts/check_bench_schema.py`).
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    let mut zoo = Vec::new();
+    let model = resolve_model(args.str_or("model", "cnn_mnist"), &mut zoo)?;
+    let workload = args.str_or("workload", "train_epoch").to_string();
+    let root = args
+        .get("results")
+        .map(PathBuf::from)
+        .unwrap_or_else(stages::results_root_from_env);
+    let cache = ArtifactCache::new(root.join("cache"))?;
+    let report = load_optrace(&cache, &model, &workload, &zoo)?;
+
+    let bench_path = args.str_or("bench", "BENCH_kernels.json");
+    let bench_text = std::fs::read_to_string(bench_path)
+        .with_context(|| format!("reading bench peaks from {bench_path}"))?;
+    let peaks = analysis::parse_bench_kernels(&bench_text)
+        .map_err(|e| anyhow!("{bench_path}: {e}"))?;
+
+    let cost = analysis::cost_report(&report, &peaks)?;
+    print!("{}", analysis::render_text(&cost));
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, analysis::render_json(&cost))
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Load and decode the stored op trace for `(model, workload)` on the
+/// native backend, with an actionable error when none exists. Traces are
+/// native-only, so the key's backend leg is always `"native"`.
+fn load_optrace(
+    cache: &ArtifactCache,
+    model: &str,
+    workload: &str,
+    zoo: &[PathBuf],
+) -> Result<trace::OpTraceReport> {
+    let (_, manifest) = fitq::native::NativeBackend::create_with_zoo(1, zoo)?;
+    let mm = manifest.model(model)?;
+    let key = stages::optrace_key("native", mm, workload);
+    let bytes = cache
+        .load(trace::OPTRACE_KIND, codec::OPTRACE_SCHEMA, &key)
+        .ok_or_else(|| {
+            anyhow!(
+                "no stored op trace for {model}/{workload} under {} — run \
+                 `fitq train --model {model} --backend native --trace-ops true` first",
+                cache.entry_path(trace::OPTRACE_KIND, &key).display()
+            )
+        })?;
+    codec::decode_optrace(&bytes)
+        .map_err(|e| anyhow!(analysis::AnalysisError::TraceDecode(format!("{e:#}"))))
 }
 
 fn cmd_traces(args: &Args) -> Result<()> {

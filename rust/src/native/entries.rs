@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 use super::model::{Plan, FP_LR, QAT_LR};
 use super::net::{self, QuantArgs};
 use super::ops::{self, ExecCtx};
+use super::trace::{Layer, TracedOp};
 use crate::runtime::backend::{Dispatcher, OutBuf};
 use crate::runtime::Arg;
 
@@ -143,7 +144,13 @@ impl NativeExec {
             let y = &ys[ki * b..][..b];
             let (loss, grads) = net::mean_loss_grad(plan, &params, x, y, b, q, ctx);
             step += 1.0;
+            ctx.prof.set_layer(Layer::Opt);
+            let t0 = ctx.prof.start();
             adam_update(&mut params, &mut m, &mut v, &grads.flat, step, lr);
+            let np = params.len();
+            ctx.prof.record_untuned(t0, TracedOp::AdamStep, 4 * np, 3 * np, 12 * np, || {
+                format!("n{np}")
+            });
             loss_sum += loss as f64;
         }
         Ok(vec![

@@ -100,6 +100,7 @@ use std::sync::Arc;
 
 use crate::coordinator::parallel::run_static;
 use super::simd::{self, Isa};
+use super::trace::Prof;
 use super::tune::{self, Choice, KernelMode, RouteTable, TunedOp};
 
 /// M-dimension panel height of [`sgemm`]: the unit of intra-op
@@ -168,6 +169,10 @@ pub struct ExecCtx {
     routes: Option<Arc<RouteTable>>,
     /// The per-worker scratch arena.
     pub scratch: Scratch,
+    /// Opt-in op-level profiler (see [`trace`](super::trace)). Disarmed
+    /// by default — every record site is one branch when off, and the
+    /// collected aggregates never enter any stage digest.
+    pub prof: Prof,
 }
 
 impl ExecCtx {

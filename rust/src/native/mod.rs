@@ -24,6 +24,11 @@
 //!   (op, shape-class, variant) triple once, persists the winner table
 //!   in the artifact cache under a host fingerprint, and honors the
 //!   `FITQ_NATIVE_KERNEL` escape hatch.
+//! - [`trace`] — opt-in op-level profiling (`--trace-ops` /
+//!   `FITQ_TRACE_OPS`): per-(op, layer, variant) call/element/FLOP/wall
+//!   aggregates, one branch per op when disarmed, bit-identical outputs
+//!   either way, persisted as artifact kind `optrace` and rendered by
+//!   `fitq trace-report`.
 //! - [`ops`] — conv2d / dense / max-pool / batch-norm / relu /
 //!   softmax-CE, forward *and* hand-derived backward; conv/dense run
 //!   through [`gemm`] under the *measured* per-op routing from
@@ -58,6 +63,7 @@ pub mod net;
 pub mod ops;
 pub mod quant;
 pub mod simd;
+pub mod trace;
 pub mod tune;
 
 use std::cell::RefCell;
@@ -84,6 +90,10 @@ pub struct NativeBackend {
     /// (`FITQ_NATIVE_REFERENCE=1`) — the before/after benchmark's
     /// "before" leg.
     use_reference: bool,
+    /// Shared op profiler: armed iff `FITQ_TRACE_OPS` was set at
+    /// creation, cloned into every compiled dispatcher's `ExecCtx` so
+    /// one backend accumulates one trace across all its dispatches.
+    prof: trace::Prof,
 }
 
 impl NativeBackend {
@@ -99,8 +109,13 @@ impl NativeBackend {
             plans.insert(spec.name.to_string(), Rc::new(plan));
         }
         let use_reference = std::env::var_os("FITQ_NATIVE_REFERENCE").is_some();
+        let prof = if std::env::var_os("FITQ_TRACE_OPS").is_some() {
+            trace::Prof::armed()
+        } else {
+            trace::Prof::default()
+        };
         (
-            NativeBackend { plans, threads: threads.max(1), use_reference },
+            NativeBackend { plans, threads: threads.max(1), use_reference, prof },
             Manifest { root: PathBuf::from("<native>"), models },
         )
     }
@@ -156,10 +171,20 @@ impl Backend for NativeBackend {
         let ctx = ExecCtx {
             threads: self.threads,
             use_reference: self.use_reference,
+            prof: self.prof.clone(),
             mode,
             ..ExecCtx::default()
         };
         Ok(Box::new(NativeExec { plan: plan.clone(), kind, ctx: RefCell::new(ctx) }))
+    }
+
+    fn op_trace(&self) -> Option<trace::OpTraceReport> {
+        self.prof.snapshot().map(|rows| trace::OpTraceReport {
+            model: String::new(),
+            workload: String::new(),
+            threads: self.threads as u32,
+            rows,
+        })
     }
 }
 

@@ -14,6 +14,7 @@
 
 use super::model::Plan;
 use super::ops::ExecCtx;
+use super::trace::{Layer, TracedOp};
 use super::{ops, quant};
 
 /// Borrowed runtime quantization configuration (QAT mode).
@@ -74,6 +75,7 @@ pub fn forward(
     let mut convs = Vec::with_capacity(plan.convs.len());
     let mut cur: Vec<f32> = x.to_vec();
     for (i, layer) in plan.convs.iter().enumerate() {
+        ctx.prof.set_layer(Layer::Conv(i as u8));
         let (h, w, cin, cout) = (layer.h, layer.w, layer.c_in, layer.c_out);
         let xin = cur;
         let wsize = layer.w_size();
@@ -96,11 +98,24 @@ pub fn forward(
             let mut out = vec![0.0f32; z.len()];
             xhat = vec![0.0f32; z.len()];
             ivar = vec![0.0f32; cout];
+            let t0 = ctx.prof.start();
             ops::batch_norm(&z, batch * h * w, cout, gamma, beta, &mut out, &mut xhat, &mut ivar);
+            ctx.prof.record_untuned(
+                t0,
+                TracedOp::BatchNorm,
+                z.len() + 2 * cout,
+                out.len() + xhat.len() + cout,
+                10 * batch * h * w * cout,
+                || format!("b{batch} {h}x{w} c{cout}"),
+            );
             z = out;
         }
         let mut act = vec![0.0f32; z.len()];
+        let t0 = ctx.prof.start();
         ops::relu(&z, &mut act);
+        ctx.prof.record_untuned(t0, TracedOp::Relu, z.len(), act.len(), act.len(), || {
+            format!("b{batch} {h}x{w} c{cout}")
+        });
         let aq = q.map(|qa| {
             let mut buf = vec![0.0f32; act.len()];
             quant::fake_quant(&act, qa.act_lo[i], qa.act_hi[i], qa.bits_a[i], &mut buf);
@@ -113,7 +128,16 @@ pub fn forward(
         cur = if layer.pooled {
             let mut out = vec![0.0f32; batch * (h / 2) * (w / 2) * cout];
             pool_idx = vec![0u8; out.len()];
+            let t0 = ctx.prof.start();
             ops::max_pool(post, batch, h, w, cout, &mut out, &mut pool_idx);
+            ctx.prof.record_untuned(
+                t0,
+                TracedOp::MaxPool,
+                post.len(),
+                out.len(),
+                4 * out.len(),
+                || format!("b{batch} {h}x{w} c{cout}"),
+            );
             out
         } else {
             post.to_vec()
@@ -132,6 +156,7 @@ pub fn forward(
     };
     let fc_b = &params[plan.fc_b_off..plan.fc_b_off + ncls];
     let mut logits = vec![0.0f32; batch * ncls];
+    ctx.prof.set_layer(Layer::Fc);
     ops::dense(&cur, batch, plan.feat, &fwq, ncls, fc_b, &mut logits, ctx);
     Tape { batch, convs, feat: cur, fwq, logits }
 }
@@ -161,6 +186,7 @@ pub fn backward(
 
     // fc layer
     let mut dfeat = vec![0.0f32; tape.feat.len()];
+    ctx.prof.set_layer(Layer::Fc);
     {
         let (dw, rest) = flat[plan.fc_w_off..].split_at_mut(plan.feat * ncls);
         let db = &mut rest[..ncls];
@@ -172,17 +198,31 @@ pub fn backward(
     // conv stack, last to first
     let mut da = dfeat;
     for (i, layer) in plan.convs.iter().enumerate().rev() {
+        ctx.prof.set_layer(Layer::Conv(i as u8));
         let t = &tape.convs[i];
         let (h, w, cin, cout) = (layer.h, layer.w, layer.c_in, layer.c_out);
         if layer.pooled {
             let mut dx = vec![0.0f32; batch * h * w * cout];
+            let t0 = ctx.prof.start();
             ops::max_pool_bwd(&da, &t.pool_idx, batch, h, w, cout, &mut dx);
+            ctx.prof.record_untuned(t0, TracedOp::MaxPoolBwd, da.len(), dx.len(), da.len(), || {
+                format!("b{batch} {h}x{w} c{cout}")
+            });
             da = dx;
         }
         // activation fake-quant is a straight-through node: `da` is now
         // the gradient at the post-relu site (the eps-trick gradient)
         act_grads.push(da.clone());
+        let t0 = ctx.prof.start();
         ops::relu_bwd_inplace(&t.act, &mut da);
+        ctx.prof.record_untuned(
+            t0,
+            TracedOp::ReluBwd,
+            t.act.len() + da.len(),
+            da.len(),
+            da.len(),
+            || format!("b{batch} {h}x{w} c{cout}"),
+        );
         if let (Some(g_off), Some(b_off)) = (layer.gamma_off, layer.beta_off) {
             let gamma = params[g_off..g_off + cout].to_vec();
             let mut dx = vec![0.0f32; da.len()];
@@ -190,8 +230,17 @@ pub fn backward(
                 let (head, tail) = flat.split_at_mut(b_off);
                 let dgamma = &mut head[g_off..g_off + cout];
                 let dbeta = &mut tail[..cout];
+                let t0 = ctx.prof.start();
                 ops::batch_norm_bwd(
                     &da, &t.xhat, &t.ivar, &gamma, batch * h * w, cout, &mut dx, dgamma, dbeta,
+                );
+                ctx.prof.record_untuned(
+                    t0,
+                    TracedOp::BatchNormBwd,
+                    da.len() + t.xhat.len() + 2 * cout,
+                    dx.len() + 2 * cout,
+                    12 * batch * h * w * cout,
+                    || format!("b{batch} {h}x{w} c{cout}"),
                 );
             }
             da = dx;
@@ -225,11 +274,30 @@ pub fn mean_loss_grad(
     let ncls = plan.spec.n_classes;
     let tape = forward(plan, params, x, batch, q, ctx);
     let mut per = vec![0.0f32; batch];
+    ctx.prof.set_layer(Layer::Loss);
+    let t0 = ctx.prof.start();
     ops::softmax_xent(&tape.logits, y, batch, ncls, &mut per);
+    ctx.prof.record_untuned(
+        t0,
+        TracedOp::SoftmaxXent,
+        tape.logits.len() + batch,
+        batch,
+        8 * batch * ncls,
+        || format!("b{batch} c{ncls}"),
+    );
     let loss = (per.iter().map(|&v| v as f64).sum::<f64>() / batch as f64) as f32;
     let dper = vec![1.0f32 / batch as f32; batch];
     let mut dlogits = vec![0.0f32; tape.logits.len()];
+    let t0 = ctx.prof.start();
     ops::softmax_xent_bwd(&tape.logits, y, batch, ncls, &dper, &mut dlogits);
+    ctx.prof.record_untuned(
+        t0,
+        TracedOp::SoftmaxXentBwd,
+        tape.logits.len() + 2 * batch,
+        dlogits.len(),
+        6 * batch * ncls,
+        || format!("b{batch} c{ncls}"),
+    );
     let grads = backward(plan, params, &tape, &dlogits, ctx);
     (loss, grads)
 }

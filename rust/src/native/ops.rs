@@ -29,6 +29,13 @@
 //! (`FITQ_NATIVE_REFERENCE=1`). Elementwise and reduction ops (ReLU,
 //! max-pool, batch-norm, softmax-CE) are memory-bound and stay scalar.
 //!
+//! When the caller's [`ExecCtx`] carries an armed profiler
+//! (`--trace-ops` / `FITQ_TRACE_OPS`, see [`trace`](super::trace)), each
+//! tuned wrapper also records its invocation — chosen (ISA, lowering),
+//! shape, elements moved, FLOPs, wall time — after the kernel returns.
+//! Disarmed (the default) this is one branch per op, and the
+//! `FITQ_NATIVE_REFERENCE` oracle path is deliberately untraced.
+//!
 //! **Rule for new ops** (DESIGN.md "Native math kernels"): an op may use
 //! the threaded kernel layer only if it can state its per-output-element
 //! `f32` operation chain and show it unchanged from the scalar reference
@@ -42,6 +49,7 @@
 pub use super::gemm::ExecCtx;
 use super::gemm::{self, Init};
 use super::simd::{self, Isa};
+use super::trace::{OpRecord, TracedOp};
 use super::tune::{Lowering, TunedOp};
 
 /// The scalar loop-nest kernels the GEMM path replaced, kept as oracles.
@@ -270,10 +278,20 @@ pub fn conv2d(
         return reference::conv2d(x, n, h, w, cin, wgt, cout, bias, out);
     }
     let c = ctx.choice(TunedOp::ConvFwd, cout);
+    let t0 = ctx.prof.start();
     match c.lowering {
         Lowering::Im2col => conv2d_im2col_at(x, n, h, w, cin, wgt, cout, bias, out, ctx, c.isa),
         _ => gemm::conv2d_direct(x, n, h, w, cin, wgt, cout, bias, out, ctx.threads, c.isa),
     }
+    ctx.prof.record(t0, || OpRecord {
+        op: TracedOp::ConvFwd,
+        variant: Some((c.isa, c.lowering)),
+        width: cout as u32,
+        shape: format!("b{n} {h}x{w} {cin}->{cout}"),
+        elems_read: (x.len() + wgt.len() + bias.len()) as u64,
+        elems_written: out.len() as u64,
+        flops: (2 * n * h * w * 9 * cin * cout) as u64,
+    });
 }
 
 /// The im2col + GEMM conv lowering (`out = im2col(x) * W + bias`);
@@ -343,12 +361,22 @@ pub fn conv2d_bwd_w(
         return reference::conv2d_bwd_w(x, n, h, w, cin, dout, cout, dw, db);
     }
     let c = ctx.choice(TunedOp::ConvBwdW, cout);
+    let t0 = ctx.prof.start();
     match c.lowering {
         Lowering::Im2col => {
             conv2d_bwd_w_im2col_at(x, n, h, w, cin, dout, cout, dw, db, ctx, c.isa)
         }
         _ => gemm::conv2d_bwd_w_direct(x, n, h, w, cin, dout, cout, dw, db, ctx.threads, c.isa),
     }
+    ctx.prof.record(t0, || OpRecord {
+        op: TracedOp::ConvBwdW,
+        variant: Some((c.isa, c.lowering)),
+        width: cout as u32,
+        shape: format!("b{n} {h}x{w} {cin}->{cout}"),
+        elems_read: (x.len() + dout.len()) as u64,
+        elems_written: (dw.len() + db.len()) as u64,
+        flops: (2 * n * h * w * 9 * cin * cout) as u64,
+    });
 }
 
 /// The im2col + GEMM backward-by-weights lowering (`dw += im2col(x)^T *
@@ -412,7 +440,8 @@ pub fn conv2d_bwd_x(
         return reference::conv2d_bwd_x(wgt, n, h, w, cin, dout, cout, dx);
     }
     // the vector axis of both the G GEMM and the col2im gather is c_in
-    let isa = ctx.choice(TunedOp::ConvBwdX, cin).isa;
+    let c = ctx.choice(TunedOp::ConvBwdX, cin);
+    let t0 = ctx.prof.start();
     let m = n * h * w;
     let k = 9 * cin;
     gemm::transpose(wgt, k, cout, &mut ctx.scratch.b);
@@ -428,9 +457,18 @@ pub fn conv2d_bwd_x(
         Init::Zero,
         &mut ctx.scratch.a,
         ctx.threads,
-        isa,
+        c.isa,
     );
-    gemm::col2im3x3(&ctx.scratch.a, n, h, w, cin, dx, ctx.threads, isa);
+    gemm::col2im3x3(&ctx.scratch.a, n, h, w, cin, dx, ctx.threads, c.isa);
+    ctx.prof.record(t0, || OpRecord {
+        op: TracedOp::ConvBwdX,
+        variant: Some((c.isa, c.lowering)),
+        width: cin as u32,
+        shape: format!("b{n} {h}x{w} {cin}->{cout}"),
+        elems_read: (dout.len() + wgt.len()) as u64,
+        elems_written: dx.len() as u64,
+        flops: (2 * n * h * w * 9 * cin * cout) as u64,
+    });
 }
 
 /// Dense layer as one GEMM (`out = x * W + bias`); overwrites `out`.
@@ -449,8 +487,18 @@ pub fn dense(
     if ctx.use_reference {
         return reference::dense(x, n, fin, wgt, fout, bias, out);
     }
-    let isa = ctx.choice(TunedOp::DenseFwd, fout).isa;
-    gemm::sgemm(n, fout, fin, x, wgt, Init::Bias(bias), out, ctx.threads, isa);
+    let c = ctx.choice(TunedOp::DenseFwd, fout);
+    let t0 = ctx.prof.start();
+    gemm::sgemm(n, fout, fin, x, wgt, Init::Bias(bias), out, ctx.threads, c.isa);
+    ctx.prof.record(t0, || OpRecord {
+        op: TracedOp::DenseFwd,
+        variant: Some((c.isa, c.lowering)),
+        width: fout as u32,
+        shape: format!("b{n} {fin}->{fout}"),
+        elems_read: (x.len() + wgt.len() + bias.len()) as u64,
+        elems_written: out.len() as u64,
+        flops: (2 * n * fin * fout) as u64,
+    });
 }
 
 /// Dense backward (`dw += x^T * dout`, `db += column sums`, `dx = dout *
@@ -472,11 +520,21 @@ pub fn dense_bwd(
     if ctx.use_reference {
         return reference::dense_bwd(x, wgt, n, fin, fout, dout, dw, db, dx);
     }
-    let isa = ctx.choice(TunedOp::DenseBwd, fout).isa;
-    gemm::sgemm_atb(n, fout, fin, x, dout, dw, ctx.threads, isa);
-    simd::col_sum(isa, db, dout, fout);
+    let c = ctx.choice(TunedOp::DenseBwd, fout);
+    let t0 = ctx.prof.start();
+    gemm::sgemm_atb(n, fout, fin, x, dout, dw, ctx.threads, c.isa);
+    simd::col_sum(c.isa, db, dout, fout);
     gemm::transpose(wgt, fin, fout, &mut ctx.scratch.b);
-    gemm::sgemm(n, fin, fout, dout, &ctx.scratch.b, Init::Zero, dx, ctx.threads, isa);
+    gemm::sgemm(n, fin, fout, dout, &ctx.scratch.b, Init::Zero, dx, ctx.threads, c.isa);
+    ctx.prof.record(t0, || OpRecord {
+        op: TracedOp::DenseBwd,
+        variant: Some((c.isa, c.lowering)),
+        width: fout as u32,
+        shape: format!("b{n} {fin}->{fout}"),
+        elems_read: (x.len() + wgt.len() + dout.len()) as u64,
+        elems_written: (dw.len() + db.len() + dx.len()) as u64,
+        flops: (6 * n * fin * fout) as u64,
+    });
 }
 
 /// ReLU; overwrites `out` (the backward masks on this output).

@@ -1,0 +1,433 @@
+//! Opt-in op-level tracing for the native backend.
+//!
+//! When armed (CLI `--trace-ops true` / `FITQ_TRACE_OPS`), every op the
+//! interpreter dispatches records one [`OpRecord`] — op kind, layer,
+//! shape, chosen kernel variant, f32 elements moved, a nominal FLOP
+//! count, and monotonic wall time — accumulated in place into
+//! per-(op, layer, variant) [`OpAggregate`] rows. When disarmed (the
+//! default), the whole layer is one predictable `Option` branch per op:
+//! no clock reads, no allocation, no locks ([`tests/perf_probes.rs`]
+//! enforces the overhead stays in the noise band).
+//!
+//! # Determinism contract
+//!
+//! Tracing observes; it never participates. Every counter except
+//! `wall_ns` is a pure function of the workload (op counts, element
+//! counts, FLOPs, routed variants are identical across runs, `--jobs`
+//! settings and thread budgets), and traced runs are bit-identical to
+//! untraced runs — losses, gradients, and every pipeline stage digest
+//! (`tests/op_trace.rs` pins both). For byte comparisons,
+//! [`OpTraceReport::normalized`] zeroes the single nondeterministic
+//! field, following the `iter_time_s` convention of the study codec.
+//!
+//! Aggregates persist through the artifact cache as kind
+//! [`OPTRACE_KIND`] (`coordinator/pipeline/codec.rs`, schema
+//! `OPTRACE_SCHEMA`) and render into a cost report via
+//! `coordinator::analysis` / `fitq trace-report`. The trace key
+//! (`stages::optrace_key`) deliberately excludes tracing state itself —
+//! profiling never changes results, so it must never split a digest.
+//!
+//! The `FITQ_NATIVE_REFERENCE` scalar-oracle path is deliberately
+//! untraced: it bypasses kernel routing, so it has no variant identity
+//! to record.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::simd::Isa;
+use super::tune::Lowering;
+
+/// Artifact-cache kind of persisted op traces.
+pub const OPTRACE_KIND: &str = "optrace";
+
+/// Every op kind the profiler distinguishes. Discriminants are
+/// persisted by the `optrace` codec; the first five match
+/// [`super::tune::TunedOp`] order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracedOp {
+    ConvFwd = 0,
+    ConvBwdW = 1,
+    ConvBwdX = 2,
+    DenseFwd = 3,
+    DenseBwd = 4,
+    Relu = 5,
+    ReluBwd = 6,
+    MaxPool = 7,
+    MaxPoolBwd = 8,
+    BatchNorm = 9,
+    BatchNormBwd = 10,
+    SoftmaxXent = 11,
+    SoftmaxXentBwd = 12,
+    AdamStep = 13,
+}
+
+/// All traced ops, in discriminant order.
+pub const TRACED_OPS: [TracedOp; 14] = [
+    TracedOp::ConvFwd,
+    TracedOp::ConvBwdW,
+    TracedOp::ConvBwdX,
+    TracedOp::DenseFwd,
+    TracedOp::DenseBwd,
+    TracedOp::Relu,
+    TracedOp::ReluBwd,
+    TracedOp::MaxPool,
+    TracedOp::MaxPoolBwd,
+    TracedOp::BatchNorm,
+    TracedOp::BatchNormBwd,
+    TracedOp::SoftmaxXent,
+    TracedOp::SoftmaxXentBwd,
+    TracedOp::AdamStep,
+];
+
+impl TracedOp {
+    /// Stable name (report tables, JSON output).
+    pub fn name(self) -> &'static str {
+        match self {
+            TracedOp::ConvFwd => "conv_fwd",
+            TracedOp::ConvBwdW => "conv_bwd_w",
+            TracedOp::ConvBwdX => "conv_bwd_x",
+            TracedOp::DenseFwd => "dense_fwd",
+            TracedOp::DenseBwd => "dense_bwd",
+            TracedOp::Relu => "relu",
+            TracedOp::ReluBwd => "relu_bwd",
+            TracedOp::MaxPool => "max_pool",
+            TracedOp::MaxPoolBwd => "max_pool_bwd",
+            TracedOp::BatchNorm => "batch_norm",
+            TracedOp::BatchNormBwd => "batch_norm_bwd",
+            TracedOp::SoftmaxXent => "softmax_xent",
+            TracedOp::SoftmaxXentBwd => "softmax_xent_bwd",
+            TracedOp::AdamStep => "adam_step",
+        }
+    }
+
+    /// Inverse of the persisted discriminant; `None` for unknown tags
+    /// (the decoder fails closed on them).
+    pub fn from_u8(v: u8) -> Option<TracedOp> {
+        TRACED_OPS.into_iter().find(|op| *op as u8 == v)
+    }
+}
+
+/// Where in the network an op ran. Kept as a `Copy` enum so setting it
+/// from the interpreter allocates nothing; rendered to the report's
+/// layer string only at aggregation time (the armed path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Layer {
+    /// Outside any labeled region (should not appear in real traces).
+    #[default]
+    None,
+    /// Conv stage `i` (forward or backward).
+    Conv(u8),
+    /// The dense head.
+    Fc,
+    /// The softmax/cross-entropy loss block.
+    Loss,
+    /// The optimizer update.
+    Opt,
+}
+
+impl Layer {
+    /// Report-facing name (`conv0`, `fc`, `loss`, `opt`).
+    pub fn name(self) -> String {
+        match self {
+            Layer::None => "-".to_string(),
+            Layer::Conv(i) => format!("conv{i}"),
+            Layer::Fc => "fc".to_string(),
+            Layer::Loss => "loss".to_string(),
+            Layer::Opt => "opt".to_string(),
+        }
+    }
+}
+
+/// One op invocation, as handed to [`Prof::record`]. Constructed lazily
+/// (inside a closure) so the disarmed path never formats shapes or
+/// counts elements.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub op: TracedOp,
+    /// Routed kernel variant for tuned ops; `None` for elementwise ops
+    /// that have a single implementation.
+    pub variant: Option<(Isa, Lowering)>,
+    /// The op's tuning-axis width (`c_out`, `c_in`, `f_out`); 0 for
+    /// untuned ops. Feeds the `fitq tune` routing trailer.
+    pub width: u32,
+    /// Human-readable problem shape, e.g. `b32 16x16 8->16`.
+    pub shape: String,
+    /// f32 elements read (logical operands, not cache traffic).
+    pub elems_read: u64,
+    /// f32 elements written.
+    pub elems_written: u64,
+    /// Nominal FLOPs (same conventions as the autotuner's GFLOP/s).
+    pub flops: u64,
+}
+
+/// Per-(op, layer, variant) accumulated counters — one report row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpAggregate {
+    pub op: TracedOp,
+    /// Rendered [`Layer`] name.
+    pub layer: String,
+    pub variant: Option<(Isa, Lowering)>,
+    pub width: u32,
+    /// Shape of the first recorded invocation (within one aggregate key
+    /// the shape is fixed by the model, so first == all).
+    pub shape: String,
+    pub calls: u64,
+    pub elems_read: u64,
+    pub elems_written: u64,
+    pub flops: u64,
+    /// Total monotonic wall time — the only nondeterministic field in a
+    /// trace; [`OpTraceReport::normalized`] zeroes it.
+    pub wall_ns: u64,
+}
+
+impl OpAggregate {
+    /// `lowering/isa` (the BENCH_kernels.json route format), `-` for
+    /// untuned ops.
+    pub fn variant_name(&self) -> String {
+        match self.variant {
+            Some((isa, lowering)) => format!("{}/{}", lowering.name(), isa.name()),
+            None => "-".to_string(),
+        }
+    }
+}
+
+/// A complete op trace: the aggregate rows plus the identity of the run
+/// that produced them. This is what the `optrace` codec persists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpTraceReport {
+    /// Model name (fills the cache key via `stages::optrace_key`).
+    pub model: String,
+    /// Workload label, e.g. `train_epoch`.
+    pub workload: String,
+    /// Intra-op thread budget the run executed under (recorded for the
+    /// report header; never part of the trace key).
+    pub threads: u32,
+    /// Aggregate rows in first-recorded order (deterministic: the
+    /// interpreter's op order is fixed).
+    pub rows: Vec<OpAggregate>,
+}
+
+impl OpTraceReport {
+    /// The report with every wall-clock counter zeroed — byte-stable
+    /// across equivalent runs (the `study_bytes` convention of
+    /// `tests/zoo_models.rs`).
+    pub fn normalized(&self) -> OpTraceReport {
+        let mut r = self.clone();
+        for row in &mut r.rows {
+            row.wall_ns = 0;
+        }
+        r
+    }
+
+    /// Total wall time across all rows.
+    pub fn total_wall_ns(&self) -> u64 {
+        self.rows.iter().map(|r| r.wall_ns).sum()
+    }
+}
+
+#[derive(Debug, Default)]
+struct ProfState {
+    layer: Layer,
+    rows: Vec<OpAggregate>,
+}
+
+impl ProfState {
+    fn record(&mut self, r: OpRecord, wall_ns: u64) {
+        let layer = self.layer.name();
+        // Linear scan: a study net produces ~20 aggregate keys, and
+        // insertion order keeps the report deterministic.
+        for agg in &mut self.rows {
+            if agg.op == r.op && agg.variant == r.variant && agg.layer == layer {
+                agg.calls += 1;
+                agg.elems_read += r.elems_read;
+                agg.elems_written += r.elems_written;
+                agg.flops += r.flops;
+                agg.wall_ns += wall_ns;
+                return;
+            }
+        }
+        self.rows.push(OpAggregate {
+            op: r.op,
+            layer,
+            variant: r.variant,
+            width: r.width,
+            shape: r.shape,
+            calls: 1,
+            elems_read: r.elems_read,
+            elems_written: r.elems_written,
+            flops: r.flops,
+            wall_ns,
+        });
+    }
+}
+
+/// Cloneable handle to an optional profiler. `Prof::default()` is
+/// disarmed and free: every entry point is a single `Option` branch.
+/// Armed handles share one accumulator (`Rc` — the native backend and
+/// its dispatchers are single-threaded by construction, like
+/// `Runtime`).
+#[derive(Debug, Clone, Default)]
+pub struct Prof(Option<Rc<RefCell<ProfState>>>);
+
+impl Prof {
+    /// An armed profiler with an empty accumulator.
+    pub fn armed() -> Prof {
+        Prof(Some(Rc::new(RefCell::new(ProfState::default()))))
+    }
+
+    /// Whether records are being collected.
+    pub fn is_armed(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Start timing an op: `None` (no clock read) when disarmed.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.0.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Finish timing and record; `make` only runs when armed, so the
+    /// disarmed path never formats or counts.
+    #[inline]
+    pub fn record(&self, start: Option<Instant>, make: impl FnOnce() -> OpRecord) {
+        let (Some(state), Some(t0)) = (self.0.as_ref(), start) else { return };
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        state.borrow_mut().record(make(), wall_ns);
+    }
+
+    /// One-line recording of an untuned (elementwise) op.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_untuned(
+        &self,
+        start: Option<Instant>,
+        op: TracedOp,
+        elems_read: usize,
+        elems_written: usize,
+        flops: usize,
+        shape: impl FnOnce() -> String,
+    ) {
+        self.record(start, || OpRecord {
+            op,
+            variant: None,
+            width: 0,
+            shape: shape(),
+            elems_read: elems_read as u64,
+            elems_written: elems_written as u64,
+            flops: flops as u64,
+        });
+    }
+
+    /// Label the current network region; a no-op when disarmed.
+    #[inline]
+    pub fn set_layer(&self, layer: Layer) {
+        if let Some(state) = self.0.as_ref() {
+            state.borrow_mut().layer = layer;
+        }
+    }
+
+    /// Snapshot the aggregate rows collected so far (armed handles
+    /// only). Rows stay accumulated — a snapshot observes, it does not
+    /// drain.
+    pub fn snapshot(&self) -> Option<Vec<OpAggregate>> {
+        self.0.as_ref().map(|state| state.borrow().rows.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(op: TracedOp, shape: &str) -> OpRecord {
+        OpRecord {
+            op,
+            variant: None,
+            width: 0,
+            shape: shape.to_string(),
+            elems_read: 10,
+            elems_written: 5,
+            flops: 100,
+        }
+    }
+
+    #[test]
+    fn disarmed_prof_collects_nothing() {
+        let p = Prof::default();
+        assert!(!p.is_armed());
+        assert_eq!(p.start(), None, "disarmed start must not read the clock");
+        p.record(p.start(), || panic!("record closure must not run disarmed"));
+        p.set_layer(Layer::Fc);
+        assert!(p.snapshot().is_none());
+    }
+
+    #[test]
+    fn armed_prof_aggregates_by_op_layer_variant() {
+        let p = Prof::armed();
+        p.set_layer(Layer::Conv(0));
+        p.record(p.start(), || rec(TracedOp::Relu, "256"));
+        p.record(p.start(), || rec(TracedOp::Relu, "256"));
+        p.set_layer(Layer::Conv(1));
+        p.record(p.start(), || rec(TracedOp::Relu, "128"));
+        let rows = p.snapshot().unwrap();
+        assert_eq!(rows.len(), 2, "same (op, layer, variant) must merge");
+        assert_eq!(rows[0].layer, "conv0");
+        assert_eq!(rows[0].calls, 2);
+        assert_eq!(rows[0].elems_read, 20);
+        assert_eq!(rows[0].flops, 200);
+        assert_eq!(rows[1].layer, "conv1");
+        assert_eq!(rows[1].calls, 1);
+        assert_eq!(rows[1].shape, "128", "first-seen shape is kept");
+    }
+
+    #[test]
+    fn clones_share_one_accumulator() {
+        let p = Prof::armed();
+        let q = p.clone();
+        p.set_layer(Layer::Opt);
+        q.record(q.start(), || rec(TracedOp::AdamStep, "6138"));
+        assert_eq!(p.snapshot().unwrap().len(), 1, "clone records into the shared state");
+    }
+
+    #[test]
+    fn normalized_zeroes_only_wall_clock() {
+        let p = Prof::armed();
+        p.set_layer(Layer::Loss);
+        p.record(p.start(), || rec(TracedOp::SoftmaxXent, "32x10"));
+        let report = OpTraceReport {
+            model: "m".into(),
+            workload: "w".into(),
+            threads: 1,
+            rows: p.snapshot().unwrap(),
+        };
+        let norm = report.normalized();
+        assert!(norm.rows.iter().all(|r| r.wall_ns == 0));
+        let mut a = report.clone();
+        for row in &mut a.rows {
+            row.wall_ns = 0;
+        }
+        assert_eq!(a, norm, "normalization touches nothing but wall_ns");
+    }
+
+    #[test]
+    fn traced_op_tags_round_trip_and_unknowns_fail() {
+        for op in TRACED_OPS {
+            assert_eq!(TracedOp::from_u8(op as u8), Some(op));
+            assert!(!op.name().is_empty());
+        }
+        assert_eq!(TracedOp::from_u8(200), None);
+    }
+
+    #[test]
+    fn layer_names_are_stable() {
+        assert_eq!(Layer::Conv(2).name(), "conv2");
+        assert_eq!(Layer::Fc.name(), "fc");
+        assert_eq!(Layer::Loss.name(), "loss");
+        assert_eq!(Layer::Opt.name(), "opt");
+        assert_eq!(Layer::None.name(), "-");
+    }
+}

@@ -14,8 +14,12 @@
 //!
 //! The table is stored under artifact kind `"tuner"` keyed by
 //! [`host_fingerprint`] (arch + detected-ISA bitmask + core count +
-//! tuner schema version — retune when any of them changes, share
-//! otherwise). Concurrent `--jobs` workers reuse the PR 7 lease layer:
+//! intra-op thread budget + tuner schema version — retune when any of
+//! them changes, share otherwise). The budget is part of the key
+//! because it is part of the *measurement*: a table tuned serially can
+//! route differently than one tuned at the `threads` the `ExecCtx`
+//! actually runs under, so budgets never share (or overwrite) each
+//! other's tables. Concurrent `--jobs` workers reuse the PR 7 lease layer:
 //! the first resolver claims the lease and tunes; peers poll and adopt
 //! the published table; a resolver that loses the race to a dead lease
 //! or hits the wait deadline tunes privately without publishing
@@ -25,7 +29,8 @@
 //! the crash between tuning and publishing: the lease must release and
 //! the next resolver must retune and publish cleanly.
 
-use std::sync::{Arc, OnceLock};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -138,7 +143,9 @@ impl TunedOp {
         }
     }
 
-    fn from_u8(v: u8) -> Option<TunedOp> {
+    /// Inverse of `op as u8`; `None` on an unknown tag (fail-closed
+    /// decoding — also reused by the `optrace` codec).
+    pub fn from_u8(v: u8) -> Option<TunedOp> {
         OPS.into_iter().find(|op| *op as u8 == v)
     }
 }
@@ -167,7 +174,9 @@ impl Lowering {
         }
     }
 
-    fn from_u8(v: u8) -> Option<Lowering> {
+    /// Inverse of `lowering as u8`; `None` on an unknown tag (fail-closed
+    /// decoding — also reused by the `optrace` codec).
+    pub fn from_u8(v: u8) -> Option<Lowering> {
         [Lowering::Direct, Lowering::Im2col, Lowering::Gemm]
             .into_iter()
             .find(|l| *l as u8 == v)
@@ -259,9 +268,12 @@ impl RouteTable {
 }
 
 /// Host identity the table is keyed by: retune when the architecture,
-/// the detected ISA set, the core count, or the tuner schema changes;
-/// reuse otherwise. Deliberately *not* part of any stage digest.
-pub fn host_fingerprint() -> Digest {
+/// the detected ISA set, the core count, the intra-op thread budget, or
+/// the tuner schema changes; reuse otherwise. The budget is hashed
+/// because the micro-benchmarks run *at* it — a serial table and a
+/// 4-thread table are different measurements and must not collide.
+/// Deliberately *not* part of any stage digest.
+pub fn host_fingerprint(threads: usize) -> Digest {
     let mut h = Hasher::new();
     h.str("tuner/v1");
     h.str(std::env::consts::ARCH);
@@ -271,6 +283,7 @@ pub fn host_fingerprint() -> Digest {
     }
     h.u64(mask);
     h.usize(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    h.usize(threads.max(1));
     h.u64(TUNER_SCHEMA as u64);
     h.finish()
 }
@@ -372,7 +385,7 @@ fn load_table(cache: &ArtifactCache, key: &Digest) -> Option<RouteTable> {
 /// otherwise lease-coordinate so concurrent workers tune exactly once.
 /// Never fails — every degraded path returns a locally tuned table.
 pub fn resolve_at(cache: &ArtifactCache, threads: usize) -> (RouteTable, Resolution) {
-    let key = host_fingerprint();
+    let key = host_fingerprint(threads);
     if let Some(table) = load_table(cache, &key) {
         return (table, Resolution::CacheHit);
     }
@@ -415,19 +428,25 @@ pub fn resolve_at(cache: &ArtifactCache, threads: usize) -> (RouteTable, Resolut
 
 /// Process-wide lazy resolution against the default results root
 /// (`FITQ_RESULTS` or `./results`) — what `KernelMode::Auto` dispatch
-/// uses. Resolved once per process; `threads` only parameterizes the
-/// first (resolving) call.
+/// uses. Resolved once per *thread budget* per process (a `BTreeMap`
+/// keyed by the budget, not a single `OnceLock`): a serial worker and a
+/// 4-thread dispatcher in one process get the tables tuned at their own
+/// budgets instead of whichever resolved first.
 pub fn resolve(threads: usize) -> Arc<RouteTable> {
-    static TABLE: OnceLock<Arc<RouteTable>> = OnceLock::new();
-    TABLE
-        .get_or_init(|| {
-            let table = match ArtifactCache::new(results_root_from_env().join("cache")) {
-                Ok(cache) => resolve_at(&cache, threads).0,
-                Err(_) => tune(threads),
-            };
-            Arc::new(table)
-        })
-        .clone()
+    static TABLES: OnceLock<Mutex<BTreeMap<usize, Arc<RouteTable>>>> = OnceLock::new();
+    let threads = threads.max(1);
+    let tables = TABLES.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = tables.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(table) = map.get(&threads) {
+        return table.clone();
+    }
+    let table = match ArtifactCache::new(results_root_from_env().join("cache")) {
+        Ok(cache) => resolve_at(&cache, threads).0,
+        Err(_) => tune(threads),
+    };
+    let table = Arc::new(table);
+    map.insert(threads, table.clone());
+    table
 }
 
 /// Micro-benchmark every (op, class, lowering, ISA) candidate and keep
@@ -482,12 +501,18 @@ fn min_time(mut f: impl FnMut()) -> f64 {
 }
 
 /// Time one candidate on a synthetic problem whose vector axis is
-/// `width`; returns nominal GFLOP/s.
+/// `width`; returns nominal GFLOP/s. The batch/row dimension scales
+/// with the thread budget so `gemm::effective_threads`' panel and
+/// work-per-thread caps actually let the budget engage — a serial-sized
+/// problem would silently measure every budget at 1 thread, which is
+/// exactly the bug this scaling fixes (`threads = 1` keeps the
+/// original serial problem sizes).
 fn bench_variant(op: TunedOp, lowering: Lowering, isa: Isa, width: usize, threads: usize) -> f64 {
     match op {
         TunedOp::ConvFwd | TunedOp::ConvBwdW | TunedOp::ConvBwdX => {
             // ConvFwd/ConvBwdW vectorize over c_out; ConvBwdX over c_in.
-            let (n, h, w) = (2usize, 12, 12);
+            let n = if threads > 1 { 4 * threads } else { 2 };
+            let (h, w) = (12usize, 12);
             let (cin, cout) =
                 if op == TunedOp::ConvBwdX { (width, 8) } else { (8, width) };
             let x = sparse_randv(n * h * w * cin, 7 + width as u64);
@@ -575,7 +600,7 @@ fn bench_variant(op: TunedOp, lowering: Lowering, isa: Isa, width: usize, thread
             flops / secs / 1e9
         }
         TunedOp::DenseFwd | TunedOp::DenseBwd => {
-            let (rows, fin, fout) = (64usize, 128, width);
+            let (rows, fin, fout) = (64 * threads.max(1), 128, width);
             let x = sparse_randv(rows * fin, 19 + width as u64);
             let wgt = randv(fin * fout, 23 + width as u64);
             let bias = randv(fout, 29);
@@ -673,6 +698,17 @@ mod tests {
 
     #[test]
     fn fingerprint_is_stable_within_a_process() {
-        assert_eq!(host_fingerprint(), host_fingerprint());
+        assert_eq!(host_fingerprint(1), host_fingerprint(1));
+    }
+
+    #[test]
+    fn fingerprint_separates_thread_budgets() {
+        assert_ne!(
+            host_fingerprint(1),
+            host_fingerprint(4),
+            "thread budget must be part of the persisted-table key"
+        );
+        // 0 is clamped to the serial budget, not a distinct key.
+        assert_eq!(host_fingerprint(0), host_fingerprint(1));
     }
 }

@@ -52,6 +52,16 @@ pub trait Backend {
 
     /// Compile (or build) the dispatcher for one entry point.
     fn compile(&self, model: &ModelManifest, entry: &EntrySpec) -> Result<Box<dyn Dispatcher>>;
+
+    /// Snapshot the op-level trace accumulated so far, if this backend
+    /// profiles ops and profiling is armed (`FITQ_TRACE_OPS`, see
+    /// [`native::trace`](crate::native::trace)). The default — and the
+    /// PJRT backend, whose compiled HLO is opaque at op granularity —
+    /// reports `None`. Tracing observes results, never changes them,
+    /// so nothing here may feed a pipeline cache key.
+    fn op_trace(&self) -> Option<crate::native::trace::OpTraceReport> {
+        None
+    }
 }
 
 /// A serializable recipe for constructing a `Runtime` — what parallel

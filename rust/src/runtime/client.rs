@@ -216,6 +216,15 @@ impl Runtime {
         self.stats.borrow().clone()
     }
 
+    /// Snapshot the backend's accumulated op-level trace, if it profiles
+    /// ops and profiling is armed (`FITQ_TRACE_OPS` — native backend
+    /// only; see [`native::trace`](crate::native::trace)). `model` and
+    /// `workload` arrive empty: the caller labels the run before
+    /// persisting.
+    pub fn op_trace(&self) -> Option<crate::native::trace::OpTraceReport> {
+        self.backend.op_trace()
+    }
+
     /// Drop compiled executables (frees backend memory between experiments).
     pub fn evict_model(&self, model: &str) {
         self.cache.borrow_mut().retain(|(m, _), _| m != model);

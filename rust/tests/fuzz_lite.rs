@@ -1,24 +1,29 @@
-//! Fuzz-lite: deterministic seeded byte-mutation loops over the four
+//! Fuzz-lite: deterministic seeded byte-mutation loops over the
 //! fail-closed parsers — the model-manifest parser
 //! (`native::manifest`), the artifact-cache container header
 //! (`pipeline::cache`), the binary payload codec (`pipeline::codec`),
-//! and the lease-record parser (`pipeline::cache::LeaseRecord`). No
-//! cargo-fuzz in this container, so this is the bounded in-tree half of
-//! the ROADMAP hardening item: a splitmix64 stream drives ~12k mutations
-//! per `cargo test -q` run, and every mutated input must produce an
-//! error or a valid value — never a panic, never a silently-wrong
-//! accept.
+//! the lease-record parser (`pipeline::cache::LeaseRecord`), and the
+//! trace-report input path (`codec::decode_optrace` plus the
+//! `coordinator::analysis` bench parser). No cargo-fuzz in this
+//! container, so this is the bounded in-tree half of the ROADMAP
+//! hardening item: a splitmix64 stream drives ~14k mutations per
+//! `cargo test -q` run, and every mutated input must produce an error
+//! or a valid value — never a panic, never a silently-wrong accept.
 
+use fitq::coordinator::analysis::{self, AnalysisError};
 use fitq::coordinator::evaluator::{ConfigFailure, ConfigOutcome, StudyResult};
 use fitq::coordinator::service::parse_request;
 use fitq::coordinator::pipeline::codec::{
-    decode_sensitivity, decode_study, decode_trace, encode_sensitivity, encode_study,
-    encode_trace,
+    decode_optrace, decode_sensitivity, decode_study, decode_trace, encode_optrace,
+    encode_sensitivity, encode_study, encode_trace,
 };
 use fitq::coordinator::pipeline::{ArtifactCache, Hasher, LeaseRecord};
 use fitq::coordinator::{ActRanges, Estimator, SensitivityReport, TraceResult};
 use fitq::metrics::{Metric, SensitivityInputs};
 use fitq::native::manifest::{load_str, ZooManifest};
+use fitq::native::simd::Isa;
+use fitq::native::trace::{OpAggregate, OpTraceReport, TracedOp};
+use fitq::native::tune::Lowering;
 use fitq::quant::BitConfig;
 
 /// splitmix64 — the standard seeded mixer, deterministic across runs and
@@ -290,4 +295,126 @@ fn fuzz_codec_decoders_error_or_produce_valid_values() {
             }
         }
     }
+}
+
+fn sample_optrace() -> OpTraceReport {
+    OpTraceReport {
+        model: "cnn_mnist".into(),
+        workload: "train_epoch".into(),
+        threads: 2,
+        rows: vec![
+            OpAggregate {
+                op: TracedOp::ConvFwd,
+                layer: "conv0".into(),
+                variant: Some((Isa::Sse2, Lowering::Im2col)),
+                width: 8,
+                shape: "b32 16x16 1->8".into(),
+                calls: 30,
+                elems_read: 260_000,
+                elems_written: 61_440,
+                flops: 35_389_440,
+                wall_ns: 4_200_000,
+            },
+            OpAggregate {
+                op: TracedOp::Relu,
+                layer: "conv0".into(),
+                variant: None,
+                width: 0,
+                shape: "b32 16x16 c8".into(),
+                calls: 30,
+                elems_read: 61_440,
+                elems_written: 61_440,
+                flops: 61_440,
+                wall_ns: 90_000,
+            },
+            OpAggregate {
+                op: TracedOp::AdamStep,
+                layer: "opt".into(),
+                variant: None,
+                width: 0,
+                shape: "n6138".into(),
+                calls: 10,
+                elems_read: 24_552,
+                elems_written: 18_414,
+                flops: 73_656,
+                wall_ns: 50_000,
+            },
+        ],
+    }
+}
+
+/// Trace-report input path: ~2k mutations over the `optrace` decoder and
+/// the bench-peaks parser. Both are fail-closed front doors of
+/// `fitq trace-report`: every mutant must yield a typed error or a valid
+/// value that survives the rest of the analysis pipeline (re-encode /
+/// cost-report render) — never a panic.
+#[test]
+fn fuzz_optrace_decoder_and_bench_parser_never_panic() {
+    let mut rng = 0x5EED_0006_u64;
+
+    // half the budget: the binary optrace decoder
+    let pristine = encode_optrace(&sample_optrace());
+    for i in 0..1000 {
+        let mut bytes = pristine.clone();
+        let n_mut = 1 + (splitmix64(&mut rng) as usize) % 4;
+        for _ in 0..n_mut {
+            mutate(&mut bytes, &mut rng);
+        }
+        if let Ok(t) = decode_optrace(&bytes) {
+            let re = decode_optrace(&encode_optrace(&t))
+                .unwrap_or_else(|e| panic!("optrace {i}: re-encode broke: {e}"));
+            assert_eq!(re, t, "optrace {i}: re-encode round trip diverged");
+        }
+    }
+
+    // other half: the bench JSON parser + the report derivation it feeds,
+    // seeded from the committed bench file trace-report actually reads
+    let bench_seed = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_kernels.json"
+    ))
+    .expect("committed bench file");
+    let trace = sample_optrace();
+    let mut accepted = 0u64;
+    for i in 0..1000 {
+        let mut bytes = bench_seed.clone().into_bytes();
+        let n_mut = 1 + (splitmix64(&mut rng) as usize) % 4;
+        for _ in 0..n_mut {
+            mutate(&mut bytes, &mut rng);
+        }
+        let text = String::from_utf8_lossy(&bytes);
+        match analysis::parse_bench_kernels(&text) {
+            Ok(peaks) => {
+                accepted += 1;
+                // an accepted mutant must carry through the whole report
+                // path without panicking
+                let report = analysis::cost_report(&trace, &peaks)
+                    .unwrap_or_else(|e| panic!("bench {i}: report failed on accepted peaks: {e}"));
+                let _ = analysis::render_text(&report);
+                let _ = analysis::render_json(&report);
+            }
+            Err(e) => assert!(
+                matches!(e, AnalysisError::BenchParse(_) | AnalysisError::BenchSchema(_)),
+                "bench {i}: unexpected error kind {:?}",
+                e.kind()
+            ),
+        }
+    }
+    // mutations outside the "kernels" array (status text, train_epoch
+    // rows) keep the document valid for the peaks parser
+    assert!(accepted > 0, "no mutated bench file ever parsed; mutator too destructive?");
+}
+
+/// `AnalysisError::kind()` strings are a stable API (this harness and
+/// the CLI lean on them); pin the full set, alongside the manifest
+/// parser's pin in `tests/manifest_validation.rs`.
+#[test]
+fn analysis_error_kinds_are_stable() {
+    let kinds = [
+        AnalysisError::BenchParse(String::new()).kind(),
+        AnalysisError::BenchSchema(String::new()).kind(),
+        AnalysisError::TraceDecode(String::new()).kind(),
+        AnalysisError::EmptyTrace.kind(),
+    ];
+    assert_eq!(kinds, ["bench_parse", "bench_schema", "trace_decode", "empty_trace"]);
 }

@@ -81,7 +81,7 @@ fn tuner_table_persists_and_round_trips() {
     let cache = ArtifactCache::new(dir.join("cache")).unwrap();
     let (t1, how1) = tune::resolve_at(&cache, 1);
     assert_eq!(how1, Resolution::TunedPublished, "first resolver tunes and publishes");
-    let key = tune::host_fingerprint();
+    let key = tune::host_fingerprint(1);
     assert!(
         cache.entry_path(tune::TUNER_KIND, &key).exists(),
         "published table must be a cache entry under the host fingerprint"
@@ -90,6 +90,39 @@ fn tuner_table_persists_and_round_trips() {
     assert_eq!(how2, Resolution::CacheHit, "second resolver hits the stored table");
     assert_eq!(t1, t2, "the table round-trips through the codec exactly");
     assert!(!t1.measurements.is_empty(), "tuned tables carry their measurements");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite regression for the tune-at-the-wrong-budget bug: the
+/// micro-benchmarks now run at the intra-op budget the `ExecCtx` will
+/// actually use, so a table tuned at `threads=1` must not be served to a
+/// `threads=4` resolver — the persisted-table key (the host fingerprint)
+/// carries the budget.
+#[test]
+fn route_table_is_keyed_per_thread_budget() {
+    let dir = tmp("budget");
+    let cache = ArtifactCache::new(dir.join("cache")).unwrap();
+    let (_, how1) = tune::resolve_at(&cache, 1);
+    assert_eq!(how1, Resolution::TunedPublished);
+    let (_, how4) = tune::resolve_at(&cache, 4);
+    assert_eq!(
+        how4,
+        Resolution::TunedPublished,
+        "a different thread budget must re-tune, not adopt the serial table"
+    );
+    assert_ne!(
+        tune::host_fingerprint(1),
+        tune::host_fingerprint(4),
+        "the budget must be part of the persisted-table fingerprint"
+    );
+    for threads in [1usize, 4] {
+        assert!(
+            cache.entry_path(tune::TUNER_KIND, &tune::host_fingerprint(threads)).exists(),
+            "threads={threads} table must persist under its own key"
+        );
+        let (_, how) = tune::resolve_at(&cache, threads);
+        assert_eq!(how, Resolution::CacheHit, "threads={threads} re-resolve hits its table");
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -136,7 +169,7 @@ fn concurrent_resolvers_tune_exactly_once() {
 fn tuner_publish_fault_recovers_cleanly() {
     let dir = tmp("fault");
     let cache = ArtifactCache::new(dir.join("cache")).unwrap();
-    let key = tune::host_fingerprint();
+    let key = tune::host_fingerprint(1);
     {
         let scope = fault::scoped(FaultPlan::single(site::TUNER_PUBLISH_FAIL));
         let (table, how) = tune::resolve_at(&cache, 1);

@@ -1,0 +1,244 @@
+//! Op-trace contracts (DESIGN.md "Op tracing & analysis"):
+//!
+//! - Tracing is an *observer*: with `FITQ_TRACE_OPS` armed, every output
+//!   — losses, trained parameters, serialized study bytes — is
+//!   bit-identical to an untraced run, at `jobs ∈ {1, 4}`.
+//! - Tracing never enters a pipeline stage digest: every stage key (and
+//!   the `optrace` key itself) is byte-identical whether or not the
+//!   profiler is armed.
+//! - The trace counters (calls, elements, FLOPs, shapes, variants) are
+//!   pure functions of the workload: deterministic across runs and
+//!   across intra-op thread budgets. Wall clock is the *only*
+//!   nondeterministic field, and [`OpTraceReport::normalized`] zeroes
+//!   exactly it, making serialized traces byte-comparable.
+//! - The `optrace` codec round-trips byte-exactly on real traces.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use fitq::coordinator::pipeline::codec::{decode_optrace, encode_optrace};
+use fitq::coordinator::pipeline::stages::{
+    optrace_key, sensitivity_key, study_key, train_fp_key,
+};
+use fitq::coordinator::{run_study, ModelState, Pipeline, StudyOptions, TraceOptions};
+use fitq::data::{EpochBatch, SynthClass};
+use fitq::native::trace::{OpTraceReport, TracedOp};
+use fitq::runtime::{Arg, Runtime};
+
+/// Serializes the tests in this binary that mutate process environment
+/// (`FITQ_TRACE_OPS`, `FITQ_NATIVE_KERNEL`) — cargo runs tests in threads.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fitq_optrace_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One `train_epoch` through the real `Runtime` dispatch path: the
+/// output bits (trained params + loss) and whatever trace the backend
+/// accumulated. The profiler arms off `FITQ_TRACE_OPS` at runtime
+/// construction, so the caller controls tracing via the env var.
+fn epoch(threads: usize) -> (Vec<u32>, Option<OpTraceReport>) {
+    let rt = Runtime::native_with_threads(threads).unwrap();
+    let mm = rt.model("cnn_mnist").unwrap().clone();
+    let exe = rt.load("cnn_mnist", "train_epoch").unwrap();
+    let st = ModelState::init(&rt, "cnn_mnist", 3).unwrap();
+    let ds = SynthClass::synmnist(3);
+    let (eb, _) = EpochBatch::generate(&ds, mm.train_k, mm.train_b, 0);
+    let out = exe
+        .run(&[
+            Arg::F32(&st.params),
+            Arg::F32(&st.m),
+            Arg::F32(&st.v),
+            Arg::F32Scalar(0.0),
+            Arg::F32(&eb.xs),
+            Arg::I32(&eb.ys),
+        ])
+        .unwrap();
+    let mut bits: Vec<u32> = out.f32("params").unwrap().iter().map(|v| v.to_bits()).collect();
+    bits.push(out.scalar("loss").unwrap().to_bits());
+    (bits, rt.op_trace())
+}
+
+/// Armed vs disarmed, serial and threaded: identical bits everywhere,
+/// and the armed run actually collects a trace with the ops the model
+/// dispatches. This is the observer guarantee the digest-exclusion rule
+/// below rests on.
+#[test]
+fn tracing_does_not_change_train_epoch_bits() {
+    let _env = ENV_LOCK.lock().unwrap();
+    // forced-scalar routing: deterministic dispatch without a tuning
+    // pass, and bit-identical to every other variant anyway
+    std::env::set_var("FITQ_NATIVE_KERNEL", "scalar");
+    std::env::remove_var("FITQ_TRACE_OPS");
+
+    let (baseline, off_trace) = epoch(1);
+    assert!(off_trace.is_none(), "disarmed backend must report no trace");
+    assert_eq!(epoch(4).0, baseline, "threads=4 untraced must replay the bits");
+
+    std::env::set_var("FITQ_TRACE_OPS", "1");
+    for threads in [1usize, 4] {
+        let (bits, trace) = epoch(threads);
+        assert_eq!(bits, baseline, "threads={threads} traced run changed the output bits");
+        let trace = trace.expect("armed backend must expose a trace");
+        assert_eq!(trace.threads, threads as u32);
+        assert!(!trace.rows.is_empty());
+        for op in [
+            TracedOp::ConvFwd,
+            TracedOp::ConvBwdW,
+            TracedOp::ConvBwdX,
+            TracedOp::DenseFwd,
+            TracedOp::DenseBwd,
+            TracedOp::Relu,
+            TracedOp::MaxPool,
+            TracedOp::SoftmaxXent,
+            TracedOp::AdamStep,
+        ] {
+            assert!(
+                trace.rows.iter().any(|r| r.op == op),
+                "train_epoch must trace {op:?}: {:?}",
+                trace.rows.iter().map(|r| r.op).collect::<Vec<_>>()
+            );
+        }
+        // tuned ops carry their routed variant, element-wise ops don't
+        assert!(trace
+            .rows
+            .iter()
+            .all(|r| (r.op as u8) < 5 || r.variant.is_none()));
+        assert!(trace
+            .rows
+            .iter()
+            .all(|r| (r.op as u8) >= 5 || r.variant.is_some()));
+    }
+    std::env::remove_var("FITQ_TRACE_OPS");
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+}
+
+/// The digest-exclusion rule: arming the profiler changes no pipeline
+/// stage key, and the `optrace` key itself hashes only
+/// (backend, model layout, workload) — never threads or the switch.
+#[test]
+fn tracing_never_enters_stage_digests() {
+    let _env = ENV_LOCK.lock().unwrap();
+    let keys = || {
+        let rt = Runtime::native().unwrap();
+        let mm = rt.model("cnn_mnist").unwrap().clone();
+        (
+            train_fp_key("native", &mm, 3, 0),
+            sensitivity_key("native", &mm, 3, 0, &TraceOptions::default()),
+            study_key("native", &mm, &StudyOptions::default()),
+            optrace_key("native", &mm, "train_epoch"),
+        )
+    };
+    std::env::remove_var("FITQ_TRACE_OPS");
+    let off = keys();
+    std::env::set_var("FITQ_TRACE_OPS", "1");
+    let on = keys();
+    std::env::remove_var("FITQ_TRACE_OPS");
+    assert_eq!(
+        off, on,
+        "the tracing switch must never reach a stage digest: traced and \
+         untraced runs share every cache entry bit-for-bit"
+    );
+}
+
+/// Counters are pure functions of the workload: two runs, and runs under
+/// different intra-op budgets, agree on every field but wall clock —
+/// and byte-for-byte once `normalized()` zeroes it.
+#[test]
+fn counters_deterministic_across_runs_and_thread_budgets() {
+    let _env = ENV_LOCK.lock().unwrap();
+    std::env::set_var("FITQ_NATIVE_KERNEL", "scalar");
+    std::env::set_var("FITQ_TRACE_OPS", "1");
+    let t_a = epoch(1).1.unwrap();
+    let t_b = epoch(1).1.unwrap();
+    let t_4 = epoch(4).1.unwrap();
+    std::env::remove_var("FITQ_TRACE_OPS");
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+
+    assert_eq!(t_a.normalized(), t_b.normalized(), "re-run counters diverged");
+    assert_eq!(
+        encode_optrace(&t_a.normalized()),
+        encode_optrace(&t_b.normalized()),
+        "normalized serialized traces must be byte-identical across runs"
+    );
+    // the thread budget reaches the report header (it is honest metadata)
+    // but never the per-op counters
+    let mut t_4n = t_4.normalized();
+    assert_eq!(t_4n.threads, 4);
+    t_4n.threads = 1;
+    assert_eq!(
+        t_a.normalized(),
+        t_4n,
+        "intra-op threading must not change any counter, shape or variant"
+    );
+}
+
+/// The `optrace` codec on a *real* trace: decode(encode(x)) == x, and
+/// re-encoding reproduces the exact bytes (wall clock included — the
+/// codec itself is lossless; normalization is only for comparisons).
+#[test]
+fn optrace_roundtrip_byte_exact_on_real_traces() {
+    let _env = ENV_LOCK.lock().unwrap();
+    std::env::set_var("FITQ_NATIVE_KERNEL", "scalar");
+    std::env::set_var("FITQ_TRACE_OPS", "1");
+    let mut report = epoch(1).1.unwrap();
+    std::env::remove_var("FITQ_TRACE_OPS");
+    std::env::remove_var("FITQ_NATIVE_KERNEL");
+
+    report.model = "cnn_mnist".to_string();
+    report.workload = "train_epoch".to_string();
+    let bytes = encode_optrace(&report);
+    let decoded = decode_optrace(&bytes).expect("decode real trace");
+    assert_eq!(decoded, report, "decode must reproduce the report exactly");
+    assert_eq!(encode_optrace(&decoded), bytes, "re-encode must reproduce the bytes");
+
+    let norm = report.normalized();
+    assert_eq!(
+        decode_optrace(&encode_optrace(&norm)).unwrap(),
+        norm,
+        "and the normalized form round-trips too"
+    );
+}
+
+/// The whole-pipeline observer guarantee: a full (miniature) study's
+/// serialized bytes are identical untraced vs traced, at `jobs ∈ {1, 4}`
+/// — tracing rides along through training, traces, sensitivity and the
+/// config sweep without perturbing one bit of any of them.
+#[test]
+fn study_bytes_identical_with_tracing_at_jobs_1_and_4() {
+    let _env = ENV_LOCK.lock().unwrap();
+    let mut opt = StudyOptions {
+        n_configs: 2,
+        fp_epochs: 1,
+        qat_epochs: 1,
+        eval_n: 128,
+        seed: 11,
+        ..Default::default()
+    };
+    opt.trace.max_iters = 16;
+
+    let study = |jobs: usize, tag: &str| -> Vec<u8> {
+        let dir = tmp(&format!("study_{tag}"));
+        let rt = Runtime::native_with_threads(1).unwrap();
+        let pipe = Pipeline::new(&dir).expect("pipeline");
+        let mut o = opt.clone();
+        o.jobs = jobs;
+        let mut s = run_study(&rt, &pipe, "cnn_mnist", &o).expect("study");
+        std::fs::remove_dir_all(&dir).ok();
+        // normalize the single wall-clock field (zoo_models.rs pattern)
+        s.sens.trace.iter_time_s = 0.0;
+        fitq::coordinator::pipeline::codec::encode_study(&s)
+    };
+
+    std::env::remove_var("FITQ_TRACE_OPS");
+    let base = study(1, "off_j1");
+    std::env::set_var("FITQ_TRACE_OPS", "1");
+    let on_j1 = study(1, "on_j1");
+    let on_j4 = study(4, "on_j4");
+    std::env::remove_var("FITQ_TRACE_OPS");
+    assert_eq!(on_j1, base, "jobs=1 traced study bytes diverged from untraced");
+    assert_eq!(on_j4, base, "jobs=4 traced study bytes diverged from untraced");
+}

@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Validate the committed BENCH_*.json files against their schemas.
+"""Validate the committed BENCH_*.json files (and generated report JSON
+such as `fitq trace-report --json`) against their schemas.
 
 CI runs this so a bench that writes malformed JSON (or a hand edit that
 drops a field) fails loudly instead of silently breaking the perf
@@ -170,16 +171,49 @@ def check_search_service(path, d):
             fail(path, f"throughput must include a {need!r} row")
 
 
+def check_trace_report(path, d):
+    """`fitq trace-report --json` output (generated, not committed — the
+    check-trace smoke runs this over a fresh report)."""
+    if d.get("report") != "op_trace":
+        fail(path, f"report must be 'op_trace', got {d.get('report')!r}")
+    for key in ("model", "workload"):
+        if not isinstance(d.get(key), str):
+            fail(path, f"field {key!r} must be a string")
+    if not isinstance(d.get("threads"), int):
+        fail(path, "threads must be an int")
+    if not isinstance(d.get("total_ms"), NUM):
+        fail(path, "total_ms must be a number")
+    rows = d.get("rows")
+    if not isinstance(rows, list) or not rows:
+        fail(path, "rows must be a non-empty list")
+    for row in rows:
+        if not isinstance(row, dict):
+            fail(path, "rows must be objects")
+        for key in ("op", "layer", "variant", "shape"):
+            if not isinstance(row.get(key), str):
+                fail(path, f"rows need a {key!r} string")
+        if not isinstance(row.get("calls"), int):
+            fail(path, "rows need an int 'calls'")
+        for key in ("time_pct", "ms", "gflops", "gbs"):
+            if not isinstance(row.get(key), NUM):
+                fail(path, f"rows need a numeric {key!r}")
+        # roofline is null for ops whose kernel family has no bench peak
+        num_or_null(path, row, "roofline")
+
+
 CHECKS = {
     "BENCH_parallel_study.json": check_parallel_study,
     "BENCH_fit_scoring.json": check_fit_scoring,
     "BENCH_kernels.json": check_kernels,
     "BENCH_search_service.json": check_search_service,
+    "TRACE_report.json": check_trace_report,
 }
 
 
 def main(argv):
-    paths = argv[1:] or list(CHECKS)
+    # default run covers the committed records; TRACE_report.json is
+    # generated on demand and checked explicitly by check_trace.sh
+    paths = argv[1:] or [p for p in CHECKS if p.startswith("BENCH_")]
     for path in paths:
         name = path.rsplit("/", 1)[-1]
         if name not in CHECKS:

@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# Op-trace smoke for `make check-trace` (the in-tree trace suites run
+# under `cargo test`; this drives the real binary end to end):
+#
+#   1. `fitq trace-report` before any traced run: actionable error
+#      (naming --trace-ops) and a nonzero exit
+#   2. `fitq train --trace-ops true` on cnn_mnist over the native
+#      backend: trains, stores the `optrace` artifact, says so
+#   3. `fitq trace-report`: the cost table must show conv rows with
+#      GFLOP/s / GB/s / roofline columns, and the --json report must
+#      pass scripts/check_bench_schema.py
+#   4. `fitq tune --trace-model cnn_mnist`: the routing trailer checks
+#      the tuned table against the stored trace's real shapes
+#   5. a corrupted stored trace: trace-report must exit nonzero, never
+#      render garbage
+set -euo pipefail
+
+BIN=${FITQ_BIN:-target/release/fitq}
+DIR=$(mktemp -d)
+cleanup() {
+  rm -rf "$DIR"
+}
+trap cleanup EXIT
+
+echo "== trace-report with no stored trace: actionable error, nonzero exit =="
+if FITQ_RESULTS="$DIR" "$BIN" trace-report --model cnn_mnist > "$DIR/missing.txt" 2>&1; then
+  echo "error: trace-report succeeded with no stored trace" >&2
+  exit 1
+fi
+grep -q 'trace-ops' "$DIR/missing.txt" || {
+  cat "$DIR/missing.txt" >&2
+  echo "error: missing-trace error must tell the user to run --trace-ops" >&2
+  exit 1
+}
+
+echo "== traced native train (writes the optrace artifact) =="
+FITQ_RESULTS="$DIR" "$BIN" train --model cnn_mnist --backend native --epochs 1 \
+  --trace-ops true > "$DIR/train.txt"
+grep -q 'op trace:' "$DIR/train.txt" || {
+  cat "$DIR/train.txt" >&2
+  echo "error: traced train did not report a stored op trace" >&2
+  exit 1
+}
+ls "$DIR"/cache/optrace_*.bin > /dev/null || {
+  echo "error: no optrace artifact landed in the cache" >&2
+  exit 1
+}
+
+echo "== cost report: conv rows, rate columns, JSON schema =="
+FITQ_RESULTS="$DIR" "$BIN" trace-report --model cnn_mnist \
+  --json "$DIR/TRACE_report.json" > "$DIR/report.txt"
+for want in conv_fwd conv_bwd_w dense_fwd adam_step 'GFLOP/s' GB/s roofline; do
+  grep -q "$want" "$DIR/report.txt" || {
+    cat "$DIR/report.txt" >&2
+    echo "error: cost report is missing $want" >&2
+    exit 1
+  }
+done
+python3 scripts/check_bench_schema.py "$DIR/TRACE_report.json"
+
+echo "== tune trailer: routing check against the stored trace =="
+FITQ_RESULTS="$DIR" "$BIN" tune --trace-model cnn_mnist > "$DIR/tune.txt"
+grep -q 'routing check vs traced cnn_mnist/train_epoch' "$DIR/tune.txt" || {
+  cat "$DIR/tune.txt" >&2
+  echo "error: tune did not append the routing trailer" >&2
+  exit 1
+}
+grep -q 'conv_fwd w' "$DIR/tune.txt" || {
+  cat "$DIR/tune.txt" >&2
+  echo "error: trailer has no per-op routing lines" >&2
+  exit 1
+}
+
+echo "== corrupted stored trace: nonzero exit =="
+python3 - "$DIR" <<'EOF'
+import glob, sys
+path = sorted(glob.glob(f"{sys.argv[1]}/cache/optrace_*.bin"))[0]
+raw = bytearray(open(path, "rb").read())
+raw[len(raw) // 2] ^= 0xFF
+open(path, "wb").write(raw)
+EOF
+if FITQ_RESULTS="$DIR" "$BIN" trace-report --model cnn_mnist > "$DIR/corrupt.txt" 2>&1; then
+  cat "$DIR/corrupt.txt" >&2
+  echo "error: trace-report rendered a corrupted trace" >&2
+  exit 1
+fi
+
+echo "check-trace: ok"
